@@ -1,0 +1,143 @@
+//! Figure 5 + Table 2 reproduction: ablation and sensitivity study.
+//!
+//! Panels (paper §5.2, WDL on criteo-shaped data):
+//!   a — impact of local updates: R ∈ {1(=vanilla), 3, 5, 8}
+//!   b — impact of local sampling: consecutive vs round-robin, W ∈ {1,3,5,8}
+//!   c — impact of instance weighting: ξ ∈ {none, 90°, 60°, 30°}
+//!   d — cosine-similarity quantiles over training
+//!   theory — ρ (grad cosine) vs staleness, the Theorem-1 tradeoff
+//!   table2 — the full communication-rounds-to-target grid
+//!
+//!     cargo run --release --example fig5_ablation -- --panel a
+//!     cargo run --release --example fig5_ablation -- --table2 --trials 3
+
+use celu_vfl::config::RunConfig;
+use celu_vfl::experiments::{ablation, theory, SweepResult};
+use celu_vfl::util::cli::Cli;
+
+fn base_config(args: &celu_vfl::util::cli::Args)
+               -> anyhow::Result<RunConfig> {
+    let mut cfg = RunConfig::quick();
+    cfg.size = args.get("size").to_string();
+    cfg.max_rounds = args.get_usize("rounds")?;
+    cfg.trials = args.get_usize("trials")?;
+    cfg.eval_every = args.get_usize("eval-every")?;
+    cfg.r_local = 5;
+    cfg.w_workset = 5;
+    cfg.xi_degrees = 60.0;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn print_series(sweeps: &[SweepResult], target: f64) {
+    // Convergence curves (paper plots AUC vs communication rounds).
+    print!("{:<8}", "round");
+    for s in sweeps {
+        print!(" {:>18}", s.label);
+    }
+    println!();
+    let max_pts = sweeps.iter().map(|s| s.records[0].series.len()).max()
+        .unwrap_or(0);
+    for i in 0..max_pts {
+        let round = sweeps
+            .iter()
+            .find_map(|s| s.records[0].series.get(i))
+            .map(|p| p.comm_round)
+            .unwrap_or(0);
+        print!("{round:<8}");
+        for s in sweeps {
+            match s.records[0].series.get(i) {
+                Some(p) => print!(" {:>18.4}", p.auc),
+                None => print!(" {:>18}", "-"),
+            }
+        }
+        println!();
+    }
+    println!("\nrounds to target AUC {target:.3} (mean ± std over trials):");
+    let rows = ablation::summarize(sweeps, target);
+    for (label, cell) in rows {
+        println!("  {label:<22} {cell}");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let cli = Cli::new("fig5_ablation", "Figure 5 / Table 2 reproduction")
+        .opt("panel", "a", "a | b | c | d | theory")
+        .opt("size", "tiny", "artifact preset")
+        .opt("rounds", "600", "max communication rounds per run")
+        .opt("trials", "1", "trials per variant (paper: 3)")
+        .opt("eval-every", "25", "evaluation cadence (rounds)")
+        .opt("target-auc", "0.70", "target AUC for round counting")
+        .flag("table2", "run the full Table 2 grid instead of one panel");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli.parse(&argv)?;
+    let base = base_config(&args)?;
+    let target = args.get_f64("target-auc")?;
+
+    if args.has_flag("table2") {
+        println!("== Table 2: communication rounds to AUC {target} ==\n");
+        for (section, rows) in ablation::table2(&base, target)? {
+            println!("[{section}]");
+            for (label, cell) in rows {
+                println!("  {label:<22} {cell}");
+            }
+            println!();
+        }
+        return Ok(());
+    }
+
+    match args.get("panel") {
+        "a" => {
+            println!("== Fig 5(a): impact of local updates (W=5, ξ=60°) ==");
+            let mut b = base.clone();
+            b.w_workset = 5;
+            let sweeps = ablation::sweep_r(&b, &[0, 3, 5, 8])?;
+            print_series(&sweeps, target);
+        }
+        "b" => {
+            println!("== Fig 5(b): impact of local sampling (R=5, ξ=60°) ==");
+            let mut b = base.clone();
+            b.r_local = 5;
+            let sweeps = ablation::sweep_w(&b, &[1, 3, 5, 8])?;
+            print_series(&sweeps, target);
+        }
+        "c" => {
+            println!("== Fig 5(c): impact of instance weighting (W=5, R=5) \
+                      ==");
+            let sweeps =
+                ablation::sweep_xi(&base, &[180.0, 90.0, 60.0, 30.0])?;
+            print_series(&sweeps, target);
+        }
+        "d" => {
+            println!("== Fig 5(d): cosine-similarity quantiles (CELU, W=5, \
+                      R=5, ξ=60°) ==");
+            let (a, b) = ablation::cosine_profile(&base)?;
+            let names = ["min", "q10", "q25", "q50", "q75", "q90", "mean",
+                         "frac≥cosξ"];
+            if let Some(row) = a {
+                println!("party A  cos(Z_new, Z_stale) medians over steps:");
+                for (n, v) in names.iter().zip(row.iter()) {
+                    println!("  {n:<10} {v:.4}");
+                }
+            }
+            if let Some(row) = b {
+                println!("party B  cos(∇Z_new, ∇Z_stale) medians over steps:");
+                for (n, v) in names.iter().zip(row.iter()) {
+                    println!("  {n:<10} {v:.4}");
+                }
+            }
+        }
+        "theory" => {
+            println!("== Theorem 1 probe: ρ = cos(g̃, g) vs staleness ==");
+            let profile = theory::rho_probe(&base, 50, 8, 40)?;
+            profile.print();
+            println!(
+                "monotone decreasing (slack 0.05): {}",
+                profile.is_monotone_decreasing(0.05)
+            );
+        }
+        other => anyhow::bail!("unknown panel '{other}'"),
+    }
+    Ok(())
+}

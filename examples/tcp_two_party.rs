@@ -1,0 +1,59 @@
+//! Two-process deployment demo over real TCP.
+//!
+//! Run Party B (the label holder / listener) in one terminal and Party A
+//! (the feature provider) in another — or let this example fork both
+//! roles itself (the default):
+//!
+//!     cargo run --release --example tcp_two_party                 # forks
+//!     cargo run --release --example tcp_two_party -- --role b --addr 127.0.0.1:7643
+//!     cargo run --release --example tcp_two_party -- --role a --addr 127.0.0.1:7643
+//!
+//! Each process loads the artifacts, generates its own vertical slice of
+//! the pre-aligned synthetic data (same seed ⇒ same alignment, the
+//! post-PSI assumption) and speaks only Z_A/∇Z_A frames on the socket.
+
+use celu_vfl::config::{Algorithm, RunConfig};
+use celu_vfl::experiments::tcp::run_tcp_party;
+use celu_vfl::util::cli::Cli;
+
+fn config(rounds: usize) -> anyhow::Result<RunConfig> {
+    let mut cfg = RunConfig::quick();
+    cfg.algorithm = Algorithm::CeluVfl;
+    cfg.r_local = 3;
+    cfg.w_workset = 3;
+    cfg.xi_degrees = 60.0;
+    cfg.max_rounds = rounds;
+    cfg.eval_every = 25;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let cli = Cli::new("tcp_two_party", "two-process TCP deployment demo")
+        .opt("role", "both", "a | b | both (both forks a child for A)")
+        .opt("addr", "127.0.0.1:7643", "socket address")
+        .opt("rounds", "150", "communication rounds");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli.parse(&argv)?;
+    let cfg = config(args.get_usize("rounds")?)?;
+    let addr = args.get("addr").to_string();
+
+    match args.get("role") {
+        "a" => run_tcp_party(&cfg, "a", &addr, &addr),
+        "b" => run_tcp_party(&cfg, "b", &addr, &addr),
+        "both" => {
+            // Fork Party A as a child process of the same example binary.
+            let exe = std::env::current_exe()?;
+            let mut child = std::process::Command::new(exe)
+                .args(["--role", "a", "--addr", &addr, "--rounds",
+                       args.get("rounds")])
+                .spawn()?;
+            let res = run_tcp_party(&cfg, "b", &addr, &addr);
+            let status = child.wait()?;
+            anyhow::ensure!(status.success(), "party A process failed");
+            res
+        }
+        other => anyhow::bail!("role must be a|b|both, got '{other}'"),
+    }
+}

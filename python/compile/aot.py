@@ -1,0 +1,153 @@
+"""AOT exporter: lowers every step function to HLO *text* + a JSON manifest.
+
+Run once via `make artifacts` (no Python on the training path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+For each (model, dataset, size) in presets.DEFAULT_EXPORTS this writes
+
+    artifacts/<model>_<dataset>_<size>/
+        a_fwd.hlo.txt  a_upd.hlo.txt  a_local.hlo.txt  a_grad_cos.hlo.txt
+        b_step.hlo.txt b_local.hlo.txt b_eval.hlo.txt
+        manifest.json
+
+HLO TEXT is the interchange format, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records every shape/dtype the Rust coordinator needs: the flat
+parameter ABI (name, shape, init kind) per party, the data input shapes,
+and the artifact file map. rust/src/runtime/artifacts.rs is the consumer.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import presets
+from .models import bottom_param_shapes, top_param_shapes
+from .steps import StepBuilder, WSTATS_LEN
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _init_kind(name: str) -> str:
+    """Parameter init policy executed by rust/src/runtime/params.rs."""
+    if name == "emb":
+        return "normal_0.01"
+    if name.startswith("w"):            # w1, w2, wt1, wt2, wide, wide_top
+        return "glorot" if name not in ("wide", "wide_top") else "zeros"
+    if name == "scale":
+        return "ones"
+    return "zeros"                       # biases
+
+
+def _shape_entry(name, shape):
+    return {"name": name, "shape": list(shape), "init": _init_kind(name)}
+
+
+def export_one(model: str, dataset: str, size: str, out_root: str,
+               verbose: bool = True) -> dict:
+    ds = presets.DATASETS[dataset]
+    spec = presets.SIZES[size]
+    sb = StepBuilder(model, ds, spec)
+    b, zd = spec.batch, spec.z_dim
+
+    shapes_a = bottom_param_shapes(model, ds.fields_a, spec)
+    shapes_b = (bottom_param_shapes(model, ds.fields_b, spec)
+                + top_param_shapes(model, spec))
+    pa = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes_a]
+    pb = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes_b]
+    aa = pa  # AdaGrad accumulators share param shapes
+    ab = pb
+
+    xa = jax.ShapeDtypeStruct((b, ds.fields_a), jnp.int32)
+    xb = jax.ShapeDtypeStruct((b, ds.fields_b), jnp.int32)
+    y = jax.ShapeDtypeStruct((b,), jnp.float32)
+    za = jax.ShapeDtypeStruct((b, zd), jnp.float32)
+    dza = jax.ShapeDtypeStruct((b, zd), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    entries = {
+        "a_fwd": (sb.a_fwd, [*pa, xa]),
+        "a_upd": (sb.a_upd, [*pa, *aa, xa, dza, scalar]),
+        "a_local": (sb.a_local,
+                    [*pa, *aa, xa, za, dza, scalar, scalar, scalar]),
+        "a_grad_cos": (sb.a_grad_cos, [*pa, xa, dza, dza]),
+        "b_step": (sb.b_step, [*pb, *ab, xb, y, za, scalar]),
+        "b_local": (sb.b_local,
+                    [*pb, *ab, xb, y, za, dza, scalar, scalar, scalar]),
+        "b_eval": (sb.b_eval, [*pb, xb, za]),
+    }
+
+    tag = f"{model}_{dataset}_{size}"
+    out_dir = os.path.join(out_root, tag)
+    os.makedirs(out_dir, exist_ok=True)
+    files = {}
+    for name, (fn, args) in entries.items():
+        # keep_unused: positional-ABI stability — XLA must not DCE
+        # params whose *values* are unused (e.g. biases in grad-only
+        # artifacts); the rust runtime feeds all of them positionally.
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[name] = fname
+        if verbose:
+            print(f"  {tag}/{fname}: {len(text)} chars", file=sys.stderr)
+
+    manifest = {
+        "abi_version": 1,
+        "model": model,
+        "dataset": dataset,
+        "size": size,
+        "batch": b,
+        "z_dim": zd,
+        "fields_a": ds.fields_a,
+        "fields_b": ds.fields_b,
+        "vocab": spec.vocab,
+        "emb_dim": spec.emb_dim,
+        "hidden": spec.hidden,
+        "top_hidden": spec.top_hidden,
+        "wstats_len": WSTATS_LEN,
+        "params_a": [_shape_entry(n, s) for n, s in shapes_a],
+        "params_b": [_shape_entry(n, s) for n, s in shapes_b],
+        "files": files,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output root")
+    ap.add_argument("--only", default=None,
+                    help="export a single 'model,dataset,size' triple")
+    args = ap.parse_args()
+    if args.only:
+        triples = [tuple(args.only.split(","))]
+    else:
+        triples = presets.DEFAULT_EXPORTS
+    for model, dataset, size in triples:
+        export_one(model, dataset, size, args.out)
+    print(f"exported {len(triples)} artifact sets to {args.out}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""L1: Pallas kernels for CELU-VFL's per-instance hot spots.
+
+- cosine_weights: fused InsWeight (row cosine + threshold), Algorithm 2.
+- apply_weights:  fused per-instance cotangent/loss scaling.
+- weighted_grad:  fused weighted dense weight-gradient A^T (w ⊙ G).
+- ref:            pure-jnp oracles for all of the above.
+
+All kernels lower with interpret=True (CPU PJRT cannot run Mosaic
+custom-calls); see DESIGN.md §Hardware-Adaptation for the TPU mapping.
+"""
+
+from .cosine_weights import cosine_weights
+from .apply_weights import apply_weights
+from .weighted_grad import weighted_grad
+
+__all__ = ["cosine_weights", "apply_weights", "weighted_grad"]

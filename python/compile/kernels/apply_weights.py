@@ -1,0 +1,35 @@
+"""Pallas kernel: fused per-instance row scaling  out = w[:, None] * v.
+
+Used on the local-update backward path to apply the staleness weights to a
+cotangent (Party A: `ins_weights ⊙ ∇Z_A^(i)`, Algorithm 2 line 8) and to
+per-instance losses reshaped to [B, 1] (Party B, line 14). Trivially
+bandwidth-bound; the fusion win is avoiding a broadcast temp in HBM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cosine_weights import _pick_block
+
+
+def _kernel(v_ref, w_ref, o_ref):
+    o_ref[...] = v_ref[...] * w_ref[...][:, None]
+
+
+@jax.jit
+def apply_weights(v, w):
+    """Row scaling: out[k, :] = w[k] * v[k, :].  v: [B, D] f32, w: [B] f32."""
+    b, d = v.shape
+    blk = _pick_block(b)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,
+    )(v.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,77 @@
+"""Pallas kernel: fused row-wise cosine similarity + threshold (InsWeight).
+
+This is the per-instance staleness measurement of CELU-VFL (Algorithm 2).
+It runs on *every* local update on both parties, over [B, z_dim] statistics
+matrices, so it is one of the two L1 hot spots.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks row blocks;
+each step streams one [blk, D] tile of `v_new` and `v_stale` HBM→VMEM and
+fuses three row reductions (dot, |new|², |stale|²), the rsqrt, the
+threshold compare and the select in a single VMEM-resident pass — no
+intermediate results ever touch HBM. VMEM footprint per step is
+2·blk·D·4 bytes (+2 output stripes), far under the ~16 MiB/core budget for
+every preset in presets.py.
+
+CPU PJRT cannot execute Mosaic custom-calls, so the kernel is lowered with
+interpret=True; correctness is pinned to kernels/ref.py by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import COS_EPS
+
+
+def _pick_block(b: int) -> int:
+    """Largest row block ≤128 that divides B (presets keep B a mult. of 64)."""
+    for blk in (128, 64, 32, 16, 8, 4, 2, 1):
+        if b % blk == 0:
+            return blk
+    return 1
+
+
+def _kernel(v_new_ref, v_stale_ref, thr_ref, w_ref, cos_ref):
+    vn = v_new_ref[...]
+    vs = v_stale_ref[...]
+    dot = jnp.sum(vn * vs, axis=1)
+    nn = jnp.sum(vn * vn, axis=1)
+    ns = jnp.sum(vs * vs, axis=1)
+    cos = dot / (jnp.sqrt(nn * ns) + COS_EPS)
+    thr = thr_ref[0]
+    w_ref[...] = jnp.where(cos >= thr, cos, jnp.zeros_like(cos))
+    cos_ref[...] = cos
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cosine_weights(v_new, v_stale, cos_thresh):
+    """Fused InsWeight. Returns (weights [B], raw cos [B]).
+
+    v_new, v_stale: [B, D] f32. cos_thresh: scalar (or shape-(1,)) f32 —
+    `cos ξ` in the paper; weights below it are zeroed. The raw cosine is
+    also returned for the Figure 5(d) staleness telemetry.
+    """
+    b, d = v_new.shape
+    blk = _pick_block(b)
+    thr = jnp.reshape(cos_thresh, (1,)).astype(jnp.float32)
+    grid = (b // blk,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(v_new.astype(jnp.float32), v_stale.astype(jnp.float32), thr)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package has a reference implementation here written in
+straight-line jax.numpy. pytest (python/tests/test_kernels.py) asserts
+allclose between the Pallas interpret-mode kernels and these oracles under
+hypothesis-driven shape/value sweeps.
+"""
+
+import jax.numpy as jnp
+
+# Matches the epsilon used inside the Pallas kernels; guards 0/0 for
+# all-zero rows (cosine of a zero vector is defined as 0 here, which maps
+# to weight 0 — the conservative choice for a zero gradient row).
+COS_EPS = 1e-12
+
+
+def cosine_weights_ref(v_new, v_stale, cos_thresh):
+    """Row-wise cosine similarity with thresholding (Algorithm 2, InsWeight).
+
+    Returns (weights, cos): `cos[k] = cos(v_new[k], v_stale[k])`, and
+    `weights[k] = cos[k] if cos[k] >= cos_thresh else 0`.
+    """
+    dot = jnp.sum(v_new * v_stale, axis=1)
+    nn = jnp.sum(v_new * v_new, axis=1)
+    ns = jnp.sum(v_stale * v_stale, axis=1)
+    cos = dot / (jnp.sqrt(nn * ns) + COS_EPS)
+    w = jnp.where(cos >= cos_thresh, cos, jnp.zeros_like(cos))
+    return w, cos
+
+
+def apply_weights_ref(v, w):
+    """Row scaling: out[k, :] = w[k] * v[k, :]."""
+    return v * w[:, None]
+
+
+def weighted_grad_ref(acts, grads, w):
+    """Weighted outer-product contraction for a dense layer's weight grad.
+
+    dW = acts^T (w ⊙ grads)   with acts [B, Din], grads [B, Dout], w [B].
+    """
+    return acts.T @ (grads * w[:, None])

@@ -1,0 +1,58 @@
+"""Pallas kernel: weighted dense-layer weight gradient  dW = A^T (w ⊙ G).
+
+This is the second L1 hot spot: the weight gradient of the bottom model's
+output layer under CELU-VFL's instance weighting. Fusing the w⊙ broadcast
+into the contraction avoids materialising the weighted cotangent [B, Dout]
+in HBM before the matmul.
+
+TPU mapping: grid walks the batch dimension in blocks; each step feeds one
+[blk, Din] activation tile and one [blk, Dout] cotangent tile to the MXU
+(f32 here; bf16 inputs with f32 accumulation on real hardware) and
+accumulates into a VMEM-resident [Din, Dout] f32 scratch that is written
+out once. Because the output block index is constant across the grid, the
+accumulator tile stays pinned in VMEM for the whole contraction — the
+Pallas revisiting-output pattern, the analogue of a CUDA threadblock
+accumulating in registers/shared memory across a K-loop.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cosine_weights import _pick_block
+
+
+def _kernel(a_ref, g_ref, w_ref, o_ref):
+    i = pl.program_id(0)
+    a = a_ref[...]
+    gw = g_ref[...] * w_ref[...][:, None]
+    part = jnp.dot(a.T, gw, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@jax.jit
+def weighted_grad(acts, grads, w):
+    """dW = acts^T (w ⊙ grads).  acts: [B, Din], grads: [B, Dout], w: [B]."""
+    b, din = acts.shape
+    _, dout = grads.shape
+    blk = _pick_block(b)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, din), lambda i: (i, 0)),
+            pl.BlockSpec((blk, dout), lambda i: (i, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((din, dout), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((din, dout), jnp.float32),
+        interpret=True,
+    )(acts.astype(jnp.float32), grads.astype(jnp.float32),
+      w.astype(jnp.float32))

@@ -1,0 +1,174 @@
+"""L2: the VFL model zoo — bottom/top networks for WDL and DSSM.
+
+The paper evaluates two deep-learning recommendation models (§5.1):
+
+- **WDL** (Wide & Deep): each party's bottom model embeds its hashed
+  categorical fields, runs a deep MLP, and appends a "wide" linear-path
+  scalar; Party B's top model is an MLP (+ wide linear) over the
+  concatenated [Z_A, Z_B].
+- **DSSM** (Deep Structured Semantic Model): two-tower — Party A's bottom
+  is the user tower, Party B's the item tower; the top model is a scaled
+  dot-product of the towers.
+
+Parameters are FLAT POSITIONAL LISTS with a fixed documented order (see
+`bottom_param_shapes` / `top_param_shapes`): the Rust coordinator holds
+them as opaque device buffers and re-feeds them positionally, so the order
+here is the wire ABI. Initialisation is done on the Rust side (glorot for
+matrices, zeros for biases, scaled-normal for embeddings) from the shapes
+recorded in the manifest.
+
+Instance weighting is threaded through the bottom model: the output dense
+layer is `dense_weighted` (custom_vjp) whose backward applies the CELU-VFL
+staleness weights through the Pallas kernels (weighted_grad for dW,
+apply_weights for the flowing cotangent). The exact (non-local) step passes
+w = 1, making the weighted graph the single code path for both exact and
+local updates.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import apply_weights, weighted_grad
+
+
+# --------------------------------------------------------------------------
+# Weighted dense output layer (custom VJP → Pallas kernels on backward).
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def dense_weighted(h, w_mat, b, ins_w):
+    """z = h @ w_mat + b; backward scales per-instance grads by ins_w."""
+    return h @ w_mat + b
+
+
+def _dense_weighted_fwd(h, w_mat, b, ins_w):
+    return dense_weighted(h, w_mat, b, ins_w), (h, w_mat, ins_w)
+
+
+def _dense_weighted_bwd(res, g):
+    h, w_mat, ins_w = res
+    gw = apply_weights(g, ins_w)          # Pallas: w ⊙ g, fused
+    dh = gw @ w_mat.T
+    dw = weighted_grad(h, g, ins_w)       # Pallas: h^T (w ⊙ g), fused
+    db = jnp.sum(gw, axis=0)
+    return dh, dw, db, None
+
+
+dense_weighted.defvjp(_dense_weighted_fwd, _dense_weighted_bwd)
+
+
+@jax.custom_vjp
+def scale_bwd(v, ins_w):
+    """Identity forward; backward scales the cotangent rows by ins_w.
+
+    Used to weight side paths (the WDL wide path) that do not go through
+    dense_weighted.
+    """
+    return v
+
+
+def _scale_bwd_fwd(v, ins_w):
+    return v, ins_w
+
+
+def _scale_bwd_bwd(ins_w, g):
+    return apply_weights(g, ins_w), None
+
+
+scale_bwd.defvjp(_scale_bwd_fwd, _scale_bwd_bwd)
+
+
+# --------------------------------------------------------------------------
+# Bottom models. x: int32 [B, F] hashed ids in [0, vocab).
+# --------------------------------------------------------------------------
+
+def embed(table, x, fields, vocab):
+    """Per-field embedding lookup: table [F·V, De], x [B, F] → [B, F·De]."""
+    offsets = jnp.arange(fields, dtype=jnp.int32) * vocab
+    idx = x + offsets[None, :]
+    e = jnp.take(table, idx, axis=0)          # [B, F, De]
+    return e.reshape(x.shape[0], -1)
+
+
+def bottom_param_shapes(model, fields, spec):
+    """Flat param order of one party's bottom model. The wire ABI."""
+    fv = fields * spec.vocab
+    fde = fields * spec.emb_dim
+    shapes = [
+        ("emb", (fv, spec.emb_dim)),
+        ("w1", (fde, spec.hidden)),
+        ("b1", (spec.hidden,)),
+        ("w2", (spec.hidden, spec.z_dim)),
+        ("b2", (spec.z_dim,)),
+    ]
+    if model == "wdl":
+        shapes.append(("wide", (fv, 1)))
+    return shapes
+
+
+def bottom_fwd(model, params, x, ins_w, fields, spec):
+    """Party bottom model: Z_P = Bottom_P(X_P; θ).  Returns [B, z_dim].
+
+    ins_w [B] are CELU-VFL instance weights applied on the backward pass
+    (pass ones for the exact path).
+    """
+    if model == "wdl":
+        emb, w1, b1, w2, b2, wide = params
+    else:
+        emb, w1, b1, w2, b2 = params
+    e = embed(emb, x, fields, spec.vocab)
+    h1 = jax.nn.relu(e @ w1 + b1)
+    z = dense_weighted(h1, w2, b2, ins_w)
+    if model == "wdl":
+        # Wide path: per-field scalar weights summed, folded into the first
+        # z coordinate (keeps z_dim uniform across models for the wire).
+        offsets = jnp.arange(fields, dtype=jnp.int32) * spec.vocab
+        zw = jnp.sum(jnp.take(wide[:, 0], x + offsets[None, :], axis=0),
+                     axis=1, keepdims=True)
+        zw = scale_bwd(zw, ins_w)
+        z = z + jnp.pad(zw, ((0, 0), (0, spec.z_dim - 1)))
+    return z
+
+
+# --------------------------------------------------------------------------
+# Top models (Party B only).
+# --------------------------------------------------------------------------
+
+def top_param_shapes(model, spec):
+    """Flat param order of the top model."""
+    zd2 = 2 * spec.z_dim
+    if model == "wdl":
+        return [
+            ("wt1", (zd2, spec.top_hidden)),
+            ("bt1", (spec.top_hidden,)),
+            ("wt2", (spec.top_hidden, 1)),
+            ("bt2", (1,)),
+            ("wide_top", (zd2, 1)),
+        ]
+    # DSSM: scaled dot-product scorer.
+    return [("scale", (1,)), ("bias", (1,))]
+
+
+def top_fwd(model, params, za, zb):
+    """ŷ logits = Top(Z_A, Z_B; θ_top).  Returns [B]."""
+    if model == "wdl":
+        wt1, bt1, wt2, bt2, wide_top = params
+        zcat = jnp.concatenate([za, zb], axis=1)
+        h = jax.nn.relu(zcat @ wt1 + bt1)
+        deep = (h @ wt2 + bt2)[:, 0]
+        wide = (zcat @ wide_top)[:, 0]
+        return deep + wide
+    scale, bias = params
+    return scale[0] * jnp.sum(za * zb, axis=1) + bias[0]
+
+
+def bce_rows(y, logits):
+    """Per-instance numerically-stable sigmoid binary cross-entropy [B]."""
+    return jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+
+
+def split_b_params(model, params_b, fields_b, spec):
+    """Party B's flat list = bottom params ++ top params."""
+    nb = len(bottom_param_shapes(model, fields_b, spec))
+    return params_b[:nb], params_b[nb:]

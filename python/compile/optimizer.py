@@ -1,0 +1,27 @@
+"""AdaGrad optimizer as a pure functional update (the paper's protocol §5.1).
+
+State is one accumulator per parameter (sum of squared gradients). The
+learning rate is a runtime scalar input so the Rust coordinator can tune it
+without re-exporting artifacts. The initial accumulator value (0.1, the
+TensorFlow default the paper's implementation inherits) is set by the Rust
+parameter store at init time, not here.
+"""
+
+import jax.numpy as jnp
+
+ADAGRAD_EPS = 1e-8
+ADAGRAD_INIT_ACC = 0.1  # documented for the rust side; see runtime/params.rs
+
+
+def adagrad_update(params, accs, grads, lr):
+    """One AdaGrad step over flat param/accumulator/grad lists.
+
+    acc' = acc + g²;  θ' = θ − lr · g / (√acc' + ε)
+    Returns (new_params, new_accs) as flat lists in the same order.
+    """
+    new_params, new_accs = [], []
+    for p, a, g in zip(params, accs, grads):
+        a2 = a + g * g
+        new_params.append(p - lr * g / (jnp.sqrt(a2) + ADAGRAD_EPS))
+        new_accs.append(a2)
+    return new_params, new_accs

@@ -1,0 +1,86 @@
+"""Model/dataset/size presets shared by the AOT exporter, tests and docs.
+
+The rust coordinator is shape-agnostic: every shape it needs is read from
+the artifact manifest emitted by aot.py. These presets are therefore the
+single source of truth for the static shapes baked into the HLO artifacts.
+
+Dataset field splits follow Table 1 of the paper:
+  criteo: 26 fields at Party A / 13 at Party B
+  avazu : 14 / 8
+  d3    : 25 / 18   (Tencent production dataset; simulated here)
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    fields_a: int
+    fields_b: int
+
+
+@dataclass(frozen=True)
+class SizeSpec:
+    """Static dimensions baked into one artifact set.
+
+    batch:    mini-batch size B (paper: 4096)
+    vocab:    hash-bucket count per categorical field
+    emb_dim:  embedding dim per field
+    hidden:   bottom MLP hidden width
+    z_dim:    output dimensionality of Z_P (paper: 256)
+    top_hidden: top MLP hidden width (WDL only)
+    """
+
+    name: str
+    batch: int
+    vocab: int
+    emb_dim: int
+    hidden: int
+    z_dim: int
+    top_hidden: int
+
+
+DATASETS = {
+    "criteo": DatasetSpec("criteo", 26, 13),
+    "avazu": DatasetSpec("avazu", 14, 8),
+    "d3": DatasetSpec("d3", 25, 18),
+}
+
+SIZES = {
+    # tiny: CI / unit-test scale; keeps interpret-mode pallas fast.
+    "tiny": SizeSpec("tiny", batch=64, vocab=100, emb_dim=4, hidden=32,
+                     z_dim=16, top_hidden=32),
+    # small: default experiment scale for the 1-core CPU testbed.
+    "small": SizeSpec("small", batch=256, vocab=1000, emb_dim=8, hidden=128,
+                      z_dim=64, top_hidden=64),
+    # paper: the paper's protocol (B=4096, d(Z_A)=256). Export on demand:
+    # compute per step is heavy for a 1-core CPU CI but the artifacts are
+    # valid — used for the ~100M-param end-to-end config.
+    "paper": SizeSpec("paper", batch=4096, vocab=50000, emb_dim=16,
+                      hidden=512, z_dim=256, top_hidden=256),
+    # big: ~100M parameters total (embedding-dominated), moderate batch so
+    # the end-to-end example can run a few hundred steps on CPU.
+    "big": SizeSpec("big", batch=256, vocab=65536, emb_dim=32, hidden=256,
+                    z_dim=64, top_hidden=64),
+}
+
+MODELS = ("wdl", "dssm")
+
+# The default artifact matrix built by `make artifacts`.
+DEFAULT_EXPORTS = [
+    ("wdl", "criteo", "tiny"),
+    ("dssm", "criteo", "tiny"),
+    ("wdl", "criteo", "small"),
+    ("dssm", "criteo", "small"),
+    ("wdl", "avazu", "small"),
+    ("dssm", "avazu", "small"),
+    ("wdl", "d3", "small"),
+    ("dssm", "d3", "small"),
+    ("wdl", "criteo", "big"),
+]
+
+
+def spec_dict(model: str, dataset: str, size: str) -> dict:
+    ds, sz = DATASETS[dataset], SIZES[size]
+    return {"model": model, "dataset": asdict(ds), "size": asdict(sz)}

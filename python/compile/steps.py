@@ -1,0 +1,189 @@
+"""L2: the per-party training-step functions — the artifact entry points.
+
+Each function here is AOT-lowered by aot.py into one HLO artifact that the
+Rust coordinator loads and executes on the PJRT CPU client. The calling
+convention (the wire ABI, mirrored in rust/src/runtime/artifacts.rs):
+
+  a_fwd    (θ_A…, xa)                                  → (za,)
+  a_upd    (θ_A…, acc_A…, xa, dza, lr)                 → (θ_A'…, acc_A'…)
+  a_local  (θ_A…, acc_A…, xa, za_stale, dza_stale,
+            lr, cos_thr, use_weights)                  → (θ_A'…, acc_A'…, wstats)
+  b_step   (θ_B…, acc_B…, xb, y, za, lr)               → (θ_B'…, acc_B'…, dza, loss)
+  b_local  (θ_B…, acc_B…, xb, y, za_stale, dza_stale,
+            lr, cos_thr, use_weights)                  → (θ_B'…, acc_B'…, loss, wstats)
+  b_eval   (θ_B…, xb, za)                              → (yhat,)
+  a_grad_cos (θ_A…, xa, dza1, dza2)                    → (probe,)   # [cosθ, ‖g1‖, ‖g2‖]
+
+θ_P… / acc_P… are the flat positional parameter / AdaGrad-accumulator lists
+(order defined in models.bottom_param_shapes / top_param_shapes). `wstats`
+is the staleness telemetry vector for Figure 5(d), see WSTATS_QUANTILES.
+
+Semantics follow Algorithm 2 of the paper exactly:
+- Party A's local update recomputes the ad-hoc activations Z_A^(i,j),
+  weights instances by cos(Z_A^(i,j), Z_A^(i)) thresholded at cos ξ, and
+  backprops the weighted stale derivatives.
+- Party B's local update feeds the stale Z_A^(i) to the top model, derives
+  the ad-hoc ∇Z_A^(i,j), weights instances by cos(∇Z_A^(i,j), ∇Z_A^(i)),
+  and backprops the weighted per-instance loss.
+- The weighted "average" divides by B (not Σw): zero-weight instances
+  contribute nothing, matching `ins_weights ⊙ loss` in Algorithm 2.
+- `use_weights` (0.0 or 1.0) gates the whole mechanism at runtime: with 0
+  the effective weights are pinned to 1, which is the paper's "No Weights"
+  baseline and the FedBCD competitor — same artifact, no re-export.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cosine_weights
+from .models import (bce_rows, bottom_fwd, bottom_param_shapes, split_b_params,
+                     top_fwd)
+from .optimizer import adagrad_update
+
+# wstats layout: [min, q10, q25, q50, q75, q90, mean, frac(w>0)]
+WSTATS_QUANTILES = (0.0, 0.10, 0.25, 0.50, 0.75, 0.90)
+WSTATS_LEN = 8
+
+
+def _wstats(cos, w):
+    qs = jnp.quantile(cos, jnp.asarray(WSTATS_QUANTILES, dtype=jnp.float32))
+    return jnp.concatenate([
+        qs,
+        jnp.mean(cos)[None],
+        jnp.mean((w > 0.0).astype(jnp.float32))[None],
+    ])
+
+
+def _ones(batch):
+    return jnp.ones((batch,), dtype=jnp.float32)
+
+
+def _gate_weights(w, use_weights):
+    """w_eff = w if use_weights else 1 (branch-free select on a scalar)."""
+    return use_weights * w + (1.0 - use_weights) * jnp.ones_like(w)
+
+
+class StepBuilder:
+    """Binds a (model, dataset, size) preset and emits the step functions."""
+
+    def __init__(self, model, ds, spec):
+        self.model = model
+        self.ds = ds
+        self.spec = spec
+        self.n_bot_a = len(bottom_param_shapes(model, ds.fields_a, spec))
+
+    # -- helpers -----------------------------------------------------------
+
+    def _bot_a(self, params_a, xa, ins_w):
+        return bottom_fwd(self.model, params_a, xa, ins_w,
+                          self.ds.fields_a, self.spec)
+
+    def _fwd_b(self, params_b, xb, za, ins_w):
+        pb, pt = split_b_params(self.model, params_b, self.ds.fields_b,
+                                self.spec)
+        zb = bottom_fwd(self.model, pb, xb, ins_w, self.ds.fields_b,
+                        self.spec)
+        return top_fwd(self.model, pt, za, zb)
+
+    # -- Party A -----------------------------------------------------------
+
+    def a_fwd(self, *args):
+        *params_a, xa = args
+        return (self._bot_a(list(params_a), xa, _ones(self.spec.batch)),)
+
+    def a_upd(self, *args):
+        """Exact update: backprop the fresh ∇Z_A received from Party B."""
+        n = self.n_bot_a
+        params = list(args[:n])
+        accs = list(args[n:2 * n])
+        xa, dza, lr = args[2 * n:]
+        ones = _ones(self.spec.batch)
+        _, vjp = jax.vjp(lambda ps: self._bot_a(ps, xa, ones), params)
+        grads = vjp(dza)[0]
+        new_p, new_a = adagrad_update(params, accs, grads, lr)
+        return tuple(new_p) + tuple(new_a)
+
+    def a_local(self, *args):
+        """Local update at Party A (Algorithm 2, LocalUpdatePartyA)."""
+        n = self.n_bot_a
+        params = list(args[:n])
+        accs = list(args[n:2 * n])
+        xa, za_stale, dza_stale, lr, cos_thr, use_weights = args[2 * n:]
+        ones = _ones(self.spec.batch)
+        za_new = self._bot_a(params, xa, ones)          # Z_A^(i,j)
+        w, cos = cosine_weights(za_new, za_stale, cos_thr)
+        w = _gate_weights(w, use_weights)
+        # Weighted backward: the ins_w argument routes w through the
+        # dense_weighted / scale_bwd custom VJPs (Pallas kernels).
+        _, vjp = jax.vjp(lambda ps: self._bot_a(ps, xa, w), params)
+        grads = vjp(dza_stale)[0]
+        new_p, new_a = adagrad_update(params, accs, grads, lr)
+        return tuple(new_p) + tuple(new_a) + (_wstats(cos, w),)
+
+    def a_grad_cos(self, *args):
+        """Probe: cosine between bottom-model grads under two cotangents.
+
+        Directly estimates the paper's ρ (Assumption 1.2) — feed the fresh
+        ∇Z_A^(i,j) and the stale ∇Z_A^(i) and read cos(g̃, g).
+        """
+        n = self.n_bot_a
+        params = list(args[:n])
+        xa, dza1, dza2 = args[n:]
+        ones = _ones(self.spec.batch)
+        _, vjp = jax.vjp(lambda ps: self._bot_a(ps, xa, ones), params)
+        g1 = jnp.concatenate([g.ravel() for g in vjp(dza1)[0]])
+        g2 = jnp.concatenate([g.ravel() for g in vjp(dza2)[0]])
+        n1 = jnp.linalg.norm(g1)
+        n2 = jnp.linalg.norm(g2)
+        cos = jnp.dot(g1, g2) / (n1 * n2 + 1e-12)
+        return (jnp.stack([cos, n1, n2]),)
+
+    # -- Party B -----------------------------------------------------------
+
+    def b_step(self, *args):
+        """Exact step: full fwd/bwd with fresh Z_A; emits ∇Z_A and loss."""
+        n = len(args) // 2 - 2  # params..accs..xb,y,za,lr
+        params = list(args[:n])
+        accs = list(args[n:2 * n])
+        xb, y, za, lr = args[2 * n:]
+        ones = _ones(self.spec.batch)
+
+        def loss_fn(ps, za_in):
+            logits = self._fwd_b(ps, xb, za_in, ones)
+            return jnp.mean(bce_rows(y, logits))
+
+        loss, (grads, dza) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            params, za)
+        new_p, new_a = adagrad_update(params, accs, grads, lr)
+        return tuple(new_p) + tuple(new_a) + (dza, loss[None])
+
+    def b_local(self, *args):
+        """Local update at Party B (Algorithm 2, LocalUpdatePartyB)."""
+        n = (len(args) - 7) // 2
+        params = list(args[:n])
+        accs = list(args[n:2 * n])
+        xb, y, za_stale, dza_stale, lr, cos_thr, use_weights = args[2 * n:]
+        ones = _ones(self.spec.batch)
+
+        def rows_fn(ps, za_in):
+            logits = self._fwd_b(ps, xb, za_in, ones)
+            return bce_rows(y, logits)
+
+        # Ad-hoc derivatives ∇Z_A^(i,j) w.r.t. the (stale) activations.
+        dza_new = jax.grad(
+            lambda za_in: jnp.mean(rows_fn(params, za_in)))(za_stale)
+        w, cos = cosine_weights(dza_new, dza_stale, cos_thr)
+        w = jax.lax.stop_gradient(_gate_weights(w, use_weights))
+
+        def wloss_fn(ps):
+            return jnp.mean(w * rows_fn(ps, za_stale))
+
+        loss, grads = jax.value_and_grad(wloss_fn)(params)
+        new_p, new_a = adagrad_update(params, accs, grads, lr)
+        return tuple(new_p) + tuple(new_a) + (loss[None], _wstats(cos, w))
+
+    def b_eval(self, *args):
+        """Validation forward: ŷ probabilities for AUC on the holdout."""
+        *params, xb, za = args
+        logits = self._fwd_b(list(params), xb, za, _ones(self.spec.batch))
+        return (jax.nn.sigmoid(logits),)

@@ -1,0 +1,100 @@
+"""AOT exporter tests: manifest schema, HLO-text validity, ABI stability.
+
+These are the build-time guarantees the Rust runtime relies on; a failure
+here means the wire ABI drifted and rust/src/runtime/artifacts.rs would
+misinterpret the artifacts.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import presets
+from compile.aot import export_one, to_hlo_text
+from compile.models import bottom_param_shapes, top_param_shapes
+from compile.steps import WSTATS_LEN
+
+
+@pytest.fixture(scope="module")
+def tiny_export(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = export_one("wdl", "criteo", "tiny", out, verbose=False)
+    return out, manifest
+
+
+EXPECTED_FILES = ("a_fwd", "a_upd", "a_local", "a_grad_cos", "b_step",
+                  "b_local", "b_eval")
+
+
+class TestManifest:
+    def test_schema(self, tiny_export):
+        _, m = tiny_export
+        assert m["abi_version"] == 1
+        for key in ("batch", "z_dim", "fields_a", "fields_b", "vocab",
+                    "params_a", "params_b", "files"):
+            assert key in m
+        assert m["wstats_len"] == WSTATS_LEN
+        assert set(m["files"]) == set(EXPECTED_FILES)
+
+    def test_param_abi_matches_models(self, tiny_export):
+        _, m = tiny_export
+        ds, spec = presets.DATASETS["criteo"], presets.SIZES["tiny"]
+        want_a = bottom_param_shapes("wdl", ds.fields_a, spec)
+        want_b = (bottom_param_shapes("wdl", ds.fields_b, spec)
+                  + top_param_shapes("wdl", spec))
+        assert [(e["name"], tuple(e["shape"])) for e in m["params_a"]] == \
+            [(n, tuple(s)) for n, s in want_a]
+        assert [(e["name"], tuple(e["shape"])) for e in m["params_b"]] == \
+            [(n, tuple(s)) for n, s in want_b]
+
+    def test_init_kinds(self, tiny_export):
+        _, m = tiny_export
+        kinds = {e["name"]: e["init"] for e in m["params_a"]}
+        assert kinds["emb"] == "normal_0.01"
+        assert kinds["w1"] == "glorot"
+        assert kinds["b1"] == "zeros"
+        assert kinds["wide"] == "zeros"
+
+    def test_manifest_roundtrips_via_json(self, tiny_export):
+        out, m = tiny_export
+        with open(os.path.join(out, "wdl_criteo_tiny", "manifest.json")) as f:
+            loaded = json.load(f)
+        assert loaded == m
+
+
+class TestHloText:
+    def test_files_exist_and_parse_shape(self, tiny_export):
+        out, m = tiny_export
+        d = os.path.join(out, "wdl_criteo_tiny")
+        for name in EXPECTED_FILES:
+            path = os.path.join(d, m["files"][name])
+            assert os.path.exists(path)
+            text = open(path).read()
+            # HLO text, with an entry computation and a tuple root
+            # (return_tuple=True is part of the ABI: rust decomposes it).
+            assert "ENTRY" in text
+            assert "HloModule" in text
+
+    def test_text_has_no_64bit_id_issue_markers(self, tiny_export):
+        """Interchange must be text: no serialized-proto artifacts."""
+        out, _ = tiny_export
+        d = os.path.join(out, "wdl_criteo_tiny")
+        for f in os.listdir(d):
+            assert f.endswith((".hlo.txt", ".json"))
+
+
+class TestDefaultExports:
+    def test_matrix_is_well_formed(self):
+        for model, dataset, size in presets.DEFAULT_EXPORTS:
+            assert model in presets.MODELS
+            assert dataset in presets.DATASETS
+            assert size in presets.SIZES
+
+    def test_fig6_requirements_covered(self):
+        """Figure 6 needs both models on all three datasets at 'small'."""
+        small = {(m, d) for m, d, s in presets.DEFAULT_EXPORTS
+                 if s == "small"}
+        for m in ("wdl", "dssm"):
+            for d in ("criteo", "avazu", "d3"):
+                assert (m, d) in small

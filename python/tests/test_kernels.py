@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes (incl. non-pow2 row counts exercising every block
+size the picker can choose), value scales, and degenerate inputs (zero
+rows, identical rows). This is the core kernel-correctness signal.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import apply_weights, cosine_weights, weighted_grad
+from compile.kernels.cosine_weights import _pick_block
+from compile.kernels.ref import (apply_weights_ref, cosine_weights_ref,
+                                 weighted_grad_ref)
+
+DIMS = st.tuples(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 64, 96, 128, 160]),
+                 st.sampled_from([1, 2, 5, 16, 33, 64]))
+
+
+def _rand(rng, shape, scale):
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+class TestPickBlock:
+    def test_divides(self):
+        for b in (1, 2, 3, 5, 64, 96, 100, 128, 256, 4096):
+            blk = _pick_block(b)
+            assert b % blk == 0 and 1 <= blk <= 128
+
+    def test_prefers_large(self):
+        assert _pick_block(4096) == 128
+        assert _pick_block(64) == 64
+        assert _pick_block(96) == 32
+
+
+class TestCosineWeights:
+    @settings(max_examples=40, deadline=None)
+    @given(dims=DIMS, scale=st.sampled_from([1e-3, 1.0, 1e3]),
+           thr=st.sampled_from([-1.0, 0.0, 0.5, 0.866]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, dims, scale, thr, seed):
+        b, d = dims
+        rng = np.random.default_rng(seed)
+        vn, vs = _rand(rng, (b, d), scale), _rand(rng, (b, d), scale)
+        w, cos = cosine_weights(vn, vs, thr)
+        wr, cr = cosine_weights_ref(vn, vs, thr)
+        np.testing.assert_allclose(cos, cr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(w, wr, rtol=1e-5, atol=1e-6)
+
+    def test_identical_rows_give_weight_one(self):
+        v = _rand(np.random.default_rng(0), (64, 16), 1.0)
+        w, cos = cosine_weights(v, v, 0.9)
+        np.testing.assert_allclose(w, np.ones(64), rtol=1e-5)
+        np.testing.assert_allclose(cos, np.ones(64), rtol=1e-5)
+
+    def test_opposite_rows_thresholded_to_zero(self):
+        v = _rand(np.random.default_rng(1), (32, 8), 1.0)
+        w, cos = cosine_weights(v, -v, 0.0)
+        np.testing.assert_allclose(cos, -np.ones(32), rtol=1e-5)
+        assert np.all(np.asarray(w) == 0.0)
+
+    def test_zero_row_maps_to_zero_weight(self):
+        vn = jnp.zeros((4, 8), jnp.float32)
+        vs = jnp.ones((4, 8), jnp.float32)
+        w, cos = cosine_weights(vn, vs, 0.0)
+        assert np.all(np.isfinite(np.asarray(cos)))
+        np.testing.assert_allclose(w, np.zeros(4))
+
+    def test_threshold_boundary_keeps_cos_at_exact_threshold(self):
+        # rows with cos exactly ~0: threshold 0.0 keeps them (>=).
+        vn = jnp.asarray([[1.0, 0.0], [0.0, 1.0]], jnp.float32)
+        vs = jnp.asarray([[0.0, 1.0], [0.0, 1.0]], jnp.float32)
+        w, _ = cosine_weights(vn, vs, 0.0)
+        assert np.asarray(w)[0] == pytest.approx(0.0, abs=1e-6)
+        assert np.asarray(w)[1] == pytest.approx(1.0, rel=1e-5)
+
+
+class TestApplyWeights:
+    @settings(max_examples=30, deadline=None)
+    @given(dims=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, dims, seed):
+        b, d = dims
+        rng = np.random.default_rng(seed)
+        v = _rand(rng, (b, d), 1.0)
+        w = jnp.abs(_rand(rng, (b,), 1.0))
+        np.testing.assert_allclose(apply_weights(v, w),
+                                   apply_weights_ref(v, w), rtol=1e-6)
+
+    def test_zero_weights_zero_rows(self):
+        v = _rand(np.random.default_rng(2), (16, 4), 1.0)
+        out = apply_weights(v, jnp.zeros((16,), jnp.float32))
+        assert np.all(np.asarray(out) == 0.0)
+
+
+class TestWeightedGrad:
+    @settings(max_examples=30, deadline=None)
+    @given(b=st.sampled_from([1, 2, 4, 64, 96, 128, 192]),
+           din=st.sampled_from([1, 3, 8, 32]),
+           dout=st.sampled_from([1, 2, 16, 24]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, b, din, dout, seed):
+        rng = np.random.default_rng(seed)
+        a = _rand(rng, (b, din), 1.0)
+        g = _rand(rng, (b, dout), 1.0)
+        w = jnp.abs(_rand(rng, (b,), 1.0))
+        np.testing.assert_allclose(weighted_grad(a, g, w),
+                                   weighted_grad_ref(a, g, w),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_unit_weights_reduce_to_plain_matmul(self):
+        rng = np.random.default_rng(3)
+        a, g = _rand(rng, (64, 8), 1.0), _rand(rng, (64, 4), 1.0)
+        out = weighted_grad(a, g, jnp.ones((64,), jnp.float32))
+        np.testing.assert_allclose(out, a.T @ g, rtol=1e-4, atol=1e-5)
+
+    def test_accumulation_across_grid_steps(self):
+        # b=256 with blk=128 → 2 grid steps exercising the += branch.
+        rng = np.random.default_rng(4)
+        a, g = _rand(rng, (256, 8), 1.0), _rand(rng, (256, 8), 1.0)
+        w = jnp.abs(_rand(rng, (256,), 1.0))
+        np.testing.assert_allclose(weighted_grad(a, g, w),
+                                   weighted_grad_ref(a, g, w),
+                                   rtol=1e-4, atol=1e-5)

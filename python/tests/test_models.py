@@ -1,0 +1,172 @@
+"""L2 model correctness: shapes, weighting semantics, gradient equivalence.
+
+The key invariant: `dense_weighted`/`scale_bwd` with w=1 must be gradient-
+identical to the plain forward (the exact path is the weighted graph with
+unit weights), and with arbitrary w must equal the analytically-weighted
+per-instance gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import presets
+from compile.models import (bottom_fwd, bottom_param_shapes, dense_weighted,
+                            embed, scale_bwd, split_b_params, top_fwd,
+                            top_param_shapes, bce_rows)
+
+DS = presets.DATASETS["criteo"]
+SPEC = presets.SIZES["tiny"]
+
+
+def init_params(shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, s in shapes:
+        if name == "emb":
+            out.append(rng.normal(0, 0.01, s))
+        elif name.startswith("w") and name not in ("wide", "wide_top"):
+            lim = np.sqrt(6.0 / (s[0] + s[-1]))
+            out.append(rng.uniform(-lim, lim, s))
+        elif name == "scale":
+            out.append(np.ones(s))
+        else:
+            out.append(np.zeros(s))
+    return [jnp.asarray(p, jnp.float32) for p in out]
+
+
+def rand_x(fields, batch=SPEC.batch, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, SPEC.vocab, (batch, fields)).astype(np.int32))
+
+
+class TestEmbed:
+    def test_shape_and_gather_semantics(self):
+        table = jnp.arange(2 * SPEC.vocab * 3, dtype=jnp.float32).reshape(
+            2 * SPEC.vocab, 3)
+        x = jnp.asarray([[0, 0], [1, SPEC.vocab - 1]], jnp.int32)
+        e = embed(table, x, 2, SPEC.vocab)
+        assert e.shape == (2, 6)
+        # field f id i → row f*vocab + i
+        np.testing.assert_allclose(e[0, :3], table[0])
+        np.testing.assert_allclose(e[0, 3:], table[SPEC.vocab])
+        np.testing.assert_allclose(e[1, :3], table[1])
+        np.testing.assert_allclose(e[1, 3:], table[2 * SPEC.vocab - 1])
+
+
+class TestDenseWeighted:
+    def test_forward_ignores_weights(self):
+        rng = np.random.default_rng(0)
+        h = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+        w_mat = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(3,)), jnp.float32)
+        z1 = dense_weighted(h, w_mat, b, jnp.ones((8,)))
+        z2 = dense_weighted(h, w_mat, b, jnp.zeros((8,)))
+        np.testing.assert_allclose(z1, z2)
+        np.testing.assert_allclose(z1, h @ w_mat + b, rtol=1e-6)
+
+    def test_backward_weights_per_instance(self):
+        rng = np.random.default_rng(1)
+        h = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+        w_mat = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+        b = jnp.zeros((3,), jnp.float32)
+        ct = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0, 1, (8,)), jnp.float32)
+
+        def f(hh, ww, bb):
+            return jnp.sum(dense_weighted(hh, ww, bb, w) * ct)
+
+        dh, dw, db = jax.grad(f, argnums=(0, 1, 2))(h, w_mat, b)
+        ctw = ct * w[:, None]
+        np.testing.assert_allclose(dh, ctw @ w_mat.T, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dw, h.T @ ctw, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(db, ctw.sum(0), rtol=1e-4, atol=1e-5)
+
+    def test_unit_weights_match_plain_autodiff(self):
+        rng = np.random.default_rng(2)
+        h = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+        w_mat = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(3,)), jnp.float32)
+        ct = jnp.asarray(rng.normal(size=(16, 3)), jnp.float32)
+        ones = jnp.ones((16,), jnp.float32)
+        g1 = jax.grad(lambda ww: jnp.sum(dense_weighted(h, ww, b, ones) * ct))(w_mat)
+        g2 = jax.grad(lambda ww: jnp.sum((h @ ww + b) * ct))(w_mat)
+        np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+class TestScaleBwd:
+    def test_identity_forward_scaled_backward(self):
+        v = jnp.asarray(np.random.default_rng(0).normal(size=(8, 2)),
+                        jnp.float32)
+        w = jnp.asarray(np.linspace(0, 1, 8), jnp.float32)
+        np.testing.assert_allclose(scale_bwd(v, w), v)
+        g = jax.grad(lambda vv: jnp.sum(scale_bwd(vv, w)))(v)
+        np.testing.assert_allclose(g, np.broadcast_to(
+            np.asarray(w)[:, None], (8, 2)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("model", ["wdl", "dssm"])
+class TestBottomTop:
+    def test_shapes(self, model):
+        shapes = bottom_param_shapes(model, DS.fields_a, SPEC)
+        params = init_params(shapes)
+        x = rand_x(DS.fields_a)
+        z = bottom_fwd(model, params, x, jnp.ones((SPEC.batch,)), DS.fields_a,
+                       SPEC)
+        assert z.shape == (SPEC.batch, SPEC.z_dim)
+        assert z.dtype == jnp.float32
+
+        pb = init_params(bottom_param_shapes(model, DS.fields_b, SPEC)
+                         + top_param_shapes(model, SPEC), seed=3)
+        bot, top = split_b_params(model, pb, DS.fields_b, SPEC)
+        zb = bottom_fwd(model, bot, rand_x(DS.fields_b), jnp.ones((SPEC.batch,)),
+                        DS.fields_b, SPEC)
+        logits = top_fwd(model, top, z, zb)
+        assert logits.shape == (SPEC.batch,)
+
+    def test_weights_do_not_change_forward(self, model):
+        shapes = bottom_param_shapes(model, DS.fields_a, SPEC)
+        params = init_params(shapes, seed=5)
+        x = rand_x(DS.fields_a, seed=6)
+        rng = np.random.default_rng(7)
+        w = jnp.asarray(rng.uniform(0, 1, (SPEC.batch,)), jnp.float32)
+        z1 = bottom_fwd(model, params, x, w, DS.fields_a, SPEC)
+        z2 = bottom_fwd(model, params, x, jnp.ones((SPEC.batch,)),
+                        DS.fields_a, SPEC)
+        np.testing.assert_allclose(z1, z2, rtol=1e-6)
+
+    def test_zero_weights_zero_all_param_grads(self, model):
+        shapes = bottom_param_shapes(model, DS.fields_a, SPEC)
+        params = init_params(shapes, seed=8)
+        x = rand_x(DS.fields_a, seed=9)
+        ct = jnp.asarray(np.random.default_rng(10).normal(
+            size=(SPEC.batch, SPEC.z_dim)), jnp.float32)
+        zeros = jnp.zeros((SPEC.batch,), jnp.float32)
+
+        def f(ps):
+            return jnp.sum(bottom_fwd(model, ps, x, zeros, DS.fields_a,
+                                      SPEC) * ct)
+
+        grads = jax.grad(f)(params)
+        for g in grads:
+            assert float(jnp.max(jnp.abs(g))) == 0.0
+
+
+class TestLoss:
+    def test_bce_matches_naive(self):
+        rng = np.random.default_rng(0)
+        logits = jnp.asarray(rng.normal(0, 3, (64,)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 2, (64,)), jnp.float32)
+        p = jax.nn.sigmoid(logits)
+        naive = -(y * jnp.log(p) + (1 - y) * jnp.log(1 - p))
+        np.testing.assert_allclose(bce_rows(y, logits), naive, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_bce_stable_at_extreme_logits(self):
+        logits = jnp.asarray([100.0, -100.0], jnp.float32)
+        y = jnp.asarray([1.0, 0.0], jnp.float32)
+        rows = bce_rows(y, logits)
+        assert np.all(np.isfinite(np.asarray(rows)))
+        np.testing.assert_allclose(rows, [0.0, 0.0], atol=1e-6)

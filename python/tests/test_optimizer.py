@@ -1,0 +1,46 @@
+"""AdaGrad unit tests vs a hand-rolled numpy oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.optimizer import ADAGRAD_EPS, adagrad_update
+
+
+def numpy_adagrad(p, a, g, lr):
+    a2 = a + g * g
+    return p - lr * g / (np.sqrt(a2) + ADAGRAD_EPS), a2
+
+
+class TestAdaGrad:
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        shapes = [(4, 3), (7,), (1,)]
+        ps = [rng.normal(size=s).astype(np.float32) for s in shapes]
+        gs = [rng.normal(size=s).astype(np.float32) for s in shapes]
+        accs = [np.full(s, 0.1, np.float32) for s in shapes]
+        new_p, new_a = adagrad_update(
+            [jnp.asarray(p) for p in ps], [jnp.asarray(a) for a in accs],
+            [jnp.asarray(g) for g in gs], 0.3)
+        for p, a, g, np_, na_ in zip(ps, accs, gs, new_p, new_a):
+            pr, ar = numpy_adagrad(p, a, g, 0.3)
+            np.testing.assert_allclose(np_, pr, rtol=1e-5)
+            np.testing.assert_allclose(na_, ar, rtol=1e-6)
+
+    def test_zero_grad_is_identity(self):
+        p = jnp.asarray([1.0, -2.0])
+        a = jnp.asarray([0.1, 0.1])
+        new_p, new_a = adagrad_update([p], [a], [jnp.zeros(2)], 1.0)
+        np.testing.assert_allclose(new_p[0], p)
+        np.testing.assert_allclose(new_a[0], a)
+
+    def test_effective_step_shrinks_over_repeats(self):
+        """Accumulator growth ⇒ monotonically smaller steps (AdaGrad law)."""
+        p = jnp.asarray([0.0])
+        a = jnp.asarray([0.1])
+        g = jnp.asarray([1.0])
+        deltas = []
+        for _ in range(5):
+            (p2,), (a,) = adagrad_update([p], [a], [g], 0.1)
+            deltas.append(abs(float(p2[0] - p[0])))
+            p = p2
+        assert all(d1 > d2 for d1, d2 in zip(deltas, deltas[1:]))

@@ -1,0 +1,65 @@
+"""Preset consistency + paper-protocol checks."""
+
+import pytest
+
+from compile import presets
+
+
+class TestDatasets:
+    def test_table1_field_splits(self):
+        """The synthetic datasets keep the paper's Table 1 splits."""
+        assert (presets.DATASETS["criteo"].fields_a,
+                presets.DATASETS["criteo"].fields_b) == (26, 13)
+        assert (presets.DATASETS["avazu"].fields_a,
+                presets.DATASETS["avazu"].fields_b) == (14, 8)
+        assert (presets.DATASETS["d3"].fields_a,
+                presets.DATASETS["d3"].fields_b) == (25, 18)
+
+
+class TestSizes:
+    def test_paper_preset_matches_protocol(self):
+        """§5.1: batch 4096, d(Z_A) = 256."""
+        p = presets.SIZES["paper"]
+        assert p.batch == 4096
+        assert p.z_dim == 256
+
+    def test_batches_are_block_friendly(self):
+        """Pallas row blocks divide every preset batch (kernel _pick_block
+        never falls back to 1)."""
+        from compile.kernels.cosine_weights import _pick_block
+        for s in presets.SIZES.values():
+            assert s.batch % _pick_block(s.batch) == 0
+            assert _pick_block(s.batch) >= 32
+
+    def test_big_preset_is_about_100m_params(self):
+        """The end-to-end driver advertises a ~100M-parameter model."""
+        from compile.models import bottom_param_shapes, top_param_shapes
+        ds = presets.DATASETS["criteo"]
+        spec = presets.SIZES["big"]
+        total = 0
+        for fields in (ds.fields_a, ds.fields_b):
+            for _, shape in bottom_param_shapes("wdl", fields, spec):
+                n = 1
+                for d in shape:
+                    n *= d
+                total += n
+        for _, shape in top_param_shapes("wdl", spec):
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        assert 60e6 < total < 150e6, f"big preset has {total} params"
+
+
+class TestSpecDict:
+    def test_spec_dict_roundtrip(self):
+        d = presets.spec_dict("wdl", "criteo", "tiny")
+        assert d["model"] == "wdl"
+        assert d["dataset"]["fields_a"] == 26
+        assert d["size"]["batch"] == 64
+
+    def test_unknown_keys_raise(self):
+        with pytest.raises(KeyError):
+            presets.spec_dict("wdl", "imagenet", "tiny")
+        with pytest.raises(KeyError):
+            presets.spec_dict("wdl", "criteo", "huge")

@@ -1,0 +1,213 @@
+"""L2 step-function semantics — the heart of the CELU-VFL algorithm.
+
+Checks Algorithm 2 line-by-line: local updates with fresh==stale statistics
+and ξ=180° must reproduce the exact update bit-for-bit (weights all 1);
+thresholding must drop instances; the two-phase propagation (a_fwd +
+b_step + a_upd) must equal a centralized joint gradient step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import presets
+from compile.models import (bce_rows, bottom_fwd, bottom_param_shapes,
+                            split_b_params, top_fwd, top_param_shapes)
+from compile.optimizer import adagrad_update
+from compile.steps import StepBuilder, WSTATS_LEN
+from .test_models import init_params, rand_x
+
+DS = presets.DATASETS["criteo"]
+SPEC = presets.SIZES["tiny"]
+LR = jnp.float32(0.05)
+B = SPEC.batch
+
+
+def make_state(model, seed=0):
+    sa = bottom_param_shapes(model, DS.fields_a, SPEC)
+    sb = (bottom_param_shapes(model, DS.fields_b, SPEC)
+          + top_param_shapes(model, SPEC))
+    pa = init_params(sa, seed=seed)
+    pb = init_params(sb, seed=seed + 1)
+    aa = [jnp.full_like(p, 0.1) for p in pa]
+    ab = [jnp.full_like(p, 0.1) for p in pb]
+    return pa, aa, pb, ab
+
+
+def make_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    xa = rand_x(DS.fields_a, seed=seed)
+    xb = rand_x(DS.fields_b, seed=seed + 1)
+    y = jnp.asarray(rng.integers(0, 2, (B,)).astype(np.float32))
+    return xa, xb, y
+
+
+@pytest.mark.parametrize("model", ["wdl", "dssm"])
+class TestExactPath:
+    def test_two_phase_equals_centralized(self, model):
+        """a_fwd → b_step → a_upd == one joint SGD/AdaGrad step."""
+        sb = StepBuilder(model, DS, SPEC)
+        pa, aa, pb, ab = make_state(model)
+        xa, xb, y = make_batch()
+
+        # VFL two-phase protocol.
+        (za,) = sb.a_fwd(*pa, xa)
+        out = sb.b_step(*pb, *ab, xb, y, za, LR)
+        n = len(pb)
+        pb2 = list(out[:n])
+        dza = out[2 * n]
+        out = sb.a_upd(*pa, *aa, xa, dza, LR)
+        pa2 = list(out[:len(pa)])
+
+        # Centralized oracle: joint loss over (θ_A, θ_B).
+        ones = jnp.ones((B,), jnp.float32)
+
+        def joint_loss(ps_a, ps_b):
+            za_ = bottom_fwd(model, ps_a, xa, ones, DS.fields_a, SPEC)
+            bot, top = split_b_params(model, ps_b, DS.fields_b, SPEC)
+            zb_ = bottom_fwd(model, bot, xb, ones, DS.fields_b, SPEC)
+            return jnp.mean(bce_rows(y, top_fwd(model, top, za_, zb_)))
+
+        ga, gb = jax.grad(joint_loss, argnums=(0, 1))(pa, pb)
+        pa_ref, _ = adagrad_update(pa, aa, ga, LR)
+        pb_ref, _ = adagrad_update(pb, ab, gb, LR)
+        for got, want in zip(pa2, pa_ref):
+            np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-6)
+        for got, want in zip(pb2, pb_ref):
+            np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-6)
+
+    def test_b_step_dza_is_loss_gradient(self, model):
+        sb = StepBuilder(model, DS, SPEC)
+        _, _, pb, ab = make_state(model)
+        xa, xb, y = make_batch(seed=11)
+        za = jnp.asarray(np.random.default_rng(3).normal(
+            0, 0.05, (B, SPEC.z_dim)), jnp.float32)
+        out = sb.b_step(*pb, *ab, xb, y, za, LR)
+        dza = out[2 * len(pb)]
+        ones = jnp.ones((B,), jnp.float32)
+
+        def f(za_in):
+            bot, top = split_b_params(model, pb, DS.fields_b, SPEC)
+            zb = bottom_fwd(model, bot, xb, ones, DS.fields_b, SPEC)
+            return jnp.mean(bce_rows(y, top_fwd(model, top, za_in, zb)))
+
+        np.testing.assert_allclose(dza, jax.grad(f)(za), rtol=2e-4,
+                                    atol=1e-7)
+
+
+@pytest.mark.parametrize("model", ["wdl", "dssm"])
+class TestLocalPath:
+    def test_a_local_fresh_stale_equals_exact(self, model):
+        """Stale==ad-hoc statistics + ξ=180° ⇒ weights 1 ⇒ exact a_upd."""
+        sb = StepBuilder(model, DS, SPEC)
+        pa, aa, _, _ = make_state(model, seed=20)
+        xa, _, _ = make_batch(seed=21)
+        (za,) = sb.a_fwd(*pa, xa)
+        dza = jnp.asarray(np.random.default_rng(5).normal(
+            0, 0.01, (B, SPEC.z_dim)), jnp.float32)
+
+        exact = sb.a_upd(*pa, *aa, xa, dza, LR)
+        local = sb.a_local(*pa, *aa, xa, za, dza, LR, jnp.float32(-1.0), jnp.float32(1.0))
+        n = len(pa)
+        wstats = local[-1]
+        assert wstats.shape == (WSTATS_LEN,)
+        # cos(Z_new, Z_stale) == 1 for every instance ⇒ identical update.
+        np.testing.assert_allclose(np.asarray(wstats)[:6], 1.0, rtol=1e-5)
+        for got, want in zip(local[:2 * n], exact[:2 * n]):
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+    def test_a_local_threshold_above_one_freezes_params(self, model):
+        """cos ξ > 1 zeroes every weight ⇒ zero grads ⇒ params unchanged."""
+        sb = StepBuilder(model, DS, SPEC)
+        pa, aa, _, _ = make_state(model, seed=30)
+        xa, _, _ = make_batch(seed=31)
+        (za,) = sb.a_fwd(*pa, xa)
+        dza = jnp.asarray(np.random.default_rng(6).normal(
+            0, 0.01, (B, SPEC.z_dim)), jnp.float32)
+        out = sb.a_local(*pa, *aa, xa, za, dza, LR, jnp.float32(1.5), jnp.float32(1.0))
+        for got, want in zip(out[:len(pa)], pa):
+            np.testing.assert_allclose(got, want, atol=0)
+        assert float(out[-1][-1]) == 0.0  # frac kept
+
+    def test_a_local_unweighted_gate_pins_weights_to_one(self, model):
+        """use_weights=0 ⇒ FedBCD semantics: backprop the stale ∇Z_A
+        verbatim, regardless of how stale Z_A is ⇒ equals a_upd."""
+        sb = StepBuilder(model, DS, SPEC)
+        pa, aa, _, _ = make_state(model, seed=25)
+        xa, _, _ = make_batch(seed=26)
+        rng = np.random.default_rng(27)
+        za_stale = jnp.asarray(rng.normal(0, 1.0, (B, SPEC.z_dim)),
+                               jnp.float32)  # wildly stale
+        dza = jnp.asarray(rng.normal(0, 0.01, (B, SPEC.z_dim)), jnp.float32)
+        exact = sb.a_upd(*pa, *aa, xa, dza, LR)
+        local = sb.a_local(*pa, *aa, xa, za_stale, dza, LR,
+                           jnp.float32(0.5), jnp.float32(0.0))
+        for got, want in zip(local[:2 * len(pa)], exact):
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+    def test_b_local_fresh_stale_equals_exact(self, model):
+        sb = StepBuilder(model, DS, SPEC)
+        pa, _, pb, ab = make_state(model, seed=40)
+        xa, xb, y = make_batch(seed=41)
+        (za,) = sb.a_fwd(*pa, xa)
+        # Derive the true fresh ∇Z_A, then feed it as the "stale" value:
+        exact = sb.b_step(*pb, *ab, xb, y, za, LR)
+        n = len(pb)
+        dza_fresh = exact[2 * n]
+        local = sb.b_local(*pb, *ab, xb, y, za, dza_fresh, LR,
+                           jnp.float32(-1.0), jnp.float32(1.0))
+        for got, want in zip(local[:2 * n], exact[:2 * n]):
+            np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-6)
+
+    def test_b_local_loss_is_weighted(self, model):
+        """With cos ξ > 1 every weight is 0 ⇒ reported loss is 0."""
+        sb = StepBuilder(model, DS, SPEC)
+        pa, _, pb, ab = make_state(model, seed=50)
+        xa, xb, y = make_batch(seed=51)
+        (za,) = sb.a_fwd(*pa, xa)
+        dza = jnp.asarray(np.random.default_rng(7).normal(
+            0, 0.01, (B, SPEC.z_dim)), jnp.float32)
+        out = sb.b_local(*pb, *ab, xb, y, za, dza, LR, jnp.float32(1.5), jnp.float32(1.0))
+        n = len(pb)
+        assert float(out[2 * n][0]) == 0.0
+        for got, want in zip(out[:n], pb):
+            np.testing.assert_allclose(got, want, atol=0)
+
+
+class TestGradCosProbe:
+    def test_same_cotangent_gives_cos_one(self):
+        sb = StepBuilder("wdl", DS, SPEC)
+        pa, _, _, _ = make_state("wdl", seed=60)
+        xa, _, _ = make_batch(seed=61)
+        dza = jnp.asarray(np.random.default_rng(8).normal(
+            0, 0.01, (B, SPEC.z_dim)), jnp.float32)
+        (probe,) = sb.a_grad_cos(*pa, xa, dza, dza)
+        assert probe.shape == (3,)
+        assert float(probe[0]) == pytest.approx(1.0, rel=1e-5)
+        assert float(probe[1]) == pytest.approx(float(probe[2]), rel=1e-6)
+
+    def test_opposite_cotangent_gives_cos_minus_one(self):
+        sb = StepBuilder("wdl", DS, SPEC)
+        pa, _, _, _ = make_state("wdl", seed=70)
+        xa, _, _ = make_batch(seed=71)
+        dza = jnp.asarray(np.random.default_rng(9).normal(
+            0, 0.01, (B, SPEC.z_dim)), jnp.float32)
+        (probe,) = sb.a_grad_cos(*pa, xa, dza, -dza)
+        assert float(probe[0]) == pytest.approx(-1.0, rel=1e-5)
+
+
+class TestWstats:
+    def test_quantile_layout(self):
+        sb = StepBuilder("wdl", DS, SPEC)
+        pa, aa, _, _ = make_state("wdl", seed=80)
+        xa, _, _ = make_batch(seed=81)
+        (za,) = sb.a_fwd(*pa, xa)
+        dza = jnp.asarray(np.random.default_rng(10).normal(
+            0, 0.01, (B, SPEC.z_dim)), jnp.float32)
+        out = sb.a_local(*pa, *aa, xa, za, dza, LR, jnp.float32(-1.0), jnp.float32(1.0))
+        ws = np.asarray(out[-1])
+        # quantiles are monotone; mean within [min, max]; frac in [0,1]
+        assert np.all(np.diff(ws[:6]) >= -1e-6)
+        assert ws[0] - 1e-6 <= ws[6] <= 1.0 + 1e-6
+        assert 0.0 <= ws[7] <= 1.0

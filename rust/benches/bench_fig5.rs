@@ -1,0 +1,75 @@
+//! Figure 5 bench: regenerates the four ablation panels at CI scale —
+//! AUC-vs-rounds series for the R/W/ξ sweeps plus the Fig 5(d) cosine
+//! quantile profile and the Theorem-1 ρ probe.
+//!
+//! `cargo bench --bench bench_fig5`
+
+use celu_vfl::config::RunConfig;
+use celu_vfl::experiments::{ablation, theory, SweepResult};
+
+fn print_target_rows(title: &str, sweeps: &[SweepResult], target: f64) {
+    println!("[{title}] rounds to AUC {target}:");
+    for (label, cell) in ablation::summarize(sweeps, target) {
+        println!("  {label:<22} {cell}");
+    }
+    for s in sweeps {
+        println!("  {:<22} best AUC {:.4}", s.label, s.best_auc_mean());
+    }
+    println!();
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let mut base = RunConfig::quick();
+    base.size = "tiny".into();
+    base.max_rounds = std::env::var("CELU_BENCH_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    base.trials = 1;
+    base.eval_every = 20;
+    base.wan = celu_vfl::config::WanProfile {
+        bandwidth_mbps: 6.0, rtt_ms: 10.0, gateway_ms: 1.0 };
+    base.r_local = 5;
+    base.w_workset = 5;
+    base.xi_degrees = 60.0;
+    let target = 0.70;
+    let t0 = std::time::Instant::now();
+
+    println!("== Figure 5 (scaled) ==\n");
+
+    let mut b = base.clone();
+    b.w_workset = 5;
+    print_target_rows("5a: local updates (W=5, ξ=60°)",
+                      &ablation::sweep_r(&b, &[0, 3, 5, 8])?, target);
+
+    let mut b = base.clone();
+    b.r_local = 5;
+    print_target_rows("5b: local sampling (R=5, ξ=60°)",
+                      &ablation::sweep_w(&b, &[1, 3, 5, 8])?, target);
+
+    print_target_rows("5c: instance weighting (W=5, R=5)",
+                      &ablation::sweep_xi(&base, &[180.0, 90.0, 60.0,
+                                                   30.0])?, target);
+
+    println!("[5d: cosine-similarity quantiles]");
+    let (qa, qb) = ablation::cosine_profile(&base)?;
+    let names = ["min", "q10", "q25", "q50", "q75", "q90", "mean",
+                 "frac≥cosξ"];
+    for (tag, row) in [("A cos(Z)", qa), ("B cos(∇Z)", qb)] {
+        if let Some(r) = row {
+            print!("  {tag:<12}");
+            for (n, v) in names.iter().zip(r.iter()) {
+                print!(" {n}={v:.3}");
+            }
+            println!();
+        }
+    }
+
+    println!("\n[Theorem 1: ρ vs staleness]");
+    let profile = theory::rho_probe(&base, 40, 6, 30)?;
+    profile.print();
+
+    println!("\ntotal bench time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Figure 6 bench: end-to-end wall-clock comparison under the simulated
+//! WAN — CELU-VFL vs FedBCD vs Vanilla, WDL + DSSM on the criteo shape.
+//!
+//! WAN calibration: the paper's regime is 4 MB messages at 300 Mbps
+//! (B=4096, d=256), making communication >90% of Vanilla's time. The CI
+//! preset sends ~4 KiB messages, so the bench scales the simulated link
+//! down (default 1.5 Mbps + 20 ms RTT) to land in the same
+//! comm-dominated regime; see EXPERIMENTS.md §Fig6 for the arithmetic.
+//!
+//! `cargo bench --bench bench_fig6` (env CELU_BENCH_BW_MBPS,
+//! CELU_BENCH_ROUNDS, CELU_BENCH_TARGET override).
+
+use celu_vfl::config::{RunConfig, WanProfile};
+use celu_vfl::experiments::endtoend;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let mut base = RunConfig::quick();
+    base.size = "tiny".into();
+    base.max_rounds = env_f64("CELU_BENCH_ROUNDS", 400.0) as usize;
+    base.trials = 1;
+    base.eval_every = 30;
+    base.wan = WanProfile {
+        bandwidth_mbps: env_f64("CELU_BENCH_BW_MBPS", 1.5),
+        rtt_ms: 20.0,
+        gateway_ms: 2.0,
+    };
+    let target = env_f64("CELU_BENCH_TARGET", 0.70);
+    let t0 = std::time::Instant::now();
+
+    println!(
+        "== Figure 6 (scaled): {} Mbps WAN, target AUC {target} ==\n",
+        base.wan.bandwidth_mbps
+    );
+    for model in ["wdl", "dssm"] {
+        let panel = endtoend::fig6_panel(&base, model, "criteo", 5, target)?;
+        endtoend::print_panel(&panel);
+        println!();
+    }
+    println!("total bench time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

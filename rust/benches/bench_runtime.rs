@@ -1,0 +1,104 @@
+//! Runtime benchmarks: per-step PJRT execute latency for every artifact,
+//! plus the host↔literal conversion costs — the L3-side compute budget
+//! that the WAN-simulation experiments are calibrated against.
+//!
+//! `cargo bench --bench bench_runtime [-- <size>]` (default: tiny; pass
+//! `small` to measure the experiment-scale artifacts).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use celu_vfl::config::RunConfig;
+use celu_vfl::coordinator::trainer::{load_data, load_set};
+use celu_vfl::data::batcher::{gather_a, gather_b};
+use celu_vfl::runtime::convert::{literal_to_tensor, tensor_to_literal};
+use celu_vfl::runtime::{PartyARuntime, PartyBRuntime};
+use celu_vfl::tensor::Tensor;
+use celu_vfl::testing::bench::{bench, section};
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let size = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "tiny".to_string());
+    let mut cfg = RunConfig::quick();
+    cfg.size = size.clone();
+    println!("== bench_runtime ({size} preset) ==");
+
+    let set = load_set(&cfg)?;
+    let data = load_data(&cfg, &set)?;
+    let m = &set.manifest;
+    let batch = m.batch;
+    let mut a = PartyARuntime::new(set.clone(), 1, 0.05, 0.5, true)?;
+    let mut b = PartyBRuntime::new(set.clone(), 1, 0.05, 0.5, true)?;
+
+    let idx: Vec<u32> = (0..batch as u32).collect();
+    let xa = gather_a(&data.train_a, &idx);
+    let (xb, y) = gather_b(&data.train_b, &idx);
+    let za = a.forward(&xa)?;
+    let (dza, _) = b.exact_step(&xb, &y, &za)?;
+
+    let win = Duration::from_secs(2);
+    section(&format!("artifact execute (B={batch}, z={}, {} params)",
+                     m.z_dim, m.total_params()));
+    bench("a_fwd", win, || {
+        std::hint::black_box(a.forward(&xa).unwrap());
+    })
+    .report();
+    bench("a_upd (exact update)", win, || {
+        a.exact_update(&xa, &dza).unwrap();
+    })
+    .report();
+    bench("a_local (weighted local update)", win, || {
+        std::hint::black_box(a.local_update(&xa, &za, &dza).unwrap());
+    })
+    .report();
+    bench("b_step (exact step)", win, || {
+        std::hint::black_box(b.exact_step(&xb, &y, &za).unwrap());
+    })
+    .report();
+    bench("b_local (weighted local step)", win, || {
+        std::hint::black_box(b.local_step(&xb, &y, &za, &dza).unwrap());
+    })
+    .report();
+    bench("b_eval", win, || {
+        std::hint::black_box(b.eval(&xb, &za).unwrap());
+    })
+    .report();
+    bench("a_grad_cos (ρ probe)", win, || {
+        std::hint::black_box(a.grad_cos(&xa, &dza, &dza).unwrap());
+    })
+    .report();
+
+    section("host ↔ literal conversion");
+    let t = Tensor::f32(vec![batch, m.z_dim],
+                        vec![0.5; batch * m.z_dim]);
+    let lit = tensor_to_literal(&t)?;
+    bench("tensor→literal [B,z]", win, || {
+        std::hint::black_box(tensor_to_literal(&t).unwrap());
+    })
+    .report();
+    bench("literal→tensor [B,z]", win, || {
+        std::hint::black_box(literal_to_tensor(&lit).unwrap());
+    })
+    .report();
+
+    // Round-trip cost summary for calibrating the WAN regime.
+    let step = bench("full vanilla round (fwd+step+upd)", win, || {
+        let za = a.forward(&xa).unwrap();
+        let (dza, _) = b.exact_step(&xb, &y, &za).unwrap();
+        a.exact_update(&xa, &dza).unwrap();
+    });
+    step.report();
+    let msg_bytes = (batch * m.z_dim * 4) as f64;
+    println!(
+        "\ncalibration: activation message = {:.1} KiB; at 300 Mbps one \
+         message ≈ {:.2} ms vs compute round ≈ {:.2} ms",
+        msg_bytes / 1024.0,
+        msg_bytes * 8.0 / 300e6 * 1e3,
+        step.mean.as_secs_f64() * 1e3
+    );
+    let _ = Arc::strong_count(&set);
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Substrate micro-benchmarks: the L3 building blocks on the hot path.
+//!
+//! These guard the coordinator-side costs: wire codec, workset table ops,
+//! batch gathering, AUC, PRNG and the WAN-delay model. Run via
+//! `cargo bench --bench bench_substrates`.
+
+use celu_vfl::config::{Sampling, WanProfile};
+use celu_vfl::data::batcher::{gather_a, gather_b};
+use celu_vfl::data::SynthDataset;
+use celu_vfl::metrics::auc_exact;
+use celu_vfl::protocol::Message;
+use celu_vfl::tensor::Tensor;
+use celu_vfl::testing::bench::{run, section};
+use celu_vfl::util::json::Json;
+use celu_vfl::util::rng::Pcg;
+use celu_vfl::workset::WorksetTable;
+
+fn main() {
+    println!("== bench_substrates ==");
+
+    section("PRNG");
+    let mut rng = Pcg::seeded(1);
+    run("pcg next_u32 x1000", || {
+        for _ in 0..1000 {
+            std::hint::black_box(rng.next_u32());
+        }
+    });
+    run("pcg next_normal x1000", || {
+        for _ in 0..1000 {
+            std::hint::black_box(rng.next_normal());
+        }
+    });
+
+    section("wire codec (B=256, d=64 — 64 KiB activation frame)");
+    let msg = Message::Activation {
+        round: 7,
+        tensor: Tensor::f32(vec![256, 64], vec![0.5; 256 * 64]),
+    };
+    let encoded = msg.encode();
+    run("encode activation", || {
+        std::hint::black_box(msg.encode());
+    });
+    run("decode activation", || {
+        std::hint::black_box(Message::decode(&encoded).unwrap());
+    });
+
+    section("workset table (W=5, R=5)");
+    run("insert+evict cycle", || {
+        let mut ws = WorksetTable::new(5, 5, Sampling::RoundRobin);
+        for round in 0..32u64 {
+            ws.insert(round, vec![0; 256], Tensor::zeros_f32(vec![256, 64]),
+                      Tensor::zeros_f32(vec![256, 64]));
+        }
+        std::hint::black_box(ws.len());
+    });
+    let mut ws = WorksetTable::new(5, 1_000_000, Sampling::RoundRobin);
+    for round in 0..5u64 {
+        ws.insert(round, vec![0; 256], Tensor::zeros_f32(vec![256, 64]),
+                  Tensor::zeros_f32(vec![256, 64]));
+    }
+    run("round-robin sample (incl. entry clone)", || {
+        std::hint::black_box(ws.sample());
+    });
+
+    section("data pipeline");
+    let ds = SynthDataset::generate("criteo", 1000, 20_000, 2_000, 0.05, 3)
+        .unwrap();
+    let idx: Vec<u32> = (0..256).collect();
+    run("gather_a 256x26", || {
+        std::hint::black_box(gather_a(&ds.train_a, &idx));
+    });
+    run("gather_b 256x13+labels", || {
+        std::hint::black_box(gather_b(&ds.train_b, &idx));
+    });
+    run("synth gen 1k instances", || {
+        std::hint::black_box(
+            SynthDataset::generate("avazu", 100, 1000, 1, 0.05, 9).unwrap());
+    });
+
+    section("metrics");
+    let mut rng = Pcg::seeded(5);
+    let scores: Vec<f32> = (0..100_000).map(|_| rng.next_f32()).collect();
+    let labels: Vec<f32> =
+        (0..100_000).map(|_| rng.gen_range(2) as f32).collect();
+    run("auc_exact n=100k", || {
+        std::hint::black_box(auc_exact(&scores, &labels));
+    });
+
+    section("config/json");
+    let manifest = std::fs::read_to_string(
+        "artifacts/wdl_criteo_tiny/manifest.json");
+    if let Ok(src) = manifest {
+        run("parse real manifest.json", || {
+            std::hint::black_box(Json::parse(&src).unwrap());
+        });
+    }
+    let wan = WanProfile::paper();
+    run("wan delay model x1000", || {
+        for n in 0..1000usize {
+            std::hint::black_box(wan.one_way_delay(n * 64));
+        }
+    });
+}

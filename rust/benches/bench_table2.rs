@@ -1,0 +1,63 @@
+//! Table 2 bench: communication rounds to a target AUC across the
+//! paper's three technique grids (local update R, local sampling W,
+//! instance weighting ξ), at CI scale.
+//!
+//! The paper's absolute round counts (≈12k–31k on the real Criteo) don't
+//! transfer to the synthetic testbed; the *shape* must: every technique
+//! cuts rounds vs its baseline, and the orderings match the paper.
+//!
+//! `cargo bench --bench bench_table2` (env CELU_BENCH_TRIALS, _ROUNDS,
+//! _TARGET override the defaults).
+
+use celu_vfl::config::RunConfig;
+use celu_vfl::experiments::ablation;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let mut base = RunConfig::quick();
+    base.size = "tiny".into();
+    base.max_rounds = env_usize("CELU_BENCH_ROUNDS", 300);
+    base.trials = env_usize("CELU_BENCH_TRIALS", 1);
+    base.eval_every = 20;
+    // Comm-bound regime (paper §2.1): scaled link so that R local updates
+    // fit inside one communication round — see EXPERIMENTS.md §Calibration.
+    base.wan = celu_vfl::config::WanProfile {
+        bandwidth_mbps: env_f64("CELU_BENCH_BW_MBPS", 6.0),
+        rtt_ms: 10.0,
+        gateway_ms: 1.0,
+    };
+    let target = env_f64("CELU_BENCH_TARGET", 0.70);
+
+    println!(
+        "== Table 2 (scaled): rounds to AUC {target}, max {} rounds, {} \
+         trial(s) ==\n",
+        base.max_rounds, base.trials
+    );
+    let t0 = std::time::Instant::now();
+    match ablation::table2(&base, target) {
+        Ok(sections) => {
+            for (section, rows) in sections {
+                println!("[{section}]");
+                for (label, cell) in rows {
+                    println!("  {label:<22} {cell}");
+                }
+                println!();
+            }
+        }
+        Err(e) => {
+            // Keep the bench harness alive and loud on partial failure.
+            println!("table2 grid failed: {e:#}");
+            eprintln!("table2 grid failed: {e:#}");
+        }
+    }
+    println!("total bench time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,373 @@
+//! Run configuration: typed config struct, TOML loader, presets.
+//!
+//! A `RunConfig` fully determines one training run: model/dataset/size
+//! (which select an artifact set), the algorithm (Vanilla / FedBCD /
+//! CELU-VFL) with its hyper-parameters (R, W, ξ), the optimizer settings,
+//! the synthetic-data parameters and the WAN simulation profile.
+
+pub mod toml;
+
+use self::toml::TomlDoc;
+
+/// Training algorithm, per the paper's §5.3 competitors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// One exchange per update; no local steps (R effectively 1).
+    Vanilla,
+    /// FedBCD (Liu et al.): R consecutive local updates on the latest
+    /// batch (≍ workset W=1), no instance weighting.
+    FedBcd,
+    /// CELU-VFL: workset of W batches, round-robin local sampling,
+    /// staleness-aware instance weighting at threshold ξ.
+    CeluVfl,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "vanilla" => Ok(Algorithm::Vanilla),
+            "fedbcd" => Ok(Algorithm::FedBcd),
+            "celu" | "celu-vfl" => Ok(Algorithm::CeluVfl),
+            _ => anyhow::bail!("unknown algorithm '{s}' \
+                                (vanilla|fedbcd|celu)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Vanilla => "vanilla",
+            Algorithm::FedBcd => "fedbcd",
+            Algorithm::CeluVfl => "celu",
+        }
+    }
+}
+
+/// Local-sampling strategy for the workset table (paper §3.2 / Figure 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    /// Re-use the most recent batch for consecutive steps (FedBCD).
+    Consecutive,
+    /// Round-robin over the workset: a batch is not re-sampled within
+    /// W−1 local steps (CELU-VFL).
+    RoundRobin,
+}
+
+/// WAN simulation profile (paper §2.1: geo-distributed, ~300 Mbps,
+/// gateway-proxied).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WanProfile {
+    /// Link bandwidth in megabits/s. 0 disables the bandwidth charge.
+    pub bandwidth_mbps: f64,
+    /// Round-trip latency in ms (charged half per one-way message).
+    pub rtt_ms: f64,
+    /// Extra per-message gateway/proxy overhead in ms (paper: messages
+    /// are proxied by gateway machines).
+    pub gateway_ms: f64,
+}
+
+impl WanProfile {
+    /// The paper's testbed: 300 Mbps, typical cross-DC RTT.
+    pub fn paper() -> Self {
+        WanProfile { bandwidth_mbps: 300.0, rtt_ms: 20.0, gateway_ms: 2.0 }
+    }
+
+    /// No simulated delay (unit tests, micro-benches).
+    pub fn instant() -> Self {
+        WanProfile { bandwidth_mbps: 0.0, rtt_ms: 0.0, gateway_ms: 0.0 }
+    }
+
+    /// One-way delay charged to a message of `bytes` payload.
+    pub fn one_way_delay(&self, bytes: usize) -> std::time::Duration {
+        let mut secs = self.rtt_ms / 2.0 / 1e3 + self.gateway_ms / 1e3;
+        if self.bandwidth_mbps > 0.0 {
+            secs += (bytes as f64 * 8.0) / (self.bandwidth_mbps * 1e6);
+        }
+        std::time::Duration::from_secs_f64(secs)
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    // model / artifacts
+    pub model: String,    // "wdl" | "dssm"
+    pub dataset: String,  // "criteo" | "avazu" | "d3"
+    pub size: String,     // "tiny" | "small" | "big" | "paper"
+    pub artifacts_dir: String,
+
+    // algorithm
+    pub algorithm: Algorithm,
+    /// Max local updates per cached batch (R). Vanilla ⇒ 0 local steps.
+    pub r_local: usize,
+    /// Workset capacity (W).
+    pub w_workset: usize,
+    /// Weighting threshold ξ in degrees; 180 disables weighting
+    /// (cos 180° = −1 keeps every instance at its raw cosine weight...
+    /// see `weighting_enabled`: 180 maps to the unweighted algorithm).
+    pub xi_degrees: f64,
+
+    // optimizer / training
+    pub lr: f64,
+    pub seed: u64,
+    pub trials: usize,
+    pub max_rounds: usize,
+    /// Wall-clock budget in seconds; 0 disables (Fig. 6 runs use this).
+    pub max_seconds: f64,
+    pub target_auc: f64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+
+    // synthetic data
+    pub train_instances: usize,
+    pub test_instances: usize,
+    /// Label noise: probability a teacher label is flipped.
+    pub label_noise: f64,
+
+    // environment
+    pub wan: WanProfile,
+    /// Extra artificial compute slow-down per step (secs) — used by the
+    /// WAN-regime benches to emulate the paper's compute:comm ratio.
+    pub compute_delay_s: f64,
+}
+
+impl RunConfig {
+    /// The repo-default quick configuration (tiny artifacts, fast).
+    pub fn quick() -> Self {
+        RunConfig {
+            model: "wdl".into(),
+            dataset: "criteo".into(),
+            size: "tiny".into(),
+            artifacts_dir: "artifacts".into(),
+            algorithm: Algorithm::CeluVfl,
+            r_local: 3,
+            w_workset: 3,
+            xi_degrees: 60.0,
+            lr: 0.05,
+            seed: 42,
+            trials: 1,
+            max_rounds: 400,
+            max_seconds: 0.0,
+            target_auc: 0.0,
+            eval_every: 25,
+            eval_batches: 8,
+            train_instances: 40_000,
+            test_instances: 8_000,
+            label_noise: 0.05,
+            wan: WanProfile::instant(),
+            compute_delay_s: 0.0,
+        }
+    }
+
+    /// Artifact set tag: `<model>_<dataset>_<size>`.
+    pub fn artifact_tag(&self) -> String {
+        format!("{}_{}_{}", self.model, self.dataset, self.size)
+    }
+
+    /// cos ξ — the weight threshold fed to the kernels. At ξ=180° every
+    /// cosine passes the threshold, but weighting is *disabled* entirely
+    /// (weights pinned to 1) to match the paper's "No Weights" baseline.
+    pub fn cos_xi(&self) -> f64 {
+        (self.xi_degrees.to_radians()).cos()
+    }
+
+    pub fn weighting_enabled(&self) -> bool {
+        self.algorithm == Algorithm::CeluVfl && self.xi_degrees < 180.0
+    }
+
+    /// Sampling strategy implied by the algorithm.
+    pub fn sampling(&self) -> Sampling {
+        match self.algorithm {
+            Algorithm::FedBcd => Sampling::Consecutive,
+            _ => Sampling::RoundRobin,
+        }
+    }
+
+    /// Effective workset capacity: FedBCD pins W=1 (the paper treats it
+    /// as the degenerate case of the workset abstraction).
+    pub fn effective_w(&self) -> usize {
+        match self.algorithm {
+            Algorithm::FedBcd => 1,
+            Algorithm::Vanilla => 1,
+            Algorithm::CeluVfl => self.w_workset,
+        }
+    }
+
+    /// Local updates per cached batch; Vanilla does none.
+    pub fn effective_r(&self) -> usize {
+        match self.algorithm {
+            Algorithm::Vanilla => 0,
+            _ => self.r_local,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !matches!(self.model.as_str(), "wdl" | "dssm") {
+            anyhow::bail!("model must be wdl|dssm, got '{}'", self.model);
+        }
+        if !matches!(self.dataset.as_str(), "criteo" | "avazu" | "d3") {
+            anyhow::bail!("dataset must be criteo|avazu|d3, got '{}'",
+                          self.dataset);
+        }
+        if self.r_local == 0 && self.algorithm != Algorithm::Vanilla {
+            anyhow::bail!("r_local must be ≥1 for local-update algorithms");
+        }
+        if self.w_workset == 0 {
+            anyhow::bail!("w_workset must be ≥1");
+        }
+        if !(0.0..=180.0).contains(&self.xi_degrees) {
+            anyhow::bail!("xi_degrees must be in [0, 180]");
+        }
+        if self.lr <= 0.0 {
+            anyhow::bail!("lr must be positive");
+        }
+        if self.max_rounds == 0 {
+            anyhow::bail!("max_rounds must be ≥1");
+        }
+        if self.train_instances == 0 || self.test_instances == 0 {
+            anyhow::bail!("train/test instances must be ≥1");
+        }
+        if !(0.0..=0.5).contains(&self.label_noise) {
+            anyhow::bail!("label_noise must be in [0, 0.5]");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file, starting from `quick()` defaults.
+    pub fn from_toml_file(path: &str) -> anyhow::Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::from_toml(&src)
+    }
+
+    pub fn from_toml(src: &str) -> anyhow::Result<Self> {
+        let doc = TomlDoc::parse(src)?;
+        let base = RunConfig::quick();
+        let cfg = RunConfig {
+            model: doc.str_or("model", &base.model)?,
+            dataset: doc.str_or("dataset", &base.dataset)?,
+            size: doc.str_or("size", &base.size)?,
+            artifacts_dir: doc.str_or("artifacts_dir", &base.artifacts_dir)?,
+            algorithm: Algorithm::parse(&doc.str_or(
+                "algorithm", base.algorithm.name())?)?,
+            r_local: doc.usize_or("r_local", base.r_local)?,
+            w_workset: doc.usize_or("w_workset", base.w_workset)?,
+            xi_degrees: doc.f64_or("xi_degrees", base.xi_degrees)?,
+            lr: doc.f64_or("lr", base.lr)?,
+            seed: doc.f64_or("seed", base.seed as f64)? as u64,
+            trials: doc.usize_or("trials", base.trials)?,
+            max_rounds: doc.usize_or("max_rounds", base.max_rounds)?,
+            max_seconds: doc.f64_or("max_seconds", base.max_seconds)?,
+            target_auc: doc.f64_or("target_auc", base.target_auc)?,
+            eval_every: doc.usize_or("eval_every", base.eval_every)?,
+            eval_batches: doc.usize_or("eval_batches", base.eval_batches)?,
+            train_instances: doc.usize_or("train_instances",
+                                          base.train_instances)?,
+            test_instances: doc.usize_or("test_instances",
+                                         base.test_instances)?,
+            label_noise: doc.f64_or("label_noise", base.label_noise)?,
+            wan: WanProfile {
+                bandwidth_mbps: doc.f64_or("wan.bandwidth_mbps",
+                                           base.wan.bandwidth_mbps)?,
+                rtt_ms: doc.f64_or("wan.rtt_ms", base.wan.rtt_ms)?,
+                gateway_ms: doc.f64_or("wan.gateway_ms",
+                                       base.wan.gateway_ms)?,
+            },
+            compute_delay_s: doc.f64_or("compute_delay_s",
+                                        base.compute_delay_s)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_config_validates() {
+        RunConfig::quick().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_defaults() {
+        let cfg = RunConfig::from_toml(
+            "model = \"dssm\"\nalgorithm = \"fedbcd\"\nr_local = 5\n\
+             [wan]\nbandwidth_mbps = 300\nrtt_ms = 40\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "dssm");
+        assert_eq!(cfg.algorithm, Algorithm::FedBcd);
+        assert_eq!(cfg.r_local, 5);
+        assert_eq!(cfg.wan.bandwidth_mbps, 300.0);
+        assert_eq!(cfg.wan.rtt_ms, 40.0);
+        // untouched default
+        assert_eq!(cfg.dataset, "criteo");
+    }
+
+    #[test]
+    fn algorithm_semantics() {
+        let mut cfg = RunConfig::quick();
+        cfg.algorithm = Algorithm::Vanilla;
+        assert_eq!(cfg.effective_r(), 0);
+        assert_eq!(cfg.effective_w(), 1);
+        cfg.algorithm = Algorithm::FedBcd;
+        cfg.r_local = 5;
+        assert_eq!(cfg.effective_r(), 5);
+        assert_eq!(cfg.effective_w(), 1);
+        assert_eq!(cfg.sampling(), Sampling::Consecutive);
+        assert!(!cfg.weighting_enabled());
+        cfg.algorithm = Algorithm::CeluVfl;
+        cfg.w_workset = 5;
+        assert_eq!(cfg.effective_w(), 5);
+        assert_eq!(cfg.sampling(), Sampling::RoundRobin);
+        assert!(cfg.weighting_enabled());
+        cfg.xi_degrees = 180.0;
+        assert!(!cfg.weighting_enabled());
+    }
+
+    #[test]
+    fn cos_xi_values() {
+        let mut cfg = RunConfig::quick();
+        cfg.xi_degrees = 90.0;
+        assert!(cfg.cos_xi().abs() < 1e-12);
+        cfg.xi_degrees = 60.0;
+        assert!((cfg.cos_xi() - 0.5).abs() < 1e-12);
+        cfg.xi_degrees = 0.0;
+        assert!((cfg.cos_xi() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut cfg = RunConfig::quick();
+        cfg.model = "bert".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::quick();
+        cfg.w_workset = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::quick();
+        cfg.xi_degrees = 181.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::quick();
+        cfg.lr = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn wan_delay_model() {
+        let wan = WanProfile { bandwidth_mbps: 300.0, rtt_ms: 20.0,
+                               gateway_ms: 2.0 };
+        // 4 MiB message at 300 Mbps ≈ 112 ms transfer + 12 ms fixed.
+        let d = wan.one_way_delay(4 << 20);
+        assert!((d.as_secs_f64() - (4.194304 * 8.0 / 300.0 + 0.012)).abs()
+                < 2e-3, "d={d:?}");
+        // paper's §2.1 example: 4 MB message, two transmissions ≈ 213 ms
+        // at 300 Mbps (ignoring latency).
+        let wan_bw = WanProfile { bandwidth_mbps: 300.0, rtt_ms: 0.0,
+                                  gateway_ms: 0.0 };
+        let two = wan_bw.one_way_delay(4_000_000).as_secs_f64() * 2.0;
+        assert!((two - 0.2133).abs() < 2e-3, "two={two}");
+        assert_eq!(WanProfile::instant().one_way_delay(1 << 20),
+                   std::time::Duration::ZERO);
+    }
+}

@@ -1,0 +1,215 @@
+//! TOML-subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supported grammar — everything the run configs need:
+//!   - `[section]` and `[nested.section]` headers
+//!   - `key = "string" | 123 | 4.5 | true | false | [1, 2, 3]`
+//!   - `#` comments, blank lines
+//!
+//! Values land in a flat `section.key → Value` map; typed accessors give
+//! loud errors with the offending line number.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<String, Value>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> anyhow::Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    anyhow::bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("line {}: expected 'key = value'", lineno + 1)
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                anyhow::bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim()).map_err(|e| {
+                anyhow::anyhow!("line {}: {e}", lineno + 1)
+            })?;
+            if map.insert(full.clone(), value).is_some() {
+                anyhow::bail!("line {}: duplicate key '{full}'", lineno + 1);
+            }
+        }
+        Ok(TomlDoc { map })
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> anyhow::Result<String> {
+        match self.map.get(key) {
+            None => Ok(default.to_string()),
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(v) => anyhow::bail!("{key}: expected string, got {v:?}"),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(Value::Num(x)) => Ok(*x),
+            Some(v) => anyhow::bail!("{key}: expected number, got {v:?}"),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        let x = self.f64_or(key, default as f64)?;
+        if x < 0.0 || x.fract() != 0.0 {
+            anyhow::bail!("{key}: expected non-negative integer, got {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(v) => anyhow::bail!("{key}: expected bool, got {v:?}"),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            anyhow::bail!("embedded quotes unsupported");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|x| parse_value(x.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        return Ok(Value::Arr(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow::anyhow!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "# run config\n\
+             model = \"wdl\"\n\
+             rounds = 500\n\
+             lr = 0.05  # learning rate\n\
+             verbose = true\n\
+             sweep = [1, 3, 5]\n\
+             [wan]\n\
+             bandwidth_mbps = 300\n",
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("model", "x").unwrap(), "wdl");
+        assert_eq!(doc.usize_or("rounds", 0).unwrap(), 500);
+        assert!((doc.f64_or("lr", 0.0).unwrap() - 0.05).abs() < 1e-12);
+        assert!(doc.bool_or("verbose", false).unwrap());
+        assert_eq!(doc.f64_or("wan.bandwidth_mbps", 0.0).unwrap(), 300.0);
+        assert_eq!(
+            doc.get("sweep").unwrap(),
+            &Value::Arr(vec![Value::Num(1.0), Value::Num(3.0),
+                             Value::Num(5.0)])
+        );
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("rounds", 7).unwrap(), 7);
+        assert_eq!(doc.str_or("model", "dssm").unwrap(), "dssm");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["[sec", "novalue", "k = \"open", "k = [1, 2",
+                    "k = nope", "k = 1\nk = 2"] {
+            assert!(TomlDoc::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn type_errors_are_loud() {
+        let doc = TomlDoc::parse("rounds = \"many\"").unwrap();
+        assert!(doc.usize_or("rounds", 1).is_err());
+        let doc = TomlDoc::parse("lr = 0.5").unwrap();
+        assert!(doc.str_or("lr", "").is_err());
+    }
+
+    #[test]
+    fn fractional_rejected_for_usize() {
+        let doc = TomlDoc::parse("rounds = 1.5").unwrap();
+        assert!(doc.usize_or("rounds", 1).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! The L3 coordinator: CELU-VFL's two-party training runtime.
+//!
+//! Faithful to Figure 2 of the paper: each party runs a **communication
+//! worker** (the two-phase Z_A / ∇Z_A exchange plus exact updates) and a
+//! **local worker** (local updates from the workset table) concurrently,
+//! sharing the party's parameter state and workset behind locks. The two
+//! parties connect through a `Transport` (simulated-WAN in-proc pair or
+//! real TCP).
+//!
+//! Protocol timeline per communication round `i` (lock-step, FIFO):
+//!   A: gather X_A → Z_A = fwd → send Activation{i} → … → recv Derivative
+//!      → exact update → insert ⟨i, Z_A, ∇Z_A⟩ into A's workset
+//!   B: recv Activation{i} → gather X_B,y → exact step (emits ∇Z_A, loss)
+//!      → send Derivative{i} → insert into B's workset
+//! Every `eval_every` rounds both parties walk the eval lane (A streams
+//! activations for the held-out batches, B scores AUC). Party B owns the
+//! stopping decision (target AUC / max rounds / time budget) and
+//! broadcasts `Shutdown`.
+
+pub mod party_a;
+pub mod party_b;
+pub mod trainer;
+
+pub use trainer::{run_training, TrainOutcome};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Shared stop flag between a party's comm and local workers.
+#[derive(Debug, Default)]
+pub struct Ctrl {
+    stop: AtomicBool,
+}
+
+impl Ctrl {
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctrl_flag() {
+        let c = Ctrl::default();
+        assert!(!c.stopped());
+        c.stop();
+        assert!(c.stopped());
+    }
+}

@@ -1,0 +1,169 @@
+//! Party A driver: features only, no labels, no top model.
+//!
+//! Comm worker: forward → send Z_A → (overlapped) → recv ∇Z_A → exact
+//! update → cache. Local worker: drain the workset with round-robin
+//! sampling + instance-weighted local updates (Algorithm 2,
+//! LocalUpdatePartyA). The workers share the runtime (params) and the
+//! workset table; while the comm worker is blocked on the WAN the local
+//! worker keeps the accelerator busy — the paper's §3.1 overlap.
+
+use std::sync::{Arc, Mutex};
+
+use crate::config::RunConfig;
+use crate::data::batcher::{gather_a, BatchCursor};
+use crate::data::PartyAData;
+use crate::metrics::CosineRecorder;
+use crate::protocol::Message;
+use crate::runtime::{ArtifactSet, PartyARuntime};
+use crate::transport::Transport;
+use crate::workset::{WorksetStats, WorksetTable};
+
+use super::Ctrl;
+
+/// Everything Party A reports after a run.
+#[derive(Debug, Default)]
+pub struct PartyAReport {
+    pub comm_rounds: u64,
+    pub exact_updates: u64,
+    pub local_updates: u64,
+    pub workset: WorksetStats,
+    pub cosine: CosineRecorder,
+}
+
+/// Run Party A to completion (until Shutdown from B or transport error).
+pub fn run_party_a(
+    cfg: &RunConfig,
+    set: Arc<ArtifactSet>,
+    train: Arc<PartyAData>,
+    test: Arc<PartyAData>,
+    transport: Arc<dyn Transport>,
+) -> anyhow::Result<PartyAReport> {
+    let batch = set.manifest.batch;
+    let runtime = Arc::new(Mutex::new(PartyARuntime::new(
+        set.clone(),
+        cfg.seed,
+        cfg.lr as f32,
+        cfg.cos_xi() as f32,
+        cfg.weighting_enabled(),
+    )?));
+    let workset = Arc::new(Mutex::new(WorksetTable::new(
+        cfg.effective_w(),
+        cfg.effective_r().max(1),
+        cfg.sampling(),
+    )));
+    let ctrl = Arc::new(Ctrl::default());
+    let cosine = Arc::new(Mutex::new(CosineRecorder::default()));
+
+    // ---- local worker ----------------------------------------------------
+    let local_handle = if cfg.effective_r() > 0 {
+        let runtime = runtime.clone();
+        let workset = workset.clone();
+        let ctrl = ctrl.clone();
+        let train = train.clone();
+        let cosine = cosine.clone();
+        Some(std::thread::Builder::new()
+            .name("party-a-local".into())
+            .spawn(move || -> anyhow::Result<u64> {
+                let mut steps = 0u64;
+                while !ctrl.stopped() {
+                    let entry = workset.lock().unwrap().sample();
+                    match entry {
+                        Some(e) => {
+                            let xa = gather_a(&train, &e.indices);
+                            let ws = runtime
+                                .lock()
+                                .unwrap()
+                                .local_update(&xa, &e.za, &e.dza)?;
+                            steps += 1;
+                            cosine.lock().unwrap().push(steps, &ws);
+                        }
+                        None => {
+                            // §3.2 bubble: wait for the comm worker.
+                            std::thread::sleep(
+                                std::time::Duration::from_micros(200));
+                        }
+                    }
+                }
+                Ok(steps)
+            })?)
+    } else {
+        None
+    };
+
+    // ---- comm worker (this thread) ----------------------------------------
+    let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
+    let eval_batches = eval_batch_count(cfg, test.n, batch);
+    let mut comm_rounds = 0u64;
+    let result: anyhow::Result<()> = (|| {
+        for round in 0..cfg.max_rounds as u64 {
+            let idx = cursor.next_indices();
+            let xa = gather_a(&train, &idx);
+            let za = runtime.lock().unwrap().forward(&xa)?;
+            transport.send(Message::Activation { round,
+                                                 tensor: za.clone() })?;
+            // Block on ∇Z_A (the local worker keeps training meanwhile).
+            let dza = match transport.recv()? {
+                Message::Derivative { round: r, tensor } => {
+                    anyhow::ensure!(r == round,
+                                    "protocol skew: got derivative {r}, \
+                                     expected {round}");
+                    tensor
+                }
+                Message::Shutdown => return Ok(()),
+                other => anyhow::bail!("unexpected message {:?} in round \
+                                        {round}", other.tag()),
+            };
+            runtime.lock().unwrap().exact_update(&xa, &dza)?;
+            workset.lock().unwrap().insert(round, idx, za, dza);
+            comm_rounds = round + 1;
+
+            // Eval lane.
+            if comm_rounds % cfg.eval_every as u64 == 0 {
+                for k in 0..eval_batches {
+                    let idx: Vec<u32> = ((k * batch) as u32
+                        ..((k + 1) * batch) as u32)
+                        .collect();
+                    let xa = gather_a(&test, &idx);
+                    let za = runtime.lock().unwrap().forward(&xa)?;
+                    transport.send(Message::EvalActivation {
+                        round: k as u64,
+                        tensor: za,
+                    })?;
+                }
+            }
+        }
+        // Round budget exhausted on A's side; wait for B's shutdown so the
+        // byte accounting stays complete.
+        loop {
+            match transport.recv() {
+                Ok(Message::Shutdown) | Err(_) => return Ok(()),
+                Ok(_) => {}
+            }
+        }
+    })();
+    ctrl.stop();
+    let local_updates = match local_handle {
+        Some(h) => h.join().expect("party A local worker panicked")?,
+        None => 0,
+    };
+    result?;
+
+    let exact_updates = runtime.lock().unwrap().exact_updates;
+    let ws_stats = workset.lock().unwrap().stats();
+    let cosine = Arc::try_unwrap(cosine)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_default();
+    Ok(PartyAReport {
+        comm_rounds,
+        exact_updates,
+        local_updates,
+        workset: ws_stats,
+        cosine,
+    })
+}
+
+/// Number of held-out batches both parties walk on the eval lane.
+pub fn eval_batch_count(cfg: &RunConfig, test_n: usize, batch: usize)
+                        -> usize {
+    cfg.eval_batches.min(test_n / batch).max(1)
+}

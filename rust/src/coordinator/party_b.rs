@@ -1,0 +1,225 @@
+//! Party B driver: features + labels, bottom and top models, and the
+//! run's control plane (loss tracking, AUC evaluation, stopping).
+//!
+//! Comm worker: recv Z_A → exact step (computes loss + ∇Z_A, updates
+//! θ_B/θ_top) → send ∇Z_A → cache ⟨i, Z_A, ∇Z_A⟩. Local worker: local
+//! steps against the cached statistics (Algorithm 2, LocalUpdatePartyB).
+//! B owns the stop decision and broadcasts Shutdown.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::RunConfig;
+use crate::data::batcher::{gather_b, BatchCursor};
+use crate::data::PartyBData;
+use crate::metrics::{auc_exact, CosineRecorder, SeriesPoint};
+use crate::protocol::Message;
+use crate::runtime::{ArtifactSet, PartyBRuntime};
+use crate::transport::Transport;
+use crate::util::stats::Ema;
+use crate::workset::{WorksetStats, WorksetTable};
+
+use super::party_a::eval_batch_count;
+use super::Ctrl;
+
+/// Everything Party B reports after a run.
+#[derive(Debug, Default)]
+pub struct PartyBReport {
+    pub comm_rounds: u64,
+    pub exact_updates: u64,
+    pub local_updates: u64,
+    pub workset: WorksetStats,
+    pub cosine: CosineRecorder,
+    pub series: Vec<SeriesPoint>,
+    /// Why the run ended.
+    pub stop_reason: StopReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StopReason {
+    #[default]
+    MaxRounds,
+    TargetAuc,
+    TimeBudget,
+}
+
+pub fn run_party_b(
+    cfg: &RunConfig,
+    set: Arc<ArtifactSet>,
+    train: Arc<PartyBData>,
+    test: Arc<PartyBData>,
+    transport: Arc<dyn Transport>,
+) -> anyhow::Result<PartyBReport> {
+    let batch = set.manifest.batch;
+    let runtime = Arc::new(Mutex::new(PartyBRuntime::new(
+        set.clone(),
+        // Party B's init stream must differ from A's but the *batch
+        // schedule* seed must match: both derive from cfg.seed.
+        cfg.seed,
+        cfg.lr as f32,
+        cfg.cos_xi() as f32,
+        cfg.weighting_enabled(),
+    )?));
+    let workset = Arc::new(Mutex::new(WorksetTable::new(
+        cfg.effective_w(),
+        cfg.effective_r().max(1),
+        cfg.sampling(),
+    )));
+    let ctrl = Arc::new(Ctrl::default());
+    let cosine = Arc::new(Mutex::new(CosineRecorder::default()));
+    let loss_ema = Arc::new(Mutex::new(Ema::new(0.95)));
+
+    // ---- local worker ------------------------------------------------------
+    let local_handle = if cfg.effective_r() > 0 {
+        let runtime = runtime.clone();
+        let workset = workset.clone();
+        let ctrl = ctrl.clone();
+        let train = train.clone();
+        let cosine = cosine.clone();
+        let loss_ema = loss_ema.clone();
+        Some(std::thread::Builder::new()
+            .name("party-b-local".into())
+            .spawn(move || -> anyhow::Result<u64> {
+                let mut steps = 0u64;
+                while !ctrl.stopped() {
+                    let entry = workset.lock().unwrap().sample();
+                    match entry {
+                        Some(e) => {
+                            let (xb, y) = gather_b(&train, &e.indices);
+                            let (loss, ws) = runtime
+                                .lock()
+                                .unwrap()
+                                .local_step(&xb, &y, &e.za, &e.dza)?;
+                            steps += 1;
+                            cosine.lock().unwrap().push(steps, &ws);
+                            loss_ema.lock().unwrap().push(loss as f64);
+                        }
+                        None => {
+                            std::thread::sleep(
+                                std::time::Duration::from_micros(200));
+                        }
+                    }
+                }
+                Ok(steps)
+            })?)
+    } else {
+        None
+    };
+
+    // ---- comm worker + control plane (this thread) -------------------------
+    let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
+    let eval_batches = eval_batch_count(cfg, test.n, batch);
+    let start = Instant::now();
+    let mut series: Vec<SeriesPoint> = Vec::new();
+    let mut stop_reason = StopReason::MaxRounds;
+    let mut comm_rounds = 0u64;
+
+    let result: anyhow::Result<()> = (|| {
+        for round in 0..cfg.max_rounds as u64 {
+            let idx = cursor.next_indices();
+            let (xb, y) = gather_b(&train, &idx);
+            let za = match transport.recv()? {
+                Message::Activation { round: r, tensor } => {
+                    anyhow::ensure!(r == round,
+                                    "protocol skew: got activation {r}, \
+                                     expected {round}");
+                    tensor
+                }
+                other => anyhow::bail!("unexpected message {:?} in round \
+                                        {round}", other.tag()),
+            };
+            let (dza, loss) = runtime
+                .lock()
+                .unwrap()
+                .exact_step(&xb, &y, &za)?;
+            if cfg.compute_delay_s > 0.0 {
+                // Optional artificial compute cost (comm:compute ratio
+                // studies — see DESIGN.md §3).
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    cfg.compute_delay_s));
+            }
+            loss_ema.lock().unwrap().push(loss as f64);
+            transport.send(Message::Derivative { round,
+                                                 tensor: dza.clone() })?;
+            workset.lock().unwrap().insert(round, idx, za, dza);
+            comm_rounds = round + 1;
+
+            // Eval lane + stop decision.
+            if comm_rounds % cfg.eval_every as u64 == 0 {
+                let mut scores = Vec::with_capacity(eval_batches * batch);
+                let mut labels = Vec::with_capacity(eval_batches * batch);
+                for k in 0..eval_batches {
+                    let idx: Vec<u32> = ((k * batch) as u32
+                        ..((k + 1) * batch) as u32)
+                        .collect();
+                    let (xb, y) = gather_b(&test, &idx);
+                    let za = match transport.recv()? {
+                        Message::EvalActivation { round: r, tensor } => {
+                            anyhow::ensure!(r == k as u64,
+                                            "eval lane skew: {r} != {k}");
+                            tensor
+                        }
+                        other => anyhow::bail!(
+                            "expected eval activation, got {:?}",
+                            other.tag()),
+                    };
+                    let yhat =
+                        runtime.lock().unwrap().eval(&xb, &za)?;
+                    scores.extend(yhat);
+                    labels.extend_from_slice(y.as_f32()?);
+                }
+                let auc = auc_exact(&scores, &labels);
+                let rt = runtime.lock().unwrap();
+                let updates = rt.exact_updates + rt.local_updates;
+                drop(rt);
+                let point = SeriesPoint {
+                    comm_round: comm_rounds,
+                    wall_s: start.elapsed().as_secs_f64(),
+                    auc,
+                    loss: loss_ema.lock().unwrap().get(),
+                    updates,
+                };
+                log::info!(
+                    "[{}] round {:>6}  auc {:.4}  loss {:.4}  updates {}",
+                    cfg.algorithm.name(), comm_rounds, auc, point.loss,
+                    updates
+                );
+                series.push(point);
+                if cfg.target_auc > 0.0 && auc >= cfg.target_auc {
+                    stop_reason = StopReason::TargetAuc;
+                    return Ok(());
+                }
+                if cfg.max_seconds > 0.0
+                    && start.elapsed().as_secs_f64() >= cfg.max_seconds
+                {
+                    stop_reason = StopReason::TimeBudget;
+                    return Ok(());
+                }
+            }
+        }
+        Ok(())
+    })();
+    // Broadcast shutdown regardless of how we exited.
+    let _ = transport.send(Message::Shutdown);
+    ctrl.stop();
+    let local_updates = match local_handle {
+        Some(h) => h.join().expect("party B local worker panicked")?,
+        None => 0,
+    };
+    result?;
+
+    let exact_updates = runtime.lock().unwrap().exact_updates;
+    let ws_stats = workset.lock().unwrap().stats();
+    let cosine = Arc::try_unwrap(cosine)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_default();
+    Ok(PartyBReport {
+        comm_rounds,
+        exact_updates,
+        local_updates,
+        workset: ws_stats,
+        cosine,
+        series,
+        stop_reason,
+    })
+}

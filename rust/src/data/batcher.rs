@@ -1,0 +1,175 @@
+//! Shared-seed aligned mini-batch scheduler (paper §2.1, Data Management).
+//!
+//! Both parties construct a `BatchSchedule` from the same seed and epoch
+//! counter, so batch `i` refers to the same instance rows on both sides
+//! without any index exchange — exactly the paper's "sample the
+//! mini-batches using the same random seed" protocol. The whole training
+//! dataset is reshuffled every epoch (paper §3.2: shuffling ensures the
+//! workset holds instances in random order).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+use super::{PartyAData, PartyBData};
+
+/// Epoch-scoped permutation of instance indices, chunked into batches.
+#[derive(Debug, Clone)]
+pub struct BatchSchedule {
+    order: Vec<u32>,
+    batch: usize,
+}
+
+impl BatchSchedule {
+    /// Build the schedule for `epoch` over `n` instances. Deterministic in
+    /// (seed, epoch): both parties call this independently and agree.
+    pub fn new(seed: u64, epoch: u64, n: usize, batch: usize) -> Self {
+        assert!(batch > 0 && n >= batch,
+                "need at least one full batch (n={n}, batch={batch})");
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        Pcg::new(seed ^ 0xba7c_4ed0, epoch).shuffle(&mut order);
+        BatchSchedule { order, batch }
+    }
+
+    /// Number of full batches per epoch (the tail remainder is dropped —
+    /// static HLO shapes require full batches).
+    pub fn num_batches(&self) -> usize {
+        self.order.len() / self.batch
+    }
+
+    /// Instance indices of batch `i`.
+    pub fn indices(&self, i: usize) -> &[u32] {
+        assert!(i < self.num_batches(), "batch index out of range");
+        &self.order[i * self.batch..(i + 1) * self.batch]
+    }
+}
+
+/// Iterator over the global batch sequence (epoch after epoch), tracking
+/// the communication-round timestamp. Each party owns one, seeded alike.
+#[derive(Debug)]
+pub struct BatchCursor {
+    seed: u64,
+    n: usize,
+    batch: usize,
+    epoch: u64,
+    next_in_epoch: usize,
+    schedule: BatchSchedule,
+}
+
+impl BatchCursor {
+    pub fn new(seed: u64, n: usize, batch: usize) -> Self {
+        let schedule = BatchSchedule::new(seed, 0, n, batch);
+        BatchCursor { seed, n, batch, epoch: 0, next_in_epoch: 0, schedule }
+    }
+
+    /// Indices of the next batch, advancing the cursor (and re-shuffling
+    /// at epoch boundaries).
+    pub fn next_indices(&mut self) -> Vec<u32> {
+        if self.next_in_epoch >= self.schedule.num_batches() {
+            self.epoch += 1;
+            self.next_in_epoch = 0;
+            self.schedule =
+                BatchSchedule::new(self.seed, self.epoch, self.n, self.batch);
+        }
+        let idx = self.schedule.indices(self.next_in_epoch).to_vec();
+        self.next_in_epoch += 1;
+        idx
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+/// Gather Party A's feature rows for a batch into an i32 [B, F] tensor.
+pub fn gather_a(data: &PartyAData, idx: &[u32]) -> Tensor {
+    let f = data.fields;
+    let mut out = Vec::with_capacity(idx.len() * f);
+    for &i in idx {
+        let i = i as usize;
+        out.extend_from_slice(&data.x[i * f..(i + 1) * f]);
+    }
+    Tensor::i32(vec![idx.len(), f], out)
+}
+
+/// Gather Party B's feature rows + labels for a batch.
+pub fn gather_b(data: &PartyBData, idx: &[u32]) -> (Tensor, Tensor) {
+    let f = data.fields;
+    let mut xs = Vec::with_capacity(idx.len() * f);
+    let mut ys = Vec::with_capacity(idx.len());
+    for &i in idx {
+        let i = i as usize;
+        xs.extend_from_slice(&data.x[i * f..(i + 1) * f]);
+        ys.push(data.y[i]);
+    }
+    (Tensor::i32(vec![idx.len(), f], xs), Tensor::f32(vec![idx.len()], ys))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthDataset;
+
+    #[test]
+    fn both_parties_agree_on_schedule() {
+        let a = BatchSchedule::new(42, 3, 1000, 64);
+        let b = BatchSchedule::new(42, 3, 1000, 64);
+        for i in 0..a.num_batches() {
+            assert_eq!(a.indices(i), b.indices(i));
+        }
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let a = BatchSchedule::new(42, 0, 1000, 64);
+        let b = BatchSchedule::new(42, 1, 1000, 64);
+        assert_ne!(a.indices(0), b.indices(0));
+    }
+
+    #[test]
+    fn schedule_is_a_partition() {
+        let s = BatchSchedule::new(7, 0, 640, 64);
+        let mut seen: Vec<u32> = (0..s.num_batches())
+            .flat_map(|i| s.indices(i).to_vec())
+            .collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 640);
+    }
+
+    #[test]
+    fn cursor_rolls_epochs() {
+        let mut c = BatchCursor::new(1, 130, 64);
+        assert_eq!(c.next_indices().len(), 64);
+        assert_eq!(c.epoch(), 0);
+        c.next_indices();
+        // 130/64 = 2 batches per epoch; third call rolls over.
+        c.next_indices();
+        assert_eq!(c.epoch(), 1);
+    }
+
+    #[test]
+    fn cursors_stay_aligned_across_epochs() {
+        let mut a = BatchCursor::new(9, 300, 64);
+        let mut b = BatchCursor::new(9, 300, 64);
+        for _ in 0..20 {
+            assert_eq!(a.next_indices(), b.next_indices());
+        }
+    }
+
+    #[test]
+    fn gather_extracts_aligned_rows() {
+        let ds = SynthDataset::generate("avazu", 50, 500, 100, 0.0, 3)
+            .unwrap();
+        let idx = vec![5u32, 17, 3];
+        let xa = gather_a(&ds.train_a, &idx);
+        let (xb, y) = gather_b(&ds.train_b, &idx);
+        assert_eq!(xa.shape, vec![3, 14]);
+        assert_eq!(xb.shape, vec![3, 8]);
+        assert_eq!(y.shape, vec![3]);
+        // Row 1 of the gather == instance 17's raw features.
+        assert_eq!(xa.row_f32(0).is_err(), true); // i32 tensor
+        let xa_raw = xa.as_i32().unwrap();
+        assert_eq!(&xa_raw[14..28], &ds.train_a.x[17 * 14..18 * 14]);
+        assert_eq!(y.as_f32().unwrap()[1], ds.train_b.y[17]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Ablation & sensitivity harness — Figure 5 and Table 2 of the paper.
+//!
+//! The paper trains WDL on Criteo and measures the number of
+//! communication rounds to a target validation AUC while varying one
+//! technique at a time: the local-update count R (Fig 5a), the workset
+//! size W with round-robin vs consecutive sampling (Fig 5b), and the
+//! instance-weighting threshold ξ (Fig 5c); Fig 5d plots the cosine-
+//! similarity quantiles the weighting mechanism sees.
+
+use crate::config::{Algorithm, RunConfig};
+use crate::coordinator::trainer::run_trials;
+
+use super::SweepResult;
+
+/// Run all trials for each (label, config) variant.
+pub fn run_variants(variants: Vec<(String, RunConfig)>)
+                    -> anyhow::Result<Vec<SweepResult>> {
+    let mut out = Vec::with_capacity(variants.len());
+    for (label, cfg) in variants {
+        log::info!("=== variant {label} ===");
+        let outcomes = run_trials(&cfg)?;
+        out.push(SweepResult {
+            label,
+            records: outcomes.into_iter().map(|o| o.record).collect(),
+        });
+    }
+    Ok(out)
+}
+
+/// Fig 5(a): vary R at fixed W, ξ. `r = 0` encodes the Vanilla baseline
+/// ("No Local").
+pub fn sweep_r(base: &RunConfig, rs: &[usize])
+               -> anyhow::Result<Vec<SweepResult>> {
+    let variants = rs
+        .iter()
+        .map(|&r| {
+            let mut c = base.clone();
+            if r == 0 {
+                c.algorithm = Algorithm::Vanilla;
+                ("NoLocal(R=1)".to_string(), c)
+            } else {
+                c.algorithm = Algorithm::CeluVfl;
+                c.r_local = r;
+                (format!("R={r}"), c)
+            }
+        })
+        .collect();
+    run_variants(variants)
+}
+
+/// Fig 5(b): vary W at fixed R, ξ. `w = 1` runs the consecutive
+/// (FedBCD-style) sampler; `w > 1` runs round-robin.
+pub fn sweep_w(base: &RunConfig, ws: &[usize])
+               -> anyhow::Result<Vec<SweepResult>> {
+    let variants = ws
+        .iter()
+        .map(|&w| {
+            let mut c = base.clone();
+            if w <= 1 {
+                // Consecutive reuse of the newest batch — still weighted
+                // (the paper's "Consecutive (W=1)" row keeps ξ).
+                c.algorithm = Algorithm::CeluVfl;
+                c.w_workset = 1;
+                ("Consecutive(W=1)".to_string(), c)
+            } else {
+                c.algorithm = Algorithm::CeluVfl;
+                c.w_workset = w;
+                (format!("W={w}"), c)
+            }
+        })
+        .collect();
+    run_variants(variants)
+}
+
+/// Fig 5(c): vary ξ at fixed R, W. `xi = 180` disables weighting
+/// ("No Weights").
+pub fn sweep_xi(base: &RunConfig, xis: &[f64])
+                -> anyhow::Result<Vec<SweepResult>> {
+    let variants = xis
+        .iter()
+        .map(|&xi| {
+            let mut c = base.clone();
+            c.algorithm = Algorithm::CeluVfl;
+            c.xi_degrees = xi;
+            let label = if xi >= 180.0 {
+                "NoWeights".to_string()
+            } else {
+                format!("xi={xi:.0}deg")
+            };
+            (label, c)
+        })
+        .collect();
+    run_variants(variants)
+}
+
+/// The full Table 2 grid: one section per technique. Returns
+/// (section, Vec<(label, cell)>) rows ready for printing, given a target
+/// AUC.
+pub fn table2(base: &RunConfig, target: f64)
+              -> anyhow::Result<Vec<(String, Vec<(String, String)>)>> {
+    let mut sections = Vec::new();
+
+    // Local update: No Local vs R ∈ {3,5,8}, at W=5 ξ=90° and ξ=60°.
+    for xi in [90.0, 60.0] {
+        let mut b = base.clone();
+        b.w_workset = 5;
+        b.xi_degrees = xi;
+        let sweeps = sweep_r(&b, &[0, 3, 5, 8])?;
+        sections.push((format!("Local Update (W=5, ξ={xi:.0}°)"),
+                       summarize(&sweeps, target)));
+    }
+
+    // Local sampling: consecutive vs W ∈ {3,5,8}, at R=5.
+    for xi in [90.0, 60.0] {
+        let mut b = base.clone();
+        b.r_local = 5;
+        b.xi_degrees = xi;
+        let sweeps = sweep_w(&b, &[1, 3, 5, 8])?;
+        sections.push((format!("Local Sampling (R=5, ξ={xi:.0}°)"),
+                       summarize(&sweeps, target)));
+    }
+
+    // Instance weighting: none vs ξ ∈ {90°, 60°, 30°}.
+    for (w, r) in [(3usize, 3usize), (5, 5)] {
+        let mut b = base.clone();
+        b.w_workset = w;
+        b.r_local = r;
+        let sweeps = sweep_xi(&b, &[180.0, 90.0, 60.0, 30.0])?;
+        sections.push((format!("Instance Weighting (W={w}, R={r})"),
+                       summarize(&sweeps, target)));
+    }
+
+    Ok(sections)
+}
+
+/// Summarize sweeps into Table-2 cells; the FIRST variant is the
+/// baseline the ↓% columns are computed against (as in the paper).
+pub fn summarize(sweeps: &[SweepResult], target: f64)
+                 -> Vec<(String, String)> {
+    let baseline = sweeps
+        .first()
+        .map(|s| s.rounds_summary(target).0)
+        .unwrap_or(0.0);
+    sweeps
+        .iter()
+        .map(|s| {
+            let (mean, std, frac) = s.rounds_summary(target);
+            (s.label.clone(), super::table_cell(mean, std, frac, baseline))
+        })
+        .collect()
+}
+
+/// Fig 5(d): the cosine-similarity quantile profile of a single CELU run
+/// (median over local steps of [min,q10,q25,q50,q75,q90,mean,frac≥ξ]).
+pub fn cosine_profile(cfg: &RunConfig)
+                      -> anyhow::Result<(Option<[f64; 8]>, Option<[f64; 8]>)> {
+    let outcome = crate::coordinator::run_training(cfg)?;
+    Ok((outcome.record.cosine.summary(), outcome.record.cosine_b.summary()))
+}

@@ -1,0 +1,129 @@
+//! End-to-end harness — Figure 6 of the paper.
+//!
+//! Compares CELU-VFL against FedBCD and Vanilla on wall-clock time under
+//! the simulated WAN, per (model, dataset) pair, and reports the paper's
+//! headline speedup ratios plus the §1 communication-fraction claim.
+
+use crate::config::{Algorithm, RunConfig};
+use crate::coordinator::trainer::run_trials;
+
+use super::SweepResult;
+
+/// One Figure-6 panel: (model, dataset) with the three competitors.
+pub struct Fig6Panel {
+    pub model: String,
+    pub dataset: String,
+    pub results: Vec<SweepResult>, // [vanilla, fedbcd, celu]
+    pub target: f64,
+}
+
+impl Fig6Panel {
+    /// (label, time_mean, time_std, frac_reached, comm_fraction) rows.
+    pub fn rows(&self) -> Vec<(String, f64, f64, f64, f64)> {
+        self.results
+            .iter()
+            .map(|s| {
+                let (m, sd, frac) = s.time_summary(self.target);
+                let comm: f64 = s
+                    .records
+                    .iter()
+                    .map(|r| r.comm_fraction())
+                    .sum::<f64>()
+                    / s.records.len().max(1) as f64;
+                (s.label.clone(), m, sd, frac, comm)
+            })
+            .collect()
+    }
+
+    /// CELU speedup vs each competitor (None if either diverged).
+    pub fn speedups(&self) -> Vec<(String, Option<f64>)> {
+        let celu = self
+            .results
+            .iter()
+            .find(|s| s.label.starts_with("celu"))
+            .map(|s| s.time_summary(self.target));
+        self.results
+            .iter()
+            .filter(|s| !s.label.starts_with("celu"))
+            .map(|s| {
+                let (m, _, frac) = s.time_summary(self.target);
+                let speedup = match celu {
+                    Some((cm, _, cf)) if cf > 0.0 && frac > 0.0 && cm > 0.0 =>
+                        Some(m / cm),
+                    _ => None,
+                };
+                (s.label.clone(), speedup)
+            })
+            .collect()
+    }
+}
+
+/// Build the three competitor configs for one panel.
+pub fn competitors(base: &RunConfig, r: usize, w: usize, xi: f64)
+                   -> Vec<(String, RunConfig)> {
+    let mut vanilla = base.clone();
+    vanilla.algorithm = Algorithm::Vanilla;
+    let mut fedbcd = base.clone();
+    fedbcd.algorithm = Algorithm::FedBcd;
+    fedbcd.r_local = r;
+    let mut celu = base.clone();
+    celu.algorithm = Algorithm::CeluVfl;
+    celu.r_local = r;
+    celu.w_workset = w;
+    celu.xi_degrees = xi;
+    vec![
+        ("vanilla".to_string(), vanilla),
+        (format!("fedbcd(R={r})"), fedbcd),
+        (format!("celu(R={r},W={w},ξ={xi:.0}°)"), celu),
+    ]
+}
+
+/// Run one Figure-6 panel. The paper fixes W=5, ξ=60° and R ∈ {5, 8}.
+pub fn fig6_panel(base: &RunConfig, model: &str, dataset: &str, r: usize,
+                  target: f64) -> anyhow::Result<Fig6Panel> {
+    let mut b = base.clone();
+    b.model = model.to_string();
+    b.dataset = dataset.to_string();
+    b.target_auc = target;
+    let mut results = Vec::new();
+    for (label, cfg) in competitors(&b, r, 5, 60.0) {
+        log::info!("=== fig6 {model}/{dataset} {label} ===");
+        let outcomes = run_trials(&cfg)?;
+        results.push(SweepResult {
+            label,
+            records: outcomes.into_iter().map(|o| o.record).collect(),
+        });
+    }
+    Ok(Fig6Panel {
+        model: model.to_string(),
+        dataset: dataset.to_string(),
+        results,
+        target,
+    })
+}
+
+/// Pretty-print one panel to stdout (the bench/example output format).
+pub fn print_panel(panel: &Fig6Panel) {
+    println!("--- {} / {} (target AUC {:.3}) ---", panel.model,
+             panel.dataset, panel.target);
+    println!("{:<26} {:>12} {:>8} {:>9} {:>10}", "algorithm",
+             "time-to-AUC", "±std", "reached", "comm-frac");
+    for (label, m, sd, frac, comm) in panel.rows() {
+        if frac == 0.0 {
+            println!("{label:<26} {:>12} {:>8} {:>9} {comm:>9.0}%",
+                     "n/a", "-", "0%", comm = 100.0 * comm);
+        } else {
+            println!(
+                "{label:<26} {m:>11.1}s {sd:>7.1}s {:>8.0}% {:>9.0}%",
+                100.0 * frac,
+                100.0 * comm
+            );
+        }
+    }
+    for (vs, speedup) in panel.speedups() {
+        match speedup {
+            Some(x) => println!("  CELU speedup vs {vs}: {x:.2}×"),
+            None => println!("  CELU speedup vs {vs}: n/a (diverged)"),
+        }
+    }
+}

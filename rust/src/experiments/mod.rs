@@ -1,0 +1,123 @@
+//! Experiment harnesses: one per table/figure of the paper's evaluation
+//! (§5), shared by the examples and the bench targets.
+//!
+//! | paper artifact | harness |
+//! |---|---|
+//! | Fig 5(a) local-update sweep (R)        | `ablation::sweep_r` |
+//! | Fig 5(b) local-sampling sweep (W)      | `ablation::sweep_w` |
+//! | Fig 5(c) instance-weighting sweep (ξ)  | `ablation::sweep_xi` |
+//! | Fig 5(d) cosine-similarity quantiles   | `ablation::cosine_profile` |
+//! | Table 2 comm-rounds-to-target grid     | `ablation::table2` |
+//! | Fig 6 end-to-end time-to-AUC           | `endtoend::fig6` |
+//! | Thm 1 ρ-vs-staleness probe             | `theory::rho_probe` |
+//! | §1 comm-fraction claim                 | `endtoend` comm column |
+
+pub mod ablation;
+pub mod endtoend;
+pub mod tcp;
+pub mod theory;
+
+use crate::metrics::RunRecord;
+use crate::util::stats::mean_std;
+
+/// One sweep variant: label + the per-trial records.
+pub struct SweepResult {
+    pub label: String,
+    pub records: Vec<RunRecord>,
+}
+
+impl SweepResult {
+    /// Rounds to target AUC per trial (None = never reached).
+    pub fn rounds_to(&self, target: f64) -> Vec<Option<u64>> {
+        self.records.iter().map(|r| r.rounds_to_auc(target)).collect()
+    }
+
+    /// Mean ± std of rounds-to-target over the trials that reached it,
+    /// plus the fraction that did.
+    pub fn rounds_summary(&self, target: f64) -> (f64, f64, f64) {
+        let reached: Vec<f64> = self
+            .rounds_to(target)
+            .into_iter()
+            .flatten()
+            .map(|r| r as f64)
+            .collect();
+        let frac = reached.len() as f64 / self.records.len().max(1) as f64;
+        let (mean, std) = mean_std(&reached);
+        (mean, std, frac)
+    }
+
+    /// Mean ± std of wall-clock seconds to target AUC.
+    pub fn time_summary(&self, target: f64) -> (f64, f64, f64) {
+        let reached: Vec<f64> = self
+            .records
+            .iter()
+            .filter_map(|r| r.time_to_auc(target))
+            .collect();
+        let frac = reached.len() as f64 / self.records.len().max(1) as f64;
+        let (mean, std) = mean_std(&reached);
+        (mean, std, frac)
+    }
+
+    pub fn best_auc_mean(&self) -> f64 {
+        let aucs: Vec<f64> =
+            self.records.iter().map(|r| r.best_auc()).collect();
+        mean_std(&aucs).0
+    }
+}
+
+/// Render a Table-2-style cell: `mean ± std (↓ pct%)` against a baseline.
+pub fn table_cell(mean: f64, std: f64, frac: f64, baseline: f64) -> String {
+    if frac == 0.0 {
+        return "diverged/NR".to_string();
+    }
+    let mut s = format!("{mean:.0} ± {std:.1}");
+    if baseline > 0.0 && mean > 0.0 && (baseline - mean).abs() > 1e-9 {
+        let pct = 100.0 * (baseline - mean) / baseline;
+        if pct >= 0.0 {
+            s.push_str(&format!(" (↓{pct:.1}%)"));
+        } else {
+            s.push_str(&format!(" (↑{:.1}%)", -pct));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SeriesPoint;
+
+    fn rec(aucs: &[f64]) -> RunRecord {
+        let mut r = RunRecord::default();
+        for (i, &a) in aucs.iter().enumerate() {
+            r.series.push(SeriesPoint {
+                comm_round: (i as u64 + 1) * 100,
+                wall_s: (i as f64 + 1.0) * 5.0,
+                auc: a,
+                loss: 0.0,
+                updates: 0,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn rounds_summary_ignores_unreached() {
+        let s = SweepResult {
+            label: "t".into(),
+            records: vec![rec(&[0.5, 0.7]), rec(&[0.5, 0.55])],
+        };
+        let (mean, _std, frac) = s.rounds_summary(0.65);
+        assert_eq!(mean, 200.0);
+        assert_eq!(frac, 0.5);
+    }
+
+    #[test]
+    fn table_cell_formats() {
+        assert_eq!(table_cell(0.0, 0.0, 0.0, 100.0), "diverged/NR");
+        let c = table_cell(50.0, 2.0, 1.0, 100.0);
+        assert!(c.contains("50") && c.contains("↓50.0%"), "{c}");
+        let c = table_cell(150.0, 2.0, 1.0, 100.0);
+        assert!(c.contains("↑50.0%"), "{c}");
+    }
+}

@@ -1,0 +1,65 @@
+//! Two-process deployment: run one party over real TCP.
+//!
+//! The production shape of a VFL job — each enterprise runs its own
+//! binary inside its own network perimeter; only `Z_A`/`∇Z_A` frames
+//! cross the boundary. Both processes must be launched with the same
+//! config (model/dataset/size/seed) so the pre-aligned synthetic data and
+//! the batch schedule agree, mirroring the paper's post-PSI setup.
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::party_a::run_party_a;
+use crate::coordinator::party_b::run_party_b;
+use crate::coordinator::trainer::{load_data, load_set};
+use crate::transport::tcp::TcpTransport;
+use crate::transport::Transport;
+
+pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
+                     connect: &str) -> anyhow::Result<()> {
+    cfg.validate()?;
+    let set = load_set(cfg)?;
+    let data = load_data(cfg, &set)?;
+    match role {
+        "b" => {
+            let transport: Arc<dyn Transport> =
+                Arc::new(TcpTransport::listen(listen, cfg.wan)?);
+            let report = run_party_b(
+                cfg,
+                set,
+                Arc::new(data.train_b),
+                Arc::new(data.test_b),
+                transport.clone(),
+            )?;
+            let best = report
+                .series
+                .iter()
+                .map(|p| p.auc)
+                .fold(0.0f64, f64::max);
+            println!(
+                "party B done: rounds={} local_updates={} best_auc={:.4} \
+                 sent={}B stop={:?}",
+                report.comm_rounds, report.local_updates, best,
+                transport.stats().bytes, report.stop_reason
+            );
+        }
+        "a" => {
+            let transport: Arc<dyn Transport> =
+                Arc::new(TcpTransport::connect(connect, cfg.wan)?);
+            let report = run_party_a(
+                cfg,
+                set,
+                Arc::new(data.train_a),
+                Arc::new(data.test_a),
+                transport.clone(),
+            )?;
+            println!(
+                "party A done: rounds={} local_updates={} sent={}B",
+                report.comm_rounds, report.local_updates,
+                transport.stats().bytes
+            );
+        }
+        other => anyhow::bail!("role must be 'a' or 'b', got '{other}'"),
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! # CELU-VFL
+//!
+//! Reproduction of *"Towards Communication-efficient Vertical Federated
+//! Learning Training via Cache-enabled Local Updates"* (Fu et al., PVLDB
+//! 15(10), 2022) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the VFL coordinator: two-party protocol,
+//!   simulated-WAN / TCP transports, the workset table with round-robin
+//!   local sampling, comm/local worker overlap, metrics and the
+//!   experiment harnesses.
+//! - **L2 (python/compile)** — JAX step functions (WDL/DSSM bottoms +
+//!   tops, AdaGrad), AOT-lowered once to HLO-text artifacts.
+//! - **L1 (python/compile/kernels)** — Pallas kernels for the
+//!   per-instance hot spots (InsWeight cosine, weighted backward).
+//!
+//! Python never runs on the training path: the coordinator loads the
+//! artifacts through PJRT (`runtime`) and drives everything from Rust.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod protocol;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod transport;
+pub mod util;
+pub mod workset;

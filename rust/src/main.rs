@@ -1,0 +1,182 @@
+//! `celu-vfl` — CLI launcher for the CELU-VFL training framework.
+//!
+//! Subcommands:
+//!   train   run a two-party training job in-process (simulated WAN)
+//!   party   run one party of a two-process TCP deployment
+//!   info    print artifact/manifest information
+//!
+//! Examples:
+//!   celu-vfl train --config configs/quickstart.toml
+//!   celu-vfl train --algorithm celu --r 5 --w 5 --xi 60 --rounds 2000
+//!   celu-vfl party --role b --listen 0.0.0.0:7000 --config cfg.toml
+//!   celu-vfl info --artifacts artifacts
+
+use celu_vfl::config::{Algorithm, RunConfig};
+use celu_vfl::coordinator::run_training;
+use celu_vfl::util::cli::Cli;
+use celu_vfl::util::logger;
+
+fn main() {
+    logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&argv[1..]),
+        Some("party") => cmd_party(&argv[1..]),
+        Some("info") => cmd_info(&argv[1..]),
+        _ => {
+            eprintln!(
+                "usage: celu-vfl <train|party|info> [options]\n\
+                 run `celu-vfl <cmd> --help` for details"
+            );
+            Err(anyhow::anyhow!("no subcommand"))
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+/// Apply common CLI overrides on top of a (possibly file-loaded) config.
+fn apply_overrides(cfg: &mut RunConfig,
+                   args: &celu_vfl::util::cli::Args) -> anyhow::Result<()> {
+    let ov = |v: &str| v != "-";
+    if ov(args.get("algorithm")) {
+        cfg.algorithm = Algorithm::parse(args.get("algorithm"))?;
+    }
+    if ov(args.get("model")) {
+        cfg.model = args.get("model").to_string();
+    }
+    if ov(args.get("dataset")) {
+        cfg.dataset = args.get("dataset").to_string();
+    }
+    if ov(args.get("size")) {
+        cfg.size = args.get("size").to_string();
+    }
+    if ov(args.get("r")) {
+        cfg.r_local = args.get_usize("r")?;
+    }
+    if ov(args.get("w")) {
+        cfg.w_workset = args.get_usize("w")?;
+    }
+    if ov(args.get("xi")) {
+        cfg.xi_degrees = args.get_f64("xi")?;
+    }
+    if ov(args.get("rounds")) {
+        cfg.max_rounds = args.get_usize("rounds")?;
+    }
+    if ov(args.get("lr")) {
+        cfg.lr = args.get_f64("lr")?;
+    }
+    if ov(args.get("seed")) {
+        cfg.seed = args.get_u64("seed")?;
+    }
+    if ov(args.get("target-auc")) {
+        cfg.target_auc = args.get_f64("target-auc")?;
+    }
+    if ov(args.get("bandwidth")) {
+        cfg.wan.bandwidth_mbps = args.get_f64("bandwidth")?;
+    }
+    cfg.validate()
+}
+
+fn train_cli(bin: &'static str, about: &'static str) -> Cli {
+    Cli::new(bin, about)
+        .opt("config", "-", "TOML config file (defaults applied otherwise)")
+        .opt("algorithm", "-", "vanilla | fedbcd | celu")
+        .opt("model", "-", "wdl | dssm")
+        .opt("dataset", "-", "criteo | avazu | d3")
+        .opt("size", "-", "tiny | small | big | paper")
+        .opt("r", "-", "local updates per cached batch (R)")
+        .opt("w", "-", "workset capacity (W)")
+        .opt("xi", "-", "weighting threshold ξ in degrees (180 = off)")
+        .opt("rounds", "-", "max communication rounds")
+        .opt("lr", "-", "AdaGrad learning rate")
+        .opt("seed", "-", "PRNG seed")
+        .opt("target-auc", "-", "stop when validation AUC reaches this")
+        .opt("bandwidth", "-", "simulated WAN bandwidth in Mbps (0 = off)")
+        .opt("out", "-", "write the run record JSON here")
+}
+
+fn load_config(args: &celu_vfl::util::cli::Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        "-" => RunConfig::quick(),
+        path => RunConfig::from_toml_file(path)?,
+    };
+    apply_overrides(&mut cfg, args)?;
+    Ok(cfg)
+}
+
+fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
+    let cli = train_cli("celu-vfl train", "two-party VFL training run");
+    let args = cli.parse(argv)?;
+    let cfg = load_config(&args)?;
+    log::info!(
+        "training {}/{} algo={} R={} W={} ξ={}° lr={} rounds={}",
+        cfg.model, cfg.dataset, cfg.algorithm.name(), cfg.effective_r(),
+        cfg.effective_w(), cfg.xi_degrees, cfg.lr, cfg.max_rounds
+    );
+    let outcome = run_training(&cfg)?;
+    let rec = &outcome.record;
+    println!(
+        "done: rounds={} best_auc={:.4} wall={:.1}s comm_busy={:.1}s \
+         local_updates={} stop={:?}",
+        rec.comm_rounds,
+        rec.best_auc(),
+        rec.wall.as_secs_f64(),
+        rec.comm_busy.as_secs_f64(),
+        rec.local_updates,
+        outcome.stop_reason
+    );
+    if args.get("out") != "-" {
+        std::fs::write(args.get("out"), rec.to_json().to_string())?;
+        log::info!("wrote run record to {}", args.get("out"));
+    }
+    Ok(())
+}
+
+fn cmd_party(argv: &[String]) -> anyhow::Result<()> {
+    let cli = train_cli("celu-vfl party", "one party of a TCP deployment")
+        .req("role", "a | b")
+        .opt("listen", "127.0.0.1:7001", "B: address to listen on")
+        .opt("connect", "127.0.0.1:7001", "A: address to connect to");
+    let args = cli.parse(argv)?;
+    let cfg = load_config(&args)?;
+    celu_vfl::experiments::tcp::run_tcp_party(
+        &cfg,
+        args.get("role"),
+        args.get("listen"),
+        args.get("connect"),
+    )
+}
+
+fn cmd_info(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("celu-vfl info", "inspect artifact sets")
+        .opt("artifacts", "artifacts", "artifact root directory");
+    let args = cli.parse(argv)?;
+    let root = std::path::Path::new(args.get("artifacts"));
+    anyhow::ensure!(root.is_dir(), "no artifact dir at {root:?} — run \
+                                    `make artifacts`");
+    println!("{:<24} {:>8} {:>6} {:>10} {:>8}", "set", "batch", "z_dim",
+             "params", "fields");
+    let mut entries: Vec<_> = std::fs::read_dir(root)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("manifest.json").exists())
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let m = celu_vfl::runtime::Manifest::load(&e.path())?;
+        println!(
+            "{:<24} {:>8} {:>6} {:>10} {:>5}/{:<3}",
+            e.file_name().to_string_lossy(),
+            m.batch,
+            m.z_dim,
+            m.total_params(),
+            m.fields_a,
+            m.fields_b
+        );
+    }
+    Ok(())
+}

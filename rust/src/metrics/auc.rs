@@ -1,0 +1,134 @@
+//! Exact ROC-AUC via the rank-sum (Mann–Whitney U) identity, with proper
+//! tie handling (mid-ranks) — the validation metric of every experiment
+//! in the paper (§5).
+
+/// Exact AUC of `scores` against binary `labels` (1.0 = positive).
+/// O(n log n); ties receive mid-ranks. Returns 0.5 for degenerate inputs
+/// (all-positive / all-negative), matching the "no information" reading.
+pub fn auc_exact(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len(), "scores/labels length mismatch");
+    let n = scores.len();
+    if n == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut rank_sum_pos = 0.0f64;
+    let mut pos = 0.0f64;
+    let mut i = 0usize;
+    while i < n {
+        // Tie group [i, j)
+        let mut j = i + 1;
+        while j < n && scores[order[j]] == scores[order[i]] {
+            j += 1;
+        }
+        let mid_rank = (i + 1 + j) as f64 / 2.0; // average of ranks i+1..=j
+        for &k in &order[i..j] {
+            if labels[k] == 1.0 {
+                rank_sum_pos += mid_rank;
+                pos += 1.0;
+            }
+        }
+        i = j;
+    }
+    let neg = n as f64 - pos;
+    if pos == 0.0 || neg == 0.0 {
+        return 0.5;
+    }
+    (rank_sum_pos - pos * (pos + 1.0) / 2.0) / (pos * neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Pcg;
+    use crate::prop_assert;
+
+    /// O(n²) pair-counting oracle.
+    fn auc_naive(scores: &[f32], labels: &[f32]) -> f64 {
+        let (mut wins, mut ties, mut pairs) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..scores.len() {
+            if labels[i] != 1.0 {
+                continue;
+            }
+            for j in 0..scores.len() {
+                if labels[j] != 0.0 {
+                    continue;
+                }
+                pairs += 1.0;
+                if scores[i] > scores[j] {
+                    wins += 1.0;
+                } else if scores[i] == scores[j] {
+                    ties += 1.0;
+                }
+            }
+        }
+        if pairs == 0.0 {
+            0.5
+        } else {
+            (wins + ties / 2.0) / pairs
+        }
+    }
+
+    #[test]
+    fn perfect_and_inverted_rankings() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc_exact(&scores, &labels), 1.0);
+        let inv = [0.0f32, 0.0, 1.0, 1.0];
+        let lab_inv = [1.0f32, 1.0, 0.0, 0.0];
+        assert_eq!(auc_exact(&inv, &lab_inv), 0.0);
+    }
+
+    #[test]
+    fn ties_get_half_credit() {
+        let scores = [0.5f32, 0.5, 0.5, 0.5];
+        let labels = [1.0f32, 0.0, 1.0, 0.0];
+        assert!((auc_exact(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(auc_exact(&[], &[]), 0.5);
+        assert_eq!(auc_exact(&[0.3, 0.7], &[1.0, 1.0]), 0.5);
+        assert_eq!(auc_exact(&[0.3, 0.7], &[0.0, 0.0]), 0.5);
+    }
+
+    #[test]
+    fn prop_matches_naive_oracle() {
+        prop::check("auc == naive pair count", |rng| {
+            let n = 2 + rng.gen_range(60) as usize;
+            let mut scores = Vec::with_capacity(n);
+            let mut labels = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Quantized scores to force tie groups.
+                scores.push((rng.gen_range(10) as f32) / 10.0);
+                labels.push(rng.gen_range(2) as f32);
+            }
+            let fast = auc_exact(&scores, &labels);
+            let slow = auc_naive(&scores, &labels);
+            prop_assert!((fast - slow).abs() < 1e-9,
+                         "fast={fast} slow={slow}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_invariant_under_monotone_transform() {
+        prop::check("auc invariant under exp", |rng| {
+            let n = 5 + rng.gen_range(40) as usize;
+            let mut rng2 = Pcg::seeded(rng.next_u64());
+            let scores: Vec<f32> =
+                (0..n).map(|_| rng2.next_normal()).collect();
+            let labels: Vec<f32> =
+                (0..n).map(|_| rng2.gen_range(2) as f32).collect();
+            let transformed: Vec<f32> =
+                scores.iter().map(|x| x.exp()).collect();
+            let a = auc_exact(&scores, &labels);
+            let b = auc_exact(&transformed, &labels);
+            prop_assert!((a - b).abs() < 1e-9, "a={a} b={b}");
+            Ok(())
+        });
+    }
+}

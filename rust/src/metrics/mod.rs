@@ -1,0 +1,8 @@
+//! Metrics: exact AUC, convergence series, staleness telemetry, and the
+//! communication accounting behind the paper's headline numbers.
+
+pub mod auc;
+pub mod series;
+
+pub use auc::auc_exact;
+pub use series::{CosineRecorder, RunRecord, SeriesPoint};

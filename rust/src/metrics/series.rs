@@ -1,0 +1,224 @@
+//! Convergence series + staleness telemetry recorded during a run.
+//!
+//! `RunRecord` is the unit every experiment harness consumes: the AUC
+//! series indexed by communication round *and* wall-clock time (the two
+//! x-axes of Figures 5 and 6), the loss curve, the comm/compute time
+//! split (the §1 ">90% communication" claim), and the cosine-similarity
+//! quantiles per local step (Figure 5(d)).
+
+use std::time::Duration;
+
+use crate::util::json::{arr_f64, num, obj, Json};
+use crate::util::stats::quantile;
+
+/// One evaluation point on the convergence curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeriesPoint {
+    /// Communication rounds completed when evaluated (paper Fig. 5 x-axis).
+    pub comm_round: u64,
+    /// Wall-clock seconds since training start (paper Fig. 6 x-axis).
+    pub wall_s: f64,
+    /// Validation AUC.
+    pub auc: f64,
+    /// Smoothed training loss.
+    pub loss: f64,
+    /// Total updates (exact + local) applied so far at Party B.
+    pub updates: u64,
+}
+
+/// Cosine-similarity telemetry: per-local-step quantile rows (Fig. 5(d)).
+#[derive(Debug, Clone, Default)]
+pub struct CosineRecorder {
+    /// (local_step, wstats[8]) rows as emitted by the artifacts:
+    /// [min, q10, q25, q50, q75, q90, mean, frac_kept].
+    pub rows: Vec<(u64, [f64; 8])>,
+}
+
+impl CosineRecorder {
+    pub fn push(&mut self, local_step: u64, wstats: &[f32]) {
+        debug_assert_eq!(wstats.len(), 8);
+        let mut row = [0.0f64; 8];
+        for (d, s) in row.iter_mut().zip(wstats) {
+            *d = *s as f64;
+        }
+        self.rows.push((local_step, row));
+    }
+
+    /// Column-wise summary over training: returns the median across steps
+    /// of each quantile column (the steady-state Fig. 5(d) profile).
+    pub fn summary(&self) -> Option<[f64; 8]> {
+        if self.rows.is_empty() {
+            return None;
+        }
+        let mut out = [0.0f64; 8];
+        for (c, slot) in out.iter_mut().enumerate() {
+            let col: Vec<f64> = self.rows.iter().map(|(_, r)| r[c]).collect();
+            *slot = quantile(&col, 0.5);
+        }
+        Some(out)
+    }
+}
+
+/// Full record of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub label: String,
+    pub series: Vec<SeriesPoint>,
+    /// Party A's wstats rows: cos(Z_A^(i,j), Z_A^(i)) — Fig. 5(d).
+    pub cosine: CosineRecorder,
+    /// Party B's wstats rows: cos(∇Z_A^(i,j), ∇Z_A^(i)).
+    pub cosine_b: CosineRecorder,
+    /// Total communication rounds executed.
+    pub comm_rounds: u64,
+    /// Exact updates / local updates applied (Party B counts).
+    pub exact_updates: u64,
+    pub local_updates: u64,
+    /// Bytes sent per party.
+    pub bytes_a_to_b: u64,
+    pub bytes_b_to_a: u64,
+    /// Link busy time (sender side, both directions summed).
+    pub comm_busy: Duration,
+    /// Total wall time of the run.
+    pub wall: Duration,
+    /// Time Party B spent inside PJRT execute calls.
+    pub compute_busy: Duration,
+}
+
+impl RunRecord {
+    /// First communication round whose AUC reaches `target`; None if the
+    /// run never got there. Interpolation-free (paper counts rounds).
+    pub fn rounds_to_auc(&self, target: f64) -> Option<u64> {
+        self.series
+            .iter()
+            .find(|p| p.auc >= target)
+            .map(|p| p.comm_round)
+    }
+
+    /// First wall-clock time the AUC reaches `target` (Fig. 6 metric).
+    pub fn time_to_auc(&self, target: f64) -> Option<f64> {
+        self.series.iter().find(|p| p.auc >= target).map(|p| p.wall_s)
+    }
+
+    pub fn best_auc(&self) -> f64 {
+        self.series.iter().map(|p| p.auc).fold(0.0, f64::max)
+    }
+
+    /// Fraction of wall time the (A→B + B→A) links were busy — the §1
+    /// ">90% of training time is communication" measurement for Vanilla.
+    pub fn comm_fraction(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.comm_busy.as_secs_f64() / self.wall.as_secs_f64()
+    }
+
+    /// JSON dump for results/ artifacts.
+    pub fn to_json(&self) -> Json {
+        let series = Json::Arr(
+            self.series
+                .iter()
+                .map(|p| {
+                    obj(vec![
+                        ("round", num(p.comm_round as f64)),
+                        ("wall_s", num(p.wall_s)),
+                        ("auc", num(p.auc)),
+                        ("loss", num(p.loss)),
+                        ("updates", num(p.updates as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let cosine = Json::Arr(
+            self.cosine
+                .rows
+                .iter()
+                .map(|(step, row)| {
+                    obj(vec![
+                        ("step", num(*step as f64)),
+                        ("q", arr_f64(row)),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("comm_rounds", num(self.comm_rounds as f64)),
+            ("exact_updates", num(self.exact_updates as f64)),
+            ("local_updates", num(self.local_updates as f64)),
+            ("bytes_a_to_b", num(self.bytes_a_to_b as f64)),
+            ("bytes_b_to_a", num(self.bytes_b_to_a as f64)),
+            ("comm_busy_s", num(self.comm_busy.as_secs_f64())),
+            ("compute_busy_s", num(self.compute_busy.as_secs_f64())),
+            ("wall_s", num(self.wall.as_secs_f64())),
+            ("comm_fraction", num(self.comm_fraction())),
+            ("series", series),
+            ("cosine", cosine),
+            ("cosine_b", Json::Num(self.cosine_b.rows.len() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record_with_aucs(aucs: &[f64]) -> RunRecord {
+        let mut r = RunRecord { label: "t".into(), ..Default::default() };
+        for (i, &auc) in aucs.iter().enumerate() {
+            r.series.push(SeriesPoint {
+                comm_round: (i as u64 + 1) * 10,
+                wall_s: i as f64 * 2.0,
+                auc,
+                loss: 0.5,
+                updates: i as u64,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn rounds_to_auc_finds_first_crossing() {
+        let r = record_with_aucs(&[0.5, 0.6, 0.7, 0.72]);
+        assert_eq!(r.rounds_to_auc(0.65), Some(30));
+        assert_eq!(r.time_to_auc(0.65), Some(4.0));
+        assert_eq!(r.rounds_to_auc(0.9), None);
+        assert_eq!(r.best_auc(), 0.72);
+    }
+
+    #[test]
+    fn comm_fraction_sane() {
+        let mut r = record_with_aucs(&[0.5]);
+        r.wall = Duration::from_secs(10);
+        r.comm_busy = Duration::from_secs(9);
+        assert!((r.comm_fraction() - 0.9).abs() < 1e-12);
+        let empty = RunRecord::default();
+        assert_eq!(empty.comm_fraction(), 0.0);
+    }
+
+    #[test]
+    fn cosine_recorder_summary_is_columnwise_median()
+    {
+        let mut c = CosineRecorder::default();
+        c.push(1, &[0.0, 0.1, 0.2, 0.5, 0.8, 0.9, 0.5, 1.0]);
+        c.push(2, &[0.2, 0.3, 0.4, 0.7, 1.0, 1.0, 0.7, 0.8]);
+        c.push(3, &[0.4, 0.5, 0.6, 0.9, 1.2, 1.1, 0.9, 0.6]);
+        let s = c.summary().unwrap();
+        assert!((s[0] - 0.2).abs() < 1e-6);
+        assert!((s[3] - 0.7).abs() < 1e-6);
+        assert!((s[7] - 0.8).abs() < 1e-6);
+        assert!(CosineRecorder::default().summary().is_none());
+    }
+
+    #[test]
+    fn json_dump_parses_back() {
+        let mut r = record_with_aucs(&[0.5, 0.7]);
+        r.cosine.push(4, &[0.0; 8]);
+        r.comm_rounds = 20;
+        let j = r.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.expect("comm_rounds").unwrap().as_usize().unwrap(),
+                   20);
+        assert_eq!(parsed.expect("series").unwrap().as_arr().unwrap().len(),
+                   2);
+    }
+}

@@ -1,0 +1,61 @@
+//! Host `Tensor` ↔ `xla::Literal` conversions at the PJRT boundary.
+
+use crate::tensor::{Data, Tensor};
+
+/// Convert a host tensor to an XLA literal (copies once).
+pub fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => xla::Literal::vec1(v),
+        Data::I32(v) => xla::Literal::vec1(v),
+    };
+    if t.shape.is_empty() {
+        // vec1 gives shape [1]; scalars must be rank-0.
+        return Ok(lit.reshape(&[])?);
+    }
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert an XLA literal back to a host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+        other => anyhow::bail!("unsupported element type {other:?}"),
+    }
+}
+
+/// Scalar f32 literal (lr, cos ξ, use_weights gates).
+pub fn scalar_literal(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, -4.0, 0.5, 9.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_to_tensor(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = Tensor::i32(vec![4], vec![5, -6, 7, i32::MAX]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_to_tensor(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_f32(0.25);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert!(back.shape.is_empty());
+        assert_eq!(back.as_f32().unwrap(), &[0.25]);
+    }
+}

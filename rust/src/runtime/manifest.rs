@@ -1,0 +1,189 @@
+//! Artifact manifest: the wire ABI between python/compile/aot.py and the
+//! Rust runtime, parsed from `artifacts/<tag>/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Parameter initialisation policy (python `_init_kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    /// N(0, 0.01) — embedding tables.
+    Normal001,
+    /// Glorot/Xavier uniform — dense matrices.
+    Glorot,
+    /// Zeros — biases, wide paths.
+    Zeros,
+    /// Ones — DSSM scale.
+    Ones,
+}
+
+impl InitKind {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "normal_0.01" => Ok(InitKind::Normal001),
+            "glorot" => Ok(InitKind::Glorot),
+            "zeros" => Ok(InitKind::Zeros),
+            "ones" => Ok(InitKind::Ones),
+            _ => anyhow::bail!("unknown init kind '{s}'"),
+        }
+    }
+}
+
+/// One parameter in the flat positional ABI.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest for one artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub dataset: String,
+    pub size: String,
+    pub batch: usize,
+    pub z_dim: usize,
+    pub fields_a: usize,
+    pub fields_b: usize,
+    pub vocab: usize,
+    pub wstats_len: usize,
+    pub params_a: Vec<ParamSpec>,
+    pub params_b: Vec<ParamSpec>,
+    /// step name → HLO file name.
+    pub files: Vec<(String, String)>,
+}
+
+const REQUIRED_STEPS: &[&str] = &[
+    "a_fwd", "a_upd", "a_local", "a_grad_cos", "b_step", "b_local", "b_eval",
+];
+
+fn parse_params(j: &Json) -> anyhow::Result<Vec<ParamSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            let shape = e
+                .expect("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            Ok(ParamSpec {
+                name: e.expect("name")?.as_str()?.to_string(),
+                shape,
+                init: InitKind::parse(e.expect("init")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        let j = Json::parse(&src)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let abi = j.expect("abi_version")?.as_usize()?;
+        if abi != 1 {
+            anyhow::bail!("unsupported manifest ABI {abi} (want 1)");
+        }
+        let files_obj = j.expect("files")?.as_obj()?;
+        let mut files = Vec::new();
+        for step in REQUIRED_STEPS {
+            let f = files_obj
+                .get(*step)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing step \
+                                                '{step}'"))?
+                .as_str()?;
+            files.push((step.to_string(), f.to_string()));
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model: j.expect("model")?.as_str()?.to_string(),
+            dataset: j.expect("dataset")?.as_str()?.to_string(),
+            size: j.expect("size")?.as_str()?.to_string(),
+            batch: j.expect("batch")?.as_usize()?,
+            z_dim: j.expect("z_dim")?.as_usize()?,
+            fields_a: j.expect("fields_a")?.as_usize()?,
+            fields_b: j.expect("fields_b")?.as_usize()?,
+            vocab: j.expect("vocab")?.as_usize()?,
+            wstats_len: j.expect("wstats_len")?.as_usize()?,
+            params_a: parse_params(j.expect("params_a")?)?,
+            params_b: parse_params(j.expect("params_b")?)?,
+            files,
+        };
+        if m.wstats_len != 8 {
+            anyhow::bail!("wstats_len {} unsupported (runtime expects 8)",
+                          m.wstats_len);
+        }
+        Ok(m)
+    }
+
+    pub fn hlo_path(&self, step: &str) -> anyhow::Result<PathBuf> {
+        self.files
+            .iter()
+            .find(|(s, _)| s == step)
+            .map(|(_, f)| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("no artifact for step '{step}'"))
+    }
+
+    /// Total parameter count (both parties) — reporting only.
+    pub fn total_params(&self) -> usize {
+        self.params_a.iter().map(|p| p.numel()).sum::<usize>()
+            + self.params_b.iter().map(|p| p.numel()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/wdl_criteo_tiny");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "wdl");
+        assert_eq!(m.fields_a, 26);
+        assert_eq!(m.fields_b, 13);
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.params_a[0].name, "emb");
+        assert_eq!(m.params_a[0].init, InitKind::Normal001);
+        assert!(m.total_params() > 10_000);
+        assert!(m.hlo_path("a_fwd").unwrap().exists());
+        assert!(m.hlo_path("nonsense").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_abi() {
+        let dir = std::env::temp_dir().join("celu_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"),
+                       r#"{"abi_version": 99}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn init_kind_parse() {
+        assert!(InitKind::parse("glorot").is_ok());
+        assert!(InitKind::parse("he").is_err());
+    }
+}

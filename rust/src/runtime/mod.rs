@@ -1,0 +1,202 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client from the Rust hot path (Python is never invoked).
+//!
+//! Pipeline per artifact (see /opt/xla-example/README.md for the gotchas):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` once at startup; `execute` per step. Artifacts
+//! return one tuple literal (return_tuple=True is part of the ABI); the
+//! runtime decomposes it and threads the carried params/optimizer state
+//! back into the next call.
+
+pub mod convert;
+pub mod manifest;
+pub mod params;
+pub mod party;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+pub use manifest::Manifest;
+pub use params::ParamState;
+pub use party::{PartyARuntime, PartyBRuntime};
+
+// ---------------------------------------------------------------------------
+// Thread-safety strategy.
+//
+// The `xla` crate's client/executable types are !Send/!Sync because the
+// client handle is an `Rc`, and `PjRtBuffer`s clone that Rc on creation.
+// The underlying TfrtCpuClient is thread-safe, but the Rust-side refcount
+// is not. We therefore funnel EVERY operation that can touch the client
+// Rc (compilation, execution, buffer creation/drop) through one global
+// ENGINE mutex, and assert Send/Sync on the wrappers below. Invariants:
+//
+//   1. `PjRtClient` clones/drops only happen inside `engine_lock()`
+//      (Artifact::load, Artifact::run's output processing).
+//   2. `PjRtBuffer`s never escape `Artifact::run` — outputs are converted
+//      to `Literal`s (plain heap objects with no client back-reference)
+//      before the lock is released.
+//   3. `Literal`s are self-contained C++ objects; distinct literals are
+//      safe to use from distinct threads (Send), and our types only share
+//      them behind `&self` for reads issued by one thread at a time
+//      (coordinator wraps each party runtime in a Mutex).
+//
+// Serialising PJRT dispatch process-wide costs nothing on this 1-core
+// testbed (the computations themselves are the bottleneck) and keeps the
+// unsafe surface auditable: it is exactly this block + the two
+// `unsafe impl`s below and in party.rs.
+// ---------------------------------------------------------------------------
+
+fn engine_lock() -> MutexGuard<'static, ()> {
+    use once_cell::sync::OnceCell;
+    static ENGINE: OnceCell<Mutex<()>> = OnceCell::new();
+    ENGINE.get_or_init(|| Mutex::new(())).lock().unwrap()
+}
+
+struct ClientCell(xla::PjRtClient);
+// SAFETY: see the strategy block above — all Rc traffic is under ENGINE.
+unsafe impl Send for ClientCell {}
+unsafe impl Sync for ClientCell {}
+
+/// Process-wide PJRT CPU client. Call sites must hold `engine_lock()` for
+/// any operation that clones buffers/executables out of the client.
+pub fn global_client() -> anyhow::Result<&'static xla::PjRtClient> {
+    use once_cell::sync::OnceCell;
+    static CLIENT: OnceCell<ClientCell> = OnceCell::new();
+    let c = CLIENT.get_or_try_init(|| xla::PjRtClient::cpu().map(ClientCell))?;
+    Ok(&c.0)
+}
+
+/// Cumulative compute-time accounting shared by a party's artifacts.
+#[derive(Debug, Default)]
+pub struct ComputeClock {
+    nanos: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl ComputeClock {
+    pub fn record(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn busy(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+/// One compiled step function.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    clock: Arc<ComputeClock>,
+}
+
+// SAFETY: see the thread-safety strategy block — the executable (and the
+// client Rc it holds) is only touched inside `engine_lock()`.
+unsafe impl Send for Artifact {}
+unsafe impl Sync for Artifact {}
+
+impl Artifact {
+    pub fn load(client: &xla::PjRtClient, name: &str, path: &Path,
+                clock: Arc<ComputeClock>) -> anyhow::Result<Self> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let _g = engine_lock();
+        let exe = client.compile(&comp)?;
+        drop(_g);
+        log::debug!("compiled artifact {name} from {path:?}");
+        Ok(Artifact { name: name.to_string(), exe, clock })
+    }
+
+    /// Execute with positional literal args; returns the decomposed tuple
+    /// outputs in ABI order.
+    pub fn run(&self, args: &[&xla::Literal])
+               -> anyhow::Result<Vec<xla::Literal>> {
+        let start = Instant::now();
+        // Holds ENGINE across execute + output-buffer processing + buffer
+        // drop: all client-Rc traffic of this call (invariants 1 and 2).
+        let parts = {
+            let _g = engine_lock();
+            let out = self.exe.execute::<&xla::Literal>(args)?;
+            let tuple = out
+                .first()
+                .and_then(|r| r.first())
+                .ok_or_else(|| anyhow::anyhow!("{}: empty execution result",
+                                               self.name))?
+                .to_literal_sync()?;
+            tuple.to_tuple()?
+        };
+        self.clock.record(start.elapsed());
+        Ok(parts)
+    }
+}
+
+/// All compiled artifacts of one (model, dataset, size) set.
+pub struct ArtifactSet {
+    pub manifest: Manifest,
+    pub a_fwd: Artifact,
+    pub a_upd: Artifact,
+    pub a_local: Artifact,
+    pub a_grad_cos: Artifact,
+    pub b_step: Artifact,
+    pub b_local: Artifact,
+    pub b_eval: Artifact,
+    pub clock_a: Arc<ComputeClock>,
+    pub clock_b: Arc<ComputeClock>,
+}
+
+impl ArtifactSet {
+    /// Load + compile every step of the set under `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let client: &xla::PjRtClient = global_client()?;
+        let manifest = Manifest::load(dir)?;
+        let clock_a = Arc::new(ComputeClock::default());
+        let clock_b = Arc::new(ComputeClock::default());
+        let load = |step: &str, clock: &Arc<ComputeClock>| {
+            Artifact::load(client, step, &manifest.hlo_path(step)?,
+                           clock.clone())
+        };
+        let start = Instant::now();
+        let set = ArtifactSet {
+            a_fwd: load("a_fwd", &clock_a)?,
+            a_upd: load("a_upd", &clock_a)?,
+            a_local: load("a_local", &clock_a)?,
+            a_grad_cos: load("a_grad_cos", &clock_a)?,
+            b_step: load("b_step", &clock_b)?,
+            b_local: load("b_local", &clock_b)?,
+            b_eval: load("b_eval", &clock_b)?,
+            manifest,
+            clock_a,
+            clock_b,
+        };
+        log::info!(
+            "loaded artifact set {} ({} params) in {:.2}s",
+            set.manifest.dir.display(),
+            set.manifest.total_params(),
+            start.elapsed().as_secs_f64()
+        );
+        Ok(set)
+    }
+
+    /// Resolve `<artifacts_dir>/<model>_<dataset>_<size>` and load.
+    pub fn load_tagged(artifacts_dir: &str, tag: &str)
+                       -> anyhow::Result<Self> {
+        let dir = Path::new(artifacts_dir).join(tag);
+        if !dir.join("manifest.json").exists() {
+            anyhow::bail!(
+                "artifact set '{tag}' not found under {artifacts_dir} — \
+                 run `make artifacts` first"
+            );
+        }
+        Self::load(&dir)
+    }
+}

@@ -1,0 +1,143 @@
+//! Parameter store: init + AdaGrad accumulator state held as XLA literals.
+//!
+//! Initialisation executes the manifest's per-parameter policy (glorot for
+//! dense matrices, N(0, 0.01) for embeddings, zeros/ones elsewhere) with
+//! the repo PRNG — Python exports shapes only, never weights, so the two
+//! parties' init never crosses the wire.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+use super::manifest::{InitKind, ParamSpec};
+
+/// AdaGrad initial accumulator (python optimizer.ADAGRAD_INIT_ACC).
+pub const ADAGRAD_INIT_ACC: f32 = 0.1;
+
+/// Initialise one parameter tensor from its spec.
+pub fn init_param(spec: &ParamSpec, rng: &mut Pcg) -> Tensor {
+    let n = spec.numel();
+    let data = match spec.init {
+        InitKind::Zeros => vec![0.0f32; n],
+        InitKind::Ones => vec![1.0f32; n],
+        InitKind::Normal001 => {
+            (0..n).map(|_| rng.next_normal() * 0.01).collect()
+        }
+        InitKind::Glorot => {
+            let (fan_in, fan_out) = match spec.shape.len() {
+                0 | 1 => (n, n),
+                _ => (spec.shape[0], spec.shape[spec.shape.len() - 1]),
+            };
+            let lim = (6.0 / (fan_in + fan_out) as f64).sqrt() as f32;
+            (0..n).map(|_| rng.uniform(-lim, lim)).collect()
+        }
+    };
+    Tensor::f32(spec.shape.clone(), data)
+}
+
+/// One party's trainable state: flat params + AdaGrad accumulators, kept
+/// as XLA literals so the hot loop feeds them straight back into execute.
+pub struct ParamState {
+    pub params: Vec<xla::Literal>,
+    pub accs: Vec<xla::Literal>,
+    pub n: usize,
+}
+
+impl ParamState {
+    /// Build from manifest specs. `stream` separates the two parties'
+    /// init randomness.
+    pub fn init(specs: &[ParamSpec], seed: u64, stream: u64)
+                -> anyhow::Result<Self> {
+        let mut rng = Pcg::new(seed, stream);
+        let mut params = Vec::with_capacity(specs.len());
+        let mut accs = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let t = init_param(spec, &mut rng);
+            params.push(super::convert::tensor_to_literal(&t)?);
+            let acc = Tensor::f32(spec.shape.clone(),
+                                  vec![ADAGRAD_INIT_ACC; spec.numel()]);
+            accs.push(super::convert::tensor_to_literal(&acc)?);
+        }
+        let n = specs.len();
+        Ok(ParamState { params, accs, n })
+    }
+
+    /// Replace params+accs from the first 2n outputs of a step artifact.
+    pub fn absorb(&mut self, outputs: &mut Vec<xla::Literal>) {
+        debug_assert!(outputs.len() >= 2 * self.n);
+        // Drain the trailing extras first so we can split off params/accs.
+        let rest = outputs.split_off(2 * self.n);
+        let accs = outputs.split_off(self.n);
+        self.params = std::mem::take(outputs);
+        self.accs = accs;
+        *outputs = rest;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{InitKind, ParamSpec};
+
+    fn spec(name: &str, shape: Vec<usize>, init: InitKind) -> ParamSpec {
+        ParamSpec { name: name.into(), shape, init }
+    }
+
+    #[test]
+    fn init_policies() {
+        let mut rng = Pcg::seeded(1);
+        let z = init_param(&spec("b", vec![8], InitKind::Zeros), &mut rng);
+        assert!(z.as_f32().unwrap().iter().all(|&x| x == 0.0));
+        let o = init_param(&spec("s", vec![1], InitKind::Ones), &mut rng);
+        assert_eq!(o.as_f32().unwrap(), &[1.0]);
+        let e = init_param(&spec("emb", vec![100, 8], InitKind::Normal001),
+                           &mut rng);
+        let vals = e.as_f32().unwrap();
+        let max = vals.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(max < 0.08, "emb init too large: {max}");
+        assert!(vals.iter().any(|&x| x != 0.0));
+        let g = init_param(&spec("w1", vec![64, 32], InitKind::Glorot),
+                           &mut rng);
+        let lim = (6.0f64 / 96.0).sqrt() as f32;
+        assert!(g.as_f32().unwrap().iter().all(|&x| x.abs() <= lim));
+    }
+
+    #[test]
+    fn init_is_deterministic_per_stream() {
+        let specs = vec![spec("w1", vec![4, 4], InitKind::Glorot)];
+        let a = ParamState::init(&specs, 7, 1).unwrap();
+        let b = ParamState::init(&specs, 7, 1).unwrap();
+        let c = ParamState::init(&specs, 7, 2).unwrap();
+        let va = a.params[0].to_vec::<f32>().unwrap();
+        let vb = b.params[0].to_vec::<f32>().unwrap();
+        let vc = c.params[0].to_vec::<f32>().unwrap();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn absorb_splits_outputs() {
+        let specs = vec![
+            spec("a", vec![2], InitKind::Zeros),
+            spec("b", vec![3], InitKind::Zeros),
+        ];
+        let mut st = ParamState::init(&specs, 0, 0).unwrap();
+        let mk = |v: &[f32]| xla::Literal::vec1(v);
+        let mut outputs = vec![
+            mk(&[1.0, 1.0]),          // param a'
+            mk(&[2.0, 2.0, 2.0]),     // param b'
+            mk(&[3.0, 3.0]),          // acc a'
+            mk(&[4.0, 4.0, 4.0]),     // acc b'
+            mk(&[9.0]),               // extra (loss)
+        ];
+        st.absorb(&mut outputs);
+        assert_eq!(outputs.len(), 1);
+        assert_eq!(outputs[0].to_vec::<f32>().unwrap(), vec![9.0]);
+        assert_eq!(st.params[0].to_vec::<f32>().unwrap(), vec![1.0, 1.0]);
+        assert_eq!(st.accs[1].to_vec::<f32>().unwrap(), vec![4.0; 3]);
+    }
+}
+
+// SAFETY: `Literal`s are self-contained heap objects with no client
+// back-reference; moving a ParamState between threads is sound (see the
+// thread-safety strategy block in runtime/mod.rs).
+unsafe impl Send for ParamState {}

@@ -1,0 +1,218 @@
+//! Per-party compute runtimes: typed wrappers over the step artifacts.
+//!
+//! These are the only call sites of PJRT in the training loop. Each party
+//! owns its parameter state; the wrappers assemble the positional ABI
+//! (params… accs… data… scalars…), execute, absorb the carried state and
+//! return the host-visible extras (Z_A, ∇Z_A, loss, wstats).
+
+use std::sync::Arc;
+
+use crate::tensor::Tensor;
+
+use super::convert::{literal_to_tensor, scalar_literal, tensor_to_literal};
+use super::params::ParamState;
+use super::{Artifact, ArtifactSet};
+
+/// Staleness telemetry vector [min,q10,q25,q50,q75,q90,mean,frac_kept].
+pub type WStats = [f32; 8];
+
+fn wstats_from(lit: &xla::Literal) -> anyhow::Result<WStats> {
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != 8 {
+        anyhow::bail!("wstats length {} != 8", v.len());
+    }
+    Ok([v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]])
+}
+
+fn scalar_from(lit: &xla::Literal) -> anyhow::Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("empty scalar output"))
+}
+
+/// Assemble `params… accs… extras…` argument vector.
+fn args<'a>(state: &'a ParamState, extras: &[&'a xla::Literal])
+            -> Vec<&'a xla::Literal> {
+    let mut v = Vec::with_capacity(2 * state.n + extras.len());
+    v.extend(state.params.iter());
+    v.extend(state.accs.iter());
+    v.extend(extras.iter().copied());
+    v
+}
+
+/// Party A: bottom model only (features, no labels).
+pub struct PartyARuntime {
+    set: Arc<ArtifactSet>,
+    pub state: ParamState,
+    lr: xla::Literal,
+    cos_xi: xla::Literal,
+    use_weights: xla::Literal,
+    pub local_updates: u64,
+    pub exact_updates: u64,
+}
+
+impl PartyARuntime {
+    pub fn new(set: Arc<ArtifactSet>, seed: u64, lr: f32, cos_xi: f32,
+               use_weights: bool) -> anyhow::Result<Self> {
+        let state = ParamState::init(&set.manifest.params_a, seed, 0xA)?;
+        Ok(PartyARuntime {
+            set,
+            state,
+            lr: scalar_literal(lr),
+            cos_xi: scalar_literal(cos_xi),
+            use_weights: scalar_literal(if use_weights { 1.0 } else { 0.0 }),
+            local_updates: 0,
+            exact_updates: 0,
+        })
+    }
+
+    fn artifact(&self, name: &str) -> &Artifact {
+        match name {
+            "a_fwd" => &self.set.a_fwd,
+            "a_upd" => &self.set.a_upd,
+            "a_local" => &self.set.a_local,
+            _ => &self.set.a_grad_cos,
+        }
+    }
+
+    /// Z_A = Bottom_A(X_A): the forward half of a communication round.
+    pub fn forward(&self, xa: &Tensor) -> anyhow::Result<Tensor> {
+        let xa_l = tensor_to_literal(xa)?;
+        let mut v: Vec<&xla::Literal> =
+            self.state.params.iter().collect();
+        v.push(&xa_l);
+        let out = self.artifact("a_fwd").run(&v)?;
+        literal_to_tensor(&out[0])
+    }
+
+    /// Exact update with the fresh ∇Z_A received from Party B.
+    pub fn exact_update(&mut self, xa: &Tensor, dza: &Tensor)
+                        -> anyhow::Result<()> {
+        let xa_l = tensor_to_literal(xa)?;
+        let dza_l = tensor_to_literal(dza)?;
+        let v = args(&self.state, &[&xa_l, &dza_l, &self.lr]);
+        let mut out = self.artifact("a_upd").run(&v)?;
+        self.state.absorb(&mut out);
+        self.exact_updates += 1;
+        Ok(())
+    }
+
+    /// Local update from cached statistics (Algorithm 2, Party A).
+    pub fn local_update(&mut self, xa: &Tensor, za_stale: &Tensor,
+                        dza_stale: &Tensor) -> anyhow::Result<WStats> {
+        let xa_l = tensor_to_literal(xa)?;
+        let za_l = tensor_to_literal(za_stale)?;
+        let dza_l = tensor_to_literal(dza_stale)?;
+        let v = args(&self.state,
+                     &[&xa_l, &za_l, &dza_l, &self.lr, &self.cos_xi,
+                       &self.use_weights]);
+        let mut out = self.artifact("a_local").run(&v)?;
+        self.state.absorb(&mut out);
+        self.local_updates += 1;
+        wstats_from(&out[0])
+    }
+
+    /// ρ probe: cosine between bottom-model gradients under two
+    /// cotangents. Returns (cos, ‖g1‖, ‖g2‖).
+    pub fn grad_cos(&self, xa: &Tensor, dza1: &Tensor, dza2: &Tensor)
+                    -> anyhow::Result<(f32, f32, f32)> {
+        let xa_l = tensor_to_literal(xa)?;
+        let d1 = tensor_to_literal(dza1)?;
+        let d2 = tensor_to_literal(dza2)?;
+        let mut v: Vec<&xla::Literal> = self.state.params.iter().collect();
+        v.extend([&xa_l, &d1, &d2]);
+        let out = self.artifact("a_grad_cos").run(&v)?;
+        let probe = out[0].to_vec::<f32>()?;
+        Ok((probe[0], probe[1], probe[2]))
+    }
+}
+
+/// Party B: bottom + top models, labels, loss.
+pub struct PartyBRuntime {
+    set: Arc<ArtifactSet>,
+    pub state: ParamState,
+    lr: xla::Literal,
+    cos_xi: xla::Literal,
+    use_weights: xla::Literal,
+    pub local_updates: u64,
+    pub exact_updates: u64,
+}
+
+impl PartyBRuntime {
+    pub fn new(set: Arc<ArtifactSet>, seed: u64, lr: f32, cos_xi: f32,
+               use_weights: bool) -> anyhow::Result<Self> {
+        let state = ParamState::init(&set.manifest.params_b, seed, 0xB)?;
+        Ok(PartyBRuntime {
+            set,
+            state,
+            lr: scalar_literal(lr),
+            cos_xi: scalar_literal(cos_xi),
+            use_weights: scalar_literal(if use_weights { 1.0 } else { 0.0 }),
+            local_updates: 0,
+            exact_updates: 0,
+        })
+    }
+
+    /// Exact step with fresh Z_A: full fwd/bwd + AdaGrad; returns the
+    /// derivatives ∇Z_A to send back and the batch loss.
+    pub fn exact_step(&mut self, xb: &Tensor, y: &Tensor, za: &Tensor)
+                      -> anyhow::Result<(Tensor, f32)> {
+        let xb_l = tensor_to_literal(xb)?;
+        let y_l = tensor_to_literal(y)?;
+        let za_l = tensor_to_literal(za)?;
+        let v = args(&self.state, &[&xb_l, &y_l, &za_l, &self.lr]);
+        let mut out = self.set.b_step.run(&v)?;
+        self.state.absorb(&mut out);
+        self.exact_updates += 1;
+        let dza = literal_to_tensor(&out[0])?;
+        let loss = scalar_from(&out[1])?;
+        Ok((dza, loss))
+    }
+
+    /// Local step from cached statistics (Algorithm 2, Party B).
+    pub fn local_step(&mut self, xb: &Tensor, y: &Tensor, za_stale: &Tensor,
+                      dza_stale: &Tensor) -> anyhow::Result<(f32, WStats)> {
+        let xb_l = tensor_to_literal(xb)?;
+        let y_l = tensor_to_literal(y)?;
+        let za_l = tensor_to_literal(za_stale)?;
+        let dza_l = tensor_to_literal(dza_stale)?;
+        let v = args(&self.state,
+                     &[&xb_l, &y_l, &za_l, &dza_l, &self.lr, &self.cos_xi,
+                       &self.use_weights]);
+        let mut out = self.set.b_local.run(&v)?;
+        self.state.absorb(&mut out);
+        self.local_updates += 1;
+        Ok((scalar_from(&out[0])?, wstats_from(&out[1])?))
+    }
+
+    /// Side-effect-free ∇Z_A probe: runs the exact-step artifact but
+    /// discards the updated parameters — used by the Theorem-1 ρ probe to
+    /// obtain fresh derivatives for a pinned batch under the *current*
+    /// params without advancing them.
+    pub fn dza_probe(&self, xb: &Tensor, y: &Tensor, za: &Tensor)
+                     -> anyhow::Result<Tensor> {
+        let xb_l = tensor_to_literal(xb)?;
+        let y_l = tensor_to_literal(y)?;
+        let za_l = tensor_to_literal(za)?;
+        let v = args(&self.state, &[&xb_l, &y_l, &za_l, &self.lr]);
+        let out = self.set.b_step.run(&v)?;
+        literal_to_tensor(&out[2 * self.state.n])
+    }
+
+    /// Validation forward: ŷ probabilities for a held-out batch.
+    pub fn eval(&self, xb: &Tensor, za: &Tensor) -> anyhow::Result<Vec<f32>> {
+        let xb_l = tensor_to_literal(xb)?;
+        let za_l = tensor_to_literal(za)?;
+        let mut v: Vec<&xla::Literal> = self.state.params.iter().collect();
+        v.extend([&xb_l, &za_l]);
+        let out = self.set.b_eval.run(&v)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+// SAFETY: both runtimes hold Literals (Send per the strategy block in
+// runtime/mod.rs) and Arc<ArtifactSet> (Sync via Artifact's unsafe impl);
+// the coordinator serialises all access behind a Mutex.
+unsafe impl Send for PartyARuntime {}
+unsafe impl Send for PartyBRuntime {}

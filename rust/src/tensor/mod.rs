@@ -1,0 +1,182 @@
+//! Host-side tensor type: the unit of cross-party exchange and caching.
+//!
+//! `Tensor` is deliberately XLA-free: the protocol codec, the WAN
+//! simulator and the workset table all operate on host tensors; only the
+//! runtime layer (rust/src/runtime) converts to/from `xla::Literal` at the
+//! PJRT boundary.
+
+/// Element type. The VFL wire only ever carries f32 statistics and i32
+/// feature ids, matching the artifact ABI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> anyhow::Result<Self> {
+        match c {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            _ => anyhow::bail!("unknown dtype code {c}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape/data mismatch");
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape/data mismatch");
+        Tensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Tensor::f32(vec![], vec![x])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload size on the wire (excluding framing/shape header) — the
+    /// quantity the WAN simulator charges bandwidth for.
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => anyhow::bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => anyhow::bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Row-wise view helpers for [B, D] matrices.
+    pub fn rows(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+
+    pub fn row_f32(&self, r: usize) -> anyhow::Result<&[f32]> {
+        let d: usize = self.shape[1..].iter().product();
+        Ok(&self.as_f32()?[r * d..(r + 1) * d])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row_f32(1).unwrap().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_shape_mismatch() {
+        Tensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn scalar_has_empty_shape() {
+        let t = Tensor::scalar_f32(1.5);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn dtype_codes_roundtrip() {
+        for d in [DType::F32, DType::I32] {
+            assert_eq!(DType::from_code(d.code()).unwrap(), d);
+        }
+        assert!(DType::from_code(9).is_err());
+    }
+}
+
+#[cfg(test)]
+mod extra_tests {
+    use super::*;
+
+    #[test]
+    fn row_view_matches_manual_slice() {
+        let t = Tensor::f32(vec![3, 4], (0..12).map(|x| x as f32).collect());
+        assert_eq!(t.row_f32(0).unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.row_f32(2).unwrap(), &[8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn i32_accessor_rejects_f32_and_vice_versa() {
+        let f = Tensor::zeros_f32(vec![2]);
+        assert!(f.as_i32().is_err());
+        let i = Tensor::i32(vec![2], vec![1, 2]);
+        assert!(i.as_f32().is_err());
+        assert!(i.row_f32(0).is_err());
+    }
+
+    #[test]
+    fn size_bytes_counts_payload() {
+        assert_eq!(Tensor::zeros_f32(vec![10, 10]).size_bytes(), 400);
+        assert_eq!(Tensor::i32(vec![3], vec![0; 3]).size_bytes(), 12);
+    }
+}

@@ -1,0 +1,119 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are plain `harness = false` binaries built on
+//! this runner: fixed warmup, adaptive iteration count targeting a
+//! minimum measurement window, and a compact report (mean / p50 / min /
+//! throughput). Deliberately simple — no outlier rejection, no HTML —
+//! but deterministic and dependency-free.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.min)
+        );
+    }
+
+    /// Report with an ops/sec-style throughput line (e.g. elements).
+    pub fn report_throughput(&self, units_per_iter: f64, unit: &str) {
+        let per_sec = units_per_iter / self.mean.as_secs_f64();
+        println!(
+            "{:<44} mean {:>12}  min {:>12}  {:>14.0} {unit}/s",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            per_sec
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iterations to fill ~`window`.
+pub fn bench<F: FnMut()>(name: &str, window: Duration, mut f: F)
+                         -> BenchResult {
+    // Warmup + calibration.
+    let cal_start = Instant::now();
+    f();
+    let once = cal_start.elapsed().max(Duration::from_nanos(20));
+    let iters = (window.as_secs_f64() / once.as_secs_f64())
+        .clamp(1.0, 1e7) as u64;
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[samples.len() / 2],
+        min: samples[0],
+    }
+}
+
+/// Convenience: bench with the default 1-second window and print.
+pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, Duration::from_secs(1), f);
+    r.report();
+    r
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", Duration::from_millis(20), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 1);
+        assert!(r.min <= r.mean);
+        assert!(r.p50 >= r.min);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(5)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Test-support substrates (compiled into the library so integration
+//! tests, examples and benches can share them).
+
+pub mod bench;
+pub mod prop;

@@ -1,0 +1,90 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Philosophy: a property is a function from a seeded PRNG to a
+//! `Result<(), String>`; the runner executes it across many seeds and, on
+//! failure, reports the failing seed so the case can be replayed under a
+//! debugger (`CELU_PROP_SEED=<n>` pins the runner to one seed). No
+//! shrinking — cases are kept small by construction instead.
+
+use crate::util::rng::Pcg;
+
+/// Number of random cases per property (override with CELU_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("CELU_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` across seeds; panic with the failing seed on first failure.
+pub fn check<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    if let Ok(pin) = std::env::var("CELU_PROP_SEED") {
+        let seed: u64 = pin.parse().expect("CELU_PROP_SEED must be u64");
+        let mut rng = Pcg::new(seed, 0x9e3779b97f4a7c15);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at pinned seed {seed}: {msg}");
+        }
+        return;
+    }
+    for seed in 0..default_cases() {
+        let mut rng = Pcg::new(seed, 0x9e3779b97f4a7c15);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at seed {seed}: {msg}\n\
+                 replay with CELU_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a), stringify!($b), a, b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("sum-commutes", |rng| {
+            let a = rng.gen_range(1000) as i64;
+            let b = rng.gen_range(1000) as i64;
+            prop_assert_eq!(a + b, b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        check("always-false", |rng| {
+            let x = rng.gen_range(10);
+            prop_assert!(x < 5, "x={x} not < 5");
+            Ok(())
+        });
+    }
+}

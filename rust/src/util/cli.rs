@@ -1,0 +1,204 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands, and generated `--help` text. Used by the main binary, the
+//! examples and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str,
+               help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.bin, self.about);
+        for spec in &self.specs {
+            let tail = if spec.is_flag {
+                String::new()
+            } else if let Some(d) = &spec.default {
+                format!(" (default: {d})")
+            } else {
+                " (required)".to_string()
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help,
+                                tail));
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name). Prints help and
+    /// exits on `--help`. Errors on unknown options or missing required
+    /// values.
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{key} takes no value");
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("--{key} needs a value")
+                                })?
+                                .clone()
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults, check required.
+        for spec in &self.specs {
+            if spec.is_flag || args.values.contains_key(spec.name) {
+                continue;
+            }
+            match &spec.default {
+                Some(d) => {
+                    args.values.insert(spec.name.to_string(), d.clone());
+                }
+                None => anyhow::bail!("missing required option --{}",
+                                      spec.name),
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("option {key} not declared"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.get(key)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{key}: {e}"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.get(key)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{key}: {e}"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{key}: {e}"))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("rounds", "100", "number of rounds")
+            .req("config", "config path")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = cli()
+            .parse(&argv(&["--config", "c.toml", "--rounds=7", "--verbose",
+                           "extra"]))
+            .unwrap();
+        assert_eq!(a.get("config"), "c.toml");
+        assert_eq!(a.get_usize("rounds").unwrap(), 7);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = cli().parse(&argv(&["--config", "x"])).unwrap();
+        assert_eq!(a.get_usize("rounds").unwrap(), 100);
+        assert!(!a.has_flag("verbose"));
+        assert!(cli().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(cli().parse(&argv(&["--config", "x", "--nope", "1"])).is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! Minimal `log` facade backend: timestamped stderr lines, level filtered
+//! by `CELU_LOG` (error|warn|info|debug|trace; default info).
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: once_cell::sync::Lazy<Instant>,
+}
+
+static LOGGER: StderrLogger =
+    StderrLogger { start: once_cell::sync::Lazy::new(Instant::now) };
+
+impl Log for StderrLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = (*self.start).elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent; safe to call from tests and examples).
+pub fn init() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let filter = match std::env::var("CELU_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(filter);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

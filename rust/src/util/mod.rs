@@ -1,0 +1,11 @@
+//! From-scratch substrates: PRNG, JSON, CLI, logging, statistics.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (rand, serde, clap, criterion,
+//! proptest) are reimplemented here at the scale this project needs.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,194 @@
+//! Small statistics helpers used across metrics and the experiment
+//! harnesses (mean ± stddev over trials, quantiles, online summaries).
+
+/// Mean and (population) standard deviation of a sample; (0, 0) if empty.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Linear-interpolated quantile (q in [0,1]) of an unsorted sample.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty sample");
+    assert!((0.0..=1.0).contains(&q), "q out of range");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Online mean/min/max accumulator (constant memory).
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Exponential moving average with bias correction (loss smoothing).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    beta: f64,
+    value: f64,
+    steps: u64,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        Ema { beta, value: 0.0, steps: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = self.beta * self.value + (1.0 - self.beta) * x;
+        self.steps += 1;
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.value / (1.0 - self.beta.powi(self.steps as i32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_tracks_extremes() {
+        let mut r = Running::default();
+        for x in [3.0, -1.0, 7.0] {
+            r.push(x);
+        }
+        assert_eq!(r.min, -1.0);
+        assert_eq!(r.max, 7.0);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..200 {
+            e.push(5.0);
+        }
+        assert!((e.get() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_bias_corrected_early() {
+        let mut e = Ema::new(0.99);
+        e.push(3.0);
+        assert!((e.get() - 3.0).abs() < 1e-9);
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::prop_assert;
+
+    #[test]
+    fn prop_quantile_bounds_and_monotonicity() {
+        prop::check("quantile within [min,max], monotone in q", |rng| {
+            let n = 1 + rng.gen_range(50) as usize;
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.next_normal() as f64).collect();
+            let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut prev = lo;
+            for i in 0..=10 {
+                let q = quantile(&xs, i as f64 / 10.0);
+                prop_assert!(q >= lo - 1e-12 && q <= hi + 1e-12,
+                             "q out of bounds");
+                prop_assert!(q >= prev - 1e-12, "quantile not monotone");
+                prev = q;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mean_std_shift_invariance() {
+        prop::check("std invariant under shift", |rng| {
+            let n = 2 + rng.gen_range(40) as usize;
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.next_normal() as f64).collect();
+            let shifted: Vec<f64> = xs.iter().map(|x| x + 42.0).collect();
+            let (m1, s1) = mean_std(&xs);
+            let (m2, s2) = mean_std(&shifted);
+            prop_assert!((m2 - m1 - 42.0).abs() < 1e-9, "mean shift wrong");
+            prop_assert!((s2 - s1).abs() < 1e-9, "std not shift-invariant");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_running_matches_batch() {
+        prop::check("running mean == batch mean", |rng| {
+            let n = 1 + rng.gen_range(60) as usize;
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.next_normal() as f64).collect();
+            let mut r = Running::default();
+            for &x in &xs {
+                r.push(x);
+            }
+            let (m, _) = mean_std(&xs);
+            prop_assert!((r.mean() - m).abs() < 1e-9, "mean mismatch");
+            prop_assert!(r.n == n as u64, "count mismatch");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,443 @@
+//! The workset table — CELU-VFL's central abstraction (paper §3.1).
+//!
+//! Caches the last `W` exchanged mini-batch statistics ⟨i, Z_A^(i),
+//! ∇Z_A^(i)⟩ with **two clocks** per entry:
+//!   1. the communication-round timestamp `i` at insertion, and
+//!   2. the number of local updates performed with the entry (`uses`).
+//!
+//! Eviction (paper §3.1): at insertion time `i`, entries inserted before
+//! `i − W + 1` are discarded (bounds the maximum staleness at W·R); an
+//! entry reaching `R` uses is dropped as well.
+//!
+//! Sampling (paper §3.2):
+//!   - `Consecutive` (FedBCD): always the newest entry — the degenerate
+//!     W=1 pattern.
+//!   - `RoundRobin` (CELU-VFL): an entry becomes ineligible for the next
+//!     W−1 local steps after being sampled. With a full table this cycles
+//!     the entries fairly; with a near-empty table it creates the §3.2
+//!     "bubbles" where the local worker must wait for communication —
+//!     `sample` returns `None` and the caller blocks on the comm lane.
+
+use std::collections::VecDeque;
+
+use crate::config::Sampling;
+use crate::tensor::Tensor;
+
+/// One cached mini-batch: the paper's ⟨i, Z_A^(i), ∇Z_A^(i), j⟩ tuple
+/// plus the feature rows needed to recompute ad-hoc statistics locally.
+#[derive(Debug, Clone)]
+pub struct WorksetEntry {
+    /// Communication-round timestamp (clock #1).
+    pub round: u64,
+    /// Instance indices of this batch (for re-gathering features).
+    pub indices: Vec<u32>,
+    /// Cached forward activations Z_A^(i).
+    pub za: Tensor,
+    /// Cached backward derivatives ∇Z_A^(i).
+    pub dza: Tensor,
+    /// Local updates done with this entry (clock #2).
+    pub uses: usize,
+    /// Local-step counter value when last sampled (round-robin spacing).
+    last_sampled: Option<u64>,
+}
+
+/// Lifetime statistics for the table (telemetry + invariant tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorksetStats {
+    pub inserted: u64,
+    pub evicted_stale: u64,
+    pub retired_exhausted: u64,
+    pub sampled: u64,
+    pub bubbles: u64,
+}
+
+#[derive(Debug)]
+pub struct WorksetTable {
+    capacity: usize,
+    max_uses: usize,
+    policy: Sampling,
+    entries: VecDeque<WorksetEntry>,
+    /// Monotone local-step counter (increments per successful sample).
+    local_step: u64,
+    stats: WorksetStats,
+}
+
+impl WorksetTable {
+    /// `capacity` = W, `max_uses` = R.
+    pub fn new(capacity: usize, max_uses: usize, policy: Sampling) -> Self {
+        assert!(capacity >= 1, "W must be ≥ 1");
+        WorksetTable {
+            capacity,
+            max_uses,
+            policy,
+            entries: VecDeque::new(),
+            local_step: 0,
+            stats: WorksetStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> WorksetStats {
+        self.stats
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &WorksetEntry> {
+        self.entries.iter()
+    }
+
+    /// Insert a freshly-exchanged batch at communication round `round`.
+    /// Applies both eviction rules.
+    pub fn insert(&mut self, round: u64, indices: Vec<u32>, za: Tensor,
+                  dza: Tensor) {
+        // Staleness window: discard entries inserted before round−W+1.
+        let min_round = round.saturating_sub(self.capacity as u64 - 1);
+        let before = self.entries.len();
+        self.entries.retain(|e| e.round >= min_round);
+        self.stats.evicted_stale += (before - self.entries.len()) as u64;
+        // Capacity bound (guards non-monotone round counters).
+        while self.entries.len() >= self.capacity {
+            self.entries.pop_front();
+            self.stats.evicted_stale += 1;
+        }
+        self.entries.push_back(WorksetEntry {
+            round,
+            indices,
+            za,
+            dza,
+            uses: 0,
+            last_sampled: None,
+        });
+        self.stats.inserted += 1;
+    }
+
+    /// Pick one cached batch for a local update, or `None` when the policy
+    /// has no eligible entry (a §3.2 bubble). The returned entry is a
+    /// clone; its use-count was already incremented (and the entry retired
+    /// if it hit R).
+    pub fn sample(&mut self) -> Option<WorksetEntry> {
+        let pos = match self.policy {
+            Sampling::Consecutive => {
+                // Newest entry, FedBCD-style.
+                if self.entries.is_empty() {
+                    None
+                } else {
+                    Some(self.entries.len() - 1)
+                }
+            }
+            Sampling::RoundRobin => {
+                // Eligible: never sampled, or last sampled ≥ W local steps
+                // before the *candidate* step (i.e. not within the last
+                // W−1 steps). Among eligible, pick the least-recently-
+                // sampled (FIFO for the never-sampled) — the rotation
+                // order of Figure 4.
+                let w = self.capacity as u64;
+                let candidate_step = self.local_step + 1;
+                self.entries
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| match e.last_sampled {
+                        None => true,
+                        Some(s) => candidate_step - s >= w,
+                    })
+                    .min_by_key(|(i, e)| (e.last_sampled, e.round, *i))
+                    .map(|(i, _)| i)
+            }
+        };
+        let Some(pos) = pos else {
+            self.stats.bubbles += 1;
+            return None;
+        };
+        self.local_step += 1;
+        self.stats.sampled += 1;
+        let entry = &mut self.entries[pos];
+        entry.uses += 1;
+        entry.last_sampled = Some(self.local_step);
+        let out = entry.clone();
+        if entry.uses >= self.max_uses {
+            self.entries.remove(pos);
+            self.stats.retired_exhausted += 1;
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn t() -> Tensor {
+        Tensor::zeros_f32(vec![1])
+    }
+
+    fn table(w: usize, r: usize, policy: Sampling) -> WorksetTable {
+        WorksetTable::new(w, r, policy)
+    }
+
+    #[test]
+    fn capacity_and_staleness_eviction() {
+        let mut ws = table(3, 10, Sampling::RoundRobin);
+        for round in 0..5 {
+            ws.insert(round, vec![], t(), t());
+        }
+        assert_eq!(ws.len(), 3);
+        let rounds: Vec<u64> = ws.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![2, 3, 4]);
+        assert_eq!(ws.stats().evicted_stale, 2);
+    }
+
+    #[test]
+    fn staleness_window_evicts_on_round_jump() {
+        let mut ws = table(3, 10, Sampling::RoundRobin);
+        ws.insert(0, vec![], t(), t());
+        ws.insert(1, vec![], t(), t());
+        ws.insert(10, vec![], t(), t()); // window [8, 10] — drops 0 and 1
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws.iter().next().unwrap().round, 10);
+    }
+
+    #[test]
+    fn entries_retire_after_r_uses() {
+        let mut ws = table(1, 3, Sampling::Consecutive);
+        ws.insert(0, vec![], t(), t());
+        for expect_uses in 1..=3u64 {
+            let e = ws.sample().expect("entry available");
+            assert_eq!(e.uses as u64, expect_uses);
+        }
+        assert!(ws.is_empty());
+        assert!(ws.sample().is_none());
+        assert_eq!(ws.stats().retired_exhausted, 1);
+        assert_eq!(ws.stats().bubbles, 1);
+    }
+
+    #[test]
+    fn consecutive_always_newest() {
+        let mut ws = table(3, 100, Sampling::Consecutive);
+        ws.insert(0, vec![], t(), t());
+        ws.insert(1, vec![], t(), t());
+        assert_eq!(ws.sample().unwrap().round, 1);
+        assert_eq!(ws.sample().unwrap().round, 1);
+        ws.insert(2, vec![], t(), t());
+        assert_eq!(ws.sample().unwrap().round, 2);
+    }
+
+    #[test]
+    fn round_robin_cycles_fairly() {
+        let mut ws = table(3, 100, Sampling::RoundRobin);
+        for round in 0..3 {
+            ws.insert(round, vec![], t(), t());
+        }
+        let seq: Vec<u64> =
+            (0..6).map(|_| ws.sample().unwrap().round).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_bubbles_with_single_entry() {
+        // W=3: after sampling the only entry, it is ineligible for the
+        // next W−1 = 2 local steps → bubble (Figure 4, bottom row).
+        let mut ws = table(3, 100, Sampling::RoundRobin);
+        ws.insert(0, vec![], t(), t());
+        assert!(ws.sample().is_some());
+        assert!(ws.sample().is_none());
+        assert_eq!(ws.stats().bubbles, 1);
+        // A new batch arrives: it is sampled instead.
+        ws.insert(1, vec![], t(), t());
+        assert_eq!(ws.sample().unwrap().round, 1);
+    }
+
+    // -- property tests ----------------------------------------------------
+
+    #[test]
+    fn prop_len_never_exceeds_w() {
+        prop::check("len ≤ W", |rng| {
+            let w = 1 + rng.gen_range(8) as usize;
+            let r = 1 + rng.gen_range(8) as usize;
+            let policy = if rng.next_f32() < 0.5 {
+                Sampling::RoundRobin
+            } else {
+                Sampling::Consecutive
+            };
+            let mut ws = table(w, r, policy);
+            let mut round = 0u64;
+            for _ in 0..200 {
+                if rng.next_f32() < 0.4 {
+                    round += 1 + rng.gen_range(3) as u64;
+                    ws.insert(round, vec![], t(), t());
+                } else {
+                    let _ = ws.sample();
+                }
+                prop_assert!(ws.len() <= w, "len {} > W {}", ws.len(), w);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_uses_never_exceed_r() {
+        prop::check("uses ≤ R", |rng| {
+            let w = 1 + rng.gen_range(5) as usize;
+            let r = 1 + rng.gen_range(5) as usize;
+            let mut ws = table(w, r, Sampling::RoundRobin);
+            let mut round = 0u64;
+            for _ in 0..300 {
+                if rng.next_f32() < 0.3 {
+                    round += 1;
+                    ws.insert(round, vec![], t(), t());
+                }
+                if let Some(e) = ws.sample() {
+                    prop_assert!(e.uses <= r, "uses {} > R {}", e.uses, r);
+                }
+                for e in ws.iter() {
+                    prop_assert!(e.uses < r,
+                                 "resident entry has uses {} ≥ R {}",
+                                 e.uses, r);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_round_robin_spacing() {
+        // No batch is sampled twice within W−1 intervening local steps.
+        prop::check("round-robin spacing ≥ W", |rng| {
+            let w = 2 + rng.gen_range(6) as usize;
+            let mut ws = table(w, 1000, Sampling::RoundRobin);
+            let mut round = 0u64;
+            let mut history: Vec<u64> = Vec::new(); // round per local step
+            for _ in 0..400 {
+                if rng.next_f32() < 0.5 {
+                    round += 1;
+                    ws.insert(round, vec![], t(), t());
+                }
+                if let Some(e) = ws.sample() {
+                    history.push(e.round);
+                }
+            }
+            for (i, r1) in history.iter().enumerate() {
+                for (j, r2) in history.iter().enumerate().skip(i + 1) {
+                    if r1 == r2 {
+                        prop_assert!(
+                            j - i >= w,
+                            "batch {} resampled after {} steps (< W={})",
+                            r1, j - i, w
+                        );
+                        break;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_staleness_bounded_by_window() {
+        prop::check("resident staleness < W", |rng| {
+            let w = 1 + rng.gen_range(6) as usize;
+            let mut ws = table(w, 10, Sampling::RoundRobin);
+            let mut round = 0u64;
+            for _ in 0..200 {
+                round += 1 + rng.gen_range(2) as u64;
+                ws.insert(round, vec![], t(), t());
+                for e in ws.iter() {
+                    prop_assert!(
+                        round - e.round < w as u64,
+                        "entry round {} too stale at {} (W={})",
+                        e.round, round, w
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_conservation_of_entries() {
+        prop::check("inserted = resident + evicted + retired", |rng| {
+            let w = 1 + rng.gen_range(5) as usize;
+            let r = 1 + rng.gen_range(4) as usize;
+            let mut ws = table(w, r, Sampling::RoundRobin);
+            let mut round = 0u64;
+            for _ in 0..250 {
+                if rng.next_f32() < 0.4 {
+                    round += 1;
+                    ws.insert(round, vec![], t(), t());
+                } else {
+                    let _ = ws.sample();
+                }
+            }
+            let s = ws.stats();
+            prop_assert_eq!(
+                s.inserted,
+                ws.len() as u64 + s.evicted_stale + s.retired_exhausted
+            );
+            Ok(())
+        });
+    }
+}
+
+#[cfg(test)]
+mod extra_tests {
+    use super::*;
+    use crate::config::Sampling;
+
+    fn t() -> Tensor {
+        Tensor::zeros_f32(vec![1])
+    }
+
+    #[test]
+    fn consecutive_starves_after_exhausting_newest() {
+        // FedBCD semantics: only the newest entry is ever used; once it
+        // hits R uses the worker stalls until the next exchange, even if
+        // older entries remain.
+        let mut ws = WorksetTable::new(3, 2, Sampling::Consecutive);
+        ws.insert(0, vec![], t(), t());
+        ws.insert(1, vec![], t(), t());
+        assert_eq!(ws.sample().unwrap().round, 1);
+        assert_eq!(ws.sample().unwrap().round, 1); // retires entry 1
+        // Entry 0 is still resident but FedBCD goes back to it (newest
+        // remaining), matching "latest batch" semantics.
+        assert_eq!(ws.sample().unwrap().round, 0);
+        assert_eq!(ws.sample().unwrap().round, 0);
+        assert!(ws.sample().is_none());
+    }
+
+    #[test]
+    fn round_robin_prefers_never_sampled_entries() {
+        let mut ws = WorksetTable::new(4, 100, Sampling::RoundRobin);
+        ws.insert(0, vec![], t(), t());
+        assert_eq!(ws.sample().unwrap().round, 0);
+        ws.insert(1, vec![], t(), t());
+        ws.insert(2, vec![], t(), t());
+        // Fresh entries outrank the recently-sampled one.
+        assert_eq!(ws.sample().unwrap().round, 1);
+        assert_eq!(ws.sample().unwrap().round, 2);
+    }
+
+    #[test]
+    fn indices_travel_with_entries() {
+        let mut ws = WorksetTable::new(2, 5, Sampling::RoundRobin);
+        ws.insert(9, vec![4, 5, 6], t(), t());
+        let e = ws.sample().unwrap();
+        assert_eq!(e.round, 9);
+        assert_eq!(e.indices, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn stats_count_bubbles() {
+        let mut ws = WorksetTable::new(3, 5, Sampling::RoundRobin);
+        assert!(ws.sample().is_none());
+        assert!(ws.sample().is_none());
+        assert_eq!(ws.stats().bubbles, 2);
+        assert_eq!(ws.stats().sampled, 0);
+    }
+}

@@ -1,0 +1,318 @@
+//! Integration tests: the full three-layer stack (artifacts → PJRT →
+//! coordinator) on the tiny preset. Require `make artifacts` to have run.
+
+use std::sync::Arc;
+
+use celu_vfl::config::{Algorithm, RunConfig, WanProfile};
+use celu_vfl::coordinator::party_a::run_party_a;
+use celu_vfl::coordinator::party_b::run_party_b;
+use celu_vfl::coordinator::run_training;
+use celu_vfl::coordinator::trainer::{load_data, load_set};
+use celu_vfl::data::batcher::{gather_a, gather_b};
+use celu_vfl::runtime::{PartyARuntime, PartyBRuntime};
+use celu_vfl::transport::tcp::TcpTransport;
+use celu_vfl::transport::Transport;
+
+fn tiny_cfg() -> RunConfig {
+    let mut cfg = RunConfig::quick();
+    cfg.size = "tiny".into();
+    cfg.train_instances = 20_000;
+    cfg.test_instances = 4_000;
+    cfg.max_rounds = 200;
+    cfg.eval_every = 25;
+    cfg
+}
+
+fn require_artifacts() {
+    assert!(
+        std::path::Path::new("artifacts/wdl_criteo_tiny/manifest.json")
+            .exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+}
+
+// -- runtime numerics -------------------------------------------------------
+
+#[test]
+fn initial_loss_is_ln2() {
+    // Near-zero initial logits (small-scale init) ⇒ BCE ≈ ln 2.
+    require_artifacts();
+    let cfg = tiny_cfg();
+    let set = load_set(&cfg).unwrap();
+    let data = load_data(&cfg, &set).unwrap();
+    let a = PartyARuntime::new(set.clone(), 7, 0.05, 0.5, true).unwrap();
+    let mut b = PartyBRuntime::new(set.clone(), 7, 0.05, 0.5, true).unwrap();
+    let idx: Vec<u32> = (0..set.manifest.batch as u32).collect();
+    let xa = gather_a(&data.train_a, &idx);
+    let (xb, y) = gather_b(&data.train_b, &idx);
+    let za = a.forward(&xa).unwrap();
+    let (_dza, loss) = b.exact_step(&xb, &y, &za).unwrap();
+    assert!((loss - 0.6931472).abs() < 5e-3, "initial loss {loss}");
+}
+
+#[test]
+fn a_local_with_fresh_stats_equals_a_upd() {
+    // Two identical Party-A runtimes; one takes the exact update, the
+    // other the local update with stale==fresh statistics and ξ=180°.
+    // The resulting parameters must match bit-for-bit through PJRT.
+    require_artifacts();
+    let cfg = tiny_cfg();
+    let set = load_set(&cfg).unwrap();
+    let data = load_data(&cfg, &set).unwrap();
+    let mut a1 = PartyARuntime::new(set.clone(), 9, 0.05, -1.0, true)
+        .unwrap();
+    let mut a2 = PartyARuntime::new(set.clone(), 9, 0.05, -1.0, true)
+        .unwrap();
+    let mut b = PartyBRuntime::new(set.clone(), 9, 0.05, -1.0, true)
+        .unwrap();
+    let idx: Vec<u32> = (0..set.manifest.batch as u32).collect();
+    let xa = gather_a(&data.train_a, &idx);
+    let (xb, y) = gather_b(&data.train_b, &idx);
+    let za = a1.forward(&xa).unwrap();
+    let (dza, _) = b.exact_step(&xb, &y, &za).unwrap();
+
+    a1.exact_update(&xa, &dza).unwrap();
+    let ws = a2.local_update(&xa, &za, &dza).unwrap();
+    // All cosines are exactly 1 (identical stale/fresh activations).
+    assert!((ws[6] - 1.0).abs() < 1e-5, "mean cos {ws:?}");
+    for (p1, p2) in a1.state.params.iter().zip(a2.state.params.iter()) {
+        let v1 = p1.to_vec::<f32>().unwrap();
+        let v2 = p2.to_vec::<f32>().unwrap();
+        for (x1, x2) in v1.iter().zip(v2.iter()) {
+            assert!((x1 - x2).abs() <= 1e-6, "param divergence {x1} {x2}");
+        }
+    }
+}
+
+#[test]
+fn eval_outputs_are_probabilities() {
+    require_artifacts();
+    let cfg = tiny_cfg();
+    let set = load_set(&cfg).unwrap();
+    let data = load_data(&cfg, &set).unwrap();
+    let a = PartyARuntime::new(set.clone(), 3, 0.05, 0.5, true).unwrap();
+    let b = PartyBRuntime::new(set.clone(), 3, 0.05, 0.5, true).unwrap();
+    let idx: Vec<u32> = (0..set.manifest.batch as u32).collect();
+    let xa = gather_a(&data.test_a, &idx);
+    let (xb, _y) = gather_b(&data.test_b, &idx);
+    let za = a.forward(&xa).unwrap();
+    let yhat = b.eval(&xb, &za).unwrap();
+    assert_eq!(yhat.len(), set.manifest.batch);
+    assert!(yhat.iter().all(|p| (0.0..=1.0).contains(p)));
+}
+
+// -- full training ----------------------------------------------------------
+
+#[test]
+fn vanilla_training_learns() {
+    require_artifacts();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::Vanilla;
+    cfg.max_rounds = 400;
+    let rec = run_training(&cfg).unwrap().record;
+    assert_eq!(rec.comm_rounds, 400);
+    assert!(rec.best_auc() > 0.65, "vanilla AUC {}", rec.best_auc());
+    assert_eq!(rec.local_updates, 0);
+    // Loss decreased from ln 2.
+    let last = rec.series.last().unwrap();
+    assert!(last.loss < 0.68, "loss {}", last.loss);
+}
+
+#[test]
+fn vanilla_is_deterministic() {
+    require_artifacts();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::Vanilla;
+    cfg.max_rounds = 100;
+    let r1 = run_training(&cfg).unwrap().record;
+    let r2 = run_training(&cfg).unwrap().record;
+    let a1: Vec<f64> = r1.series.iter().map(|p| p.auc).collect();
+    let a2: Vec<f64> = r2.series.iter().map(|p| p.auc).collect();
+    assert_eq!(a1, a2, "vanilla runs with one seed must be identical");
+}
+
+#[test]
+fn celu_training_beats_vanilla_at_equal_rounds() {
+    require_artifacts();
+    let mut v = tiny_cfg();
+    v.algorithm = Algorithm::Vanilla;
+    v.max_rounds = 300;
+    let mut c = v.clone();
+    c.algorithm = Algorithm::CeluVfl;
+    c.r_local = 3;
+    c.w_workset = 3;
+    c.xi_degrees = 60.0;
+    let rv = run_training(&v).unwrap().record;
+    let rc = run_training(&c).unwrap().record;
+    assert!(rc.local_updates > 100, "local updates {}", rc.local_updates);
+    assert!(
+        rc.best_auc() > rv.best_auc() - 0.005,
+        "celu {:.4} should be ≥ vanilla {:.4} at equal rounds",
+        rc.best_auc(),
+        rv.best_auc()
+    );
+    // Identical communication volume at equal rounds.
+    assert_eq!(rc.comm_rounds, rv.comm_rounds);
+}
+
+#[test]
+fn fedbcd_local_updates_bounded_by_r() {
+    require_artifacts();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::FedBcd;
+    cfg.r_local = 4;
+    cfg.max_rounds = 100;
+    let rec = run_training(&cfg).unwrap().record;
+    assert!(rec.local_updates <= 4 * rec.comm_rounds,
+            "{} > 4×{}", rec.local_updates, rec.comm_rounds);
+    assert!(rec.local_updates > 0);
+}
+
+#[test]
+fn celu_cosine_telemetry_recorded() {
+    require_artifacts();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::CeluVfl;
+    cfg.r_local = 3;
+    cfg.w_workset = 3;
+    cfg.max_rounds = 100;
+    let rec = run_training(&cfg).unwrap().record;
+    assert!(!rec.cosine.rows.is_empty(), "party A telemetry missing");
+    assert!(!rec.cosine_b.rows.is_empty(), "party B telemetry missing");
+    let summary = rec.cosine.summary().unwrap();
+    // Quantiles are ordered and most similarities should be high (paper
+    // Fig 5d: >90% of cosines above 0.5).
+    assert!(summary.windows(2).take(5).all(|w| w[0] <= w[1] + 1e-9));
+    assert!(summary[3] > 0.5, "median cosine {summary:?}");
+}
+
+#[test]
+fn target_auc_stops_early() {
+    require_artifacts();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::CeluVfl;
+    cfg.max_rounds = 2_000;
+    cfg.target_auc = 0.60;
+    let out = run_training(&cfg).unwrap();
+    assert_eq!(out.stop_reason,
+               celu_vfl::coordinator::party_b::StopReason::TargetAuc);
+    assert!(out.record.comm_rounds < 2_000);
+}
+
+#[test]
+fn wan_sim_accounts_bytes_and_busy_time() {
+    require_artifacts();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::Vanilla;
+    cfg.max_rounds = 50;
+    cfg.eval_every = 100; // no eval traffic in 50 rounds
+    cfg.wan = WanProfile { bandwidth_mbps: 50.0, rtt_ms: 4.0,
+                           gateway_ms: 0.0 };
+    let rec = run_training(&cfg).unwrap().record;
+    let msg = (64 * 16 * 4) as u64; // B×z×4 bytes payload
+    assert!(rec.bytes_a_to_b >= 50 * msg);
+    assert!(rec.bytes_b_to_a >= 50 * msg);
+    assert!(rec.comm_busy.as_secs_f64() > 0.1, "busy {:?}", rec.comm_busy);
+    assert!(rec.comm_fraction() > 0.3, "comm fraction {}",
+            rec.comm_fraction());
+}
+
+// -- TCP deployment ---------------------------------------------------------
+
+#[test]
+fn tcp_run_matches_inproc_vanilla() {
+    require_artifacts();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::Vanilla;
+    cfg.max_rounds = 75;
+    let inproc = run_training(&cfg).unwrap().record;
+
+    let set = load_set(&cfg).unwrap();
+    let data = load_data(&cfg, &set).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+
+    let cfg_a = cfg.clone();
+    let set_a = set.clone();
+    let train_a = Arc::new(data.train_a.clone());
+    let test_a = Arc::new(data.test_a.clone());
+    let addr_a = addr.clone();
+    let a = std::thread::spawn(move || {
+        // Party B binds first; connect() retries until it is up.
+        let t: Arc<dyn Transport> = Arc::new(
+            TcpTransport::connect(&addr_a, WanProfile::instant()).unwrap());
+        run_party_a(&cfg_a, set_a, train_a, test_a, t).unwrap()
+    });
+    let t: Arc<dyn Transport> = Arc::new(
+        TcpTransport::listen(&addr, WanProfile::instant()).unwrap());
+    let report = run_party_b(&cfg, set, Arc::new(data.train_b.clone()),
+                             Arc::new(data.test_b.clone()), t).unwrap();
+    let a_report = a.join().unwrap();
+
+    assert_eq!(report.comm_rounds, 75);
+    assert_eq!(a_report.comm_rounds, 75);
+    let tcp_aucs: Vec<f64> = report.series.iter().map(|p| p.auc).collect();
+    let in_aucs: Vec<f64> = inproc.series.iter().map(|p| p.auc).collect();
+    assert_eq!(tcp_aucs, in_aucs,
+               "TCP and in-proc vanilla runs must agree exactly");
+}
+
+#[test]
+fn dssm_trains_through_pjrt() {
+    // The DSSM model family end-to-end (the other Fig. 6 architecture).
+    require_artifacts();
+    let mut cfg = tiny_cfg();
+    cfg.model = "dssm".into();
+    cfg.algorithm = Algorithm::CeluVfl;
+    cfg.r_local = 3;
+    cfg.w_workset = 3;
+    cfg.max_rounds = 150;
+    let rec = run_training(&cfg).unwrap().record;
+    assert_eq!(rec.comm_rounds, 150);
+    assert!(rec.local_updates > 50);
+    // DSSM converges slower than WDL at tiny scale; just require learning
+    // signal beyond chance.
+    assert!(rec.best_auc() > 0.52, "dssm AUC {}", rec.best_auc());
+}
+
+#[test]
+fn all_exported_artifact_sets_load_and_execute() {
+    // Every set in artifacts/ must compile and run one forward pass —
+    // catches ABI drift across models × datasets × sizes (the 'big' set
+    // is skipped for time; its shapes equal 'small' modulo dims).
+    require_artifacts();
+    for tag in ["wdl_criteo_tiny", "dssm_criteo_tiny", "wdl_avazu_small",
+                "dssm_d3_small"] {
+        let mut cfg = tiny_cfg();
+        let parts: Vec<&str> = tag.split('_').collect();
+        cfg.model = parts[0].into();
+        cfg.dataset = parts[1].into();
+        cfg.size = parts[2].into();
+        let set = load_set(&cfg).unwrap();
+        let data = load_data(&cfg, &set).unwrap();
+        let a = PartyARuntime::new(set.clone(), 1, 0.05, 0.5, true)
+            .unwrap();
+        let idx: Vec<u32> = (0..set.manifest.batch as u32).collect();
+        let xa = gather_a(&data.train_a, &idx);
+        let za = a.forward(&xa).unwrap();
+        assert_eq!(za.shape, vec![set.manifest.batch, set.manifest.z_dim],
+                   "bad Z_A shape for {tag}");
+        assert!(za.as_f32().unwrap().iter().all(|x| x.is_finite()),
+                "non-finite Z_A for {tag}");
+    }
+}
+
+#[test]
+fn fedbcd_equals_celu_with_consecutive_unweighted_config() {
+    // FedBCD is definitionally CELU with W=1 + consecutive + no weights;
+    // the config layer must map it that way.
+    let mut f = tiny_cfg();
+    f.algorithm = Algorithm::FedBcd;
+    f.r_local = 5;
+    f.w_workset = 99; // ignored for FedBCD
+    assert_eq!(f.effective_w(), 1);
+    assert_eq!(f.sampling(), celu_vfl::config::Sampling::Consecutive);
+    assert!(!f.weighting_enabled());
+    assert_eq!(f.effective_r(), 5);
+}
