@@ -1,0 +1,176 @@
+//! Hot-path microbench for the zero-copy statistics path (DESIGN.md §4).
+//!
+//! Three substrates, each printed as ns/op with a bytes-copied estimate
+//! so future BENCH files can track the speedups:
+//!   1. wire codec — bulk memcpy codec vs the seed's element-wise
+//!      baseline (reimplemented here verbatim), on the paper-scale
+//!      256×64 f32 activation. Acceptance: ≥ 5× faster roundtrip.
+//!   2. workset churn — insert/sample cost across growing batch×dim.
+//!      Acceptance: sample cost is flat (handle clone, no data copy).
+//!   3. gather — fresh-allocation vs scratch-recycled destination.
+//!
+//! `cargo bench --bench bench_hotpath`
+
+use celu_vfl::config::Sampling;
+use celu_vfl::data::batcher::{gather_a, gather_a_with, gather_b_with,
+                              GatherScratch};
+use celu_vfl::data::SynthDataset;
+use celu_vfl::protocol::Message;
+use celu_vfl::tensor::{Data, Tensor};
+use celu_vfl::testing::bench::{bench, section};
+use celu_vfl::workset::WorksetTable;
+use std::hint::black_box;
+use std::time::Duration;
+
+const WINDOW: Duration = Duration::from_millis(300);
+
+/// The seed codec's element-wise encode, kept as the comparison baseline.
+fn encode_elementwise(msg: &Message) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(msg.tag());
+    out.extend_from_slice(&msg.round().to_le_bytes());
+    if let Some(t) = msg.tensor() {
+        out.push(t.dtype().code());
+        out.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &t.data {
+            Data::F32(v) => {
+                for x in v.iter() {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                for x in v.iter() {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The seed codec's element-wise payload decode (header handling shared).
+fn decode_payload_elementwise(bytes: &[u8]) -> Vec<f32> {
+    let mut v = Vec::with_capacity(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        v.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    v
+}
+
+fn report(name: &str, r: &celu_vfl::testing::bench::BenchResult,
+          bytes_per_op: usize) {
+    let ns = r.mean.as_nanos() as f64;
+    let gibps = if ns > 0.0 {
+        bytes_per_op as f64 / (ns * 1e-9) / (1024.0 * 1024.0 * 1024.0)
+    } else {
+        f64::INFINITY
+    };
+    println!("{name:<46} {ns:>12.0} ns/op  {bytes_per_op:>9} B copied  \
+              {gibps:>7.2} GiB/s");
+}
+
+fn main() {
+    println!("== bench_hotpath (zero-copy statistics path) ==");
+
+    // ---- 1. wire codec ---------------------------------------------------
+    let payload = 256 * 64 * 4; // bytes in the paper-scale activation
+    let msg = Message::Activation {
+        round: 7,
+        tensor: Tensor::f32(vec![256, 64],
+                            (0..256 * 64).map(|i| i as f32 * 0.5)
+                                          .collect::<Vec<_>>()),
+    };
+    let encoded = msg.encode();
+
+    section("wire codec — 256×64 f32 activation (64 KiB payload)");
+    let r_enc_old = bench("encode element-wise (seed)", WINDOW, || {
+        black_box(encode_elementwise(&msg));
+    });
+    report("encode element-wise (seed)", &r_enc_old, payload);
+    let r_enc = bench("encode bulk", WINDOW, || {
+        black_box(msg.encode());
+    });
+    report("encode bulk", &r_enc, payload);
+    let mut scratch = Vec::new();
+    let r_enc_into = bench("encode_into reused scratch", WINDOW, || {
+        msg.encode_into(&mut scratch);
+        black_box(scratch.len());
+    });
+    report("encode_into reused scratch (0 alloc/op)", &r_enc_into, payload);
+
+    // Header: tag(1) + round(8) + dtype(1) + ndim(1) + 2 dims(8) = 19.
+    let body = &encoded[19..];
+    let r_dec_old = bench("decode payload element-wise (seed)", WINDOW, || {
+        black_box(decode_payload_elementwise(body));
+    });
+    report("decode payload element-wise (seed)", &r_dec_old, payload);
+    let r_dec = bench("decode bulk", WINDOW, || {
+        black_box(Message::decode(&encoded).unwrap());
+    });
+    report("decode bulk (full frame)", &r_dec, payload);
+
+    let old_rt = r_enc_old.mean + r_dec_old.mean;
+    let new_rt = r_enc.mean + r_dec.mean;
+    let speedup = old_rt.as_secs_f64() / new_rt.as_secs_f64().max(1e-12);
+    println!("codec roundtrip: seed {:.2} µs → bulk {:.2} µs  ({speedup:.1}×, \
+              target ≥ 5×)",
+             old_rt.as_secs_f64() * 1e6, new_rt.as_secs_f64() * 1e6);
+
+    // ---- 2. workset churn ------------------------------------------------
+    section("workset sample() across batch×dim — must be flat");
+    let mut sample_means = Vec::new();
+    for (b, d) in [(64usize, 16usize), (256, 64), (1024, 256)] {
+        let mut ws = WorksetTable::new(5, usize::MAX, Sampling::RoundRobin);
+        for round in 0..5u64 {
+            ws.insert(round, vec![0; b],
+                      Tensor::zeros_f32(vec![b, d]),
+                      Tensor::zeros_f32(vec![b, d]));
+        }
+        let r = bench(&format!("sample b={b} d={d}"), WINDOW, || {
+            black_box(ws.sample());
+        });
+        report(&format!("sample b={b} d={d} (0 B tensor copy)"), &r, 0);
+        sample_means.push(r.mean.as_nanos() as f64);
+    }
+    let ratio = sample_means[sample_means.len() - 1]
+        / sample_means[0].max(1.0);
+    println!("sample cost 1024×256 vs 64×16: {ratio:.2}× \
+              (deep copy would be ~256×)");
+
+    section("workset insert+evict churn (W=5, 256×64 entries)");
+    let za = Tensor::zeros_f32(vec![256, 64]);
+    let dza = Tensor::zeros_f32(vec![256, 64]);
+    let mut ws = WorksetTable::new(5, 5, Sampling::RoundRobin);
+    let mut round = 0u64;
+    let r = bench("insert (shared handles)", WINDOW, || {
+        ws.insert(round, vec![0; 256], za.clone(), dza.clone());
+        round += 1;
+        black_box(ws.len());
+    });
+    report("insert (shared handles, 0 B tensor copy)", &r, 1024);
+
+    // ---- 3. gather -------------------------------------------------------
+    section("gather 256-row batch");
+    let ds = SynthDataset::generate("criteo", 1000, 20_000, 2_000, 0.05, 3)
+        .unwrap();
+    let idx: Vec<u32> = (0..256).collect();
+    let a_bytes = 256 * ds.train_a.fields * 4;
+    let r = bench("gather_a fresh alloc", WINDOW, || {
+        black_box(gather_a(&ds.train_a, &idx));
+    });
+    report("gather_a fresh alloc", &r, a_bytes);
+    let mut scratch = GatherScratch::default();
+    let r = bench("gather_a recycled scratch", WINDOW, || {
+        black_box(gather_a_with(&ds.train_a, &idx, &mut scratch));
+    });
+    report("gather_a recycled scratch (0 alloc/op)", &r, a_bytes);
+    let b_bytes = 256 * (ds.train_b.fields + 1) * 4;
+    let mut scratch = GatherScratch::default();
+    let r = bench("gather_b recycled scratch", WINDOW, || {
+        black_box(gather_b_with(&ds.train_b, &idx, &mut scratch));
+    });
+    report("gather_b recycled scratch (0 alloc/op)", &r, b_bytes);
+}

@@ -58,7 +58,7 @@ fn main() {
         ws.insert(round, vec![0; 256], Tensor::zeros_f32(vec![256, 64]),
                   Tensor::zeros_f32(vec![256, 64]));
     }
-    run("round-robin sample (incl. entry clone)", || {
+    run("round-robin sample (handle clone, no data copy)", || {
         std::hint::black_box(ws.sample());
     });
 

@@ -24,6 +24,12 @@ pub mod trainer;
 pub use trainer::{run_training, TrainOutcome};
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// How long a local worker parks on the workset condvar before re-checking
+/// its stop flag. §3.2 bubbles are normally broken by an insert notify —
+/// this bound only caps shutdown latency (and spurious-wakeup churn).
+pub(crate) const BUBBLE_PARK: Duration = Duration::from_millis(2);
 
 /// Shared stop flag between a party's comm and local workers.
 #[derive(Debug, Default)]

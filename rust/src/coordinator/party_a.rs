@@ -6,19 +6,25 @@
 //! LocalUpdatePartyA). The workers share the runtime (params) and the
 //! workset table; while the comm worker is blocked on the WAN the local
 //! worker keeps the accelerator busy — the paper's §3.1 overlap.
+//!
+//! Statistics move zero-copy end-to-end (DESIGN.md §4): the forward
+//! activations are shared between the outgoing message and the workset
+//! entry through one `Arc` allocation, local-update sampling returns
+//! handles instead of deep clones, and gathers recycle their destination
+//! buffers across rounds.
 
 use std::sync::{Arc, Mutex};
 
 use crate::config::RunConfig;
-use crate::data::batcher::{gather_a, BatchCursor};
+use crate::data::batcher::{gather_a_with, BatchCursor, GatherScratch};
 use crate::data::PartyAData;
 use crate::metrics::CosineRecorder;
 use crate::protocol::Message;
 use crate::runtime::{ArtifactSet, PartyARuntime};
 use crate::transport::Transport;
-use crate::workset::{WorksetStats, WorksetTable};
+use crate::workset::{SharedWorkset, WorksetStats, WorksetTable};
 
-use super::Ctrl;
+use super::{Ctrl, BUBBLE_PARK};
 
 /// Everything Party A reports after a run.
 #[derive(Debug, Default)]
@@ -46,7 +52,7 @@ pub fn run_party_a(
         cfg.cos_xi() as f32,
         cfg.weighting_enabled(),
     )?));
-    let workset = Arc::new(Mutex::new(WorksetTable::new(
+    let workset = Arc::new(SharedWorkset::new(WorksetTable::new(
         cfg.effective_w(),
         cfg.effective_r().max(1),
         cfg.sampling(),
@@ -65,11 +71,15 @@ pub fn run_party_a(
             .name("party-a-local".into())
             .spawn(move || -> anyhow::Result<u64> {
                 let mut steps = 0u64;
+                let mut scratch = GatherScratch::default();
                 while !ctrl.stopped() {
-                    let entry = workset.lock().unwrap().sample();
-                    match entry {
+                    // §3.2 bubble handling: park on the workset condvar
+                    // until the comm worker inserts (or the timeout
+                    // elapses, re-checking the stop flag) — no busy-wait.
+                    match workset.sample_or_wait(BUBBLE_PARK) {
                         Some(e) => {
-                            let xa = gather_a(&train, &e.indices);
+                            let xa = gather_a_with(&train, &e.indices,
+                                                   &mut scratch);
                             let ws = runtime
                                 .lock()
                                 .unwrap()
@@ -77,11 +87,7 @@ pub fn run_party_a(
                             steps += 1;
                             cosine.lock().unwrap().push(steps, &ws);
                         }
-                        None => {
-                            // §3.2 bubble: wait for the comm worker.
-                            std::thread::sleep(
-                                std::time::Duration::from_micros(200));
-                        }
+                        None => {}
                     }
                 }
                 Ok(steps)
@@ -92,13 +98,16 @@ pub fn run_party_a(
 
     // ---- comm worker (this thread) ----------------------------------------
     let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
+    let mut scratch = GatherScratch::default();
     let eval_batches = eval_batch_count(cfg, test.n, batch);
     let mut comm_rounds = 0u64;
     let result: anyhow::Result<()> = (|| {
         for round in 0..cfg.max_rounds as u64 {
             let idx = cursor.next_indices();
-            let xa = gather_a(&train, &idx);
+            let xa = gather_a_with(&train, &idx, &mut scratch);
             let za = runtime.lock().unwrap().forward(&xa)?;
+            // The message and the workset entry below share za's
+            // allocation — the clone is a refcount bump, not a copy.
             transport.send(Message::Activation { round,
                                                  tensor: za.clone() })?;
             // Block on ∇Z_A (the local worker keeps training meanwhile).
@@ -114,7 +123,7 @@ pub fn run_party_a(
                                         {round}", other.tag()),
             };
             runtime.lock().unwrap().exact_update(&xa, &dza)?;
-            workset.lock().unwrap().insert(round, idx, za, dza);
+            workset.insert(round, idx, za, dza);
             comm_rounds = round + 1;
 
             // Eval lane.
@@ -123,7 +132,7 @@ pub fn run_party_a(
                     let idx: Vec<u32> = ((k * batch) as u32
                         ..((k + 1) * batch) as u32)
                         .collect();
-                    let xa = gather_a(&test, &idx);
+                    let xa = gather_a_with(&test, &idx, &mut scratch);
                     let za = runtime.lock().unwrap().forward(&xa)?;
                     transport.send(Message::EvalActivation {
                         round: k as u64,
@@ -142,6 +151,7 @@ pub fn run_party_a(
         }
     })();
     ctrl.stop();
+    workset.wake_all(); // unpark a local worker sleeping through a bubble
     let local_updates = match local_handle {
         Some(h) => h.join().expect("party A local worker panicked")?,
         None => 0,
@@ -149,7 +159,7 @@ pub fn run_party_a(
     result?;
 
     let exact_updates = runtime.lock().unwrap().exact_updates;
-    let ws_stats = workset.lock().unwrap().stats();
+    let ws_stats = workset.stats();
     let cosine = Arc::try_unwrap(cosine)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_default();

@@ -2,25 +2,30 @@
 //! run's control plane (loss tracking, AUC evaluation, stopping).
 //!
 //! Comm worker: recv Z_A → exact step (computes loss + ∇Z_A, updates
-//! θ_B/θ_top) → send ∇Z_A → cache ⟨i, Z_A, ∇Z_A⟩. Local worker: local
+//! θ_B/θ_top) → cache ⟨i, Z_A, ∇Z_A⟩ → send ∇Z_A. Local worker: local
 //! steps against the cached statistics (Algorithm 2, LocalUpdatePartyB).
 //! B owns the stop decision and broadcasts Shutdown.
+//!
+//! The cache insert happens *before* the (WAN-bound) send: the entry's
+//! tensors are `Arc`-shared with the outgoing message rather than copied,
+//! and the local worker can already consume the fresh statistics while
+//! the derivative is still occupying the link (DESIGN.md §4).
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::config::RunConfig;
-use crate::data::batcher::{gather_b, BatchCursor};
+use crate::data::batcher::{gather_b_with, BatchCursor, GatherScratch};
 use crate::data::PartyBData;
 use crate::metrics::{auc_exact, CosineRecorder, SeriesPoint};
 use crate::protocol::Message;
 use crate::runtime::{ArtifactSet, PartyBRuntime};
 use crate::transport::Transport;
 use crate::util::stats::Ema;
-use crate::workset::{WorksetStats, WorksetTable};
+use crate::workset::{SharedWorkset, WorksetStats, WorksetTable};
 
 use super::party_a::eval_batch_count;
-use super::Ctrl;
+use super::{Ctrl, BUBBLE_PARK};
 
 /// Everything Party B reports after a run.
 #[derive(Debug, Default)]
@@ -60,7 +65,7 @@ pub fn run_party_b(
         cfg.cos_xi() as f32,
         cfg.weighting_enabled(),
     )?));
-    let workset = Arc::new(Mutex::new(WorksetTable::new(
+    let workset = Arc::new(SharedWorkset::new(WorksetTable::new(
         cfg.effective_w(),
         cfg.effective_r().max(1),
         cfg.sampling(),
@@ -81,11 +86,13 @@ pub fn run_party_b(
             .name("party-b-local".into())
             .spawn(move || -> anyhow::Result<u64> {
                 let mut steps = 0u64;
+                let mut scratch = GatherScratch::default();
                 while !ctrl.stopped() {
-                    let entry = workset.lock().unwrap().sample();
-                    match entry {
+                    // Park through §3.2 bubbles; `insert` notifies.
+                    match workset.sample_or_wait(BUBBLE_PARK) {
                         Some(e) => {
-                            let (xb, y) = gather_b(&train, &e.indices);
+                            let (xb, y) = gather_b_with(&train, &e.indices,
+                                                        &mut scratch);
                             let (loss, ws) = runtime
                                 .lock()
                                 .unwrap()
@@ -94,10 +101,7 @@ pub fn run_party_b(
                             cosine.lock().unwrap().push(steps, &ws);
                             loss_ema.lock().unwrap().push(loss as f64);
                         }
-                        None => {
-                            std::thread::sleep(
-                                std::time::Duration::from_micros(200));
-                        }
+                        None => {}
                     }
                 }
                 Ok(steps)
@@ -108,6 +112,7 @@ pub fn run_party_b(
 
     // ---- comm worker + control plane (this thread) -------------------------
     let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
+    let mut scratch = GatherScratch::default();
     let eval_batches = eval_batch_count(cfg, test.n, batch);
     let start = Instant::now();
     let mut series: Vec<SeriesPoint> = Vec::new();
@@ -117,7 +122,7 @@ pub fn run_party_b(
     let result: anyhow::Result<()> = (|| {
         for round in 0..cfg.max_rounds as u64 {
             let idx = cursor.next_indices();
-            let (xb, y) = gather_b(&train, &idx);
+            let (xb, y) = gather_b_with(&train, &idx, &mut scratch);
             let za = match transport.recv()? {
                 Message::Activation { round: r, tensor } => {
                     anyhow::ensure!(r == round,
@@ -139,9 +144,11 @@ pub fn run_party_b(
                     cfg.compute_delay_s));
             }
             loss_ema.lock().unwrap().push(loss as f64);
-            transport.send(Message::Derivative { round,
-                                                 tensor: dza.clone() })?;
-            workset.lock().unwrap().insert(round, idx, za, dza);
+            // Cache first (handle share, no payload copy), then occupy
+            // the WAN: the local worker trains on round `i`'s statistics
+            // while ∇Z_A is still in flight.
+            workset.insert(round, idx, za, dza.clone());
+            transport.send(Message::Derivative { round, tensor: dza })?;
             comm_rounds = round + 1;
 
             // Eval lane + stop decision.
@@ -152,7 +159,7 @@ pub fn run_party_b(
                     let idx: Vec<u32> = ((k * batch) as u32
                         ..((k + 1) * batch) as u32)
                         .collect();
-                    let (xb, y) = gather_b(&test, &idx);
+                    let (xb, y) = gather_b_with(&test, &idx, &mut scratch);
                     let za = match transport.recv()? {
                         Message::EvalActivation { round: r, tensor } => {
                             anyhow::ensure!(r == k as u64,
@@ -202,6 +209,7 @@ pub fn run_party_b(
     // Broadcast shutdown regardless of how we exited.
     let _ = transport.send(Message::Shutdown);
     ctrl.stop();
+    workset.wake_all(); // unpark a local worker sleeping through a bubble
     let local_updates = match local_handle {
         Some(h) => h.join().expect("party B local worker panicked")?,
         None => 0,
@@ -209,7 +217,7 @@ pub fn run_party_b(
     result?;
 
     let exact_updates = runtime.lock().unwrap().exact_updates;
-    let ws_stats = workset.lock().unwrap().stats();
+    let ws_stats = workset.stats();
     let cosine = Arc::try_unwrap(cosine)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_default();

@@ -7,6 +7,8 @@
 //! dataset is reshuffled every epoch (paper §3.2: shuffling ensures the
 //! workset holds instances in random order).
 
+use std::sync::Arc;
+
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg;
 
@@ -80,28 +82,83 @@ impl BatchCursor {
     }
 }
 
+/// Reusable gather destination (DESIGN.md §4). Holds a handle to the
+/// previous batch's shared buffer; when every other handle has been
+/// dropped (refcount back to 1) and the batch geometry is unchanged, the
+/// allocation is recycled in place — steady-state gathers in the
+/// coordinator loops allocate nothing. While any consumer still holds the
+/// previous tensor, a fresh buffer is allocated instead, so recycling is
+/// invisible to correctness.
+#[derive(Debug, Default)]
+pub struct GatherScratch {
+    x: Option<Arc<[i32]>>,
+    y: Option<Arc<[f32]>>,
+}
+
+/// Recycle `slot`'s allocation when it is unique and the right size;
+/// otherwise allocate fresh. Either way `fill` writes every element.
+fn recycle<T: Copy + Default>(
+    slot: &mut Option<Arc<[T]>>,
+    n: usize,
+    fill: impl FnOnce(&mut [T]),
+) -> Arc<[T]> {
+    if let Some(arc) = slot {
+        if arc.len() == n {
+            if let Some(buf) = Arc::get_mut(arc) {
+                fill(buf);
+                return arc.clone();
+            }
+        }
+    }
+    let mut v = vec![T::default(); n];
+    fill(&mut v);
+    let arc: Arc<[T]> = v.into();
+    *slot = Some(arc.clone());
+    arc
+}
+
+/// Copy `idx`'s rows of the row-major [n, f] table `src` into `out`
+/// (shared by both parties' gathers).
+fn gather_rows(src: &[i32], f: usize, idx: &[u32], out: &mut [i32]) {
+    for (row, &i) in idx.iter().enumerate() {
+        let i = i as usize;
+        out[row * f..(row + 1) * f]
+            .copy_from_slice(&src[i * f..(i + 1) * f]);
+    }
+}
+
 /// Gather Party A's feature rows for a batch into an i32 [B, F] tensor.
 pub fn gather_a(data: &PartyAData, idx: &[u32]) -> Tensor {
+    gather_a_with(data, idx, &mut GatherScratch::default())
+}
+
+/// `gather_a` against a caller-held scratch, recycling the destination
+/// buffer across calls once previous handles are dropped.
+pub fn gather_a_with(data: &PartyAData, idx: &[u32],
+                     scratch: &mut GatherScratch) -> Tensor {
     let f = data.fields;
-    let mut out = Vec::with_capacity(idx.len() * f);
-    for &i in idx {
-        let i = i as usize;
-        out.extend_from_slice(&data.x[i * f..(i + 1) * f]);
-    }
-    Tensor::i32(vec![idx.len(), f], out)
+    let x = recycle(&mut scratch.x, idx.len() * f,
+                    |out| gather_rows(&data.x, f, idx, out));
+    Tensor::i32(vec![idx.len(), f], x)
 }
 
 /// Gather Party B's feature rows + labels for a batch.
 pub fn gather_b(data: &PartyBData, idx: &[u32]) -> (Tensor, Tensor) {
+    gather_b_with(data, idx, &mut GatherScratch::default())
+}
+
+/// `gather_b` against a caller-held scratch (see [`gather_a_with`]).
+pub fn gather_b_with(data: &PartyBData, idx: &[u32],
+                     scratch: &mut GatherScratch) -> (Tensor, Tensor) {
     let f = data.fields;
-    let mut xs = Vec::with_capacity(idx.len() * f);
-    let mut ys = Vec::with_capacity(idx.len());
-    for &i in idx {
-        let i = i as usize;
-        xs.extend_from_slice(&data.x[i * f..(i + 1) * f]);
-        ys.push(data.y[i]);
-    }
-    (Tensor::i32(vec![idx.len(), f], xs), Tensor::f32(vec![idx.len()], ys))
+    let x = recycle(&mut scratch.x, idx.len() * f,
+                    |out| gather_rows(&data.x, f, idx, out));
+    let y = recycle(&mut scratch.y, idx.len(), |out| {
+        for (row, &i) in idx.iter().enumerate() {
+            out[row] = data.y[i as usize];
+        }
+    });
+    (Tensor::i32(vec![idx.len(), f], x), Tensor::f32(vec![idx.len()], y))
 }
 
 #[cfg(test)]
@@ -154,6 +211,67 @@ mod tests {
         for _ in 0..20 {
             assert_eq!(a.next_indices(), b.next_indices());
         }
+    }
+
+    #[test]
+    fn scratch_gather_matches_fresh_gather() {
+        let ds = SynthDataset::generate("avazu", 50, 500, 100, 0.0, 3)
+            .unwrap();
+        let mut scratch = GatherScratch::default();
+        for idx in [vec![0u32, 9, 3], vec![7u32, 7, 49], vec![1u32, 2, 3]] {
+            let fresh_a = gather_a(&ds.train_a, &idx);
+            let with_a = gather_a_with(&ds.train_a, &idx, &mut scratch);
+            assert_eq!(fresh_a, with_a);
+            let (fx, fy) = gather_b(&ds.train_b, &idx);
+            let (wx, wy) = gather_b_with(&ds.train_b, &idx, &mut scratch);
+            assert_eq!(fx, wx);
+            assert_eq!(fy, wy);
+        }
+    }
+
+    #[test]
+    fn scratch_recycles_only_when_unreferenced() {
+        use crate::tensor::Data;
+        let ds = SynthDataset::generate("avazu", 50, 500, 100, 0.0, 3)
+            .unwrap();
+        let idx1 = vec![0u32, 1, 2];
+        let idx2 = vec![3u32, 4, 5];
+        let mut scratch = GatherScratch::default();
+        let t1 = gather_a_with(&ds.train_a, &idx1, &mut scratch);
+        let t1_copy = t1.clone();
+        // t1 still alive → the second gather must NOT overwrite it.
+        let t2 = gather_a_with(&ds.train_a, &idx2, &mut scratch);
+        assert!(!t1.shares_data(&t2), "live tensor was overwritten");
+        assert_eq!(t1, t1_copy, "live tensor contents changed");
+        // Drop every outside handle; scratch now holds t2's buffer
+        // uniquely and must recycle it for the next gather.
+        let weak = match &t2.data {
+            Data::I32(a) => std::sync::Arc::downgrade(a),
+            _ => unreachable!("gather_a yields i32"),
+        };
+        drop(t1);
+        drop(t1_copy);
+        drop(t2);
+        let t3 = gather_a_with(&ds.train_a, &idx1, &mut scratch);
+        let recycled = match (&t3.data, weak.upgrade()) {
+            (Data::I32(a), Some(prev)) => std::sync::Arc::ptr_eq(a, &prev),
+            _ => false,
+        };
+        assert!(recycled, "scratch failed to recycle the allocation");
+        assert_eq!(t3, gather_a(&ds.train_a, &idx1));
+    }
+
+    #[test]
+    fn scratch_reallocates_on_geometry_change() {
+        let ds = SynthDataset::generate("avazu", 50, 500, 100, 0.0, 3)
+            .unwrap();
+        let mut scratch = GatherScratch::default();
+        let t1 = gather_a_with(&ds.train_a, &[0, 1, 2], &mut scratch);
+        drop(t1);
+        // Different batch size → new allocation, correct contents.
+        let t2 = gather_a_with(&ds.train_a, &[5, 6], &mut scratch);
+        assert_eq!(t2.shape, vec![2, ds.train_a.fields]);
+        assert_eq!(t2, gather_a(&ds.train_a, &[5, 6]));
     }
 
     #[test]

@@ -11,6 +11,15 @@
 //!   [u32 frame_len][u8 tag][u64 round][u8 dtype][u8 ndim][u32 dim…][payload]
 //! `frame_len` counts everything after itself. Tensor-less messages stop
 //! after `round`.
+//!
+//! The codec is zero-copy-oriented (DESIGN.md §4): encoding reserves the
+//! exact frame size once and bulk-copies the payload as a single memcpy on
+//! little-endian targets (with a per-element fallback elsewhere — the wire
+//! format is little-endian regardless of host order); decoding bulk-reads
+//! into a fresh shared buffer. `encode_into` lets transports reuse one
+//! scratch buffer across sends so the steady-state send path performs no
+//! allocation at all. The golden-bytes fixtures below pin the on-wire
+//! format to the original element-wise codec byte-for-byte.
 
 use crate::tensor::{Data, DType, Tensor};
 
@@ -81,9 +90,8 @@ impl Message {
 
     // -- codec -------------------------------------------------------------
 
-    /// Encode the frame body (without the leading length word).
-    pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::new();
+    /// Append the frame body (without the leading length word) to `out`.
+    fn encode_body(&self, out: &mut Vec<u8>) {
         out.push(self.tag());
         out.extend_from_slice(&self.round().to_le_bytes());
         if let Some(t) = self.tensor() {
@@ -93,19 +101,31 @@ impl Message {
                 out.extend_from_slice(&(d as u32).to_le_bytes());
             }
             match &t.data {
-                Data::F32(v) => {
-                    for x in v {
-                        out.extend_from_slice(&x.to_le_bytes());
-                    }
-                }
-                Data::I32(v) => {
-                    for x in v {
-                        out.extend_from_slice(&x.to_le_bytes());
-                    }
-                }
+                Data::F32(v) => write_f32s_le(out, v),
+                Data::I32(v) => write_i32s_le(out, v),
             }
         }
+    }
+
+    /// Encode the frame body (without the leading length word). The
+    /// buffer is sized exactly once up front; the payload goes in as one
+    /// bulk copy.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes() - 4);
+        self.encode_body(&mut out);
         out
+    }
+
+    /// Encode the complete frame — length word followed by the body —
+    /// into `out`, clearing it first. Transports keep one scratch buffer
+    /// and call this per send: after the first few messages the buffer
+    /// reaches steady-state capacity and sends stop allocating.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.wire_bytes());
+        let body_len = (self.wire_bytes() - 4) as u32;
+        out.extend_from_slice(&body_len.to_le_bytes());
+        self.encode_body(out);
     }
 
     /// Decode one frame body.
@@ -137,21 +157,10 @@ impl Message {
                          {remaining} bytes left"
                     );
                 }
+                let payload = r.take(remaining)?;
                 let tensor = match dtype {
-                    DType::F32 => {
-                        let mut v = Vec::with_capacity(n);
-                        for _ in 0..n {
-                            v.push(f32::from_le_bytes(r.bytes4()?));
-                        }
-                        Tensor::f32(shape, v)
-                    }
-                    DType::I32 => {
-                        let mut v = Vec::with_capacity(n);
-                        for _ in 0..n {
-                            v.push(i32::from_le_bytes(r.bytes4()?));
-                        }
-                        Tensor::i32(shape, v)
-                    }
+                    DType::F32 => Tensor::f32(shape, read_f32s_le(payload)),
+                    DType::I32 => Tensor::i32(shape, read_i32s_le(payload)),
                 };
                 match tag {
                     TAG_ACT => Message::Activation { round, tensor },
@@ -169,6 +178,99 @@ impl Message {
     }
 }
 
+// -- bulk payload transcoding ----------------------------------------------
+//
+// The wire format is little-endian. On little-endian hosts the in-memory
+// representation of f32/i32 slices is already the wire representation, so
+// the payload moves as one memcpy; big-endian hosts fall back to the
+// per-element path. f32 and i32 have no padding and every bit pattern is
+// valid for them, so the raw-byte views below are sound.
+
+#[cfg(target_endian = "little")]
+fn write_f32s_le(out: &mut Vec<u8>, v: &[f32]) {
+    // SAFETY: f32 is 4 bytes, no padding; the slice is valid for
+    // v.len() * 4 bytes of reads.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4)
+    };
+    out.extend_from_slice(bytes);
+}
+
+#[cfg(not(target_endian = "little"))]
+fn write_f32s_le(out: &mut Vec<u8>, v: &[f32]) {
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+#[cfg(target_endian = "little")]
+fn write_i32s_le(out: &mut Vec<u8>, v: &[i32]) {
+    // SAFETY: as write_f32s_le.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4)
+    };
+    out.extend_from_slice(bytes);
+}
+
+#[cfg(not(target_endian = "little"))]
+fn write_i32s_le(out: &mut Vec<u8>, v: &[i32]) {
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+#[cfg(target_endian = "little")]
+fn read_f32s_le(bytes: &[u8]) -> std::sync::Arc<[f32]> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let n = bytes.len() / 4;
+    // Build the shared buffer directly so the payload is copied exactly
+    // once — no staging Vec, no second Vec→Arc move.
+    let mut arc = std::sync::Arc::<[f32]>::new_uninit_slice(n);
+    // SAFETY: the freshly-created Arc is unique (get_mut succeeds); the
+    // single memcpy fully initializes all n * 4 bytes, and any bit
+    // pattern is a valid f32; u8 pointees have no alignment requirement.
+    unsafe {
+        let dst = std::sync::Arc::get_mut(&mut arc).unwrap();
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(),
+                                      dst.as_mut_ptr().cast::<u8>(),
+                                      n * 4);
+        arc.assume_init()
+    }
+}
+
+#[cfg(not(target_endian = "little"))]
+fn read_f32s_le(bytes: &[u8]) -> std::sync::Arc<[f32]> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect::<Vec<_>>()
+        .into()
+}
+
+#[cfg(target_endian = "little")]
+fn read_i32s_le(bytes: &[u8]) -> std::sync::Arc<[i32]> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let n = bytes.len() / 4;
+    let mut arc = std::sync::Arc::<[i32]>::new_uninit_slice(n);
+    // SAFETY: as read_f32s_le.
+    unsafe {
+        let dst = std::sync::Arc::get_mut(&mut arc).unwrap();
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(),
+                                      dst.as_mut_ptr().cast::<u8>(),
+                                      n * 4);
+        arc.assume_init()
+    }
+}
+
+#[cfg(not(target_endian = "little"))]
+fn read_i32s_le(bytes: &[u8]) -> std::sync::Arc<[i32]> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect::<Vec<_>>()
+        .into()
+}
+
 struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -176,11 +278,17 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // checked_add: a hostile header must not wrap `pos + n` around
+        // usize::MAX and alias an in-bounds slice.
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("frame offset overflow"))?;
+        if end > self.buf.len() {
             anyhow::bail!("truncated frame");
         }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(s)
     }
 
@@ -194,10 +302,6 @@ impl<'a> Reader<'a> {
 
     fn u64(&mut self) -> anyhow::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn bytes4(&mut self) -> anyhow::Result<[u8; 4]> {
-        Ok(self.take(4)?.try_into().unwrap())
     }
 }
 
@@ -227,6 +331,24 @@ mod tests {
             let dec = Message::decode(&enc).unwrap();
             assert_eq!(dec, m);
         }
+    }
+
+    #[test]
+    fn encode_into_prefixes_length_and_reuses_buffer() {
+        let m = Message::Activation { round: 5, tensor: sample_tensor() };
+        let body = m.encode();
+        let mut scratch = Vec::new();
+        m.encode_into(&mut scratch);
+        assert_eq!(scratch.len(), m.wire_bytes());
+        assert_eq!(&scratch[..4],
+                   &(body.len() as u32).to_le_bytes());
+        assert_eq!(&scratch[4..], &body[..]);
+        // Re-encoding a smaller message into the same buffer resets it.
+        let cap = scratch.capacity();
+        Message::Shutdown.encode_into(&mut scratch);
+        assert_eq!(scratch.len(), Message::Shutdown.wire_bytes());
+        assert!(scratch.capacity() >= cap, "scratch must be reusable");
+        assert_eq!(&scratch[4..], &Message::Shutdown.encode()[..]);
     }
 
     #[test]
@@ -271,6 +393,20 @@ mod tests {
     }
 
     #[test]
+    fn encode_does_not_copy_out_of_band() {
+        // The encoded buffer is sized exactly — no growth reallocations.
+        let m = Message::Activation {
+            round: 1,
+            tensor: Tensor::zeros_f32(vec![64, 32]),
+        };
+        let enc = m.encode();
+        assert_eq!(enc.len(), m.wire_bytes() - 4);
+        // No growth doubling: capacity was reserved once, up front.
+        assert!(enc.capacity() < (m.wire_bytes() - 4) * 2,
+                "encode reallocated: cap {}", enc.capacity());
+    }
+
+    #[test]
     fn privacy_surface_is_closed() {
         // Compile-time property documented as a test: the message enum
         // has exactly the five variants above — adding a raw-feature or
@@ -281,6 +417,99 @@ mod tests {
             Message::Activation { .. } | Message::Derivative { .. }
             | Message::EvalActivation { .. } | Message::EvalAck { .. }
             | Message::Shutdown => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod golden_tests {
+    //! Golden-bytes fixtures: hex frames captured from the seed
+    //! element-wise codec. The bulk codec must keep the on-wire format
+    //! byte-identical — both directions are asserted for every variant.
+
+    use super::*;
+
+    fn hex_to_bytes(hex: &str) -> Vec<u8> {
+        let compact: String =
+            hex.chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(compact.len() % 2, 0, "odd hex length");
+        (0..compact.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&compact[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    fn fixtures() -> Vec<(&'static str, Message, &'static str)> {
+        vec![
+            (
+                "shutdown",
+                Message::Shutdown,
+                "05 0000000000000000",
+            ),
+            (
+                "eval_ack",
+                Message::EvalAck { round: 0x0102030405060708 },
+                "04 0807060504030201",
+            ),
+            (
+                "activation_f32_2x2",
+                Message::Activation {
+                    round: 1,
+                    tensor: Tensor::f32(vec![2, 2],
+                                        vec![0.0, 1.0, -2.0, 0.5]),
+                },
+                "01 0100000000000000 00 02 02000000 02000000 \
+                 00000000 0000803f 000000c0 0000003f",
+            ),
+            (
+                "derivative_f32_3",
+                Message::Derivative {
+                    round: 2,
+                    tensor: Tensor::f32(vec![3], vec![1.5, -0.25, 3.0]),
+                },
+                "02 0200000000000000 00 01 03000000 \
+                 0000c03f 000080be 00004040",
+            ),
+            (
+                "eval_activation_i32_2x1",
+                Message::EvalActivation {
+                    round: 9,
+                    tensor: Tensor::i32(vec![2, 1], vec![7, -1]),
+                },
+                "03 0900000000000000 01 02 02000000 01000000 \
+                 07000000 ffffffff",
+            ),
+        ]
+    }
+
+    #[test]
+    fn golden_encode_is_byte_identical() {
+        for (name, msg, hex) in fixtures() {
+            assert_eq!(msg.encode(), hex_to_bytes(hex),
+                       "encode drifted for fixture '{name}'");
+        }
+    }
+
+    #[test]
+    fn golden_decode_recovers_messages() {
+        for (name, msg, hex) in fixtures() {
+            let dec = Message::decode(&hex_to_bytes(hex))
+                .unwrap_or_else(|e| panic!("fixture '{name}': {e}"));
+            assert_eq!(dec, msg, "decode drifted for fixture '{name}'");
+        }
+    }
+
+    #[test]
+    fn golden_framed_encoding_prefixes_length() {
+        for (name, msg, hex) in fixtures() {
+            let body = hex_to_bytes(hex);
+            let mut framed = Vec::new();
+            msg.encode_into(&mut framed);
+            assert_eq!(&framed[..4],
+                       &(body.len() as u32).to_le_bytes(),
+                       "length word wrong for fixture '{name}'");
+            assert_eq!(&framed[4..], &body[..],
+                       "framed body drifted for fixture '{name}'");
         }
     }
 }
@@ -343,6 +572,58 @@ mod fuzz_tests {
             let dec = Message::decode(&msg.encode())
                 .map_err(|e| format!("decode failed: {e}"))?;
             prop_assert!(dec == msg, "roundtrip mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hostile_headers_near_usize_max_error_cleanly() {
+        // Hand-built frames whose dim words multiply toward (or past)
+        // usize::MAX: decode must reject them without panicking and
+        // without attempting the implied multi-exabyte allocation.
+        prop::check("hostile huge-dim headers", |rng| {
+            let mut frame = Vec::new();
+            frame.push(1 + rng.gen_range(3) as u8); // a tensor tag
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes());
+            frame.push(rng.gen_range(2) as u8); // valid dtype code
+            let ndim = 2 + rng.gen_range(6) as u8;
+            frame.push(ndim);
+            for _ in 0..ndim {
+                // Bias dims huge: u32::MAX-ish values whose product
+                // overflows usize on 64-bit (and wildly on 32-bit).
+                let d = u32::MAX - rng.gen_range(7);
+                frame.extend_from_slice(&d.to_le_bytes());
+            }
+            // Little or no payload behind the hostile header.
+            for _ in 0..rng.gen_range(8) {
+                frame.push(rng.next_u32() as u8);
+            }
+            prop_assert!(Message::decode(&frame).is_err(),
+                         "hostile header decoded");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_encode_into_agrees_with_encode() {
+        prop::check("encode_into == 4-byte len + encode", |rng| {
+            let rows = 1 + rng.gen_range(8) as usize;
+            let cols = 1 + rng.gen_range(8) as usize;
+            let v: Vec<f32> =
+                (0..rows * cols).map(|_| rng.next_normal()).collect();
+            let msg = Message::Derivative {
+                round: rng.next_u64(),
+                tensor: Tensor::f32(vec![rows, cols], v),
+            };
+            let mut framed = Vec::new();
+            msg.encode_into(&mut framed);
+            let body = msg.encode();
+            prop_assert!(framed.len() == body.len() + 4,
+                         "framed length mismatch");
+            prop_assert!(&framed[..4] == (body.len() as u32)
+                             .to_le_bytes().as_slice(),
+                         "length word mismatch");
+            prop_assert!(&framed[4..] == &body[..], "body mismatch");
             Ok(())
         });
     }

@@ -1,13 +1,21 @@
 //! Host `Tensor` ↔ `xla::Literal` conversions at the PJRT boundary.
+//!
+//! Copy discipline (DESIGN.md §4): the literal ABI owns its own C++-side
+//! buffer, so one host copy per direction is inherent — `vec1` copies the
+//! shared buffer into the literal, and `to_vec` copies the literal out.
+//! What we avoid is any copy beyond that one: the host side passes the
+//! `Arc`-backed payload as a borrowed slice (no staging `Vec`), and the
+//! literal→tensor direction moves the single `to_vec` result into the
+//! shared buffer without re-staging it.
 
 use crate::tensor::{Data, Tensor};
 
-/// Convert a host tensor to an XLA literal (copies once).
+/// Convert a host tensor to an XLA literal (the one inherent copy).
 pub fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
     let lit = match &t.data {
-        Data::F32(v) => xla::Literal::vec1(v),
-        Data::I32(v) => xla::Literal::vec1(v),
+        Data::F32(v) => xla::Literal::vec1(v.as_ref()),
+        Data::I32(v) => xla::Literal::vec1(v.as_ref()),
     };
     if t.shape.is_empty() {
         // vec1 gives shape [1]; scalars must be rank-0.
@@ -16,7 +24,8 @@ pub fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
     Ok(lit.reshape(&dims)?)
 }
 
-/// Convert an XLA literal back to a host tensor.
+/// Convert an XLA literal back to a host tensor (the one inherent copy,
+/// plus the move into the shared buffer).
 pub fn literal_to_tensor(lit: &xla::Literal) -> anyhow::Result<Tensor> {
     let shape = lit.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -57,5 +66,17 @@ mod tests {
         let back = literal_to_tensor(&lit).unwrap();
         assert!(back.shape.is_empty());
         assert_eq!(back.as_f32().unwrap(), &[0.25]);
+    }
+
+    #[test]
+    fn shared_handles_convert_like_owners() {
+        // A cloned handle (refcount 2) converts identically — conversion
+        // never needs exclusive ownership of the shared buffer.
+        let t = Tensor::f32(vec![2], vec![1.0, -1.0]);
+        let h = t.clone();
+        let a = tensor_to_literal(&t).unwrap();
+        let b = tensor_to_literal(&h).unwrap();
+        assert_eq!(literal_to_tensor(&a).unwrap(),
+                   literal_to_tensor(&b).unwrap());
     }
 }

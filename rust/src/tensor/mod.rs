@@ -4,6 +4,14 @@
 //! simulator and the workset table all operate on host tensors; only the
 //! runtime layer (rust/src/runtime) converts to/from `xla::Literal` at the
 //! PJRT boundary.
+//!
+//! The payload is a shared `Arc<[T]>` buffer (see DESIGN.md §4): cloning a
+//! `Tensor` bumps a refcount instead of copying `batch × dim` elements, so
+//! the workset table, the protocol layer and both coordinator workers can
+//! hold handles to one allocation. The buffers are immutable once
+//! constructed — sharing is safe by construction, no interior mutability.
+
+use std::sync::Arc;
 
 /// Element type. The VFL wire only ever carries f32 statistics and i32
 /// feature ids, matching the artifact ABI.
@@ -34,13 +42,15 @@ impl DType {
     }
 }
 
+/// Shared, immutable payload. `Clone` is a refcount bump, never a copy.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Data {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+    F32(Arc<[f32]>),
+    I32(Arc<[i32]>),
 }
 
-/// Dense host tensor (row-major).
+/// Dense host tensor (row-major). `Clone` shares the payload allocation
+/// (O(ndim), independent of element count).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
@@ -48,13 +58,18 @@ pub struct Tensor {
 }
 
 impl Tensor {
-    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+    /// Build an f32 tensor. Accepts a `Vec<f32>` (moved into a fresh
+    /// shared buffer) or an existing `Arc<[f32]>` (shared, zero-copy).
+    pub fn f32(shape: Vec<usize>, data: impl Into<Arc<[f32]>>) -> Self {
+        let data = data.into();
         assert_eq!(shape.iter().product::<usize>(), data.len(),
                    "shape/data mismatch");
         Tensor { shape, data: Data::F32(data) }
     }
 
-    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+    /// Build an i32 tensor. Accepts `Vec<i32>` or `Arc<[i32]>`.
+    pub fn i32(shape: Vec<usize>, data: impl Into<Arc<[i32]>>) -> Self {
+        let data = data.into();
         assert_eq!(shape.iter().product::<usize>(), data.len(),
                    "shape/data mismatch");
         Tensor { shape, data: Data::I32(data) }
@@ -107,14 +122,43 @@ impl Tensor {
         }
     }
 
+    /// True when both tensors are handles onto the same payload allocation
+    /// — the zero-copy invariant the workset/codec tests assert.
+    pub fn shares_data(&self, other: &Tensor) -> bool {
+        match (&self.data, &other.data) {
+            (Data::F32(a), Data::F32(b)) => Arc::ptr_eq(a, b),
+            (Data::I32(a), Data::I32(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
     /// Row-wise view helpers for [B, D] matrices.
     pub fn rows(&self) -> usize {
         *self.shape.first().unwrap_or(&1)
     }
 
+    /// Row `r` of a [B, D…] f32 tensor as a flat slice. Errors (instead of
+    /// panicking) on non-f32 tensors and out-of-range rows; scalars and
+    /// 1-D tensors are treated as [1, 1] and [B, 1] respectively.
     pub fn row_f32(&self, r: usize) -> anyhow::Result<&[f32]> {
-        let d: usize = self.shape[1..].iter().product();
-        Ok(&self.as_f32()?[r * d..(r + 1) * d])
+        let v = self.as_f32()?;
+        let rows = self.rows();
+        anyhow::ensure!(
+            r < rows,
+            "row index {r} out of range for shape {:?}", self.shape
+        );
+        let d: usize = match self.shape.get(1..) {
+            Some(rest) => rest.iter().product(),
+            None => 1,
+        };
+        let start = r * d;
+        let end = start + d;
+        anyhow::ensure!(
+            end <= v.len(),
+            "row {r} exceeds payload (shape {:?}, len {})",
+            self.shape, v.len()
+        );
+        Ok(&v[start..end])
     }
 }
 
@@ -152,6 +196,29 @@ mod tests {
         }
         assert!(DType::from_code(9).is_err());
     }
+
+    #[test]
+    fn clone_shares_payload() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let u = t.clone();
+        assert!(t.shares_data(&u));
+        assert_eq!(t, u);
+        // Independent allocations with equal contents compare equal but
+        // do not share.
+        let w = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t, w);
+        assert!(!t.shares_data(&w));
+    }
+
+    #[test]
+    fn construct_from_shared_buffer_is_zero_copy() {
+        let buf: std::sync::Arc<[f32]> = vec![1.0f32, 2.0, 3.0].into();
+        let t = Tensor::f32(vec![3], buf.clone());
+        match &t.data {
+            Data::F32(v) => assert!(std::sync::Arc::ptr_eq(v, &buf)),
+            _ => panic!("expected f32"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -160,7 +227,8 @@ mod extra_tests {
 
     #[test]
     fn row_view_matches_manual_slice() {
-        let t = Tensor::f32(vec![3, 4], (0..12).map(|x| x as f32).collect());
+        let t = Tensor::f32(vec![3, 4], (0..12).map(|x| x as f32)
+                                                .collect::<Vec<_>>());
         assert_eq!(t.row_f32(0).unwrap(), &[0.0, 1.0, 2.0, 3.0]);
         assert_eq!(t.row_f32(2).unwrap(), &[8.0, 9.0, 10.0, 11.0]);
     }
@@ -178,5 +246,25 @@ mod extra_tests {
     fn size_bytes_counts_payload() {
         assert_eq!(Tensor::zeros_f32(vec![10, 10]).size_bytes(), 400);
         assert_eq!(Tensor::i32(vec![3], vec![0; 3]).size_bytes(), 12);
+    }
+
+    #[test]
+    fn row_f32_bounds_checked() {
+        let t = Tensor::f32(vec![3, 4], vec![0.0; 12]);
+        assert!(t.row_f32(2).is_ok());
+        assert!(t.row_f32(3).is_err());
+        assert!(t.row_f32(usize::MAX).is_err());
+    }
+
+    #[test]
+    fn row_f32_handles_scalar_and_1d_shapes() {
+        // Scalar: one row of one element.
+        let s = Tensor::scalar_f32(7.0);
+        assert_eq!(s.row_f32(0).unwrap(), &[7.0]);
+        assert!(s.row_f32(1).is_err());
+        // 1-D: each row is one element.
+        let v = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(v.row_f32(1).unwrap(), &[2.0]);
+        assert!(v.row_f32(3).is_err());
     }
 }

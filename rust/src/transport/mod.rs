@@ -10,6 +10,12 @@
 //!
 //! `TcpTransport` is the same interface over real sockets for genuine
 //! two-process runs (examples/tcp_two_party.rs).
+//!
+//! In-proc delivery is zero-copy (DESIGN.md §4): messages move through
+//! the channel as `Arc`-backed tensor handles, so the byte accounting
+//! charges the full wire size while the process never copies the
+//! payload. TCP pays exactly one serialize + one deserialize, each a
+//! single bulk copy through a reused scratch buffer.
 
 pub mod tcp;
 

@@ -5,6 +5,12 @@
 //! runs its own binary). The codec is protocol::Message's frame format;
 //! an optional `WanProfile` adds simulated WAN delay on top of the real
 //! socket for single-host demos.
+//!
+//! Send path (DESIGN.md §4): each send encodes the length word + frame
+//! body into one reusable scratch buffer (`Message::encode_into`) and
+//! hands the kernel a single `write_all` — one syscall per message in the
+//! common case, and zero steady-state allocation. The receive path reuses
+//! a frame buffer the same way.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -17,9 +23,22 @@ use crate::protocol::Message;
 
 use super::{LinkStats, Transport};
 
+/// Writer half: socket + reusable frame scratch, locked together so
+/// concurrent senders interleave at frame granularity.
+struct FramedWriter {
+    stream: TcpStream,
+    scratch: Vec<u8>,
+}
+
+/// Reader half: socket + reusable frame buffer.
+struct FramedReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
 pub struct TcpTransport {
-    reader: Mutex<TcpStream>,
-    writer: Mutex<TcpStream>,
+    reader: Mutex<FramedReader>,
+    writer: Mutex<FramedWriter>,
     wan: WanProfile,
     messages: AtomicU64,
     bytes: AtomicU64,
@@ -31,8 +50,10 @@ impl TcpTransport {
         stream.set_nodelay(true)?;
         let reader = stream.try_clone()?;
         Ok(TcpTransport {
-            reader: Mutex::new(reader),
-            writer: Mutex::new(stream),
+            reader: Mutex::new(FramedReader { stream: reader,
+                                              buf: Vec::new() }),
+            writer: Mutex::new(FramedWriter { stream,
+                                              scratch: Vec::new() }),
             wan,
             messages: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
@@ -65,24 +86,41 @@ impl TcpTransport {
             }
         }
     }
+
+    /// Blocking read of one frame body into the reader's reusable buffer;
+    /// decodes before releasing the lock.
+    fn recv_locked(r: &mut FramedReader) -> anyhow::Result<Message> {
+        let mut len_buf = [0u8; 4];
+        r.stream.read_exact(&mut len_buf)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > 1 << 30 {
+            anyhow::bail!("frame too large: {len} bytes");
+        }
+        r.buf.resize(len, 0);
+        r.stream.read_exact(&mut r.buf)?;
+        Message::decode(&r.buf)
+    }
 }
 
 impl Transport for TcpTransport {
     fn send(&self, msg: Message) -> anyhow::Result<()> {
-        let body = msg.encode();
         let start = Instant::now();
-        let delay = self.wan.one_way_delay(body.len() + 4);
+        let delay = self.wan.one_way_delay(msg.wire_bytes());
         if !delay.is_zero() {
             std::thread::sleep(delay);
         }
+        let frame_len;
         {
             let mut w = self.writer.lock().unwrap();
-            w.write_all(&(body.len() as u32).to_le_bytes())?;
-            w.write_all(&body)?;
-            w.flush()?;
+            let FramedWriter { stream, scratch } = &mut *w;
+            // Length word + body in one reusable buffer, one write_all.
+            msg.encode_into(scratch);
+            frame_len = scratch.len();
+            stream.write_all(scratch)?;
+            stream.flush()?;
         }
         self.messages.fetch_add(1, Ordering::Relaxed);
-        self.bytes.fetch_add(body.len() as u64 + 4, Ordering::Relaxed);
+        self.bytes.fetch_add(frame_len as u64, Ordering::Relaxed);
         self.busy_nanos
             .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(())
@@ -90,26 +128,18 @@ impl Transport for TcpTransport {
 
     fn recv(&self) -> anyhow::Result<Message> {
         let mut r = self.reader.lock().unwrap();
-        let mut len_buf = [0u8; 4];
-        r.read_exact(&mut len_buf)?;
-        let len = u32::from_le_bytes(len_buf) as usize;
-        if len > 1 << 30 {
-            anyhow::bail!("frame too large: {len} bytes");
-        }
-        let mut body = vec![0u8; len];
-        r.read_exact(&mut body)?;
-        Message::decode(&body)
+        Self::recv_locked(&mut r)
     }
 
     fn try_recv(&self) -> anyhow::Result<Option<Message>> {
         // The coordinator only uses try_recv on in-proc transports; over
         // TCP we'd need readiness APIs. Peek via nonblocking read of the
         // length prefix.
-        let r = self.reader.lock().unwrap();
-        r.set_nonblocking(true)?;
+        let mut r = self.reader.lock().unwrap();
+        r.stream.set_nonblocking(true)?;
         let mut len_buf = [0u8; 4];
-        let peeked = r.peek(&mut len_buf);
-        r.set_nonblocking(false)?;
+        let peeked = r.stream.peek(&mut len_buf);
+        r.stream.set_nonblocking(false)?;
         match peeked {
             Ok(4) => {}
             Ok(_) => return Ok(None),
@@ -118,8 +148,7 @@ impl Transport for TcpTransport {
             }
             Err(e) => return Err(e.into()),
         }
-        drop(r);
-        self.recv().map(Some)
+        Self::recv_locked(&mut r).map(Some)
     }
 
     fn stats(&self) -> LinkStats {
@@ -185,5 +214,34 @@ mod tests {
                    Some(Message::EvalAck { round: 1 }));
         client.send(Message::Shutdown).unwrap();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn byte_accounting_matches_wire_bytes() {
+        // The single-buffer send path must charge exactly the framed size.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            let t = TcpTransport::listen(&addr2, WanProfile::instant())
+                .unwrap();
+            (t.recv().unwrap(), t.recv().unwrap())
+        });
+        let client =
+            TcpTransport::connect(&addr, WanProfile::instant()).unwrap();
+        let m1 = Message::Activation {
+            round: 1,
+            tensor: Tensor::zeros_f32(vec![8, 4]),
+        };
+        let m2 = Message::Shutdown;
+        let expect = (m1.wire_bytes() + m2.wire_bytes()) as u64;
+        client.send(m1.clone()).unwrap();
+        client.send(m2.clone()).unwrap();
+        let (r1, r2) = server.join().unwrap();
+        assert_eq!(r1, m1);
+        assert_eq!(r2, m2);
+        assert_eq!(client.stats().bytes, expect);
+        assert_eq!(client.stats().messages, 2);
     }
 }

@@ -19,18 +19,25 @@
 //!     `sample` returns `None` and the caller blocks on the comm lane.
 
 use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::config::Sampling;
 use crate::tensor::Tensor;
 
 /// One cached mini-batch: the paper's ⟨i, Z_A^(i), ∇Z_A^(i), j⟩ tuple
 /// plus the feature rows needed to recompute ad-hoc statistics locally.
+///
+/// Every payload field is a shared handle (`Arc`-backed), so `Clone` is
+/// O(ndim) — a few refcount bumps — regardless of batch × dim. `sample()`
+/// hands out such a clone: the local worker reads the statistics through
+/// the same allocation the comm worker inserted (DESIGN.md §4).
 #[derive(Debug, Clone)]
 pub struct WorksetEntry {
     /// Communication-round timestamp (clock #1).
     pub round: u64,
     /// Instance indices of this batch (for re-gathering features).
-    pub indices: Vec<u32>,
+    pub indices: Arc<[u32]>,
     /// Cached forward activations Z_A^(i).
     pub za: Tensor,
     /// Cached backward derivatives ∇Z_A^(i).
@@ -108,7 +115,7 @@ impl WorksetTable {
         }
         self.entries.push_back(WorksetEntry {
             round,
-            indices,
+            indices: indices.into(),
             za,
             dza,
             uses: 0,
@@ -119,8 +126,9 @@ impl WorksetTable {
 
     /// Pick one cached batch for a local update, or `None` when the policy
     /// has no eligible entry (a §3.2 bubble). The returned entry is a
-    /// clone; its use-count was already incremented (and the entry retired
-    /// if it hit R).
+    /// shared handle onto the cached buffers (refcount bumps, no tensor
+    /// data copy); its use-count was already incremented (and the entry
+    /// retired if it hit R).
     pub fn sample(&mut self) -> Option<WorksetEntry> {
         let pos = match self.policy {
             Sampling::Consecutive => {
@@ -167,6 +175,106 @@ impl WorksetTable {
         Some(out)
     }
 }
+
+/// Thread-safe wrapper pairing the table with a condvar, so a local
+/// worker hitting a §3.2 bubble parks until the comm worker's next
+/// `insert` instead of burning CPU in a poll loop.
+///
+/// Eligibility under both sampling policies can only change when an entry
+/// is inserted (the single local worker is the only sampler, and a failed
+/// sample does not advance the local-step clock), so waking on insert is
+/// exact — the timeout below is belt-and-braces for shutdown and spurious
+/// wakeups, not part of the protocol.
+#[derive(Debug)]
+struct Inner {
+    table: WorksetTable,
+    /// Bumped by `wake_all` (under the same mutex, so a parked sampler
+    /// can never miss it): a parked sampler gives up its wait when the
+    /// epoch moves, distinguishing a deliberate shutdown poke from a
+    /// spurious condvar wakeup.
+    wake_epoch: u64,
+}
+
+#[derive(Debug)]
+pub struct SharedWorkset {
+    inner: Mutex<Inner>,
+    on_insert: Condvar,
+}
+
+impl SharedWorkset {
+    pub fn new(table: WorksetTable) -> Self {
+        SharedWorkset {
+            inner: Mutex::new(Inner { table, wake_epoch: 0 }),
+            on_insert: Condvar::new(),
+        }
+    }
+
+    /// Insert a freshly-exchanged batch and wake any parked local worker.
+    pub fn insert(&self, round: u64, indices: Vec<u32>, za: Tensor,
+                  dza: Tensor) {
+        self.inner.lock().unwrap().table.insert(round, indices, za, dza);
+        self.on_insert.notify_all();
+    }
+
+    /// Non-blocking sample (see [`WorksetTable::sample`]).
+    pub fn sample(&self) -> Option<WorksetEntry> {
+        self.inner.lock().unwrap().table.sample()
+    }
+
+    /// Sample, parking for up to `timeout` on a bubble. Spurious condvar
+    /// wakeups re-arm the wait against the original deadline, so the
+    /// park genuinely honours `timeout`; an `insert` ends it with an
+    /// entry and a `wake_all` ends it empty-handed. Returns `None` when
+    /// the bubble persists (caller loops, re-checking its stop flag).
+    pub fn sample_or_wait(&self, timeout: Duration) -> Option<WorksetEntry> {
+        let mut inner = self.inner.lock().unwrap();
+        // Immediate path — no wait while eligible entries exist.
+        if let Some(e) = inner.table.sample() {
+            return Some(e);
+        }
+        let start_epoch = inner.wake_epoch;
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining =
+                deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return inner.table.sample();
+            }
+            let (guard, _timed_out) =
+                self.on_insert.wait_timeout(inner, remaining).unwrap();
+            inner = guard;
+            if let Some(e) = inner.table.sample() {
+                return Some(e);
+            }
+            if inner.wake_epoch != start_epoch {
+                return None; // deliberate wake (shutdown) — stop parking
+            }
+            // Spurious wakeup: re-arm until the deadline.
+        }
+    }
+
+    /// Wake all parked workers without inserting (used at shutdown so a
+    /// worker parked in a bubble re-checks its stop flag promptly).
+    pub fn wake_all(&self) {
+        self.inner.lock().unwrap().wake_epoch += 1;
+        self.on_insert.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().table.is_empty()
+    }
+
+    pub fn stats(&self) -> WorksetStats {
+        self.inner.lock().unwrap().table.stats()
+    }
+}
+
+/// Convenience for the coordinator: a shareable handle.
+pub type SharedWorksetHandle = Arc<SharedWorkset>;
 
 #[cfg(test)]
 mod tests {
@@ -429,7 +537,23 @@ mod extra_tests {
         ws.insert(9, vec![4, 5, 6], t(), t());
         let e = ws.sample().unwrap();
         assert_eq!(e.round, 9);
-        assert_eq!(e.indices, vec![4, 5, 6]);
+        assert_eq!(e.indices.as_ref(), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn sample_returns_shared_handles_not_copies() {
+        // The zero-copy contract: the sampled entry's tensors alias the
+        // inserted allocations, and repeated samples alias each other.
+        let mut ws = WorksetTable::new(2, 10, Sampling::Consecutive);
+        let za = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let dza = Tensor::f32(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        ws.insert(0, vec![0, 1], za.clone(), dza.clone());
+        let e1 = ws.sample().unwrap();
+        let e2 = ws.sample().unwrap();
+        assert!(e1.za.shares_data(&za), "sampled Z_A was deep-copied");
+        assert!(e1.dza.shares_data(&dza), "sampled ∇Z_A was deep-copied");
+        assert!(e1.za.shares_data(&e2.za));
+        assert!(std::sync::Arc::ptr_eq(&e1.indices, &e2.indices));
     }
 
     #[test]
@@ -439,5 +563,88 @@ mod extra_tests {
         assert!(ws.sample().is_none());
         assert_eq!(ws.stats().bubbles, 2);
         assert_eq!(ws.stats().sampled, 0);
+    }
+}
+
+#[cfg(test)]
+mod shared_tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn t() -> Tensor {
+        Tensor::zeros_f32(vec![2, 2])
+    }
+
+    #[test]
+    fn parked_sampler_wakes_on_insert() {
+        let ws = Arc::new(SharedWorkset::new(WorksetTable::new(
+            3, 10, Sampling::RoundRobin)));
+        let ws2 = ws.clone();
+        let waiter = std::thread::spawn(move || {
+            // Generous timeout: the insert below must wake us long
+            // before it expires.
+            ws2.sample_or_wait(Duration::from_secs(10))
+        });
+        // Give the waiter time to park, then insert.
+        std::thread::sleep(Duration::from_millis(50));
+        let start = Instant::now();
+        ws.insert(0, vec![1, 2], t(), t());
+        let got = waiter.join().unwrap();
+        assert!(got.is_some(), "waiter missed the insert wakeup");
+        assert_eq!(got.unwrap().round, 0);
+        assert!(start.elapsed() < Duration::from_secs(5),
+                "waiter slept through the notify");
+    }
+
+    #[test]
+    fn sample_or_wait_times_out_on_persistent_bubble() {
+        let ws = SharedWorkset::new(WorksetTable::new(
+            3, 10, Sampling::RoundRobin));
+        let start = Instant::now();
+        assert!(ws.sample_or_wait(Duration::from_millis(20)).is_none());
+        let elapsed = start.elapsed();
+        assert!(elapsed >= Duration::from_millis(15), "returned too early");
+        assert!(ws.stats().bubbles >= 1);
+    }
+
+    #[test]
+    fn sample_or_wait_is_immediate_with_entries() {
+        let ws = SharedWorkset::new(WorksetTable::new(
+            3, 10, Sampling::Consecutive));
+        ws.insert(4, vec![], t(), t());
+        let start = Instant::now();
+        let e = ws.sample_or_wait(Duration::from_secs(5));
+        assert_eq!(e.unwrap().round, 4);
+        assert!(start.elapsed() < Duration::from_millis(100),
+                "eligible entry must not wait");
+    }
+
+    #[test]
+    fn wake_all_unparks_without_insert() {
+        let ws = Arc::new(SharedWorkset::new(WorksetTable::new(
+            3, 10, Sampling::RoundRobin)));
+        let ws2 = ws.clone();
+        let waiter = std::thread::spawn(move || {
+            let start = Instant::now();
+            let got = ws2.sample_or_wait(Duration::from_secs(10));
+            (got, start.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        ws.wake_all();
+        let (got, elapsed) = waiter.join().unwrap();
+        assert!(got.is_none(), "nothing was inserted");
+        assert!(elapsed < Duration::from_secs(5),
+                "wake_all must unpark the waiter");
+    }
+
+    #[test]
+    fn shared_accessors_pass_through() {
+        let ws = SharedWorkset::new(WorksetTable::new(
+            2, 10, Sampling::RoundRobin));
+        assert!(ws.is_empty());
+        ws.insert(0, vec![], t(), t());
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws.stats().inserted, 1);
+        assert!(ws.sample().is_some());
     }
 }
