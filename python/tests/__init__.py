@@ -1,0 +1,4 @@
+# Marks tests/ as a package so cross-module imports
+# (tests.test_steps → tests.test_models) resolve under
+# `python -m pytest python/tests` from the repo root — the exact
+# invocation CI uses.

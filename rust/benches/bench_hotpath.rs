@@ -8,10 +8,15 @@
 //!   2. workset churn — insert/sample cost across growing batch×dim.
 //!      Acceptance: sample cost is flat (handle clone, no data copy).
 //!   3. gather — fresh-allocation vs scratch-recycled destination.
+//!   4. wire compression — encode+decode throughput per statistics
+//!      codec and the resulting wire-bytes-per-round vs the identity
+//!      baseline (DESIGN.md §5).
 //!
 //! `cargo bench --bench bench_hotpath`
 
+use celu_vfl::compress::{codec_for, CodecKind, StatCodec};
 use celu_vfl::config::Sampling;
+use celu_vfl::experiments::ablation::compression_bytes_per_round;
 use celu_vfl::data::batcher::{gather_a, gather_a_with, gather_b_with,
                               GatherScratch};
 use celu_vfl::data::SynthDataset;
@@ -173,4 +178,47 @@ fn main() {
         black_box(gather_b_with(&ds.train_b, &idx, &mut scratch));
     });
     report("gather_b recycled scratch (0 alloc/op)", &r, b_bytes);
+
+    // ---- 4. wire compression ----------------------------------------------
+    section("statistics codecs — 256×64 f32 encode/decode throughput");
+    let stats_t = Tensor::f32(vec![256, 64],
+                              (0..256 * 64)
+                                  .map(|i| (i as f32 * 0.13).sin())
+                                  .collect::<Vec<_>>());
+    let codecs = [CodecKind::Identity, CodecKind::Fp16,
+                  CodecKind::QuantInt8, CodecKind::TopK(1024)];
+    for kind in codecs {
+        // Measured through the StatCodec trait object — the dispatch
+        // cost is part of what an extension codec would pay.
+        let codec = codec_for(kind);
+        let r = bench(&format!("compress {}", kind.label()), WINDOW, || {
+            black_box(codec.compress(&stats_t).unwrap());
+        });
+        report(&format!("compress {}", kind.label()), &r, payload);
+        let block = codec.compress(&stats_t).unwrap();
+        let r = bench(&format!("decompress {}", kind.label()), WINDOW,
+                      || {
+            black_box(codec.decompress(&block).unwrap());
+        });
+        report(&format!("decompress {}", kind.label()), &r, payload);
+    }
+
+    section("wire bytes per round (Z_A + ∇Z_A at 256×64) vs identity");
+    let rows = compression_bytes_per_round(256, 64, &codecs).unwrap();
+    let ident = rows[0].1 as f64;
+    for (label, wire, raw) in &rows {
+        println!("{label:<12} {wire:>9} B/round  (raw {raw:>9} B, \
+                  {:>5.2}× smaller)",
+                 ident / *wire as f64);
+    }
+    let int8 = rows[2].1;
+    let topk = rows[3].1;
+    println!("acceptance: int8 {} < identity {} and topk {} < identity \
+              {} — {}",
+             int8, ident as usize, topk, ident as usize,
+             if (int8 as f64) < ident && (topk as f64) < ident {
+                 "OK"
+             } else {
+                 "FAILED"
+             });
 }

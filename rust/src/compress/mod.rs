@@ -1,0 +1,917 @@
+//! Statistics wire compression: codecs for the exchanged Z_A / ∇Z_A.
+//!
+//! CELU-VFL cuts WAN cost by *reducing rounds* (cached local updates);
+//! this layer adds the orthogonal lever of *shrinking each round's
+//! payload* (Compressed-VFL, Castiglia et al. — PAPERS.md). Codecs are
+//! applied at the protocol boundary (`protocol::outbound_stats` /
+//! `Message::into_plain`): the workset cache on BOTH parties stores the
+//! *dequantized* statistics, so the staleness-weighting math is
+//! untouched and the two parties train against bit-identical cached
+//! tensors (the sender round-trips its own payload before caching).
+//!
+//! Codecs (`StatCodec`):
+//! - `Identity`   — raw little-endian f32 (4 B/elem, exact).
+//! - `Fp16`       — IEEE-754 binary16 with round-to-nearest-even and
+//!   saturation to ±65504. Error bound: relative ≤ 2⁻¹¹ (half ulp) in
+//!   the f16 normal range, absolute ≤ 2⁻²⁵ below it (2 B/elem).
+//! - `QuantInt8`  — per-row affine quantization. Each row stores
+//!   (scale, min) as f32 and one byte per element; error bound per
+//!   element: ≤ scale/2 where scale = (rowmax − rowmin)/255 (1 B/elem
+//!   + 8 B/row).
+//! - `TopK`       — magnitude sparsification: the k largest-|x| elements
+//!   as (u32 index, f32 value) pairs, remaining elements decode to 0.
+//!   Support recovery is exact; ties break toward the lower index
+//!   (8 B per kept element).
+//!
+//! Which codec actually runs is *negotiated*: each party advertises a
+//! capability bitmask in the protocol `Hello` frame and `negotiate`
+//! downgrades to `Identity` whenever the peer cannot decode the request
+//! — old peers (which never send `Hello`) keep the exact pre-compression
+//! byte stream. See DESIGN.md §5.
+
+use crate::tensor::Tensor;
+
+// -- codec selection --------------------------------------------------------
+
+/// Wire codec identity + parameters. `code()`/`param()` are the on-wire
+/// representation (see protocol frame layout); the capability bitmask
+/// used by the handshake is bit `code` per codec family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    Identity,
+    Fp16,
+    QuantInt8,
+    TopK(u32),
+}
+
+/// Human-readable list for error messages and --help text.
+pub const VALID_CODECS: &str = "none, fp16, int8, topk:<k>";
+
+impl CodecKind {
+    /// Parse a CLI/TOML codec spec. The error names every valid value.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(k) = s.strip_prefix("topk:") {
+            let k: u32 = k.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "invalid top-k count '{k}' in codec '{s}' — valid \
+                     values: {VALID_CODECS}"
+                )
+            })?;
+            anyhow::ensure!(
+                k > 0,
+                "top-k count must be ≥ 1 in codec '{s}' — valid values: \
+                 {VALID_CODECS}"
+            );
+            return Ok(CodecKind::TopK(k));
+        }
+        match s {
+            "none" | "identity" => Ok(CodecKind::Identity),
+            "fp16" => Ok(CodecKind::Fp16),
+            "int8" => Ok(CodecKind::QuantInt8),
+            _ => anyhow::bail!(
+                "unknown codec '{s}' — valid values: {VALID_CODECS}"
+            ),
+        }
+    }
+
+    /// Canonical spec string (`parse(label())` round-trips).
+    pub fn label(&self) -> String {
+        match self {
+            CodecKind::Identity => "none".to_string(),
+            CodecKind::Fp16 => "fp16".to_string(),
+            CodecKind::QuantInt8 => "int8".to_string(),
+            CodecKind::TopK(k) => format!("topk:{k}"),
+        }
+    }
+
+    /// On-wire codec family code.
+    pub fn code(&self) -> u8 {
+        match self {
+            CodecKind::Identity => 0,
+            CodecKind::Fp16 => 1,
+            CodecKind::QuantInt8 => 2,
+            CodecKind::TopK(_) => 3,
+        }
+    }
+
+    /// On-wire codec parameter (k for top-k, 0 otherwise).
+    pub fn param(&self) -> u32 {
+        match self {
+            CodecKind::TopK(k) => *k,
+            _ => 0,
+        }
+    }
+
+    /// Rebuild from the wire pair; rejects unknown codes and
+    /// non-canonical parameters (hostile-header guard — a decoded frame
+    /// must re-encode to the same bytes).
+    pub fn from_wire(code: u8, param: u32) -> anyhow::Result<Self> {
+        if code != 3 && param != 0 {
+            anyhow::bail!("codec code {code} takes no parameter, \
+                           got {param}");
+        }
+        match code {
+            0 => Ok(CodecKind::Identity),
+            1 => Ok(CodecKind::Fp16),
+            2 => Ok(CodecKind::QuantInt8),
+            3 => {
+                anyhow::ensure!(param > 0, "top-k frame with k = 0");
+                Ok(CodecKind::TopK(param))
+            }
+            _ => anyhow::bail!("unknown codec code {code}"),
+        }
+    }
+
+    /// True for codecs whose decode is not bit-exact.
+    pub fn is_lossy(&self) -> bool {
+        !matches!(self, CodecKind::Identity)
+    }
+}
+
+/// Capability bitmask this build can decode (bit per codec family).
+pub fn supported_mask() -> u32 {
+    (1 << CodecKind::Identity.code())
+        | (1 << CodecKind::Fp16.code())
+        | (1 << CodecKind::QuantInt8.code())
+        | (1 << CodecKind::TopK(1).code())
+}
+
+/// Pick the effective send codec given the peer's advertised mask.
+/// `None` means the peer never sent a `Hello` (pre-compression build):
+/// fall back to `Identity` so the byte stream stays decodable.
+pub fn negotiate(requested: CodecKind, peer_mask: Option<u32>)
+                 -> CodecKind {
+    match peer_mask {
+        Some(mask) if mask & (1 << requested.code()) != 0 => requested,
+        _ => CodecKind::Identity,
+    }
+}
+
+// -- compressed representation ----------------------------------------------
+
+/// One compressed statistics tensor, exactly as framed on the wire:
+/// codec-specific side data (`extra`, e.g. per-row scales) + packed
+/// payload. Produced by [`StatCodec::compress`], validated and
+/// reconstructed by [`StatCodec::decompress`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedStats {
+    pub kind: CodecKind,
+    pub shape: Vec<usize>,
+    pub extra: Vec<u8>,
+    pub payload: Vec<u8>,
+}
+
+impl CompressedStats {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes this block occupies inside a protocol frame:
+    /// codec(1) + param(4) + ndim(1) + dims(4·ndim) + extra_len(4)
+    /// + extra + payload.
+    pub fn wire_block_bytes(&self) -> usize {
+        1 + 4 + 1 + 4 * self.shape.len() + 4 + self.extra.len()
+            + self.payload.len()
+    }
+}
+
+/// Expected (extra, payload) byte lengths for a codec over `shape`, with
+/// overflow-checked arithmetic — called by the frame decoder BEFORE any
+/// allocation so hostile headers cannot drive huge reservations.
+pub fn expected_lens(kind: CodecKind, shape: &[usize])
+                     -> anyhow::Result<(usize, usize)> {
+    let numel: usize = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("shape overflow"))?;
+    let mul = |a: usize, b: usize| {
+        a.checked_mul(b)
+            .ok_or_else(|| anyhow::anyhow!("length overflow"))
+    };
+    match kind {
+        CodecKind::Identity => Ok((0, mul(numel, 4)?)),
+        CodecKind::Fp16 => Ok((0, mul(numel, 2)?)),
+        CodecKind::QuantInt8 => {
+            let rows = row_count(shape);
+            Ok((mul(rows, 8)?, numel))
+        }
+        CodecKind::TopK(k) => {
+            anyhow::ensure!(
+                (k as usize) <= numel.max(1),
+                "top-k frame keeps {k} of {numel} elements"
+            );
+            Ok((0, mul(k as usize, 8)?))
+        }
+    }
+}
+
+/// Rows of a [B, D…] statistics tensor (scalars count as one row).
+fn row_count(shape: &[usize]) -> usize {
+    shape.first().copied().unwrap_or(1)
+}
+
+// -- the codecs -------------------------------------------------------------
+
+/// A statistics codec: tensor → wire block → (dequantized) tensor.
+pub trait StatCodec {
+    fn kind(&self) -> CodecKind;
+    fn compress(&self, t: &Tensor) -> anyhow::Result<CompressedStats>;
+    fn decompress(&self, c: &CompressedStats) -> anyhow::Result<Tensor>;
+}
+
+/// Shared validation for decompress implementations.
+fn check_block(kind: CodecKind, c: &CompressedStats)
+               -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        c.kind == kind,
+        "codec mismatch: block is {}, codec is {}",
+        c.kind.label(),
+        kind.label()
+    );
+    let (extra, payload) = expected_lens(kind, &c.shape)?;
+    anyhow::ensure!(
+        c.extra.len() == extra && c.payload.len() == payload,
+        "corrupt {} block: extra {} (want {extra}), payload {} \
+         (want {payload})",
+        kind.label(),
+        c.extra.len(),
+        c.payload.len()
+    );
+    Ok(c.numel())
+}
+
+/// Raw little-endian f32 — exact, 4 B/elem. Exists so the codec lattice
+/// has a measurable baseline; negotiated-identity sends use the plain
+/// (pre-compression) frames instead of identity blocks.
+pub struct Identity;
+
+impl StatCodec for Identity {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Identity
+    }
+
+    fn compress(&self, t: &Tensor) -> anyhow::Result<CompressedStats> {
+        let v = t.as_f32()?;
+        Ok(CompressedStats {
+            kind: CodecKind::Identity,
+            shape: t.shape.clone(),
+            extra: Vec::new(),
+            payload: f32s_to_le_bytes(v),
+        })
+    }
+
+    fn decompress(&self, c: &CompressedStats) -> anyhow::Result<Tensor> {
+        check_block(CodecKind::Identity, c)?;
+        let data: Vec<f32> = c
+            .payload
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(Tensor::f32(c.shape.clone(), data))
+    }
+}
+
+/// IEEE-754 binary16, round-to-nearest-even, saturating to ±65504.
+pub struct Fp16;
+
+impl StatCodec for Fp16 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Fp16
+    }
+
+    fn compress(&self, t: &Tensor) -> anyhow::Result<CompressedStats> {
+        let v = t.as_f32()?;
+        let mut payload = Vec::with_capacity(v.len() * 2);
+        for &x in v {
+            payload.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+        Ok(CompressedStats {
+            kind: CodecKind::Fp16,
+            shape: t.shape.clone(),
+            extra: Vec::new(),
+            payload,
+        })
+    }
+
+    fn decompress(&self, c: &CompressedStats) -> anyhow::Result<Tensor> {
+        check_block(CodecKind::Fp16, c)?;
+        let data: Vec<f32> = c
+            .payload
+            .chunks_exact(2)
+            .map(|b| f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])))
+            .collect();
+        Ok(Tensor::f32(c.shape.clone(), data))
+    }
+}
+
+/// Per-row affine u8 quantization: x̂ = min + q·scale,
+/// scale = (max − min)/255.
+pub struct QuantInt8;
+
+impl StatCodec for QuantInt8 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::QuantInt8
+    }
+
+    fn compress(&self, t: &Tensor) -> anyhow::Result<CompressedStats> {
+        let v = t.as_f32()?;
+        let rows = row_count(&t.shape);
+        let d = if rows == 0 { 0 } else { v.len() / rows };
+        debug_assert_eq!(rows * d, v.len());
+        let mut extra = Vec::with_capacity(rows * 8);
+        let mut payload = Vec::with_capacity(v.len());
+        for r in 0..rows {
+            let row = &v[r * d..(r + 1) * d];
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &x in row {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            // Range arithmetic in f64: (hi − lo) can overflow f32 to
+            // infinity for extreme rows, which would silently collapse
+            // the row to a constant. The stored scale stays f32 (wire
+            // format), and quantization uses that stored value so the
+            // sender and receiver see identical math.
+            let mut scale = ((hi as f64 - lo as f64) / 255.0) as f32;
+            if !(scale.is_finite() && scale > 0.0) || !lo.is_finite() {
+                // Constant, empty or non-finite row: store it as the
+                // constant `lo` (or 0) with scale 0.
+                scale = 0.0;
+                lo = if lo.is_finite() { lo } else { 0.0 };
+            }
+            extra.extend_from_slice(&scale.to_le_bytes());
+            extra.extend_from_slice(&lo.to_le_bytes());
+            for &x in row {
+                let q = if scale > 0.0 {
+                    ((x as f64 - lo as f64) / scale as f64)
+                        .round()
+                        .clamp(0.0, 255.0)
+                } else {
+                    0.0
+                };
+                payload.push(q as u8);
+            }
+        }
+        Ok(CompressedStats {
+            kind: CodecKind::QuantInt8,
+            shape: t.shape.clone(),
+            extra,
+            payload,
+        })
+    }
+
+    fn decompress(&self, c: &CompressedStats) -> anyhow::Result<Tensor> {
+        let numel = check_block(CodecKind::QuantInt8, c)?;
+        let rows = row_count(&c.shape);
+        let d = if rows == 0 { 0 } else { numel / rows };
+        let mut data = Vec::with_capacity(numel);
+        for r in 0..rows {
+            let e = &c.extra[r * 8..r * 8 + 8];
+            let scale = f32::from_le_bytes(e[0..4].try_into().unwrap());
+            let lo = f32::from_le_bytes(e[4..8].try_into().unwrap());
+            for &q in &c.payload[r * d..(r + 1) * d] {
+                // f64 accumulate: q·scale alone can overflow f32 for
+                // extreme rows even though the result is in range.
+                data.push((lo as f64 + q as f64 * scale as f64) as f32);
+            }
+        }
+        Ok(Tensor::f32(c.shape.clone(), data))
+    }
+}
+
+/// Magnitude top-k sparsification: (u32 index, f32 value) pairs sorted
+/// by index; everything else decodes to zero.
+pub struct TopK {
+    pub k: u32,
+}
+
+impl StatCodec for TopK {
+    fn kind(&self) -> CodecKind {
+        CodecKind::TopK(self.k)
+    }
+
+    fn compress(&self, t: &Tensor) -> anyhow::Result<CompressedStats> {
+        let v = t.as_f32()?;
+        anyhow::ensure!(!v.is_empty(), "top-k needs a non-empty tensor");
+        anyhow::ensure!(self.k > 0, "top-k needs k ≥ 1");
+        let k = (self.k as usize).min(v.len());
+        let mut order: Vec<u32> = (0..v.len() as u32).collect();
+        // Descending |x|, ties toward the lower index (deterministic
+        // wire bytes → stable golden fixtures).
+        order.sort_unstable_by(|&a, &b| {
+            v[b as usize]
+                .abs()
+                .total_cmp(&v[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        let mut kept = order[..k].to_vec();
+        kept.sort_unstable();
+        let mut payload = Vec::with_capacity(k * 8);
+        for idx in kept {
+            payload.extend_from_slice(&idx.to_le_bytes());
+            payload.extend_from_slice(&v[idx as usize].to_le_bytes());
+        }
+        Ok(CompressedStats {
+            kind: CodecKind::TopK(k as u32),
+            shape: t.shape.clone(),
+            extra: Vec::new(),
+            payload,
+        })
+    }
+
+    fn decompress(&self, c: &CompressedStats) -> anyhow::Result<Tensor> {
+        let numel = check_block(c.kind, c)?;
+        let mut data = vec![0.0f32; numel];
+        let mut prev: Option<u32> = None;
+        for pair in c.payload.chunks_exact(8) {
+            let idx = u32::from_le_bytes(pair[0..4].try_into().unwrap());
+            let val = f32::from_le_bytes(pair[4..8].try_into().unwrap());
+            anyhow::ensure!(
+                (idx as usize) < numel,
+                "top-k index {idx} out of range for {numel} elements"
+            );
+            if let Some(p) = prev {
+                anyhow::ensure!(
+                    idx > p,
+                    "top-k indices must be strictly increasing"
+                );
+            }
+            prev = Some(idx);
+            data[idx as usize] = val;
+        }
+        Ok(Tensor::f32(c.shape.clone(), data))
+    }
+}
+
+// -- kind-level dispatch (no per-call boxing) --------------------------------
+
+/// Compress `t` with `kind`.
+pub fn compress_tensor(kind: CodecKind, t: &Tensor)
+                       -> anyhow::Result<CompressedStats> {
+    match kind {
+        CodecKind::Identity => Identity.compress(t),
+        CodecKind::Fp16 => Fp16.compress(t),
+        CodecKind::QuantInt8 => QuantInt8.compress(t),
+        CodecKind::TopK(k) => TopK { k }.compress(t),
+    }
+}
+
+/// Reconstruct the dequantized tensor from a wire block.
+pub fn decompress_stats(c: &CompressedStats) -> anyhow::Result<Tensor> {
+    match c.kind {
+        CodecKind::Identity => Identity.decompress(c),
+        CodecKind::Fp16 => Fp16.decompress(c),
+        CodecKind::QuantInt8 => QuantInt8.decompress(c),
+        CodecKind::TopK(k) => TopK { k }.decompress(c),
+    }
+}
+
+/// Boxed codec for trait-object users (benches, extension points).
+pub fn codec_for(kind: CodecKind) -> Box<dyn StatCodec> {
+    match kind {
+        CodecKind::Identity => Box::new(Identity),
+        CodecKind::Fp16 => Box::new(Fp16),
+        CodecKind::QuantInt8 => Box::new(QuantInt8),
+        CodecKind::TopK(k) => Box::new(TopK { k }),
+    }
+}
+
+// -- f16 conversion ----------------------------------------------------------
+//
+// Hand-rolled binary16 (the `half` crate is unavailable offline).
+// Encoding rounds to nearest-even and SATURATES overflow to ±65504
+// instead of ±inf — a quantized statistic should stay finite.
+
+/// f32 → binary16 bits (round-to-nearest-even, saturating).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf → saturate; NaN → canonical qNaN.
+        return if mant == 0 { sign | 0x7bff } else { sign | 0x7e00 };
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7bff; // overflow: clamp to ±65504
+    }
+    if unbiased >= -14 {
+        // Normal f16: drop 13 mantissa bits with round-to-nearest-even.
+        let mut out = (((unbiased + 15) as u32) << 10) | (mant >> 13);
+        let rem = mant & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+            out += 1; // may carry into the exponent — still well-formed
+        }
+        if out >= 0x7c00 {
+            return sign | 0x7bff; // rounded up past 65504: clamp
+        }
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16: value = m·2⁻²⁴ for integer m, round-to-even.
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (13 + (-14 - unbiased)) as u32;
+        let out = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let out = if rem > half || (rem == half && (out & 1) == 1) {
+            out + 1 // may round up into the normal range (0x0400): fine
+        } else {
+            out
+        };
+        return sign | out as u16;
+    }
+    sign // underflow to ±0
+}
+
+/// binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    const SUBNORMAL_SCALE: f32 = 5.960_464_5e-8; // 2⁻²⁴
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    match exp {
+        0 => {
+            let mag = mant as f32 * SUBNORMAL_SCALE;
+            if sign != 0 {
+                -mag
+            } else {
+                mag
+            }
+        }
+        0x1f => {
+            if mant == 0 {
+                if sign != 0 {
+                    f32::NEG_INFINITY
+                } else {
+                    f32::INFINITY
+                }
+            } else {
+                f32::NAN
+            }
+        }
+        e => f32::from_bits(sign | ((e + 127 - 15) << 23) | (mant << 13)),
+    }
+}
+
+// -- bulk LE helpers ---------------------------------------------------------
+
+#[cfg(target_endian = "little")]
+fn f32s_to_le_bytes(v: &[f32]) -> Vec<u8> {
+    // SAFETY: f32 is 4 bytes with no padding; the slice is valid for
+    // v.len() * 4 bytes of reads (mirrors protocol::write_f32s_le).
+    let bytes = unsafe {
+        std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4)
+    };
+    bytes.to_vec()
+}
+
+#[cfg(not(target_endian = "little"))]
+fn f32s_to_le_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2x4() -> Tensor {
+        Tensor::f32(vec![2, 4],
+                    vec![0.0, 1.5, -2.25, 100.0, -0.001, 7.0, 7.0, -7.5])
+    }
+
+    #[test]
+    fn parse_roundtrips_and_lists_valid_values_on_error() {
+        for s in ["none", "fp16", "int8", "topk:32"] {
+            let k = CodecKind::parse(s).unwrap();
+            assert_eq!(CodecKind::parse(&k.label()).unwrap(), k);
+        }
+        assert_eq!(CodecKind::parse("identity").unwrap(),
+                   CodecKind::Identity);
+        for bad in ["gzip", "topk:", "topk:0", "topk:-3", "Int8", ""] {
+            let e = CodecKind::parse(bad).unwrap_err().to_string();
+            for valid in ["none", "fp16", "int8", "topk:<k>"] {
+                assert!(e.contains(valid),
+                        "error for '{bad}' must list '{valid}': {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_code_param_roundtrip() {
+        for k in [CodecKind::Identity, CodecKind::Fp16,
+                  CodecKind::QuantInt8, CodecKind::TopK(17)] {
+            assert_eq!(CodecKind::from_wire(k.code(), k.param()).unwrap(),
+                       k);
+        }
+        assert!(CodecKind::from_wire(9, 0).is_err());
+        assert!(CodecKind::from_wire(3, 0).is_err(), "topk k=0 rejected");
+    }
+
+    #[test]
+    fn negotiation_downgrades_to_identity() {
+        let all = supported_mask();
+        assert_eq!(negotiate(CodecKind::QuantInt8, Some(all)),
+                   CodecKind::QuantInt8);
+        assert_eq!(negotiate(CodecKind::TopK(8), Some(all)),
+                   CodecKind::TopK(8));
+        // Peer without int8 support.
+        let no_int8 = all & !(1 << CodecKind::QuantInt8.code());
+        assert_eq!(negotiate(CodecKind::QuantInt8, Some(no_int8)),
+                   CodecKind::Identity);
+        // Pre-compression peer (no Hello at all).
+        assert_eq!(negotiate(CodecKind::Fp16, None), CodecKind::Identity);
+        assert_eq!(negotiate(CodecKind::Identity, None),
+                   CodecKind::Identity);
+    }
+
+    #[test]
+    fn identity_roundtrip_is_exact() {
+        let t = t2x4();
+        let c = compress_tensor(CodecKind::Identity, &t).unwrap();
+        assert_eq!(c.payload.len(), t.len() * 4);
+        assert_eq!(decompress_stats(&c).unwrap(), t);
+    }
+
+    #[test]
+    fn fp16_known_pairs() {
+        for (x, bits) in [(0.0f32, 0x0000u16), (1.0, 0x3c00),
+                          (0.5, 0x3800), (-2.0, 0xc000),
+                          (65504.0, 0x7bff)] {
+            assert_eq!(f32_to_f16_bits(x), bits, "encode {x}");
+            assert_eq!(f16_bits_to_f32(bits), x, "decode {x}");
+        }
+        // Saturation instead of infinity.
+        assert_eq!(f32_to_f16_bits(1e9), 0x7bff);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfbff);
+        assert_eq!(f16_bits_to_f32(0xfbff), -65504.0);
+        // Smallest subnormal.
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8);
+        // NaN stays NaN.
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn fp16_roundtrip_error_bound() {
+        let t = t2x4();
+        let c = compress_tensor(CodecKind::Fp16, &t).unwrap();
+        assert_eq!(c.payload.len(), t.len() * 2);
+        let back = decompress_stats(&c).unwrap();
+        for (x, y) in t.as_f32().unwrap().iter()
+                       .zip(back.as_f32().unwrap()) {
+            let bound = x.abs() * (1.0 / 1024.0) + 1e-7;
+            assert!((x - y).abs() <= bound, "{x} → {y}");
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bound_per_row() {
+        let t = t2x4();
+        let c = compress_tensor(CodecKind::QuantInt8, &t).unwrap();
+        assert_eq!(c.extra.len(), 2 * 8);
+        assert_eq!(c.payload.len(), t.len());
+        let back = decompress_stats(&c).unwrap();
+        let v = t.as_f32().unwrap();
+        let w = back.as_f32().unwrap();
+        for r in 0..2 {
+            let row = &v[r * 4..(r + 1) * 4];
+            let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let half_step = (hi - lo) / 255.0 / 2.0;
+            for (i, &x) in row.iter().enumerate() {
+                let y = w[r * 4 + i];
+                assert!((x - y).abs() <= half_step * 1.0001 + 1e-4,
+                        "row {r}: {x} → {y} (half-step {half_step})");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_survives_extreme_row_ranges() {
+        // (hi − lo) overflows f32 here; the f64 range path must still
+        // quantize the row instead of collapsing it to the constant lo.
+        let t = Tensor::f32(vec![1, 4], vec![3.0e38, -3.0e38, 0.0, 1.0e38]);
+        let c = compress_tensor(CodecKind::QuantInt8, &t).unwrap();
+        let back = decompress_stats(&c).unwrap();
+        let w = back.as_f32().unwrap();
+        assert!(w.iter().all(|x| x.is_finite()), "{w:?}");
+        let step = (3.0e38f64 - (-3.0e38f64)) / 255.0;
+        for (x, y) in t.as_f32().unwrap().iter().zip(w) {
+            assert!((*x as f64 - *y as f64).abs() <= step * 0.5001,
+                    "{x} → {y}");
+        }
+        // Endpoints land on the outermost grid points (within a couple
+        // ulp of the stored f32 scale — far inside the half-step bound
+        // asserted above), and crucially the row was NOT collapsed.
+        assert!(w[0] > 2.9e38 && w[1] < -2.9e38, "{w:?}");
+    }
+
+    #[test]
+    fn int8_constant_row_is_exact() {
+        let t = Tensor::f32(vec![2, 3], vec![4.5; 6]);
+        let c = compress_tensor(CodecKind::QuantInt8, &t).unwrap();
+        assert_eq!(decompress_stats(&c).unwrap(), t);
+    }
+
+    #[test]
+    fn topk_exact_support_recovery() {
+        let t = Tensor::f32(vec![2, 4],
+                            vec![0.1, -9.0, 0.2, 3.0, -0.3, 0.0, 8.0, 1.0]);
+        let c = compress_tensor(CodecKind::TopK(3), &t).unwrap();
+        assert_eq!(c.payload.len(), 3 * 8);
+        let back = decompress_stats(&c).unwrap();
+        // |−9| > |8| > |3| are the top 3; everything else is zero.
+        assert_eq!(back.as_f32().unwrap(),
+                   &[0.0, -9.0, 0.0, 3.0, 0.0, 0.0, 8.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_clamps_k_to_numel_and_breaks_ties_low_index() {
+        let t = Tensor::f32(vec![3], vec![2.0, -2.0, 1.0]);
+        let c = compress_tensor(CodecKind::TopK(100), &t).unwrap();
+        assert_eq!(c.kind, CodecKind::TopK(3));
+        assert_eq!(decompress_stats(&c).unwrap(), t);
+        let c1 = compress_tensor(CodecKind::TopK(1), &t).unwrap();
+        // Tie between |2.0| (idx 0) and |−2.0| (idx 1): idx 0 wins.
+        assert_eq!(decompress_stats(&c1).unwrap().as_f32().unwrap(),
+                   &[2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_decode_rejects_corrupt_indices() {
+        let t = Tensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut c = compress_tensor(CodecKind::TopK(2), &t).unwrap();
+        // Out-of-range index.
+        c.payload[0..4].copy_from_slice(&99u32.to_le_bytes());
+        assert!(decompress_stats(&c).is_err());
+        // Non-increasing indices.
+        let mut c = compress_tensor(CodecKind::TopK(2), &t).unwrap();
+        let first = c.payload[0..8].to_vec();
+        c.payload[8..16].copy_from_slice(&first);
+        assert!(decompress_stats(&c).is_err());
+    }
+
+    #[test]
+    fn decompress_rejects_length_mismatches() {
+        let t = t2x4();
+        for kind in [CodecKind::Identity, CodecKind::Fp16,
+                     CodecKind::QuantInt8, CodecKind::TopK(2)] {
+            let mut c = compress_tensor(kind, &t).unwrap();
+            c.payload.push(0);
+            assert!(decompress_stats(&c).is_err(), "{}", kind.label());
+        }
+        let mut c = compress_tensor(CodecKind::QuantInt8, &t).unwrap();
+        c.extra.truncate(8);
+        assert!(decompress_stats(&c).is_err());
+    }
+
+    #[test]
+    fn lossy_codecs_shrink_the_block() {
+        let t = Tensor::f32(vec![256, 64],
+                            (0..256 * 64).map(|i| (i as f32).sin())
+                                          .collect::<Vec<_>>());
+        let id = compress_tensor(CodecKind::Identity, &t).unwrap()
+            .wire_block_bytes();
+        for kind in [CodecKind::Fp16, CodecKind::QuantInt8,
+                     CodecKind::TopK(1024)] {
+            let c = compress_tensor(kind, &t).unwrap();
+            assert!(c.wire_block_bytes() < id,
+                    "{} block {} !< identity {}", kind.label(),
+                    c.wire_block_bytes(), id);
+        }
+    }
+
+    #[test]
+    fn expected_lens_guards_overflow() {
+        assert!(expected_lens(CodecKind::Identity,
+                              &[usize::MAX, usize::MAX]).is_err());
+        assert!(expected_lens(CodecKind::Fp16, &[usize::MAX / 2, 4])
+            .is_err());
+        assert!(expected_lens(CodecKind::TopK(100), &[4]).is_err(),
+                "k > numel rejected");
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::prop;
+
+    fn random_stats(rng: &mut crate::util::rng::Pcg) -> Tensor {
+        let rows = 1 + rng.gen_range(12) as usize;
+        let cols = 1 + rng.gen_range(24) as usize;
+        let scale = 10f32.powi(rng.gen_range(7) as i32 - 3);
+        let v: Vec<f32> = (0..rows * cols)
+            .map(|_| rng.next_normal() * scale)
+            .collect();
+        Tensor::f32(vec![rows, cols], v)
+    }
+
+    #[test]
+    fn prop_fp16_error_within_documented_bound() {
+        prop::check("fp16 bound", |rng| {
+            let t = random_stats(rng);
+            let c = compress_tensor(CodecKind::Fp16, &t)
+                .map_err(|e| e.to_string())?;
+            let back = decompress_stats(&c).map_err(|e| e.to_string())?;
+            for (x, y) in t.as_f32().unwrap().iter()
+                           .zip(back.as_f32().unwrap()) {
+                let bound = x.abs() / 1024.0 + 6e-8;
+                prop_assert!((x - y).abs() <= bound,
+                             "fp16 {x} → {y} exceeds {bound}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_int8_error_within_half_step() {
+        prop::check("int8 bound", |rng| {
+            let t = random_stats(rng);
+            let cols = t.shape[1];
+            let c = compress_tensor(CodecKind::QuantInt8, &t)
+                .map_err(|e| e.to_string())?;
+            let back = decompress_stats(&c).map_err(|e| e.to_string())?;
+            let v = t.as_f32().unwrap();
+            let w = back.as_f32().unwrap();
+            for r in 0..t.shape[0] {
+                let row = &v[r * cols..(r + 1) * cols];
+                let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi =
+                    row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let tol = (hi - lo) / 255.0 * 0.5001
+                    + hi.abs().max(lo.abs()) * 1e-6;
+                for (i, &x) in row.iter().enumerate() {
+                    let y = w[r * cols + i];
+                    prop_assert!((x - y).abs() <= tol,
+                                 "int8 row {r}: {x} → {y} (tol {tol})");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_topk_recovers_exact_support() {
+        prop::check("topk support", |rng| {
+            let t = random_stats(rng);
+            let n = t.len();
+            let k = 1 + rng.gen_range(n as u32);
+            let c = compress_tensor(CodecKind::TopK(k), &t)
+                .map_err(|e| e.to_string())?;
+            let back = decompress_stats(&c).map_err(|e| e.to_string())?;
+            let v = t.as_f32().unwrap();
+            let w = back.as_f32().unwrap();
+            let kept: Vec<usize> =
+                (0..n).filter(|&i| w[i] != 0.0).collect();
+            // Kept values are bit-exact.
+            for &i in &kept {
+                prop_assert!(v[i] == w[i], "kept value changed at {i}");
+            }
+            // No dropped |x| strictly exceeds a kept |x| (support is a
+            // true top-k set; zero-valued inputs may be "kept" as zeros).
+            let min_kept = kept
+                .iter()
+                .map(|&i| v[i].abs())
+                .fold(f32::INFINITY, f32::min);
+            for i in 0..n {
+                if w[i] == 0.0 && v[i] != 0.0 {
+                    prop_assert!(
+                        v[i].abs() <= min_kept,
+                        "dropped |{}| at {i} exceeds kept min {min_kept}",
+                        v[i]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sender_roundtrip_matches_receiver_decode() {
+        // The cache-consistency invariant: the tensor the sender caches
+        // (local roundtrip) is bit-identical to what the receiver
+        // decodes from the same block.
+        prop::check("sender/receiver agree", |rng| {
+            let t = random_stats(rng);
+            for kind in [CodecKind::Fp16, CodecKind::QuantInt8,
+                         CodecKind::TopK(1 + rng.gen_range(64))] {
+                let block = compress_tensor(kind, &t)
+                    .map_err(|e| e.to_string())?;
+                let sender = decompress_stats(&block)
+                    .map_err(|e| e.to_string())?;
+                let receiver = decompress_stats(&block)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(sender == receiver,
+                             "{} divergence", kind.label());
+            }
+            Ok(())
+        });
+    }
+}

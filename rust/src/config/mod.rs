@@ -9,6 +9,12 @@ pub mod toml;
 
 use self::toml::TomlDoc;
 
+use crate::compress::CodecKind;
+
+/// Valid `--algorithm` / `algorithm =` values, kept next to the parser
+/// so error messages can never drift from what it accepts.
+pub const VALID_ALGORITHMS: &str = "vanilla, fedbcd, celu (alias: celu-vfl)";
+
 /// Training algorithm, per the paper's §5.3 competitors.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
@@ -23,13 +29,16 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Parse a CLI/TOML algorithm name. The error lists every valid
+    /// value, so a typo is self-correcting at the terminal.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "vanilla" => Ok(Algorithm::Vanilla),
             "fedbcd" => Ok(Algorithm::FedBcd),
             "celu" | "celu-vfl" => Ok(Algorithm::CeluVfl),
-            _ => anyhow::bail!("unknown algorithm '{s}' \
-                                (vanilla|fedbcd|celu)"),
+            _ => anyhow::bail!(
+                "unknown algorithm '{s}' — valid values: {VALID_ALGORITHMS}"
+            ),
         }
     }
 
@@ -105,6 +114,9 @@ pub struct RunConfig {
     /// (cos 180° = −1 keeps every instance at its raw cosine weight...
     /// see `weighting_enabled`: 180 maps to the unweighted algorithm).
     pub xi_degrees: f64,
+    /// Wire codec for the exchanged statistics (`compress::CodecKind`),
+    /// negotiated down to identity when the peer can't decode it.
+    pub compress: CodecKind,
 
     // optimizer / training
     pub lr: f64,
@@ -142,6 +154,7 @@ impl RunConfig {
             r_local: 3,
             w_workset: 3,
             xi_degrees: 60.0,
+            compress: CodecKind::Identity,
             lr: 0.05,
             seed: 42,
             trials: 1,
@@ -252,6 +265,8 @@ impl RunConfig {
             r_local: doc.usize_or("r_local", base.r_local)?,
             w_workset: doc.usize_or("w_workset", base.w_workset)?,
             xi_degrees: doc.f64_or("xi_degrees", base.xi_degrees)?,
+            compress: CodecKind::parse(&doc.str_or(
+                "compress", &base.compress.label())?)?,
             lr: doc.f64_or("lr", base.lr)?,
             seed: doc.f64_or("seed", base.seed as f64)? as u64,
             trials: doc.usize_or("trials", base.trials)?,
@@ -335,6 +350,30 @@ mod tests {
         assert!((cfg.cos_xi() - 0.5).abs() < 1e-12);
         cfg.xi_degrees = 0.0;
         assert!((cfg.cos_xi() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_errors_list_every_valid_value() {
+        // A typo'd algorithm must be answered with the full menu, not a
+        // bare failure (same contract as CodecKind::parse).
+        let e = Algorithm::parse("celu_vfl").unwrap_err().to_string();
+        for valid in ["vanilla", "fedbcd", "celu", "celu-vfl"] {
+            assert!(e.contains(valid), "error must list '{valid}': {e}");
+        }
+        assert_eq!(Algorithm::parse("celu-vfl").unwrap(),
+                   Algorithm::CeluVfl);
+    }
+
+    #[test]
+    fn compress_config_parses_and_defaults() {
+        assert_eq!(RunConfig::quick().compress, CodecKind::Identity);
+        let cfg =
+            RunConfig::from_toml("compress = \"topk:48\"\n").unwrap();
+        assert_eq!(cfg.compress, CodecKind::TopK(48));
+        let cfg = RunConfig::from_toml("compress = \"int8\"\n").unwrap();
+        assert_eq!(cfg.compress, CodecKind::QuantInt8);
+        let e = RunConfig::from_toml("compress = \"zstd\"\n").unwrap_err();
+        assert!(e.to_string().contains("topk:<k>"), "{e}");
     }
 
     #[test]

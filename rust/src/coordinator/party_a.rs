@@ -12,14 +12,22 @@
 //! entry through one `Arc` allocation, local-update sampling returns
 //! handles instead of deep clones, and gathers recycle their destination
 //! buffers across rounds.
+//!
+//! When `cfg.compress` asks for a wire codec, A initiates the `Hello`
+//! capabilities handshake before round 0 and then routes every outgoing
+//! statistic through `protocol::outbound_stats` (DESIGN.md §5): the
+//! workset caches the *dequantized* round-trip so A trains on exactly
+//! the tensors B decodes. With the identity codec no `Hello` is sent
+//! and the wire + cache behaviour is byte-identical to PR 1.
 
 use std::sync::{Arc, Mutex};
 
+use crate::compress::{self, CodecKind};
 use crate::config::RunConfig;
 use crate::data::batcher::{gather_a_with, BatchCursor, GatherScratch};
 use crate::data::PartyAData;
 use crate::metrics::CosineRecorder;
-use crate::protocol::Message;
+use crate::protocol::{outbound_stats, Lane, Message};
 use crate::runtime::{ArtifactSet, PartyARuntime};
 use crate::transport::Transport;
 use crate::workset::{SharedWorkset, WorksetStats, WorksetTable};
@@ -102,16 +110,46 @@ pub fn run_party_a(
     let eval_batches = eval_batch_count(cfg, test.n, batch);
     let mut comm_rounds = 0u64;
     let result: anyhow::Result<()> = (|| {
+        // Capabilities handshake (DESIGN.md §5): only when compression
+        // is requested — an identity config keeps the wire byte stream
+        // exactly as before, so pre-handshake peers interoperate.
+        let codec = if cfg.compress != CodecKind::Identity {
+            transport.send(Message::Hello {
+                codecs: compress::supported_mask(),
+            })?;
+            match transport.recv()? {
+                Message::Hello { codecs } => {
+                    let eff =
+                        compress::negotiate(cfg.compress, Some(codecs));
+                    if eff != cfg.compress {
+                        log::warn!(
+                            "peer cannot decode codec {} (mask {codecs:#x}) \
+                             — sending uncompressed",
+                            cfg.compress.label()
+                        );
+                    }
+                    eff
+                }
+                Message::Shutdown => return Ok(()),
+                other => anyhow::bail!(
+                    "expected Hello reply, got {:?}", other.tag()),
+            }
+        } else {
+            CodecKind::Identity
+        };
         for round in 0..cfg.max_rounds as u64 {
             let idx = cursor.next_indices();
             let xa = gather_a_with(&train, &idx, &mut scratch);
             let za = runtime.lock().unwrap().forward(&xa)?;
-            // The message and the workset entry below share za's
-            // allocation — the clone is a refcount bump, not a copy.
-            transport.send(Message::Activation { round,
-                                                 tensor: za.clone() })?;
+            // Identity codec: the message and the workset entry below
+            // share za's allocation — the clone is a refcount bump, not
+            // a copy. Lossy codec: `za` is rebound to the dequantized
+            // round-trip so the cache matches what B decodes.
+            let (msg, za) =
+                outbound_stats(codec, Lane::Activation, round, za)?;
+            transport.send(msg)?;
             // Block on ∇Z_A (the local worker keeps training meanwhile).
-            let dza = match transport.recv()? {
+            let dza = match transport.recv()?.into_plain()? {
                 Message::Derivative { round: r, tensor } => {
                     anyhow::ensure!(r == round,
                                     "protocol skew: got derivative {r}, \
@@ -134,10 +172,9 @@ pub fn run_party_a(
                         .collect();
                     let xa = gather_a_with(&test, &idx, &mut scratch);
                     let za = runtime.lock().unwrap().forward(&xa)?;
-                    transport.send(Message::EvalActivation {
-                        round: k as u64,
-                        tensor: za,
-                    })?;
+                    let (msg, _) = outbound_stats(
+                        codec, Lane::EvalActivation, k as u64, za)?;
+                    transport.send(msg)?;
                 }
             }
         }

@@ -10,15 +10,23 @@
 //! tensors are `Arc`-shared with the outgoing message rather than copied,
 //! and the local worker can already consume the fresh statistics while
 //! the derivative is still occupying the link (DESIGN.md §4).
+//!
+//! B answers the `Hello` capabilities handshake whenever A initiates it
+//! — even when B itself is configured uncompressed — and routes its
+//! derivative sends through `protocol::outbound_stats` under the
+//! negotiated codec, caching the dequantized round-trip (DESIGN.md §5).
+//! A plain first frame means a pre-handshake peer: B stays on the
+//! identity codec and the wire behaviour is byte-identical to PR 1.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::compress::{self, CodecKind};
 use crate::config::RunConfig;
 use crate::data::batcher::{gather_b_with, BatchCursor, GatherScratch};
 use crate::data::PartyBData;
 use crate::metrics::{auc_exact, CosineRecorder, SeriesPoint};
-use crate::protocol::Message;
+use crate::protocol::{outbound_stats, Lane, Message};
 use crate::runtime::{ArtifactSet, PartyBRuntime};
 use crate::transport::Transport;
 use crate::util::stats::Ema;
@@ -120,10 +128,50 @@ pub fn run_party_b(
     let mut comm_rounds = 0u64;
 
     let result: anyhow::Result<()> = (|| {
+        // Handshake: A speaks first. A `Hello` is answered with our
+        // capabilities (whether or not we were configured to compress);
+        // any other first frame is a pre-handshake peer and is replayed
+        // into round 0 below with the identity codec.
+        let mut replay: Option<Message> = None;
+        let codec = match transport.recv()? {
+            Message::Hello { codecs: peer } => {
+                transport.send(Message::Hello {
+                    codecs: compress::supported_mask(),
+                })?;
+                let eff = compress::negotiate(cfg.compress, Some(peer));
+                if eff != cfg.compress {
+                    log::warn!(
+                        "peer cannot decode codec {} (mask {peer:#x}) — \
+                         sending uncompressed",
+                        cfg.compress.label()
+                    );
+                }
+                eff
+            }
+            first => {
+                if cfg.compress != CodecKind::Identity {
+                    // B cannot initiate (A speaks first in the lock-step
+                    // protocol): a plain first frame means A predates or
+                    // didn't request compression, so B's request is
+                    // dropped — loudly, not silently.
+                    log::warn!(
+                        "compress = {} requested but peer opened without \
+                         a handshake — sending uncompressed",
+                        cfg.compress.label()
+                    );
+                }
+                replay = Some(first);
+                CodecKind::Identity
+            }
+        };
         for round in 0..cfg.max_rounds as u64 {
             let idx = cursor.next_indices();
             let (xb, y) = gather_b_with(&train, &idx, &mut scratch);
-            let za = match transport.recv()? {
+            let msg = match replay.take() {
+                Some(m) => m,
+                None => transport.recv()?,
+            };
+            let za = match msg.into_plain()? {
                 Message::Activation { round: r, tensor } => {
                     anyhow::ensure!(r == round,
                                     "protocol skew: got activation {r}, \
@@ -144,11 +192,14 @@ pub fn run_party_b(
                     cfg.compute_delay_s));
             }
             loss_ema.lock().unwrap().push(loss as f64);
-            // Cache first (handle share, no payload copy), then occupy
-            // the WAN: the local worker trains on round `i`'s statistics
-            // while ∇Z_A is still in flight.
-            workset.insert(round, idx, za, dza.clone());
-            transport.send(Message::Derivative { round, tensor: dza })?;
+            // Cache first (identity: handle share, no payload copy;
+            // lossy: the dequantized round-trip A will also see), then
+            // occupy the WAN: the local worker trains on round `i`'s
+            // statistics while ∇Z_A is still in flight.
+            let (dmsg, dza) =
+                outbound_stats(codec, Lane::Derivative, round, dza)?;
+            workset.insert(round, idx, za, dza);
+            transport.send(dmsg)?;
             comm_rounds = round + 1;
 
             // Eval lane + stop decision.
@@ -160,7 +211,7 @@ pub fn run_party_b(
                         ..((k + 1) * batch) as u32)
                         .collect();
                     let (xb, y) = gather_b_with(&test, &idx, &mut scratch);
-                    let za = match transport.recv()? {
+                    let za = match transport.recv()?.into_plain()? {
                         Message::EvalActivation { round: r, tensor } => {
                             anyhow::ensure!(r == k as u64,
                                             "eval lane skew: {r} != {k}");

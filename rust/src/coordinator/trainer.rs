@@ -105,6 +105,8 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
         local_updates: b_report.local_updates,
         bytes_a_to_b: a_stats.bytes,
         bytes_b_to_a: b_stats.bytes,
+        raw_bytes_a_to_b: a_stats.raw_bytes,
+        raw_bytes_b_to_a: b_stats.raw_bytes,
         comm_busy: a_stats.busy + b_stats.busy,
         wall,
         compute_busy: set.clock_a.busy() + set.clock_b.busy(),

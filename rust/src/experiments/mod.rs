@@ -11,6 +11,7 @@
 //! | Fig 6 end-to-end time-to-AUC           | `endtoend::fig6` |
 //! | Thm 1 ρ-vs-staleness probe             | `theory::rho_probe` |
 //! | §1 comm-fraction claim                 | `endtoend` comm column |
+//! | wire-compression sweep (DESIGN.md §5)  | `ablation::sweep_compress`, `ablation::compression_bytes_per_round` |
 
 pub mod ablation;
 pub mod endtoend;

@@ -36,11 +36,13 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 .iter()
                 .map(|p| p.auc)
                 .fold(0.0f64, f64::max);
+            let stats = transport.stats();
             println!(
                 "party B done: rounds={} local_updates={} best_auc={:.4} \
-                 sent={}B stop={:?}",
+                 sent={}B (raw {}B, ratio {:.2}) stop={:?}",
                 report.comm_rounds, report.local_updates, best,
-                transport.stats().bytes, report.stop_reason
+                stats.bytes, stats.raw_bytes, stats.compression_ratio(),
+                report.stop_reason
             );
         }
         "a" => {
@@ -53,10 +55,12 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 Arc::new(data.test_a),
                 transport.clone(),
             )?;
+            let stats = transport.stats();
             println!(
-                "party A done: rounds={} local_updates={} sent={}B",
-                report.comm_rounds, report.local_updates,
-                transport.stats().bytes
+                "party A done: rounds={} local_updates={} sent={}B \
+                 (raw {}B, ratio {:.2})",
+                report.comm_rounds, report.local_updates, stats.bytes,
+                stats.raw_bytes, stats.compression_ratio()
             );
         }
         other => anyhow::bail!("role must be 'a' or 'b', got '{other}'"),

@@ -4,10 +4,12 @@
 //! Learning Training via Cache-enabled Local Updates"* (Fu et al., PVLDB
 //! 15(10), 2022) as a three-layer Rust + JAX + Pallas system:
 //!
-//! - **L3 (this crate)** — the VFL coordinator: two-party protocol,
-//!   simulated-WAN / TCP transports, the workset table with round-robin
-//!   local sampling, comm/local worker overlap, metrics and the
-//!   experiment harnesses.
+//! - **L3 (this crate)** — the VFL coordinator: two-party protocol with
+//!   negotiated wire compression for the exchanged statistics
+//!   (`compress`: fp16 / int8 / top-k codecs, DESIGN.md §5),
+//!   simulated-WAN / TCP transports with raw-vs-wire byte accounting,
+//!   the workset table with round-robin local sampling, comm/local
+//!   worker overlap, metrics and the experiment harnesses.
 //! - **L2 (python/compile)** — JAX step functions (WDL/DSSM bottoms +
 //!   tops, AdaGrad), AOT-lowered once to HLO-text artifacts.
 //! - **L1 (python/compile/kernels)** — Pallas kernels for the
@@ -19,6 +21,7 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -11,6 +11,7 @@
 //!   celu-vfl party --role b --listen 0.0.0.0:7000 --config cfg.toml
 //!   celu-vfl info --artifacts artifacts
 
+use celu_vfl::compress::CodecKind;
 use celu_vfl::config::{Algorithm, RunConfig};
 use celu_vfl::coordinator::run_training;
 use celu_vfl::util::cli::Cli;
@@ -64,6 +65,9 @@ fn apply_overrides(cfg: &mut RunConfig,
     if ov(args.get("xi")) {
         cfg.xi_degrees = args.get_f64("xi")?;
     }
+    if ov(args.get("compress")) {
+        cfg.compress = CodecKind::parse(args.get("compress"))?;
+    }
     if ov(args.get("rounds")) {
         cfg.max_rounds = args.get_usize("rounds")?;
     }
@@ -92,6 +96,8 @@ fn train_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("r", "-", "local updates per cached batch (R)")
         .opt("w", "-", "workset capacity (W)")
         .opt("xi", "-", "weighting threshold ξ in degrees (180 = off)")
+        .opt("compress", "-",
+             "statistics wire codec: none | fp16 | int8 | topk:<k>")
         .opt("rounds", "-", "max communication rounds")
         .opt("lr", "-", "AdaGrad learning rate")
         .opt("seed", "-", "PRNG seed")
@@ -114,9 +120,11 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     let args = cli.parse(argv)?;
     let cfg = load_config(&args)?;
     log::info!(
-        "training {}/{} algo={} R={} W={} ξ={}° lr={} rounds={}",
+        "training {}/{} algo={} R={} W={} ξ={}° compress={} lr={} \
+         rounds={}",
         cfg.model, cfg.dataset, cfg.algorithm.name(), cfg.effective_r(),
-        cfg.effective_w(), cfg.xi_degrees, cfg.lr, cfg.max_rounds
+        cfg.effective_w(), cfg.xi_degrees, cfg.compress.label(), cfg.lr,
+        cfg.max_rounds
     );
     let outcome = run_training(&cfg)?;
     let rec = &outcome.record;

@@ -73,9 +73,13 @@ pub struct RunRecord {
     /// Exact updates / local updates applied (Party B counts).
     pub exact_updates: u64,
     pub local_updates: u64,
-    /// Bytes sent per party.
+    /// Bytes sent per party (wire size: what occupied the link).
     pub bytes_a_to_b: u64,
     pub bytes_b_to_a: u64,
+    /// What the same traffic would have occupied uncompressed (equal to
+    /// the wire bytes when no codec is negotiated — DESIGN.md §5).
+    pub raw_bytes_a_to_b: u64,
+    pub raw_bytes_b_to_a: u64,
     /// Link busy time (sender side, both directions summed).
     pub comm_busy: Duration,
     /// Total wall time of the run.
@@ -110,6 +114,26 @@ impl RunRecord {
             return 0.0;
         }
         self.comm_busy.as_secs_f64() / self.wall.as_secs_f64()
+    }
+
+    /// Achieved wire compression ratio across both directions (1.0 when
+    /// uncompressed or idle).
+    pub fn compression_ratio(&self) -> f64 {
+        let wire = self.bytes_a_to_b + self.bytes_b_to_a;
+        if wire == 0 {
+            return 1.0;
+        }
+        (self.raw_bytes_a_to_b + self.raw_bytes_b_to_a) as f64
+            / wire as f64
+    }
+
+    /// Wire bytes per communication round, both directions summed.
+    pub fn wire_bytes_per_round(&self) -> f64 {
+        if self.comm_rounds == 0 {
+            return 0.0;
+        }
+        (self.bytes_a_to_b + self.bytes_b_to_a) as f64
+            / self.comm_rounds as f64
     }
 
     /// JSON dump for results/ artifacts.
@@ -147,6 +171,9 @@ impl RunRecord {
             ("local_updates", num(self.local_updates as f64)),
             ("bytes_a_to_b", num(self.bytes_a_to_b as f64)),
             ("bytes_b_to_a", num(self.bytes_b_to_a as f64)),
+            ("raw_bytes_a_to_b", num(self.raw_bytes_a_to_b as f64)),
+            ("raw_bytes_b_to_a", num(self.raw_bytes_b_to_a as f64)),
+            ("compression_ratio", num(self.compression_ratio())),
             ("comm_busy_s", num(self.comm_busy.as_secs_f64())),
             ("compute_busy_s", num(self.compute_busy.as_secs_f64())),
             ("wall_s", num(self.wall.as_secs_f64())),
@@ -207,6 +234,20 @@ mod tests {
         assert!((s[3] - 0.7).abs() < 1e-6);
         assert!((s[7] - 0.8).abs() < 1e-6);
         assert!(CosineRecorder::default().summary().is_none());
+    }
+
+    #[test]
+    fn compression_ratio_and_bytes_per_round() {
+        let mut r = RunRecord::default();
+        assert_eq!(r.compression_ratio(), 1.0);
+        assert_eq!(r.wire_bytes_per_round(), 0.0);
+        r.comm_rounds = 10;
+        r.bytes_a_to_b = 400;
+        r.bytes_b_to_a = 600;
+        r.raw_bytes_a_to_b = 1600;
+        r.raw_bytes_b_to_a = 2400;
+        assert!((r.compression_ratio() - 4.0).abs() < 1e-12);
+        assert!((r.wire_bytes_per_round() - 100.0).abs() < 1e-12);
     }
 
     #[test]

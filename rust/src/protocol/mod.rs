@@ -12,6 +12,18 @@
 //! `frame_len` counts everything after itself. Tensor-less messages stop
 //! after `round`.
 //!
+//! Two frame kinds extend the original five (DESIGN.md §5), leaving the
+//! original byte streams untouched:
+//!   [… tag=6][u64 0][u32 codec_mask]                      — `Hello`
+//!   [… tag=7][u64 round][u8 lane][codec block]            — `Compressed`
+//! where the codec block is
+//!   [u8 codec][u32 param][u8 ndim][u32 dim…][u32 extra_len][extra][payload]
+//! (`compress::CompressedStats`). `Hello` advertises the codecs a peer
+//! can decode; `outbound_stats` / `into_plain` apply the negotiated
+//! codec at this boundary so the rest of the stack only sees plain
+//! statistics tensors — peers that never send `Hello` are spoken to in
+//! the original uncompressed format.
+//!
 //! The codec is zero-copy-oriented (DESIGN.md §4): encoding reserves the
 //! exact frame size once and bulk-copies the payload as a single memcpy on
 //! little-endian targets (with a per-element fallback elsewhere — the wire
@@ -21,6 +33,7 @@
 //! allocation at all. The golden-bytes fixtures below pin the on-wire
 //! format to the original element-wise codec byte-for-byte.
 
+use crate::compress::{self, CodecKind, CompressedStats};
 use crate::tensor::{Data, DType, Tensor};
 
 /// Protocol messages. `round` is the communication-round timestamp `i`
@@ -37,6 +50,43 @@ pub enum Message {
     EvalAck { round: u64 },
     /// Either direction: orderly end of training.
     Shutdown,
+    /// Capabilities handshake: the codec families this peer can decode
+    /// (bit per `CodecKind::code`). Sent before round 0 when a party
+    /// wants compression; never sent otherwise, so pre-compression
+    /// peers observe the original byte stream.
+    Hello { codecs: u32 },
+    /// One statistics tensor in compressed form on `lane`. Decompressed
+    /// at the protocol boundary via [`Message::into_plain`].
+    Compressed { round: u64, lane: Lane, stats: CompressedStats },
+}
+
+/// Which statistics lane a compressed frame travels on. Exactly the
+/// three tensor-bearing messages — compression cannot widen the privacy
+/// surface (§4.2), it can only re-encode what was already representable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    Activation,
+    Derivative,
+    EvalActivation,
+}
+
+impl Lane {
+    fn tag(self) -> u8 {
+        match self {
+            Lane::Activation => TAG_ACT,
+            Lane::Derivative => TAG_DER,
+            Lane::EvalActivation => TAG_EVAL_ACT,
+        }
+    }
+
+    fn from_tag(t: u8) -> anyhow::Result<Lane> {
+        match t {
+            TAG_ACT => Ok(Lane::Activation),
+            TAG_DER => Ok(Lane::Derivative),
+            TAG_EVAL_ACT => Ok(Lane::EvalActivation),
+            _ => anyhow::bail!("invalid compressed lane tag {t}"),
+        }
+    }
 }
 
 const TAG_ACT: u8 = 1;
@@ -44,6 +94,8 @@ const TAG_DER: u8 = 2;
 const TAG_EVAL_ACT: u8 = 3;
 const TAG_EVAL_ACK: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_HELLO: u8 = 6;
+const TAG_COMP: u8 = 7;
 
 impl Message {
     pub fn tag(&self) -> u8 {
@@ -53,6 +105,8 @@ impl Message {
             Message::EvalActivation { .. } => TAG_EVAL_ACT,
             Message::EvalAck { .. } => TAG_EVAL_ACK,
             Message::Shutdown => TAG_SHUTDOWN,
+            Message::Hello { .. } => TAG_HELLO,
+            Message::Compressed { .. } => TAG_COMP,
         }
     }
 
@@ -70,8 +124,9 @@ impl Message {
             Message::Activation { round, .. }
             | Message::Derivative { round, .. }
             | Message::EvalActivation { round, .. }
-            | Message::EvalAck { round } => *round,
-            Message::Shutdown => 0,
+            | Message::EvalAck { round }
+            | Message::Compressed { round, .. } => *round,
+            Message::Shutdown | Message::Hello { .. } => 0,
         }
     }
 
@@ -81,11 +136,54 @@ impl Message {
     /// (§Perf in EXPERIMENTS.md).
     pub fn wire_bytes(&self) -> usize {
         let body = 1 + 8
-            + self
-                .tensor()
-                .map(|t| 2 + 4 * t.shape.len() + t.size_bytes())
-                .unwrap_or(0);
+            + match self {
+                Message::Hello { .. } => 4,
+                Message::Compressed { stats, .. } => {
+                    1 + stats.wire_block_bytes()
+                }
+                _ => self
+                    .tensor()
+                    .map(|t| 2 + 4 * t.shape.len() + t.size_bytes())
+                    .unwrap_or(0),
+            };
         body + 4
+    }
+
+    /// Bytes the message would occupy uncompressed — the plain-frame
+    /// size of the statistics a `Compressed` frame carries, and exactly
+    /// `wire_bytes` for everything else. `LinkStats` accumulates both
+    /// so transports can report their compression ratio.
+    pub fn raw_bytes(&self) -> usize {
+        match self {
+            Message::Compressed { stats, .. } => {
+                4 + 1 + 8 + 2 + 4 * stats.shape.len() + 4 * stats.numel()
+            }
+            _ => self.wire_bytes(),
+        }
+    }
+
+    /// Resolve a `Compressed` frame into its plain equivalent by
+    /// dequantizing the payload; every other message passes through.
+    /// Receivers call this on each frame, so past this boundary the
+    /// stack only ever sees plain statistics tensors.
+    pub fn into_plain(self) -> anyhow::Result<Message> {
+        match self {
+            Message::Compressed { round, lane, stats } => {
+                let tensor = compress::decompress_stats(&stats)?;
+                Ok(match lane {
+                    Lane::Activation => {
+                        Message::Activation { round, tensor }
+                    }
+                    Lane::Derivative => {
+                        Message::Derivative { round, tensor }
+                    }
+                    Lane::EvalActivation => {
+                        Message::EvalActivation { round, tensor }
+                    }
+                })
+            }
+            m => Ok(m),
+        }
     }
 
     // -- codec -------------------------------------------------------------
@@ -104,6 +202,25 @@ impl Message {
                 Data::F32(v) => write_f32s_le(out, v),
                 Data::I32(v) => write_i32s_le(out, v),
             }
+        }
+        match self {
+            Message::Hello { codecs } => {
+                out.extend_from_slice(&codecs.to_le_bytes());
+            }
+            Message::Compressed { lane, stats, .. } => {
+                out.push(lane.tag());
+                out.push(stats.kind.code());
+                out.extend_from_slice(&stats.kind.param().to_le_bytes());
+                out.push(stats.shape.len() as u8);
+                for &d in &stats.shape {
+                    out.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                out.extend_from_slice(
+                    &(stats.extra.len() as u32).to_le_bytes());
+                out.extend_from_slice(&stats.extra);
+                out.extend_from_slice(&stats.payload);
+            }
+            _ => {}
         }
     }
 
@@ -136,6 +253,47 @@ impl Message {
         let msg = match tag {
             TAG_SHUTDOWN => Message::Shutdown,
             TAG_EVAL_ACK => Message::EvalAck { round },
+            TAG_HELLO => Message::Hello { codecs: r.u32()? },
+            TAG_COMP => {
+                let lane = Lane::from_tag(r.u8()?)?;
+                let code = r.u8()?;
+                let param = r.u32()?;
+                let kind = CodecKind::from_wire(code, param)?;
+                let ndim = r.u8()? as usize;
+                let mut shape = Vec::with_capacity(ndim);
+                for _ in 0..ndim {
+                    shape.push(r.u32()? as usize);
+                }
+                // Expected lengths are derived (overflow-checked) from
+                // the header BEFORE any payload-sized allocation — the
+                // same hostile-header discipline as the plain path.
+                let (extra_len, payload_len) =
+                    compress::expected_lens(kind, &shape)?;
+                let declared = r.u32()? as usize;
+                if declared != extra_len {
+                    anyhow::bail!(
+                        "compressed frame declares {declared} extra \
+                         bytes, codec wants {extra_len}"
+                    );
+                }
+                let want = extra_len
+                    .checked_add(payload_len)
+                    .ok_or_else(|| anyhow::anyhow!("frame size overflow"))?;
+                let remaining = buf.len() - r.pos;
+                if remaining != want {
+                    anyhow::bail!(
+                        "compressed frame payload mismatch: {remaining} \
+                         bytes left, codec wants {want}"
+                    );
+                }
+                let extra = r.take(extra_len)?.to_vec();
+                let payload = r.take(payload_len)?.to_vec();
+                Message::Compressed {
+                    round,
+                    lane,
+                    stats: CompressedStats { kind, shape, extra, payload },
+                }
+            }
             TAG_ACT | TAG_DER | TAG_EVAL_ACT => {
                 let dtype = DType::from_code(r.u8()?)?;
                 let ndim = r.u8()? as usize;
@@ -176,6 +334,40 @@ impl Message {
         }
         Ok(msg)
     }
+}
+
+/// Sender-side protocol boundary for the statistics lanes: build the
+/// outgoing message for `tensor` under the *negotiated* `codec`, and
+/// return the tensor the sender must keep using locally (workset cache,
+/// exact math).
+///
+/// - `Identity` (or a non-f32/empty tensor) produces the original plain
+///   frame and hands back the same `Arc` handle — the PR-1 zero-copy
+///   path, byte-identical on the wire.
+/// - Lossy codecs produce a `Compressed` frame and hand back the
+///   *dequantized* round-trip, so the sender's cache matches what the
+///   receiver decodes bit-for-bit and staleness weighting sees the same
+///   statistics on both parties.
+pub fn outbound_stats(codec: CodecKind, lane: Lane, round: u64,
+                      tensor: Tensor)
+                      -> anyhow::Result<(Message, Tensor)> {
+    if !codec.is_lossy() || tensor.as_f32().is_err() || tensor.is_empty() {
+        let msg = match lane {
+            Lane::Activation => {
+                Message::Activation { round, tensor: tensor.clone() }
+            }
+            Lane::Derivative => {
+                Message::Derivative { round, tensor: tensor.clone() }
+            }
+            Lane::EvalActivation => {
+                Message::EvalActivation { round, tensor: tensor.clone() }
+            }
+        };
+        return Ok((msg, tensor));
+    }
+    let stats = compress::compress_tensor(codec, &tensor)?;
+    let dequantized = compress::decompress_stats(&stats)?;
+    Ok((Message::Compressed { round, lane, stats }, dequantized))
 }
 
 // -- bulk payload transcoding ----------------------------------------------
@@ -409,14 +601,122 @@ mod tests {
     #[test]
     fn privacy_surface_is_closed() {
         // Compile-time property documented as a test: the message enum
-        // has exactly the five variants above — adding a raw-feature or
+        // has exactly these variants — adding a raw-feature or
         // weight-transfer lane would have to extend this match, which is
-        // the review point for the §4.2 security argument.
+        // the review point for the §4.2 security argument. `Compressed`
+        // does not widen the surface: `Lane` is closed over the three
+        // statistics lanes, and `Hello` carries only a codec bitmask.
         let m = Message::Shutdown;
         match m {
             Message::Activation { .. } | Message::Derivative { .. }
             | Message::EvalActivation { .. } | Message::EvalAck { .. }
-            | Message::Shutdown => {}
+            | Message::Shutdown | Message::Hello { .. } => {}
+            Message::Compressed { lane, .. } => match lane {
+                Lane::Activation | Lane::Derivative
+                | Lane::EvalActivation => {}
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_hello_and_compressed_variants() {
+        let tensor = sample_tensor();
+        let mut msgs = vec![Message::Hello { codecs: 0b1011 }];
+        for kind in [CodecKind::Fp16, CodecKind::QuantInt8,
+                     CodecKind::TopK(3)] {
+            let stats =
+                crate::compress::compress_tensor(kind, &tensor).unwrap();
+            msgs.push(Message::Compressed {
+                round: 42,
+                lane: Lane::Derivative,
+                stats,
+            });
+        }
+        for m in msgs {
+            let dec = Message::decode(&m.encode()).unwrap();
+            assert_eq!(dec, m);
+            assert_eq!(m.wire_bytes(), m.encode().len() + 4);
+        }
+    }
+
+    #[test]
+    fn into_plain_dequantizes_compressed_frames() {
+        let tensor = Tensor::f32(vec![1, 4], vec![0.0, 1.0, 2.0, 3.0]);
+        let stats = crate::compress::compress_tensor(
+            CodecKind::QuantInt8, &tensor).unwrap();
+        let expect = crate::compress::decompress_stats(&stats).unwrap();
+        let m = Message::Compressed {
+            round: 5,
+            lane: Lane::Activation,
+            stats,
+        };
+        match m.into_plain().unwrap() {
+            Message::Activation { round, tensor: t } => {
+                assert_eq!(round, 5);
+                assert_eq!(t, expect);
+            }
+            other => panic!("wrong lane: {:?}", other.tag()),
+        }
+        // Non-compressed messages pass through untouched.
+        let plain = Message::EvalAck { round: 9 };
+        assert_eq!(plain.clone().into_plain().unwrap(), plain);
+    }
+
+    #[test]
+    fn outbound_stats_identity_shares_the_allocation() {
+        let t = sample_tensor();
+        let (msg, local) = outbound_stats(
+            CodecKind::Identity, Lane::Activation, 3, t.clone()).unwrap();
+        // Zero-copy: message and local handle alias the input buffer.
+        assert!(local.shares_data(&t));
+        match msg {
+            Message::Activation { round, tensor } => {
+                assert_eq!(round, 3);
+                assert!(tensor.shares_data(&t));
+            }
+            other => panic!("wrong frame: {:?}", other.tag()),
+        }
+    }
+
+    #[test]
+    fn outbound_stats_lossy_returns_the_receiver_view() {
+        let t = Tensor::f32(vec![2, 3],
+                            vec![0.1, -2.0, 3.5, 0.0, 9.0, -0.25]);
+        let (msg, local) = outbound_stats(
+            CodecKind::Fp16, Lane::Derivative, 7, t.clone()).unwrap();
+        let receiver = msg.into_plain().unwrap();
+        match receiver {
+            Message::Derivative { round, tensor } => {
+                assert_eq!(round, 7);
+                // Cache-consistency invariant: sender's local tensor ==
+                // receiver's decoded tensor, bit for bit.
+                assert_eq!(tensor, local);
+            }
+            other => panic!("wrong frame: {:?}", other.tag()),
+        }
+        // i32 tensors fall back to plain frames.
+        let ids = Tensor::i32(vec![2], vec![4, 5]);
+        let (msg, local) = outbound_stats(
+            CodecKind::Fp16, Lane::Activation, 1, ids.clone()).unwrap();
+        assert!(local.shares_data(&ids));
+        assert_eq!(msg.tag(), 1);
+    }
+
+    #[test]
+    fn compressed_frames_are_smaller_than_plain() {
+        let t = Tensor::f32(vec![256, 64],
+                            (0..256 * 64).map(|i| (i as f32).cos())
+                                          .collect::<Vec<_>>());
+        let plain = Message::Activation { round: 0, tensor: t.clone() };
+        for kind in [CodecKind::Fp16, CodecKind::QuantInt8,
+                     CodecKind::TopK(512)] {
+            let (msg, _) =
+                outbound_stats(kind, Lane::Activation, 0, t.clone())
+                    .unwrap();
+            assert!(msg.wire_bytes() < plain.wire_bytes(),
+                    "{} frame not smaller", kind.label());
+            // raw_bytes reports the uncompressed size for the ratio.
+            assert_eq!(msg.raw_bytes(), plain.wire_bytes());
         }
     }
 }
@@ -482,11 +782,88 @@ mod golden_tests {
         ]
     }
 
+    /// Compressed-path fixtures: frames captured from this codec
+    /// implementation at introduction time (PR 2). Byte-for-byte drift
+    /// in the codec block layout or in any codec's packed output fails
+    /// here.
+    fn compressed_fixtures() -> Vec<(&'static str, Message, &'static str)> {
+        use crate::compress::{compress_tensor, CodecKind};
+        let fp16 = compress_tensor(
+            CodecKind::Fp16,
+            &Tensor::f32(vec![2, 2], vec![0.0, 1.0, -2.0, 0.5]),
+        )
+        .unwrap();
+        let int8 = compress_tensor(
+            CodecKind::QuantInt8,
+            &Tensor::f32(vec![1, 4], vec![0.0, 1.0, 2.0, 3.0]),
+        )
+        .unwrap();
+        let topk = compress_tensor(
+            CodecKind::TopK(2),
+            &Tensor::f32(vec![4], vec![0.5, -3.0, 0.25, 2.0]),
+        )
+        .unwrap();
+        vec![
+            (
+                "hello_all_codecs",
+                Message::Hello { codecs: 0x0f },
+                "06 0000000000000000 0f000000",
+            ),
+            (
+                "compressed_fp16_2x2",
+                Message::Compressed {
+                    round: 1,
+                    lane: Lane::Activation,
+                    stats: fp16,
+                },
+                "07 0100000000000000 01 01 00000000 02 02000000 \
+                 02000000 00000000 0000 003c 00c0 0038",
+            ),
+            (
+                "compressed_int8_1x4",
+                Message::Compressed {
+                    round: 2,
+                    lane: Lane::Derivative,
+                    stats: int8,
+                },
+                "07 0200000000000000 02 02 00000000 02 01000000 \
+                 04000000 08000000 c1c0403c 00000000 00 55 aa ff",
+            ),
+            (
+                "compressed_topk2_4",
+                Message::Compressed {
+                    round: 9,
+                    lane: Lane::EvalActivation,
+                    stats: topk,
+                },
+                "07 0900000000000000 03 03 02000000 01 04000000 \
+                 00000000 01000000 000040c0 03000000 00000040",
+            ),
+        ]
+    }
+
     #[test]
     fn golden_encode_is_byte_identical() {
         for (name, msg, hex) in fixtures() {
             assert_eq!(msg.encode(), hex_to_bytes(hex),
                        "encode drifted for fixture '{name}'");
+        }
+    }
+
+    #[test]
+    fn golden_compressed_encode_is_byte_identical() {
+        for (name, msg, hex) in compressed_fixtures() {
+            assert_eq!(msg.encode(), hex_to_bytes(hex),
+                       "encode drifted for fixture '{name}'");
+        }
+    }
+
+    #[test]
+    fn golden_compressed_decode_recovers_messages() {
+        for (name, msg, hex) in compressed_fixtures() {
+            let dec = Message::decode(&hex_to_bytes(hex))
+                .unwrap_or_else(|e| panic!("fixture '{name}': {e}"));
+            assert_eq!(dec, msg, "decode drifted for fixture '{name}'");
         }
     }
 
@@ -600,6 +977,95 @@ mod fuzz_tests {
             }
             prop_assert!(Message::decode(&frame).is_err(),
                          "hostile header decoded");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_compressed_roundtrip_random_tensors() {
+        use crate::compress::{compress_tensor, CodecKind};
+        prop::check("compressed roundtrip", |rng| {
+            let rows = 1 + rng.gen_range(12) as usize;
+            let cols = 1 + rng.gen_range(12) as usize;
+            let v: Vec<f32> = (0..rows * cols)
+                .map(|_| rng.next_normal())
+                .collect();
+            let t = Tensor::f32(vec![rows, cols], v);
+            let kind = match rng.gen_range(3) {
+                0 => CodecKind::Fp16,
+                1 => CodecKind::QuantInt8,
+                _ => CodecKind::TopK(1 + rng.gen_range(16)),
+            };
+            let stats = compress_tensor(kind, &t)
+                .map_err(|e| format!("compress: {e}"))?;
+            let msg = Message::Compressed {
+                round: rng.next_u64(),
+                lane: Lane::Activation,
+                stats,
+            };
+            let dec = Message::decode(&msg.encode())
+                .map_err(|e| format!("decode: {e}"))?;
+            prop_assert!(dec == msg, "compressed roundtrip mismatch");
+            prop_assert!(msg.wire_bytes() == msg.encode().len() + 4,
+                         "wire_bytes drifted");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_compressed_truncations_and_garbage_error_cleanly() {
+        use crate::compress::{compress_tensor, CodecKind};
+        prop::check("compressed frames total", |rng| {
+            let n = 1 + rng.gen_range(64) as usize;
+            let v: Vec<f32> =
+                (0..n).map(|_| rng.next_normal()).collect();
+            let t = Tensor::f32(vec![n], v);
+            let stats = compress_tensor(CodecKind::QuantInt8, &t)
+                .map_err(|e| format!("compress: {e}"))?;
+            let enc = Message::Compressed {
+                round: 1,
+                lane: Lane::Derivative,
+                stats,
+            }
+            .encode();
+            // Truncation at every prefix errors, never panics.
+            let cut = rng.gen_range(enc.len() as u32) as usize;
+            prop_assert!(Message::decode(&enc[..cut]).is_err(),
+                         "truncation at {cut} decoded");
+            // Single-byte corruption is Ok-or-Err, never a panic (it can
+            // legitimately decode when it hits payload bytes).
+            let mut bent = enc.clone();
+            let at = rng.gen_range(bent.len() as u32) as usize;
+            bent[at] ^= 1 + (rng.next_u32() as u8 & 0x7f);
+            let _ = Message::decode(&bent);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hostile_compressed_headers_error_cleanly() {
+        // Compressed frames with huge dim words / absurd extra_len must
+        // be rejected by arithmetic (Reader::take + expected_lens), not
+        // by attempting the implied allocation.
+        prop::check("hostile compressed headers", |rng| {
+            let mut frame = Vec::new();
+            frame.push(7u8); // TAG_COMP
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes());
+            frame.push(1 + rng.gen_range(3) as u8); // valid lane
+            frame.push(rng.gen_range(4) as u8); // valid codec family
+            frame.extend_from_slice(&rng.next_u32().to_le_bytes()); // param
+            let ndim = 2 + rng.gen_range(6) as u8;
+            frame.push(ndim);
+            for _ in 0..ndim {
+                let d = u32::MAX - rng.gen_range(7);
+                frame.extend_from_slice(&d.to_le_bytes());
+            }
+            frame.extend_from_slice(&rng.next_u32().to_le_bytes());
+            for _ in 0..rng.gen_range(16) {
+                frame.push(rng.next_u32() as u8);
+            }
+            prop_assert!(Message::decode(&frame).is_err(),
+                         "hostile compressed header decoded");
             Ok(())
         });
     }

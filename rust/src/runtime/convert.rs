@@ -10,6 +10,9 @@
 
 use crate::tensor::{Data, Tensor};
 
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
+
 /// Convert a host tensor to an XLA literal (the one inherent copy).
 pub fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();

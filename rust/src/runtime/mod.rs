@@ -12,6 +12,14 @@ pub mod convert;
 pub mod manifest;
 pub mod params;
 pub mod party;
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt_stub;
+
+// Default builds target the API-identical stub backend; `--features
+// pjrt` resolves the same `xla::` paths against the real bindings
+// instead (see Cargo.toml and pjrt_stub.rs).
+#[cfg(not(feature = "pjrt"))]
+use self::pjrt_stub as xla;
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};

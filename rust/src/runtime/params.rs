@@ -10,6 +10,9 @@ use crate::util::rng::Pcg;
 
 use super::manifest::{InitKind, ParamSpec};
 
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
+
 /// AdaGrad initial accumulator (python optimizer.ADAGRAD_INIT_ACC).
 pub const ADAGRAD_INIT_ACC: f32 = 0.1;
 

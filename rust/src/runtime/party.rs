@@ -13,6 +13,9 @@ use super::convert::{literal_to_tensor, scalar_literal, tensor_to_literal};
 use super::params::ParamState;
 use super::{Artifact, ArtifactSet};
 
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
+
 /// Staleness telemetry vector [min,q10,q25,q50,q75,q90,mean,frac_kept].
 pub type WStats = [f32; 8];
 

@@ -1,0 +1,261 @@
+//! API-identical stub for the `xla` PJRT bindings (default build).
+//!
+//! The real `xla` crate needs the native `libxla_extension` toolchain,
+//! which CI and dependency-free checkouts don't have. This module mirrors
+//! the exact slice of its API the runtime layer uses so that every
+//! XLA-free layer (tensor, protocol, compress, transport, workset,
+//! coordinator plumbing, experiment harnesses) builds and tests without
+//! it. Behaviour:
+//!
+//! - `Literal` is a real host-side implementation (`vec1`, `scalar`,
+//!   `reshape`, `to_vec`, `array_shape`): the conversion layer and its
+//!   unit tests work unchanged.
+//! - Client/executable entry points (`PjRtClient::cpu`,
+//!   `HloModuleProto::from_text_file`) fail with an instructive error, so
+//!   anything needing actual artifact execution reports "rebuild with
+//!   `--features pjrt`" instead of crashing. `PjRtLoadedExecutable` and
+//!   `PjRtBuffer` are uninhabited — the execute path is provably
+//!   unreachable in stub builds.
+//!
+//! Building with `--features pjrt` swaps this module out for the real
+//! crate (see Cargo.toml); call sites are identical.
+
+use std::fmt;
+
+/// Element types mirrored from the PJRT ABI (only F32/S32 are ever
+/// produced by this repo's artifacts; the rest exist so downstream
+/// `match` arms with a catch-all stay reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F16,
+    F32,
+    F64,
+}
+
+/// Dense array shape: dims + element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Self-contained host literal (the stub's only fully-functional type).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { dims: Vec<i64>, data: Vec<f32> },
+    I32 { dims: Vec<i64>, data: Vec<i32> },
+}
+
+/// Element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    fn build(dims: Vec<i64>, data: Vec<Self>) -> Literal;
+    fn extract(lit: &Literal) -> anyhow::Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn build(dims: Vec<i64>, data: Vec<f32>) -> Literal {
+        Literal::F32 { dims, data }
+    }
+
+    fn extract(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            Literal::I32 { .. } => anyhow::bail!("literal is S32, not F32"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn build(dims: Vec<i64>, data: Vec<i32>) -> Literal {
+        Literal::I32 { dims, data }
+    }
+
+    fn extract(lit: &Literal) -> anyhow::Result<Vec<i32>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            Literal::F32 { .. } => anyhow::bail!("literal is F32, not S32"),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::build(vec![v.len() as i64], v.to_vec())
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal::F32 { dims: vec![], data: vec![x] }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> anyhow::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(
+            n as usize == self.len(),
+            "reshape to {dims:?} ({n} elements) from {} elements",
+            self.len()
+        );
+        let mut out = self.clone();
+        match &mut out {
+            Literal::F32 { dims: d, .. } | Literal::I32 { dims: d, .. } => {
+                *d = dims.to_vec();
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn array_shape(&self) -> anyhow::Result<ArrayShape> {
+        Ok(match self {
+            Literal::F32 { dims, .. } => {
+                ArrayShape { dims: dims.clone(), ty: ElementType::F32 }
+            }
+            Literal::I32 { dims, .. } => {
+                ArrayShape { dims: dims.clone(), ty: ElementType::S32 }
+            }
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> anyhow::Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Tuple decomposition exists only on real PJRT execution outputs,
+    /// which stub builds can never produce.
+    pub fn to_tuple(self) -> anyhow::Result<Vec<Literal>> {
+        anyhow::bail!("stub literals are never tuples (rebuild with \
+                       --features pjrt)")
+    }
+}
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} requires the XLA/PJRT backend, which this binary was built \
+         without — rebuild with `--features pjrt` (see rust/Cargo.toml)"
+    )
+}
+
+/// Stub PJRT client: construction always fails.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: Uninhabited,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Uninhabited {}
+
+impl PjRtClient {
+    pub fn cpu() -> anyhow::Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> anyhow::Result<PjRtLoadedExecutable> {
+        match self._private {}
+    }
+}
+
+/// Stub HLO module: loading always fails.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: Uninhabited,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> anyhow::Result<HloModuleProto> {
+        Err(unavailable("loading HLO artifacts"))
+    }
+}
+
+/// Stub computation: only constructible from an (unconstructible) proto.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: Uninhabited,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto._private {}
+    }
+}
+
+/// Uninhabited: stub builds can never hold a loaded executable.
+#[derive(Debug)]
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<A>(&self, _args: &[A])
+                      -> anyhow::Result<Vec<Vec<PjRtBuffer>>> {
+        match *self {}
+    }
+}
+
+/// Uninhabited: no buffers without an executable.
+#[derive(Debug)]
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> anyhow::Result<Literal> {
+        match *self {}
+    }
+}
+
+impl fmt::Display for ElementType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_shape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let s = r.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_is_rank_zero() {
+        let s = Literal::scalar(0.5);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn backend_entry_points_error_with_guidance() {
+        let e = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(e.contains("--features pjrt"), "{e}");
+        let e = HloModuleProto::from_text_file("x.hlo").unwrap_err()
+            .to_string();
+        assert!(e.contains("--features pjrt"), "{e}");
+    }
+}

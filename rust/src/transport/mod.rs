@@ -39,24 +39,42 @@ pub trait Transport: Send + Sync {
 }
 
 /// Sender-side accounting: bytes, messages, busy time on the link.
+/// `bytes` is what actually crossed the wire; `raw_bytes` is what the
+/// same messages would have occupied uncompressed (identical when no
+/// compression is negotiated), so `raw_bytes / bytes` is the link's
+/// achieved compression ratio.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LinkStats {
     pub messages: u64,
     pub bytes: u64,
+    pub raw_bytes: u64,
     pub busy: Duration,
+}
+
+impl LinkStats {
+    /// Achieved compression ratio (≥ 1.0 in practice; 1.0 when idle or
+    /// uncompressed).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bytes == 0 {
+            return 1.0;
+        }
+        self.raw_bytes as f64 / self.bytes as f64
+    }
 }
 
 #[derive(Default)]
 struct Counters {
     messages: AtomicU64,
     bytes: AtomicU64,
+    raw_bytes: AtomicU64,
     busy_nanos: AtomicU64,
 }
 
 impl Counters {
-    fn record(&self, bytes: usize, busy: Duration) {
+    fn record(&self, bytes: usize, raw_bytes: usize, busy: Duration) {
         self.messages.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.raw_bytes.fetch_add(raw_bytes as u64, Ordering::Relaxed);
         self.busy_nanos
             .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
     }
@@ -65,6 +83,7 @@ impl Counters {
         LinkStats {
             messages: self.messages.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
+            raw_bytes: self.raw_bytes.load(Ordering::Relaxed),
             busy: Duration::from_nanos(self.busy_nanos.load(Ordering::Relaxed)),
         }
     }
@@ -100,6 +119,9 @@ pub fn inproc_pair(wan: WanProfile) -> (InProcTransport, InProcTransport) {
 impl Transport for InProcTransport {
     fn send(&self, msg: Message) -> anyhow::Result<()> {
         let bytes = msg.wire_bytes();
+        // Compressed frames occupy the link for their *wire* size — the
+        // whole point of the codec layer — while raw_bytes keeps the
+        // uncompressed volume for ratio reporting.
         let delay = self.wan.one_way_delay(bytes);
         let start = Instant::now();
         if !delay.is_zero() {
@@ -107,7 +129,7 @@ impl Transport for InProcTransport {
             // behaviour the local-update technique amortises.
             std::thread::sleep(delay);
         }
-        self.counters.record(bytes, start.elapsed());
+        self.counters.record(bytes, msg.raw_bytes(), start.elapsed());
         self.tx
             .lock()
             .unwrap()
@@ -200,6 +222,30 @@ mod tests {
         b.send(Message::EvalAck { round: 5 }).unwrap();
         assert!(start.elapsed() < Duration::from_millis(200));
         assert_eq!(handle.join().unwrap().round(), 5);
+    }
+
+    #[test]
+    fn raw_vs_wire_byte_accounting() {
+        use crate::compress::CodecKind;
+        use crate::protocol::{outbound_stats, Lane};
+        let (a, b) = inproc_pair(WanProfile::instant());
+        let t = Tensor::zeros_f32(vec![64, 16]);
+        let plain = Message::Activation { round: 0, tensor: t.clone() };
+        a.send(plain.clone()).unwrap();
+        let (comp, _) =
+            outbound_stats(CodecKind::QuantInt8, Lane::Activation, 1,
+                           t.clone())
+                .unwrap();
+        a.send(comp.clone()).unwrap();
+        let _ = b.recv().unwrap();
+        let _ = b.recv().unwrap();
+        let stats = a.stats();
+        assert_eq!(stats.bytes,
+                   (plain.wire_bytes() + comp.wire_bytes()) as u64);
+        assert_eq!(stats.raw_bytes, 2 * plain.wire_bytes() as u64);
+        assert!(stats.raw_bytes > stats.bytes);
+        assert!(stats.compression_ratio() > 1.0);
+        assert_eq!(LinkStats::default().compression_ratio(), 1.0);
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub struct TcpTransport {
     wan: WanProfile,
     messages: AtomicU64,
     bytes: AtomicU64,
+    raw_bytes: AtomicU64,
     busy_nanos: AtomicU64,
 }
 
@@ -57,6 +58,7 @@ impl TcpTransport {
             wan,
             messages: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
+            raw_bytes: AtomicU64::new(0),
             busy_nanos: AtomicU64::new(0),
         })
     }
@@ -121,6 +123,8 @@ impl Transport for TcpTransport {
         }
         self.messages.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(frame_len as u64, Ordering::Relaxed);
+        self.raw_bytes
+            .fetch_add(msg.raw_bytes() as u64, Ordering::Relaxed);
         self.busy_nanos
             .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(())
@@ -155,6 +159,7 @@ impl Transport for TcpTransport {
         LinkStats {
             messages: self.messages.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
+            raw_bytes: self.raw_bytes.load(Ordering::Relaxed),
             busy: Duration::from_nanos(self.busy_nanos.load(Ordering::Relaxed)),
         }
     }

@@ -1,0 +1,153 @@
+//! Offline, API-compatible subset of the `anyhow` crate (vendor/README.md).
+//!
+//! Implements exactly the surface this repository uses — `Result`,
+//! `Error`, `anyhow!`, `bail!`, `ensure!` — with the same semantics:
+//! `Error` is a boxed, chain-preserving error that any
+//! `std::error::Error + Send + Sync + 'static` converts into via `?`,
+//! `{}` prints the outermost message and `{:#}` prints the full cause
+//! chain. Swap this path dependency for the crates.io release by editing
+//! `rust/Cargo.toml`; no call site changes are needed.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed error with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a plain message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Iterate the cause chain, outermost first (excluding `self.msg`).
+    fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next = self
+            .source
+            .as_deref()
+            .map(|s| -> &(dyn StdError + 'static) { s });
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes the blanket `From` below
+// coexist with the reflexive `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            // `{:#}`: append the cause chain, anyhow-style.
+            for cause in self.chain() {
+                let s = cause.to_string();
+                if s != self.msg {
+                    write!(f, ": {s}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> =
+            self.chain().map(|c| c.to_string()).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("top-level {}", 42);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "top-level 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("nope").unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk bad");
+        let e = Error { msg: "loading config".into(),
+                        source: Some(Box::new(io)) };
+        let s = format!("{e:#}");
+        assert!(s.contains("loading config") && s.contains("disk bad"), "{s}");
+        let d = format!("{e:?}");
+        assert!(d.contains("Caused by"), "{d}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Offline, API-compatible subset of `once_cell` (vendor/README.md),
+//! backed by `std::sync::OnceLock`.
+//!
+//! Differences from the crates.io crate, none observable to this repo's
+//! call sites: `sync::OnceCell::get_or_try_init` may run the initializer
+//! concurrently in more than one thread under a race (the first stored
+//! value wins, the losers' values are dropped), and `sync::Lazy` requires
+//! `F: Fn` rather than `F: FnOnce` (every use here passes a plain fn
+//! pointer). Swap this path dependency for the crates.io release by
+//! editing `rust/Cargo.toml`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// Thread-safe cell initialized at most once (observably).
+    #[derive(Debug, Default)]
+    pub struct OnceCell<T> {
+        inner: OnceLock<T>,
+    }
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> Self {
+            OnceCell { inner: OnceLock::new() }
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.inner.get()
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.inner.get_or_init(f)
+        }
+
+        /// Fallible initialization. Under contention the initializer may
+        /// run in several threads; exactly one result is stored.
+        pub fn get_or_try_init<F, E>(&self, f: F) -> Result<&T, E>
+        where
+            F: FnOnce() -> Result<T, E>,
+        {
+            if let Some(v) = self.inner.get() {
+                return Ok(v);
+            }
+            let v = f()?;
+            Ok(self.inner.get_or_init(|| v))
+        }
+    }
+
+    /// Value computed on first dereference.
+    #[derive(Debug)]
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceCell<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Lazy { cell: OnceCell::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::{Lazy, OnceCell};
+
+    #[test]
+    fn once_cell_initializes_once() {
+        let c: OnceCell<u32> = OnceCell::new();
+        assert!(c.get().is_none());
+        assert_eq!(*c.get_or_init(|| 7), 7);
+        assert_eq!(*c.get_or_init(|| 9), 7);
+        assert_eq!(c.get(), Some(&7));
+    }
+
+    #[test]
+    fn get_or_try_init_propagates_errors() {
+        let c: OnceCell<u32> = OnceCell::new();
+        let e: Result<&u32, &str> = c.get_or_try_init(|| Err("nope"));
+        assert!(e.is_err());
+        assert_eq!(c.get_or_try_init(|| Ok::<_, &str>(3)).unwrap(), &3);
+        assert_eq!(c.get_or_try_init(|| Err("ignored")).unwrap(), &3);
+    }
+
+    #[test]
+    fn lazy_computes_on_deref() {
+        static L: Lazy<u64> = Lazy::new(|| 40 + 2);
+        assert_eq!(*L, 42);
+        assert_eq!(*L, 42);
+    }
+}
