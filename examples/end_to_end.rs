@@ -64,14 +64,15 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "\nfinal: best AUC {:.4} | {} comm rounds | {} local updates | \
-         wall {:.1}s | comm busy {:.1}s | A→B {:.1} MiB, B→A {:.1} MiB",
+         wall {:.1}s | comm busy {:.1}s | to-label {:.1} MiB, \
+         from-label {:.1} MiB",
         rec.best_auc(),
         rec.comm_rounds,
         rec.local_updates,
         rec.wall.as_secs_f64(),
         rec.comm_busy.as_secs_f64(),
-        rec.bytes_a_to_b as f64 / (1 << 20) as f64,
-        rec.bytes_b_to_a as f64 / (1 << 20) as f64,
+        rec.bytes_to_label() as f64 / (1 << 20) as f64,
+        rec.bytes_from_label() as f64 / (1 << 20) as f64,
     );
     if let Some(parent) = std::path::Path::new(args.get("out")).parent() {
         std::fs::create_dir_all(parent)?;

@@ -11,16 +11,22 @@
 //!   4. wire compression — encode+decode throughput per statistics
 //!      codec and the resulting wire-bytes-per-round vs the identity
 //!      baseline (DESIGN.md §5).
+//!   5. session framing — v2 (party-addressed) envelope cost vs the v1
+//!      frame, and per-round mesh bytes as the party count K grows
+//!      (DESIGN.md §6).
 //!
 //! `cargo bench --bench bench_hotpath`
 
 use celu_vfl::compress::{codec_for, CodecKind, StatCodec};
 use celu_vfl::config::Sampling;
-use celu_vfl::experiments::ablation::compression_bytes_per_round;
+use celu_vfl::experiments::ablation::{compression_bytes_per_round,
+                                      mesh_bytes_per_round};
 use celu_vfl::data::batcher::{gather_a, gather_a_with, gather_b_with,
                               GatherScratch};
 use celu_vfl::data::SynthDataset;
-use celu_vfl::protocol::Message;
+use celu_vfl::protocol::{decode_frame, encode_frame_into, FrameHeader,
+                         Message};
+use celu_vfl::session::PartyId;
 use celu_vfl::tensor::{Data, Tensor};
 use celu_vfl::testing::bench::{bench, section};
 use celu_vfl::workset::WorksetTable;
@@ -221,4 +227,36 @@ fn main() {
              } else {
                  "FAILED"
              });
+
+    // ---- 5. session framing ------------------------------------------------
+    section("v2 (party-addressed) framing vs v1 — 256×64 activation");
+    let hdr = FrameHeader { src: PartyId(1), dst: PartyId(0) };
+    let mut scratch = Vec::new();
+    let r_v1 = bench("encode_frame_into v1", WINDOW, || {
+        encode_frame_into(None, &msg, &mut scratch);
+        black_box(scratch.len());
+    });
+    report("encode_frame_into v1 (headerless)", &r_v1, payload);
+    let r_v2 = bench("encode_frame_into v2", WINDOW, || {
+        encode_frame_into(Some(hdr), &msg, &mut scratch);
+        black_box(scratch.len());
+    });
+    report("encode_frame_into v2 (6 B envelope)", &r_v2, payload);
+    encode_frame_into(Some(hdr), &msg, &mut scratch);
+    let v2_body = scratch[4..].to_vec();
+    let r_dec_v2 = bench("decode_frame v2", WINDOW, || {
+        black_box(decode_frame(&v2_body).unwrap());
+    });
+    report("decode_frame v2 (header verify + bulk)", &r_dec_v2, payload);
+    let overhead = r_v2.mean.as_secs_f64()
+        / r_v1.mean.as_secs_f64().max(1e-12);
+    println!("v2 envelope encode overhead: {overhead:.3}× \
+              (6 B on a {payload} B payload — must be ~1.0×)");
+
+    section("mesh bytes/round vs party count (identity codec, 256×64)");
+    for parties in [2usize, 3, 5, 9] {
+        let (_, total) = mesh_bytes_per_round(parties, 256, 64).unwrap();
+        println!("K={parties:<3} {:>3} links  {total:>10} B/round",
+                 2 * (parties - 1));
+    }
 }

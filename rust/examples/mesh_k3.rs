@@ -1,0 +1,236 @@
+//! K = 3 session smoke run — artifact-free, a few rounds.
+//!
+//! Drives the full session plumbing (star mesh, v2 party-addressed
+//! frames, per-link `Hello` negotiation with a per-party codec
+//! override, K activation lanes, Σ_k Z_k aggregation, per-peer workset
+//! lanes with round-robin local sampling, per-link byte accounting)
+//! **without** the PJRT runtime: the model compute is replaced by a
+//! deterministic statistics generator, so this runs on any checkout —
+//! it is the CI smoke step for the session layer. The full-model K=3
+//! run lives in `tests/integration.rs` behind the artifact gate.
+//!
+//!     cargo run --release --example mesh_k3
+
+use celu_vfl::compress::{self, CodecKind};
+use celu_vfl::config::{RunConfig, WanProfile};
+use celu_vfl::protocol::{outbound_stats, Lane, Message,
+                         FRAME_V2_OVERHEAD};
+use celu_vfl::session::{inproc_star, PartyId, SessionBuilder,
+                        LABEL_PARTY};
+use celu_vfl::tensor::Tensor;
+use celu_vfl::transport::Transport;
+use celu_vfl::workset::MeshWorkset;
+
+const ROUNDS: u64 = 8;
+const BATCH: usize = 16;
+const Z_DIM: usize = 4;
+
+/// Deterministic stand-in for a bottom model's activations.
+fn synth(party: u16, round: u64) -> Tensor {
+    let v: Vec<f32> = (0..BATCH * Z_DIM)
+        .map(|i| {
+            ((i as f32 * 0.31 + party as f32 * 1.7 + round as f32 * 0.13)
+                .sin())
+                * 0.8
+        })
+        .collect();
+    Tensor::f32(vec![BATCH, Z_DIM], v)
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let mut cfg = RunConfig::quick();
+    cfg.parties = 3;
+    cfg.wan = WanProfile::instant();
+    // Per-party codec override: party 1 compresses fp16, party 2 stays
+    // uncompressed — the links must negotiate independently.
+    cfg.compress = CodecKind::Identity;
+    cfg.party_compress = vec![(1, CodecKind::Fp16)];
+    cfg.validate()?;
+
+    let (label_links, feature_links) = inproc_star(&cfg);
+
+    // Validate the topology through the real session builder (the
+    // drivers themselves need compiled artifacts, so past this point
+    // the example drives the mesh at the protocol level).
+    let mut b = SessionBuilder::new(&cfg, LABEL_PARTY);
+    for l in &label_links {
+        b = b.link(l.peer, l.transport.clone());
+    }
+    let label_session = b.build()?;
+    println!("session: {} as {:?}, {} links", label_session.id(),
+             label_session.role(), label_session.mesh().len());
+
+    // ---- feature parties (threads) ----------------------------------------
+    let mut handles = Vec::new();
+    for (i, link) in feature_links.into_iter().enumerate() {
+        let party = PartyId(i as u16 + 1);
+        let requested = cfg.codec_for(party.0);
+        let transport = link.transport.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<u64> {
+            let ws = MeshWorkset::new(
+                1, 3, 2, celu_vfl::config::Sampling::RoundRobin);
+            // Per-link handshake: only a compressing party speaks.
+            let codec = if requested != CodecKind::Identity {
+                transport.send(Message::Hello {
+                    codecs: compress::supported_mask(),
+                })?;
+                match transport.recv()? {
+                    Message::Hello { codecs } => {
+                        compress::negotiate(requested, Some(codecs))
+                    }
+                    other => anyhow::bail!("expected Hello, got {:?}",
+                                           other.tag()),
+                }
+            } else {
+                CodecKind::Identity
+            };
+            let mut local = 0u64;
+            for round in 0..ROUNDS {
+                let za = synth(party.0, round);
+                let (msg, za) =
+                    outbound_stats(codec, Lane::Activation, round, za)?;
+                transport.send(msg)?;
+                let dza = match transport.recv()?.into_plain()? {
+                    Message::Derivative { round: r, tensor } => {
+                        anyhow::ensure!(r == round, "round skew");
+                        tensor
+                    }
+                    other => anyhow::bail!("unexpected {:?}", other.tag()),
+                };
+                ws.insert(round, vec![0u32; BATCH], vec![(za, dza)]);
+                // Local updates overlap the next round's exchange.
+                while ws.sample()?.is_some() {
+                    local += 1;
+                }
+            }
+            match transport.recv()? {
+                Message::Shutdown => Ok(local),
+                other => anyhow::bail!("expected Shutdown, got {:?}",
+                                       other.tag()),
+            }
+        }));
+    }
+
+    // ---- label party (this thread) ----------------------------------------
+    let mesh = label_session.mesh();
+    let workset = MeshWorkset::new(mesh.len(), 3, 2,
+                                   celu_vfl::config::Sampling::RoundRobin);
+    // Handshake per link: answer whoever initiates.
+    let mut lanes = Vec::new();
+    for l in mesh.links() {
+        let requested = cfg.codec_for(l.peer.0);
+        let mut replay = None;
+        let codec = match l.transport.recv()? {
+            Message::Hello { codecs } => {
+                l.transport.send(Message::Hello {
+                    codecs: compress::supported_mask(),
+                })?;
+                compress::negotiate(requested, Some(codecs))
+            }
+            first => {
+                replay = Some(first);
+                CodecKind::Identity
+            }
+        };
+        lanes.push((l.peer, l.transport.clone(), codec, replay));
+    }
+    let mut label_local = 0u64;
+    for round in 0..ROUNDS {
+        let mut zas = Vec::with_capacity(lanes.len());
+        for (peer, transport, _, replay) in lanes.iter_mut() {
+            let msg = match replay.take() {
+                Some(m) => m,
+                None => transport.recv()?,
+            };
+            match msg.into_plain()? {
+                Message::Activation { round: r, tensor } => {
+                    anyhow::ensure!(r == round, "skew on {peer}");
+                    zas.push(tensor);
+                }
+                other => anyhow::bail!("unexpected {:?}", other.tag()),
+            }
+        }
+        let zsum = Tensor::sum_f32(&zas)?;
+        // Stand-in for the exact step: ∇Z = 0.1 · ΣZ.
+        let dza = Tensor::f32(
+            zsum.shape.clone(),
+            zsum.as_f32()?.iter().map(|x| 0.1 * x).collect::<Vec<_>>(),
+        );
+        let mut cached = Vec::with_capacity(lanes.len());
+        let mut outgoing = Vec::with_capacity(lanes.len());
+        for ((_, _, codec, _), za_k) in lanes.iter().zip(zas) {
+            let (dmsg, dza_k) =
+                outbound_stats(*codec, Lane::Derivative, round,
+                               dza.clone())?;
+            outgoing.push(dmsg);
+            cached.push((za_k, dza_k));
+        }
+        workset.insert(round, vec![0u32; BATCH], cached);
+        for ((_, transport, _, _), dmsg) in lanes.iter().zip(outgoing) {
+            transport.send(dmsg)?;
+        }
+        while let Some(e) = workset.sample()? {
+            anyhow::ensure!(e.za.shape == vec![BATCH, Z_DIM],
+                            "aggregate shape drifted: {:?}", e.za.shape);
+            label_local += 1;
+        }
+    }
+    for (_, transport, _, _) in &lanes {
+        transport.send(Message::Shutdown)?;
+    }
+    let mut feature_local = 0u64;
+    for h in handles {
+        feature_local += h.join().expect("feature thread panicked")?;
+    }
+
+    // ---- assertions + per-link report --------------------------------------
+    println!("\n{:<8} {:>10} {:>10} {:>8} {:>8}", "link", "wire B",
+             "raw B", "msgs", "ratio");
+    let mut fp16_link_bytes = 0;
+    let mut ident_link_bytes = 0;
+    for (peer, stats) in mesh.link_stats() {
+        println!("0->{:<5} {:>10} {:>10} {:>8} {:>8.2}", peer.0,
+                 stats.bytes, stats.raw_bytes, stats.messages,
+                 stats.compression_ratio());
+        anyhow::ensure!(stats.messages >= ROUNDS,
+                        "link 0->{peer} undercounted messages");
+        // Every frame on a K>2 link carries the 6-byte v2 envelope; the
+        // identity direction's raw == wire, so the envelope is visible
+        // as raw > payload-only accounting would give. fp16 links beat
+        // identity links on wire bytes.
+        if peer == PartyId(1) {
+            fp16_link_bytes = stats.bytes;
+        } else {
+            ident_link_bytes = stats.bytes;
+        }
+    }
+    anyhow::ensure!(fp16_link_bytes < ident_link_bytes,
+                    "fp16 link ({fp16_link_bytes} B) not smaller than \
+                     identity link ({ident_link_bytes} B)");
+    let total = mesh.total_stats();
+    anyhow::ensure!(total.messages >= 2 * ROUNDS,
+                    "mesh undercounted messages: {}", total.messages);
+    // The envelope is charged: the identity link's per-derivative cost
+    // is the v1 frame + FRAME_V2_OVERHEAD.
+    let v1_der = Message::Derivative {
+        round: 0,
+        tensor: synth(0, 0),
+    }
+    .wire_bytes();
+    anyhow::ensure!(
+        ident_link_bytes as usize >= ROUNDS as usize
+            * (v1_der + FRAME_V2_OVERHEAD),
+        "v2 envelope missing from the byte accounting"
+    );
+    anyhow::ensure!(label_local > 0, "label party never sampled locally");
+    anyhow::ensure!(feature_local > 0, "feature parties never sampled");
+    println!(
+        "\nK=3 smoke OK: {ROUNDS} rounds, {feature_local} feature local \
+         samples, {label_local} label local samples (aggregated over \
+         {} lanes), {} B total on the mesh",
+        mesh.len(),
+        total.bytes
+    );
+    Ok(())
+}

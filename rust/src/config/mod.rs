@@ -117,6 +117,14 @@ pub struct RunConfig {
     /// Wire codec for the exchanged statistics (`compress::CodecKind`),
     /// negotiated down to identity when the peer can't decode it.
     pub compress: CodecKind,
+    /// Total parties in the session, label party included (`--parties`).
+    /// 2 is the paper's two-party protocol; K > 2 runs K−1 feature
+    /// parties over a v2-framed star mesh (session module).
+    pub parties: usize,
+    /// Per-party codec overrides from `[party.<id>]` TOML sections:
+    /// `(feature party id, codec)` — the codec requested on that
+    /// party's link in both directions, still negotiated per-link.
+    pub party_compress: Vec<(u16, CodecKind)>,
 
     // optimizer / training
     pub lr: f64,
@@ -155,6 +163,8 @@ impl RunConfig {
             w_workset: 3,
             xi_degrees: 60.0,
             compress: CodecKind::Identity,
+            parties: 2,
+            party_compress: Vec::new(),
             lr: 0.05,
             seed: 42,
             trials: 1,
@@ -213,6 +223,24 @@ impl RunConfig {
         }
     }
 
+    /// Number of feature parties in the session (everyone but the
+    /// label party).
+    pub fn feature_parties(&self) -> usize {
+        self.parties - 1
+    }
+
+    /// The codec requested on feature party `id`'s link: the
+    /// `[party.<id>]` override when present, the session-wide
+    /// `compress` otherwise. Negotiation can still downgrade it
+    /// per-link at handshake time.
+    pub fn codec_for(&self, id: u16) -> CodecKind {
+        self.party_compress
+            .iter()
+            .find(|(p, _)| *p == id)
+            .map(|(_, c)| *c)
+            .unwrap_or(self.compress)
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         if !matches!(self.model.as_str(), "wdl" | "dssm") {
             anyhow::bail!("model must be wdl|dssm, got '{}'", self.model);
@@ -242,6 +270,19 @@ impl RunConfig {
         if !(0.0..=0.5).contains(&self.label_noise) {
             anyhow::bail!("label_noise must be in [0, 0.5]");
         }
+        let max = crate::session::MAX_PARTIES as usize;
+        if !(2..=max).contains(&self.parties) {
+            anyhow::bail!("parties must be in [2, {max}], got {}",
+                          self.parties);
+        }
+        for (id, _) in &self.party_compress {
+            if *id == 0 || *id as usize >= self.parties {
+                anyhow::bail!(
+                    "[party.{id}] override targets no feature party \
+                     (valid ids: 1..={})", self.parties - 1
+                );
+            }
+        }
         Ok(())
     }
 
@@ -267,6 +308,8 @@ impl RunConfig {
             xi_degrees: doc.f64_or("xi_degrees", base.xi_degrees)?,
             compress: CodecKind::parse(&doc.str_or(
                 "compress", &base.compress.label())?)?,
+            parties: doc.usize_or("parties", base.parties)?,
+            party_compress: parse_party_overrides(&doc)?,
             lr: doc.f64_or("lr", base.lr)?,
             seed: doc.f64_or("seed", base.seed as f64)? as u64,
             trials: doc.usize_or("trials", base.trials)?,
@@ -293,6 +336,38 @@ impl RunConfig {
         cfg.validate()?;
         Ok(cfg)
     }
+}
+
+/// Collect `[party.<id>]` section overrides. Currently the per-party
+/// knob is `compress` (the per-link codec request); unknown keys under
+/// a party section are rejected loudly so typos can't silently
+/// no-op.
+fn parse_party_overrides(doc: &TomlDoc)
+                         -> anyhow::Result<Vec<(u16, CodecKind)>> {
+    let mut out: Vec<(u16, CodecKind)> = Vec::new();
+    for key in doc.keys() {
+        let Some(rest) = key.strip_prefix("party.") else {
+            continue;
+        };
+        let (id, field) = rest.split_once('.').ok_or_else(|| {
+            anyhow::anyhow!("malformed party section key '{key}'")
+        })?;
+        let id: u16 = id.parse().map_err(|_| {
+            anyhow::anyhow!("invalid party id in section '[party.{id}]'")
+        })?;
+        match field {
+            "compress" => {
+                let spec = doc.str_or(key, "")?;
+                out.push((id, CodecKind::parse(&spec)?));
+            }
+            other => anyhow::bail!(
+                "unknown key '{other}' in [party.{id}] — supported: \
+                 compress"
+            ),
+        }
+    }
+    out.sort_by_key(|(id, _)| *id);
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -374,6 +449,46 @@ mod tests {
         assert_eq!(cfg.compress, CodecKind::QuantInt8);
         let e = RunConfig::from_toml("compress = \"zstd\"\n").unwrap_err();
         assert!(e.to_string().contains("topk:<k>"), "{e}");
+    }
+
+    #[test]
+    fn parties_config_parses_and_validates() {
+        assert_eq!(RunConfig::quick().parties, 2);
+        assert_eq!(RunConfig::quick().feature_parties(), 1);
+        let cfg = RunConfig::from_toml("parties = 4\n").unwrap();
+        assert_eq!(cfg.parties, 4);
+        assert_eq!(cfg.feature_parties(), 3);
+        // Bounds: a session needs a label party and ≥ 1 feature party,
+        // and ids must fit the protocol's MAX_PARTIES range check.
+        let mut cfg = RunConfig::quick();
+        cfg.parties = 1;
+        assert!(cfg.validate().is_err());
+        cfg.parties = crate::session::MAX_PARTIES as usize + 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn per_party_toml_sections_override_the_codec() {
+        let cfg = RunConfig::from_toml(
+            "parties = 3\ncompress = \"fp16\"\n\
+             [party.2]\ncompress = \"int8\"\n",
+        )
+        .unwrap();
+        // Party 1 inherits the session codec; party 2 is overridden.
+        assert_eq!(cfg.codec_for(1), CodecKind::Fp16);
+        assert_eq!(cfg.codec_for(2), CodecKind::QuantInt8);
+        assert_eq!(cfg.party_compress, vec![(2, CodecKind::QuantInt8)]);
+        // Overrides targeting the label party or absent parties fail.
+        let e = RunConfig::from_toml(
+            "parties = 3\n[party.0]\ncompress = \"int8\"\n");
+        assert!(e.is_err());
+        let e = RunConfig::from_toml(
+            "parties = 3\n[party.7]\ncompress = \"int8\"\n");
+        assert!(e.is_err());
+        // Typo'd per-party keys are loud, not silent.
+        let e = RunConfig::from_toml(
+            "parties = 3\n[party.2]\ncompres = \"int8\"\n");
+        assert!(e.unwrap_err().to_string().contains("unknown key"));
     }
 
     #[test]

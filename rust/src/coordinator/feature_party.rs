@@ -1,6 +1,10 @@
-//! Party A driver: features only, no labels, no top model.
+//! Feature-party driver: one vertical feature slice, no labels, no top
+//! model. Parameterized by [`PartyId`] — a K-party session runs K−1
+//! instances of this driver, each over its own link to the label party;
+//! `parties = 2` runs exactly one and reproduces the PR-1/PR-2 Party A
+//! byte stream bit-for-bit.
 //!
-//! Comm worker: forward → send Z_A → (overlapped) → recv ∇Z_A → exact
+//! Comm worker: forward → send Z_k → (overlapped) → recv ∇Z → exact
 //! update → cache. Local worker: drain the workset with round-robin
 //! sampling + instance-weighted local updates (Algorithm 2,
 //! LocalUpdatePartyA). The workers share the runtime (params) and the
@@ -13,12 +17,14 @@
 //! handles instead of deep clones, and gathers recycle their destination
 //! buffers across rounds.
 //!
-//! When `cfg.compress` asks for a wire codec, A initiates the `Hello`
-//! capabilities handshake before round 0 and then routes every outgoing
-//! statistic through `protocol::outbound_stats` (DESIGN.md §5): the
-//! workset caches the *dequantized* round-trip so A trains on exactly
-//! the tensors B decodes. With the identity codec no `Hello` is sent
-//! and the wire + cache behaviour is byte-identical to PR 1.
+//! When this party's codec (session `compress`, or its `[party.<id>]`
+//! override) asks for compression, the feature party initiates the
+//! `Hello` capabilities handshake on its link before round 0 and then
+//! routes every outgoing statistic through `protocol::outbound_stats`
+//! (DESIGN.md §5): the workset caches the *dequantized* round-trip so
+//! this party trains on exactly the tensors the label party decodes.
+//! With the identity codec no `Hello` is sent and the wire + cache
+//! behaviour is byte-identical to the two-party path.
 
 use std::sync::{Arc, Mutex};
 
@@ -29,14 +35,16 @@ use crate::data::PartyAData;
 use crate::metrics::CosineRecorder;
 use crate::protocol::{outbound_stats, Lane, Message};
 use crate::runtime::{ArtifactSet, PartyARuntime};
+use crate::session::PartyId;
 use crate::transport::Transport;
-use crate::workset::{SharedWorkset, WorksetStats, WorksetTable};
+use crate::workset::{MeshWorkset, WorksetStats};
 
-use super::{Ctrl, BUBBLE_PARK};
+use super::{eval_batch_count, feature_seed, Ctrl, BUBBLE_PARK};
 
-/// Everything Party A reports after a run.
-#[derive(Debug, Default)]
-pub struct PartyAReport {
+/// Everything a feature party reports after a run.
+#[derive(Debug)]
+pub struct FeaturePartyReport {
+    pub party: PartyId,
     pub comm_rounds: u64,
     pub exact_updates: u64,
     pub local_updates: u64,
@@ -44,27 +52,35 @@ pub struct PartyAReport {
     pub cosine: CosineRecorder,
 }
 
-/// Run Party A to completion (until Shutdown from B or transport error).
-pub fn run_party_a(
+/// Run feature party `party` to completion (until Shutdown from the
+/// label party or transport error) over its single mesh link.
+pub fn run_feature_party(
     cfg: &RunConfig,
+    party: PartyId,
     set: Arc<ArtifactSet>,
     train: Arc<PartyAData>,
     test: Arc<PartyAData>,
     transport: Arc<dyn Transport>,
-) -> anyhow::Result<PartyAReport> {
+) -> anyhow::Result<FeaturePartyReport> {
     let batch = set.manifest.batch;
     let runtime = Arc::new(Mutex::new(PartyARuntime::new(
         set.clone(),
-        cfg.seed,
+        // Party 1 seeds exactly as the historic Party A (bit-identical
+        // two-party runs); later parties decorrelate their init stream.
+        feature_seed(cfg.seed, party),
         cfg.lr as f32,
         cfg.cos_xi() as f32,
         cfg.weighting_enabled(),
     )?));
-    let workset = Arc::new(SharedWorkset::new(WorksetTable::new(
+    // Single-lane mesh workset: the feature party has one peer (the
+    // label party), so this is exactly the historic shared workset —
+    // same policy, same condvar parking, zero-copy handles.
+    let workset = Arc::new(MeshWorkset::new(
+        1,
         cfg.effective_w(),
         cfg.effective_r().max(1),
         cfg.sampling(),
-    )));
+    ));
     let ctrl = Arc::new(Ctrl::default());
     let cosine = Arc::new(Mutex::new(CosineRecorder::default()));
 
@@ -76,7 +92,7 @@ pub fn run_party_a(
         let train = train.clone();
         let cosine = cosine.clone();
         Some(std::thread::Builder::new()
-            .name("party-a-local".into())
+            .name(format!("feature-{}-local", party.0))
             .spawn(move || -> anyhow::Result<u64> {
                 let mut steps = 0u64;
                 let mut scratch = GatherScratch::default();
@@ -84,7 +100,7 @@ pub fn run_party_a(
                     // §3.2 bubble handling: park on the workset condvar
                     // until the comm worker inserts (or the timeout
                     // elapses, re-checking the stop flag) — no busy-wait.
-                    match workset.sample_or_wait(BUBBLE_PARK) {
+                    match workset.sample_or_wait(BUBBLE_PARK)? {
                         Some(e) => {
                             let xa = gather_a_with(&train, &e.indices,
                                                    &mut scratch);
@@ -109,23 +125,23 @@ pub fn run_party_a(
     let mut scratch = GatherScratch::default();
     let eval_batches = eval_batch_count(cfg, test.n, batch);
     let mut comm_rounds = 0u64;
+    let requested = cfg.codec_for(party.0);
     let result: anyhow::Result<()> = (|| {
         // Capabilities handshake (DESIGN.md §5): only when compression
         // is requested — an identity config keeps the wire byte stream
         // exactly as before, so pre-handshake peers interoperate.
-        let codec = if cfg.compress != CodecKind::Identity {
+        let codec = if requested != CodecKind::Identity {
             transport.send(Message::Hello {
                 codecs: compress::supported_mask(),
             })?;
             match transport.recv()? {
                 Message::Hello { codecs } => {
-                    let eff =
-                        compress::negotiate(cfg.compress, Some(codecs));
-                    if eff != cfg.compress {
+                    let eff = compress::negotiate(requested, Some(codecs));
+                    if eff != requested {
                         log::warn!(
-                            "peer cannot decode codec {} (mask {codecs:#x}) \
-                             — sending uncompressed",
-                            cfg.compress.label()
+                            "[{party}] peer cannot decode codec {} \
+                             (mask {codecs:#x}) — sending uncompressed",
+                            requested.label()
                         );
                     }
                     eff
@@ -144,11 +160,11 @@ pub fn run_party_a(
             // Identity codec: the message and the workset entry below
             // share za's allocation — the clone is a refcount bump, not
             // a copy. Lossy codec: `za` is rebound to the dequantized
-            // round-trip so the cache matches what B decodes.
+            // round-trip so the cache matches what the label decodes.
             let (msg, za) =
                 outbound_stats(codec, Lane::Activation, round, za)?;
             transport.send(msg)?;
-            // Block on ∇Z_A (the local worker keeps training meanwhile).
+            // Block on ∇Z (the local worker keeps training meanwhile).
             let dza = match transport.recv()?.into_plain()? {
                 Message::Derivative { round: r, tensor } => {
                     anyhow::ensure!(r == round,
@@ -161,7 +177,7 @@ pub fn run_party_a(
                                         {round}", other.tag()),
             };
             runtime.lock().unwrap().exact_update(&xa, &dza)?;
-            workset.insert(round, idx, za, dza);
+            workset.insert(round, idx, vec![(za, dza)]);
             comm_rounds = round + 1;
 
             // Eval lane.
@@ -178,8 +194,8 @@ pub fn run_party_a(
                 }
             }
         }
-        // Round budget exhausted on A's side; wait for B's shutdown so the
-        // byte accounting stays complete.
+        // Round budget exhausted on this side; wait for the label
+        // party's shutdown so the byte accounting stays complete.
         loop {
             match transport.recv() {
                 Ok(Message::Shutdown) | Err(_) => return Ok(()),
@@ -190,7 +206,7 @@ pub fn run_party_a(
     ctrl.stop();
     workset.wake_all(); // unpark a local worker sleeping through a bubble
     let local_updates = match local_handle {
-        Some(h) => h.join().expect("party A local worker panicked")?,
+        Some(h) => h.join().expect("feature party local worker panicked")?,
         None => 0,
     };
     result?;
@@ -200,17 +216,12 @@ pub fn run_party_a(
     let cosine = Arc::try_unwrap(cosine)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_default();
-    Ok(PartyAReport {
+    Ok(FeaturePartyReport {
+        party,
         comm_rounds,
         exact_updates,
         local_updates,
         workset: ws_stats,
         cosine,
     })
-}
-
-/// Number of held-out batches both parties walk on the eval lane.
-pub fn eval_batch_count(cfg: &RunConfig, test_n: usize, batch: usize)
-                        -> usize {
-    cfg.eval_batches.min(test_n / batch).max(1)
 }

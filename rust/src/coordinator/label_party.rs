@@ -1,0 +1,390 @@
+//! Label-party driver: features + labels, bottom and top models, and
+//! the run's control plane (loss tracking, AUC evaluation, stopping).
+//! Aggregates over a whole mesh of feature parties: the top model
+//! consumes Σ_k Z_k, and since ∂L/∂Z_k = ∂L/∂(Σ_j Z_j) for the sum
+//! aggregation, the same derivative frame fans out to every peer — the
+//! standard K-party topology (C-VFL). With one link this is exactly the
+//! PR-1/PR-2 Party B, byte for byte.
+//!
+//! Comm worker, per round: recv Z_k from each activation lane → exact
+//! step on Σ_k Z_k (computes loss + ∇Z, updates θ_B/θ_top) → cache
+//! ⟨i, Z_k, ∇Z⟩ into each peer's workset lane → fan the derivative out.
+//! Local worker: local steps against the cached aggregate statistics
+//! (Algorithm 2, LocalUpdatePartyB) via [`MeshWorkset`], which keeps
+//! one [`crate::workset::WorksetTable`] lane per peer in lock-step so
+//! uniform sampling and instance weighting stay per-link exact. The
+//! label party owns the stop decision and broadcasts Shutdown on every
+//! link.
+//!
+//! The cache insert happens *before* the (WAN-bound) sends: the entries'
+//! tensors are `Arc`-shared with the outgoing messages rather than
+//! copied, and the local worker can already consume the fresh statistics
+//! while the derivatives are still occupying the links (DESIGN.md §4).
+//!
+//! The `Hello` capabilities handshake is answered **per link**,
+//! whenever that peer initiates it — even when this party itself is
+//! configured uncompressed — and derivative sends are routed through
+//! `protocol::outbound_stats` under each link's negotiated codec,
+//! caching that link's dequantized round-trip (DESIGN.md §5). A plain
+//! first frame on a link means a pre-handshake peer: that link stays on
+//! the identity codec and its wire behaviour is byte-identical to PR 1.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::compress::{self, CodecKind};
+use crate::config::RunConfig;
+use crate::data::batcher::{gather_b_with, BatchCursor, GatherScratch};
+use crate::data::PartyBData;
+use crate::metrics::{auc_exact, CosineRecorder, SeriesPoint};
+use crate::protocol::{outbound_stats, Lane, Message};
+use crate::runtime::{ArtifactSet, PartyBRuntime};
+use crate::session::{Link, PartyId};
+use crate::tensor::Tensor;
+use crate::transport::Transport;
+use crate::util::stats::Ema;
+use crate::workset::{MeshWorkset, WorksetStats};
+
+use super::{eval_batch_count, Ctrl, BUBBLE_PARK};
+
+/// Everything the label party reports after a run.
+#[derive(Debug, Default)]
+pub struct LabelPartyReport {
+    pub comm_rounds: u64,
+    pub exact_updates: u64,
+    pub local_updates: u64,
+    pub workset: WorksetStats,
+    pub cosine: CosineRecorder,
+    pub series: Vec<SeriesPoint>,
+    /// Why the run ended.
+    pub stop_reason: StopReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StopReason {
+    #[default]
+    MaxRounds,
+    TargetAuc,
+    TimeBudget,
+}
+
+/// One activation lane: the peer, its transport, the codec negotiated
+/// on this link, and the round-0 replay slot for pre-handshake peers.
+struct LaneState {
+    peer: PartyId,
+    transport: Arc<dyn Transport>,
+    codec: CodecKind,
+    replay: Option<Message>,
+}
+
+/// Fan one frame out per lane. The star's links are independent, and
+/// `Transport::send` charges the (simulated or real) link occupancy
+/// inline — sending lane-by-lane would serialize K−1 transfers that
+/// real hardware carries concurrently and overstate K-party comm time
+/// by (K−1)×. One lane takes the direct call (the two-party path,
+/// thread-free and behaviourally identical to the historic Party B);
+/// more fan out on scoped sender threads, one per link.
+fn send_fanout(lanes: &[LaneState], mut frames: Vec<Message>)
+               -> anyhow::Result<()> {
+    debug_assert_eq!(lanes.len(), frames.len());
+    if frames.len() == 1 {
+        return lanes[0].transport.send(frames.pop().expect("one frame"));
+    }
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let senders: Vec<_> = lanes
+            .iter()
+            .zip(frames)
+            .map(|(lane, frame)| {
+                s.spawn(move || lane.transport.send(frame))
+            })
+            .collect();
+        for sender in senders {
+            sender.join().expect("derivative sender panicked")?;
+        }
+        Ok(())
+    })
+}
+
+pub fn run_label_party(
+    cfg: &RunConfig,
+    set: Arc<ArtifactSet>,
+    train: Arc<PartyBData>,
+    test: Arc<PartyBData>,
+    links: &[Link],
+) -> anyhow::Result<LabelPartyReport> {
+    anyhow::ensure!(!links.is_empty(),
+                    "label party needs at least one feature link");
+    let batch = set.manifest.batch;
+    let runtime = Arc::new(Mutex::new(PartyBRuntime::new(
+        set.clone(),
+        // The label party's init stream must differ from the feature
+        // parties' but the *batch schedule* seed must match: all derive
+        // from cfg.seed.
+        cfg.seed,
+        cfg.lr as f32,
+        cfg.cos_xi() as f32,
+        cfg.weighting_enabled(),
+    )?));
+    let workset = Arc::new(MeshWorkset::new(
+        links.len(),
+        cfg.effective_w(),
+        cfg.effective_r().max(1),
+        cfg.sampling(),
+    ));
+    let ctrl = Arc::new(Ctrl::default());
+    let cosine = Arc::new(Mutex::new(CosineRecorder::default()));
+    let loss_ema = Arc::new(Mutex::new(Ema::new(0.95)));
+
+    // ---- local worker ------------------------------------------------------
+    let local_handle = if cfg.effective_r() > 0 {
+        let runtime = runtime.clone();
+        let workset = workset.clone();
+        let ctrl = ctrl.clone();
+        let train = train.clone();
+        let cosine = cosine.clone();
+        let loss_ema = loss_ema.clone();
+        Some(std::thread::Builder::new()
+            .name("label-party-local".into())
+            .spawn(move || -> anyhow::Result<u64> {
+                let mut steps = 0u64;
+                let mut scratch = GatherScratch::default();
+                while !ctrl.stopped() {
+                    // Park through §3.2 bubbles; `insert` notifies. The
+                    // sampled entry carries the aggregate Σ_k Z_k.
+                    match workset.sample_or_wait(BUBBLE_PARK)? {
+                        Some(e) => {
+                            let (xb, y) = gather_b_with(&train, &e.indices,
+                                                        &mut scratch);
+                            let (loss, ws) = runtime
+                                .lock()
+                                .unwrap()
+                                .local_step(&xb, &y, &e.za, &e.dza)?;
+                            steps += 1;
+                            cosine.lock().unwrap().push(steps, &ws);
+                            loss_ema.lock().unwrap().push(loss as f64);
+                        }
+                        None => {}
+                    }
+                }
+                Ok(steps)
+            })?)
+    } else {
+        None
+    };
+
+    // ---- comm worker + control plane (this thread) -------------------------
+    let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
+    let mut scratch = GatherScratch::default();
+    let eval_batches = eval_batch_count(cfg, test.n, batch);
+    let start = Instant::now();
+    let mut series: Vec<SeriesPoint> = Vec::new();
+    let mut stop_reason = StopReason::MaxRounds;
+    let mut comm_rounds = 0u64;
+
+    let result: anyhow::Result<()> = (|| {
+        // Handshake, per link: feature parties speak first. A `Hello`
+        // is answered with our capabilities (whether or not we were
+        // configured to compress); any other first frame is a
+        // pre-handshake peer and is replayed into round 0 below with
+        // the identity codec. Links negotiate independently — one
+        // compressed peer does not force (or break) another.
+        let mut lanes: Vec<LaneState> = Vec::with_capacity(links.len());
+        for link in links {
+            let requested = cfg.codec_for(link.peer.0);
+            let mut replay = None;
+            let codec = match link.transport.recv()? {
+                Message::Hello { codecs: peer } => {
+                    link.transport.send(Message::Hello {
+                        codecs: compress::supported_mask(),
+                    })?;
+                    let eff = compress::negotiate(requested, Some(peer));
+                    if eff != requested {
+                        log::warn!(
+                            "[{}] peer cannot decode codec {} \
+                             (mask {peer:#x}) — sending uncompressed",
+                            link.peer,
+                            requested.label()
+                        );
+                    }
+                    eff
+                }
+                first => {
+                    if requested != CodecKind::Identity {
+                        // The label party cannot initiate (feature
+                        // parties speak first in the lock-step
+                        // protocol): a plain first frame means the peer
+                        // predates or didn't request compression, so
+                        // this link's request is dropped — loudly, not
+                        // silently.
+                        log::warn!(
+                            "[{}] compress = {} requested but peer \
+                             opened without a handshake — sending \
+                             uncompressed",
+                            link.peer,
+                            requested.label()
+                        );
+                    }
+                    replay = Some(first);
+                    CodecKind::Identity
+                }
+            };
+            lanes.push(LaneState {
+                peer: link.peer,
+                transport: link.transport.clone(),
+                codec,
+                replay,
+            });
+        }
+        for round in 0..cfg.max_rounds as u64 {
+            let idx = cursor.next_indices();
+            let (xb, y) = gather_b_with(&train, &idx, &mut scratch);
+            // Collect this round's activation from every lane (the
+            // protocol is lock-step per link, so lane order is just a
+            // join order, not a scheduling constraint).
+            let mut zas: Vec<Tensor> = Vec::with_capacity(lanes.len());
+            for lane in lanes.iter_mut() {
+                let msg = match lane.replay.take() {
+                    Some(m) => m,
+                    None => lane.transport.recv()?,
+                };
+                let za = match msg.into_plain()? {
+                    Message::Activation { round: r, tensor } => {
+                        anyhow::ensure!(
+                            r == round,
+                            "protocol skew on {}: got activation {r}, \
+                             expected {round}", lane.peer
+                        );
+                        tensor
+                    }
+                    other => anyhow::bail!(
+                        "unexpected message {:?} from {} in round \
+                         {round}", other.tag(), lane.peer),
+                };
+                zas.push(za);
+            }
+            // Σ_k Z_k — with one lane this is the lane's own handle
+            // (no copy), so the two-party exact step is unchanged.
+            let zsum = Tensor::sum_f32(&zas)?;
+            let (dza, loss) = runtime
+                .lock()
+                .unwrap()
+                .exact_step(&xb, &y, &zsum)?;
+            if cfg.compute_delay_s > 0.0 {
+                // Optional artificial compute cost (comm:compute ratio
+                // studies — see DESIGN.md §3).
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    cfg.compute_delay_s));
+            }
+            loss_ema.lock().unwrap().push(loss as f64);
+            // Cache first (identity: handle share, no payload copy;
+            // lossy: that link's dequantized round-trip the peer will
+            // also see), then occupy the WANs: the local worker trains
+            // on round `i`'s statistics while the derivatives are
+            // still in flight. ∂L/∂Z_k is the same for every k, so one
+            // exact step serves every outgoing frame.
+            let mut outgoing = Vec::with_capacity(lanes.len());
+            let mut cached = Vec::with_capacity(lanes.len());
+            for (lane, za_k) in lanes.iter().zip(zas) {
+                let (dmsg, dza_k) = outbound_stats(
+                    lane.codec, Lane::Derivative, round, dza.clone())?;
+                outgoing.push(dmsg);
+                cached.push((za_k, dza_k));
+            }
+            workset.insert(round, idx, cached);
+            send_fanout(&lanes, outgoing)?;
+            comm_rounds = round + 1;
+
+            // Eval lane + stop decision.
+            if comm_rounds % cfg.eval_every as u64 == 0 {
+                let mut scores = Vec::with_capacity(eval_batches * batch);
+                let mut labels = Vec::with_capacity(eval_batches * batch);
+                for k in 0..eval_batches {
+                    let idx: Vec<u32> = ((k * batch) as u32
+                        ..((k + 1) * batch) as u32)
+                        .collect();
+                    let (xb, y) = gather_b_with(&test, &idx, &mut scratch);
+                    let mut zs: Vec<Tensor> =
+                        Vec::with_capacity(lanes.len());
+                    for lane in lanes.iter() {
+                        let za = match lane.transport.recv()?
+                            .into_plain()?
+                        {
+                            Message::EvalActivation { round: r, tensor } =>
+                            {
+                                anyhow::ensure!(
+                                    r == k as u64,
+                                    "eval lane skew on {}: {r} != {k}",
+                                    lane.peer
+                                );
+                                tensor
+                            }
+                            other => anyhow::bail!(
+                                "expected eval activation from {}, got \
+                                 {:?}", lane.peer, other.tag()),
+                        };
+                        zs.push(za);
+                    }
+                    let za = Tensor::sum_f32(&zs)?;
+                    let yhat =
+                        runtime.lock().unwrap().eval(&xb, &za)?;
+                    scores.extend(yhat);
+                    labels.extend_from_slice(y.as_f32()?);
+                }
+                let auc = auc_exact(&scores, &labels);
+                let rt = runtime.lock().unwrap();
+                let updates = rt.exact_updates + rt.local_updates;
+                drop(rt);
+                let point = SeriesPoint {
+                    comm_round: comm_rounds,
+                    wall_s: start.elapsed().as_secs_f64(),
+                    auc,
+                    loss: loss_ema.lock().unwrap().get(),
+                    updates,
+                };
+                log::info!(
+                    "[{}] round {:>6}  auc {:.4}  loss {:.4}  updates {}",
+                    cfg.algorithm.name(), comm_rounds, auc, point.loss,
+                    updates
+                );
+                series.push(point);
+                if cfg.target_auc > 0.0 && auc >= cfg.target_auc {
+                    stop_reason = StopReason::TargetAuc;
+                    return Ok(());
+                }
+                if cfg.max_seconds > 0.0
+                    && start.elapsed().as_secs_f64() >= cfg.max_seconds
+                {
+                    stop_reason = StopReason::TimeBudget;
+                    return Ok(());
+                }
+            }
+        }
+        Ok(())
+    })();
+    // Broadcast shutdown on every link regardless of how we exited.
+    for link in links {
+        let _ = link.transport.send(Message::Shutdown);
+    }
+    ctrl.stop();
+    workset.wake_all(); // unpark a local worker sleeping through a bubble
+    let local_updates = match local_handle {
+        Some(h) => h.join().expect("label party local worker panicked")?,
+        None => 0,
+    };
+    result?;
+
+    let exact_updates = runtime.lock().unwrap().exact_updates;
+    let ws_stats = workset.stats();
+    let cosine = Arc::try_unwrap(cosine)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_default();
+    Ok(LabelPartyReport {
+        comm_rounds,
+        exact_updates,
+        local_updates,
+        workset: ws_stats,
+        cosine,
+        series,
+        stop_reason,
+    })
+}

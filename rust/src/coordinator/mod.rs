@@ -1,35 +1,104 @@
-//! The L3 coordinator: CELU-VFL's two-party training runtime.
+//! The L3 coordinator: CELU-VFL's K-party training runtime.
 //!
-//! Faithful to Figure 2 of the paper: each party runs a **communication
-//! worker** (the two-phase Z_A / ∇Z_A exchange plus exact updates) and a
-//! **local worker** (local updates from the workset table) concurrently,
-//! sharing the party's parameter state and workset behind locks. The two
-//! parties connect through a `Transport` (simulated-WAN in-proc pair or
-//! real TCP).
+//! Faithful to Figure 2 of the paper, generalized over the session
+//! topology (`session` module): each party runs a **communication
+//! worker** (the two-phase Z/∇Z exchange plus exact updates) and a
+//! **local worker** (local updates from the workset table)
+//! concurrently, sharing the party's parameter state and workset behind
+//! locks. Parties connect through per-peer `Transport` links (simulated
+//! WAN in-proc star or real TCP).
 //!
-//! Protocol timeline per communication round `i` (lock-step, FIFO):
-//!   A: gather X_A → Z_A = fwd → send Activation{i} → … → recv Derivative
-//!      → exact update → insert ⟨i, Z_A, ∇Z_A⟩ into A's workset
-//!   B: recv Activation{i} → gather X_B,y → exact step (emits ∇Z_A, loss)
-//!      → send Derivative{i} → insert into B's workset
-//! Every `eval_every` rounds both parties walk the eval lane (A streams
-//! activations for the held-out batches, B scores AUC). Party B owns the
-//! stopping decision (target AUC / max rounds / time budget) and
-//! broadcasts `Shutdown`.
+//! Roles (DESIGN.md §6): K−1 **feature parties** (`feature_party`, one
+//! driver parameterized by `PartyId`) each hold a vertical feature
+//! slice and a bottom model; the **label party** (`label_party`) holds
+//! features + labels, aggregates Σ_k Z_k across its activation lanes,
+//! and fans the shared derivative out per link.
+//!
+//! Protocol timeline per communication round `i` (lock-step per link):
+//!   feature k: gather X_k → Z_k = fwd → send Activation{i} → … →
+//!      recv Derivative → exact update → insert ⟨i, Z_k, ∇Z⟩ into k's
+//!      workset
+//!   label: recv Activation{i} from every lane → gather X_B,y → exact
+//!      step on Σ_k Z_k (emits ∇Z, loss) → cache per-lane → fan out
+//!      Derivative{i}
+//! Every `eval_every` rounds all parties walk the eval lane (features
+//! stream activations for the held-out batches, the label party scores
+//! AUC). The label party owns the stopping decision (target AUC / max
+//! rounds / time budget) and broadcasts `Shutdown` on every link.
+//!
+//! The historic two-party entry points ([`run_party_a`],
+//! [`run_party_b`], [`trainer::run_training`] with `parties = 2`) are
+//! thin wrappers over these drivers and produce byte-identical wire
+//! traffic to the pre-session code (pinned by the protocol golden
+//! fixtures).
 
-pub mod party_a;
-pub mod party_b;
+pub mod feature_party;
+pub mod label_party;
 pub mod trainer;
 
 pub use trainer::{run_training, TrainOutcome};
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
+
+use crate::config::RunConfig;
+use crate::data::{PartyAData, PartyBData};
+use crate::runtime::ArtifactSet;
+use crate::session::{Link, PartyId};
+use crate::transport::Transport;
+
+use feature_party::{run_feature_party, FeaturePartyReport};
+use label_party::{run_label_party, LabelPartyReport};
 
 /// How long a local worker parks on the workset condvar before re-checking
 /// its stop flag. §3.2 bubbles are normally broken by an insert notify —
 /// this bound only caps shutdown latency (and spurious-wakeup churn).
 pub(crate) const BUBBLE_PARK: Duration = Duration::from_millis(2);
+
+/// Number of held-out batches every party walks on the eval lane.
+pub fn eval_batch_count(cfg: &RunConfig, test_n: usize, batch: usize)
+                        -> usize {
+    cfg.eval_batches.min(test_n / batch).max(1)
+}
+
+/// Parameter-init seed for feature party `party`. Party 1 uses the run
+/// seed unchanged — bit-identical to the historic Party A — and later
+/// parties decorrelate by a fixed odd stride so no two bottom models
+/// start from the same stream. (The *batch schedule* seed is shared by
+/// every party and is not derived from this.)
+pub(crate) fn feature_seed(seed: u64, party: PartyId) -> u64 {
+    seed.wrapping_add(
+        (party.0 as u64).wrapping_sub(1)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+/// Two-party compat wrapper: run the single feature party (historic
+/// "Party A") over one link. Thin shim over
+/// [`feature_party::run_feature_party`] with `PartyId(1)`.
+pub fn run_party_a(
+    cfg: &RunConfig,
+    set: Arc<ArtifactSet>,
+    train: Arc<PartyAData>,
+    test: Arc<PartyAData>,
+    transport: Arc<dyn Transport>,
+) -> anyhow::Result<FeaturePartyReport> {
+    run_feature_party(cfg, PartyId(1), set, train, test, transport)
+}
+
+/// Two-party compat wrapper: run the label party (historic "Party B")
+/// over one link. Thin shim over [`label_party::run_label_party`].
+pub fn run_party_b(
+    cfg: &RunConfig,
+    set: Arc<ArtifactSet>,
+    train: Arc<PartyBData>,
+    test: Arc<PartyBData>,
+    transport: Arc<dyn Transport>,
+) -> anyhow::Result<LabelPartyReport> {
+    let links = [Link { peer: PartyId(1), transport }];
+    run_label_party(cfg, set, train, test, &links)
+}
 
 /// Shared stop flag between a party's comm and local workers.
 #[derive(Debug, Default)]
@@ -57,5 +126,18 @@ mod tests {
         assert!(!c.stopped());
         c.stop();
         assert!(c.stopped());
+    }
+
+    #[test]
+    fn feature_seeds_are_stable_and_distinct() {
+        // Party 1 must reproduce the historic Party A stream exactly.
+        assert_eq!(feature_seed(42, PartyId(1)), 42);
+        let seeds: Vec<u64> = (1..=5)
+            .map(|p| feature_seed(42, PartyId(p)))
+            .collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len(), "seed collision: {seeds:?}");
     }
 }

@@ -1,23 +1,32 @@
-//! Single-process trainer: spins up both parties over a simulated-WAN
-//! in-proc transport pair, runs one full training job, and assembles the
-//! `RunRecord` consumed by every experiment harness.
+//! Single-process trainer: spins up all `cfg.parties` parties over a
+//! simulated-WAN in-proc star mesh (one duplex link per feature party),
+//! runs one full training job, and assembles the `RunRecord` consumed
+//! by every experiment harness.
+//!
+//! `parties = 2` is the paper's two-party protocol — one feature thread
+//! plus the label party on the calling thread, byte-identical wire
+//! traffic to the pre-session trainer. `parties = K` splits the
+//! synthetic Party-A features vertically into K−1 slices
+//! (`PartyAData::vertical_split`), runs one feature-party thread per
+//! slice, and the label party aggregates Σ_k Z_k.
 //!
 //! Artifact sets are compiled once per process and cached (`set_cache`) —
-//! parameter state is per-run, so sweeps over (R, W, ξ, algorithm, seed)
-//! reuse the compiled executables.
+//! parameter state is per-run, so sweeps over (R, W, ξ, algorithm, seed,
+//! parties) reuse the compiled executables.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
 use crate::data::SynthDataset;
-use crate::metrics::RunRecord;
+use crate::metrics::{LinkRecord, RunRecord};
 use crate::runtime::ArtifactSet;
-use crate::transport::{inproc_pair, Transport};
+use crate::session::{inproc_star, PartyId, SessionBuilder, LABEL_PARTY};
+use crate::transport::Transport;
 
-use super::party_a::run_party_a;
-use super::party_b::{run_party_b, PartyBReport, StopReason};
+use super::feature_party::FeaturePartyReport;
+use super::label_party::{LabelPartyReport, StopReason};
 
 /// Outcome of one training run.
 pub struct TrainOutcome {
@@ -60,7 +69,8 @@ pub fn load_data(cfg: &RunConfig, set: &ArtifactSet)
     )
 }
 
-/// Run one full two-party training job in-process.
+/// Run one full K-party training job in-process (K = `cfg.parties`;
+/// 2 is the classic two-party run).
 pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
     cfg.validate()?;
     let set = load_set(cfg)?;
@@ -69,63 +79,133 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
         "train_instances {} < batch {}", cfg.train_instances,
         set.manifest.batch
     );
+    let k = cfg.feature_parties();
     let data = load_data(cfg, &set)?;
-    let train_a = Arc::new(data.train_a);
-    let test_a = Arc::new(data.test_a);
+    // Vertical split of the Party-A feature space across the feature
+    // parties. The two-party case moves the data instead of calling
+    // `vertical_split(1)` (which clones): the full id matrix is tens of
+    // MB at sweep scale and is about to be wrapped in an Arc anyway.
+    let (train_slices, test_slices) = if k == 1 {
+        (vec![data.train_a], vec![data.test_a])
+    } else {
+        (data.train_a.vertical_split(k)?,
+         data.test_a.vertical_split(k)?)
+    };
+    if k > 1 {
+        // The bottom-model artifact has a fixed input width; a K-party
+        // run needs artifacts compiled for the per-party slice.
+        for (i, s) in train_slices.iter().enumerate() {
+            anyhow::ensure!(
+                s.fields == set.manifest.fields_a,
+                "artifact set '{}' compiles a {}-field bottom model but \
+                 feature party {} holds {} of the vertically-split \
+                 fields — compile per-party artifacts \
+                 (python/compile, fields_a = {}) for --parties {}",
+                cfg.artifact_tag(), set.manifest.fields_a, i + 1,
+                s.fields, s.fields, cfg.parties
+            );
+        }
+    }
     let train_b = Arc::new(data.train_b);
     let test_b = Arc::new(data.test_b);
 
-    let (ta, tb) = inproc_pair(cfg.wan);
-    let ta: Arc<dyn Transport> = Arc::new(ta);
-    let tb: Arc<dyn Transport> = Arc::new(tb);
+    let (label_links, feature_links) = inproc_star(cfg);
+    let feature_transports: Vec<_> =
+        feature_links.iter().map(|l| l.transport.clone()).collect();
 
     let start = Instant::now();
-    let cfg_a = cfg.clone();
-    let set_a = set.clone();
-    let ta_for_a = ta.clone();
-    let a_handle = std::thread::Builder::new()
-        .name("party-a".into())
-        .spawn(move || {
-            run_party_a(&cfg_a, set_a, train_a, test_a, ta_for_a)
-        })?;
-    let b_report: PartyBReport =
-        run_party_b(cfg, set.clone(), train_b, test_b, tb.clone())?;
-    let a_report = a_handle.join().expect("party A panicked")?;
+    let mut handles = Vec::with_capacity(k);
+    for ((i, flink), (train, test)) in feature_links
+        .into_iter()
+        .enumerate()
+        .zip(train_slices.into_iter().zip(test_slices))
+    {
+        let party = PartyId(i as u16 + 1);
+        let cfg_f = cfg.clone();
+        let set_f = set.clone();
+        let train = Arc::new(train);
+        let test = Arc::new(test);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("feature-{}", party.0))
+                .spawn(move || -> anyhow::Result<FeaturePartyReport> {
+                    let session = SessionBuilder::new(&cfg_f, party)
+                        .link(LABEL_PARTY, flink.transport)
+                        .build()?;
+                    session.run_feature(set_f, train, test)
+                })?,
+        );
+    }
+    let mut label_builder = SessionBuilder::new(cfg, LABEL_PARTY);
+    for l in label_links {
+        label_builder = label_builder.link(l.peer, l.transport);
+    }
+    let label_session = label_builder.build()?;
+    let b_report: LabelPartyReport =
+        label_session.run_label(set.clone(), train_b, test_b)?;
+    let mut feature_reports = Vec::with_capacity(k);
+    for h in handles {
+        feature_reports.push(h.join().expect("feature party panicked")?);
+    }
     let wall = start.elapsed();
 
-    let a_stats = ta.stats();
-    let b_stats = tb.stats();
-    let mut record = RunRecord {
+    // Per-link accounting: one row per directed link of the star.
+    let mut links = Vec::with_capacity(2 * k);
+    let mut comm_busy = Duration::ZERO;
+    for (i, t) in feature_transports.iter().enumerate() {
+        let s = t.stats();
+        links.push(LinkRecord {
+            src: PartyId(i as u16 + 1),
+            dst: LABEL_PARTY,
+            messages: s.messages,
+            bytes: s.bytes,
+            raw_bytes: s.raw_bytes,
+        });
+        comm_busy += s.busy;
+    }
+    for (peer, s) in label_session.mesh().link_stats() {
+        links.push(LinkRecord {
+            src: LABEL_PARTY,
+            dst: peer,
+            messages: s.messages,
+            bytes: s.bytes,
+            raw_bytes: s.raw_bytes,
+        });
+        comm_busy += s.busy;
+    }
+
+    debug_assert!(feature_reports
+        .iter()
+        .all(|r| r.comm_rounds == b_report.comm_rounds));
+    let feature_local_updates: Vec<u64> =
+        feature_reports.iter().map(|r| r.local_updates).collect();
+    let primary = feature_reports.swap_remove(0);
+    let record = RunRecord {
         label: format!("{}/{}", cfg.algorithm.name(), cfg.artifact_tag()),
         series: b_report.series,
-        cosine: a_report.cosine,
+        cosine: primary.cosine,
         cosine_b: b_report.cosine,
         comm_rounds: b_report.comm_rounds,
         exact_updates: b_report.exact_updates,
         local_updates: b_report.local_updates,
-        bytes_a_to_b: a_stats.bytes,
-        bytes_b_to_a: b_stats.bytes,
-        raw_bytes_a_to_b: a_stats.raw_bytes,
-        raw_bytes_b_to_a: b_stats.raw_bytes,
-        comm_busy: a_stats.busy + b_stats.busy,
+        feature_local_updates,
+        links,
+        comm_busy,
         wall,
         compute_busy: set.clock_a.busy() + set.clock_b.busy(),
     };
-    // Per-run compute accounting: clocks are cumulative per artifact set,
-    // so snapshot deltas would be needed for overlapping runs; trainer
-    // runs are sequential per process, so we reset by subtraction at the
-    // harness level instead. Record A-side counts too.
-    record.exact_updates = b_report.exact_updates;
-    debug_assert_eq!(a_report.comm_rounds, b_report.comm_rounds);
     log::info!(
-        "run {} finished: {} rounds, {} local updates (B), wall {:.1}s, \
-         comm busy {:.1}s ({:.0}%)",
+        "run {} finished: {} parties, {} rounds, {} local updates \
+         (label), wall {:.1}s, comm busy {:.1}s ({:.0}% per link)",
         record.label,
+        cfg.parties,
         record.comm_rounds,
         record.local_updates,
         wall.as_secs_f64(),
         record.comm_busy.as_secs_f64(),
-        100.0 * record.comm_fraction() / 2.0
+        // comm_busy sums every directed link, so the per-link average
+        // divides by the link count (2 for the two-party run).
+        100.0 * record.comm_fraction() / record.links.len().max(1) as f64
     );
     Ok(TrainOutcome { record, stop_reason: b_report.stop_reason })
 }

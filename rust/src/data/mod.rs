@@ -36,6 +36,45 @@ pub struct PartyAData {
     pub n: usize,
 }
 
+impl PartyAData {
+    /// Split this feature slice vertically into `k` contiguous column
+    /// slices — the K-party partition of the paper's Party-A fields.
+    /// Widths are near-equal (the first `fields % k` slices get one
+    /// extra column); every column lands in exactly one slice, so the
+    /// union of the slices is the original data and no feature is
+    /// shared between parties (the VFL premise). `k = 1` returns a
+    /// clone of the data unchanged — hot-path callers (the trainer's
+    /// two-party case) move the data instead of paying the copy.
+    pub fn vertical_split(&self, k: usize)
+                          -> anyhow::Result<Vec<PartyAData>> {
+        anyhow::ensure!(k >= 1, "vertical split needs ≥ 1 slice");
+        anyhow::ensure!(
+            k <= self.fields,
+            "cannot split {} fields across {k} feature parties",
+            self.fields
+        );
+        if k == 1 {
+            return Ok(vec![self.clone()]);
+        }
+        let base = self.fields / k;
+        let extra = self.fields % k;
+        let mut out = Vec::with_capacity(k);
+        let mut off = 0usize;
+        for s in 0..k {
+            let w = base + usize::from(s < extra);
+            let mut x = Vec::with_capacity(self.n * w);
+            for row in 0..self.n {
+                let start = row * self.fields + off;
+                x.extend_from_slice(&self.x[start..start + w]);
+            }
+            out.push(PartyAData { fields: w, x, n: self.n });
+            off += w;
+        }
+        debug_assert_eq!(off, self.fields);
+        Ok(out)
+    }
+}
+
 /// Party B's vertical slice: features + ground-truth labels.
 #[derive(Debug, Clone)]
 pub struct PartyBData {
@@ -270,6 +309,32 @@ mod tests {
             diff += (full - zeroed).abs() as f64;
         }
         assert!(diff / 200.0 > 0.1, "XA contributes nothing to the label");
+    }
+
+    #[test]
+    fn vertical_split_partitions_columns_exactly() {
+        let ds = tiny(); // criteo: 26 A-side fields
+        let slices = ds.train_a.vertical_split(3).unwrap();
+        // Near-equal widths: 26 → 9 + 9 + 8.
+        assert_eq!(slices.iter().map(|s| s.fields).collect::<Vec<_>>(),
+                   vec![9, 9, 8]);
+        assert!(slices.iter().all(|s| s.n == ds.train_a.n));
+        // Row 17 reassembles exactly from the slices, in column order.
+        let row = 17usize;
+        let mut rebuilt = Vec::new();
+        for s in &slices {
+            rebuilt.extend_from_slice(
+                &s.x[row * s.fields..(row + 1) * s.fields]);
+        }
+        assert_eq!(rebuilt, &ds.train_a.x[row * 26..(row + 1) * 26]);
+        // k = 1 is the identity (two-party path untouched).
+        let one = ds.train_a.vertical_split(1).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].x, ds.train_a.x);
+        assert_eq!(one[0].fields, 26);
+        // Degenerate splits are rejected.
+        assert!(ds.train_a.vertical_split(0).is_err());
+        assert!(ds.train_a.vertical_split(27).is_err());
     }
 
     #[test]

@@ -10,12 +10,15 @@
 //! Beyond the paper's grid, `sweep_compress` opens the wire-compression
 //! scenario (DESIGN.md §5): convergence and bytes-on-wire per codec,
 //! with `compression_bytes_per_round` providing the artifact-free
-//! protocol-level byte accounting.
+//! protocol-level byte accounting. `sweep_parties` does the same for
+//! the session topology (DESIGN.md §6): convergence vs the party count
+//! K, with `mesh_bytes_per_round` giving the artifact-free per-link
+//! accounting of the K-party star.
 
 use crate::compress::CodecKind;
 use crate::config::{Algorithm, RunConfig};
 use crate::coordinator::trainer::run_trials;
-use crate::protocol::{outbound_stats, Lane};
+use crate::protocol::{outbound_stats, Lane, FRAME_V2_OVERHEAD};
 use crate::tensor::Tensor;
 
 use super::SweepResult;
@@ -215,6 +218,103 @@ pub fn compression_bytes_per_round(batch: usize, z_dim: usize,
         ));
     }
     Ok(out)
+}
+
+/// Topology ablation: convergence vs the session party count at
+/// otherwise fixed hyper-parameters. The first entry is the two-party
+/// baseline, so `summarize` reports rounds-to-target deltas against
+/// the classic protocol. (K > 2 requires artifacts compiled for the
+/// per-party feature slice — see `trainer::run_training`.)
+pub fn sweep_parties(base: &RunConfig, parties: &[usize])
+                     -> anyhow::Result<Vec<SweepResult>> {
+    let variants = parties
+        .iter()
+        .map(|&k| {
+            let mut c = base.clone();
+            c.parties = k;
+            (format!("K={k}"), c)
+        })
+        .collect();
+    run_variants(variants)
+}
+
+/// Artifact-free byte accounting for one communication round of a
+/// K-party star at statistics shape [batch, z_dim]: per-link rows
+/// (label `src`/`dst` by party id) of the framed Z_k + ∇Z exchange,
+/// v2 envelope included whenever the session spans more than two
+/// parties. Returns (link label, wire bytes/round) rows plus the
+/// session total — the protocol-level cost model behind
+/// `sweep_parties`.
+pub fn mesh_bytes_per_round(parties: usize, batch: usize, z_dim: usize)
+                            -> anyhow::Result<(Vec<(String, usize)>,
+                                               usize)> {
+    anyhow::ensure!(parties >= 2, "a session needs ≥ 2 parties");
+    let k = parties - 1;
+    let envelope = if parties > 2 { FRAME_V2_OVERHEAD } else { 0 };
+    let synth = |seed: f32| -> Tensor {
+        let v: Vec<f32> = (0..batch * z_dim)
+            .map(|i| ((i as f32 * 0.37 + seed).sin()) * 0.8)
+            .collect();
+        Tensor::f32(vec![batch, z_dim], v)
+    };
+    let mut rows = Vec::with_capacity(2 * k);
+    let mut total = 0usize;
+    for f in 1..=k {
+        let (act, _) = outbound_stats(CodecKind::Identity,
+                                      Lane::Activation, 0,
+                                      synth(f as f32))?;
+        let (der, _) = outbound_stats(CodecKind::Identity,
+                                      Lane::Derivative, 0,
+                                      synth(f as f32 + 0.5))?;
+        let up = act.wire_bytes() + envelope;
+        let down = der.wire_bytes() + envelope;
+        rows.push((format!("{f}->0"), up));
+        rows.push((format!("0->{f}"), down));
+        total += up + down;
+    }
+    Ok((rows, total))
+}
+
+#[cfg(test)]
+mod parties_tests {
+    use super::*;
+
+    #[test]
+    fn mesh_bytes_scale_with_the_feature_party_count() {
+        // Per-round traffic of the star grows linearly in K−1 (every
+        // feature party exchanges one Z/∇Z pair per round) plus the v2
+        // envelope on every frame once the session leaves two-party
+        // mode.
+        let (rows2, total2) = mesh_bytes_per_round(2, 64, 16).unwrap();
+        let (rows3, total3) = mesh_bytes_per_round(3, 64, 16).unwrap();
+        let (rows5, total5) = mesh_bytes_per_round(5, 64, 16).unwrap();
+        assert_eq!(rows2.len(), 2);
+        assert_eq!(rows3.len(), 4);
+        assert_eq!(rows5.len(), 8);
+        // Two-party: no envelope — exactly the historic per-round cost.
+        let per_link2 = total2;
+        assert_eq!(rows2[0].1 + rows2[1].1, per_link2);
+        // K-party: each of the K−1 links pays the two-party cost plus
+        // two envelopes per round.
+        let per_link_v2 = per_link2 + 2 * FRAME_V2_OVERHEAD;
+        assert_eq!(total3, 2 * per_link_v2);
+        assert_eq!(total5, 4 * per_link_v2);
+        assert!(mesh_bytes_per_round(1, 64, 16).is_err());
+    }
+
+    #[test]
+    fn sweep_parties_builds_labelled_variants() {
+        // Config-plumbing check (run_variants needs artifacts, so only
+        // the variant construction is exercised here).
+        let base = RunConfig::quick();
+        let mut c2 = base.clone();
+        c2.parties = 2;
+        let mut c4 = base.clone();
+        c4.parties = 4;
+        assert!(c2.validate().is_ok());
+        assert!(c4.validate().is_ok());
+        assert_eq!(c4.feature_parties(), 3);
+    }
 }
 
 #[cfg(test)]

@@ -12,6 +12,7 @@
 //! | Thm 1 ρ-vs-staleness probe             | `theory::rho_probe` |
 //! | §1 comm-fraction claim                 | `endtoend` comm column |
 //! | wire-compression sweep (DESIGN.md §5)  | `ablation::sweep_compress`, `ablation::compression_bytes_per_round` |
+//! | K-party topology sweep (DESIGN.md §6)  | `ablation::sweep_parties`, `ablation::mesh_bytes_per_round` |
 
 pub mod ablation;
 pub mod endtoend;

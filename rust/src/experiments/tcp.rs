@@ -1,16 +1,23 @@
 //! Two-process deployment: run one party over real TCP.
 //!
 //! The production shape of a VFL job — each enterprise runs its own
-//! binary inside its own network perimeter; only `Z_A`/`∇Z_A` frames
-//! cross the boundary. Both processes must be launched with the same
-//! config (model/dataset/size/seed) so the pre-aligned synthetic data and
-//! the batch schedule agree, mirroring the paper's post-PSI setup.
+//! binary inside its own network perimeter; only `Z`/`∇Z` frames cross
+//! the boundary. Both processes must be launched with the same config
+//! (model/dataset/size/seed) so the pre-aligned synthetic data and the
+//! batch schedule agree, mirroring the paper's post-PSI setup.
+//!
+//! Roles accept the session vocabulary (`feature` / `label`) as well as
+//! the historic two-party aliases (`a` = feature, `b` = label); either
+//! way the run goes through the session drivers, so the wire format is
+//! the byte-identical two-party stream. Multi-party TCP meshes (a
+//! label process accepting K−1 feature connections, identified by
+//! their v2 frame headers) are an open ROADMAP item — in-proc K-party
+//! runs are already supported by `trainer::run_training`.
 
 use std::sync::Arc;
 
 use crate::config::RunConfig;
-use crate::coordinator::party_a::run_party_a;
-use crate::coordinator::party_b::run_party_b;
+use crate::coordinator::{run_party_a, run_party_b};
 use crate::coordinator::trainer::{load_data, load_set};
 use crate::transport::tcp::TcpTransport;
 use crate::transport::Transport;
@@ -18,10 +25,15 @@ use crate::transport::Transport;
 pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                      connect: &str) -> anyhow::Result<()> {
     cfg.validate()?;
+    anyhow::ensure!(
+        cfg.parties == 2,
+        "TCP deployment currently supports two-party sessions; use the \
+         in-proc trainer for --parties {}", cfg.parties
+    );
     let set = load_set(cfg)?;
     let data = load_data(cfg, &set)?;
     match role {
-        "b" => {
+        "b" | "label" => {
             let transport: Arc<dyn Transport> =
                 Arc::new(TcpTransport::listen(listen, cfg.wan)?);
             let report = run_party_b(
@@ -38,14 +50,14 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 .fold(0.0f64, f64::max);
             let stats = transport.stats();
             println!(
-                "party B done: rounds={} local_updates={} best_auc={:.4} \
-                 sent={}B (raw {}B, ratio {:.2}) stop={:?}",
+                "label party done: rounds={} local_updates={} \
+                 best_auc={:.4} sent={}B (raw {}B, ratio {:.2}) stop={:?}",
                 report.comm_rounds, report.local_updates, best,
                 stats.bytes, stats.raw_bytes, stats.compression_ratio(),
                 report.stop_reason
             );
         }
-        "a" => {
+        "a" | "feature" => {
             let transport: Arc<dyn Transport> =
                 Arc::new(TcpTransport::connect(connect, cfg.wan)?);
             let report = run_party_a(
@@ -57,13 +69,14 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             )?;
             let stats = transport.stats();
             println!(
-                "party A done: rounds={} local_updates={} sent={}B \
-                 (raw {}B, ratio {:.2})",
-                report.comm_rounds, report.local_updates, stats.bytes,
-                stats.raw_bytes, stats.compression_ratio()
+                "feature party {} done: rounds={} local_updates={} \
+                 sent={}B (raw {}B, ratio {:.2})",
+                report.party, report.comm_rounds, report.local_updates,
+                stats.bytes, stats.raw_bytes, stats.compression_ratio()
             );
         }
-        other => anyhow::bail!("role must be 'a' or 'b', got '{other}'"),
+        other => anyhow::bail!(
+            "role must be 'feature'/'a' or 'label'/'b', got '{other}'"),
     }
     Ok(())
 }

@@ -4,12 +4,17 @@
 //! Learning Training via Cache-enabled Local Updates"* (Fu et al., PVLDB
 //! 15(10), 2022) as a three-layer Rust + JAX + Pallas system:
 //!
-//! - **L3 (this crate)** — the VFL coordinator: two-party protocol with
-//!   negotiated wire compression for the exchanged statistics
-//!   (`compress`: fp16 / int8 / top-k codecs, DESIGN.md §5),
-//!   simulated-WAN / TCP transports with raw-vs-wire byte accounting,
-//!   the workset table with round-robin local sampling, comm/local
-//!   worker overlap, metrics and the experiment harnesses.
+//! - **L3 (this crate)** — the VFL coordinator: a K-party session API
+//!   (`session`: role-based parties over a per-peer transport mesh,
+//!   DESIGN.md §6) running the paper's protocol with negotiated wire
+//!   compression for the exchanged statistics (`compress`: fp16 / int8
+//!   / top-k codecs, DESIGN.md §5), simulated-WAN / TCP transports with
+//!   per-link raw-vs-wire byte accounting, per-peer workset lanes with
+//!   round-robin local sampling, comm/local worker overlap, metrics and
+//!   the experiment harnesses. The two-party entry points
+//!   (`coordinator::run_party_a` / `run_party_b`, `--parties 2`) are
+//!   thin wrappers over the session API and keep the historic wire
+//!   format byte-for-byte.
 //! - **L2 (python/compile)** — JAX step functions (WDL/DSSM bottoms +
 //!   tops, AdaGrad), AOT-lowered once to HLO-text artifacts.
 //! - **L1 (python/compile/kernels)** — Pallas kernels for the
@@ -29,6 +34,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod protocol;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod testing;
 pub mod transport;

@@ -1,14 +1,16 @@
 //! `celu-vfl` — CLI launcher for the CELU-VFL training framework.
 //!
 //! Subcommands:
-//!   train   run a two-party training job in-process (simulated WAN)
+//!   train   run a K-party training job in-process (simulated WAN;
+//!           --parties 2 is the classic two-party run)
 //!   party   run one party of a two-process TCP deployment
 //!   info    print artifact/manifest information
 //!
 //! Examples:
 //!   celu-vfl train --config configs/quickstart.toml
 //!   celu-vfl train --algorithm celu --r 5 --w 5 --xi 60 --rounds 2000
-//!   celu-vfl party --role b --listen 0.0.0.0:7000 --config cfg.toml
+//!   celu-vfl train --parties 3 --rounds 500
+//!   celu-vfl party --role label --listen 0.0.0.0:7000 --config cfg.toml
 //!   celu-vfl info --artifacts artifacts
 
 use celu_vfl::compress::CodecKind;
@@ -68,6 +70,9 @@ fn apply_overrides(cfg: &mut RunConfig,
     if ov(args.get("compress")) {
         cfg.compress = CodecKind::parse(args.get("compress"))?;
     }
+    if ov(args.get("parties")) {
+        cfg.parties = args.get_usize("parties")?;
+    }
     if ov(args.get("rounds")) {
         cfg.max_rounds = args.get_usize("rounds")?;
     }
@@ -98,6 +103,8 @@ fn train_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("xi", "-", "weighting threshold ξ in degrees (180 = off)")
         .opt("compress", "-",
              "statistics wire codec: none | fp16 | int8 | topk:<k>")
+        .opt("parties", "-",
+             "total parties incl. the label party (2 = classic)")
         .opt("rounds", "-", "max communication rounds")
         .opt("lr", "-", "AdaGrad learning rate")
         .opt("seed", "-", "PRNG seed")
@@ -120,11 +127,11 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     let args = cli.parse(argv)?;
     let cfg = load_config(&args)?;
     log::info!(
-        "training {}/{} algo={} R={} W={} ξ={}° compress={} lr={} \
-         rounds={}",
-        cfg.model, cfg.dataset, cfg.algorithm.name(), cfg.effective_r(),
-        cfg.effective_w(), cfg.xi_degrees, cfg.compress.label(), cfg.lr,
-        cfg.max_rounds
+        "training {}/{} algo={} parties={} R={} W={} ξ={}° compress={} \
+         lr={} rounds={}",
+        cfg.model, cfg.dataset, cfg.algorithm.name(), cfg.parties,
+        cfg.effective_r(), cfg.effective_w(), cfg.xi_degrees,
+        cfg.compress.label(), cfg.lr, cfg.max_rounds
     );
     let outcome = run_training(&cfg)?;
     let rec = &outcome.record;
@@ -147,7 +154,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
 
 fn cmd_party(argv: &[String]) -> anyhow::Result<()> {
     let cli = train_cli("celu-vfl party", "one party of a TCP deployment")
-        .req("role", "a | b")
+        .req("role", "feature | label (aliases: a | b)")
         .opt("listen", "127.0.0.1:7001", "B: address to listen on")
         .opt("connect", "127.0.0.1:7001", "A: address to connect to");
     let args = cli.parse(argv)?;

@@ -5,4 +5,4 @@ pub mod auc;
 pub mod series;
 
 pub use auc::auc_exact;
-pub use series::{CosineRecorder, RunRecord, SeriesPoint};
+pub use series::{CosineRecorder, LinkRecord, RunRecord, SeriesPoint};

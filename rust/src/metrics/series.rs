@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use crate::session::PartyId;
 use crate::util::json::{arr_f64, num, obj, Json};
 use crate::util::stats::quantile;
 
@@ -59,32 +60,59 @@ impl CosineRecorder {
     }
 }
 
+/// Sender-side traffic of one directed mesh link (`src` → `dst`).
+/// `bytes` is what occupied the wire; `raw_bytes` is what the same
+/// messages would have cost uncompressed (equal when no codec is
+/// negotiated — DESIGN.md §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkRecord {
+    pub src: PartyId,
+    pub dst: PartyId,
+    pub messages: u64,
+    pub bytes: u64,
+    pub raw_bytes: u64,
+}
+
+impl LinkRecord {
+    /// This link's achieved compression ratio (1.0 when idle or
+    /// uncompressed — never NaN/inf, even for a zero-round run).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bytes == 0 {
+            return 1.0;
+        }
+        self.raw_bytes as f64 / self.bytes as f64
+    }
+}
+
 /// Full record of one training run.
 #[derive(Debug, Clone, Default)]
 pub struct RunRecord {
     pub label: String,
     pub series: Vec<SeriesPoint>,
-    /// Party A's wstats rows: cos(Z_A^(i,j), Z_A^(i)) — Fig. 5(d).
+    /// Feature party 1's wstats rows: cos(Z^(i,j), Z^(i)) — Fig. 5(d).
+    /// (K-party runs record the first feature party as representative;
+    /// all parties run the same weighting kernel.)
     pub cosine: CosineRecorder,
-    /// Party B's wstats rows: cos(∇Z_A^(i,j), ∇Z_A^(i)).
+    /// The label party's wstats rows: cos(∇Z^(i,j), ∇Z^(i)).
     pub cosine_b: CosineRecorder,
     /// Total communication rounds executed.
     pub comm_rounds: u64,
-    /// Exact updates / local updates applied (Party B counts).
+    /// Exact updates / local updates applied (label-party counts).
     pub exact_updates: u64,
     pub local_updates: u64,
-    /// Bytes sent per party (wire size: what occupied the link).
-    pub bytes_a_to_b: u64,
-    pub bytes_b_to_a: u64,
-    /// What the same traffic would have occupied uncompressed (equal to
-    /// the wire bytes when no codec is negotiated — DESIGN.md §5).
-    pub raw_bytes_a_to_b: u64,
-    pub raw_bytes_b_to_a: u64,
-    /// Link busy time (sender side, both directions summed).
+    /// Local updates per feature party, in party-id order (index 0 is
+    /// party 1). Two-party runs have exactly one entry.
+    pub feature_local_updates: Vec<u64>,
+    /// Per-link traffic rows, one per directed link of the session mesh
+    /// (two-party runs have exactly [1→0, 0→1]). Aggregate totals are
+    /// derived by [`Self::wire_bytes_total`] / [`Self::raw_bytes_total`]
+    /// and preserved in the JSON output.
+    pub links: Vec<LinkRecord>,
+    /// Link busy time (sender side, all links summed).
     pub comm_busy: Duration,
     /// Total wall time of the run.
     pub wall: Duration,
-    /// Time Party B spent inside PJRT execute calls.
+    /// Time the label party spent inside PJRT execute calls.
     pub compute_busy: Duration,
 }
 
@@ -116,24 +144,53 @@ impl RunRecord {
         self.comm_busy.as_secs_f64() / self.wall.as_secs_f64()
     }
 
-    /// Achieved wire compression ratio across both directions (1.0 when
-    /// uncompressed or idle).
+    /// Total wire bytes across every link of the mesh.
+    pub fn wire_bytes_total(&self) -> u64 {
+        self.links.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Total uncompressed-equivalent bytes across every link.
+    pub fn raw_bytes_total(&self) -> u64 {
+        self.links.iter().map(|l| l.raw_bytes).sum()
+    }
+
+    /// Bytes sent by feature parties toward the label party (the
+    /// historic "A→B" direction, summed over all feature links).
+    pub fn bytes_to_label(&self) -> u64 {
+        self.links
+            .iter()
+            .filter(|l| l.dst == PartyId(0))
+            .map(|l| l.bytes)
+            .sum()
+    }
+
+    /// Bytes sent by the label party toward feature parties (the
+    /// historic "B→A" direction, summed over all feature links).
+    pub fn bytes_from_label(&self) -> u64 {
+        self.links
+            .iter()
+            .filter(|l| l.src == PartyId(0))
+            .map(|l| l.bytes)
+            .sum()
+    }
+
+    /// Achieved wire compression ratio across every link (1.0 when
+    /// uncompressed or idle — guarded against zero wire bytes so a
+    /// zero-round run never emits NaN/inf into the JSON artifact).
     pub fn compression_ratio(&self) -> f64 {
-        let wire = self.bytes_a_to_b + self.bytes_b_to_a;
+        let wire = self.wire_bytes_total();
         if wire == 0 {
             return 1.0;
         }
-        (self.raw_bytes_a_to_b + self.raw_bytes_b_to_a) as f64
-            / wire as f64
+        self.raw_bytes_total() as f64 / wire as f64
     }
 
-    /// Wire bytes per communication round, both directions summed.
+    /// Wire bytes per communication round, all links summed.
     pub fn wire_bytes_per_round(&self) -> f64 {
         if self.comm_rounds == 0 {
             return 0.0;
         }
-        (self.bytes_a_to_b + self.bytes_b_to_a) as f64
-            / self.comm_rounds as f64
+        self.wire_bytes_total() as f64 / self.comm_rounds as f64
     }
 
     /// JSON dump for results/ artifacts.
@@ -164,15 +221,37 @@ impl RunRecord {
                 })
                 .collect(),
         );
+        let links = Json::Arr(
+            self.links
+                .iter()
+                .map(|l| {
+                    obj(vec![
+                        ("src", num(l.src.0 as f64)),
+                        ("dst", num(l.dst.0 as f64)),
+                        ("messages", num(l.messages as f64)),
+                        ("bytes", num(l.bytes as f64)),
+                        ("raw_bytes", num(l.raw_bytes as f64)),
+                        ("compression_ratio",
+                         num(l.compression_ratio())),
+                    ])
+                })
+                .collect(),
+        );
         obj(vec![
             ("label", Json::Str(self.label.clone())),
             ("comm_rounds", num(self.comm_rounds as f64)),
             ("exact_updates", num(self.exact_updates as f64)),
             ("local_updates", num(self.local_updates as f64)),
-            ("bytes_a_to_b", num(self.bytes_a_to_b as f64)),
-            ("bytes_b_to_a", num(self.bytes_b_to_a as f64)),
-            ("raw_bytes_a_to_b", num(self.raw_bytes_a_to_b as f64)),
-            ("raw_bytes_b_to_a", num(self.raw_bytes_b_to_a as f64)),
+            ("feature_local_updates",
+             Json::Arr(self.feature_local_updates
+                 .iter()
+                 .map(|&u| num(u as f64))
+                 .collect())),
+            ("links", links),
+            ("bytes_total", num(self.wire_bytes_total() as f64)),
+            ("raw_bytes_total", num(self.raw_bytes_total() as f64)),
+            ("bytes_to_label", num(self.bytes_to_label() as f64)),
+            ("bytes_from_label", num(self.bytes_from_label() as f64)),
             ("compression_ratio", num(self.compression_ratio())),
             ("comm_busy_s", num(self.comm_busy.as_secs_f64())),
             ("compute_busy_s", num(self.compute_busy.as_secs_f64())),
@@ -236,18 +315,70 @@ mod tests {
         assert!(CosineRecorder::default().summary().is_none());
     }
 
+    fn link(src: u16, dst: u16, bytes: u64, raw: u64) -> LinkRecord {
+        LinkRecord {
+            src: PartyId(src),
+            dst: PartyId(dst),
+            messages: 1,
+            bytes,
+            raw_bytes: raw,
+        }
+    }
+
     #[test]
     fn compression_ratio_and_bytes_per_round() {
         let mut r = RunRecord::default();
         assert_eq!(r.compression_ratio(), 1.0);
         assert_eq!(r.wire_bytes_per_round(), 0.0);
         r.comm_rounds = 10;
-        r.bytes_a_to_b = 400;
-        r.bytes_b_to_a = 600;
-        r.raw_bytes_a_to_b = 1600;
-        r.raw_bytes_b_to_a = 2400;
+        r.links = vec![link(1, 0, 400, 1600), link(0, 1, 600, 2400)];
         assert!((r.compression_ratio() - 4.0).abs() < 1e-12);
         assert!((r.wire_bytes_per_round() - 100.0).abs() < 1e-12);
+        assert_eq!(r.wire_bytes_total(), 1000);
+        assert_eq!(r.raw_bytes_total(), 4000);
+        assert_eq!(r.bytes_to_label(), 400);
+        assert_eq!(r.bytes_from_label(), 600);
+    }
+
+    #[test]
+    fn compression_ratio_is_finite_with_zero_wire_bytes() {
+        // Regression: a zero-round run (no traffic at all) must report
+        // ratio 1.0 — not NaN or inf — in every accessor and in the
+        // JSON artifact.
+        let r = RunRecord::default();
+        assert_eq!(r.compression_ratio(), 1.0);
+        // Even with raw bytes recorded but zero wire bytes (cannot
+        // happen on a real link, but the guard must hold), the ratio
+        // stays finite.
+        let mut r = RunRecord::default();
+        r.links = vec![link(1, 0, 0, 0)];
+        assert_eq!(r.compression_ratio(), 1.0);
+        assert_eq!(r.links[0].compression_ratio(), 1.0);
+        let j = r.to_json().to_string();
+        assert!(!j.contains("NaN") && !j.contains("inf"),
+                "non-finite ratio leaked into JSON: {j}");
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed
+                       .expect("compression_ratio").unwrap()
+                       .as_f64().unwrap(),
+                   1.0);
+    }
+
+    #[test]
+    fn multi_party_links_aggregate_across_the_mesh() {
+        let mut r = RunRecord::default();
+        r.comm_rounds = 5;
+        r.links = vec![
+            link(1, 0, 100, 100),
+            link(2, 0, 150, 300),
+            link(0, 1, 200, 200),
+            link(0, 2, 50, 100),
+        ];
+        assert_eq!(r.wire_bytes_total(), 500);
+        assert_eq!(r.bytes_to_label(), 250);
+        assert_eq!(r.bytes_from_label(), 250);
+        assert!((r.compression_ratio() - 700.0 / 500.0).abs() < 1e-12);
+        assert!((r.links[1].compression_ratio() - 2.0).abs() < 1e-12);
     }
 
     #[test]
@@ -255,11 +386,25 @@ mod tests {
         let mut r = record_with_aucs(&[0.5, 0.7]);
         r.cosine.push(4, &[0.0; 8]);
         r.comm_rounds = 20;
+        r.links = vec![link(1, 0, 400, 400), link(0, 1, 600, 600)];
         let j = r.to_json().to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
         assert_eq!(parsed.expect("comm_rounds").unwrap().as_usize().unwrap(),
                    20);
         assert_eq!(parsed.expect("series").unwrap().as_arr().unwrap().len(),
                    2);
+        // Per-link rows land in the artifact with aggregate totals
+        // preserved alongside.
+        let links = parsed.expect("links").unwrap().as_arr().unwrap();
+        assert_eq!(links.len(), 2);
+        assert_eq!(links[0].expect("src").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(links[0].expect("bytes").unwrap().as_usize().unwrap(),
+                   400);
+        assert_eq!(parsed.expect("bytes_total").unwrap()
+                       .as_usize().unwrap(),
+                   1000);
+        assert_eq!(parsed.expect("raw_bytes_total").unwrap()
+                       .as_usize().unwrap(),
+                   1000);
     }
 }

@@ -8,21 +8,33 @@
 //! property here, not a convention (see §4.2 of the paper).
 //!
 //! Frame layout (little-endian):
-//!   [u32 frame_len][u8 tag][u64 round][u8 dtype][u8 ndim][u32 dim…][payload]
+//!   `[u32 frame_len][u8 tag][u64 round][u8 dtype][u8 ndim][u32 dim…][payload]`
 //! `frame_len` counts everything after itself. Tensor-less messages stop
 //! after `round`.
 //!
 //! Two frame kinds extend the original five (DESIGN.md §5), leaving the
 //! original byte streams untouched:
-//!   [… tag=6][u64 0][u32 codec_mask]                      — `Hello`
-//!   [… tag=7][u64 round][u8 lane][codec block]            — `Compressed`
+//!   `[… tag=6][u64 0][u32 codec_mask]` — `Hello`
+//!   `[… tag=7][u64 round][u8 lane][codec block]` — `Compressed`
 //! where the codec block is
-//!   [u8 codec][u32 param][u8 ndim][u32 dim…][u32 extra_len][extra][payload]
+//!   `[u8 codec][u32 param][u8 ndim][u32 dim…][u32 extra_len][extra][payload]`
 //! (`compress::CompressedStats`). `Hello` advertises the codecs a peer
 //! can decode; `outbound_stats` / `into_plain` apply the negotiated
 //! codec at this boundary so the rest of the stack only sees plain
 //! statistics tensors — peers that never send `Hello` are spoken to in
 //! the original uncompressed format.
+//!
+//! K-party sessions (DESIGN.md §6) frame every link with a **versioned
+//! header** carrying the endpoints' party ids:
+//!   `[u32 frame_len][u8 tag=8][u8 ver=2][u16 src][u16 dst][v1 body…]`
+//! The envelope tag 8 cannot collide with a v1 message tag (1..=7), so
+//! [`decode_frame`] dispatches on the first byte: headerless frames
+//! decode exactly as before (the compat path that keeps the two-party
+//! golden fixtures byte-identical), and v2 frames have their ids
+//! range-checked against [`crate::session::MAX_PARTIES`] *before* the
+//! tensor body — and therefore before any payload-sized allocation —
+//! is touched. Two-party sessions never emit the header; it appears on the
+//! wire only when a session spans more than two parties.
 //!
 //! The codec is zero-copy-oriented (DESIGN.md §4): encoding reserves the
 //! exact frame size once and bulk-copies the payload as a single memcpy on
@@ -34,6 +46,7 @@
 //! format to the original element-wise codec byte-for-byte.
 
 use crate::compress::{self, CodecKind, CompressedStats};
+use crate::session::{PartyId, MAX_PARTIES};
 use crate::tensor::{Data, DType, Tensor};
 
 /// Protocol messages. `round` is the communication-round timestamp `i`
@@ -96,6 +109,105 @@ const TAG_EVAL_ACK: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
 const TAG_HELLO: u8 = 6;
 const TAG_COMP: u8 = 7;
+/// Envelope tag for v2 (party-addressed) frames. Disjoint from every
+/// v1 message tag so the decoder can dispatch on the first byte.
+const TAG_V2: u8 = 8;
+/// Current addressed-frame version.
+const FRAME_VERSION: u8 = 2;
+
+/// Bytes the v2 envelope adds in front of a v1 body:
+/// `[u8 tag][u8 ver][u16 src][u16 dst]`.
+pub const FRAME_V2_OVERHEAD: usize = 6;
+
+/// Source/destination addressing of a v2 frame. Each mesh link is
+/// point-to-point, so the header is identity *verification* rather than
+/// routing: wire transports (`TcpTransport::with_identity`) reject
+/// frames whose ids don't match the link's endpoints, so a miswired or
+/// confused peer fails loudly at the first frame instead of corrupting
+/// the round clock. (In-proc links are coupled at construction and
+/// only charge the envelope to the byte accounting.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub src: PartyId,
+    pub dst: PartyId,
+}
+
+impl FrameHeader {
+    /// The header the peer is expected to stamp on its own frames.
+    pub fn reply(self) -> FrameHeader {
+        FrameHeader { src: self.dst, dst: self.src }
+    }
+
+    fn encode_into(self, out: &mut Vec<u8>) {
+        out.push(TAG_V2);
+        out.push(FRAME_VERSION);
+        out.extend_from_slice(&self.src.0.to_le_bytes());
+        out.extend_from_slice(&self.dst.0.to_le_bytes());
+    }
+}
+
+/// Encode one frame body — v1 when `header` is `None` (byte-identical
+/// to [`Message::encode`]), v2 envelope + v1 body otherwise.
+pub fn encode_frame(header: Option<FrameHeader>, msg: &Message) -> Vec<u8> {
+    let extra = if header.is_some() { FRAME_V2_OVERHEAD } else { 0 };
+    let mut out = Vec::with_capacity(msg.wire_bytes() - 4 + extra);
+    if let Some(h) = header {
+        h.encode_into(&mut out);
+    }
+    msg.encode_body(&mut out);
+    out
+}
+
+/// Encode the complete frame — length word, optional v2 envelope, body
+/// — into a reusable scratch buffer (the transport send path; see
+/// [`Message::encode_into`]).
+pub fn encode_frame_into(header: Option<FrameHeader>, msg: &Message,
+                         out: &mut Vec<u8>) {
+    let extra = if header.is_some() { FRAME_V2_OVERHEAD } else { 0 };
+    out.clear();
+    out.reserve(msg.wire_bytes() + extra);
+    let body_len = (msg.wire_bytes() - 4 + extra) as u32;
+    out.extend_from_slice(&body_len.to_le_bytes());
+    if let Some(h) = header {
+        h.encode_into(out);
+    }
+    msg.encode_body(out);
+}
+
+/// Decode one frame body of either version. v1 frames (any first byte
+/// other than the envelope tag) take the original decode path and
+/// return no header — the compat path that keeps pre-session peers and
+/// the PR-2 golden fixtures working. v2 frames have their version and
+/// party ids validated *before* the body is parsed, so an out-of-range
+/// id is rejected without any payload-sized allocation (the same
+/// hostile-header discipline as the shape/length checks).
+pub fn decode_frame(buf: &[u8])
+                    -> anyhow::Result<(Option<FrameHeader>, Message)> {
+    if buf.first() != Some(&TAG_V2) {
+        return Ok((None, Message::decode(buf)?));
+    }
+    if buf.len() < FRAME_V2_OVERHEAD {
+        anyhow::bail!("truncated v2 frame header ({} bytes)", buf.len());
+    }
+    let version = buf[1];
+    if version != FRAME_VERSION {
+        anyhow::bail!("unsupported frame version {version} \
+                       (this build speaks {FRAME_VERSION})");
+    }
+    let src = u16::from_le_bytes([buf[2], buf[3]]);
+    let dst = u16::from_le_bytes([buf[4], buf[5]]);
+    if src >= MAX_PARTIES || dst >= MAX_PARTIES {
+        anyhow::bail!(
+            "party id out of range in frame header: src {src}, dst {dst} \
+             (max {MAX_PARTIES})"
+        );
+    }
+    if src == dst {
+        anyhow::bail!("frame addressed to its own source (party {src})");
+    }
+    let msg = Message::decode(&buf[FRAME_V2_OVERHEAD..])?;
+    Ok((Some(FrameHeader { src: PartyId(src), dst: PartyId(dst) }), msg))
+}
 
 impl Message {
     pub fn tag(&self) -> u8 {
@@ -892,6 +1004,172 @@ mod golden_tests {
 }
 
 #[cfg(test)]
+mod v2_tests {
+    //! Addressed-frame coverage: golden bytes for the v2 envelope, the
+    //! v1 backward-compat path against the exact PR-2 fixture bytes,
+    //! and hostile-header rejection for out-of-range party ids.
+
+    use super::*;
+
+    fn hex_to_bytes(hex: &str) -> Vec<u8> {
+        let compact: String =
+            hex.chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(compact.len() % 2, 0, "odd hex length");
+        (0..compact.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&compact[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    fn hdr(src: u16, dst: u16) -> FrameHeader {
+        FrameHeader { src: PartyId(src), dst: PartyId(dst) }
+    }
+
+    /// v2 fixtures: the envelope prefix is pinned byte-for-byte, the
+    /// body is the corresponding v1 fixture unchanged.
+    fn v2_fixtures() -> Vec<(&'static str, FrameHeader, Message,
+                             &'static str)> {
+        vec![
+            (
+                "v2_activation_p1_to_p0",
+                hdr(1, 0),
+                Message::Activation {
+                    round: 1,
+                    tensor: Tensor::f32(vec![2, 2],
+                                        vec![0.0, 1.0, -2.0, 0.5]),
+                },
+                "08 02 0100 0000 \
+                 01 0100000000000000 00 02 02000000 02000000 \
+                 00000000 0000803f 000000c0 0000003f",
+            ),
+            (
+                "v2_derivative_p0_to_p2",
+                hdr(0, 2),
+                Message::Derivative {
+                    round: 2,
+                    tensor: Tensor::f32(vec![3], vec![1.5, -0.25, 3.0]),
+                },
+                "08 02 0000 0200 \
+                 02 0200000000000000 00 01 03000000 \
+                 0000c03f 000080be 00004040",
+            ),
+            (
+                "v2_hello_p2_to_p0",
+                hdr(2, 0),
+                Message::Hello { codecs: 0x0f },
+                "08 02 0200 0000 06 0000000000000000 0f000000",
+            ),
+            (
+                "v2_eval_ack_p0_to_p3",
+                hdr(0, 3),
+                Message::EvalAck { round: 0x0102030405060708 },
+                "08 02 0000 0300 04 0807060504030201",
+            ),
+        ]
+    }
+
+    #[test]
+    fn golden_v2_encode_is_byte_identical() {
+        for (name, h, msg, hex) in v2_fixtures() {
+            assert_eq!(encode_frame(Some(h), &msg), hex_to_bytes(hex),
+                       "v2 encode drifted for fixture '{name}'");
+        }
+    }
+
+    #[test]
+    fn golden_v2_decode_recovers_header_and_message() {
+        for (name, h, msg, hex) in v2_fixtures() {
+            let (got_h, got_m) = decode_frame(&hex_to_bytes(hex))
+                .unwrap_or_else(|e| panic!("fixture '{name}': {e}"));
+            assert_eq!(got_h, Some(h), "header drifted for '{name}'");
+            assert_eq!(got_m, msg, "message drifted for '{name}'");
+        }
+    }
+
+    #[test]
+    fn v1_fixture_bytes_still_decode_headerless() {
+        // Backward compat: the exact PR-2 fixture byte strings must
+        // come back through decode_frame with no header attached.
+        for (name, hex) in [
+            ("shutdown", "05 0000000000000000"),
+            ("eval_ack", "04 0807060504030201"),
+            (
+                "activation_f32_2x2",
+                "01 0100000000000000 00 02 02000000 02000000 \
+                 00000000 0000803f 000000c0 0000003f",
+            ),
+            (
+                "compressed_fp16_2x2",
+                "07 0100000000000000 01 01 00000000 02 02000000 \
+                 02000000 00000000 0000 003c 00c0 0038",
+            ),
+            ("hello_all_codecs", "06 0000000000000000 0f000000"),
+        ] {
+            let bytes = hex_to_bytes(hex);
+            let (h, m) = decode_frame(&bytes)
+                .unwrap_or_else(|e| panic!("fixture '{name}': {e}"));
+            assert_eq!(h, None, "v1 fixture '{name}' grew a header");
+            assert_eq!(m.encode(), bytes,
+                       "v1 fixture '{name}' did not round-trip");
+        }
+    }
+
+    #[test]
+    fn headerless_encode_frame_matches_v1_encode() {
+        let msg = Message::Derivative {
+            round: 9,
+            tensor: Tensor::f32(vec![2], vec![1.0, -1.0]),
+        };
+        assert_eq!(encode_frame(None, &msg), msg.encode());
+        let mut framed = Vec::new();
+        encode_frame_into(None, &msg, &mut framed);
+        let mut v1 = Vec::new();
+        msg.encode_into(&mut v1);
+        assert_eq!(framed, v1);
+    }
+
+    #[test]
+    fn encode_frame_into_prefixes_envelope_length() {
+        let msg = Message::EvalAck { round: 7 };
+        let h = hdr(1, 0);
+        let body = encode_frame(Some(h), &msg);
+        assert_eq!(body.len(), msg.wire_bytes() - 4 + FRAME_V2_OVERHEAD);
+        let mut framed = Vec::new();
+        encode_frame_into(Some(h), &msg, &mut framed);
+        assert_eq!(&framed[..4], &(body.len() as u32).to_le_bytes());
+        assert_eq!(&framed[4..], &body[..]);
+        // The scratch is reusable across header modes.
+        encode_frame_into(None, &msg, &mut framed);
+        assert_eq!(&framed[4..], &msg.encode()[..]);
+    }
+
+    #[test]
+    fn reply_swaps_endpoints() {
+        assert_eq!(hdr(3, 0).reply(), hdr(0, 3));
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_truncations() {
+        let good = encode_frame(Some(hdr(1, 0)),
+                                &Message::EvalAck { round: 1 });
+        let mut bad_ver = good.clone();
+        bad_ver[1] = 3;
+        assert!(decode_frame(&bad_ver).is_err(), "version 3 accepted");
+        // Every prefix of the envelope fails cleanly (cut 0 falls into
+        // the v1 path, where an empty body is equally an error).
+        for cut in 0..FRAME_V2_OVERHEAD {
+            assert!(decode_frame(&good[..cut]).is_err(),
+                    "truncated header at {cut} decoded");
+        }
+        // Self-addressed frames are rejected.
+        let mut selfie = encode_frame(Some(hdr(1, 0)),
+                                      &Message::EvalAck { round: 1 });
+        selfie[4] = 1; // dst := 1 == src
+        assert!(decode_frame(&selfie).is_err(), "self-addressed decoded");
+    }
+}
+
+#[cfg(test)]
 mod fuzz_tests {
     use super::*;
     use crate::testing::prop;
@@ -1066,6 +1344,70 @@ mod fuzz_tests {
             }
             prop_assert!(Message::decode(&frame).is_err(),
                          "hostile compressed header decoded");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_v2_roundtrip_random_frames() {
+        prop::check("v2 frame roundtrip", |rng| {
+            let rows = 1 + rng.gen_range(8) as usize;
+            let cols = 1 + rng.gen_range(8) as usize;
+            let v: Vec<f32> =
+                (0..rows * cols).map(|_| rng.next_normal()).collect();
+            let src = rng.gen_range(MAX_PARTIES as u32) as u16;
+            let mut dst = rng.gen_range(MAX_PARTIES as u32) as u16;
+            if dst == src {
+                dst = (dst + 1) % MAX_PARTIES;
+            }
+            let h = FrameHeader { src: PartyId(src), dst: PartyId(dst) };
+            let msg = Message::Activation {
+                round: rng.next_u64(),
+                tensor: Tensor::f32(vec![rows, cols], v),
+            };
+            let enc = encode_frame(Some(h), &msg);
+            let (got_h, got_m) = decode_frame(&enc)
+                .map_err(|e| format!("decode: {e}"))?;
+            prop_assert!(got_h == Some(h), "header mismatch");
+            prop_assert!(got_m == msg, "message mismatch");
+            prop_assert!(enc.len()
+                             == msg.wire_bytes() - 4 + FRAME_V2_OVERHEAD,
+                         "v2 length drifted");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hostile_party_ids_error_before_allocation() {
+        // v2 envelopes whose src/dst ids are out of range must be
+        // rejected from the 6 header bytes alone — even when the body
+        // behind them declares a huge tensor, decode must never reach
+        // (let alone allocate for) it.
+        prop::check("hostile party ids", |rng| {
+            let mut frame = Vec::new();
+            frame.push(8u8); // TAG_V2
+            frame.push(2u8); // valid version
+            // At least one endpoint out of range; bias both huge.
+            let src = MAX_PARTIES + rng.gen_range(u16::MAX as u32
+                                                  - MAX_PARTIES as u32)
+                as u16;
+            let dst = if rng.next_f32() < 0.5 {
+                rng.gen_range(MAX_PARTIES as u32) as u16
+            } else {
+                MAX_PARTIES + rng.gen_range(1000) as u16
+            };
+            frame.extend_from_slice(&src.to_le_bytes());
+            frame.extend_from_slice(&dst.to_le_bytes());
+            // A hostile body: huge dims behind the bad header.
+            frame.push(1u8); // Activation
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes());
+            frame.push(0u8); // f32
+            frame.push(4u8); // ndim
+            for _ in 0..4 {
+                frame.extend_from_slice(&u32::MAX.to_le_bytes());
+            }
+            prop_assert!(decode_frame(&frame).is_err(),
+                         "out-of-range party id decoded");
             Ok(())
         });
     }

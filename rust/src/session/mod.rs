@@ -1,0 +1,391 @@
+//! K-party training sessions: role-based parties over a transport mesh.
+//!
+//! The paper's Algorithm 1/2 is written for one feature party and one
+//! label party, but nothing it relies on is two-party-specific: the
+//! workset cache is per *link*, the comm/compute overlap is per *link*,
+//! and the label party's top model consumes the **sum** Σ_k Z_k of the
+//! feature parties' activations (the standard K-party topology of
+//! C-VFL, Castiglia et al. 2022). This module is the public face of
+//! that generalization:
+//!
+//! - [`PartyId`] / [`PartyRole`] — party identity. Id 0 is always the
+//!   label party; ids 1..K are feature parties.
+//! - [`Mesh`] — one [`Transport`] per peer with per-peer [`LinkStats`].
+//!   A feature party's mesh has exactly one link (to the label party);
+//!   the label party's mesh has one link per feature party (a star —
+//!   feature parties never talk to each other, so no statistics can
+//!   leak sideways).
+//! - [`SessionBuilder`] / [`Session`] — ties a role, a config (codec,
+//!   workset policy, per-party overrides) and a mesh together and runs
+//!   the party to completion.
+//!
+//! With `parties = 2` the session runs the exact two-party protocol of
+//! the earlier PRs: v1 frames (no party-id header), identical message
+//! sequence, byte-identical wire traffic — the golden-bytes fixtures in
+//! `protocol` pin this. With `parties > 2` every link speaks v2 frames
+//! (a 6-byte versioned header carrying source/dest [`PartyId`]) and the
+//! `Hello` codec handshake is negotiated independently per link.
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::feature_party::{run_feature_party,
+                                        FeaturePartyReport};
+use crate::coordinator::label_party::{run_label_party, LabelPartyReport};
+use crate::data::{PartyAData, PartyBData};
+use crate::runtime::ArtifactSet;
+use crate::transport::{inproc_link, LinkStats, Transport};
+
+/// Hard upper bound on session size: protocol decoding rejects any
+/// frame whose source/dest id is ≥ this *before* touching the payload
+/// (the same hostile-header discipline as the shape checks), so a
+/// corrupt header cannot smuggle an absurd party id into the stack.
+pub const MAX_PARTIES: u16 = 64;
+
+/// Identity of one party in a session. Id 0 is the label party by
+/// convention; feature parties are 1..K.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PartyId(pub u16);
+
+/// The label party's well-known id.
+pub const LABEL_PARTY: PartyId = PartyId(0);
+
+impl PartyId {
+    /// Role implied by the id: 0 is the label party, everyone else
+    /// holds features only.
+    pub fn role(self) -> PartyRole {
+        if self == LABEL_PARTY {
+            PartyRole::Label
+        } else {
+            PartyRole::Feature
+        }
+    }
+}
+
+impl std::fmt::Display for PartyId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "P{}", self.0)
+    }
+}
+
+/// What a party contributes to training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartyRole {
+    /// Holds a vertical feature slice and a bottom model; sends Z_k,
+    /// receives ∇Z.
+    Feature,
+    /// Holds features + labels, the bottom and top models, and the
+    /// run's control plane (loss, AUC, stopping).
+    Label,
+}
+
+/// One peer link: who is on the other end and how to reach them.
+#[derive(Clone)]
+pub struct Link {
+    pub peer: PartyId,
+    pub transport: Arc<dyn Transport>,
+}
+
+/// The party's view of the session topology: one transport per peer,
+/// each with its own byte/busy accounting.
+pub struct Mesh {
+    links: Vec<Link>,
+}
+
+impl Mesh {
+    pub fn new(links: Vec<Link>) -> Self {
+        Mesh { links }
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    pub fn peers(&self) -> impl Iterator<Item = PartyId> + '_ {
+        self.links.iter().map(|l| l.peer)
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// The transport for `peer`, if linked.
+    pub fn transport(&self, peer: PartyId) -> Option<&Arc<dyn Transport>> {
+        self.links
+            .iter()
+            .find(|l| l.peer == peer)
+            .map(|l| &l.transport)
+    }
+
+    /// Per-peer sender-side traffic stats.
+    pub fn link_stats(&self) -> Vec<(PartyId, LinkStats)> {
+        self.links
+            .iter()
+            .map(|l| (l.peer, l.transport.stats()))
+            .collect()
+    }
+
+    /// All links' stats summed (bytes, messages, busy time).
+    pub fn total_stats(&self) -> LinkStats {
+        let mut total = LinkStats::default();
+        for l in &self.links {
+            let s = l.transport.stats();
+            total.messages += s.messages;
+            total.bytes += s.bytes;
+            total.raw_bytes += s.raw_bytes;
+            total.busy += s.busy;
+        }
+        total
+    }
+}
+
+/// Builder for a [`Session`]: identity + config + one link per peer.
+pub struct SessionBuilder {
+    cfg: RunConfig,
+    id: PartyId,
+    links: Vec<Link>,
+}
+
+impl SessionBuilder {
+    /// Start a session description for party `id` under `cfg`. The
+    /// config supplies the session-wide knobs (algorithm, W/R/ξ, codec
+    /// with per-party overrides, WAN profile, `parties`).
+    pub fn new(cfg: &RunConfig, id: PartyId) -> Self {
+        SessionBuilder { cfg: cfg.clone(), id, links: Vec::new() }
+    }
+
+    /// Add a peer link. Feature parties link exactly the label party;
+    /// the label party links every feature party.
+    pub fn link(mut self, peer: PartyId,
+                transport: Arc<dyn Transport>) -> Self {
+        self.links.push(Link { peer, transport });
+        self
+    }
+
+    /// Validate the topology and produce a runnable [`Session`].
+    pub fn build(self) -> anyhow::Result<Session> {
+        let SessionBuilder { cfg, id, links } = self;
+        cfg.validate()?;
+        let k = cfg.parties as u16;
+        anyhow::ensure!(id.0 < k,
+                        "party id {id} out of range for {k} parties");
+        for l in &links {
+            anyhow::ensure!(l.peer.0 < k,
+                            "peer id {} out of range for {k} parties",
+                            l.peer);
+            anyhow::ensure!(l.peer != id, "party {id} linked to itself");
+        }
+        let mut peers: Vec<u16> = links.iter().map(|l| l.peer.0).collect();
+        peers.sort_unstable();
+        peers.dedup();
+        anyhow::ensure!(peers.len() == links.len(),
+                        "duplicate peer link in session for {id}");
+        match id.role() {
+            PartyRole::Feature => {
+                anyhow::ensure!(
+                    links.len() == 1 && links[0].peer == LABEL_PARTY,
+                    "feature party {id} must link exactly the label \
+                     party ({LABEL_PARTY})"
+                );
+            }
+            PartyRole::Label => {
+                anyhow::ensure!(
+                    links.len() == cfg.feature_parties(),
+                    "label party must link every feature party: got {} \
+                     links for {} feature parties",
+                    links.len(),
+                    cfg.feature_parties()
+                );
+                anyhow::ensure!(
+                    links.iter().all(|l| l.peer.role()
+                                     == PartyRole::Feature),
+                    "label party may only link feature parties"
+                );
+            }
+        }
+        Ok(Session { cfg, id, mesh: Mesh::new(links) })
+    }
+}
+
+/// A fully-wired party, ready to train. The two-party entry points
+/// (`coordinator::run_party_a` / `run_party_b`, the `train` and `party`
+/// CLI subcommands) are thin wrappers that build one of these with
+/// `parties = 2`.
+pub struct Session {
+    cfg: RunConfig,
+    id: PartyId,
+    mesh: Mesh,
+}
+
+impl Session {
+    pub fn id(&self) -> PartyId {
+        self.id
+    }
+
+    pub fn role(&self) -> PartyRole {
+        self.id.role()
+    }
+
+    pub fn mesh(&self) -> &Mesh {
+        &self.mesh
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Run this session as a feature party (role must match).
+    pub fn run_feature(&self, set: Arc<ArtifactSet>, train: Arc<PartyAData>,
+                       test: Arc<PartyAData>)
+                       -> anyhow::Result<FeaturePartyReport> {
+        anyhow::ensure!(self.role() == PartyRole::Feature,
+                        "run_feature on {} (label party)", self.id);
+        run_feature_party(&self.cfg, self.id, set, train, test,
+                          self.mesh.links[0].transport.clone())
+    }
+
+    /// Run this session as the label party (role must match).
+    pub fn run_label(&self, set: Arc<ArtifactSet>, train: Arc<PartyBData>,
+                     test: Arc<PartyBData>)
+                     -> anyhow::Result<LabelPartyReport> {
+        anyhow::ensure!(self.role() == PartyRole::Label,
+                        "run_label on {} (feature party)", self.id);
+        run_label_party(&self.cfg, set, train, test, self.mesh.links())
+    }
+}
+
+/// Build the in-process star topology for `cfg.parties` parties: one
+/// duplex link per feature party, all terminating at the label party.
+/// Returns the label party's links plus, for each feature party in id
+/// order (1..K), its single link back to the label party.
+///
+/// With `parties == 2` the links carry v1 frames — byte-identical to
+/// the two-party path; with more parties every link frames v2 with its
+/// endpoints' ids.
+pub fn inproc_star(cfg: &RunConfig) -> (Vec<Link>, Vec<Link>) {
+    let v2 = cfg.parties > 2;
+    let mut label_links = Vec::with_capacity(cfg.feature_parties());
+    let mut feature_links = Vec::with_capacity(cfg.feature_parties());
+    for f in 1..cfg.parties as u16 {
+        let feature = PartyId(f);
+        let (to_label, to_feature) =
+            inproc_link(cfg.wan, feature, LABEL_PARTY, v2);
+        feature_links.push(Link {
+            peer: LABEL_PARTY,
+            transport: Arc::new(to_label),
+        });
+        label_links.push(Link {
+            peer: feature,
+            transport: Arc::new(to_feature),
+        });
+    }
+    (label_links, feature_links)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WanProfile;
+    use crate::protocol::Message;
+
+    fn cfg_with_parties(k: usize) -> RunConfig {
+        let mut cfg = RunConfig::quick();
+        cfg.parties = k;
+        cfg
+    }
+
+    #[test]
+    fn party_roles_follow_ids() {
+        assert_eq!(PartyId(0).role(), PartyRole::Label);
+        assert_eq!(PartyId(1).role(), PartyRole::Feature);
+        assert_eq!(PartyId(63).role(), PartyRole::Feature);
+        assert_eq!(format!("{}", PartyId(3)), "P3");
+        assert_eq!(LABEL_PARTY, PartyId(0));
+    }
+
+    #[test]
+    fn builder_validates_topology() {
+        let cfg = cfg_with_parties(3);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        // Correct label session: links P1 and P2.
+        let mut b = SessionBuilder::new(&cfg, LABEL_PARTY);
+        for l in &label_links {
+            b = b.link(l.peer, l.transport.clone());
+        }
+        let s = b.build().unwrap();
+        assert_eq!(s.role(), PartyRole::Label);
+        assert_eq!(s.mesh().len(), 2);
+        // Correct feature session: single link to P0.
+        let s = SessionBuilder::new(&cfg, PartyId(1))
+            .link(LABEL_PARTY, feature_links[0].transport.clone())
+            .build()
+            .unwrap();
+        assert_eq!(s.role(), PartyRole::Feature);
+
+        // Label party with a missing link is rejected.
+        assert!(SessionBuilder::new(&cfg, LABEL_PARTY)
+            .link(label_links[0].peer, label_links[0].transport.clone())
+            .build()
+            .is_err());
+        // Feature party linking another feature party is rejected.
+        assert!(SessionBuilder::new(&cfg, PartyId(1))
+            .link(PartyId(2), feature_links[0].transport.clone())
+            .build()
+            .is_err());
+        // Out-of-range ids are rejected.
+        assert!(SessionBuilder::new(&cfg, PartyId(9))
+            .link(LABEL_PARTY, feature_links[0].transport.clone())
+            .build()
+            .is_err());
+        // Self-links are rejected.
+        assert!(SessionBuilder::new(&cfg, PartyId(1))
+            .link(PartyId(1), feature_links[0].transport.clone())
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn inproc_star_connects_every_feature_party() {
+        let cfg = cfg_with_parties(4);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        assert_eq!(label_links.len(), 3);
+        assert_eq!(feature_links.len(), 3);
+        // Each feature link reaches the matching label link.
+        for (i, fl) in feature_links.iter().enumerate() {
+            fl.transport
+                .send(Message::EvalAck { round: i as u64 })
+                .unwrap();
+        }
+        for (i, ll) in label_links.iter().enumerate() {
+            assert_eq!(ll.peer, PartyId(i as u16 + 1));
+            assert_eq!(ll.transport.recv().unwrap().round(), i as u64);
+        }
+    }
+
+    #[test]
+    fn mesh_accumulates_per_link_and_total_stats() {
+        let mut cfg = cfg_with_parties(3);
+        cfg.wan = WanProfile::instant();
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let mesh = Mesh::new(label_links);
+        let m = Message::EvalAck { round: 1 };
+        mesh.transport(PartyId(1)).unwrap().send(m.clone()).unwrap();
+        mesh.transport(PartyId(1)).unwrap().send(m.clone()).unwrap();
+        mesh.transport(PartyId(2)).unwrap().send(m.clone()).unwrap();
+        let stats = mesh.link_stats();
+        assert_eq!(stats[0].1.messages, 2);
+        assert_eq!(stats[1].1.messages, 1);
+        assert_eq!(mesh.total_stats().messages, 3);
+        assert!(mesh.total_stats().bytes
+                >= stats[0].1.bytes + stats[1].1.bytes);
+        // Drain so the feature endpoints don't see dropped senders.
+        for fl in &feature_links {
+            let _ = fl.transport.try_recv();
+        }
+        assert!(mesh.transport(PartyId(9)).is_none());
+    }
+}

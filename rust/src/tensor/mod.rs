@@ -160,6 +160,33 @@ impl Tensor {
         );
         Ok(&v[start..end])
     }
+
+    /// Element-wise sum of identically-shaped f32 tensors — the label
+    /// party's Σ_k Z_k aggregation over K activation lanes. A
+    /// single-element slice returns a shared handle (no copy), so the
+    /// two-party path through this function stays zero-copy; K > 1
+    /// performs exactly one allocation for the accumulator.
+    pub fn sum_f32(parts: &[Tensor]) -> anyhow::Result<Tensor> {
+        let first = parts
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("sum_f32 over zero tensors"))?;
+        if parts.len() == 1 {
+            first.as_f32()?; // dtype check even on the zero-copy path
+            return Ok(first.clone());
+        }
+        let mut acc: Vec<f32> = first.as_f32()?.to_vec();
+        for t in &parts[1..] {
+            anyhow::ensure!(
+                t.shape == first.shape,
+                "sum_f32 shape mismatch: {:?} vs {:?}", t.shape,
+                first.shape
+            );
+            for (a, x) in acc.iter_mut().zip(t.as_f32()?) {
+                *a += *x;
+            }
+        }
+        Ok(Tensor::f32(first.shape.clone(), acc))
+    }
 }
 
 #[cfg(test)]
@@ -195,6 +222,24 @@ mod tests {
             assert_eq!(DType::from_code(d.code()).unwrap(), d);
         }
         assert!(DType::from_code(9).is_err());
+    }
+
+    #[test]
+    fn sum_f32_aggregates_and_stays_zero_copy_for_one() {
+        let a = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::f32(vec![2, 2], vec![0.5, -2.0, 1.0, 0.0]);
+        let c = Tensor::f32(vec![2, 2], vec![-1.5, 0.0, 0.0, 1.0]);
+        let s = Tensor::sum_f32(&[a.clone(), b, c]).unwrap();
+        assert_eq!(s.as_f32().unwrap(), &[0.0, 0.0, 4.0, 5.0]);
+        // K = 1: handle share, not a copy.
+        let one = Tensor::sum_f32(std::slice::from_ref(&a)).unwrap();
+        assert!(one.shares_data(&a));
+        // Errors, not panics, on misuse.
+        assert!(Tensor::sum_f32(&[]).is_err());
+        let short = Tensor::f32(vec![3], vec![0.0; 3]);
+        assert!(Tensor::sum_f32(&[a.clone(), short]).is_err());
+        let ids = Tensor::i32(vec![1], vec![3]);
+        assert!(Tensor::sum_f32(&[ids]).is_err());
     }
 
     #[test]

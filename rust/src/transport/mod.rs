@@ -16,6 +16,15 @@
 //! charges the full wire size while the process never copies the
 //! payload. TCP pays exactly one serialize + one deserialize, each a
 //! single bulk copy through a reused scratch buffer.
+//!
+//! K-party sessions (DESIGN.md §6) give each link an optional
+//! [`FrameHeader`]: the endpoint then speaks v2 (party-addressed)
+//! frames and charges the 6-byte envelope per message. In-proc links
+//! never materialize the envelope — messages still cross as shared
+//! handles — but the accounting (and therefore the simulated-WAN
+//! occupancy) matches what TCP puts on the wire. Headerless endpoints
+//! ([`inproc_pair`], the plain TCP constructors) stay byte-identical to
+//! the two-party protocol.
 
 pub mod tcp;
 
@@ -25,7 +34,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::WanProfile;
-use crate::protocol::Message;
+use crate::protocol::{FrameHeader, Message, FRAME_V2_OVERHEAD};
+use crate::session::PartyId;
 
 /// Blocking duplex endpoint. `send` blocks for the (simulated or real)
 /// link occupancy; `recv` blocks until a message is available.
@@ -95,10 +105,35 @@ pub struct InProcTransport {
     rx: Mutex<Receiver<Message>>,
     wan: WanProfile,
     counters: Arc<Counters>,
+    /// `Some` on v2 (party-addressed) links: the envelope is charged to
+    /// the byte accounting, though in-proc it never materializes.
+    header: Option<FrameHeader>,
 }
 
-/// Create a connected (party A, party B) endpoint pair over `wan`.
+/// Create a connected (party A, party B) endpoint pair over `wan`,
+/// speaking headerless v1 frames (the two-party wire format).
 pub fn inproc_pair(wan: WanProfile) -> (InProcTransport, InProcTransport) {
+    duplex(wan, None, None)
+}
+
+/// Create one mesh link between parties `a` and `b` over `wan`. With
+/// `v2` the endpoints frame with their ids (6 extra bytes per message
+/// in the accounting); without, the link is identical to
+/// [`inproc_pair`]. Returns (a's endpoint, b's endpoint).
+pub fn inproc_link(wan: WanProfile, a: PartyId, b: PartyId, v2: bool)
+                   -> (InProcTransport, InProcTransport) {
+    let (ha, hb) = if v2 {
+        (Some(FrameHeader { src: a, dst: b }),
+         Some(FrameHeader { src: b, dst: a }))
+    } else {
+        (None, None)
+    };
+    duplex(wan, ha, hb)
+}
+
+fn duplex(wan: WanProfile, ha: Option<FrameHeader>,
+          hb: Option<FrameHeader>)
+          -> (InProcTransport, InProcTransport) {
     let (tx_ab, rx_ab) = channel();
     let (tx_ba, rx_ba) = channel();
     let a = InProcTransport {
@@ -106,22 +141,26 @@ pub fn inproc_pair(wan: WanProfile) -> (InProcTransport, InProcTransport) {
         rx: Mutex::new(rx_ba),
         wan,
         counters: Arc::new(Counters::default()),
+        header: ha,
     };
     let b = InProcTransport {
         tx: Mutex::new(tx_ba),
         rx: Mutex::new(rx_ab),
         wan,
         counters: Arc::new(Counters::default()),
+        header: hb,
     };
     (a, b)
 }
 
 impl Transport for InProcTransport {
     fn send(&self, msg: Message) -> anyhow::Result<()> {
-        let bytes = msg.wire_bytes();
+        let extra = if self.header.is_some() { FRAME_V2_OVERHEAD } else { 0 };
+        let bytes = msg.wire_bytes() + extra;
         // Compressed frames occupy the link for their *wire* size — the
         // whole point of the codec layer — while raw_bytes keeps the
-        // uncompressed volume for ratio reporting.
+        // uncompressed volume for ratio reporting. The v2 envelope is
+        // part of both: it rides every frame regardless of codec.
         let delay = self.wan.one_way_delay(bytes);
         let start = Instant::now();
         if !delay.is_zero() {
@@ -129,7 +168,8 @@ impl Transport for InProcTransport {
             // behaviour the local-update technique amortises.
             std::thread::sleep(delay);
         }
-        self.counters.record(bytes, msg.raw_bytes(), start.elapsed());
+        self.counters
+            .record(bytes, msg.raw_bytes() + extra, start.elapsed());
         self.tx
             .lock()
             .unwrap()
@@ -254,5 +294,25 @@ mod tests {
         drop(b);
         assert!(a.send(Message::Shutdown).is_err());
         assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn v2_link_charges_the_envelope() {
+        use crate::protocol::FRAME_V2_OVERHEAD;
+        let (f, l) = inproc_link(WanProfile::instant(), PartyId(1),
+                                 PartyId(0), true);
+        let m = act(0, 16);
+        f.send(m.clone()).unwrap();
+        assert_eq!(l.recv().unwrap(), m);
+        let stats = f.stats();
+        assert_eq!(stats.bytes,
+                   (m.wire_bytes() + FRAME_V2_OVERHEAD) as u64);
+        assert_eq!(stats.raw_bytes, stats.bytes);
+        // A v1 link (v2 = false) stays byte-identical to inproc_pair.
+        let (f1, l1) = inproc_link(WanProfile::instant(), PartyId(1),
+                                   PartyId(0), false);
+        f1.send(m.clone()).unwrap();
+        assert_eq!(l1.recv().unwrap(), m);
+        assert_eq!(f1.stats().bytes, m.wire_bytes() as u64);
     }
 }

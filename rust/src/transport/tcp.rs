@@ -7,10 +7,17 @@
 //! socket for single-host demos.
 //!
 //! Send path (DESIGN.md §4): each send encodes the length word + frame
-//! body into one reusable scratch buffer (`Message::encode_into`) and
-//! hands the kernel a single `write_all` — one syscall per message in the
-//! common case, and zero steady-state allocation. The receive path reuses
-//! a frame buffer the same way.
+//! body into one reusable scratch buffer (`protocol::encode_frame_into`)
+//! and hands the kernel a single `write_all` — one syscall per message
+//! in the common case, and zero steady-state allocation. The receive
+//! path reuses a frame buffer the same way.
+//!
+//! K-party links (DESIGN.md §6): [`TcpTransport::with_identity`] stamps
+//! every outgoing frame with the v2 `[src][dst]` envelope and verifies
+//! the peer's envelope on receive — a miswired mesh fails at the first
+//! frame with a party-id mismatch instead of silently corrupting the
+//! round clock. Headerless peers (pre-session builds) still decode via
+//! the v1 compat path.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -19,7 +26,9 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::config::WanProfile;
-use crate::protocol::Message;
+use crate::protocol::{decode_frame, encode_frame_into, FrameHeader,
+                      Message, FRAME_V2_OVERHEAD};
+use crate::session::PartyId;
 
 use super::{LinkStats, Transport};
 
@@ -40,6 +49,9 @@ pub struct TcpTransport {
     reader: Mutex<FramedReader>,
     writer: Mutex<FramedWriter>,
     wan: WanProfile,
+    /// `Some` on a v2 mesh link: stamped on every outgoing frame;
+    /// incoming v2 frames must carry exactly its mirror image.
+    header: Option<FrameHeader>,
     messages: AtomicU64,
     bytes: AtomicU64,
     raw_bytes: AtomicU64,
@@ -56,11 +68,21 @@ impl TcpTransport {
             writer: Mutex::new(FramedWriter { stream,
                                               scratch: Vec::new() }),
             wan,
+            header: None,
             messages: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
             raw_bytes: AtomicU64::new(0),
             busy_nanos: AtomicU64::new(0),
         })
+    }
+
+    /// Promote this link to v2 framing: every outgoing frame carries
+    /// `self_id → peer`, and incoming v2 frames are verified to carry
+    /// `peer → self_id` (v1 frames still pass — the compat path).
+    pub fn with_identity(mut self, self_id: PartyId, peer: PartyId)
+                         -> Self {
+        self.header = Some(FrameHeader { src: self_id, dst: peer });
+        self
     }
 
     /// Bind `addr` and accept one peer connection (Party B side).
@@ -90,8 +112,11 @@ impl TcpTransport {
     }
 
     /// Blocking read of one frame body into the reader's reusable buffer;
-    /// decodes before releasing the lock.
-    fn recv_locked(r: &mut FramedReader) -> anyhow::Result<Message> {
+    /// decodes (and identity-checks v2 envelopes) before releasing the
+    /// lock. `expect` is the envelope the peer must stamp — the mirror
+    /// image of this endpoint's own header.
+    fn recv_locked(r: &mut FramedReader, expect: Option<FrameHeader>)
+                   -> anyhow::Result<Message> {
         let mut len_buf = [0u8; 4];
         r.stream.read_exact(&mut len_buf)?;
         let len = u32::from_le_bytes(len_buf) as usize;
@@ -100,14 +125,27 @@ impl TcpTransport {
         }
         r.buf.resize(len, 0);
         r.stream.read_exact(&mut r.buf)?;
-        Message::decode(&r.buf)
+        let (header, msg) = decode_frame(&r.buf)?;
+        if let (Some(want), Some(got)) = (expect, header) {
+            anyhow::ensure!(
+                got == want,
+                "frame from wrong endpoint: got {}→{}, expected {}→{}",
+                got.src, got.dst, want.src, want.dst
+            );
+        }
+        Ok(msg)
+    }
+
+    fn expected_header(&self) -> Option<FrameHeader> {
+        self.header.map(FrameHeader::reply)
     }
 }
 
 impl Transport for TcpTransport {
     fn send(&self, msg: Message) -> anyhow::Result<()> {
         let start = Instant::now();
-        let delay = self.wan.one_way_delay(msg.wire_bytes());
+        let extra = if self.header.is_some() { FRAME_V2_OVERHEAD } else { 0 };
+        let delay = self.wan.one_way_delay(msg.wire_bytes() + extra);
         if !delay.is_zero() {
             std::thread::sleep(delay);
         }
@@ -115,8 +153,9 @@ impl Transport for TcpTransport {
         {
             let mut w = self.writer.lock().unwrap();
             let FramedWriter { stream, scratch } = &mut *w;
-            // Length word + body in one reusable buffer, one write_all.
-            msg.encode_into(scratch);
+            // Length word + optional envelope + body in one reusable
+            // buffer, one write_all.
+            encode_frame_into(self.header, &msg, scratch);
             frame_len = scratch.len();
             stream.write_all(scratch)?;
             stream.flush()?;
@@ -124,7 +163,7 @@ impl Transport for TcpTransport {
         self.messages.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(frame_len as u64, Ordering::Relaxed);
         self.raw_bytes
-            .fetch_add(msg.raw_bytes() as u64, Ordering::Relaxed);
+            .fetch_add((msg.raw_bytes() + extra) as u64, Ordering::Relaxed);
         self.busy_nanos
             .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(())
@@ -132,7 +171,7 @@ impl Transport for TcpTransport {
 
     fn recv(&self) -> anyhow::Result<Message> {
         let mut r = self.reader.lock().unwrap();
-        Self::recv_locked(&mut r)
+        Self::recv_locked(&mut r, self.expected_header())
     }
 
     fn try_recv(&self) -> anyhow::Result<Option<Message>> {
@@ -152,7 +191,7 @@ impl Transport for TcpTransport {
             }
             Err(e) => return Err(e.into()),
         }
-        Self::recv_locked(&mut r).map(Some)
+        Self::recv_locked(&mut r, self.expected_header()).map(Some)
     }
 
     fn stats(&self) -> LinkStats {
@@ -219,6 +258,88 @@ mod tests {
                    Some(Message::EvalAck { round: 1 }));
         client.send(Message::Shutdown).unwrap();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn identity_links_roundtrip_and_charge_envelope() {
+        // A v2 mesh link over real sockets: frames carry ids, the byte
+        // accounting includes the 6-byte envelope, and both directions
+        // verify the peer's identity.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            let t = TcpTransport::listen(&addr2, WanProfile::instant())
+                .unwrap()
+                .with_identity(PartyId(0), PartyId(2));
+            let m = t.recv().unwrap();
+            t.send(Message::EvalAck { round: m.round() }).unwrap();
+            (m, t.stats())
+        });
+        let client =
+            TcpTransport::connect(&addr, WanProfile::instant())
+                .unwrap()
+                .with_identity(PartyId(2), PartyId(0));
+        let m = Message::Activation {
+            round: 4,
+            tensor: Tensor::f32(vec![2], vec![1.0, -1.0]),
+        };
+        client.send(m.clone()).unwrap();
+        assert_eq!(client.recv().unwrap(), Message::EvalAck { round: 4 });
+        let (got, server_stats) = server.join().unwrap();
+        assert_eq!(got, m);
+        assert_eq!(client.stats().bytes,
+                   (m.wire_bytes() + FRAME_V2_OVERHEAD) as u64);
+        assert_eq!(server_stats.bytes,
+                   (Message::EvalAck { round: 4 }.wire_bytes()
+                    + FRAME_V2_OVERHEAD) as u64);
+    }
+
+    #[test]
+    fn wrong_identity_is_rejected_at_first_frame() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            // Expects frames from P1, but the client claims to be P2.
+            let t = TcpTransport::listen(&addr2, WanProfile::instant())
+                .unwrap()
+                .with_identity(PartyId(0), PartyId(1));
+            t.recv()
+        });
+        let client =
+            TcpTransport::connect(&addr, WanProfile::instant())
+                .unwrap()
+                .with_identity(PartyId(2), PartyId(0));
+        client.send(Message::Shutdown).unwrap();
+        let got = server.join().unwrap();
+        assert!(got.is_err(), "mis-identified peer was accepted");
+        let e = got.unwrap_err().to_string();
+        assert!(e.contains("wrong endpoint"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn v1_peer_still_decodes_on_an_identity_link() {
+        // Compat: a headerless (pre-session) frame arriving on an
+        // identity-checking link passes — only *mismatched* v2
+        // envelopes are rejected.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            let t = TcpTransport::listen(&addr2, WanProfile::instant())
+                .unwrap()
+                .with_identity(PartyId(0), PartyId(1));
+            t.recv()
+        });
+        let client =
+            TcpTransport::connect(&addr, WanProfile::instant()).unwrap();
+        client.send(Message::EvalAck { round: 3 }).unwrap();
+        assert_eq!(server.join().unwrap().unwrap(),
+                   Message::EvalAck { round: 3 });
     }
 
     #[test]

@@ -100,8 +100,14 @@ impl WorksetTable {
     }
 
     /// Insert a freshly-exchanged batch at communication round `round`.
-    /// Applies both eviction rules.
-    pub fn insert(&mut self, round: u64, indices: Vec<u32>, za: Tensor,
+    /// Applies both eviction rules. `indices` accepts anything that
+    /// converts into the shared index buffer — a `Vec<u32>` (moved into
+    /// a fresh `Arc`) or an existing `Arc<[u32]>` handle (refcount
+    /// bump, no reallocation), so callers that already hold shared
+    /// indices (a decoded message, a sibling mesh lane) insert for
+    /// free.
+    pub fn insert(&mut self, round: u64,
+                  indices: impl Into<Arc<[u32]>>, za: Tensor,
                   dza: Tensor) {
         // Staleness window: discard entries inserted before round−W+1.
         let min_round = round.saturating_sub(self.capacity as u64 - 1);
@@ -174,63 +180,225 @@ impl WorksetTable {
         }
         Some(out)
     }
+
+    /// Sample the entry cached at communication round `round`,
+    /// bypassing the policy's choice — the bookkeeping (local-step
+    /// clock, use count, retirement at R) is exactly [`Self::sample`]'s.
+    ///
+    /// This is how a secondary [`MeshWorkset`] lane mirrors the primary
+    /// lane's sampling decision: lanes that see identical
+    /// insert/sample histories (rounds are unique — the comm round
+    /// counter is monotone) remain identical state machines, so
+    /// per-link eviction and use accounting stay exact without each
+    /// lane re-running the policy.
+    pub fn sample_round(&mut self, round: u64) -> Option<WorksetEntry> {
+        let pos = self.entries.iter().position(|e| e.round == round)?;
+        self.local_step += 1;
+        self.stats.sampled += 1;
+        let entry = &mut self.entries[pos];
+        entry.uses += 1;
+        entry.last_sampled = Some(self.local_step);
+        let out = entry.clone();
+        if entry.uses >= self.max_uses {
+            self.entries.remove(pos);
+            self.stats.retired_exhausted += 1;
+        }
+        Some(out)
+    }
 }
 
-/// Thread-safe wrapper pairing the table with a condvar, so a local
-/// worker hitting a §3.2 bubble parks until the comm worker's next
-/// `insert` instead of burning CPU in a poll loop.
-///
-/// Eligibility under both sampling policies can only change when an entry
-/// is inserted (the single local worker is the only sampler, and a failed
-/// sample does not advance the local-step clock), so waking on insert is
-/// exact — the timeout below is belt-and-braces for shutdown and spurious
-/// wakeups, not part of the protocol.
+// -- shared (condvar-parked) mesh workset ------------------------------------
+
+/// One sampled aggregate from a [`MeshWorkset`]: the batch identity
+/// plus the summed activations Σ_k Z_k^(round) and the cached
+/// derivative view — exactly what the label party's local step
+/// (Algorithm 2, LocalUpdatePartyB) consumes.
+#[derive(Debug, Clone)]
+pub struct MeshEntry {
+    pub round: u64,
+    pub indices: Arc<[u32]>,
+    /// Σ over lanes of the cached Z_k. With a single lane this is the
+    /// lane's own handle (refcount bump, no copy) — the two-party
+    /// zero-copy path unchanged.
+    pub za: Tensor,
+    /// The primary lane's cached ∇Z view. All lanes cache the same
+    /// derivative modulo per-link codec round-trips, so the primary
+    /// lane's view is exact whenever the links share a codec (always,
+    /// unless per-party overrides diverge).
+    pub dza: Tensor,
+}
+
 #[derive(Debug)]
-struct Inner {
-    table: WorksetTable,
-    /// Bumped by `wake_all` (under the same mutex, so a parked sampler
-    /// can never miss it): a parked sampler gives up its wait when the
-    /// epoch moves, distinguishing a deliberate shutdown poke from a
-    /// spurious condvar wakeup.
+struct MeshInner {
+    lanes: Vec<WorksetTable>,
     wake_epoch: u64,
 }
 
+/// A sampling decision made under the mesh lock. The single-lane case
+/// is fully resolved in place (the aggregate is the lane's handle);
+/// the multi-lane case carries the per-lane handles out of the
+/// critical section so the Σ_k sum never runs while holding the mutex
+/// the comm worker's `insert` needs.
+enum Picked {
+    Ready(MeshEntry),
+    Pending {
+        round: u64,
+        indices: Arc<[u32]>,
+        zas: Vec<Tensor>,
+        dza: Tensor,
+    },
+}
+
+/// The thread-safe workset every party trains from: one
+/// [`WorksetTable`] lane per peer, kept in **lock-step** behind a
+/// single mutex and paired with a condvar so a local worker hitting a
+/// §3.2 bubble parks until the comm worker's next `insert` instead of
+/// burning CPU in a poll loop. Feature parties (and the two-party
+/// label) run it with a single lane — the historic `SharedWorkset`
+/// behaviour, zero-copy handles included; the K-party label party
+/// gives it one lane per feature peer.
+///
+/// Every round the comm worker inserts one ⟨Z_k, ∇Z⟩ pair into every
+/// lane atomically; sampling runs the policy on the primary lane and
+/// mirrors its choice into the others via
+/// [`WorksetTable::sample_round`], so uniform sampling, use counting
+/// and eviction stay *per-link exact* — each lane is bit-for-bit the
+/// table a two-party run against that peer alone would have kept.
+///
+/// Eligibility under both sampling policies can only change when an
+/// entry is inserted (each party has a single local worker, and a
+/// failed sample does not advance the local-step clock), so waking on
+/// insert is exact — the wait timeout is belt-and-braces for shutdown
+/// and spurious wakeups, not part of the protocol. `wake_all` bumps an
+/// epoch under the same mutex, so a parked sampler can never miss it
+/// and can distinguish a deliberate shutdown poke from a spurious
+/// condvar wakeup.
 #[derive(Debug)]
-pub struct SharedWorkset {
-    inner: Mutex<Inner>,
+pub struct MeshWorkset {
+    inner: Mutex<MeshInner>,
     on_insert: Condvar,
 }
 
-impl SharedWorkset {
-    pub fn new(table: WorksetTable) -> Self {
-        SharedWorkset {
-            inner: Mutex::new(Inner { table, wake_epoch: 0 }),
+impl MeshWorkset {
+    /// `lanes` tables of `capacity` = W, `max_uses` = R each.
+    pub fn new(lanes: usize, capacity: usize, max_uses: usize,
+               policy: Sampling) -> Self {
+        assert!(lanes >= 1, "a mesh workset needs at least one lane");
+        MeshWorkset {
+            inner: Mutex::new(MeshInner {
+                lanes: (0..lanes)
+                    .map(|_| WorksetTable::new(capacity, max_uses, policy))
+                    .collect(),
+                wake_epoch: 0,
+            }),
             on_insert: Condvar::new(),
         }
     }
 
-    /// Insert a freshly-exchanged batch and wake any parked local worker.
-    pub fn insert(&self, round: u64, indices: Vec<u32>, za: Tensor,
-                  dza: Tensor) {
-        self.inner.lock().unwrap().table.insert(round, indices, za, dza);
+    pub fn lanes(&self) -> usize {
+        self.inner.lock().unwrap().lanes.len()
+    }
+
+    /// Insert round `round` into every lane atomically: `stats[k]` is
+    /// peer k's ⟨Z_k, ∇Z_k⟩ pair. The indices are shared across lanes
+    /// through one `Arc` (no per-lane reallocation). Wakes any parked
+    /// local worker.
+    pub fn insert(&self, round: u64, indices: impl Into<Arc<[u32]>>,
+                  stats: Vec<(Tensor, Tensor)>) {
+        let indices: Arc<[u32]> = indices.into();
+        let mut inner = self.inner.lock().unwrap();
+        assert_eq!(stats.len(), inner.lanes.len(),
+                   "one (za, dza) pair per lane");
+        for (lane, (za, dza)) in inner.lanes.iter_mut().zip(stats) {
+            lane.insert(round, indices.clone(), za, dza);
+        }
+        drop(inner);
         self.on_insert.notify_all();
     }
 
-    /// Non-blocking sample (see [`WorksetTable::sample`]).
-    pub fn sample(&self) -> Option<WorksetEntry> {
-        self.inner.lock().unwrap().table.sample()
+    /// Pick this step's entry under the lock, deferring any Σ_k
+    /// aggregation until the lock is released (see [`Picked`]).
+    fn sample_locked(inner: &mut MeshInner)
+                     -> anyhow::Result<Option<Picked>> {
+        let (first, rest) = inner
+            .lanes
+            .split_first_mut()
+            .expect("mesh workset has ≥ 1 lane");
+        let Some(e0) = first.sample() else {
+            return Ok(None);
+        };
+        if rest.is_empty() {
+            // Two-party fast path: the aggregate IS the lane's handle —
+            // no allocation, no sum, nothing left to do outside the
+            // lock.
+            return Ok(Some(Picked::Ready(MeshEntry {
+                round: e0.round,
+                indices: e0.indices,
+                za: e0.za,
+                dza: e0.dza,
+            })));
+        }
+        // Multi-lane: collect per-lane handles (refcount bumps) only;
+        // the O(K·batch·z_dim) sum happens in `finalize`, outside the
+        // mutex, so the comm worker's insert never stalls behind it.
+        let mut zas = Vec::with_capacity(1 + rest.len());
+        zas.push(e0.za);
+        for lane in rest {
+            let ek = lane.sample_round(e0.round).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "mesh workset lanes out of lock-step at round {}",
+                    e0.round
+                )
+            })?;
+            zas.push(ek.za);
+        }
+        Ok(Some(Picked::Pending {
+            round: e0.round,
+            indices: e0.indices,
+            zas,
+            dza: e0.dza,
+        }))
     }
 
-    /// Sample, parking for up to `timeout` on a bubble. Spurious condvar
-    /// wakeups re-arm the wait against the original deadline, so the
-    /// park genuinely honours `timeout`; an `insert` ends it with an
-    /// entry and a `wake_all` ends it empty-handed. Returns `None` when
-    /// the bubble persists (caller loops, re-checking its stop flag).
-    pub fn sample_or_wait(&self, timeout: Duration) -> Option<WorksetEntry> {
+    /// Resolve a [`Picked`] into the aggregate entry. Runs lock-free:
+    /// the handles collected under the lock keep the tensors alive
+    /// even if the lanes evict or retire the entries meanwhile. The
+    /// sum is recomputed per sample (up to R−1 redundant sums per
+    /// round) rather than cached per round — trading a [batch, z_dim]
+    /// allocation per local step, off the comm path, for not holding
+    /// an extra aggregate tensor alive per resident entry.
+    fn finalize(picked: Picked) -> anyhow::Result<MeshEntry> {
+        match picked {
+            Picked::Ready(e) => Ok(e),
+            Picked::Pending { round, indices, zas, dza } => {
+                Ok(MeshEntry {
+                    round,
+                    indices,
+                    za: Tensor::sum_f32(&zas)?,
+                    dza,
+                })
+            }
+        }
+    }
+
+    /// Non-blocking aggregate sample; `Ok(None)` on a §3.2 bubble.
+    pub fn sample(&self) -> anyhow::Result<Option<MeshEntry>> {
+        let picked = Self::sample_locked(&mut self.inner.lock().unwrap())?;
+        picked.map(Self::finalize).transpose()
+    }
+
+    /// Sample, parking for up to `timeout` on a bubble: an `insert`
+    /// ends the park with an entry, `wake_all` ends it empty-handed,
+    /// and spurious condvar wakeups re-arm the wait against the
+    /// original deadline, so the park genuinely honours `timeout`.
+    /// Returns `Ok(None)` when the bubble persists (caller loops,
+    /// re-checking its stop flag).
+    pub fn sample_or_wait(&self, timeout: Duration)
+                          -> anyhow::Result<Option<MeshEntry>> {
         let mut inner = self.inner.lock().unwrap();
-        // Immediate path — no wait while eligible entries exist.
-        if let Some(e) = inner.table.sample() {
-            return Some(e);
+        if let Some(p) = Self::sample_locked(&mut inner)? {
+            drop(inner); // aggregate outside the lock
+            return Self::finalize(p).map(Some);
         }
         let start_epoch = inner.wake_epoch;
         let deadline = Instant::now() + timeout;
@@ -238,43 +406,43 @@ impl SharedWorkset {
             let remaining =
                 deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
-                return inner.table.sample();
+                let picked = Self::sample_locked(&mut inner)?;
+                drop(inner);
+                return picked.map(Self::finalize).transpose();
             }
             let (guard, _timed_out) =
                 self.on_insert.wait_timeout(inner, remaining).unwrap();
             inner = guard;
-            if let Some(e) = inner.table.sample() {
-                return Some(e);
+            if let Some(p) = Self::sample_locked(&mut inner)? {
+                drop(inner);
+                return Self::finalize(p).map(Some);
             }
             if inner.wake_epoch != start_epoch {
-                return None; // deliberate wake (shutdown) — stop parking
+                return Ok(None); // deliberate wake (shutdown)
             }
-            // Spurious wakeup: re-arm until the deadline.
         }
     }
 
-    /// Wake all parked workers without inserting (used at shutdown so a
-    /// worker parked in a bubble re-checks its stop flag promptly).
+    /// Wake all parked workers without inserting (shutdown path).
     pub fn wake_all(&self) {
         self.inner.lock().unwrap().wake_epoch += 1;
         self.on_insert.notify_all();
     }
 
+    /// Primary-lane statistics. Lanes are lock-step, so every lane
+    /// reports the same counters; the primary stands for all.
+    pub fn stats(&self) -> WorksetStats {
+        self.inner.lock().unwrap().lanes[0].stats()
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().table.len()
+        self.inner.lock().unwrap().lanes[0].len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().table.is_empty()
-    }
-
-    pub fn stats(&self) -> WorksetStats {
-        self.inner.lock().unwrap().table.stats()
+        self.inner.lock().unwrap().lanes[0].is_empty()
     }
 }
-
-/// Convenience for the coordinator: a shareable handle.
-pub type SharedWorksetHandle = Arc<SharedWorkset>;
 
 #[cfg(test)]
 mod tests {
@@ -567,41 +735,110 @@ mod extra_tests {
 }
 
 #[cfg(test)]
-mod shared_tests {
+mod mesh_tests {
     use super::*;
     use std::time::Instant;
 
-    fn t() -> Tensor {
-        Tensor::zeros_f32(vec![2, 2])
+    fn t(v: f32) -> Tensor {
+        Tensor::f32(vec![2], vec![v, v + 1.0])
     }
 
     #[test]
-    fn parked_sampler_wakes_on_insert() {
-        let ws = Arc::new(SharedWorkset::new(WorksetTable::new(
-            3, 10, Sampling::RoundRobin)));
-        let ws2 = ws.clone();
-        let waiter = std::thread::spawn(move || {
-            // Generous timeout: the insert below must wake us long
-            // before it expires.
-            ws2.sample_or_wait(Duration::from_secs(10))
-        });
-        // Give the waiter time to park, then insert.
-        std::thread::sleep(Duration::from_millis(50));
-        let start = Instant::now();
-        ws.insert(0, vec![1, 2], t(), t());
-        let got = waiter.join().unwrap();
-        assert!(got.is_some(), "waiter missed the insert wakeup");
-        assert_eq!(got.unwrap().round, 0);
-        assert!(start.elapsed() < Duration::from_secs(5),
-                "waiter slept through the notify");
+    fn insert_accepts_shared_indices_without_reallocating() {
+        // The satellite contract: an Arc<[u32]> caller keeps its
+        // allocation — the entry aliases it instead of copying.
+        let mut ws = WorksetTable::new(2, 5, Sampling::RoundRobin);
+        let idx: Arc<[u32]> = vec![7u32, 8, 9].into();
+        ws.insert(0, idx.clone(), t(0.0), t(0.0));
+        let e = ws.sample().unwrap();
+        assert!(Arc::ptr_eq(&e.indices, &idx),
+                "shared indices were re-allocated on insert");
+        // Vec callers still work (moved into a fresh Arc).
+        ws.insert(1, vec![1u32, 2], t(0.0), t(0.0));
+        assert_eq!(ws.sample().unwrap().indices.as_ref(), &[1, 2]);
+    }
+
+    #[test]
+    fn sample_round_mirrors_sample_bookkeeping() {
+        // Two tables fed identically; one sampled by policy, the other
+        // mirrored by round — they must stay identical state machines.
+        let mut primary = WorksetTable::new(3, 2, Sampling::RoundRobin);
+        let mut mirror = WorksetTable::new(3, 2, Sampling::RoundRobin);
+        for round in 0..3 {
+            primary.insert(round, vec![], t(0.0), t(0.0));
+            mirror.insert(round, vec![], t(0.0), t(0.0));
+        }
+        for _ in 0..8 {
+            match primary.sample() {
+                Some(e) => {
+                    let m = mirror.sample_round(e.round)
+                        .expect("mirror lane missing the round");
+                    assert_eq!(m.round, e.round);
+                    assert_eq!(m.uses, e.uses);
+                }
+                None => assert!(mirror.len() == primary.len()),
+            }
+        }
+        assert_eq!(primary.stats().sampled, mirror.stats().sampled);
+        assert_eq!(primary.stats().retired_exhausted,
+                   mirror.stats().retired_exhausted);
+        assert_eq!(primary.len(), mirror.len());
+        assert!(mirror.sample_round(99).is_none());
+    }
+
+    #[test]
+    fn single_lane_mesh_matches_shared_workset_and_shares_handles() {
+        let mesh = MeshWorkset::new(1, 3, 10, Sampling::Consecutive);
+        let za = t(1.0);
+        let dza = t(5.0);
+        mesh.insert(0, vec![0u32, 1], vec![(za.clone(), dza.clone())]);
+        let e = mesh.sample().unwrap().unwrap();
+        assert_eq!(e.round, 0);
+        // Two-party fast path: aggregate == the cached handle.
+        assert!(e.za.shares_data(&za));
+        assert!(e.dza.shares_data(&dza));
+        assert_eq!(mesh.stats().sampled, 1);
+    }
+
+    #[test]
+    fn multi_lane_mesh_sums_activations_per_round() {
+        let mesh = MeshWorkset::new(3, 4, 10, Sampling::RoundRobin);
+        for round in 0..2u64 {
+            let base = round as f32 * 10.0;
+            mesh.insert(round, vec![round as u32],
+                        vec![(t(base), t(0.0)), (t(base + 1.0), t(0.0)),
+                             (t(base + 2.0), t(0.0))]);
+        }
+        let e = mesh.sample().unwrap().unwrap();
+        assert_eq!(e.round, 0);
+        // Σ_k Z_k: lanes held [0,1],[1,2],[2,3] → [3, 6].
+        assert_eq!(e.za.as_f32().unwrap(), &[3.0, 6.0]);
+        assert_eq!(e.indices.as_ref(), &[0]);
+        let e = mesh.sample().unwrap().unwrap();
+        assert_eq!(e.round, 1);
+        assert_eq!(e.za.as_f32().unwrap(), &[33.0, 36.0]);
+    }
+
+    #[test]
+    fn mesh_lanes_retire_in_lock_step() {
+        // R = 2: after two aggregate samples of the only round, every
+        // lane must have retired its entry (no orphan statistics).
+        let mesh = MeshWorkset::new(2, 3, 2, Sampling::Consecutive);
+        mesh.insert(0, vec![], vec![(t(0.0), t(0.0)), (t(1.0), t(0.0))]);
+        assert!(mesh.sample().unwrap().is_some());
+        assert!(mesh.sample().unwrap().is_some());
+        assert!(mesh.is_empty());
+        assert!(mesh.sample().unwrap().is_none());
+        assert_eq!(mesh.stats().retired_exhausted, 1);
     }
 
     #[test]
     fn sample_or_wait_times_out_on_persistent_bubble() {
-        let ws = SharedWorkset::new(WorksetTable::new(
-            3, 10, Sampling::RoundRobin));
+        let ws = MeshWorkset::new(1, 3, 10, Sampling::RoundRobin);
         let start = Instant::now();
-        assert!(ws.sample_or_wait(Duration::from_millis(20)).is_none());
+        assert!(ws.sample_or_wait(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
         let elapsed = start.elapsed();
         assert!(elapsed >= Duration::from_millis(15), "returned too early");
         assert!(ws.stats().bubbles >= 1);
@@ -609,42 +846,50 @@ mod shared_tests {
 
     #[test]
     fn sample_or_wait_is_immediate_with_entries() {
-        let ws = SharedWorkset::new(WorksetTable::new(
-            3, 10, Sampling::Consecutive));
-        ws.insert(4, vec![], t(), t());
+        let ws = MeshWorkset::new(1, 3, 10, Sampling::Consecutive);
+        ws.insert(4, vec![], vec![(t(0.0), t(0.0))]);
         let start = Instant::now();
-        let e = ws.sample_or_wait(Duration::from_secs(5));
+        let e = ws.sample_or_wait(Duration::from_secs(5)).unwrap();
         assert_eq!(e.unwrap().round, 4);
         assert!(start.elapsed() < Duration::from_millis(100),
                 "eligible entry must not wait");
     }
 
     #[test]
-    fn wake_all_unparks_without_insert() {
-        let ws = Arc::new(SharedWorkset::new(WorksetTable::new(
-            3, 10, Sampling::RoundRobin)));
-        let ws2 = ws.clone();
-        let waiter = std::thread::spawn(move || {
-            let start = Instant::now();
-            let got = ws2.sample_or_wait(Duration::from_secs(10));
-            (got, start.elapsed())
-        });
-        std::thread::sleep(Duration::from_millis(50));
-        ws.wake_all();
-        let (got, elapsed) = waiter.join().unwrap();
-        assert!(got.is_none(), "nothing was inserted");
-        assert!(elapsed < Duration::from_secs(5),
-                "wake_all must unpark the waiter");
+    fn accessors_pass_through_to_the_primary_lane() {
+        let ws = MeshWorkset::new(2, 2, 10, Sampling::RoundRobin);
+        assert!(ws.is_empty());
+        assert_eq!(ws.lanes(), 2);
+        ws.insert(0, vec![], vec![(t(0.0), t(0.0)), (t(1.0), t(0.0))]);
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws.stats().inserted, 1);
+        assert!(ws.sample().unwrap().is_some());
     }
 
     #[test]
-    fn shared_accessors_pass_through() {
-        let ws = SharedWorkset::new(WorksetTable::new(
-            2, 10, Sampling::RoundRobin));
-        assert!(ws.is_empty());
-        ws.insert(0, vec![], t(), t());
-        assert_eq!(ws.len(), 1);
-        assert_eq!(ws.stats().inserted, 1);
-        assert!(ws.sample().is_some());
+    fn mesh_sample_or_wait_wakes_on_insert_and_on_wake_all() {
+        let mesh = Arc::new(MeshWorkset::new(
+            2, 3, 10, Sampling::RoundRobin));
+        let m2 = mesh.clone();
+        let waiter = std::thread::spawn(move || {
+            m2.sample_or_wait(Duration::from_secs(10)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let start = Instant::now();
+        mesh.insert(0, vec![3u32], vec![(t(1.0), t(0.0)),
+                                        (t(2.0), t(0.0))]);
+        let got = waiter.join().unwrap();
+        assert_eq!(got.unwrap().za.as_f32().unwrap(), &[3.0, 5.0]);
+        assert!(start.elapsed() < Duration::from_secs(5));
+
+        // wake_all unparks empty-handed.
+        let m2 = mesh.clone();
+        // Drain eligibility first (round-robin spacing blocks resample).
+        let waiter = std::thread::spawn(move || {
+            m2.sample_or_wait(Duration::from_secs(10)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        mesh.wake_all();
+        assert!(waiter.join().unwrap().is_none());
     }
 }
