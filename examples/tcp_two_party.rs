@@ -39,9 +39,10 @@ fn main() -> anyhow::Result<()> {
     let cfg = config(args.get_usize("rounds")?)?;
     let addr = args.get("addr").to_string();
 
+    let timeout = std::time::Duration::from_secs(30);
     match args.get("role") {
-        "a" => run_tcp_party(&cfg, "a", &addr, &addr),
-        "b" => run_tcp_party(&cfg, "b", &addr, &addr),
+        "a" => run_tcp_party(&cfg, "a", &addr, &addr, 1, timeout),
+        "b" => run_tcp_party(&cfg, "b", &addr, &addr, 1, timeout),
         "both" => {
             // Fork Party A as a child process of the same example binary.
             let exe = std::env::current_exe()?;
@@ -49,7 +50,7 @@ fn main() -> anyhow::Result<()> {
                 .args(["--role", "a", "--addr", &addr, "--rounds",
                        args.get("rounds")])
                 .spawn()?;
-            let res = run_tcp_party(&cfg, "b", &addr, &addr);
+            let res = run_tcp_party(&cfg, "b", &addr, &addr, 1, timeout);
             let status = child.wait()?;
             anyhow::ensure!(status.success(), "party A process failed");
             res

@@ -59,8 +59,16 @@ def _shape_entry(name, shape):
 
 
 def export_one(model: str, dataset: str, size: str, out_root: str,
-               verbose: bool = True) -> dict:
+               verbose: bool = True, parties: int = 2) -> dict:
     ds = presets.DATASETS[dataset]
+    if parties != 2:
+        # K-party preset: the bottom model is compiled for one vertical
+        # slice of the Party-A feature space (fields_a = split width),
+        # shared by all K-1 feature parties. The label party's own
+        # fields_b bottom is unchanged. Write these to a dedicated
+        # --out root: the artifact tag is still <model>_<dataset>_<size>
+        # and the rust loader picks the root via `artifacts_dir`.
+        ds = presets.vertical_slice(ds, parties)
     spec = presets.SIZES[size]
     sb = StepBuilder(model, ds, spec)
     b, zd = spec.batch, spec.z_dim
@@ -114,6 +122,10 @@ def export_one(model: str, dataset: str, size: str, out_root: str,
         "model": model,
         "dataset": dataset,
         "size": size,
+        # Session size the bottom-model slice was compiled for (2 = the
+        # classic full-width Party-A bottom). Informational: the rust
+        # loader keys on fields_a, and ignores unknown manifest fields.
+        "parties": parties,
         "batch": b,
         "z_dim": zd,
         "fields_a": ds.fields_a,
@@ -138,14 +150,41 @@ def main() -> None:
                     help="artifact output root")
     ap.add_argument("--only", default=None,
                     help="export a single 'model,dataset,size' triple")
+    ap.add_argument("--parties", type=int, default=2,
+                    help="compile bottom models for the K-party vertical "
+                         "slice (fields_a = fields_a / (K-1); requires an "
+                         "even split). Use a dedicated --out root — the "
+                         "artifact tag does not encode K.")
     args = ap.parse_args()
     if args.only:
         triples = [tuple(args.only.split(","))]
     else:
         triples = presets.DEFAULT_EXPORTS
+    if args.parties != 2:
+        # Pre-validate the whole matrix before writing anything: a
+        # mid-loop ValueError would leave a partially populated
+        # artifact root with no record of what succeeded. Explicit
+        # --only requests fail hard; default-matrix exports skip the
+        # datasets that cannot split evenly and say so.
+        kept, skipped = [], []
+        for triple in triples:
+            try:
+                presets.vertical_slice(presets.DATASETS[triple[1]],
+                                       args.parties)
+                kept.append(triple)
+            except ValueError as e:
+                if args.only:
+                    raise SystemExit(f"error: {e}")
+                skipped.append((triple, str(e)))
+        for (model, dataset, size), why in skipped:
+            print(f"skipping {model}_{dataset}_{size}: {why}",
+                  file=sys.stderr)
+        triples = kept
     for model, dataset, size in triples:
-        export_one(model, dataset, size, args.out)
-    print(f"exported {len(triples)} artifact sets to {args.out}",
+        export_one(model, dataset, size, args.out, parties=args.parties)
+    print(f"exported {len(triples)} artifact sets to {args.out}"
+          + (f" (per-slice bottoms for --parties {args.parties})"
+             if args.parties != 2 else ""),
           file=sys.stderr)
 
 

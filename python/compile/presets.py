@@ -67,6 +67,37 @@ SIZES = {
 
 MODELS = ("wdl", "dssm")
 
+
+def vertical_slice(ds: DatasetSpec, parties: int) -> DatasetSpec:
+    """Per-feature-party dataset spec for a K-party session.
+
+    The rust trainer splits the Party-A feature space into K-1
+    contiguous column slices (``PartyAData::vertical_split``) and
+    requires every slice to match the bottom-model artifact's input
+    width, so K-party artifacts are only well-defined when the split is
+    even. Returns ``ds`` with ``fields_a`` replaced by the slice width;
+    ``fields_b`` (the label party's own features) is untouched.
+    """
+    if parties < 3:
+        raise ValueError(
+            f"--parties {parties}: per-slice artifacts only exist for "
+            "K >= 3 (K = 2 is the classic two-party split, use the "
+            "default export)")
+    k = parties - 1
+    if k > ds.fields_a:
+        raise ValueError(
+            f"{ds.name}: cannot split {ds.fields_a} Party-A fields "
+            f"across {k} feature parties")
+    if ds.fields_a % k:
+        valid = [p + 1 for p in range(2, ds.fields_a + 1)
+                 if ds.fields_a % p == 0]
+        raise ValueError(
+            f"{ds.name}: {ds.fields_a} Party-A fields do not split "
+            f"evenly across {k} feature parties (every party's bottom "
+            f"model must share one artifact set) — valid --parties for "
+            f"{ds.name}: {valid}")
+    return DatasetSpec(ds.name, ds.fields_a // k, ds.fields_b)
+
 # The default artifact matrix built by `make artifacts`.
 DEFAULT_EXPORTS = [
     ("wdl", "criteo", "tiny"),

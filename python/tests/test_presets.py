@@ -51,6 +51,50 @@ class TestSizes:
         assert 60e6 < total < 150e6, f"big preset has {total} params"
 
 
+class TestVerticalSlice:
+    """The --parties K artifact preset: fields_a becomes the per-party
+    vertical slice width the rust trainer expects (see
+    trainer::feature_slices — all slices must match one artifact set,
+    so only even splits are valid)."""
+
+    def test_even_splits_give_the_slice_width(self):
+        ds = presets.vertical_slice(presets.DATASETS["criteo"], 3)
+        assert (ds.fields_a, ds.fields_b) == (13, 13)
+        # avazu's 14 A-side fields across 2 and 7 feature parties.
+        assert presets.vertical_slice(
+            presets.DATASETS["avazu"], 3).fields_a == 7
+        assert presets.vertical_slice(
+            presets.DATASETS["avazu"], 8).fields_a == 2
+        # d3: 25 fields across 5 feature parties.
+        assert presets.vertical_slice(
+            presets.DATASETS["d3"], 6).fields_a == 5
+
+    def test_label_fields_are_untouched(self):
+        for name, ds in presets.DATASETS.items():
+            for parties in range(3, ds.fields_a + 2):
+                if ds.fields_a % (parties - 1):
+                    continue
+                sliced = presets.vertical_slice(ds, parties)
+                assert sliced.fields_b == ds.fields_b, name
+                assert sliced.name == ds.name
+                # The slices tile the original feature space exactly.
+                assert sliced.fields_a * (parties - 1) == ds.fields_a
+
+    def test_uneven_splits_fail_listing_valid_counts(self):
+        with pytest.raises(ValueError) as e:
+            presets.vertical_slice(presets.DATASETS["criteo"], 4)
+        msg = str(e.value)
+        assert "26" in msg and "3 feature parties" in msg
+        # The error names the --parties values that would work.
+        assert "[3, 14, 27]" in msg
+
+    def test_bounds(self):
+        with pytest.raises(ValueError):
+            presets.vertical_slice(presets.DATASETS["criteo"], 2)
+        with pytest.raises(ValueError):
+            presets.vertical_slice(presets.DATASETS["avazu"], 16)
+
+
 class TestSpecDict:
     def test_spec_dict_roundtrip(self):
         d = presets.spec_dict("wdl", "criteo", "tiny")

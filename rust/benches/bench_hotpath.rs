@@ -14,6 +14,10 @@
 //!   5. session framing — v2 (party-addressed) envelope cost vs the v1
 //!      frame, and per-round mesh bytes as the party count K grows
 //!      (DESIGN.md §6).
+//!   6. bootstrap — time-to-mesh vs K for the in-proc bootstrap (all K
+//!      sessions wired + topology-validated through the same
+//!      `MeshBootstrap` path a TCP launch takes, DESIGN.md §7); must
+//!      stay linear in K and far under a round's WAN cost.
 //!
 //! `cargo bench --bench bench_hotpath`
 
@@ -26,7 +30,8 @@ use celu_vfl::data::batcher::{gather_a, gather_a_with, gather_b_with,
 use celu_vfl::data::SynthDataset;
 use celu_vfl::protocol::{decode_frame, encode_frame_into, FrameHeader,
                          Message};
-use celu_vfl::session::PartyId;
+use celu_vfl::session::bootstrap::inproc_mesh;
+use celu_vfl::session::{PartyId, SessionBuilder};
 use celu_vfl::tensor::{Data, Tensor};
 use celu_vfl::testing::bench::{bench, section};
 use celu_vfl::workset::WorksetTable;
@@ -259,4 +264,35 @@ fn main() {
         println!("K={parties:<3} {:>3} links  {total:>10} B/round",
                  2 * (parties - 1));
     }
+
+    // ---- 6. bootstrap latency ----------------------------------------------
+    section("bootstrap — time-to-mesh vs K (in-proc MeshBootstrap)");
+    let mut mesh_means = Vec::new();
+    for parties in [2usize, 3, 5, 9, 17] {
+        let mut cfg = celu_vfl::config::RunConfig::quick();
+        cfg.parties = parties;
+        let r = bench(&format!("inproc mesh K={parties}"), WINDOW, || {
+            // Wire and validate every session of the star: the label
+            // party's K−1 links plus one session per feature party —
+            // the full cost of a K-party launch minus the sockets.
+            let (label_bs, feature_bs) = inproc_mesh(&cfg);
+            let label =
+                SessionBuilder::from_bootstrap(&cfg, label_bs).unwrap();
+            black_box(label.mesh().len());
+            for bs in feature_bs {
+                let s =
+                    SessionBuilder::from_bootstrap(&cfg, bs).unwrap();
+                black_box(s.id());
+            }
+        });
+        println!("K={parties:<3} time-to-mesh {:>10.0} ns \
+                  ({:>7.0} ns/link)",
+                 r.mean.as_nanos() as f64,
+                 r.mean.as_nanos() as f64 / (parties - 1) as f64);
+        mesh_means.push(r.mean.as_nanos() as f64);
+    }
+    let growth = mesh_means[mesh_means.len() - 1] / mesh_means[0].max(1.0);
+    println!("time-to-mesh K=17 vs K=2: {growth:.1}× \
+              (links grew 16×; super-linear growth would flag a \
+              bootstrap hot spot)");
 }

@@ -1,0 +1,347 @@
+//! K = 3 TCP session smoke — three OS processes over loopback.
+//!
+//! The CI proof that the listener-based bootstrap (DESIGN.md §7)
+//! launches the topology the paper targets: run with no arguments,
+//! this binary re-executes itself as **three separate OS processes** —
+//! one label-party session server (`--role label`) and two feature
+//! dialers (`--role feature --party N`) — joined over loopback TCP via
+//! the `Join`/`JoinAck` handshake. Each process drives the same
+//! deterministic protocol-level traffic as `mesh_k3` (v2 frames,
+//! per-link `Hello` negotiation with a per-party codec override,
+//! Σ_k Z_k aggregation) without the PJRT runtime, then reports its
+//! per-link sender-side byte accounting. The orchestrator runs the
+//! identical traffic over the in-proc mesh and asserts the per-link
+//! totals — wire bytes, raw bytes, message counts — are **identical**:
+//! the bootstrap handshake lives on the raw socket, outside the
+//! transports, so a TCP session costs exactly what the simulated-WAN
+//! mesh charges.
+//!
+//!     cargo run --release --example tcp_mesh_k3            # orchestrate
+//!     cargo run --release --example tcp_mesh_k3 -- --role label --listen 127.0.0.1:0
+//!     cargo run --release --example tcp_mesh_k3 -- --role feature --party 1 --connect 127.0.0.1:PORT
+
+use std::collections::BTreeMap;
+use std::io::BufRead;
+use std::sync::Arc;
+use std::time::Duration;
+
+use celu_vfl::compress::{self, CodecKind};
+use celu_vfl::config::{RunConfig, WanProfile};
+use celu_vfl::protocol::{outbound_stats, Lane, Message};
+use celu_vfl::session::bootstrap::{inproc_mesh, SessionDialer,
+                                   SessionListener};
+use celu_vfl::session::{PartyId, Session, SessionBuilder, LABEL_PARTY};
+use celu_vfl::tensor::Tensor;
+use celu_vfl::transport::Transport;
+use celu_vfl::util::cli::Cli;
+
+const ROUNDS: u64 = 8;
+const BATCH: usize = 16;
+const Z_DIM: usize = 4;
+const JOIN_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// The session under test: K=3, party 1 compresses fp16 while party 2
+/// stays uncompressed, so the byte parity covers the `Hello` handshake
+/// and mixed per-link codecs, not just plain tensor frames.
+fn smoke_cfg() -> RunConfig {
+    let mut cfg = RunConfig::quick();
+    cfg.parties = 3;
+    cfg.wan = WanProfile::instant();
+    cfg.compress = CodecKind::Identity;
+    cfg.party_compress = vec![(1, CodecKind::Fp16)];
+    cfg.validate().expect("smoke config invalid");
+    cfg
+}
+
+/// Deterministic stand-in for a bottom model's activations — identical
+/// in every process and in the in-proc reference run.
+fn synth(party: u16, round: u64) -> Tensor {
+    let v: Vec<f32> = (0..BATCH * Z_DIM)
+        .map(|i| {
+            ((i as f32 * 0.31 + party as f32 * 1.7 + round as f32 * 0.13)
+                .sin())
+                * 0.8
+        })
+        .collect();
+    Tensor::f32(vec![BATCH, Z_DIM], v)
+}
+
+/// One feature party's traffic: optional `Hello` handshake, then
+/// ROUNDS of Activation → Derivative, then the label's Shutdown.
+fn feature_loop(party: PartyId, transport: &Arc<dyn Transport>,
+                requested: CodecKind) -> anyhow::Result<()> {
+    let codec = if requested != CodecKind::Identity {
+        transport.send(Message::Hello {
+            codecs: compress::supported_mask(),
+        })?;
+        match transport.recv()? {
+            Message::Hello { codecs } => {
+                compress::negotiate(requested, Some(codecs))
+            }
+            other => anyhow::bail!("expected Hello, got {:?}", other.tag()),
+        }
+    } else {
+        CodecKind::Identity
+    };
+    for round in 0..ROUNDS {
+        let za = synth(party.0, round);
+        let (msg, _za) = outbound_stats(codec, Lane::Activation, round, za)?;
+        transport.send(msg)?;
+        match transport.recv()?.into_plain()? {
+            Message::Derivative { round: r, .. } => {
+                anyhow::ensure!(r == round, "round skew on {party}");
+            }
+            other => anyhow::bail!("unexpected {:?}", other.tag()),
+        }
+    }
+    match transport.recv()? {
+        Message::Shutdown => Ok(()),
+        other => anyhow::bail!("expected Shutdown, got {:?}", other.tag()),
+    }
+}
+
+/// The label party's traffic over its whole mesh.
+fn label_loop(cfg: &RunConfig, session: &Session) -> anyhow::Result<()> {
+    let mut lanes = Vec::new();
+    for l in session.mesh().links() {
+        let requested = cfg.codec_for(l.peer.0);
+        let mut replay = None;
+        let codec = match l.transport.recv()? {
+            Message::Hello { codecs } => {
+                l.transport.send(Message::Hello {
+                    codecs: compress::supported_mask(),
+                })?;
+                compress::negotiate(requested, Some(codecs))
+            }
+            first => {
+                replay = Some(first);
+                CodecKind::Identity
+            }
+        };
+        lanes.push((l.peer, l.transport.clone(), codec, replay));
+    }
+    for round in 0..ROUNDS {
+        let mut zas = Vec::with_capacity(lanes.len());
+        for (peer, transport, _, replay) in lanes.iter_mut() {
+            let msg = match replay.take() {
+                Some(m) => m,
+                None => transport.recv()?,
+            };
+            match msg.into_plain()? {
+                Message::Activation { round: r, tensor } => {
+                    anyhow::ensure!(r == round, "skew on {peer}");
+                    zas.push(tensor);
+                }
+                other => anyhow::bail!("unexpected {:?}", other.tag()),
+            }
+        }
+        let zsum = Tensor::sum_f32(&zas)?;
+        // Stand-in for the exact step: ∇Z = 0.1 · ΣZ.
+        let dza = Tensor::f32(
+            zsum.shape.clone(),
+            zsum.as_f32()?.iter().map(|x| 0.1 * x).collect::<Vec<_>>(),
+        );
+        for (_, transport, codec, _) in lanes.iter() {
+            let (dmsg, _) = outbound_stats(*codec, Lane::Derivative,
+                                           round, dza.clone())?;
+            transport.send(dmsg)?;
+        }
+    }
+    for (_, transport, _, _) in &lanes {
+        transport.send(Message::Shutdown)?;
+    }
+    Ok(())
+}
+
+/// Sender-side per-link rows: (src, dst) → (wire, raw, msgs).
+type LinkMap = BTreeMap<(u16, u16), (u64, u64, u64)>;
+
+fn link_line(src: u16, dst: u16,
+             s: &celu_vfl::transport::LinkStats) -> String {
+    format!("LINK {src} {dst} {} {} {}", s.bytes, s.raw_bytes, s.messages)
+}
+
+fn parse_link_lines(text: &str, into: &mut LinkMap) -> anyhow::Result<()> {
+    for line in text.lines() {
+        let Some(rest) = line.trim().strip_prefix("LINK ") else {
+            continue;
+        };
+        let f: Vec<u64> = rest
+            .split_whitespace()
+            .map(|x| x.parse::<u64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad LINK line '{line}': {e}"))?;
+        anyhow::ensure!(f.len() == 5, "bad LINK line '{line}'");
+        let prev = into.insert((f[0] as u16, f[1] as u16),
+                               (f[2], f[3], f[4]));
+        anyhow::ensure!(prev.is_none(),
+                        "duplicate LINK row {}→{}", f[0], f[1]);
+    }
+    Ok(())
+}
+
+// ---- the three roles -------------------------------------------------------
+
+fn run_label(listen: &str) -> anyhow::Result<()> {
+    let cfg = smoke_cfg();
+    let listener = SessionListener::bind(listen)?.with_timeout(JOIN_TIMEOUT);
+    // The orchestrator reads this line to learn the bound port (the
+    // listener is started on port 0 to dodge port races in CI).
+    println!("ADDR {}", listener.local_addr()?);
+    use std::io::Write;
+    std::io::stdout().flush()?;
+    let session = SessionBuilder::from_bootstrap(&cfg, listener)?;
+    label_loop(&cfg, &session)?;
+    for (peer, s) in session.mesh().link_stats() {
+        println!("{}", link_line(LABEL_PARTY.0, peer.0, &s));
+    }
+    Ok(())
+}
+
+fn run_feature(party: u16, connect: &str) -> anyhow::Result<()> {
+    let cfg = smoke_cfg();
+    let session = SessionBuilder::from_bootstrap(
+        &cfg,
+        SessionDialer::new(connect, PartyId(party))
+            .with_timeout(JOIN_TIMEOUT),
+    )?;
+    let transport = session.mesh().links()[0].transport.clone();
+    feature_loop(PartyId(party), &transport, cfg.codec_for(party))?;
+    println!("{}", link_line(party, LABEL_PARTY.0, &transport.stats()));
+    Ok(())
+}
+
+/// Reference run: identical traffic over the in-proc bootstrap.
+fn run_inproc_reference() -> anyhow::Result<LinkMap> {
+    let cfg = smoke_cfg();
+    let (label_bs, feature_bs) = inproc_mesh(&cfg);
+    let label_session = SessionBuilder::from_bootstrap(&cfg, label_bs)?;
+    let mut handles = Vec::new();
+    let mut feature_transports = Vec::new();
+    for (i, bs) in feature_bs.into_iter().enumerate() {
+        let party = PartyId(i as u16 + 1);
+        let cfg_f = cfg.clone();
+        let session = SessionBuilder::from_bootstrap(&cfg, bs)?;
+        let transport = session.mesh().links()[0].transport.clone();
+        feature_transports.push((party, transport.clone()));
+        handles.push(std::thread::spawn(move || {
+            feature_loop(party, &transport, cfg_f.codec_for(party.0))
+        }));
+    }
+    label_loop(&cfg, &label_session)?;
+    for h in handles {
+        h.join().expect("feature thread panicked")?;
+    }
+    let mut map = LinkMap::new();
+    for (peer, s) in label_session.mesh().link_stats() {
+        map.insert((LABEL_PARTY.0, peer.0),
+                   (s.bytes, s.raw_bytes, s.messages));
+    }
+    for (party, t) in feature_transports {
+        let s = t.stats();
+        map.insert((party.0, LABEL_PARTY.0),
+                   (s.bytes, s.raw_bytes, s.messages));
+    }
+    Ok(map)
+}
+
+// ---- orchestrator ----------------------------------------------------------
+
+fn orchestrate() -> anyhow::Result<()> {
+    use std::process::{Command, Stdio};
+
+    let expected = run_inproc_reference()?;
+    println!("in-proc reference complete ({} links)", expected.len());
+
+    let exe = std::env::current_exe()?;
+    let mut label = Command::new(&exe)
+        .args(["--role", "label", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let mut label_out =
+        std::io::BufReader::new(label.stdout.take().expect("label stdout"));
+    let mut addr = String::new();
+    loop {
+        let mut line = String::new();
+        anyhow::ensure!(
+            label_out.read_line(&mut line)? > 0,
+            "label process exited before announcing its address"
+        );
+        if let Some(a) = line.trim().strip_prefix("ADDR ") {
+            addr = a.to_string();
+            break;
+        }
+    }
+    println!("label listening at {addr}; spawning feature processes");
+
+    let features: Vec<_> = [1u16, 2]
+        .iter()
+        .map(|p| {
+            let party = p.to_string();
+            Command::new(&exe)
+                .args(["--role", "feature", "--party", party.as_str(),
+                       "--connect", addr.as_str()])
+                .stdout(Stdio::piped())
+                .spawn()
+        })
+        .collect::<Result<_, _>>()?;
+
+    let mut got = LinkMap::new();
+    for (i, f) in features.into_iter().enumerate() {
+        let out = f.wait_with_output()?;
+        anyhow::ensure!(out.status.success(),
+                        "feature process {} failed", i + 1);
+        parse_link_lines(&String::from_utf8_lossy(&out.stdout), &mut got)?;
+    }
+    let mut rest = String::new();
+    std::io::Read::read_to_string(&mut label_out, &mut rest)?;
+    anyhow::ensure!(label.wait()?.success(), "label process failed");
+    parse_link_lines(&rest, &mut got)?;
+
+    // ---- the acceptance assertion ----------------------------------------
+    println!("\n{:<8} {:>12} {:>12} {:>6}   (tcp == in-proc?)",
+             "link", "wire B", "raw B", "msgs");
+    for (&(src, dst), &(bytes, raw, msgs)) in &expected {
+        let tcp = got.get(&(src, dst));
+        println!("{src}->{dst:<5} {bytes:>12} {raw:>12} {msgs:>6}   {}",
+                 if tcp == Some(&(bytes, raw, msgs)) { "OK" }
+                 else { "MISMATCH" });
+    }
+    anyhow::ensure!(
+        got == expected,
+        "per-link byte accounting diverged between the TCP session and \
+         the in-proc mesh:\n  tcp:     {got:?}\n  in-proc: {expected:?}"
+    );
+    // Sanity: the fp16 link (party 1) beat the identity link (party 2)
+    // on wire bytes in both worlds.
+    let fp16 = got[&(0, 1)].0;
+    let ident = got[&(0, 2)].0;
+    anyhow::ensure!(fp16 < ident,
+                    "fp16 link ({fp16} B) not smaller than identity \
+                     link ({ident} B)");
+    println!(
+        "\nK=3 TCP smoke OK: 3 OS processes, {ROUNDS} rounds, {} links \
+         byte-identical to the in-proc mesh",
+        got.len()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let cli = Cli::new("tcp_mesh_k3",
+                       "K=3 TCP session smoke (three OS processes)")
+        .opt("role", "orchestrate", "orchestrate | label | feature")
+        .opt("listen", "127.0.0.1:0", "label: listener bind address")
+        .opt("connect", "127.0.0.1:0", "feature: label party address")
+        .opt("party", "1", "feature: party id (1 or 2)");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli.parse(&argv)?;
+    match args.get("role") {
+        "orchestrate" => orchestrate(),
+        "label" => run_label(args.get("listen")),
+        "feature" => run_feature(args.get_usize("party")? as u16,
+                                 args.get("connect")),
+        other => anyhow::bail!("unknown role '{other}'"),
+    }
+}

@@ -367,6 +367,15 @@ fn parse_party_overrides(doc: &TomlDoc)
         }
     }
     out.sort_by_key(|(id, _)| *id);
+    // The TOML layer already rejects duplicate keys (two `[party.N]`
+    // sections both setting `compress` collide on `party.N.compress`),
+    // but guard here too so a future multi-key section can't make two
+    // sections for one party silently coexist.
+    for w in out.windows(2) {
+        if w[0].0 == w[1].0 {
+            anyhow::bail!("duplicate [party.{}] section", w[0].0);
+        }
+    }
     Ok(out)
 }
 
@@ -489,6 +498,54 @@ mod tests {
         let e = RunConfig::from_toml(
             "parties = 3\n[party.2]\ncompres = \"int8\"\n");
         assert!(e.unwrap_err().to_string().contains("unknown key"));
+    }
+
+    #[test]
+    fn party_section_failures_name_the_offending_key() {
+        // Every way a [party.N] section can be wrong must fail loudly
+        // *and* point at the section/key that caused it — a K-party
+        // launch is K shells reading the same file, so a silent no-op
+        // here desynchronizes a whole fleet.
+
+        // Duplicate section: caught at the TOML layer as a duplicate
+        // flattened key, named in full.
+        let e = RunConfig::from_toml(
+            "parties = 3\n[party.2]\ncompress = \"int8\"\n\
+             [party.2]\ncompress = \"fp16\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("party.2.compress"), "duplicate unnamed: {e}");
+
+        // id ≥ parties (and the label party's id 0): named section.
+        let e = RunConfig::from_toml(
+            "parties = 3\n[party.7]\ncompress = \"int8\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[party.7]"), "bad id unnamed: {e}");
+        assert!(e.contains("1..=2"), "valid range missing: {e}");
+        let e = RunConfig::from_toml(
+            "parties = 3\n[party.0]\ncompress = \"int8\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[party.0]"), "label id unnamed: {e}");
+
+        // Unknown key inside a party section: both the key and the
+        // section are named, with the supported menu.
+        let e = RunConfig::from_toml(
+            "parties = 3\n[party.2]\ncompres = \"int8\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("'compres'") && e.contains("[party.2]"),
+                "typo'd key unnamed: {e}");
+        assert!(e.contains("compress"), "supported menu missing: {e}");
+
+        // Non-numeric party id: named section.
+        let e = RunConfig::from_toml(
+            "parties = 3\n[party.one]\ncompress = \"int8\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("party.one"), "bad section unnamed: {e}");
     }
 
     #[test]

@@ -19,10 +19,11 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
-use crate::data::SynthDataset;
+use crate::data::{PartyAData, SynthDataset};
 use crate::metrics::{LinkRecord, RunRecord};
 use crate::runtime::ArtifactSet;
-use crate::session::{inproc_star, PartyId, SessionBuilder, LABEL_PARTY};
+use crate::session::bootstrap::inproc_mesh;
+use crate::session::{PartyId, SessionBuilder, LABEL_PARTY};
 use crate::transport::Transport;
 
 use super::feature_party::FeaturePartyReport;
@@ -69,6 +70,43 @@ pub fn load_data(cfg: &RunConfig, set: &ArtifactSet)
     )
 }
 
+/// Vertically slice the Party-A feature space across `cfg`'s feature
+/// parties and check every slice against the artifact manifest's
+/// bottom-model input width. The two-party case moves the data instead
+/// of calling `vertical_split(1)` (which clones): the full id matrix
+/// is tens of MB at sweep scale and is about to be wrapped in an Arc
+/// anyway. Shared by the in-proc trainer and the TCP deployment (which
+/// keeps only its own slice).
+pub fn feature_slices(
+    cfg: &RunConfig,
+    set: &ArtifactSet,
+    train_a: PartyAData,
+    test_a: PartyAData,
+) -> anyhow::Result<(Vec<PartyAData>, Vec<PartyAData>)> {
+    let k = cfg.feature_parties();
+    let (train_slices, test_slices) = if k == 1 {
+        (vec![train_a], vec![test_a])
+    } else {
+        (train_a.vertical_split(k)?, test_a.vertical_split(k)?)
+    };
+    if k > 1 {
+        // The bottom-model artifact has a fixed input width; a K-party
+        // run needs artifacts compiled for the per-party slice.
+        for (i, s) in train_slices.iter().enumerate() {
+            anyhow::ensure!(
+                s.fields == set.manifest.fields_a,
+                "artifact set '{}' compiles a {}-field bottom model but \
+                 feature party {} holds {} of the vertically-split \
+                 fields — compile per-party artifacts \
+                 (python/compile/aot.py --parties {}) for --parties {}",
+                cfg.artifact_tag(), set.manifest.fields_a, i + 1,
+                s.fields, cfg.parties, cfg.parties
+            );
+        }
+    }
+    Ok((train_slices, test_slices))
+}
+
 /// Run one full K-party training job in-process (K = `cfg.parties`;
 /// 2 is the classic two-party run).
 pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
@@ -81,47 +119,29 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
     );
     let k = cfg.feature_parties();
     let data = load_data(cfg, &set)?;
-    // Vertical split of the Party-A feature space across the feature
-    // parties. The two-party case moves the data instead of calling
-    // `vertical_split(1)` (which clones): the full id matrix is tens of
-    // MB at sweep scale and is about to be wrapped in an Arc anyway.
-    let (train_slices, test_slices) = if k == 1 {
-        (vec![data.train_a], vec![data.test_a])
-    } else {
-        (data.train_a.vertical_split(k)?,
-         data.test_a.vertical_split(k)?)
-    };
-    if k > 1 {
-        // The bottom-model artifact has a fixed input width; a K-party
-        // run needs artifacts compiled for the per-party slice.
-        for (i, s) in train_slices.iter().enumerate() {
-            anyhow::ensure!(
-                s.fields == set.manifest.fields_a,
-                "artifact set '{}' compiles a {}-field bottom model but \
-                 feature party {} holds {} of the vertically-split \
-                 fields — compile per-party artifacts \
-                 (python/compile, fields_a = {}) for --parties {}",
-                cfg.artifact_tag(), set.manifest.fields_a, i + 1,
-                s.fields, s.fields, cfg.parties
-            );
-        }
-    }
+    let (train_slices, test_slices) =
+        feature_slices(cfg, &set, data.train_a, data.test_a)?;
     let train_b = Arc::new(data.train_b);
     let test_b = Arc::new(data.test_b);
 
-    let (label_links, feature_links) = inproc_star(cfg);
-    let feature_transports: Vec<_> =
-        feature_links.iter().map(|l| l.transport.clone()).collect();
+    // Same bootstrap surface as the TCP deployment: the in-proc star is
+    // just the pre-wired MeshBootstrap, so the trainer exercises the
+    // exact session-construction path a K-process launch does.
+    let (label_bootstrap, feature_bootstraps) = inproc_mesh(cfg);
+    let label_session = SessionBuilder::from_bootstrap(cfg, label_bootstrap)?;
 
     let start = Instant::now();
+    let mut feature_transports = Vec::with_capacity(k);
     let mut handles = Vec::with_capacity(k);
-    for ((i, flink), (train, test)) in feature_links
+    for ((i, bootstrap), (train, test)) in feature_bootstraps
         .into_iter()
         .enumerate()
         .zip(train_slices.into_iter().zip(test_slices))
     {
         let party = PartyId(i as u16 + 1);
-        let cfg_f = cfg.clone();
+        let session = SessionBuilder::from_bootstrap(cfg, bootstrap)?;
+        feature_transports
+            .push(session.mesh().links()[0].transport.clone());
         let set_f = set.clone();
         let train = Arc::new(train);
         let test = Arc::new(test);
@@ -129,18 +149,10 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
             std::thread::Builder::new()
                 .name(format!("feature-{}", party.0))
                 .spawn(move || -> anyhow::Result<FeaturePartyReport> {
-                    let session = SessionBuilder::new(&cfg_f, party)
-                        .link(LABEL_PARTY, flink.transport)
-                        .build()?;
                     session.run_feature(set_f, train, test)
                 })?,
         );
     }
-    let mut label_builder = SessionBuilder::new(cfg, LABEL_PARTY);
-    for l in label_links {
-        label_builder = label_builder.link(l.peer, l.transport);
-    }
-    let label_session = label_builder.build()?;
     let b_report: LabelPartyReport =
         label_session.run_label(set.clone(), train_b, test_b)?;
     let mut feature_reports = Vec::with_capacity(k);

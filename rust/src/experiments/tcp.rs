@@ -1,73 +1,102 @@
-//! Two-process deployment: run one party over real TCP.
+//! K-process deployment: run one party of a TCP session.
 //!
 //! The production shape of a VFL job — each enterprise runs its own
 //! binary inside its own network perimeter; only `Z`/`∇Z` frames cross
-//! the boundary. Both processes must be launched with the same config
-//! (model/dataset/size/seed) so the pre-aligned synthetic data and the
-//! batch schedule agree, mirroring the paper's post-PSI setup.
+//! the boundary. The label party is the **session server**
+//! (`--role label --listen ADDR`): it binds once and accepts K−1
+//! `Join`-identified connections (DESIGN.md §7). Each feature party is
+//! a dialer (`--role feature --party N --connect ADDR`) that retries
+//! with backoff until the label party is up, so the K shells can be
+//! launched in any order. Every process must be launched with the same
+//! config (model/dataset/size/seed/parties) so the pre-aligned
+//! synthetic data and the batch schedule agree, mirroring the paper's
+//! post-PSI setup; the bootstrap handshake rejects session-size
+//! mismatches outright.
 //!
 //! Roles accept the session vocabulary (`feature` / `label`) as well as
-//! the historic two-party aliases (`a` = feature, `b` = label); either
-//! way the run goes through the session drivers, so the wire format is
-//! the byte-identical two-party stream. Multi-party TCP meshes (a
-//! label process accepting K−1 feature connections, identified by
-//! their v2 frame headers) are an open ROADMAP item — in-proc K-party
-//! runs are already supported by `trainer::run_training`.
+//! the historic two-party aliases (`a` = feature, `b` = label). With
+//! `--parties 2` the training wire is the byte-identical two-party
+//! stream (v1 frames); with more parties every link speaks v2
+//! (party-addressed) frames and each feature process trains on its own
+//! vertical slice of the Party-A feature space — which requires
+//! artifacts compiled for the slice width (`aot.py --parties K`).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::RunConfig;
-use crate::coordinator::{run_party_a, run_party_b};
-use crate::coordinator::trainer::{load_data, load_set};
-use crate::transport::tcp::TcpTransport;
-use crate::transport::Transport;
+use crate::coordinator::trainer::{feature_slices, load_data, load_set};
+use crate::session::bootstrap::{SessionDialer, SessionListener};
+use crate::session::{PartyId, SessionBuilder};
 
 pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
-                     connect: &str) -> anyhow::Result<()> {
+                     connect: &str, party: u16, join_timeout: Duration)
+                     -> anyhow::Result<()> {
     cfg.validate()?;
-    anyhow::ensure!(
-        cfg.parties == 2,
-        "TCP deployment currently supports two-party sessions; use the \
-         in-proc trainer for --parties {}", cfg.parties
-    );
-    let set = load_set(cfg)?;
-    let data = load_data(cfg, &set)?;
     match role {
         "b" | "label" => {
-            let transport: Arc<dyn Transport> =
-                Arc::new(TcpTransport::listen(listen, cfg.wan)?);
-            let report = run_party_b(
-                cfg,
+            // Bind before touching artifacts: dialers can already be
+            // retrying, and an artifact error should not look like a
+            // dead listener from their side any longer than necessary.
+            let listener =
+                SessionListener::bind(listen)?.with_timeout(join_timeout);
+            log::info!(
+                "label party listening on {} for {} feature parties",
+                listener.local_addr()?,
+                cfg.feature_parties()
+            );
+            let set = load_set(cfg)?;
+            let data = load_data(cfg, &set)?;
+            let session = SessionBuilder::from_bootstrap(cfg, listener)?;
+            let report = session.run_label(
                 set,
                 Arc::new(data.train_b),
                 Arc::new(data.test_b),
-                transport.clone(),
             )?;
             let best = report
                 .series
                 .iter()
                 .map(|p| p.auc)
                 .fold(0.0f64, f64::max);
-            let stats = transport.stats();
             println!(
-                "label party done: rounds={} local_updates={} \
-                 best_auc={:.4} sent={}B (raw {}B, ratio {:.2}) stop={:?}",
-                report.comm_rounds, report.local_updates, best,
-                stats.bytes, stats.raw_bytes, stats.compression_ratio(),
-                report.stop_reason
+                "label party done: parties={} rounds={} local_updates={} \
+                 best_auc={:.4} stop={:?}",
+                cfg.parties, report.comm_rounds, report.local_updates,
+                best, report.stop_reason
             );
+            // Per-link accounting keyed by the ids that actually
+            // joined — the K-party analogue of the old single-link
+            // summary line.
+            println!("{:<8} {:>10} {:>10} {:>8} {:>8}", "link",
+                     "wire B", "raw B", "msgs", "ratio");
+            for (peer, s) in session.mesh().link_stats() {
+                println!(
+                    "0->{:<5} {:>10} {:>10} {:>8} {:>8.2}",
+                    peer.0, s.bytes, s.raw_bytes, s.messages,
+                    s.compression_ratio()
+                );
+            }
         }
         "a" | "feature" => {
-            let transport: Arc<dyn Transport> =
-                Arc::new(TcpTransport::connect(connect, cfg.wan)?);
-            let report = run_party_a(
-                cfg,
-                set,
-                Arc::new(data.train_a),
-                Arc::new(data.test_a),
-                transport.clone(),
-            )?;
-            let stats = transport.stats();
+            let k = cfg.feature_parties();
+            anyhow::ensure!(
+                party >= 1 && (party as usize) <= k,
+                "--party {party} out of range for --parties {} \
+                 (valid feature ids: 1..={k})", cfg.parties
+            );
+            let set = load_set(cfg)?;
+            let data = load_data(cfg, &set)?;
+            // Every process computes the same deterministic split and
+            // keeps only its own slice — no feature data ever moves.
+            let (mut train_slices, mut test_slices) =
+                feature_slices(cfg, &set, data.train_a, data.test_a)?;
+            let train = Arc::new(train_slices.swap_remove(party as usize - 1));
+            let test = Arc::new(test_slices.swap_remove(party as usize - 1));
+            let dialer = SessionDialer::new(connect, PartyId(party))
+                .with_timeout(join_timeout);
+            let session = SessionBuilder::from_bootstrap(cfg, dialer)?;
+            let report = session.run_feature(set, train, test)?;
+            let stats = session.mesh().links()[0].transport.stats();
             println!(
                 "feature party {} done: rounds={} local_updates={} \
                  sent={}B (raw {}B, ratio {:.2})",

@@ -6,7 +6,11 @@
 //!
 //! - **L3 (this crate)** — the VFL coordinator: a K-party session API
 //!   (`session`: role-based parties over a per-peer transport mesh,
-//!   DESIGN.md §6) running the paper's protocol with negotiated wire
+//!   DESIGN.md §6) with a listener-based bootstrap
+//!   (`session::bootstrap`: the label party is a session server
+//!   accepting `Join`-identified connections, feature parties dial in
+//!   with backoff — DESIGN.md §7, so the mesh launches as K OS
+//!   processes), running the paper's protocol with negotiated wire
 //!   compression for the exchanged statistics (`compress`: fp16 / int8
 //!   / top-k codecs, DESIGN.md §5), simulated-WAN / TCP transports with
 //!   per-link raw-vs-wire byte accounting, per-peer workset lanes with

@@ -3,14 +3,19 @@
 //! Subcommands:
 //!   train   run a K-party training job in-process (simulated WAN;
 //!           --parties 2 is the classic two-party run)
-//!   party   run one party of a two-process TCP deployment
+//!   party   run one party of a K-process TCP session (the label party
+//!           is the session server; feature parties dial in and claim
+//!           an id via the Join handshake — DESIGN.md §7)
 //!   info    print artifact/manifest information
 //!
 //! Examples:
 //!   celu-vfl train --config configs/quickstart.toml
 //!   celu-vfl train --algorithm celu --r 5 --w 5 --xi 60 --rounds 2000
 //!   celu-vfl train --parties 3 --rounds 500
-//!   celu-vfl party --role label --listen 0.0.0.0:7000 --config cfg.toml
+//!   # K=3 over TCP, one shell per party (any launch order):
+//!   celu-vfl party --role label   --parties 3 --listen 0.0.0.0:7000
+//!   celu-vfl party --role feature --parties 3 --party 1 --connect host:7000
+//!   celu-vfl party --role feature --parties 3 --party 2 --connect host:7000
 //!   celu-vfl info --artifacts artifacts
 
 use celu_vfl::compress::CodecKind;
@@ -153,17 +158,40 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_party(argv: &[String]) -> anyhow::Result<()> {
-    let cli = train_cli("celu-vfl party", "one party of a TCP deployment")
-        .req("role", "feature | label (aliases: a | b)")
-        .opt("listen", "127.0.0.1:7001", "B: address to listen on")
-        .opt("connect", "127.0.0.1:7001", "A: address to connect to");
+    let cli = train_cli("celu-vfl party",
+                        "one party of a K-process TCP session")
+        .req("role", "label | feature (aliases: b | a)")
+        .opt("listen", "127.0.0.1:7001",
+             "label: address the session listener binds")
+        .opt("connect", "127.0.0.1:7001",
+             "feature: the label party's listener address")
+        .opt("party", "1", "feature: this party's id (1..parties)")
+        .opt("join-timeout", "30",
+             "seconds to wait for the full mesh to assemble");
     let args = cli.parse(argv)?;
     let cfg = load_config(&args)?;
+    let timeout = args.get_f64("join-timeout")?;
+    // Finite + bounded before Duration::from_secs_f64, which panics on
+    // inf/overflow instead of erroring.
+    anyhow::ensure!(
+        timeout > 0.0 && timeout <= 86_400.0,
+        "--join-timeout must be in (0, 86400] seconds, got {timeout}"
+    );
+    // Range-check before the u16 cast: a fat-fingered id must fail
+    // here, not silently wrap onto another party's slot and get that
+    // party rejected as a duplicate.
+    let party = args.get_usize("party")?;
+    anyhow::ensure!(
+        party <= u16::MAX as usize,
+        "--party {party} does not fit a party id (max {})", u16::MAX
+    );
     celu_vfl::experiments::tcp::run_tcp_party(
         &cfg,
         args.get("role"),
         args.get("listen"),
         args.get("connect"),
+        party as u16,
+        std::time::Duration::from_secs_f64(timeout),
     )
 }
 

@@ -24,6 +24,19 @@
 //! statistics tensors — peers that never send `Hello` are spoken to in
 //! the original uncompressed format.
 //!
+//! Session bootstrap (DESIGN.md §7) adds two fixed-size control frames:
+//!   `[… tag=9][u64 0][u8 ver][u16 party][u16 parties][u32 codecs]` — `Join`
+//!   `[… tag=10][u64 0][u8 ver][u16 party][u16 parties][u32 codecs]` — `JoinAck`
+//! `Join` is the first frame a dialing feature party puts on a fresh
+//! socket: it claims a `PartyId`, states the session size it was
+//! configured for, and advertises its decodable codec families (the
+//! `Hello` bitmask). The listener answers `JoinAck` (echoing the
+//! accepted id) or drops the connection. Both frames carry their own
+//! version byte and are validated — version, then id ranges — before
+//! the `Message` is constructed; the bodies are fixed-size, so a
+//! hostile header can never drive an allocation. Training traffic never
+//! carries these tags: they exist only on pre-session sockets.
+//!
 //! K-party sessions (DESIGN.md §6) frame every link with a **versioned
 //! header** carrying the endpoints' party ids:
 //!   `[u32 frame_len][u8 tag=8][u8 ver=2][u16 src][u16 dst][v1 body…]`
@@ -71,6 +84,15 @@ pub enum Message {
     /// One statistics tensor in compressed form on `lane`. Decompressed
     /// at the protocol boundary via [`Message::into_plain`].
     Compressed { round: u64, lane: Lane, stats: CompressedStats },
+    /// Bootstrap, feature → label: claim `party` in a `parties`-party
+    /// session and advertise the codec families this peer can decode
+    /// (the `Hello` bitmask). Sent exactly once, as the first frame on
+    /// a freshly-dialed socket — never during training.
+    Join { party: PartyId, parties: u16, codecs: u32 },
+    /// Bootstrap, label → feature: accept the claim. Echoes the
+    /// accepted id and the session size so a misconfigured dialer
+    /// fails at bootstrap, not mid-round.
+    JoinAck { party: PartyId, parties: u16, codecs: u32 },
 }
 
 /// Which statistics lane a compressed frame travels on. Exactly the
@@ -112,8 +134,14 @@ const TAG_COMP: u8 = 7;
 /// Envelope tag for v2 (party-addressed) frames. Disjoint from every
 /// v1 message tag so the decoder can dispatch on the first byte.
 const TAG_V2: u8 = 8;
+const TAG_JOIN: u8 = 9;
+const TAG_JOIN_ACK: u8 = 10;
 /// Current addressed-frame version.
 const FRAME_VERSION: u8 = 2;
+/// Current bootstrap (`Join`/`JoinAck`) frame version. Carried in the
+/// body so the handshake can evolve independently of both the v1
+/// message set and the v2 envelope.
+pub const JOIN_VERSION: u8 = 1;
 
 /// Bytes the v2 envelope adds in front of a v1 body:
 /// `[u8 tag][u8 ver][u16 src][u16 dst]`.
@@ -219,6 +247,8 @@ impl Message {
             Message::Shutdown => TAG_SHUTDOWN,
             Message::Hello { .. } => TAG_HELLO,
             Message::Compressed { .. } => TAG_COMP,
+            Message::Join { .. } => TAG_JOIN,
+            Message::JoinAck { .. } => TAG_JOIN_ACK,
         }
     }
 
@@ -238,7 +268,10 @@ impl Message {
             | Message::EvalActivation { round, .. }
             | Message::EvalAck { round }
             | Message::Compressed { round, .. } => *round,
-            Message::Shutdown | Message::Hello { .. } => 0,
+            Message::Shutdown
+            | Message::Hello { .. }
+            | Message::Join { .. }
+            | Message::JoinAck { .. } => 0,
         }
     }
 
@@ -250,6 +283,10 @@ impl Message {
         let body = 1 + 8
             + match self {
                 Message::Hello { .. } => 4,
+                // ver + party + parties + codecs.
+                Message::Join { .. } | Message::JoinAck { .. } => {
+                    1 + 2 + 2 + 4
+                }
                 Message::Compressed { stats, .. } => {
                     1 + stats.wire_block_bytes()
                 }
@@ -319,6 +356,13 @@ impl Message {
             Message::Hello { codecs } => {
                 out.extend_from_slice(&codecs.to_le_bytes());
             }
+            Message::Join { party, parties, codecs }
+            | Message::JoinAck { party, parties, codecs } => {
+                out.push(JOIN_VERSION);
+                out.extend_from_slice(&party.0.to_le_bytes());
+                out.extend_from_slice(&parties.to_le_bytes());
+                out.extend_from_slice(&codecs.to_le_bytes());
+            }
             Message::Compressed { lane, stats, .. } => {
                 out.push(lane.tag());
                 out.push(stats.kind.code());
@@ -366,6 +410,42 @@ impl Message {
             TAG_SHUTDOWN => Message::Shutdown,
             TAG_EVAL_ACK => Message::EvalAck { round },
             TAG_HELLO => Message::Hello { codecs: r.u32()? },
+            TAG_JOIN | TAG_JOIN_ACK => {
+                // Version first, ids second, both validated before the
+                // Message is constructed. The body is fixed-size, so no
+                // allocation rides on these fields — but the range
+                // discipline matches the tensor/compressed paths: a
+                // hostile bootstrap frame dies on arithmetic alone.
+                let ver = r.u8()?;
+                if ver != JOIN_VERSION {
+                    anyhow::bail!(
+                        "unsupported join version {ver} (this build \
+                         speaks {JOIN_VERSION})"
+                    );
+                }
+                let party = r.u16()?;
+                let parties = r.u16()?;
+                let codecs = r.u32()?;
+                if !(2..=MAX_PARTIES).contains(&parties) {
+                    anyhow::bail!(
+                        "join frame declares a {parties}-party session \
+                         (valid: 2..={MAX_PARTIES})"
+                    );
+                }
+                if party == 0 || party >= parties {
+                    anyhow::bail!(
+                        "join frame claims party id {party} in a \
+                         {parties}-party session (valid feature ids: \
+                         1..={})", parties - 1
+                    );
+                }
+                let party = PartyId(party);
+                if tag == TAG_JOIN {
+                    Message::Join { party, parties, codecs }
+                } else {
+                    Message::JoinAck { party, parties, codecs }
+                }
+            }
             TAG_COMP => {
                 let lane = Lane::from_tag(r.u8()?)?;
                 let code = r.u8()?;
@@ -600,6 +680,10 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
 
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
     fn u32(&mut self) -> anyhow::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -718,11 +802,14 @@ mod tests {
         // the review point for the §4.2 security argument. `Compressed`
         // does not widen the surface: `Lane` is closed over the three
         // statistics lanes, and `Hello` carries only a codec bitmask.
+        // `Join`/`JoinAck` carry only session topology (ids, size) and
+        // the `Hello` codec bitmask — no statistics at all.
         let m = Message::Shutdown;
         match m {
             Message::Activation { .. } | Message::Derivative { .. }
             | Message::EvalActivation { .. } | Message::EvalAck { .. }
-            | Message::Shutdown | Message::Hello { .. } => {}
+            | Message::Shutdown | Message::Hello { .. }
+            | Message::Join { .. } | Message::JoinAck { .. } => {}
             Message::Compressed { lane, .. } => match lane {
                 Lane::Activation | Lane::Derivative
                 | Lane::EvalActivation => {}
@@ -1170,6 +1257,159 @@ mod v2_tests {
 }
 
 #[cfg(test)]
+mod bootstrap_tests {
+    //! `Join`/`JoinAck` coverage: golden bytes pinning the handshake
+    //! frame layout, roundtrips, and hostile-header rejection (wrong
+    //! version / out-of-range ids — validated before the message is
+    //! built; duplicate-id rejection is a *listener* semantic and is
+    //! covered in `session::bootstrap`).
+
+    use super::*;
+
+    fn hex_to_bytes(hex: &str) -> Vec<u8> {
+        let compact: String =
+            hex.chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(compact.len() % 2, 0, "odd hex length");
+        (0..compact.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&compact[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    /// Golden fixtures captured at introduction time: byte-for-byte
+    /// drift in the bootstrap handshake fails here.
+    fn join_fixtures() -> Vec<(&'static str, Message, &'static str)> {
+        vec![
+            (
+                "join_p2_of_3",
+                Message::Join {
+                    party: PartyId(2),
+                    parties: 3,
+                    codecs: 0x0f,
+                },
+                "09 0000000000000000 01 0200 0300 0f000000",
+            ),
+            (
+                "join_ack_p2_of_3",
+                Message::JoinAck {
+                    party: PartyId(2),
+                    parties: 3,
+                    codecs: 0x0f,
+                },
+                "0a 0000000000000000 01 0200 0300 0f000000",
+            ),
+            (
+                "join_p1_of_2_no_codecs",
+                Message::Join {
+                    party: PartyId(1),
+                    parties: 2,
+                    codecs: 0,
+                },
+                "09 0000000000000000 01 0100 0200 00000000",
+            ),
+            (
+                "join_ack_p63_of_64_all_codecs",
+                Message::JoinAck {
+                    party: PartyId(63),
+                    parties: 64,
+                    codecs: 0xffff_ffff,
+                },
+                "0a 0000000000000000 01 3f00 4000 ffffffff",
+            ),
+        ]
+    }
+
+    #[test]
+    fn golden_join_encode_is_byte_identical() {
+        for (name, msg, hex) in join_fixtures() {
+            assert_eq!(msg.encode(), hex_to_bytes(hex),
+                       "encode drifted for fixture '{name}'");
+            assert_eq!(msg.wire_bytes(), msg.encode().len() + 4,
+                       "wire_bytes drifted for fixture '{name}'");
+        }
+    }
+
+    #[test]
+    fn golden_join_decode_recovers_messages() {
+        for (name, msg, hex) in join_fixtures() {
+            let dec = Message::decode(&hex_to_bytes(hex))
+                .unwrap_or_else(|e| panic!("fixture '{name}': {e}"));
+            assert_eq!(dec, msg, "decode drifted for fixture '{name}'");
+            // Bootstrap frames travel headerless: decode_frame must
+            // take the v1 path and attach no envelope.
+            let (h, m) = decode_frame(&hex_to_bytes(hex)).unwrap();
+            assert_eq!(h, None, "join fixture '{name}' grew a header");
+            assert_eq!(m, msg);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_join_version() {
+        let good = Message::Join {
+            party: PartyId(1),
+            parties: 3,
+            codecs: 0x0f,
+        }
+        .encode();
+        for bad_ver in [0u8, 2, 7, 255] {
+            let mut bent = good.clone();
+            bent[9] = bad_ver; // version byte follows tag + round
+            let e = Message::decode(&bent).unwrap_err().to_string();
+            assert!(e.contains("join version"), "version {bad_ver}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_join_ids() {
+        // (party, parties) pairs the decoder must refuse: the label id
+        // can never join, ids must sit inside the declared session, and
+        // the session size itself is bounded by MAX_PARTIES.
+        for (party, parties) in [
+            (0u16, 3u16),                 // label party never joins
+            (3, 3),                       // id == parties
+            (9, 3),                       // id > parties
+            (1, 1),                       // no feature slots
+            (1, 0),                       // degenerate session
+            (1, MAX_PARTIES + 1),         // session too large
+            (u16::MAX, MAX_PARTIES),      // both huge
+        ] {
+            let frame = Message::Join {
+                party: PartyId(party),
+                parties,
+                codecs: 0,
+            }
+            .encode();
+            assert!(Message::decode(&frame).is_err(),
+                    "join ({party}, {parties}) decoded");
+        }
+        // Boundary: the largest legal claim still decodes.
+        let ok = Message::Join {
+            party: PartyId(MAX_PARTIES - 1),
+            parties: MAX_PARTIES,
+            codecs: 0,
+        };
+        assert_eq!(Message::decode(&ok.encode()).unwrap(), ok);
+    }
+
+    #[test]
+    fn join_truncations_error_cleanly() {
+        let enc = Message::JoinAck {
+            party: PartyId(2),
+            parties: 3,
+            codecs: 0x0f,
+        }
+        .encode();
+        for cut in 0..enc.len() {
+            assert!(Message::decode(&enc[..cut]).is_err(),
+                    "truncation at {cut} decoded");
+        }
+        let mut trailing = enc;
+        trailing.push(0);
+        assert!(Message::decode(&trailing).is_err(), "trailing byte ok'd");
+    }
+}
+
+#[cfg(test)]
 mod fuzz_tests {
     use super::*;
     use crate::testing::prop;
@@ -1408,6 +1648,42 @@ mod fuzz_tests {
             }
             prop_assert!(decode_frame(&frame).is_err(),
                          "out-of-range party id decoded");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hostile_join_frames_error_cleanly() {
+        // Hand-built Join/JoinAck frames with random versions and id
+        // pairs: decode must be total (Ok or Err, never a panic), must
+        // reject every wrong version, and must reject every (party,
+        // parties) pair outside the valid feature-id range — from the
+        // fixed-size header alone.
+        prop::check("hostile join frames", |rng| {
+            let tag = if rng.next_f32() < 0.5 { 9u8 } else { 10u8 };
+            let ver = (rng.gen_range(4) as u8).wrapping_sub(1); // 255,0,1,2
+            let party = rng.next_u32() as u16;
+            let parties = rng.next_u32() as u16;
+            let mut frame = Vec::new();
+            frame.push(tag);
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes());
+            frame.push(ver);
+            frame.extend_from_slice(&party.to_le_bytes());
+            frame.extend_from_slice(&parties.to_le_bytes());
+            frame.extend_from_slice(&rng.next_u32().to_le_bytes());
+            let ids_ok = (2..=MAX_PARTIES).contains(&parties)
+                && party >= 1
+                && party < parties;
+            // Round must be 0 for a join to round-trip; random rounds
+            // still decode (the field is ignored) — the property under
+            // test is version/range rejection, so only assert the
+            // rejecting cases.
+            let dec = Message::decode(&frame);
+            if ver != JOIN_VERSION || !ids_ok {
+                prop_assert!(dec.is_err(),
+                             "hostile join (ver {ver}, party {party}, \
+                              parties {parties}) decoded");
+            }
             Ok(())
         });
     }

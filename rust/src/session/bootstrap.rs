@@ -1,0 +1,743 @@
+//! Session bootstrap: how meshes come into existence (DESIGN.md §7).
+//!
+//! The earlier TCP path hard-wired the degenerate two-process topology
+//! (dial exactly one peer). This module replaces that with a
+//! listener/acceptor session-server API so the paper's actual
+//! deployment shape — one label party, K−1 geo-distributed feature
+//! parties — can be launched as K OS processes:
+//!
+//! - [`SessionListener`] (label side): bind once, accept connections
+//!   until every expected feature party has presented a valid
+//!   [`Message::Join`] frame (claimed [`PartyId`] + codec
+//!   capabilities), answering each with a [`Message::JoinAck`].
+//!   Duplicate ids, out-of-range ids, wrong-version joins and
+//!   wrong-size sessions are rejected (connection dropped, loudly
+//!   logged) without disturbing the peers that already joined; if the
+//!   mesh is still incomplete at the deadline, `establish` fails
+//!   naming exactly the parties that never arrived.
+//! - [`SessionDialer`] (feature side): connect with exponential
+//!   backoff until the label party is up (launch order between shells
+//!   must not matter), send `Join`, verify the `JoinAck` echoes this
+//!   party's id and session size.
+//! - [`MeshBootstrap`] unifies the above with the in-proc star
+//!   ([`inproc_mesh`]): `SessionBuilder::from_bootstrap` produces the
+//!   same topology-validated [`Session`](super::Session) object
+//!   regardless of transport, so the trainer and the CLI are
+//!   transport-agnostic.
+//!
+//! The handshake runs on the **raw socket**, before the
+//! [`TcpTransport`] is constructed: `LinkStats` therefore counts
+//! training traffic only, and a K-party TCP session's per-link byte
+//! totals are identical to the in-proc mesh of the same config (the
+//! `tcp_mesh_k3` example asserts this in CI). Two-party sessions keep
+//! v1 (headerless) training frames — byte-identical to the historic
+//! wire — while `parties > 2` promotes every link to v2 identity
+//! framing via [`TcpTransport::with_identity`].
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::compress;
+use crate::config::RunConfig;
+use crate::protocol::{decode_frame, encode_frame_into, Message};
+use crate::transport::tcp::{connect_with_backoff, TcpTransport};
+use crate::transport::Transport;
+
+use super::{inproc_star, Link, PartyId, LABEL_PARTY};
+
+/// Default time budget for a mesh to assemble. Generous because the
+/// human launching three shells is part of the loop; override with
+/// [`SessionListener::with_timeout`] / [`SessionDialer::with_timeout`].
+pub const DEFAULT_JOIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Hard cap on a bootstrap frame body. `Join`/`JoinAck` are fixed
+/// 18-byte bodies; anything longer is not a session peer, and the cap
+/// is checked before the body buffer is allocated (the hostile-header
+/// discipline of the protocol layer, applied to the socket read).
+const MAX_BOOTSTRAP_FRAME: usize = 64;
+
+/// Poll interval of the accept loop while waiting for joiners.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Cap on how long `admit` waits for one connection's `Join` frame.
+/// The accept loop vets joiners serially, so this must be small: a
+/// connection that never speaks (health-check probe, port scanner)
+/// may stall the loop for at most this long, not the whole join
+/// window.
+const JOIN_READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// One way of bringing a party's mesh into existence. Implementations
+/// carry everything transport-specific (sockets, deadlines, pre-wired
+/// channels); `SessionBuilder::from_bootstrap` consumes one and
+/// produces the same topology-validated `Session` regardless of which
+/// implementation did the wiring.
+pub trait MeshBootstrap {
+    /// The party this bootstrap assembles links for.
+    fn id(&self) -> PartyId;
+
+    /// Block until every link exists (or fail). Returns one [`Link`]
+    /// per peer; `SessionBuilder::build` re-validates the topology.
+    fn establish(self, cfg: &RunConfig) -> anyhow::Result<Vec<Link>>
+    where
+        Self: Sized;
+}
+
+// ---- in-proc ---------------------------------------------------------------
+
+/// Pre-wired in-proc bootstrap: the links already exist (channel pairs
+/// coupled at construction), so `establish` just hands them over. One
+/// value per party; see [`inproc_mesh`].
+pub struct InprocBootstrap {
+    id: PartyId,
+    links: Vec<Link>,
+}
+
+impl MeshBootstrap for InprocBootstrap {
+    fn id(&self) -> PartyId {
+        self.id
+    }
+
+    fn establish(self, _cfg: &RunConfig) -> anyhow::Result<Vec<Link>> {
+        Ok(self.links)
+    }
+}
+
+/// Build the in-proc star for `cfg.parties` parties as bootstrap
+/// values: the label party's bootstrap (K−1 links) plus one bootstrap
+/// per feature party in id order (1..K), each holding its single link
+/// back to the label party. The in-proc analogue of one
+/// [`SessionListener`] + K−1 [`SessionDialer`]s, minus the handshake —
+/// channel pairs are coupled at construction, so identity is
+/// structural and there is nothing to verify.
+pub fn inproc_mesh(cfg: &RunConfig)
+                   -> (InprocBootstrap, Vec<InprocBootstrap>) {
+    let (label_links, feature_links) = inproc_star(cfg);
+    let features = feature_links
+        .into_iter()
+        .enumerate()
+        .map(|(i, link)| InprocBootstrap {
+            id: PartyId(i as u16 + 1),
+            links: vec![link],
+        })
+        .collect();
+    (InprocBootstrap { id: LABEL_PARTY, links: label_links }, features)
+}
+
+// ---- TCP: label side -------------------------------------------------------
+
+/// Label-party session server: bind once, accept K−1 identified
+/// connections, assemble the star mesh.
+pub struct SessionListener {
+    listener: TcpListener,
+    timeout: Duration,
+}
+
+impl SessionListener {
+    /// Bind the session listener. Accepting (and the join deadline)
+    /// starts at `establish`, so a bound listener can be advertised
+    /// (e.g. print [`Self::local_addr`]) before the mesh assembles.
+    pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            anyhow::anyhow!("binding session listener on {addr}: {e}")
+        })?;
+        Ok(SessionListener { listener, timeout: DEFAULT_JOIN_TIMEOUT })
+    }
+
+    /// Replace the default join deadline.
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Vet one accepted connection: read its `Join`, enforce the
+    /// session-level rules the codec cannot (size agreement, no
+    /// duplicates), ack it. Frame-level rules (version, id ranges) are
+    /// already enforced by `Message::decode` before this sees a
+    /// `Join` at all.
+    fn admit(mut stream: TcpStream, parties: u16,
+             joined: &BTreeMap<u16, TcpStream>, deadline: Instant)
+             -> anyhow::Result<(u16, TcpStream)> {
+        // Accepted sockets must not inherit the listener's
+        // non-blocking mode. The whole Join frame is bounded by
+        // JOIN_READ_TIMEOUT (not the remaining join window): the
+        // accept loop vets joiners serially, so a peer that connects
+        // but never speaks — or trickles bytes — may stall it for at
+        // most this long, never monopolize it.
+        stream.set_nonblocking(false)?;
+        let frame_deadline =
+            (Instant::now() + JOIN_READ_TIMEOUT).min(deadline);
+        let (party, claimed, codecs) =
+            match recv_bootstrap_frame(&mut stream, frame_deadline)? {
+                Message::Join { party, parties, codecs } => {
+                    (party, parties, codecs)
+                }
+                other => anyhow::bail!(
+                    "expected Join, got message tag {}", other.tag()),
+            };
+        anyhow::ensure!(
+            claimed == parties,
+            "{party} joined for a {claimed}-party session, this \
+             listener hosts {parties} parties — config mismatch"
+        );
+        anyhow::ensure!(
+            !joined.contains_key(&party.0),
+            "duplicate join: {party} is already in the session"
+        );
+        log::info!(
+            "session listener: {party} joined ({}/{} feature parties, \
+             codec mask {codecs:#x})",
+            joined.len() + 1,
+            parties - 1
+        );
+        send_bootstrap_frame(&mut stream, &Message::JoinAck {
+            party,
+            parties,
+            codecs: compress::supported_mask(),
+        })?;
+        Ok((party.0, stream))
+    }
+}
+
+impl MeshBootstrap for SessionListener {
+    fn id(&self) -> PartyId {
+        LABEL_PARTY
+    }
+
+    /// Accept until ids 1..`cfg.parties` have all joined, then wrap
+    /// each socket into a [`TcpTransport`] (identity-framed when the
+    /// session spans more than two parties). A rejected joiner is
+    /// dropped — its dialer observes EOF instead of a `JoinAck` — and
+    /// the loop keeps serving; the deadline failure names exactly the
+    /// ids still missing.
+    fn establish(self, cfg: &RunConfig) -> anyhow::Result<Vec<Link>> {
+        cfg.validate()?;
+        let parties = cfg.parties as u16;
+        let expected = parties - 1;
+        let deadline = Instant::now() + self.timeout;
+        self.listener.set_nonblocking(true)?;
+        let mut joined: BTreeMap<u16, TcpStream> = BTreeMap::new();
+        while (joined.len() as u16) < expected {
+            // Deadline check at the top of the loop, not only on idle:
+            // a steady stream of junk connections keeps accept()
+            // succeeding and must not defer the timeout forever.
+            if Instant::now() >= deadline {
+                let missing: Vec<String> = (1..parties)
+                    .filter(|id| !joined.contains_key(id))
+                    .map(|id| format!("P{id}"))
+                    .collect();
+                anyhow::bail!(
+                    "session bootstrap timed out after {:?}: {} of {} \
+                     feature parties never joined ({})",
+                    self.timeout,
+                    missing.len(),
+                    expected,
+                    missing.join(", ")
+                );
+            }
+            match self.listener.accept() {
+                Ok((stream, peer_addr)) => {
+                    match Self::admit(stream, parties, &joined, deadline) {
+                        Ok((id, stream)) => {
+                            joined.insert(id, stream);
+                        }
+                        Err(e) => log::warn!(
+                            "session listener: rejected {peer_addr}: {e:#}"
+                        ),
+                    }
+                }
+                Err(e) if e.kind()
+                    == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => {
+                    return Err(anyhow::anyhow!(
+                        "session listener accept: {e}"
+                    ))
+                }
+            }
+        }
+        let v2 = parties > 2;
+        joined
+            .into_iter()
+            .map(|(id, stream)| {
+                stream.set_read_timeout(None)?;
+                let peer = PartyId(id);
+                let mut t = TcpTransport::from_stream(stream, cfg.wan)?;
+                if v2 {
+                    t = t.with_identity(LABEL_PARTY, peer);
+                }
+                Ok(Link { peer, transport: Arc::new(t) as Arc<dyn Transport> })
+            })
+            .collect()
+    }
+}
+
+// ---- TCP: feature side -----------------------------------------------------
+
+/// Feature-party dialer: connect (with backoff, so launch order
+/// between shells doesn't matter), claim an id via `Join`, verify the
+/// `JoinAck`.
+pub struct SessionDialer {
+    addr: String,
+    party: PartyId,
+    timeout: Duration,
+}
+
+impl SessionDialer {
+    pub fn new(addr: &str, party: PartyId) -> Self {
+        SessionDialer {
+            addr: addr.to_string(),
+            party,
+            timeout: DEFAULT_JOIN_TIMEOUT,
+        }
+    }
+
+    /// Replace the default connect/join deadline.
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+}
+
+impl MeshBootstrap for SessionDialer {
+    fn id(&self) -> PartyId {
+        self.party
+    }
+
+    fn establish(self, cfg: &RunConfig) -> anyhow::Result<Vec<Link>> {
+        cfg.validate()?;
+        let parties = cfg.parties as u16;
+        anyhow::ensure!(
+            self.party.0 >= 1 && self.party.0 < parties,
+            "feature party id {} out of range for a {parties}-party \
+             session (valid: 1..={})",
+            self.party,
+            parties - 1
+        );
+        let deadline = Instant::now() + self.timeout;
+        let mut stream = connect_with_backoff(&self.addr, deadline)
+            .map_err(|e| anyhow::anyhow!(
+                "{}: label party at {} never came up: {e:#}",
+                self.party, self.addr
+            ))?;
+        send_bootstrap_frame(&mut stream, &Message::Join {
+            party: self.party,
+            parties,
+            codecs: compress::supported_mask(),
+        })?;
+        // The ack may legitimately take a while (the listener vets
+        // joiners serially), so it gets the whole remaining window —
+        // but bounded end to end, not per read.
+        let ack = recv_bootstrap_frame(&mut stream, deadline).map_err(|e| {
+            anyhow::anyhow!(
+                "{}: no JoinAck from the label party at {} — the join \
+                 was rejected (duplicate id? config mismatch?) or the \
+                 listener died: {e:#}",
+                self.party, self.addr
+            )
+        })?;
+        let (party, acked, codecs) = match ack {
+            Message::JoinAck { party, parties, codecs } => {
+                (party, parties, codecs)
+            }
+            other => anyhow::bail!(
+                "{}: expected JoinAck, got message tag {}",
+                self.party, other.tag()
+            ),
+        };
+        anyhow::ensure!(
+            party == self.party,
+            "label party acked {party}, but this process joined as {}",
+            self.party
+        );
+        anyhow::ensure!(
+            acked == parties,
+            "session size mismatch: label party hosts {acked} parties, \
+             this config says {parties}"
+        );
+        log::info!(
+            "{} joined the {parties}-party session at {} (label codec \
+             mask {codecs:#x})",
+            self.party, self.addr
+        );
+        stream.set_read_timeout(None)?;
+        let mut t = TcpTransport::from_stream(stream, cfg.wan)?;
+        if parties > 2 {
+            t = t.with_identity(self.party, LABEL_PARTY);
+        }
+        Ok(vec![Link {
+            peer: LABEL_PARTY,
+            transport: Arc::new(t) as Arc<dyn Transport>,
+        }])
+    }
+}
+
+// ---- raw-socket frame I/O --------------------------------------------------
+
+/// Write one headerless (v1) frame to a raw bootstrap socket.
+fn send_bootstrap_frame(stream: &mut TcpStream, msg: &Message)
+                        -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(msg.wire_bytes());
+    encode_frame_into(None, msg, &mut buf);
+    stream.write_all(&buf)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// `read_exact` with an overall deadline: the socket read timeout is
+/// shrunk to the remainder before every read syscall, so a
+/// byte-trickling peer cannot stretch one frame past `deadline` the
+/// way a plain per-read timeout would allow (each drip resets a
+/// per-read clock; it cannot reset this one).
+fn read_exact_deadline(stream: &mut TcpStream, buf: &mut [u8],
+                       deadline: Instant) -> anyhow::Result<()> {
+    use std::io::ErrorKind;
+    let mut filled = 0;
+    while filled < buf.len() {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            anyhow::bail!("timed out mid-frame ({filled}/{} bytes)",
+                          buf.len());
+        }
+        stream.set_read_timeout(Some(remaining))?;
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => anyhow::bail!("connection closed mid-frame"),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock
+                || e.kind() == ErrorKind::TimedOut => {
+                anyhow::bail!("timed out mid-frame ({filled}/{} bytes)",
+                              buf.len())
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Read one headerless frame from a raw bootstrap socket, bounded by
+/// `deadline` end to end. The length word is capped at
+/// [`MAX_BOOTSTRAP_FRAME`] *before* the body buffer is allocated: a
+/// peer that opens with a multi-MiB length (or any non-bootstrap
+/// traffic) is refused by arithmetic alone.
+fn recv_bootstrap_frame(stream: &mut TcpStream, deadline: Instant)
+                        -> anyhow::Result<Message> {
+    let mut len_buf = [0u8; 4];
+    read_exact_deadline(stream, &mut len_buf, deadline)
+        .map_err(|e| anyhow::anyhow!("reading bootstrap frame: {e:#}"))?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(
+        len > 0 && len <= MAX_BOOTSTRAP_FRAME,
+        "bootstrap frame of {len} bytes (max {MAX_BOOTSTRAP_FRAME}) — \
+         peer is not speaking the session handshake"
+    );
+    let mut buf = vec![0u8; len];
+    read_exact_deadline(stream, &mut buf, deadline)
+        .map_err(|e| anyhow::anyhow!("reading bootstrap frame: {e:#}"))?;
+    let (header, msg) = decode_frame(&buf)?;
+    anyhow::ensure!(
+        header.is_none(),
+        "bootstrap frames are headerless — link identity is \
+         established by Join itself, not the v2 envelope"
+    );
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WanProfile;
+    use crate::protocol::FRAME_V2_OVERHEAD;
+    use crate::session::SessionBuilder;
+
+    fn cfg_with_parties(k: usize) -> RunConfig {
+        let mut cfg = RunConfig::quick();
+        cfg.parties = k;
+        cfg.wan = WanProfile::instant();
+        cfg
+    }
+
+    /// Raw-socket joiner for handshake-level tests: sends `Join`, then
+    /// returns the ack (or the receive error).
+    fn raw_join(addr: &str, party: u16, parties: u16)
+                -> anyhow::Result<(TcpStream, Message)> {
+        let mut s = TcpStream::connect(addr)?;
+        send_bootstrap_frame(&mut s, &Message::Join {
+            party: PartyId(party),
+            parties,
+            codecs: compress::supported_mask(),
+        })?;
+        let ack = recv_bootstrap_frame(
+            &mut s, Instant::now() + Duration::from_secs(5))?;
+        Ok((s, ack))
+    }
+
+    #[test]
+    fn k3_bootstrap_assembles_and_exchanges_v2_frames() {
+        let cfg = cfg_with_parties(3);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || SessionBuilder::from_bootstrap(&cfg, listener)
+        });
+        let mut dialers = Vec::new();
+        for p in [1u16, 2] {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            dialers.push(std::thread::spawn(move || {
+                let session = SessionBuilder::from_bootstrap(
+                    &cfg,
+                    SessionDialer::new(&addr, PartyId(p))
+                        .with_timeout(Duration::from_secs(10)),
+                )
+                .unwrap();
+                // One frame each way proves the link is live and
+                // identity-framed.
+                let t = &session.mesh().links()[0].transport;
+                t.send(Message::EvalAck { round: p as u64 }).unwrap();
+                assert_eq!(t.recv().unwrap().round(), 100 + p as u64);
+                t.stats()
+            }));
+        }
+        let session = label.join().unwrap().unwrap();
+        assert_eq!(session.id(), LABEL_PARTY);
+        assert_eq!(session.mesh().len(), 2);
+        for p in [1u16, 2] {
+            let t = session.mesh().transport(PartyId(p)).unwrap();
+            assert_eq!(t.recv().unwrap().round(), p as u64);
+            t.send(Message::EvalAck { round: 100 + p as u64 }).unwrap();
+        }
+        for d in dialers {
+            let stats = d.join().unwrap();
+            // K > 2: the v2 envelope is charged, and the Join/JoinAck
+            // handshake is NOT (it ran pre-transport), so the per-link
+            // accounting equals exactly one framed EvalAck.
+            assert_eq!(
+                stats.bytes,
+                (Message::EvalAck { round: 0 }.wire_bytes()
+                 + FRAME_V2_OVERHEAD) as u64
+            );
+            assert_eq!(stats.messages, 1);
+        }
+    }
+
+    #[test]
+    fn two_party_bootstrap_keeps_v1_framing() {
+        let cfg = cfg_with_parties(2);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || SessionBuilder::from_bootstrap(&cfg, listener)
+        });
+        let feature = SessionBuilder::from_bootstrap(
+            &cfg,
+            SessionDialer::new(&addr, PartyId(1))
+                .with_timeout(Duration::from_secs(10)),
+        )
+        .unwrap();
+        let session = label.join().unwrap().unwrap();
+        let msg = Message::EvalAck { round: 9 };
+        let ft = &feature.mesh().links()[0].transport;
+        ft.send(msg.clone()).unwrap();
+        assert_eq!(
+            session.mesh().transport(PartyId(1)).unwrap().recv().unwrap(),
+            msg
+        );
+        // No envelope: the training wire is the historic v1 stream.
+        assert_eq!(ft.stats().bytes, msg.wire_bytes() as u64);
+    }
+
+    #[test]
+    fn duplicate_and_hostile_joins_are_rejected_without_killing_the_mesh() {
+        let cfg = cfg_with_parties(3);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || SessionBuilder::from_bootstrap(&cfg, listener)
+        });
+
+        // 1. P1 joins cleanly.
+        let (_s1, ack1) = raw_join(&addr, 1, 3).unwrap();
+        assert!(matches!(ack1, Message::JoinAck { party: PartyId(1), .. }));
+
+        // 2. A duplicate P1 is refused: the connection is dropped
+        //    before any ack, so the dialer sees EOF, not a JoinAck.
+        assert!(raw_join(&addr, 1, 3).is_err(), "duplicate id acked");
+
+        // 3. A join for the wrong session size is refused.
+        assert!(raw_join(&addr, 1, 2).is_err(), "wrong-size join acked");
+
+        // 4. A wrong-version join dies at decode (listener side).
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            let mut frame = Message::Join {
+                party: PartyId(2),
+                parties: 3,
+                codecs: 0,
+            }
+            .encode();
+            frame[9] = 9; // bend the join version byte
+            let mut framed =
+                ((frame.len() as u32).to_le_bytes()).to_vec();
+            framed.extend_from_slice(&frame);
+            s.write_all(&framed).unwrap();
+            assert!(recv_bootstrap_frame(
+                        &mut s, Instant::now() + Duration::from_secs(5))
+                    .is_err(),
+                    "wrong version acked");
+        }
+
+        // 5. An out-of-range id dies at decode likewise (the id never
+        //    reaches session logic).
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            let mut frame = Message::Join {
+                party: PartyId(2),
+                parties: 3,
+                codecs: 0,
+            }
+            .encode();
+            frame[10] = 0x30; // party := 0x30 = 48 ≥ parties
+            let mut framed =
+                ((frame.len() as u32).to_le_bytes()).to_vec();
+            framed.extend_from_slice(&frame);
+            s.write_all(&framed).unwrap();
+            assert!(recv_bootstrap_frame(
+                        &mut s, Instant::now() + Duration::from_secs(5))
+                    .is_err(),
+                    "out-of-range id acked");
+        }
+
+        // 6. The legitimate P2 still completes the mesh.
+        let (_s2, ack2) = raw_join(&addr, 2, 3).unwrap();
+        assert!(matches!(ack2, Message::JoinAck { party: PartyId(2), .. }));
+        let session = label.join().unwrap().unwrap();
+        assert_eq!(session.mesh().len(), 2);
+    }
+
+    #[test]
+    fn a_mute_connection_cannot_wedge_the_bootstrap() {
+        // A probe that connects and never finishes a frame (health
+        // check, port scan, byte-trickler) may stall the serial accept
+        // loop for at most JOIN_READ_TIMEOUT — the frame read is
+        // bounded end to end, so partial bytes don't reset the clock —
+        // and the real joiner behind it must still be admitted.
+        let cfg = cfg_with_parties(2);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        let mut probe = TcpStream::connect(&addr).unwrap();
+        // Half a length word, then silence: exercises the mid-frame
+        // deadline, not just the never-spoke path.
+        probe.write_all(&[0x12, 0x00]).unwrap();
+        // Let the probe reach the accept loop first.
+        std::thread::sleep(Duration::from_millis(100));
+        let (_s, ack) = raw_join(&addr, 1, 2).unwrap();
+        assert!(matches!(ack, Message::JoinAck { party: PartyId(1), .. }));
+        let links = label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 1);
+    }
+
+    #[test]
+    fn listener_timeout_names_the_missing_parties() {
+        let cfg = cfg_with_parties(4);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_millis(400));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        // Only P2 of {1, 2, 3} shows up.
+        let (_s, _ack) = raw_join(&addr, 2, 4).unwrap();
+        let e = label.join().unwrap().unwrap_err().to_string();
+        assert!(e.contains("P1") && e.contains("P3"),
+                "missing ids not named: {e}");
+        assert!(!e.contains("P2,") && !e.contains("P2)"),
+                "joined id wrongly reported missing: {e}");
+    }
+
+    #[test]
+    fn dialer_retries_until_the_listener_binds() {
+        // Launch order must not matter: the dialer backs off until the
+        // label party appears.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe); // free the port (racy but fine, as elsewhere)
+        let cfg = cfg_with_parties(2);
+        let dialer = std::thread::spawn({
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            move || {
+                SessionDialer::new(&addr, PartyId(1))
+                    .with_timeout(Duration::from_secs(10))
+                    .establish(&cfg)
+            }
+        });
+        std::thread::sleep(Duration::from_millis(300));
+        let listener = SessionListener::bind(&addr)
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let links = listener.establish(&cfg).unwrap();
+        assert_eq!(links.len(), 1);
+        let dlinks = dialer.join().unwrap().unwrap();
+        assert_eq!(dlinks[0].peer, LABEL_PARTY);
+    }
+
+    #[test]
+    fn dialer_rejects_out_of_range_ids_locally() {
+        let cfg = cfg_with_parties(3);
+        for bad in [0u16, 3, 9] {
+            let e = SessionDialer::new("127.0.0.1:1", PartyId(bad))
+                .establish(&cfg);
+            assert!(e.is_err(), "party {bad} dialed");
+        }
+    }
+
+    #[test]
+    fn inproc_mesh_bootstraps_every_party() {
+        let cfg = cfg_with_parties(3);
+        let (label_bs, feature_bs) = inproc_mesh(&cfg);
+        assert_eq!(label_bs.id(), LABEL_PARTY);
+        let session =
+            SessionBuilder::from_bootstrap(&cfg, label_bs).unwrap();
+        assert_eq!(session.mesh().len(), 2);
+        for (i, bs) in feature_bs.into_iter().enumerate() {
+            let p = PartyId(i as u16 + 1);
+            assert_eq!(bs.id(), p);
+            let fs = SessionBuilder::from_bootstrap(&cfg, bs).unwrap();
+            fs.mesh().links()[0]
+                .transport
+                .send(Message::EvalAck { round: p.0 as u64 })
+                .unwrap();
+            assert_eq!(
+                session.mesh().transport(p).unwrap().recv().unwrap()
+                    .round(),
+                p.0 as u64
+            );
+        }
+    }
+}

@@ -18,6 +18,13 @@
 //! - [`SessionBuilder`] / [`Session`] — ties a role, a config (codec,
 //!   workset policy, per-party overrides) and a mesh together and runs
 //!   the party to completion.
+//! - [`bootstrap`] — how meshes come into existence: the
+//!   [`bootstrap::MeshBootstrap`] trait unifies the pre-wired in-proc
+//!   star ([`bootstrap::inproc_mesh`]) with the TCP session server
+//!   ([`bootstrap::SessionListener`] accepting `Join`-identified
+//!   connections, [`bootstrap::SessionDialer`] joining with backoff),
+//!   so [`SessionBuilder::from_bootstrap`] yields the same `Session`
+//!   regardless of transport.
 //!
 //! With `parties = 2` the session runs the exact two-party protocol of
 //! the earlier PRs: v1 frames (no party-id header), identical message
@@ -25,6 +32,8 @@
 //! `protocol` pin this. With `parties > 2` every link speaks v2 frames
 //! (a 6-byte versioned header carrying source/dest [`PartyId`]) and the
 //! `Hello` codec handshake is negotiated independently per link.
+
+pub mod bootstrap;
 
 use std::sync::Arc;
 
@@ -156,6 +165,24 @@ impl SessionBuilder {
     /// with per-party overrides, WAN profile, `parties`).
     pub fn new(cfg: &RunConfig, id: PartyId) -> Self {
         SessionBuilder { cfg: cfg.clone(), id, links: Vec::new() }
+    }
+
+    /// Build a session whose links come from a [`bootstrap`]
+    /// implementation: blocks until the mesh exists (trivially for the
+    /// in-proc star; until every peer has joined for the TCP session
+    /// server), then runs the usual topology validation. The returned
+    /// `Session` is indistinguishable from one wired link-by-link —
+    /// transports are the only thing a bootstrap decides.
+    pub fn from_bootstrap(
+        cfg: &RunConfig,
+        bootstrap: impl bootstrap::MeshBootstrap,
+    ) -> anyhow::Result<Session> {
+        let id = bootstrap.id();
+        let mut b = SessionBuilder::new(cfg, id);
+        for l in bootstrap.establish(cfg)? {
+            b = b.link(l.peer, l.transport);
+        }
+        b.build()
     }
 
     /// Add a peer link. Feature parties link exactly the label party;

@@ -17,7 +17,14 @@
 //! the peer's envelope on receive — a miswired mesh fails at the first
 //! frame with a party-id mismatch instead of silently corrupting the
 //! round clock. Headerless peers (pre-session builds) still decode via
-//! the v1 compat path.
+//! the v1 compat path. A peer that vanishes mid-round surfaces as an
+//! error naming the link and the dead party id, not a bare io error.
+//!
+//! Mesh deployments don't construct transports directly: the session
+//! bootstrap (DESIGN.md §7) runs the `Join`/`JoinAck` handshake on the
+//! raw socket and then wraps it via [`TcpTransport::from_stream`], so
+//! `LinkStats` counts training traffic only — byte-identical to an
+//! in-proc link of the same session.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -59,7 +66,13 @@ pub struct TcpTransport {
 }
 
 impl TcpTransport {
-    fn new(stream: TcpStream, wan: WanProfile) -> anyhow::Result<Self> {
+    /// Wrap an already-connected stream. This is the constructor the
+    /// session bootstrap uses *after* the `Join`/`JoinAck` handshake on
+    /// the raw socket: byte accounting starts at zero here, so
+    /// `LinkStats` covers exactly the training traffic — identical to
+    /// what an in-proc link of the same session charges.
+    pub fn from_stream(stream: TcpStream, wan: WanProfile)
+                       -> anyhow::Result<Self> {
         stream.set_nodelay(true)?;
         let reader = stream.try_clone()?;
         Ok(TcpTransport {
@@ -90,25 +103,15 @@ impl TcpTransport {
         let listener = TcpListener::bind(addr)?;
         let (stream, peer) = listener.accept()?;
         log::info!("tcp transport: accepted {peer}");
-        Self::new(stream, wan)
+        Self::from_stream(stream, wan)
     }
 
-    /// Connect to a listening peer, retrying briefly (Party A side).
+    /// Connect to a listening peer, retrying with backoff (Party A side).
     pub fn connect(addr: &str, wan: WanProfile) -> anyhow::Result<Self> {
         let deadline = Instant::now() + Duration::from_secs(15);
-        loop {
-            match TcpStream::connect(addr) {
-                Ok(s) => {
-                    log::info!("tcp transport: connected {addr}");
-                    return Self::new(s, wan);
-                }
-                Err(e) if Instant::now() < deadline => {
-                    log::debug!("connect retry: {e}");
-                    std::thread::sleep(Duration::from_millis(100));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
+        let stream = connect_with_backoff(addr, deadline)?;
+        log::info!("tcp transport: connected {addr}");
+        Self::from_stream(stream, wan)
     }
 
     /// Blocking read of one frame body into the reader's reusable buffer;
@@ -118,13 +121,17 @@ impl TcpTransport {
     fn recv_locked(r: &mut FramedReader, expect: Option<FrameHeader>)
                    -> anyhow::Result<Message> {
         let mut len_buf = [0u8; 4];
-        r.stream.read_exact(&mut len_buf)?;
+        r.stream
+            .read_exact(&mut len_buf)
+            .map_err(|e| eof_context(e, expect))?;
         let len = u32::from_le_bytes(len_buf) as usize;
         if len > 1 << 30 {
             anyhow::bail!("frame too large: {len} bytes");
         }
         r.buf.resize(len, 0);
-        r.stream.read_exact(&mut r.buf)?;
+        r.stream
+            .read_exact(&mut r.buf)
+            .map_err(|e| eof_context(e, expect))?;
         let (header, msg) = decode_frame(&r.buf)?;
         if let (Some(want), Some(got)) = (expect, header) {
             anyhow::ensure!(
@@ -138,6 +145,60 @@ impl TcpTransport {
 
     fn expected_header(&self) -> Option<FrameHeader> {
         self.header.map(FrameHeader::reply)
+    }
+}
+
+/// Dial `addr` until it answers or `deadline` passes, sleeping with
+/// exponential backoff (25 ms doubling to 1 s) between attempts. Shared
+/// by [`TcpTransport::connect`] and the session bootstrap's dialer: the
+/// label party may bind seconds (or a human shell-switch) after the
+/// feature parties launch.
+pub(crate) fn connect_with_backoff(addr: &str, deadline: Instant)
+                                   -> anyhow::Result<TcpStream> {
+    let mut backoff = Duration::from_millis(25);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                // Clamp the sleep to the time remaining so the last
+                // attempt lands at the deadline, not up to a whole
+                // backoff step before it; give up only once the
+                // deadline has actually passed.
+                let remaining =
+                    deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    return Err(anyhow::anyhow!(
+                        "dialing {addr}: {e} (gave up at deadline)"
+                    ));
+                }
+                let sleep = backoff.min(remaining);
+                log::debug!("connect retry to {addr} in {sleep:?}: {e}");
+                std::thread::sleep(sleep);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+        }
+    }
+}
+
+/// Map a mid-frame EOF to an error naming the link and the peer party
+/// (when the link carries a v2 identity) instead of surfacing a bare
+/// `io::Error`: a K-party operator needs to know *which* of the K−1
+/// links died, and that it died inside a round rather than at an
+/// orderly shutdown boundary. `expect` is the envelope the peer stamps,
+/// so `expect.src` is the peer and `expect.dst` this endpoint.
+fn eof_context(e: std::io::Error, expect: Option<FrameHeader>)
+               -> anyhow::Error {
+    if e.kind() != std::io::ErrorKind::UnexpectedEof {
+        return e.into();
+    }
+    match expect {
+        Some(h) => anyhow::anyhow!(
+            "link {}→{}: peer party {} disconnected mid-round \
+             (unexpected EOF)", h.src, h.dst, h.src
+        ),
+        None => anyhow::anyhow!(
+            "tcp link: peer disconnected mid-round (unexpected EOF)"
+        ),
     }
 }
 
@@ -340,6 +401,53 @@ mod tests {
         client.send(Message::EvalAck { round: 3 }).unwrap();
         assert_eq!(server.join().unwrap().unwrap(),
                    Message::EvalAck { round: 3 });
+    }
+
+    #[test]
+    fn mid_round_eof_names_the_link_and_party() {
+        // A peer that vanishes mid-round must surface as an error
+        // naming the link endpoints and the dead party, not a bare io
+        // error — on a K-party mesh the operator needs to know which
+        // of the K−1 links died.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            let t = TcpTransport::listen(&addr2, WanProfile::instant())
+                .unwrap()
+                .with_identity(PartyId(0), PartyId(2));
+            t.recv()
+        });
+        // Connect and hang up without sending a frame.
+        let client =
+            TcpTransport::connect(&addr, WanProfile::instant()).unwrap();
+        drop(client);
+        let e = server.join().unwrap().unwrap_err().to_string();
+        assert!(e.contains("P2"), "missing peer id: {e}");
+        assert!(e.contains("P2→P0"), "missing link name: {e}");
+        assert!(e.contains("mid-round"), "missing context: {e}");
+    }
+
+    #[test]
+    fn mid_round_eof_without_identity_still_says_disconnected() {
+        // v1 (two-party) links have no ids to name, but the error must
+        // still say what happened instead of "failed to fill whole
+        // buffer".
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            let t = TcpTransport::listen(&addr2, WanProfile::instant())
+                .unwrap();
+            t.recv()
+        });
+        let client =
+            TcpTransport::connect(&addr, WanProfile::instant()).unwrap();
+        drop(client);
+        let e = server.join().unwrap().unwrap_err().to_string();
+        assert!(e.contains("disconnected mid-round"), "{e}");
     }
 
     #[test]

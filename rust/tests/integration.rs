@@ -275,6 +275,54 @@ fn tcp_run_matches_inproc_vanilla() {
 }
 
 #[test]
+fn tcp_bootstrap_session_matches_inproc_vanilla() {
+    // The listener-based bootstrap end-to-end: a two-party session
+    // assembled through SessionListener/SessionDialer (Join handshake
+    // on the raw socket, v1 training frames) must reproduce the
+    // in-proc AUC series exactly — the full-trainer analogue of the
+    // artifact-free byte-parity smoke in examples/tcp_mesh_k3.rs.
+    use celu_vfl::session::bootstrap::{SessionDialer, SessionListener};
+    use celu_vfl::session::{PartyId, SessionBuilder};
+
+    require_artifacts!();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::Vanilla;
+    cfg.max_rounds = 75;
+    let inproc = run_training(&cfg).unwrap().record;
+
+    let set = load_set(&cfg).unwrap();
+    let data = load_data(&cfg, &set).unwrap();
+    let listener = SessionListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let cfg_a = cfg.clone();
+    let set_a = set.clone();
+    let train_a = Arc::new(data.train_a.clone());
+    let test_a = Arc::new(data.test_a.clone());
+    let a = std::thread::spawn(move || {
+        let session = SessionBuilder::from_bootstrap(
+            &cfg_a,
+            SessionDialer::new(&addr, PartyId(1)),
+        )
+        .unwrap();
+        session.run_feature(set_a, train_a, test_a).unwrap()
+    });
+    let session = SessionBuilder::from_bootstrap(&cfg, listener).unwrap();
+    let report = session
+        .run_label(set, Arc::new(data.train_b.clone()),
+                   Arc::new(data.test_b.clone()))
+        .unwrap();
+    let a_report = a.join().unwrap();
+
+    assert_eq!(report.comm_rounds, 75);
+    assert_eq!(a_report.comm_rounds, 75);
+    let tcp_aucs: Vec<f64> = report.series.iter().map(|p| p.auc).collect();
+    let in_aucs: Vec<f64> = inproc.series.iter().map(|p| p.auc).collect();
+    assert_eq!(tcp_aucs, in_aucs,
+               "bootstrap TCP and in-proc vanilla runs must agree");
+}
+
+#[test]
 fn dssm_trains_through_pjrt() {
     // The DSSM model family end-to-end (the other Fig. 6 architecture).
     require_artifacts!();
