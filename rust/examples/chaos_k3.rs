@@ -1,0 +1,521 @@
+//! K = 3 chaos smoke — kill a feature party mid-run, Rejoin it, finish.
+//!
+//! The CI proof of the supervised session lifecycle (DESIGN.md §8):
+//! run with no arguments, this binary re-executes itself as three OS
+//! processes over loopback TCP — a supervised label party (bounded
+//! straggler waits + a live re-admission point) and two feature
+//! dialers. Mid-run:
+//!
+//! - feature party 2 **exits** right after sending its round-3
+//!   activation (its in-flight round) — the label party observes the
+//!   dead lane, emits `PeerLost`, and keeps stepping on P2's cached
+//!   stale statistics;
+//! - the orchestrator relaunches P2 in **rejoin mode**: it re-dials
+//!   with `Rejoin{last_round: 3}`, receives the buffered round-3
+//!   derivative as a replay, fast-forwards to the acked resume round
+//!   and finishes the run in lock-step;
+//! - feature party 1 sleeps through one round (straggler): the label
+//!   party emits `StragglerTimeout`, steps on P1's stale statistics,
+//!   and reconciles when the late activation arrives — P1's wire
+//!   traffic is **byte-identical** to the undisturbed in-proc
+//!   reference, which the orchestrator asserts per link.
+//!
+//! The run must complete the same number of rounds as the undisturbed
+//! reference, with `peer_lost`/`peer_rejoined`/`straggler_timeout`
+//! events recorded, and with training-only byte accounting intact:
+//! every per-link row must be an exact multiple of its frame size
+//! (the bootstrap/rejoin handshakes live on raw sockets and never
+//! leak into `LinkStats`).
+//!
+//!     cargo run --release --example chaos_k3
+
+use std::io::BufRead;
+use std::sync::Arc;
+use std::time::Duration;
+
+use celu_vfl::compress::{self, CodecKind};
+use celu_vfl::config::{RunConfig, WanProfile};
+use celu_vfl::protocol::{outbound_stats, Lane, Message,
+                         FRAME_V2_OVERHEAD};
+use celu_vfl::session::bootstrap::{inproc_mesh, rejoin_dial,
+                                   SessionDialer, SessionListener};
+use celu_vfl::session::supervisor::{session_epoch, LaneSet};
+use celu_vfl::session::{Link, PartyId, LABEL_PARTY};
+use celu_vfl::tensor::Tensor;
+use celu_vfl::transport::Transport;
+use celu_vfl::util::cli::Cli;
+
+const ROUNDS: u64 = 14;
+const BATCH: usize = 16;
+const Z_DIM: usize = 4;
+const STRAGGLER_MS: u64 = 250;
+/// P2's in-flight round when it dies.
+const DIE_AFTER: u64 = 3;
+/// P1 sleeps through this round to force a straggler timeout.
+const STRAGGLE_ROUND: u64 = 8;
+const JOIN_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// The session under test: K=3, supervised; party 1 compresses fp16
+/// while party 2 stays uncompressed, so the run also covers join-time
+/// codec pre-negotiation (no Hello frames anywhere) and mixed per-link
+/// codecs under degradation.
+///
+/// The simulated WAN matters here: degraded rounds are paced by the
+/// *live* lanes, so with instant links the label would finish every
+/// remaining round in microseconds and the relaunched P2 would find a
+/// dead listener. An 80 ms RTT (~40 ms per send, charged identically
+/// in the in-proc reference, so byte parity is unaffected) makes each
+/// round take ~80 ms — the rejoin deterministically lands mid-run.
+fn smoke_cfg() -> RunConfig {
+    let mut cfg = RunConfig::quick();
+    cfg.parties = 3;
+    cfg.wan = WanProfile { bandwidth_mbps: 0.0, rtt_ms: 80.0,
+                           gateway_ms: 0.0 };
+    cfg.compress = CodecKind::Identity;
+    cfg.party_compress = vec![(1, CodecKind::Fp16)];
+    cfg.straggler_wait_ms = STRAGGLER_MS;
+    cfg.validate().expect("smoke config invalid");
+    cfg
+}
+
+/// Deterministic stand-in for a bottom model's activations — identical
+/// in every process and in the in-proc reference run.
+fn synth(party: u16, round: u64) -> Tensor {
+    let v: Vec<f32> = (0..BATCH * Z_DIM)
+        .map(|i| {
+            ((i as f32 * 0.31 + party as f32 * 1.7 + round as f32 * 0.13)
+                .sin())
+                * 0.8
+        })
+        .collect();
+    Tensor::f32(vec![BATCH, Z_DIM], v)
+}
+
+/// One feature party's traffic from `start` to ROUNDS. The codec is
+/// pre-negotiated from the link's join-time mask — no Hello. `die`
+/// exits the process right after sending that round's activation;
+/// `straggle` sleeps past the label's wait window before sending.
+fn feature_rounds(party: PartyId, transport: &Arc<dyn Transport>,
+                  codec: CodecKind, start: u64, die: Option<u64>,
+                  straggle: Option<u64>) -> anyhow::Result<()> {
+    for round in start..ROUNDS {
+        if straggle == Some(round) {
+            std::thread::sleep(Duration::from_millis(STRAGGLER_MS + 200));
+        }
+        let za = synth(party.0, round);
+        let (msg, _za) = outbound_stats(codec, Lane::Activation, round, za)?;
+        transport.send(msg)?;
+        if die == Some(round) {
+            // Hard exit mid-round: the in-flight activation is on the
+            // wire, the derivative never gets consumed.
+            std::process::exit(0);
+        }
+        match transport.recv()?.into_plain()? {
+            Message::Derivative { round: r, .. } => {
+                anyhow::ensure!(r == round, "round skew on {party}: \
+                                             got {r}, at {round}");
+            }
+            other => anyhow::bail!("unexpected {:?}", other.tag()),
+        }
+    }
+    match transport.recv()? {
+        Message::Shutdown => Ok(()),
+        other => anyhow::bail!("expected Shutdown, got {:?}", other.tag()),
+    }
+}
+
+fn negotiated(cfg: &RunConfig, party: PartyId, link: &Link) -> CodecKind {
+    compress::negotiate(cfg.codec_for(party.0), link.peer_codecs)
+}
+
+/// The supervised label loop over a [`LaneSet`] — the same machinery
+/// `coordinator::label_party` drives, minus the model.
+fn label_rounds(cfg: &RunConfig, lanes: &mut LaneSet)
+                -> anyhow::Result<(u64, u64)> {
+    lanes.handshake(cfg, None)?;
+    let mut stale_rounds = 0u64;
+    for round in 0..ROUNDS {
+        let inputs = lanes.collect(round)?;
+        if inputs.iter().any(|i| !i.is_fresh()) {
+            stale_rounds += 1;
+        }
+        let zs: Vec<Tensor> = inputs
+            .iter()
+            .filter_map(|i| i.tensor().cloned())
+            .collect();
+        let zsum = Tensor::sum_f32(&zs)?;
+        // Stand-in for the exact step: ∇Z = 0.1 · ΣZ.
+        let dza = Tensor::f32(
+            zsum.shape.clone(),
+            zsum.as_f32()?.iter().map(|x| 0.1 * x).collect::<Vec<_>>(),
+        );
+        let _views = lanes.stage_derivatives(round, &dza)?;
+        lanes.send_staged(round)?;
+    }
+    lanes.shutdown();
+    Ok((ROUNDS, stale_rounds))
+}
+
+fn link_line(src: u16, dst: u16,
+             s: &celu_vfl::transport::LinkStats) -> String {
+    format!("LINK {src} {dst} {} {} {}", s.bytes, s.raw_bytes, s.messages)
+}
+
+// ---- the three roles -------------------------------------------------------
+
+fn run_label(listen: &str) -> anyhow::Result<()> {
+    let cfg = smoke_cfg();
+    let listener = SessionListener::bind(listen)?.with_timeout(JOIN_TIMEOUT);
+    println!("ADDR {}", listener.local_addr()?);
+    use std::io::Write;
+    std::io::stdout().flush()?;
+    let (links, readmission, _epoch, _start) =
+        listener.establish_supervised(&cfg)?;
+    let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+    let (rounds, stale_rounds) = label_rounds(&cfg, &mut lanes)?;
+    println!("ROUNDS {rounds}");
+    println!("STALE {stale_rounds}");
+    println!("REJOINS {}", lanes.total_rejoins());
+    for e in lanes.take_events() {
+        println!(
+            "EVENT {} {} {}",
+            e.kind(),
+            e.party().map(|p| p.0 as i64).unwrap_or(-1),
+            e.round()
+        );
+    }
+    for (peer, s) in lanes.link_stats() {
+        println!("{}", link_line(LABEL_PARTY.0, peer.0, &s));
+    }
+    Ok(())
+}
+
+fn run_feature(party: u16, connect: &str, die: Option<u64>,
+               straggle: Option<u64>) -> anyhow::Result<()> {
+    let cfg = smoke_cfg();
+    let (link, start) = SessionDialer::new(connect, PartyId(party))
+        .with_timeout(JOIN_TIMEOUT)
+        .establish_resumable(&cfg)?;
+    anyhow::ensure!(start == 0, "fresh join resumed at {start}");
+    let codec = negotiated(&cfg, PartyId(party), &link);
+    feature_rounds(PartyId(party), &link.transport, codec, 0, die,
+                   straggle)?;
+    println!("{}", link_line(party, LABEL_PARTY.0,
+                             &link.transport.stats()));
+    Ok(())
+}
+
+/// Relaunched P2: re-dial with `Rejoin`, consume the replayed
+/// in-flight derivative, resume at the acked round.
+fn run_rejoiner(party: u16, connect: &str, last_round: u64)
+                -> anyhow::Result<()> {
+    let cfg = smoke_cfg();
+    let epoch = session_epoch(cfg.seed);
+    let (transport, resume, replays) = rejoin_dial(
+        connect, PartyId(party), &cfg, epoch, last_round, JOIN_TIMEOUT)?;
+    for _ in 0..replays {
+        match transport.recv()?.into_plain()? {
+            Message::Derivative { round: r, .. } => {
+                anyhow::ensure!(
+                    r == last_round,
+                    "replay carries round {r}, expected {last_round}"
+                );
+            }
+            other => anyhow::bail!("unexpected replay {:?}", other.tag()),
+        }
+    }
+    // Same build ⇒ the label decodes everything we do; see
+    // SessionDialer::establish_resumable for the mask rationale.
+    let codec = compress::negotiate(cfg.codec_for(party),
+                                    Some(compress::supported_mask()));
+    let transport = &transport;
+    feature_rounds(PartyId(party), transport, codec, resume, None, None)?;
+    println!("RESUMED {resume} {replays}");
+    println!("{}", link_line(party, LABEL_PARTY.0, &transport.stats()));
+    Ok(())
+}
+
+// ---- undisturbed reference -------------------------------------------------
+
+type LinkMap = std::collections::BTreeMap<(u16, u16), (u64, u64, u64)>;
+
+fn parse_link_lines(text: &str, into: &mut LinkMap) -> anyhow::Result<()> {
+    for line in text.lines() {
+        let Some(rest) = line.trim().strip_prefix("LINK ") else {
+            continue;
+        };
+        let f: Vec<u64> = rest
+            .split_whitespace()
+            .map(|x| x.parse::<u64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad LINK line '{line}': {e}"))?;
+        anyhow::ensure!(f.len() == 5, "bad LINK line '{line}'");
+        let prev = into.insert((f[0] as u16, f[1] as u16),
+                               (f[2], f[3], f[4]));
+        anyhow::ensure!(prev.is_none(),
+                        "duplicate LINK row {}→{}", f[0], f[1]);
+    }
+    Ok(())
+}
+
+/// Undisturbed reference over the in-proc bootstrap: same LaneSet, no
+/// kill, no straggler.
+fn run_inproc_reference() -> anyhow::Result<LinkMap> {
+    let cfg = smoke_cfg();
+    let (label_bs, feature_bs) = inproc_mesh(&cfg);
+    let mut handles = Vec::new();
+    let mut feature_transports = Vec::new();
+    let mut label_links: Vec<Link> = Vec::new();
+    for (i, bs) in feature_bs.into_iter().enumerate() {
+        let party = PartyId(i as u16 + 1);
+        let cfg_f = cfg.clone();
+        let link = {
+            use celu_vfl::session::bootstrap::MeshBootstrap;
+            bs.establish(&cfg)?.swap_remove(0)
+        };
+        let codec = negotiated(&cfg_f, party, &link);
+        let transport = link.transport.clone();
+        feature_transports.push((party, transport.clone()));
+        handles.push(std::thread::spawn(move || {
+            feature_rounds(party, &transport, codec, 0, None, None)
+        }));
+    }
+    {
+        use celu_vfl::session::bootstrap::MeshBootstrap;
+        label_links.extend(label_bs.establish(&cfg)?);
+    }
+    let mut lanes = LaneSet::new(&cfg, &label_links, None);
+    let (rounds, stale) = label_rounds(&cfg, &mut lanes)?;
+    anyhow::ensure!(rounds == ROUNDS && stale == 0,
+                    "reference run degraded ({rounds} rounds, {stale} \
+                     stale)");
+    for h in handles {
+        h.join().expect("feature thread panicked")?;
+    }
+    let mut map = LinkMap::new();
+    for (peer, s) in lanes.link_stats() {
+        map.insert((LABEL_PARTY.0, peer.0),
+                   (s.bytes, s.raw_bytes, s.messages));
+    }
+    for (party, t) in feature_transports {
+        let s = t.stats();
+        map.insert((party.0, LABEL_PARTY.0),
+                   (s.bytes, s.raw_bytes, s.messages));
+    }
+    Ok(map)
+}
+
+// ---- orchestrator ----------------------------------------------------------
+
+fn orchestrate() -> anyhow::Result<()> {
+    use std::process::{Command, Stdio};
+
+    let expected = run_inproc_reference()?;
+    println!("in-proc reference complete ({} links)", expected.len());
+
+    let exe = std::env::current_exe()?;
+    let mut label = Command::new(&exe)
+        .args(["--role", "label", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let mut label_out =
+        std::io::BufReader::new(label.stdout.take().expect("label stdout"));
+    let mut addr = String::new();
+    loop {
+        let mut line = String::new();
+        anyhow::ensure!(
+            label_out.read_line(&mut line)? > 0,
+            "label process exited before announcing its address"
+        );
+        if let Some(a) = line.trim().strip_prefix("ADDR ") {
+            addr = a.to_string();
+            break;
+        }
+    }
+    println!("label listening at {addr}; spawning feature processes");
+
+    // P1: full run, with one deliberate straggle. P2: dies after its
+    // round-DIE_AFTER activation.
+    let p1 = Command::new(&exe)
+        .args(["--role", "feature", "--party", "1",
+               "--connect", addr.as_str(),
+               "--straggle-round", &STRAGGLE_ROUND.to_string()])
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let p2 = Command::new(&exe)
+        .args(["--role", "feature", "--party", "2",
+               "--connect", addr.as_str(),
+               "--die-after", &DIE_AFTER.to_string()])
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let p2_out = p2.wait_with_output()?;
+    anyhow::ensure!(p2_out.status.success(),
+                    "phase-1 P2 exited abnormally");
+    println!("P2 died after round {DIE_AFTER}; label is degraded");
+    // Let the label run degraded for a few ~80 ms (WAN-paced) rounds
+    // before the comeback; the remaining 11 rounds take ~900 ms (plus
+    // P1's straggler window), so the rejoin lands mid-run with margin
+    // on both sides even under a slow process spawn.
+    std::thread::sleep(Duration::from_millis(250));
+    let p2b = Command::new(&exe)
+        .args(["--role", "rejoin", "--party", "2",
+               "--connect", addr.as_str(),
+               "--last-round", &DIE_AFTER.to_string()])
+        .stdout(Stdio::piped())
+        .spawn()?;
+
+    let mut got = LinkMap::new();
+    let p1_out = p1.wait_with_output()?;
+    anyhow::ensure!(p1_out.status.success(), "P1 failed");
+    parse_link_lines(&String::from_utf8_lossy(&p1_out.stdout), &mut got)?;
+    let p2b_out = p2b.wait_with_output()?;
+    anyhow::ensure!(p2b_out.status.success(), "rejoined P2 failed");
+    let p2b_text = String::from_utf8_lossy(&p2b_out.stdout).into_owned();
+    parse_link_lines(&p2b_text, &mut got)?;
+    let (resume, replays) = p2b_text
+        .lines()
+        .find_map(|l| l.strip_prefix("RESUMED "))
+        .and_then(|rest| {
+            let mut it = rest.split_whitespace();
+            Some((it.next()?.parse::<u64>().ok()?,
+                  it.next()?.parse::<u64>().ok()?))
+        })
+        .ok_or_else(|| anyhow::anyhow!("no RESUMED line from P2"))?;
+
+    let mut rest = String::new();
+    std::io::Read::read_to_string(&mut label_out, &mut rest)?;
+    anyhow::ensure!(label.wait()?.success(), "label process failed");
+    parse_link_lines(&rest, &mut got)?;
+    let grab = |prefix: &str| -> anyhow::Result<u64> {
+        rest.lines()
+            .find_map(|l| l.strip_prefix(prefix))
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .ok_or_else(|| anyhow::anyhow!("no {prefix} line from label"))
+    };
+    let rounds = grab("ROUNDS ")?;
+    let stale = grab("STALE ")?;
+    let rejoins = grab("REJOINS ")?;
+    let events: Vec<(String, i64, u64)> = rest
+        .lines()
+        .filter_map(|l| l.strip_prefix("EVENT "))
+        .map(|rest| {
+            let mut it = rest.split_whitespace();
+            (it.next().unwrap_or("").to_string(),
+             it.next().and_then(|v| v.parse().ok()).unwrap_or(-2),
+             it.next().and_then(|v| v.parse().ok()).unwrap_or(0))
+        })
+        .collect();
+
+    // ---- the acceptance assertions ----------------------------------------
+    println!("\nchaos outcome: rounds={rounds} stale={stale} \
+              rejoins={rejoins} resume={resume} replays={replays}");
+    for e in &events {
+        println!("  event {} party={} round={}", e.0, e.1, e.2);
+    }
+    // 1. Same final round count as the undisturbed reference.
+    anyhow::ensure!(rounds == ROUNDS,
+                    "label finished {rounds} rounds, reference {ROUNDS}");
+    anyhow::ensure!(resume > DIE_AFTER && resume < ROUNDS,
+                    "rejoin landed outside the run (resume {resume})");
+    anyhow::ensure!(replays == 1,
+                    "the in-flight round-{DIE_AFTER} derivative must be \
+                     replayed exactly once (got {replays})");
+    anyhow::ensure!(stale >= 2,
+                    "expected ≥2 degraded rounds (P2 outage + P1 \
+                     straggle), saw {stale}");
+    anyhow::ensure!(rejoins == 1, "expected exactly one rejoin");
+    // 2. Lifecycle events recorded.
+    let has = |kind: &str, party: i64| {
+        events.iter().any(|(k, p, _)| k == kind && *p == party)
+    };
+    anyhow::ensure!(has("peer_lost", 2), "no peer_lost for P2");
+    anyhow::ensure!(has("peer_rejoined", 2), "no peer_rejoined for P2");
+    anyhow::ensure!(has("straggler_timeout", 1),
+                    "no straggler_timeout for P1");
+    // 3. P1's links are byte-identical to the undisturbed reference:
+    //    stragglers reconcile, they do not change the wire.
+    for key in [(1u16, 0u16), (0u16, 1u16)] {
+        anyhow::ensure!(
+            got.get(&key) == expected.get(&key),
+            "P1 link {key:?} diverged from the reference: {:?} != {:?}",
+            got.get(&key), expected.get(&key)
+        );
+    }
+    // 4. P2's accounting is training-only and frame-exact. All frames
+    //    on the identity lane have fixed sizes, so every row must be an
+    //    exact multiple — the rejoin handshake ran on the raw socket
+    //    and must not have leaked a byte into LinkStats.
+    let act = (Message::Activation { round: 0, tensor: synth(2, 0) }
+        .wire_bytes() + FRAME_V2_OVERHEAD) as u64;
+    let der = act; // same shape, same identity codec
+    let shutdown =
+        (Message::Shutdown.wire_bytes() + FRAME_V2_OVERHEAD) as u64;
+    let p2_row = got[&(2, 0)];
+    anyhow::ensure!(
+        p2_row == ((ROUNDS - resume) * act, (ROUNDS - resume) * act,
+                   ROUNDS - resume),
+        "rejoined P2 row {:?} != {} acts of {act} B", p2_row,
+        ROUNDS - resume
+    );
+    let l2_row = got[&(0, 2)];
+    // Sends while the lane was up: rounds 0..DIE_AFTER for sure, the
+    // death-round send races the EOF (counted iff the kernel took it),
+    // then resume..ROUNDS after the rejoin, +1 replay, +1 Shutdown.
+    let base = DIE_AFTER + (ROUNDS - resume) + 1;
+    let candidates = [
+        (base * der + shutdown, base + 1),
+        ((base + 1) * der + shutdown, base + 2),
+    ];
+    anyhow::ensure!(
+        candidates.iter().any(|&(b, m)| l2_row == (b, b, m)),
+        "label→P2 row {:?} is not training-frame-exact (base {base}, \
+         der {der} B, shutdown {shutdown} B)", l2_row
+    );
+    println!(
+        "\nK=3 chaos smoke OK: kill+Rejoin mid-round converged to \
+         {ROUNDS} rounds; P1 byte-identical to reference; P2 \
+         accounting frame-exact"
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let cli = Cli::new("chaos_k3",
+                       "K=3 kill+Rejoin chaos smoke (three OS processes)")
+        .opt("role", "orchestrate",
+             "orchestrate | label | feature | rejoin")
+        .opt("listen", "127.0.0.1:0", "label: listener bind address")
+        .opt("connect", "127.0.0.1:0", "feature: label party address")
+        .opt("party", "1", "feature: party id (1 or 2)")
+        .opt("die-after", "-", "feature: exit after this round's send")
+        .opt("straggle-round", "-",
+             "feature: sleep through this round's send")
+        .opt("last-round", "0", "rejoin: rounds completed before death");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli.parse(&argv)?;
+    let opt_u64 = |key: &str| -> anyhow::Result<Option<u64>> {
+        match args.get(key) {
+            "-" => Ok(None),
+            v => Ok(Some(v.parse::<u64>().map_err(|e| {
+                anyhow::anyhow!("bad --{key} '{v}': {e}")
+            })?)),
+        }
+    };
+    match args.get("role") {
+        "orchestrate" => orchestrate(),
+        "label" => run_label(args.get("listen")),
+        "feature" => run_feature(
+            args.get_usize("party")? as u16,
+            args.get("connect"),
+            opt_u64("die-after")?,
+            opt_u64("straggle-round")?,
+        ),
+        "rejoin" => run_rejoiner(
+            args.get_usize("party")? as u16,
+            args.get("connect"),
+            args.get_u64("last-round")?,
+        ),
+        other => anyhow::bail!("unknown role '{other}'"),
+    }
+}

@@ -148,6 +148,20 @@ pub struct RunConfig {
     /// Extra artificial compute slow-down per step (secs) — used by the
     /// WAN-regime benches to emulate the paper's compute:comm ratio.
     pub compute_delay_s: f64,
+
+    // supervised lifecycle (DESIGN.md §8)
+    /// Bounded straggler wait per activation lane, in milliseconds
+    /// (`--straggler-wait-ms`). 0 (default) disables supervision:
+    /// collection blocks indefinitely, exactly the historic behaviour.
+    /// With a budget, a lane that misses it is stepped on its cached
+    /// stale statistics and reconciled when it catches up.
+    pub straggler_wait_ms: u64,
+    /// Directory for label-party checkpoint snapshots
+    /// (`--checkpoint-dir`). Empty (default) disables checkpointing.
+    pub checkpoint_dir: String,
+    /// Write a snapshot every this many communication rounds
+    /// (`--checkpoint-every`; only meaningful with `checkpoint_dir`).
+    pub checkpoint_every: usize,
 }
 
 impl RunConfig {
@@ -178,6 +192,9 @@ impl RunConfig {
             label_noise: 0.05,
             wan: WanProfile::instant(),
             compute_delay_s: 0.0,
+            straggler_wait_ms: 0,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 100,
         }
     }
 
@@ -283,6 +300,15 @@ impl RunConfig {
                 );
             }
         }
+        if self.checkpoint_every == 0 {
+            anyhow::bail!("checkpoint_every must be ≥1");
+        }
+        if self.straggler_wait_ms > 3_600_000 {
+            anyhow::bail!(
+                "straggler_wait_ms must be ≤ 3600000 (one hour), got {}",
+                self.straggler_wait_ms
+            );
+        }
         Ok(())
     }
 
@@ -332,6 +358,13 @@ impl RunConfig {
             },
             compute_delay_s: doc.f64_or("compute_delay_s",
                                         base.compute_delay_s)?,
+            straggler_wait_ms: doc.usize_or(
+                "straggler_wait_ms", base.straggler_wait_ms as usize)?
+                as u64,
+            checkpoint_dir: doc.str_or("checkpoint_dir",
+                                       &base.checkpoint_dir)?,
+            checkpoint_every: doc.usize_or("checkpoint_every",
+                                           base.checkpoint_every)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -546,6 +579,28 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("party.one"), "bad section unnamed: {e}");
+    }
+
+    #[test]
+    fn lifecycle_config_parses_and_validates() {
+        let base = RunConfig::quick();
+        assert_eq!(base.straggler_wait_ms, 0);
+        assert_eq!(base.checkpoint_dir, "");
+        assert_eq!(base.checkpoint_every, 100);
+        let cfg = RunConfig::from_toml(
+            "straggler_wait_ms = 250\ncheckpoint_dir = \"ckpts\"\n\
+             checkpoint_every = 10\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.straggler_wait_ms, 250);
+        assert_eq!(cfg.checkpoint_dir, "ckpts");
+        assert_eq!(cfg.checkpoint_every, 10);
+        let mut cfg = RunConfig::quick();
+        cfg.checkpoint_every = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::quick();
+        cfg.straggler_wait_ms = 3_600_001;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -17,16 +17,26 @@
 //! handles instead of deep clones, and gathers recycle their destination
 //! buffers across rounds.
 //!
-//! When this party's codec (session `compress`, or its `[party.<id>]`
-//! override) asks for compression, the feature party initiates the
-//! `Hello` capabilities handshake on its link before round 0 and then
-//! routes every outgoing statistic through `protocol::outbound_stats`
-//! (DESIGN.md §5): the workset caches the *dequantized* round-trip so
+//! Codec negotiation (DESIGN.md §5): when the bootstrap carried the
+//! label party's codec mask (`Link::peer_codecs`), the wire codec is
+//! pre-negotiated at join time and no `Hello` is sent at all; mask-less
+//! links keep the historic in-band handshake (initiated only when this
+//! party's codec — session `compress` or its `[party.<id>]` override —
+//! asks for compression, so an identity config stays byte-identical).
+//! Either way every outgoing statistic routes through
+//! `protocol::outbound_stats`, caching the dequantized round-trip so
 //! this party trains on exactly the tensors the label party decodes.
-//! With the identity codec no `Hello` is sent and the wire + cache
-//! behaviour is byte-identical to the two-party path.
+//!
+//! Supervised lifecycle (DESIGN.md §8): with a [`RejoinPolicy`], a
+//! transport failure mid-session does not kill the run — the local
+//! worker keeps draining the workset cache (CELU-VFL's whole premise)
+//! while the comm worker re-dials the label party's re-admission point
+//! with a `Rejoin` frame, consumes any replayed in-flight derivative,
+//! fast-forwards its batch cursor to the acked resume round, and
+//! re-enters lock-step.
 
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::compress::{self, CodecKind};
 use crate::config::RunConfig;
@@ -35,11 +45,34 @@ use crate::data::PartyAData;
 use crate::metrics::CosineRecorder;
 use crate::protocol::{outbound_stats, Lane, Message};
 use crate::runtime::{ArtifactSet, PartyARuntime};
-use crate::session::PartyId;
-use crate::transport::Transport;
+use crate::session::bootstrap::rejoin_dial;
+use crate::session::supervisor::session_epoch;
+use crate::session::{Link, PartyId};
+use crate::tensor::Tensor;
+use crate::transport::{LinkStats, Transport};
 use crate::workset::{MeshWorkset, WorksetStats};
 
 use super::{eval_batch_count, feature_seed, Ctrl, BUBBLE_PARK};
+
+/// How a feature party gets back into a session it fell out of.
+#[derive(Debug, Clone)]
+pub struct RejoinPolicy {
+    /// The label party's listener address (its re-admission point).
+    pub addr: String,
+    /// Overall budget for one reconnect attempt (dial backoff + ack).
+    pub timeout: Duration,
+}
+
+/// Supervised-lifecycle options for a feature run. Defaults reproduce
+/// the historic behaviour: no reconnects, start at round 0.
+#[derive(Debug, Clone, Default)]
+pub struct FeatureRunOpts {
+    /// Reconnect policy; `None` propagates transport errors (historic).
+    pub rejoin: Option<RejoinPolicy>,
+    /// First round to run — non-zero when joining a session resumed
+    /// from a checkpoint (`SessionDialer::establish_resumable`).
+    pub start_round: u64,
+}
 
 /// Everything a feature party reports after a run.
 #[derive(Debug)]
@@ -50,17 +83,23 @@ pub struct FeaturePartyReport {
     pub local_updates: u64,
     pub workset: WorksetStats,
     pub cosine: CosineRecorder,
+    /// Sender-side accounting, carried across rejoin transport swaps.
+    pub link_stats: LinkStats,
+    /// Successful re-admissions performed during the run.
+    pub rejoins: u64,
 }
 
 /// Run feature party `party` to completion (until Shutdown from the
-/// label party or transport error) over its single mesh link.
+/// label party, a transport error with no rejoin policy, or a failed
+/// rejoin) over its mesh link.
 pub fn run_feature_party(
     cfg: &RunConfig,
     party: PartyId,
     set: Arc<ArtifactSet>,
     train: Arc<PartyAData>,
     test: Arc<PartyAData>,
-    transport: Arc<dyn Transport>,
+    link: &Link,
+    opts: FeatureRunOpts,
 ) -> anyhow::Result<FeaturePartyReport> {
     let batch = set.manifest.batch;
     let runtime = Arc::new(Mutex::new(PartyARuntime::new(
@@ -124,13 +163,28 @@ pub fn run_feature_party(
     let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
     let mut scratch = GatherScratch::default();
     let eval_batches = eval_batch_count(cfg, test.n, batch);
-    let mut comm_rounds = 0u64;
+    let mut comm_rounds = opts.start_round;
+    let mut transport: Arc<dyn Transport> = link.transport.clone();
+    let mut carried = LinkStats::default();
+    let mut rejoins = 0u64;
+    let epoch = session_epoch(cfg.seed);
     let requested = cfg.codec_for(party.0);
     let result: anyhow::Result<()> = (|| {
-        // Capabilities handshake (DESIGN.md §5): only when compression
-        // is requested — an identity config keeps the wire byte stream
-        // exactly as before, so pre-handshake peers interoperate.
-        let codec = if requested != CodecKind::Identity {
+        // Codec handshake. Join-time masks pre-negotiate without any
+        // wire exchange; otherwise the historic in-band Hello runs —
+        // only when compression is requested, so an identity config
+        // keeps the wire byte stream exactly as before.
+        let codec = if let Some(mask) = link.peer_codecs {
+            let eff = compress::negotiate(requested, Some(mask));
+            if eff != requested {
+                log::warn!(
+                    "[{party}] peer cannot decode codec {} (join-time \
+                     mask {mask:#x}) — sending uncompressed",
+                    requested.label()
+                );
+            }
+            eff
+        } else if requested != CodecKind::Identity {
             transport.send(Message::Hello {
                 codecs: compress::supported_mask(),
             })?;
@@ -153,28 +207,167 @@ pub fn run_feature_party(
         } else {
             CodecKind::Identity
         };
-        for round in 0..cfg.max_rounds as u64 {
-            let idx = cursor.next_indices();
-            let xa = gather_a_with(&train, &idx, &mut scratch);
-            let za = runtime.lock().unwrap().forward(&xa)?;
+        // Fast-forward the deterministic batch schedule to the first
+        // round this party runs (non-zero when the session resumed
+        // from a checkpoint).
+        let mut taken: u64 = 0;
+        let mut round: u64 = opts.start_round;
+        // The in-flight round preserved across a rejoin, so the round
+        // can be re-run (or its replayed derivative applied) without
+        // re-sampling the schedule.
+        struct PendingRound {
+            round: u64,
+            idx: Vec<u32>,
+            xa: Tensor,
+            za: Tensor,
+        }
+        let mut pending: Option<PendingRound> = None;
+        // One reconnect: dial the re-admission point, swap transports,
+        // consume replays. Returns the resume round.
+        // (Free-standing closure so both the send and recv failure
+        // sites share it.)
+        let do_rejoin = |err: &anyhow::Error,
+                             transport: &mut Arc<dyn Transport>,
+                             carried: &mut LinkStats,
+                             rejoins: &mut u64,
+                             last_round: u64|
+         -> anyhow::Result<(u64, u32)> {
+            let Some(policy) = &opts.rejoin else {
+                return Err(anyhow::anyhow!("{err:#}"));
+            };
+            log::warn!(
+                "[{party}] link to the label party lost after {last_round} \
+                 rounds: {err:#} — attempting rejoin at {}", policy.addr
+            );
+            let (t, resume, replays) = rejoin_dial(
+                &policy.addr, party, cfg, epoch, last_round,
+                policy.timeout,
+            )?;
+            *carried = carried.merged(transport.stats());
+            *transport = t;
+            *rejoins += 1;
+            Ok((resume, replays))
+        };
+        // Where lock-step resumes after a rejoin. A resume round
+        // *behind* our progress means the label restarted from a
+        // checkpoint older than we got to: rebuild the deterministic
+        // batch cursor and rewind (our model keeps the extra rounds'
+        // updates; the staleness-tolerant algorithm absorbs that).
+        let resume_at = |resume: u64, cursor: &mut BatchCursor,
+                         taken: &mut u64, comm_rounds: &mut u64|
+         -> u64 {
+            if resume < *comm_rounds {
+                log::warn!(
+                    "[{party}] label resumed behind this party (round \
+                     {resume} < {}) — rewinding the batch cursor",
+                    *comm_rounds
+                );
+                *cursor = BatchCursor::new(cfg.seed, train.n, batch);
+                *taken = 0;
+                *comm_rounds = resume;
+            }
+            resume.max(*comm_rounds)
+        };
+        'rounds: while round < cfg.max_rounds as u64 {
+            let (idx, xa, za_raw) = match pending.take() {
+                Some(p) if p.round == round => (p.idx, p.xa, p.za),
+                _ => {
+                    while taken < round {
+                        cursor.next_indices();
+                        taken += 1;
+                    }
+                    let idx = cursor.next_indices();
+                    taken += 1;
+                    let xa = gather_a_with(&train, &idx, &mut scratch);
+                    let za = runtime.lock().unwrap().forward(&xa)?;
+                    (idx, xa, za)
+                }
+            };
             // Identity codec: the message and the workset entry below
             // share za's allocation — the clone is a refcount bump, not
             // a copy. Lossy codec: `za` is rebound to the dequantized
             // round-trip so the cache matches what the label decodes.
-            let (msg, za) =
-                outbound_stats(codec, Lane::Activation, round, za)?;
-            transport.send(msg)?;
-            // Block on ∇Z (the local worker keeps training meanwhile).
-            let dza = match transport.recv()?.into_plain()? {
-                Message::Derivative { round: r, tensor } => {
-                    anyhow::ensure!(r == round,
-                                    "protocol skew: got derivative {r}, \
-                                     expected {round}");
-                    tensor
+            let (msg, za) = outbound_stats(codec, Lane::Activation, round,
+                                           za_raw.clone())?;
+            if let Err(e) = transport.send(msg) {
+                // The label never saw this round's activation, so no
+                // replay can exist; re-run the round after rejoining
+                // (or skip ahead to wherever the session got to).
+                let (resume, _replays) = do_rejoin(
+                    &e, &mut transport, &mut carried, &mut rejoins,
+                    comm_rounds)?;
+                if resume == round {
+                    pending = Some(PendingRound {
+                        round, idx, xa, za: za_raw,
+                    });
                 }
-                Message::Shutdown => return Ok(()),
-                other => anyhow::bail!("unexpected message {:?} in round \
-                                        {round}", other.tag()),
+                round = resume_at(resume, &mut cursor, &mut taken,
+                                  &mut comm_rounds);
+                continue 'rounds;
+            }
+            // Block on ∇Z (the local worker keeps training meanwhile).
+            let dza = match transport.recv() {
+                Ok(m) => match m.into_plain()? {
+                    Message::Derivative { round: r, tensor } => {
+                        anyhow::ensure!(
+                            r == round,
+                            "protocol skew: got derivative {r}, \
+                             expected {round}"
+                        );
+                        tensor
+                    }
+                    Message::Shutdown => return Ok(()),
+                    other => anyhow::bail!(
+                        "unexpected message {:?} in round {round}",
+                        other.tag()),
+                },
+                Err(e) => {
+                    let (resume, replays) = do_rejoin(
+                        &e, &mut transport, &mut carried, &mut rejoins,
+                        comm_rounds)?;
+                    // The label replays the in-flight round's
+                    // derivative when it had consumed our activation
+                    // before the drop.
+                    let mut completed_inflight = false;
+                    for _ in 0..replays {
+                        match transport.recv()?.into_plain()? {
+                            Message::Derivative { round: r, tensor } => {
+                                if r == round {
+                                    runtime
+                                        .lock()
+                                        .unwrap()
+                                        .exact_update(&xa, &tensor)?;
+                                    workset.insert(
+                                        round,
+                                        idx.clone(),
+                                        vec![(za.clone(), tensor)],
+                                    );
+                                    comm_rounds = round + 1;
+                                    completed_inflight = true;
+                                } else {
+                                    log::warn!(
+                                        "[{party}] replayed derivative \
+                                         for round {r} no longer \
+                                         applies (in-flight round was \
+                                         {round}) — dropped"
+                                    );
+                                }
+                            }
+                            Message::Shutdown => return Ok(()),
+                            other => anyhow::bail!(
+                                "unexpected replay message {:?}",
+                                other.tag()),
+                        }
+                    }
+                    if !completed_inflight && resume == round {
+                        pending = Some(PendingRound {
+                            round, idx, xa, za: za_raw,
+                        });
+                    }
+                    round = resume_at(resume, &mut cursor, &mut taken,
+                                      &mut comm_rounds);
+                    continue 'rounds;
+                }
             };
             runtime.lock().unwrap().exact_update(&xa, &dza)?;
             workset.insert(round, idx, vec![(za, dza)]);
@@ -190,9 +383,19 @@ pub fn run_feature_party(
                     let za = runtime.lock().unwrap().forward(&xa)?;
                     let (msg, _) = outbound_stats(
                         codec, Lane::EvalActivation, k as u64, za)?;
-                    transport.send(msg)?;
+                    if let Err(e) = transport.send(msg) {
+                        // Abandon the eval walk (the label excludes
+                        // this lane from the partial eval) and rejoin.
+                        let (resume, _replays) = do_rejoin(
+                            &e, &mut transport, &mut carried,
+                            &mut rejoins, comm_rounds)?;
+                        round = resume_at(resume, &mut cursor,
+                                          &mut taken, &mut comm_rounds);
+                        continue 'rounds;
+                    }
                 }
             }
+            round += 1;
         }
         // Round budget exhausted on this side; wait for the label
         // party's shutdown so the byte accounting stays complete.
@@ -216,6 +419,7 @@ pub fn run_feature_party(
     let cosine = Arc::try_unwrap(cosine)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_default();
+    let link_stats = carried.merged(transport.stats());
     Ok(FeaturePartyReport {
         party,
         comm_rounds,
@@ -223,5 +427,7 @@ pub fn run_feature_party(
         local_updates,
         workset: ws_stats,
         cosine,
+        link_stats,
+        rejoins,
     })
 }

@@ -6,46 +6,66 @@
 //! standard K-party topology (C-VFL). With one link this is exactly the
 //! PR-1/PR-2 Party B, byte for byte.
 //!
-//! Comm worker, per round: recv Z_k from each activation lane → exact
-//! step on Σ_k Z_k (computes loss + ∇Z, updates θ_B/θ_top) → cache
-//! ⟨i, Z_k, ∇Z⟩ into each peer's workset lane → fan the derivative out.
-//! Local worker: local steps against the cached aggregate statistics
-//! (Algorithm 2, LocalUpdatePartyB) via [`MeshWorkset`], which keeps
-//! one [`crate::workset::WorksetTable`] lane per peer in lock-step so
-//! uniform sampling and instance weighting stay per-link exact. The
-//! label party owns the stop decision and broadcasts Shutdown on every
-//! link.
+//! Comm worker, per round: collect Z_k from each activation lane (via
+//! the supervised [`LaneSet`] — a bounded straggler wait substitutes a
+//! lane's cached stale statistics when `--straggler-wait-ms` is set;
+//! dead lanes can `Rejoin` through the listener's re-admission point) →
+//! exact step on Σ_k Z_k (computes loss + ∇Z, updates θ_B/θ_top) →
+//! cache ⟨i, Z_k, ∇Z⟩ into each peer's workset lane → fan the
+//! derivative out. Local worker: local steps against the cached
+//! aggregate statistics (Algorithm 2, LocalUpdatePartyB) via
+//! [`MeshWorkset`], which keeps one [`crate::workset::WorksetTable`]
+//! lane per peer in lock-step so uniform sampling and instance
+//! weighting stay per-link exact. The label party owns the stop
+//! decision and broadcasts Shutdown on every link.
 //!
 //! The cache insert happens *before* the (WAN-bound) sends: the entries'
 //! tensors are `Arc`-shared with the outgoing messages rather than
 //! copied, and the local worker can already consume the fresh statistics
 //! while the derivatives are still occupying the links (DESIGN.md §4).
 //!
-//! The `Hello` capabilities handshake is answered **per link**,
-//! whenever that peer initiates it — even when this party itself is
-//! configured uncompressed — and derivative sends are routed through
-//! `protocol::outbound_stats` under each link's negotiated codec,
-//! caching that link's dequantized round-trip (DESIGN.md §5). A plain
-//! first frame on a link means a pre-handshake peer: that link stays on
-//! the identity codec and its wire behaviour is byte-identical to PR 1.
+//! Codec negotiation is per link (DESIGN.md §5): links whose bootstrap
+//! carried the peer's codec mask pre-negotiate and skip the `Hello`
+//! exchange entirely; mask-less links answer the peer-initiated `Hello`
+//! as before, and a plain first frame means a pre-handshake peer — that
+//! link stays on the identity codec, byte-identical to PR 1. On a
+//! checkpoint resume ([`LabelRunOpts::resume`]) the snapshot's per-link
+//! codec state overrides negotiation, model state is imported, and the
+//! round loop continues from the snapshot's round (DESIGN.md §8).
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::compress::{self, CodecKind};
 use crate::config::RunConfig;
 use crate::data::batcher::{gather_b_with, BatchCursor, GatherScratch};
 use crate::data::PartyBData;
 use crate::metrics::{auc_exact, CosineRecorder, SeriesPoint};
-use crate::protocol::{outbound_stats, Lane, Message};
 use crate::runtime::{ArtifactSet, PartyBRuntime};
+use crate::session::bootstrap::Readmission;
+use crate::session::checkpoint::SessionSnapshot;
+use crate::session::supervisor::{session_epoch, LaneInput, LaneSet,
+                                 SessionEvent, SessionState};
 use crate::session::{Link, PartyId};
 use crate::tensor::Tensor;
-use crate::transport::Transport;
+use crate::transport::LinkStats;
 use crate::util::stats::Ema;
 use crate::workset::{MeshWorkset, WorksetStats};
 
 use super::{eval_batch_count, Ctrl, BUBBLE_PARK};
+
+/// Supervised-lifecycle options for a label run. The default (no
+/// re-admission point, no resume) is the historic run-to-completion
+/// behaviour.
+#[derive(Default)]
+pub struct LabelRunOpts {
+    /// The bootstrap listener kept alive as a `Rejoin` re-admission
+    /// point (`SessionListener::establish_supervised`).
+    pub readmission: Option<Readmission>,
+    /// Restart from this checkpoint: model state is imported, per-link
+    /// codecs are pinned from the snapshot, and the round loop resumes
+    /// at `snapshot.round`.
+    pub resume: Option<SessionSnapshot>,
+}
 
 /// Everything the label party reports after a run.
 #[derive(Debug, Default)]
@@ -58,6 +78,13 @@ pub struct LabelPartyReport {
     pub series: Vec<SeriesPoint>,
     /// Why the run ended.
     pub stop_reason: StopReason,
+    /// Lifecycle events observed by the supervisor (DESIGN.md §8).
+    pub events: Vec<SessionEvent>,
+    /// Per-peer sender-side accounting, carried across any transport
+    /// swaps a `Rejoin` performed.
+    pub link_stats: Vec<(PartyId, LinkStats)>,
+    /// Lanes re-admitted during the run.
+    pub rejoins: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -68,49 +95,13 @@ pub enum StopReason {
     TimeBudget,
 }
 
-/// One activation lane: the peer, its transport, the codec negotiated
-/// on this link, and the round-0 replay slot for pre-handshake peers.
-struct LaneState {
-    peer: PartyId,
-    transport: Arc<dyn Transport>,
-    codec: CodecKind,
-    replay: Option<Message>,
-}
-
-/// Fan one frame out per lane. The star's links are independent, and
-/// `Transport::send` charges the (simulated or real) link occupancy
-/// inline — sending lane-by-lane would serialize K−1 transfers that
-/// real hardware carries concurrently and overstate K-party comm time
-/// by (K−1)×. One lane takes the direct call (the two-party path,
-/// thread-free and behaviourally identical to the historic Party B);
-/// more fan out on scoped sender threads, one per link.
-fn send_fanout(lanes: &[LaneState], mut frames: Vec<Message>)
-               -> anyhow::Result<()> {
-    debug_assert_eq!(lanes.len(), frames.len());
-    if frames.len() == 1 {
-        return lanes[0].transport.send(frames.pop().expect("one frame"));
-    }
-    std::thread::scope(|s| -> anyhow::Result<()> {
-        let senders: Vec<_> = lanes
-            .iter()
-            .zip(frames)
-            .map(|(lane, frame)| {
-                s.spawn(move || lane.transport.send(frame))
-            })
-            .collect();
-        for sender in senders {
-            sender.join().expect("derivative sender panicked")?;
-        }
-        Ok(())
-    })
-}
-
 pub fn run_label_party(
     cfg: &RunConfig,
     set: Arc<ArtifactSet>,
     train: Arc<PartyBData>,
     test: Arc<PartyBData>,
     links: &[Link],
+    opts: LabelRunOpts,
 ) -> anyhow::Result<LabelPartyReport> {
     anyhow::ensure!(!links.is_empty(),
                     "label party needs at least one feature link");
@@ -125,6 +116,37 @@ pub fn run_label_party(
         cfg.cos_xi() as f32,
         cfg.weighting_enabled(),
     )?));
+    let start_round: u64 = match &opts.resume {
+        Some(snap) => {
+            anyhow::ensure!(
+                snap.parties as usize == cfg.parties,
+                "checkpoint is for a {}-party session, config says {}",
+                snap.parties, cfg.parties
+            );
+            anyhow::ensure!(
+                snap.epoch == session_epoch(cfg.seed),
+                "checkpoint epoch {:#x} does not match this config's \
+                 session epoch {:#x} — different seed or logical session",
+                snap.epoch, session_epoch(cfg.seed)
+            );
+            anyhow::ensure!(
+                (snap.round as usize) < cfg.max_rounds,
+                "checkpoint round {} is not before max_rounds {}",
+                snap.round, cfg.max_rounds
+            );
+            runtime
+                .lock()
+                .unwrap()
+                .state
+                .import(&snap.params, &snap.accs)?;
+            log::info!(
+                "resumed label party from checkpoint: round {}, epoch \
+                 {:#x}", snap.round, snap.epoch
+            );
+            snap.round
+        }
+        None => 0,
+    };
     let workset = Arc::new(MeshWorkset::new(
         links.len(),
         cfg.effective_w(),
@@ -174,94 +196,37 @@ pub fn run_label_party(
 
     // ---- comm worker + control plane (this thread) -------------------------
     let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
+    // The batch schedule is a pure function of (seed, round): a resumed
+    // session fast-forwards to the checkpoint round so every party
+    // gathers the same instances for the same round numbers.
+    for _ in 0..start_round {
+        cursor.next_indices();
+    }
     let mut scratch = GatherScratch::default();
     let eval_batches = eval_batch_count(cfg, test.n, batch);
     let start = Instant::now();
     let mut series: Vec<SeriesPoint> = Vec::new();
     let mut stop_reason = StopReason::MaxRounds;
-    let mut comm_rounds = 0u64;
+    let mut comm_rounds = start_round;
+    let mut lanes = LaneSet::new(cfg, links, opts.readmission);
 
     let result: anyhow::Result<()> = (|| {
-        // Handshake, per link: feature parties speak first. A `Hello`
-        // is answered with our capabilities (whether or not we were
-        // configured to compress); any other first frame is a
-        // pre-handshake peer and is replayed into round 0 below with
-        // the identity codec. Links negotiate independently — one
-        // compressed peer does not force (or break) another.
-        let mut lanes: Vec<LaneState> = Vec::with_capacity(links.len());
-        for link in links {
-            let requested = cfg.codec_for(link.peer.0);
-            let mut replay = None;
-            let codec = match link.transport.recv()? {
-                Message::Hello { codecs: peer } => {
-                    link.transport.send(Message::Hello {
-                        codecs: compress::supported_mask(),
-                    })?;
-                    let eff = compress::negotiate(requested, Some(peer));
-                    if eff != requested {
-                        log::warn!(
-                            "[{}] peer cannot decode codec {} \
-                             (mask {peer:#x}) — sending uncompressed",
-                            link.peer,
-                            requested.label()
-                        );
-                    }
-                    eff
-                }
-                first => {
-                    if requested != CodecKind::Identity {
-                        // The label party cannot initiate (feature
-                        // parties speak first in the lock-step
-                        // protocol): a plain first frame means the peer
-                        // predates or didn't request compression, so
-                        // this link's request is dropped — loudly, not
-                        // silently.
-                        log::warn!(
-                            "[{}] compress = {} requested but peer \
-                             opened without a handshake — sending \
-                             uncompressed",
-                            link.peer,
-                            requested.label()
-                        );
-                    }
-                    replay = Some(first);
-                    CodecKind::Identity
-                }
-            };
-            lanes.push(LaneState {
-                peer: link.peer,
-                transport: link.transport.clone(),
-                codec,
-                replay,
-            });
-        }
-        for round in 0..cfg.max_rounds as u64 {
+        lanes.handshake(
+            cfg,
+            opts.resume.as_ref().map(|s| s.links.as_slice()),
+        )?;
+        for round in start_round..cfg.max_rounds as u64 {
             let idx = cursor.next_indices();
             let (xb, y) = gather_b_with(&train, &idx, &mut scratch);
-            // Collect this round's activation from every lane (the
-            // protocol is lock-step per link, so lane order is just a
-            // join order, not a scheduling constraint).
-            let mut zas: Vec<Tensor> = Vec::with_capacity(lanes.len());
-            for lane in lanes.iter_mut() {
-                let msg = match lane.replay.take() {
-                    Some(m) => m,
-                    None => lane.transport.recv()?,
-                };
-                let za = match msg.into_plain()? {
-                    Message::Activation { round: r, tensor } => {
-                        anyhow::ensure!(
-                            r == round,
-                            "protocol skew on {}: got activation {r}, \
-                             expected {round}", lane.peer
-                        );
-                        tensor
-                    }
-                    other => anyhow::bail!(
-                        "unexpected message {:?} from {} in round \
-                         {round}", other.tag(), lane.peer),
-                };
-                zas.push(za);
-            }
+            // Collect this round's activation from every lane: fresh
+            // when the peer delivered inside the straggler budget,
+            // stale (its cached last activation — weighted down by the
+            // staleness machinery) when it is behind or lost.
+            let inputs = lanes.collect(round)?;
+            let zas: Vec<Tensor> = inputs
+                .iter()
+                .filter_map(|i| i.tensor().cloned())
+                .collect();
             // Σ_k Z_k — with one lane this is the lane's own handle
             // (no copy), so the two-party exact step is unchanged.
             let zsum = Tensor::sum_f32(&zas)?;
@@ -282,75 +247,129 @@ pub fn run_label_party(
             // on round `i`'s statistics while the derivatives are
             // still in flight. ∂L/∂Z_k is the same for every k, so one
             // exact step serves every outgoing frame.
-            let mut outgoing = Vec::with_capacity(lanes.len());
-            let mut cached = Vec::with_capacity(lanes.len());
-            for (lane, za_k) in lanes.iter().zip(zas) {
-                let (dmsg, dza_k) = outbound_stats(
-                    lane.codec, Lane::Derivative, round, dza.clone())?;
-                outgoing.push(dmsg);
-                cached.push((za_k, dza_k));
+            let views = lanes.stage_derivatives(round, &dza)?;
+            if inputs.iter().all(|i| i.tensor().is_some()) {
+                let cached: Vec<(Tensor, Tensor)> = inputs
+                    .into_iter()
+                    .zip(views)
+                    .map(|(input, view)| match input {
+                        LaneInput::Fresh(t) | LaneInput::Stale(t) => {
+                            (t, view)
+                        }
+                        LaneInput::Missing => unreachable!(
+                            "all inputs checked to carry tensors"),
+                    })
+                    .collect();
+                workset.insert(round, idx, cached);
+            } else {
+                // A lane that never contributed has no Z_k to cache; a
+                // partial K-tuple would desynchronize the per-peer
+                // workset lanes, so this round is not cached at all.
+                log::debug!(
+                    "round {round}: cache insert skipped (a lane has \
+                     no statistics yet)"
+                );
             }
-            workset.insert(round, idx, cached);
-            send_fanout(&lanes, outgoing)?;
+            lanes.send_staged(round)?;
             comm_rounds = round + 1;
 
-            // Eval lane + stop decision.
+            // Checkpoint lane (DESIGN.md §8): snapshot after the round
+            // completes, so a restart replays from a round boundary.
+            if !cfg.checkpoint_dir.is_empty()
+                && comm_rounds % cfg.checkpoint_every as u64 == 0
+            {
+                let (params, accs) =
+                    runtime.lock().unwrap().state.export()?;
+                let snap = SessionSnapshot {
+                    epoch: lanes.epoch(),
+                    round: comm_rounds,
+                    parties: cfg.parties as u16,
+                    links: lanes.codec_states(),
+                    params,
+                    accs,
+                };
+                let path = snap.save(&cfg.checkpoint_dir)?;
+                log::info!("checkpoint written: {path}");
+                lanes.supervisor_mut().record(
+                    SessionEvent::CheckpointWritten {
+                        round: comm_rounds,
+                        path,
+                    },
+                );
+            }
+
+            // Eval lane + stop decision. Only lanes in lock-step at
+            // this round participate; a degraded mesh skips scoring
+            // (the eval frames of behind lanes are discarded by later
+            // drains, so the round clock stays consistent).
             if comm_rounds % cfg.eval_every as u64 == 0 {
+                let mut participants = lanes.current_lanes(round);
+                let expected = participants.len();
+                let mut complete =
+                    expected == lanes.len() && expected > 0;
                 let mut scores = Vec::with_capacity(eval_batches * batch);
                 let mut labels = Vec::with_capacity(eval_batches * batch);
                 for k in 0..eval_batches {
+                    if participants.is_empty() {
+                        complete = false;
+                        break;
+                    }
+                    let zs = lanes.collect_eval(
+                        &mut participants, k as u64, round)?;
+                    if zs.len() != expected {
+                        complete = false;
+                    }
+                    if !complete || zs.is_empty() {
+                        // Frames still had to be drained for wire
+                        // consistency, but an incomplete eval is
+                        // discarded anyway — don't burn accelerator
+                        // executions on scores that can't be used.
+                        continue;
+                    }
                     let idx: Vec<u32> = ((k * batch) as u32
                         ..((k + 1) * batch) as u32)
                         .collect();
                     let (xb, y) = gather_b_with(&test, &idx, &mut scratch);
-                    let mut zs: Vec<Tensor> =
-                        Vec::with_capacity(lanes.len());
-                    for lane in lanes.iter() {
-                        let za = match lane.transport.recv()?
-                            .into_plain()?
-                        {
-                            Message::EvalActivation { round: r, tensor } =>
-                            {
-                                anyhow::ensure!(
-                                    r == k as u64,
-                                    "eval lane skew on {}: {r} != {k}",
-                                    lane.peer
-                                );
-                                tensor
-                            }
-                            other => anyhow::bail!(
-                                "expected eval activation from {}, got \
-                                 {:?}", lane.peer, other.tag()),
-                        };
-                        zs.push(za);
-                    }
                     let za = Tensor::sum_f32(&zs)?;
                     let yhat =
                         runtime.lock().unwrap().eval(&xb, &za)?;
                     scores.extend(yhat);
                     labels.extend_from_slice(y.as_f32()?);
                 }
-                let auc = auc_exact(&scores, &labels);
-                let rt = runtime.lock().unwrap();
-                let updates = rt.exact_updates + rt.local_updates;
-                drop(rt);
-                let point = SeriesPoint {
-                    comm_round: comm_rounds,
-                    wall_s: start.elapsed().as_secs_f64(),
-                    auc,
-                    loss: loss_ema.lock().unwrap().get(),
-                    updates,
-                };
-                log::info!(
-                    "[{}] round {:>6}  auc {:.4}  loss {:.4}  updates {}",
-                    cfg.algorithm.name(), comm_rounds, auc, point.loss,
-                    updates
-                );
-                series.push(point);
-                if cfg.target_auc > 0.0 && auc >= cfg.target_auc {
-                    stop_reason = StopReason::TargetAuc;
-                    return Ok(());
+                if complete {
+                    let auc = auc_exact(&scores, &labels);
+                    let rt = runtime.lock().unwrap();
+                    let updates = rt.exact_updates + rt.local_updates;
+                    drop(rt);
+                    let point = SeriesPoint {
+                        comm_round: comm_rounds,
+                        wall_s: start.elapsed().as_secs_f64(),
+                        auc,
+                        loss: loss_ema.lock().unwrap().get(),
+                        updates,
+                    };
+                    log::info!(
+                        "[{}] round {:>6}  auc {:.4}  loss {:.4}  \
+                         updates {}",
+                        cfg.algorithm.name(), comm_rounds, auc,
+                        point.loss, updates
+                    );
+                    series.push(point);
+                    if cfg.target_auc > 0.0 && auc >= cfg.target_auc {
+                        stop_reason = StopReason::TargetAuc;
+                        return Ok(());
+                    }
+                } else {
+                    log::warn!(
+                        "eval at round {comm_rounds} skipped: the mesh \
+                         is {} — scoring a partial Σ_k would not be \
+                         comparable", lanes.state().label()
+                    );
                 }
+                // The wall-clock budget doesn't depend on scores: it
+                // must hold even when the mesh is degraded and evals
+                // are being skipped (same boundary cadence as the
+                // historic loop).
                 if cfg.max_seconds > 0.0
                     && start.elapsed().as_secs_f64() >= cfg.max_seconds
                 {
@@ -361,10 +380,9 @@ pub fn run_label_party(
         }
         Ok(())
     })();
-    // Broadcast shutdown on every link regardless of how we exited.
-    for link in links {
-        let _ = link.transport.send(Message::Shutdown);
-    }
+    // Broadcast shutdown on every link regardless of how we exited, and
+    // close the lifecycle.
+    lanes.shutdown();
     ctrl.stop();
     workset.wake_all(); // unpark a local worker sleeping through a bubble
     let local_updates = match local_handle {
@@ -372,12 +390,16 @@ pub fn run_label_party(
         None => 0,
     };
     result?;
+    debug_assert_eq!(lanes.state(), SessionState::Done);
 
     let exact_updates = runtime.lock().unwrap().exact_updates;
     let ws_stats = workset.stats();
     let cosine = Arc::try_unwrap(cosine)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_default();
+    let link_stats = lanes.link_stats();
+    let rejoins = lanes.total_rejoins();
+    let events = lanes.take_events();
     Ok(LabelPartyReport {
         comm_rounds,
         exact_updates,
@@ -386,5 +408,8 @@ pub fn run_label_party(
         cosine,
         series,
         stop_reason,
+        events,
+        link_stats,
+        rejoins,
     })
 }

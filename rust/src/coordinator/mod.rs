@@ -48,8 +48,11 @@ use crate::runtime::ArtifactSet;
 use crate::session::{Link, PartyId};
 use crate::transport::Transport;
 
-use feature_party::{run_feature_party, FeaturePartyReport};
-use label_party::{run_label_party, LabelPartyReport};
+use feature_party::{run_feature_party, FeaturePartyReport,
+                    FeatureRunOpts};
+use label_party::{run_label_party, LabelPartyReport, LabelRunOpts};
+
+use crate::session::LABEL_PARTY;
 
 /// How long a local worker parks on the workset condvar before re-checking
 /// its stop flag. §3.2 bubbles are normally broken by an insert notify —
@@ -84,7 +87,11 @@ pub fn run_party_a(
     test: Arc<PartyAData>,
     transport: Arc<dyn Transport>,
 ) -> anyhow::Result<FeaturePartyReport> {
-    run_feature_party(cfg, PartyId(1), set, train, test, transport)
+    // A raw transport carries no join-time codec mask, so the in-band
+    // Hello path (the historic wire) applies.
+    let link = Link::new(LABEL_PARTY, transport);
+    run_feature_party(cfg, PartyId(1), set, train, test, &link,
+                      FeatureRunOpts::default())
 }
 
 /// Two-party compat wrapper: run the label party (historic "Party B")
@@ -96,8 +103,9 @@ pub fn run_party_b(
     test: Arc<PartyBData>,
     transport: Arc<dyn Transport>,
 ) -> anyhow::Result<LabelPartyReport> {
-    let links = [Link { peer: PartyId(1), transport }];
-    run_label_party(cfg, set, train, test, &links)
+    let links = [Link::new(PartyId(1), transport)];
+    run_label_party(cfg, set, train, test, &links,
+                    LabelRunOpts::default())
 }
 
 /// Shared stop flag between a party's comm and local workers.

@@ -24,7 +24,6 @@ use crate::metrics::{LinkRecord, RunRecord};
 use crate::runtime::ArtifactSet;
 use crate::session::bootstrap::inproc_mesh;
 use crate::session::{PartyId, SessionBuilder, LABEL_PARTY};
-use crate::transport::Transport;
 
 use super::feature_party::FeaturePartyReport;
 use super::label_party::{LabelPartyReport, StopReason};
@@ -131,7 +130,6 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
     let label_session = SessionBuilder::from_bootstrap(cfg, label_bootstrap)?;
 
     let start = Instant::now();
-    let mut feature_transports = Vec::with_capacity(k);
     let mut handles = Vec::with_capacity(k);
     for ((i, bootstrap), (train, test)) in feature_bootstraps
         .into_iter()
@@ -140,8 +138,6 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
     {
         let party = PartyId(i as u16 + 1);
         let session = SessionBuilder::from_bootstrap(cfg, bootstrap)?;
-        feature_transports
-            .push(session.mesh().links()[0].transport.clone());
         let set_f = set.clone();
         let train = Arc::new(train);
         let test = Arc::new(test);
@@ -161,13 +157,15 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
     }
     let wall = start.elapsed();
 
-    // Per-link accounting: one row per directed link of the star.
+    // Per-link accounting: one row per directed link of the star, from
+    // the parties' reports (which carry stats across any transport
+    // swaps a supervised run performed).
     let mut links = Vec::with_capacity(2 * k);
     let mut comm_busy = Duration::ZERO;
-    for (i, t) in feature_transports.iter().enumerate() {
-        let s = t.stats();
+    for r in &feature_reports {
+        let s = r.link_stats;
         links.push(LinkRecord {
-            src: PartyId(i as u16 + 1),
+            src: r.party,
             dst: LABEL_PARTY,
             messages: s.messages,
             bytes: s.bytes,
@@ -175,10 +173,10 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
         });
         comm_busy += s.busy;
     }
-    for (peer, s) in label_session.mesh().link_stats() {
+    for (peer, s) in &b_report.link_stats {
         links.push(LinkRecord {
             src: LABEL_PARTY,
-            dst: peer,
+            dst: *peer,
             messages: s.messages,
             bytes: s.bytes,
             raw_bytes: s.raw_bytes,
@@ -205,6 +203,7 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
         comm_busy,
         wall,
         compute_busy: set.clock_a.busy() + set.clock_b.busy(),
+        events: b_report.events,
     };
     log::info!(
         "run {} finished: {} parties, {} rounds, {} local updates \

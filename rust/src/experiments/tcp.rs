@@ -3,15 +3,26 @@
 //! The production shape of a VFL job — each enterprise runs its own
 //! binary inside its own network perimeter; only `Z`/`∇Z` frames cross
 //! the boundary. The label party is the **session server**
-//! (`--role label --listen ADDR`): it binds once and accepts K−1
-//! `Join`-identified connections (DESIGN.md §7). Each feature party is
-//! a dialer (`--role feature --party N --connect ADDR`) that retries
-//! with backoff until the label party is up, so the K shells can be
-//! launched in any order. Every process must be launched with the same
-//! config (model/dataset/size/seed/parties) so the pre-aligned
-//! synthetic data and the batch schedule agree, mirroring the paper's
-//! post-PSI setup; the bootstrap handshake rejects session-size
-//! mismatches outright.
+//! (`--role label --listen ADDR`): it binds once, accepts K−1
+//! `Join`-identified connections (DESIGN.md §7), and keeps the
+//! listener alive for the rest of the run as the session's
+//! *re-admission point* — a feature party that drops mid-session
+//! re-dials with `Rejoin` and resumes in place (DESIGN.md §8). Each
+//! feature party is a dialer (`--role feature --party N --connect
+//! ADDR`) that retries with jittered backoff until the label party is
+//! up, so the K shells can be launched in any order. Every process
+//! must be launched with the same config
+//! (model/dataset/size/seed/parties) so the pre-aligned synthetic data
+//! and the batch schedule agree, mirroring the paper's post-PSI setup;
+//! the bootstrap handshake rejects session-size mismatches outright.
+//!
+//! Lifecycle knobs: `--straggler-wait-ms` bounds how long the label
+//! party waits per lane before stepping on cached stale statistics;
+//! `--checkpoint-dir`/`--checkpoint-every` write restartable snapshots;
+//! `--resume <ckpt>` restarts a label party from one — the listener
+//! then expects `Rejoin`s (fresh `celu-vfl party` dialers fall back to
+//! `Rejoin` automatically), model state is imported, and training
+//! continues from the snapshot's round.
 //!
 //! Roles accept the session vocabulary (`feature` / `label`) as well as
 //! the historic two-party aliases (`a` = feature, `b` = label). With
@@ -25,12 +36,16 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::RunConfig;
+use crate::coordinator::feature_party::{FeatureRunOpts, RejoinPolicy};
+use crate::coordinator::label_party::LabelRunOpts;
 use crate::coordinator::trainer::{feature_slices, load_data, load_set};
 use crate::session::bootstrap::{SessionDialer, SessionListener};
-use crate::session::{PartyId, SessionBuilder};
+use crate::session::checkpoint::SessionSnapshot;
+use crate::session::{PartyId, SessionBuilder, LABEL_PARTY};
 
 pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
-                     connect: &str, party: u16, join_timeout: Duration)
+                     connect: &str, party: u16, join_timeout: Duration,
+                     resume: &str)
                      -> anyhow::Result<()> {
     cfg.validate()?;
     match role {
@@ -38,8 +53,19 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             // Bind before touching artifacts: dialers can already be
             // retrying, and an artifact error should not look like a
             // dead listener from their side any longer than necessary.
-            let listener =
+            let mut listener =
                 SessionListener::bind(listen)?.with_timeout(join_timeout);
+            let snapshot = if resume != "-" && !resume.is_empty() {
+                let snap = SessionSnapshot::load(resume)?;
+                log::info!(
+                    "resuming from {resume}: round {}, epoch {:#x}",
+                    snap.round, snap.epoch
+                );
+                listener = listener.with_resume(snap.epoch, snap.round);
+                Some(snap)
+            } else {
+                None
+            };
             log::info!(
                 "label party listening on {} for {} feature parties",
                 listener.local_addr()?,
@@ -47,11 +73,21 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             );
             let set = load_set(cfg)?;
             let data = load_data(cfg, &set)?;
-            let session = SessionBuilder::from_bootstrap(cfg, listener)?;
-            let report = session.run_label(
+            let (links, readmission, _epoch, _start_round) =
+                listener.establish_supervised(cfg)?;
+            let mut b = SessionBuilder::new(cfg, LABEL_PARTY);
+            for l in links {
+                b = b.link_full(l);
+            }
+            let session = b.build()?;
+            let report = session.run_label_with(
                 set,
                 Arc::new(data.train_b),
                 Arc::new(data.test_b),
+                LabelRunOpts {
+                    readmission: Some(readmission),
+                    resume: snapshot,
+                },
             )?;
             let best = report
                 .series
@@ -60,16 +96,25 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 .fold(0.0f64, f64::max);
             println!(
                 "label party done: parties={} rounds={} local_updates={} \
-                 best_auc={:.4} stop={:?}",
+                 best_auc={:.4} stop={:?} rejoins={} events={}",
                 cfg.parties, report.comm_rounds, report.local_updates,
-                best, report.stop_reason
+                best, report.stop_reason, report.rejoins,
+                report.events.len()
             );
+            for e in &report.events {
+                println!(
+                    "event {:<20} round={:<8} party={}",
+                    e.kind(),
+                    e.round(),
+                    e.party().map(|p| p.to_string())
+                        .unwrap_or_else(|| "-".into())
+                );
+            }
             // Per-link accounting keyed by the ids that actually
-            // joined — the K-party analogue of the old single-link
-            // summary line.
+            // joined, carried across any rejoin transport swaps.
             println!("{:<8} {:>10} {:>10} {:>8} {:>8}", "link",
                      "wire B", "raw B", "msgs", "ratio");
-            for (peer, s) in session.mesh().link_stats() {
+            for (peer, s) in &report.link_stats {
                 println!(
                     "0->{:<5} {:>10} {:>10} {:>8} {:>8.2}",
                     peer.0, s.bytes, s.raw_bytes, s.messages,
@@ -94,14 +139,32 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             let test = Arc::new(test_slices.swap_remove(party as usize - 1));
             let dialer = SessionDialer::new(connect, PartyId(party))
                 .with_timeout(join_timeout);
-            let session = SessionBuilder::from_bootstrap(cfg, dialer)?;
-            let report = session.run_feature(set, train, test)?;
-            let stats = session.mesh().links()[0].transport.stats();
+            // Resumable join: falls back to Rejoin when the label party
+            // restarted from a checkpoint, returning the round this
+            // party fast-forwards to.
+            let (link, start_round) = dialer.establish_resumable(cfg)?;
+            let session = SessionBuilder::new(cfg, PartyId(party))
+                .link_full(link)
+                .build()?;
+            let report = session.run_feature_with(
+                set,
+                train,
+                test,
+                FeatureRunOpts {
+                    rejoin: Some(RejoinPolicy {
+                        addr: connect.to_string(),
+                        timeout: join_timeout,
+                    }),
+                    start_round,
+                },
+            )?;
+            let stats = report.link_stats;
             println!(
                 "feature party {} done: rounds={} local_updates={} \
-                 sent={}B (raw {}B, ratio {:.2})",
+                 rejoins={} sent={}B (raw {}B, ratio {:.2})",
                 report.party, report.comm_rounds, report.local_updates,
-                stats.bytes, stats.raw_bytes, stats.compression_ratio()
+                report.rejoins, stats.bytes, stats.raw_bytes,
+                stats.compression_ratio()
             );
         }
         other => anyhow::bail!(

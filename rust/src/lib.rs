@@ -10,7 +10,12 @@
 //!   (`session::bootstrap`: the label party is a session server
 //!   accepting `Join`-identified connections, feature parties dial in
 //!   with backoff — DESIGN.md §7, so the mesh launches as K OS
-//!   processes), running the paper's protocol with negotiated wire
+//!   processes) and a supervised lifecycle (`session::supervisor`:
+//!   validated state machine with typed lifecycle events, bounded
+//!   straggler lanes stepping on cached stale statistics, `Rejoin`
+//!   reconnect through a live re-admission point, and label-party
+//!   checkpoint/restart via `session::checkpoint` — DESIGN.md §8),
+//!   running the paper's protocol with negotiated wire
 //!   compression for the exchanged statistics (`compress`: fp16 / int8
 //!   / top-k codecs, DESIGN.md §5), simulated-WAN / TCP transports with
 //!   per-link raw-vs-wire byte accounting, per-peer workset lanes with

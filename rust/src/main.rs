@@ -93,6 +93,15 @@ fn apply_overrides(cfg: &mut RunConfig,
     if ov(args.get("bandwidth")) {
         cfg.wan.bandwidth_mbps = args.get_f64("bandwidth")?;
     }
+    if ov(args.get("straggler-wait-ms")) {
+        cfg.straggler_wait_ms = args.get_u64("straggler-wait-ms")?;
+    }
+    if ov(args.get("checkpoint-dir")) {
+        cfg.checkpoint_dir = args.get("checkpoint-dir").to_string();
+    }
+    if ov(args.get("checkpoint-every")) {
+        cfg.checkpoint_every = args.get_usize("checkpoint-every")?;
+    }
     cfg.validate()
 }
 
@@ -115,6 +124,13 @@ fn train_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("seed", "-", "PRNG seed")
         .opt("target-auc", "-", "stop when validation AUC reaches this")
         .opt("bandwidth", "-", "simulated WAN bandwidth in Mbps (0 = off)")
+        .opt("straggler-wait-ms", "-",
+             "bounded per-lane wait before stepping on stale stats \
+              (0 = block forever)")
+        .opt("checkpoint-dir", "-",
+             "write restartable label-party snapshots here")
+        .opt("checkpoint-every", "-",
+             "rounds between checkpoints (with --checkpoint-dir)")
         .opt("out", "-", "write the run record JSON here")
 }
 
@@ -167,7 +183,10 @@ fn cmd_party(argv: &[String]) -> anyhow::Result<()> {
              "feature: the label party's listener address")
         .opt("party", "1", "feature: this party's id (1..parties)")
         .opt("join-timeout", "30",
-             "seconds to wait for the full mesh to assemble");
+             "seconds to wait for the full mesh to assemble")
+        .opt("resume", "-",
+             "label: restart from this checkpoint snapshot (dialers \
+              Rejoin into the resumed session)");
     let args = cli.parse(argv)?;
     let cfg = load_config(&args)?;
     let timeout = args.get_f64("join-timeout")?;
@@ -192,6 +211,7 @@ fn cmd_party(argv: &[String]) -> anyhow::Result<()> {
         args.get("connect"),
         party as u16,
         std::time::Duration::from_secs_f64(timeout),
+        args.get("resume"),
     )
 }
 

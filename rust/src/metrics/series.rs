@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use crate::session::supervisor::SessionEvent;
 use crate::session::PartyId;
 use crate::util::json::{arr_f64, num, obj, Json};
 use crate::util::stats::quantile;
@@ -114,6 +115,11 @@ pub struct RunRecord {
     pub wall: Duration,
     /// Time the label party spent inside PJRT execute calls.
     pub compute_busy: Duration,
+    /// Lifecycle events observed by the label party's supervisor
+    /// (peer losses/rejoins, straggler timeouts, checkpoints —
+    /// DESIGN.md §8). Empty for an undisturbed run, so existing
+    /// artifacts simply gain an empty array.
+    pub events: Vec<SessionEvent>,
 }
 
 impl RunRecord {
@@ -237,6 +243,25 @@ impl RunRecord {
                 })
                 .collect(),
         );
+        let events = Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    let mut fields = vec![
+                        ("kind", Json::Str(e.kind().to_string())),
+                        ("round", num(e.round() as f64)),
+                    ];
+                    if let Some(p) = e.party() {
+                        fields.push(("party", num(p.0 as f64)));
+                    }
+                    if let SessionEvent::CheckpointWritten { path, .. } = e
+                    {
+                        fields.push(("path", Json::Str(path.clone())));
+                    }
+                    obj(fields)
+                })
+                .collect(),
+        );
         obj(vec![
             ("label", Json::Str(self.label.clone())),
             ("comm_rounds", num(self.comm_rounds as f64)),
@@ -260,6 +285,7 @@ impl RunRecord {
             ("series", series),
             ("cosine", cosine),
             ("cosine_b", Json::Num(self.cosine_b.rows.len() as f64)),
+            ("events", events),
         ])
     }
 }
@@ -379,6 +405,51 @@ mod tests {
         assert_eq!(r.bytes_from_label(), 250);
         assert!((r.compression_ratio() - 700.0 / 500.0).abs() < 1e-12);
         assert!((r.links[1].compression_ratio() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lifecycle_events_land_in_the_json_artifact() {
+        let mut r = record_with_aucs(&[0.5]);
+        r.events = vec![
+            SessionEvent::PeerLost { party: PartyId(2), round: 9 },
+            SessionEvent::StragglerTimeout {
+                party: PartyId(1),
+                round: 10,
+            },
+            SessionEvent::PeerRejoined { party: PartyId(2), round: 14 },
+            SessionEvent::CheckpointWritten {
+                round: 20,
+                path: "ckpts/ckpt_round_00000020.celuckpt".into(),
+            },
+        ];
+        let j = r.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        let events = parsed.expect("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(
+            events[0].expect("kind").unwrap().as_str().unwrap(),
+            "peer_lost"
+        );
+        assert_eq!(
+            events[0].expect("party").unwrap().as_usize().unwrap(),
+            2
+        );
+        assert_eq!(
+            events[3].expect("kind").unwrap().as_str().unwrap(),
+            "checkpoint_written"
+        );
+        assert!(events[3].expect("path").unwrap().as_str().unwrap()
+            .contains("celuckpt"));
+        // An undisturbed run serializes an empty array, not a missing
+        // key.
+        let r = RunRecord::default();
+        let parsed =
+            crate::util::json::Json::parse(&r.to_json().to_string())
+                .unwrap();
+        assert_eq!(
+            parsed.expect("events").unwrap().as_arr().unwrap().len(),
+            0
+        );
     }
 
     #[test]

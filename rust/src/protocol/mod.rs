@@ -37,6 +37,24 @@
 //! hostile header can never drive an allocation. Training traffic never
 //! carries these tags: they exist only on pre-session sockets.
 //!
+//! The supervised session lifecycle (DESIGN.md §8) adds two more
+//! fixed-size control frames for mid-session re-admission:
+//!   `[… tag=11][u64 0][u8 ver][u16 party][u16 parties][u32 epoch]`
+//!   `[u64 last_round][u32 codecs]` — `Rejoin`
+//!   `[… tag=12][u64 0][u8 ver][u16 party][u16 parties][u32 epoch]`
+//!   `[u64 resume_round][u32 replays]` — `RejoinAck`
+//! A feature party that lost its link re-dials the label party's
+//! listener and opens with `Rejoin`: the party id it held, the session
+//! epoch (so a stray dialer from another logical session is refused),
+//! and the number of communication rounds it completed before the
+//! drop. The label party answers `RejoinAck` with the round the lane
+//! resumes at and how many buffered derivative frames it will replay
+//! on the fresh transport (0 or 1 under the lock-step protocol —
+//! exactly the in-flight round, when it is still in the bounded resend
+//! buffer). Like `Join`, both frames carry their own version byte and
+//! are validated — version, then id ranges — before the `Message` is
+//! constructed, and they only ever travel on pre-transport sockets.
+//!
 //! K-party sessions (DESIGN.md §6) frame every link with a **versioned
 //! header** carrying the endpoints' party ids:
 //!   `[u32 frame_len][u8 tag=8][u8 ver=2][u16 src][u16 dst][v1 body…]`
@@ -93,6 +111,22 @@ pub enum Message {
     /// accepted id and the session size so a misconfigured dialer
     /// fails at bootstrap, not mid-round.
     JoinAck { party: PartyId, parties: u16, codecs: u32 },
+    /// Re-admission, feature → label: a party that lost its link
+    /// re-dials and asks back into a *running* session. `epoch`
+    /// identifies the logical session (a dialer from another run is
+    /// refused before any lane state is touched); `last_round` is how
+    /// many communication rounds this party completed before the drop.
+    /// Sent exactly once, as the first frame on a freshly-dialed
+    /// socket — never during training.
+    Rejoin { party: PartyId, parties: u16, epoch: u32,
+             last_round: u64, codecs: u32 },
+    /// Re-admission, label → feature: accept the returning party.
+    /// `resume_round` is the round the lane re-enters lock-step at
+    /// (the feature party fast-forwards its batch cursor there);
+    /// `replays` is the number of buffered derivative frames the label
+    /// will replay on the fresh transport before normal traffic.
+    RejoinAck { party: PartyId, parties: u16, epoch: u32,
+                resume_round: u64, replays: u32 },
 }
 
 /// Which statistics lane a compressed frame travels on. Exactly the
@@ -136,12 +170,18 @@ const TAG_COMP: u8 = 7;
 const TAG_V2: u8 = 8;
 const TAG_JOIN: u8 = 9;
 const TAG_JOIN_ACK: u8 = 10;
+const TAG_REJOIN: u8 = 11;
+const TAG_REJOIN_ACK: u8 = 12;
 /// Current addressed-frame version.
 const FRAME_VERSION: u8 = 2;
 /// Current bootstrap (`Join`/`JoinAck`) frame version. Carried in the
 /// body so the handshake can evolve independently of both the v1
 /// message set and the v2 envelope.
 pub const JOIN_VERSION: u8 = 1;
+/// Current re-admission (`Rejoin`/`RejoinAck`) frame version. Versioned
+/// separately from `Join` so the re-admission handshake can evolve
+/// without disturbing the frozen bootstrap fixtures.
+pub const REJOIN_VERSION: u8 = 1;
 
 /// Bytes the v2 envelope adds in front of a v1 body:
 /// `[u8 tag][u8 ver][u16 src][u16 dst]`.
@@ -249,6 +289,8 @@ impl Message {
             Message::Compressed { .. } => TAG_COMP,
             Message::Join { .. } => TAG_JOIN,
             Message::JoinAck { .. } => TAG_JOIN_ACK,
+            Message::Rejoin { .. } => TAG_REJOIN,
+            Message::RejoinAck { .. } => TAG_REJOIN_ACK,
         }
     }
 
@@ -271,7 +313,9 @@ impl Message {
             Message::Shutdown
             | Message::Hello { .. }
             | Message::Join { .. }
-            | Message::JoinAck { .. } => 0,
+            | Message::JoinAck { .. }
+            | Message::Rejoin { .. }
+            | Message::RejoinAck { .. } => 0,
         }
     }
 
@@ -286,6 +330,10 @@ impl Message {
                 // ver + party + parties + codecs.
                 Message::Join { .. } | Message::JoinAck { .. } => {
                     1 + 2 + 2 + 4
+                }
+                // ver + party + parties + epoch + round word + trailer.
+                Message::Rejoin { .. } | Message::RejoinAck { .. } => {
+                    1 + 2 + 2 + 4 + 8 + 4
                 }
                 Message::Compressed { stats, .. } => {
                     1 + stats.wire_block_bytes()
@@ -362,6 +410,23 @@ impl Message {
                 out.extend_from_slice(&party.0.to_le_bytes());
                 out.extend_from_slice(&parties.to_le_bytes());
                 out.extend_from_slice(&codecs.to_le_bytes());
+            }
+            Message::Rejoin { party, parties, epoch, last_round, codecs } => {
+                out.push(REJOIN_VERSION);
+                out.extend_from_slice(&party.0.to_le_bytes());
+                out.extend_from_slice(&parties.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out.extend_from_slice(&last_round.to_le_bytes());
+                out.extend_from_slice(&codecs.to_le_bytes());
+            }
+            Message::RejoinAck { party, parties, epoch, resume_round,
+                                 replays } => {
+                out.push(REJOIN_VERSION);
+                out.extend_from_slice(&party.0.to_le_bytes());
+                out.extend_from_slice(&parties.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out.extend_from_slice(&resume_round.to_le_bytes());
+                out.extend_from_slice(&replays.to_le_bytes());
             }
             Message::Compressed { lane, stats, .. } => {
                 out.push(lane.tag());
@@ -444,6 +509,55 @@ impl Message {
                     Message::Join { party, parties, codecs }
                 } else {
                     Message::JoinAck { party, parties, codecs }
+                }
+            }
+            TAG_REJOIN | TAG_REJOIN_ACK => {
+                // Same discipline as Join: version first, ids second,
+                // both validated before the Message is constructed.
+                // The body is fixed-size, so no allocation rides on any
+                // of these fields.
+                let ver = r.u8()?;
+                if ver != REJOIN_VERSION {
+                    anyhow::bail!(
+                        "unsupported rejoin version {ver} (this build \
+                         speaks {REJOIN_VERSION})"
+                    );
+                }
+                let party = r.u16()?;
+                let parties = r.u16()?;
+                let epoch = r.u32()?;
+                let round_word = r.u64()?;
+                let trailer = r.u32()?;
+                if !(2..=MAX_PARTIES).contains(&parties) {
+                    anyhow::bail!(
+                        "rejoin frame declares a {parties}-party session \
+                         (valid: 2..={MAX_PARTIES})"
+                    );
+                }
+                if party == 0 || party >= parties {
+                    anyhow::bail!(
+                        "rejoin frame claims party id {party} in a \
+                         {parties}-party session (valid feature ids: \
+                         1..={})", parties - 1
+                    );
+                }
+                let party = PartyId(party);
+                if tag == TAG_REJOIN {
+                    Message::Rejoin {
+                        party,
+                        parties,
+                        epoch,
+                        last_round: round_word,
+                        codecs: trailer,
+                    }
+                } else {
+                    Message::RejoinAck {
+                        party,
+                        parties,
+                        epoch,
+                        resume_round: round_word,
+                        replays: trailer,
+                    }
                 }
             }
             TAG_COMP => {
@@ -804,12 +918,15 @@ mod tests {
         // statistics lanes, and `Hello` carries only a codec bitmask.
         // `Join`/`JoinAck` carry only session topology (ids, size) and
         // the `Hello` codec bitmask — no statistics at all.
+        // `Rejoin`/`RejoinAck` add only lifecycle scalars (epoch, round
+        // counters, replay count) on top of the same topology fields.
         let m = Message::Shutdown;
         match m {
             Message::Activation { .. } | Message::Derivative { .. }
             | Message::EvalActivation { .. } | Message::EvalAck { .. }
             | Message::Shutdown | Message::Hello { .. }
-            | Message::Join { .. } | Message::JoinAck { .. } => {}
+            | Message::Join { .. } | Message::JoinAck { .. }
+            | Message::Rejoin { .. } | Message::RejoinAck { .. } => {}
             Message::Compressed { lane, .. } => match lane {
                 Lane::Activation | Lane::Derivative
                 | Lane::EvalActivation => {}
@@ -1391,6 +1508,161 @@ mod bootstrap_tests {
         assert_eq!(Message::decode(&ok.encode()).unwrap(), ok);
     }
 
+    /// Golden fixtures for the re-admission handshake, captured at
+    /// introduction time: byte-for-byte drift in the `Rejoin` /
+    /// `RejoinAck` layout fails here. Tags 11/12 are fresh — disjoint
+    /// from every pre-existing tag (1..=10) — so no historic byte
+    /// stream can collide with them.
+    fn rejoin_fixtures() -> Vec<(&'static str, Message, &'static str)> {
+        vec![
+            (
+                "rejoin_p2_of_3_round_7",
+                Message::Rejoin {
+                    party: PartyId(2),
+                    parties: 3,
+                    epoch: 0x0102_0304,
+                    last_round: 7,
+                    codecs: 0x0f,
+                },
+                "0b 0000000000000000 01 0200 0300 04030201 \
+                 0700000000000000 0f000000",
+            ),
+            (
+                "rejoin_ack_p2_of_3_resume_9_one_replay",
+                Message::RejoinAck {
+                    party: PartyId(2),
+                    parties: 3,
+                    epoch: 0x0102_0304,
+                    resume_round: 9,
+                    replays: 1,
+                },
+                "0c 0000000000000000 01 0200 0300 04030201 \
+                 0900000000000000 01000000",
+            ),
+            (
+                "rejoin_p1_of_2_round_0",
+                Message::Rejoin {
+                    party: PartyId(1),
+                    parties: 2,
+                    epoch: 0,
+                    last_round: 0,
+                    codecs: 0,
+                },
+                "0b 0000000000000000 01 0100 0200 00000000 \
+                 0000000000000000 00000000",
+            ),
+            (
+                "rejoin_ack_p63_of_64_big_round",
+                Message::RejoinAck {
+                    party: PartyId(63),
+                    parties: 64,
+                    epoch: 0xffff_ffff,
+                    resume_round: 0x0102_0304_0506_0708,
+                    replays: 0,
+                },
+                "0c 0000000000000000 01 3f00 4000 ffffffff \
+                 0807060504030201 00000000",
+            ),
+        ]
+    }
+
+    #[test]
+    fn golden_rejoin_encode_is_byte_identical() {
+        for (name, msg, hex) in rejoin_fixtures() {
+            assert_eq!(msg.encode(), hex_to_bytes(hex),
+                       "encode drifted for fixture '{name}'");
+            assert_eq!(msg.wire_bytes(), msg.encode().len() + 4,
+                       "wire_bytes drifted for fixture '{name}'");
+        }
+    }
+
+    #[test]
+    fn golden_rejoin_decode_recovers_messages() {
+        for (name, msg, hex) in rejoin_fixtures() {
+            let dec = Message::decode(&hex_to_bytes(hex))
+                .unwrap_or_else(|e| panic!("fixture '{name}': {e}"));
+            assert_eq!(dec, msg, "decode drifted for fixture '{name}'");
+            // Re-admission frames travel headerless on the raw socket:
+            // decode_frame must take the v1 path and attach no envelope.
+            let (h, m) = decode_frame(&hex_to_bytes(hex)).unwrap();
+            assert_eq!(h, None, "rejoin fixture '{name}' grew a header");
+            assert_eq!(m, msg);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_rejoin_version() {
+        let good = Message::Rejoin {
+            party: PartyId(1),
+            parties: 3,
+            epoch: 9,
+            last_round: 4,
+            codecs: 0x0f,
+        }
+        .encode();
+        for bad_ver in [0u8, 2, 7, 255] {
+            let mut bent = good.clone();
+            bent[9] = bad_ver; // version byte follows tag + round
+            let e = Message::decode(&bent).unwrap_err().to_string();
+            assert!(e.contains("rejoin version"),
+                    "version {bad_ver}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_rejoin_ids() {
+        // Same refusal table as Join: the label id can never rejoin,
+        // ids must sit inside the declared session, and the session
+        // size itself is bounded by MAX_PARTIES.
+        for (party, parties) in [
+            (0u16, 3u16),
+            (3, 3),
+            (9, 3),
+            (1, 1),
+            (1, 0),
+            (1, MAX_PARTIES + 1),
+            (u16::MAX, MAX_PARTIES),
+        ] {
+            let frame = Message::Rejoin {
+                party: PartyId(party),
+                parties,
+                epoch: 0,
+                last_round: 0,
+                codecs: 0,
+            }
+            .encode();
+            assert!(Message::decode(&frame).is_err(),
+                    "rejoin ({party}, {parties}) decoded");
+        }
+        let ok = Message::Rejoin {
+            party: PartyId(MAX_PARTIES - 1),
+            parties: MAX_PARTIES,
+            epoch: 1,
+            last_round: 2,
+            codecs: 3,
+        };
+        assert_eq!(Message::decode(&ok.encode()).unwrap(), ok);
+    }
+
+    #[test]
+    fn rejoin_truncations_error_cleanly() {
+        let enc = Message::RejoinAck {
+            party: PartyId(2),
+            parties: 3,
+            epoch: 5,
+            resume_round: 6,
+            replays: 1,
+        }
+        .encode();
+        for cut in 0..enc.len() {
+            assert!(Message::decode(&enc[..cut]).is_err(),
+                    "truncation at {cut} decoded");
+        }
+        let mut trailing = enc;
+        trailing.push(0);
+        assert!(Message::decode(&trailing).is_err(), "trailing byte ok'd");
+    }
+
     #[test]
     fn join_truncations_error_cleanly() {
         let enc = Message::JoinAck {
@@ -1682,6 +1954,40 @@ mod fuzz_tests {
             if ver != JOIN_VERSION || !ids_ok {
                 prop_assert!(dec.is_err(),
                              "hostile join (ver {ver}, party {party}, \
+                              parties {parties}) decoded");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hostile_rejoin_frames_error_cleanly() {
+        // Hand-built Rejoin/RejoinAck frames with random versions and
+        // id pairs: decode must be total (Ok or Err, never a panic),
+        // must reject every wrong version, and must reject every
+        // (party, parties) pair outside the valid feature-id range —
+        // from the fixed-size header alone, before any allocation.
+        prop::check("hostile rejoin frames", |rng| {
+            let tag = if rng.next_f32() < 0.5 { 11u8 } else { 12u8 };
+            let ver = (rng.gen_range(4) as u8).wrapping_sub(1); // 255,0,1,2
+            let party = rng.next_u32() as u16;
+            let parties = rng.next_u32() as u16;
+            let mut frame = Vec::new();
+            frame.push(tag);
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes());
+            frame.push(ver);
+            frame.extend_from_slice(&party.to_le_bytes());
+            frame.extend_from_slice(&parties.to_le_bytes());
+            frame.extend_from_slice(&rng.next_u32().to_le_bytes()); // epoch
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes()); // round
+            frame.extend_from_slice(&rng.next_u32().to_le_bytes()); // trailer
+            let ids_ok = (2..=MAX_PARTIES).contains(&parties)
+                && party >= 1
+                && party < parties;
+            let dec = Message::decode(&frame);
+            if ver != REJOIN_VERSION || !ids_ok {
+                prop_assert!(dec.is_err(),
+                             "hostile rejoin (ver {ver}, party {party}, \
                               parties {parties}) decoded");
             }
             Ok(())

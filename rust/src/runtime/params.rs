@@ -64,6 +64,71 @@ impl ParamState {
         Ok(ParamState { params, accs, n })
     }
 
+    /// Export params + accumulators as host tensors, in spec order —
+    /// the trainable half of a label-party checkpoint (DESIGN.md §8).
+    pub fn export(&self) -> anyhow::Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let params = self
+            .params
+            .iter()
+            .map(super::convert::literal_to_tensor)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let accs = self
+            .accs
+            .iter()
+            .map(super::convert::literal_to_tensor)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok((params, accs))
+    }
+
+    /// Restore params + accumulators from host tensors (checkpoint
+    /// resume). Counts and per-parameter shapes must match the
+    /// initialized state — a snapshot from a different model fails
+    /// here, not deep inside an execute call.
+    pub fn import(&mut self, params: &[Tensor], accs: &[Tensor])
+                  -> anyhow::Result<()> {
+        anyhow::ensure!(
+            params.len() == self.n && accs.len() == self.n,
+            "checkpoint carries {} params / {} accs, model has {}",
+            params.len(), accs.len(), self.n
+        );
+        for (i, (t, lit)) in params.iter().zip(&self.params).enumerate() {
+            let dims: Vec<usize> = lit
+                .array_shape()?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            anyhow::ensure!(
+                t.shape == dims,
+                "checkpoint param {i} has shape {:?}, model wants {dims:?}",
+                t.shape
+            );
+        }
+        for (i, (t, lit)) in accs.iter().zip(&self.accs).enumerate() {
+            let dims: Vec<usize> = lit
+                .array_shape()?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            anyhow::ensure!(
+                t.shape == dims,
+                "checkpoint accumulator {i} has shape {:?}, model wants \
+                 {dims:?}",
+                t.shape
+            );
+        }
+        self.params = params
+            .iter()
+            .map(super::convert::tensor_to_literal)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        self.accs = accs
+            .iter()
+            .map(super::convert::tensor_to_literal)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(())
+    }
+
     /// Replace params+accs from the first 2n outputs of a step artifact.
     pub fn absorb(&mut self, outputs: &mut Vec<xla::Literal>) {
         debug_assert!(outputs.len() >= 2 * self.n);
@@ -115,6 +180,43 @@ mod tests {
         let vc = c.params[0].to_vec::<f32>().unwrap();
         assert_eq!(va, vb);
         assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn export_import_roundtrip_and_shape_checks() {
+        let specs = vec![
+            spec("w", vec![2, 2], InitKind::Glorot),
+            spec("b", vec![3], InitKind::Zeros),
+        ];
+        let a = ParamState::init(&specs, 5, 1).unwrap();
+        let (params, accs) = a.export().unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].shape, vec![2, 2]);
+        assert_eq!(accs[1].as_f32().unwrap(), &[ADAGRAD_INIT_ACC; 3]);
+        // Import into a differently-seeded state restores a's values.
+        let mut b = ParamState::init(&specs, 9, 1).unwrap();
+        assert_ne!(b.params[0].to_vec::<f32>().unwrap(),
+                   a.params[0].to_vec::<f32>().unwrap());
+        b.import(&params, &accs).unwrap();
+        assert_eq!(b.params[0].to_vec::<f32>().unwrap(),
+                   a.params[0].to_vec::<f32>().unwrap());
+        assert_eq!(b.accs[1].to_vec::<f32>().unwrap(),
+                   a.accs[1].to_vec::<f32>().unwrap());
+        // Wrong count and wrong shape are refused loudly — for the
+        // accumulators too, not just the params.
+        assert!(b.import(&params[..1], &accs[..1]).is_err());
+        let bad = vec![
+            Tensor::zeros_f32(vec![2, 3]),
+            Tensor::zeros_f32(vec![3]),
+        ];
+        let e = b.import(&bad, &accs).unwrap_err().to_string();
+        assert!(e.contains("shape"), "{e}");
+        let bad_accs = vec![
+            Tensor::zeros_f32(vec![2, 2]),
+            Tensor::zeros_f32(vec![4]),
+        ];
+        let e = b.import(&params, &bad_accs).unwrap_err().to_string();
+        assert!(e.contains("accumulator"), "{e}");
     }
 
     #[test]

@@ -34,18 +34,21 @@
 //! wire — while `parties > 2` promotes every link to v2 identity
 //! framing via [`TcpTransport::with_identity`].
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::compress;
 use crate::config::RunConfig;
 use crate::protocol::{decode_frame, encode_frame_into, Message};
-use crate::transport::tcp::{connect_with_backoff, TcpTransport};
+use crate::transport::tcp::{connect_with_backoff_jittered, TcpTransport};
 use crate::transport::Transport;
 
+use super::supervisor::session_epoch;
 use super::{inproc_star, Link, PartyId, LABEL_PARTY};
 
 /// Default time budget for a mesh to assemble. Generous because the
@@ -54,20 +57,30 @@ use super::{inproc_star, Link, PartyId, LABEL_PARTY};
 pub const DEFAULT_JOIN_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Hard cap on a bootstrap frame body. `Join`/`JoinAck` are fixed
-/// 18-byte bodies; anything longer is not a session peer, and the cap
-/// is checked before the body buffer is allocated (the hostile-header
-/// discipline of the protocol layer, applied to the socket read).
+/// 18-byte bodies and `Rejoin`/`RejoinAck` fixed 30-byte bodies;
+/// anything longer is not a session peer, and the cap is checked
+/// before the body buffer is allocated (the hostile-header discipline
+/// of the protocol layer, applied to the socket read).
 const MAX_BOOTSTRAP_FRAME: usize = 64;
 
 /// Poll interval of the accept loop while waiting for joiners.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
 
-/// Cap on how long `admit` waits for one connection's `Join` frame.
-/// The accept loop vets joiners serially, so this must be small: a
-/// connection that never speaks (health-check probe, port scanner)
-/// may stall the loop for at most this long, not the whole join
-/// window.
+/// Cap on how long one connection's `Join`/`Rejoin` frame read may
+/// take. Frame reads run on a bounded admit pool (see
+/// [`ADMIT_WORKERS`]), so a connection that never speaks (health-check
+/// probe, port scanner) ties up one pool slot for at most this long —
+/// never the accept loop itself.
 const JOIN_READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Bound on concurrently-vetted joiners. The accept loop used to vet
+/// serially, so at K=64 cold start one slow peer (or a stream of junk
+/// probes) amplified into a stalled bootstrap for everyone behind it;
+/// with a pool, up to this many frame reads run in parallel while the
+/// accept loop keeps accepting. Session-level validation (size
+/// agreement, duplicates) stays on the accept thread, where the joined
+/// map lives.
+const ADMIT_WORKERS: usize = 8;
 
 /// One way of bringing a party's mesh into existence. Implementations
 /// carry everything transport-specific (sockets, deadlines, pre-wired
@@ -115,13 +128,22 @@ impl MeshBootstrap for InprocBootstrap {
 pub fn inproc_mesh(cfg: &RunConfig)
                    -> (InprocBootstrap, Vec<InprocBootstrap>) {
     let (label_links, feature_links) = inproc_star(cfg);
+    // Both ends live in one process, so each peer's decodable codec
+    // mask is known structurally — the in-proc analogue of the
+    // Join/JoinAck mask exchange, letting coordinators pre-negotiate
+    // and skip the first-round Hello exactly like a TCP session.
+    let mask = compress::supported_mask();
     let features = feature_links
         .into_iter()
         .enumerate()
         .map(|(i, link)| InprocBootstrap {
             id: PartyId(i as u16 + 1),
-            links: vec![link],
+            links: vec![link.with_peer_codecs(mask)],
         })
+        .collect();
+    let label_links = label_links
+        .into_iter()
+        .map(|l| l.with_peer_codecs(mask))
         .collect();
     (InprocBootstrap { id: LABEL_PARTY, links: label_links }, features)
 }
@@ -129,10 +151,18 @@ pub fn inproc_mesh(cfg: &RunConfig)
 // ---- TCP: label side -------------------------------------------------------
 
 /// Label-party session server: bind once, accept K−1 identified
-/// connections, assemble the star mesh.
+/// connections, assemble the star mesh. In resume mode
+/// ([`Self::with_resume`]) the listener instead expects `Rejoin`
+/// frames from the parties of a checkpointed session; and via
+/// [`Self::establish_supervised`] it stays alive *after* bootstrap as
+/// the session's re-admission point ([`Readmission`]).
 pub struct SessionListener {
     listener: TcpListener,
     timeout: Duration,
+    /// `Some((epoch, resume_round))` when restarting from a checkpoint:
+    /// joiners must present `Rejoin` with this epoch and are acked with
+    /// this resume round.
+    resume: Option<(u32, u64)>,
 }
 
 impl SessionListener {
@@ -143,7 +173,11 @@ impl SessionListener {
         let listener = TcpListener::bind(addr).map_err(|e| {
             anyhow::anyhow!("binding session listener on {addr}: {e}")
         })?;
-        Ok(SessionListener { listener, timeout: DEFAULT_JOIN_TIMEOUT })
+        Ok(SessionListener {
+            listener,
+            timeout: DEFAULT_JOIN_TIMEOUT,
+            resume: None,
+        })
     }
 
     /// Replace the default join deadline.
@@ -152,36 +186,81 @@ impl SessionListener {
         self
     }
 
+    /// Restart mode: expect every party of checkpoint epoch `epoch` to
+    /// `Rejoin`, and ack each with `resume_round`. Fresh `Join`s are
+    /// refused (the dialer falls back to `Rejoin` automatically — see
+    /// [`SessionDialer::establish_resumable`]).
+    pub fn with_resume(mut self, epoch: u32, resume_round: u64) -> Self {
+        self.resume = Some((epoch, resume_round));
+        self
+    }
+
     /// The bound address (useful with port 0).
     pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Vet one accepted connection: read its `Join`, enforce the
-    /// session-level rules the codec cannot (size agreement, no
-    /// duplicates), ack it. Frame-level rules (version, id ranges) are
-    /// already enforced by `Message::decode` before this sees a
-    /// `Join` at all.
-    fn admit(mut stream: TcpStream, parties: u16,
-             joined: &BTreeMap<u16, TcpStream>, deadline: Instant)
-             -> anyhow::Result<(u16, TcpStream)> {
-        // Accepted sockets must not inherit the listener's
-        // non-blocking mode. The whole Join frame is bounded by
-        // JOIN_READ_TIMEOUT (not the remaining join window): the
-        // accept loop vets joiners serially, so a peer that connects
-        // but never speaks — or trickles bytes — may stall it for at
-        // most this long, never monopolize it.
-        stream.set_nonblocking(false)?;
-        let frame_deadline =
-            (Instant::now() + JOIN_READ_TIMEOUT).min(deadline);
-        let (party, claimed, codecs) =
-            match recv_bootstrap_frame(&mut stream, frame_deadline)? {
-                Message::Join { party, parties, codecs } => {
-                    (party, parties, codecs)
+    /// Session-level vetting of one decoded bootstrap frame: size
+    /// agreement, duplicates, fresh-vs-resumed mode, epoch. Returns the
+    /// admitted id, the peer's codec mask, and the ack to send.
+    /// Frame-level rules (version, id ranges) were already enforced by
+    /// `Message::decode` on the admit worker.
+    fn vet(msg: Message, parties: u16, resume: Option<(u32, u64)>,
+           joined: &BTreeMap<u16, (TcpStream, u32)>)
+           -> anyhow::Result<(PartyId, u32, Message)> {
+        let (party, claimed, codecs, ack) = match (msg, resume) {
+            (Message::Join { party, parties: claimed, codecs }, None) => {
+                let ack = Message::JoinAck {
+                    party,
+                    parties,
+                    codecs: compress::supported_mask(),
+                };
+                (party, claimed, codecs, ack)
+            }
+            (Message::Join { party, .. }, Some(_)) => anyhow::bail!(
+                "{party} sent a fresh Join but this session is resuming \
+                 from a checkpoint — the dialer must Rejoin (the \
+                 `celu-vfl party` dialer falls back automatically)"
+            ),
+            (Message::Rejoin { party, parties: claimed, epoch,
+                               last_round, codecs },
+             Some((want_epoch, resume_round))) => {
+                anyhow::ensure!(
+                    epoch == want_epoch,
+                    "{party} rejoined with session epoch {epoch:#x}, \
+                     this checkpoint is epoch {want_epoch:#x} — \
+                     different logical session (seed/config mismatch?)"
+                );
+                if last_round > resume_round {
+                    // A survivor of a label crash that happened after
+                    // the snapshot: it ran ahead of the checkpoint and
+                    // must rewind. The ack's resume round tells it
+                    // where to (the dialer rebuilds its deterministic
+                    // batch cursor); its model state keeps the extra
+                    // rounds' updates, which the staleness-tolerant
+                    // algorithm absorbs.
+                    log::info!(
+                        "{party} survived ahead of the checkpoint \
+                         ({last_round} completed rounds > resume \
+                         {resume_round}) — rewinding it"
+                    );
                 }
-                other => anyhow::bail!(
-                    "expected Join, got message tag {}", other.tag()),
-            };
+                let ack = Message::RejoinAck {
+                    party,
+                    parties,
+                    epoch,
+                    resume_round,
+                    replays: 0,
+                };
+                (party, claimed, codecs, ack)
+            }
+            (Message::Rejoin { party, .. }, None) => anyhow::bail!(
+                "{party} sent Rejoin but this listener hosts a fresh \
+                 session (no checkpoint) — expected Join"
+            ),
+            (other, _) => anyhow::bail!(
+                "expected Join, got message tag {}", other.tag()),
+        };
         anyhow::ensure!(
             claimed == parties,
             "{party} joined for a {claimed}-party session, this \
@@ -191,39 +270,32 @@ impl SessionListener {
             !joined.contains_key(&party.0),
             "duplicate join: {party} is already in the session"
         );
-        log::info!(
-            "session listener: {party} joined ({}/{} feature parties, \
-             codec mask {codecs:#x})",
-            joined.len() + 1,
-            parties - 1
-        );
-        send_bootstrap_frame(&mut stream, &Message::JoinAck {
-            party,
-            parties,
-            codecs: compress::supported_mask(),
-        })?;
-        Ok((party.0, stream))
-    }
-}
-
-impl MeshBootstrap for SessionListener {
-    fn id(&self) -> PartyId {
-        LABEL_PARTY
+        Ok((party, codecs, ack))
     }
 
-    /// Accept until ids 1..`cfg.parties` have all joined, then wrap
-    /// each socket into a [`TcpTransport`] (identity-framed when the
-    /// session spans more than two parties). A rejected joiner is
-    /// dropped — its dialer observes EOF instead of a `JoinAck` — and
+    /// Accept until ids 1..`cfg.parties` have all joined. Frame reads
+    /// run on a bounded admit pool ([`ADMIT_WORKERS`]): the accept
+    /// thread keeps accepting while up to that many joiners are vetted
+    /// concurrently, so one slow (or mute) peer no longer amplifies
+    /// into a serial stall for the whole cold start. A rejected joiner
+    /// is dropped — its dialer observes EOF instead of an ack — and
     /// the loop keeps serving; the deadline failure names exactly the
     /// ids still missing.
-    fn establish(self, cfg: &RunConfig) -> anyhow::Result<Vec<Link>> {
+    fn establish_streams(&self, cfg: &RunConfig)
+                         -> anyhow::Result<BTreeMap<u16, (TcpStream, u32)>>
+    {
         cfg.validate()?;
         let parties = cfg.parties as u16;
         let expected = parties - 1;
         let deadline = Instant::now() + self.timeout;
         self.listener.set_nonblocking(true)?;
-        let mut joined: BTreeMap<u16, TcpStream> = BTreeMap::new();
+        let mut joined: BTreeMap<u16, (TcpStream, u32)> = BTreeMap::new();
+        let active = Arc::new(AtomicUsize::new(0));
+        type AdmitResult = (SocketAddr,
+                            anyhow::Result<(Message, TcpStream)>);
+        let (result_tx, result_rx) = channel::<AdmitResult>();
+        let mut backlog: VecDeque<(TcpStream, SocketAddr)> =
+            VecDeque::new();
         while (joined.len() as u16) < expected {
             // Deadline check at the top of the loop, not only on idle:
             // a steady stream of junk connections keeps accept()
@@ -242,42 +314,353 @@ impl MeshBootstrap for SessionListener {
                     missing.join(", ")
                 );
             }
-            match self.listener.accept() {
-                Ok((stream, peer_addr)) => {
-                    match Self::admit(stream, parties, &joined, deadline) {
-                        Ok((id, stream)) => {
-                            joined.insert(id, stream);
-                        }
-                        Err(e) => log::warn!(
-                            "session listener: rejected {peer_addr}: {e:#}"
-                        ),
+            let mut progressed = false;
+            // 1. Accept everything currently pending.
+            loop {
+                match self.listener.accept() {
+                    Ok(pair) => {
+                        backlog.push_back(pair);
+                        progressed = true;
+                    }
+                    Err(e) if e.kind()
+                        == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => {
+                        return Err(anyhow::anyhow!(
+                            "session listener accept: {e}"
+                        ))
                     }
                 }
-                Err(e) if e.kind()
-                    == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(ACCEPT_POLL);
-                }
-                Err(e) => {
-                    return Err(anyhow::anyhow!(
-                        "session listener accept: {e}"
-                    ))
+            }
+            // 2. Dispatch to the admit pool while slots are free.
+            while active.load(Ordering::SeqCst) < ADMIT_WORKERS {
+                let Some((stream, addr)) = backlog.pop_front() else {
+                    break;
+                };
+                active.fetch_add(1, Ordering::SeqCst);
+                let tx = result_tx.clone();
+                let active = active.clone();
+                std::thread::spawn(move || {
+                    let res = read_join_frame(stream, deadline);
+                    active.fetch_sub(1, Ordering::SeqCst);
+                    let _ = tx.send((addr, res));
+                });
+                progressed = true;
+            }
+            // 3. Vet + ack completed reads (session-level rules live
+            //    here, with the joined map).
+            while let Ok((addr, res)) = result_rx.try_recv() {
+                progressed = true;
+                let admitted = res.and_then(|(msg, mut stream)| {
+                    let (party, codecs, ack) =
+                        Self::vet(msg, parties, self.resume, &joined)?;
+                    send_bootstrap_frame(&mut stream, &ack)?;
+                    Ok((party, codecs, stream))
+                });
+                match admitted {
+                    Ok((party, codecs, stream)) => {
+                        log::info!(
+                            "session listener: {party} joined ({}/{} \
+                             feature parties, codec mask {codecs:#x})",
+                            joined.len() + 1,
+                            expected
+                        );
+                        joined.insert(party.0, (stream, codecs));
+                    }
+                    Err(e) => log::warn!(
+                        "session listener: rejected {addr}: {e:#}"
+                    ),
                 }
             }
+            if !progressed {
+                std::thread::sleep(ACCEPT_POLL);
+            }
         }
-        let v2 = parties > 2;
+        Ok(joined)
+    }
+
+    /// Wrap admitted sockets into mesh links (identity-framed when the
+    /// session spans more than two parties), carrying each peer's
+    /// join-time codec mask so the coordinators can skip the
+    /// first-round `Hello` exchange.
+    fn wrap_links(cfg: &RunConfig,
+                  joined: BTreeMap<u16, (TcpStream, u32)>)
+                  -> anyhow::Result<Vec<Link>> {
+        let v2 = cfg.parties > 2;
         joined
             .into_iter()
-            .map(|(id, stream)| {
+            .map(|(id, (stream, codecs))| {
                 stream.set_read_timeout(None)?;
                 let peer = PartyId(id);
                 let mut t = TcpTransport::from_stream(stream, cfg.wan)?;
                 if v2 {
                     t = t.with_identity(LABEL_PARTY, peer);
                 }
-                Ok(Link { peer, transport: Arc::new(t) as Arc<dyn Transport> })
+                Ok(Link::new(peer, Arc::new(t) as Arc<dyn Transport>)
+                    .with_peer_codecs(codecs))
             })
             .collect()
     }
+
+    /// Establish the mesh and keep the listener alive as the session's
+    /// re-admission point: a feature party that drops mid-session can
+    /// re-dial and present `Rejoin` for the returned [`Readmission`]
+    /// to queue (DESIGN.md §8). Also returns the session epoch and the
+    /// round the session starts at (0 fresh; the checkpoint's round in
+    /// resume mode).
+    pub fn establish_supervised(self, cfg: &RunConfig)
+                                -> anyhow::Result<(Vec<Link>, Readmission,
+                                                   u32, u64)> {
+        let (epoch, start_round) = match self.resume {
+            Some((e, r)) => (e, r),
+            None => (session_epoch(cfg.seed), 0),
+        };
+        let joined = self.establish_streams(cfg)?;
+        let links = Self::wrap_links(cfg, joined)?;
+        let readmission = Readmission::spawn(
+            self.listener, cfg.parties as u16, epoch)?;
+        Ok((links, readmission, epoch, start_round))
+    }
+}
+
+/// Read one connection's opening bootstrap frame on an admit worker.
+fn read_join_frame(mut stream: TcpStream, deadline: Instant)
+                   -> anyhow::Result<(Message, TcpStream)> {
+    // Accepted sockets must not inherit the listener's non-blocking
+    // mode. The whole frame read is bounded by JOIN_READ_TIMEOUT (not
+    // the remaining join window): a peer that never speaks — or
+    // trickles bytes — ties up one pool slot for at most this long.
+    stream.set_nonblocking(false)?;
+    let frame_deadline = (Instant::now() + JOIN_READ_TIMEOUT).min(deadline);
+    let msg = recv_bootstrap_frame(&mut stream, frame_deadline)?;
+    Ok((msg, stream))
+}
+
+impl MeshBootstrap for SessionListener {
+    fn id(&self) -> PartyId {
+        LABEL_PARTY
+    }
+
+    /// Bootstrap-only establish: assemble the mesh and drop the
+    /// listener (no re-admission point). [`Self::establish_supervised`]
+    /// is the lifecycle-aware variant.
+    fn establish(self, cfg: &RunConfig) -> anyhow::Result<Vec<Link>> {
+        let joined = self.establish_streams(cfg)?;
+        Self::wrap_links(cfg, joined)
+    }
+}
+
+// ---- re-admission ----------------------------------------------------------
+
+/// A validated `Rejoin` dial waiting for the label loop to swap it in.
+pub struct RejoinRequest {
+    pub party: PartyId,
+    /// Communication rounds the dialer completed before the drop.
+    pub last_round: u64,
+    /// The dialer's decodable codec mask (advisory; the lane keeps its
+    /// originally-negotiated codec).
+    pub codecs: u32,
+    /// The raw socket, positioned right after the `Rejoin` frame. The
+    /// `RejoinAck` and the transport wrap happen at the consumer, where
+    /// lane state lives.
+    pub stream: TcpStream,
+}
+
+/// The session's re-admission point: the bootstrap listener kept alive
+/// after `establish`, accepting `Rejoin` dials on a background thread.
+/// Frame/epoch validation happens on that thread; session-level checks
+/// (known lane, sane round claim) happen wherever requests are consumed
+/// ([`try_take`](Self::try_take) — the supervised label loop polls it
+/// between rounds and inside straggler waits). Dropped on shutdown,
+/// which stops the thread.
+pub struct Readmission {
+    rx: Mutex<Receiver<RejoinRequest>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Readmission {
+    /// Keep `listener` serving `Rejoin`s for a `parties`-party session
+    /// of logical epoch `epoch`.
+    pub fn spawn(listener: TcpListener, parties: u16, epoch: u32)
+                 -> anyhow::Result<Readmission> {
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let (tx, rx) = channel::<RejoinRequest>();
+        let handle = std::thread::Builder::new()
+            .name("session-readmission".into())
+            .spawn(move || readmission_loop(listener, parties, epoch,
+                                            stop_t, tx))?;
+        Ok(Readmission {
+            rx: Mutex::new(rx),
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Next pending rejoin, if any (non-blocking).
+    pub fn try_take(&self) -> Option<RejoinRequest> {
+        self.rx.lock().unwrap().try_recv().ok()
+    }
+}
+
+impl Drop for Readmission {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bound on concurrently-vetted re-admission dials: the same
+/// serial-stall argument as [`ADMIT_WORKERS`], applied to the whole
+/// session lifetime — a mute probe must tie up one short-lived vetting
+/// thread for [`JOIN_READ_TIMEOUT`], never the accept loop a genuine
+/// rejoiner is queued behind. At the cap further connections are
+/// dropped (EOF) rather than queued: rejoiners retry via their
+/// backoff, probes don't get to build a backlog.
+const READMIT_WORKERS: usize = 4;
+
+fn readmission_loop(listener: TcpListener, parties: u16, epoch: u32,
+                    stop: Arc<AtomicBool>, tx: Sender<RejoinRequest>) {
+    let active = Arc::new(AtomicUsize::new(0));
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                if active.load(Ordering::SeqCst) >= READMIT_WORKERS {
+                    log::warn!(
+                        "re-admission: dropping {addr} — all \
+                         {READMIT_WORKERS} vetting slots busy"
+                    );
+                    continue; // drop → dialer sees EOF and retries
+                }
+                active.fetch_add(1, Ordering::SeqCst);
+                let active = active.clone();
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let vetted = vet_rejoin_dial(stream, parties, epoch);
+                    active.fetch_sub(1, Ordering::SeqCst);
+                    match vetted {
+                        Ok(req) => {
+                            log::info!(
+                                "re-admission: {} queued (last round \
+                                 {})", req.party, req.last_round
+                            );
+                            let _ = tx.send(req);
+                        }
+                        Err(e) => log::warn!(
+                            "re-admission: rejected {addr}: {e:#}"
+                        ),
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                log::warn!("re-admission accept: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// Frame + session-identity vetting of one re-admission dial (runs on
+/// a short-lived vetting thread; lane-level checks happen at the
+/// consumer).
+fn vet_rejoin_dial(stream: TcpStream, parties: u16, epoch: u32)
+                   -> anyhow::Result<RejoinRequest> {
+    let (msg, stream) =
+        read_join_frame(stream, Instant::now() + JOIN_READ_TIMEOUT)?;
+    let Message::Rejoin { party, parties: claimed, epoch: e, last_round,
+                          codecs } = msg
+    else {
+        anyhow::bail!(
+            "expected Rejoin on the re-admission socket, got message \
+             tag {}", msg.tag()
+        );
+    };
+    anyhow::ensure!(
+        claimed == parties,
+        "{party} rejoined for a {claimed}-party session, this session \
+         has {parties} parties"
+    );
+    anyhow::ensure!(
+        e == epoch,
+        "{party} rejoined with epoch {e:#x}, this session is epoch \
+         {epoch:#x} — different logical session"
+    );
+    Ok(RejoinRequest { party, last_round, codecs, stream })
+}
+
+/// Re-dial a running (or restarted) session and resume a lane: connect
+/// with the party's deterministically-jittered backoff (a mass
+/// reconnect after a label blip must not thundering-herd the
+/// listener), present `Rejoin`, verify the `RejoinAck` echo, wrap the
+/// socket. Returns the fresh transport, the round the lane resumes at,
+/// and how many buffered derivative frames the label will replay first.
+pub fn rejoin_dial(addr: &str, party: PartyId, cfg: &RunConfig,
+                   epoch: u32, last_round: u64, timeout: Duration)
+                   -> anyhow::Result<(Arc<dyn Transport>, u64, u32)> {
+    let parties = cfg.parties as u16;
+    anyhow::ensure!(
+        party.0 >= 1 && party.0 < parties,
+        "feature party id {party} out of range for a {parties}-party \
+         session"
+    );
+    let deadline = Instant::now() + timeout;
+    let mut stream =
+        connect_with_backoff_jittered(addr, deadline,
+                                      Some(party.0 as u64))
+            .map_err(|e| anyhow::anyhow!(
+                "{party}: label party at {addr} never came back: {e:#}"
+            ))?;
+    send_bootstrap_frame(&mut stream, &Message::Rejoin {
+        party,
+        parties,
+        epoch,
+        last_round,
+        codecs: compress::supported_mask(),
+    })?;
+    let ack = recv_bootstrap_frame(&mut stream, deadline).map_err(|e| {
+        anyhow::anyhow!(
+            "{party}: no RejoinAck from the label party at {addr} — \
+             the rejoin was refused (wrong epoch? unknown lane?) or \
+             the label died again: {e:#}"
+        )
+    })?;
+    let (p, acked, e, resume_round, replays) = match ack {
+        Message::RejoinAck { party, parties, epoch, resume_round,
+                             replays } => {
+            (party, parties, epoch, resume_round, replays)
+        }
+        other => anyhow::bail!(
+            "{party}: expected RejoinAck, got message tag {}",
+            other.tag()
+        ),
+    };
+    anyhow::ensure!(p == party,
+                    "label party acked {p}, but this process rejoined \
+                     as {party}");
+    anyhow::ensure!(acked == parties,
+                    "session size mismatch on rejoin: label hosts \
+                     {acked}, this config says {parties}");
+    anyhow::ensure!(e == epoch,
+                    "label acked epoch {e:#x}, expected {epoch:#x}");
+    stream.set_read_timeout(None)?;
+    let mut t = TcpTransport::from_stream(stream, cfg.wan)?;
+    if parties > 2 {
+        t = t.with_identity(party, LABEL_PARTY);
+    }
+    log::info!(
+        "{party} rejoined the session at {addr}: resume round \
+         {resume_round}, {replays} replays"
+    );
+    Ok((Arc::new(t) as Arc<dyn Transport>, resume_round, replays))
 }
 
 // ---- TCP: feature side -----------------------------------------------------
@@ -307,23 +690,20 @@ impl SessionDialer {
     }
 }
 
-impl MeshBootstrap for SessionDialer {
-    fn id(&self) -> PartyId {
-        self.party
-    }
-
-    fn establish(self, cfg: &RunConfig) -> anyhow::Result<Vec<Link>> {
-        cfg.validate()?;
+impl SessionDialer {
+    /// One `Join` attempt against a fresh session, bounded by
+    /// `deadline`. On success the link carries the label party's
+    /// join-time codec mask, so the coordinator can pre-negotiate and
+    /// skip the first-round `Hello` exchange.
+    fn try_join(&self, cfg: &RunConfig, deadline: Instant)
+                -> anyhow::Result<Link> {
         let parties = cfg.parties as u16;
-        anyhow::ensure!(
-            self.party.0 >= 1 && self.party.0 < parties,
-            "feature party id {} out of range for a {parties}-party \
-             session (valid: 1..={})",
-            self.party,
-            parties - 1
-        );
-        let deadline = Instant::now() + self.timeout;
-        let mut stream = connect_with_backoff(&self.addr, deadline)
+        // Deterministic per-party jitter on the connect backoff: after
+        // a label-party blip every dialer retries at once, and without
+        // jitter their schedules are phase-locked into a thundering
+        // herd (see `transport::tcp::backoff_jitter`).
+        let mut stream = connect_with_backoff_jittered(
+            &self.addr, deadline, Some(self.party.0 as u64))
             .map_err(|e| anyhow::anyhow!(
                 "{}: label party at {} never came up: {e:#}",
                 self.party, self.addr
@@ -333,14 +713,14 @@ impl MeshBootstrap for SessionDialer {
             parties,
             codecs: compress::supported_mask(),
         })?;
-        // The ack may legitimately take a while (the listener vets
-        // joiners serially), so it gets the whole remaining window —
-        // but bounded end to end, not per read.
+        // The ack may legitimately take a while (the admit pool is
+        // bounded), so it gets the whole remaining window — but
+        // bounded end to end, not per read.
         let ack = recv_bootstrap_frame(&mut stream, deadline).map_err(|e| {
             anyhow::anyhow!(
                 "{}: no JoinAck from the label party at {} — the join \
-                 was rejected (duplicate id? config mismatch?) or the \
-                 listener died: {e:#}",
+                 was rejected (duplicate id? config mismatch? resumed \
+                 session expecting Rejoin?) or the listener died: {e:#}",
                 self.party, self.addr
             )
         })?;
@@ -373,18 +753,104 @@ impl MeshBootstrap for SessionDialer {
         if parties > 2 {
             t = t.with_identity(self.party, LABEL_PARTY);
         }
-        Ok(vec![Link {
-            peer: LABEL_PARTY,
-            transport: Arc::new(t) as Arc<dyn Transport>,
-        }])
+        Ok(Link::new(LABEL_PARTY, Arc::new(t) as Arc<dyn Transport>)
+            .with_peer_codecs(codecs))
+    }
+
+    /// Join a session that may be fresh *or* restarting from a
+    /// checkpoint: try `Join` first, and when the listener refuses it
+    /// (a resumed session drops fresh joins pre-ack), retry as a
+    /// zero-round `Rejoin`. Returns the link plus the round this party
+    /// starts at (0 fresh; the checkpoint's resume round otherwise —
+    /// the caller fast-forwards its batch cursor there).
+    pub fn establish_resumable(self, cfg: &RunConfig)
+                               -> anyhow::Result<(Link, u64)> {
+        cfg.validate()?;
+        self.check_range(cfg)?;
+        let deadline = Instant::now() + self.timeout;
+        let join_err = match self.try_join(cfg, deadline) {
+            Ok(link) => return Ok((link, 0)),
+            Err(e) => e,
+        };
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(join_err);
+        }
+        log::warn!(
+            "{}: Join refused ({join_err:#}); retrying as Rejoin in \
+             case the label party resumed from a checkpoint",
+            self.party
+        );
+        let epoch = session_epoch(cfg.seed);
+        let (transport, resume_round, replays) =
+            rejoin_dial(&self.addr, self.party, cfg, epoch, 0, remaining)
+                .map_err(|rejoin_err| anyhow::anyhow!(
+                    "{}: both bootstrap paths failed — Join: \
+                     {join_err:#}; Rejoin: {rejoin_err:#}", self.party
+                ))?;
+        // A *live* (non-checkpoint-resumed) session may admit this
+        // zero-round Rejoin through its re-admission point and replay
+        // the round-0 derivative if it is still buffered; a fresh
+        // process has no in-flight round to apply it to, so discard.
+        for _ in 0..replays {
+            let m = transport.recv().map_err(|e| anyhow::anyhow!(
+                "{}: reading replayed frame after rejoin: {e:#}",
+                self.party
+            ))?;
+            log::warn!(
+                "{}: discarding replayed frame (tag {}) — this process \
+                 has no in-flight round", self.party, m.tag()
+            );
+        }
+        if resume_round > 0 {
+            log::warn!(
+                "{}: re-entering the session at round {resume_round} \
+                 with freshly initialized local state — feature-side \
+                 model state is not checkpointed (see ROADMAP), so \
+                 this party's bottom model restarts from init",
+                self.party
+            );
+        }
+        // A rejoin ack carries no codec mask; the epoch check already
+        // proved the session shares this config's seed, and sessions
+        // are deployed from one build, so the peer's decodable families
+        // are taken to be this build's own.
+        Ok((Link::new(LABEL_PARTY, transport)
+                .with_peer_codecs(compress::supported_mask()),
+            resume_round))
+    }
+
+    fn check_range(&self, cfg: &RunConfig) -> anyhow::Result<()> {
+        let parties = cfg.parties as u16;
+        anyhow::ensure!(
+            self.party.0 >= 1 && self.party.0 < parties,
+            "feature party id {} out of range for a {parties}-party \
+             session (valid: 1..={})",
+            self.party,
+            parties - 1
+        );
+        Ok(())
+    }
+}
+
+impl MeshBootstrap for SessionDialer {
+    fn id(&self) -> PartyId {
+        self.party
+    }
+
+    fn establish(self, cfg: &RunConfig) -> anyhow::Result<Vec<Link>> {
+        cfg.validate()?;
+        self.check_range(cfg)?;
+        let deadline = Instant::now() + self.timeout;
+        Ok(vec![self.try_join(cfg, deadline)?])
     }
 }
 
 // ---- raw-socket frame I/O --------------------------------------------------
 
 /// Write one headerless (v1) frame to a raw bootstrap socket.
-fn send_bootstrap_frame(stream: &mut TcpStream, msg: &Message)
-                        -> anyhow::Result<()> {
+pub(crate) fn send_bootstrap_frame(stream: &mut TcpStream, msg: &Message)
+                                   -> anyhow::Result<()> {
     let mut buf = Vec::with_capacity(msg.wire_bytes());
     encode_frame_into(None, msg, &mut buf);
     stream.write_all(&buf)?;
@@ -428,8 +894,9 @@ fn read_exact_deadline(stream: &mut TcpStream, buf: &mut [u8],
 /// [`MAX_BOOTSTRAP_FRAME`] *before* the body buffer is allocated: a
 /// peer that opens with a multi-MiB length (or any non-bootstrap
 /// traffic) is refused by arithmetic alone.
-fn recv_bootstrap_frame(stream: &mut TcpStream, deadline: Instant)
-                        -> anyhow::Result<Message> {
+pub(crate) fn recv_bootstrap_frame(stream: &mut TcpStream,
+                                   deadline: Instant)
+                                   -> anyhow::Result<Message> {
     let mut len_buf = [0u8; 4];
     read_exact_deadline(stream, &mut len_buf, deadline)
         .map_err(|e| anyhow::anyhow!("reading bootstrap frame: {e:#}"))?;
@@ -715,6 +1182,231 @@ mod tests {
                 .establish(&cfg);
             assert!(e.is_err(), "party {bad} dialed");
         }
+    }
+
+    #[test]
+    fn parallel_admit_survives_a_wave_of_mute_probes() {
+        // Satellite contract (ROADMAP "bootstrap hardening"): frame
+        // reads run on a bounded pool, so a wave of mute connections
+        // ahead of the real dialers costs ONE JOIN_READ_TIMEOUT in
+        // parallel, not one per probe in series. With ADMIT_WORKERS=8
+        // probes and a 4-feature session under an 8 s deadline, the
+        // old serial loop would burn 8 × 2 s before admitting anyone
+        // and time out; the pool admits everyone with seconds to
+        // spare — the test only has to assert success.
+        let cfg = cfg_with_parties(5);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(8));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        // Fill every admit slot with a mute probe (half a length word,
+        // then silence), held open so the slots stay busy.
+        let mut probes = Vec::new();
+        for _ in 0..8 {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(&[0x08]).unwrap();
+            probes.push(s);
+        }
+        std::thread::sleep(Duration::from_millis(200));
+        // The real mesh dials behind the wave.
+        let dialers: Vec<_> = (1u16..=4)
+            .map(|p| {
+                let addr = addr.clone();
+                std::thread::spawn(move || raw_join(&addr, p, 5))
+            })
+            .collect();
+        for d in dialers {
+            let (_s, ack) = d.join().unwrap().unwrap();
+            assert!(matches!(ack, Message::JoinAck { .. }));
+        }
+        let links = label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 4);
+        drop(probes);
+    }
+
+    #[test]
+    fn join_time_masks_ride_on_the_links() {
+        // Satellite contract: the Join/JoinAck codec bitmasks are not
+        // just validated — they surface on the Link so coordinators can
+        // pre-negotiate and skip the first-round Hello exchange.
+        let cfg = cfg_with_parties(2);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        let feature_links = SessionDialer::new(&addr, PartyId(1))
+            .with_timeout(Duration::from_secs(10))
+            .establish(&cfg)
+            .unwrap();
+        assert_eq!(feature_links[0].peer_codecs,
+                   Some(compress::supported_mask()));
+        let label_links = label.join().unwrap().unwrap();
+        assert_eq!(label_links[0].peer_codecs,
+                   Some(compress::supported_mask()));
+        // The in-proc mesh carries the same structural knowledge.
+        let (label_bs, feature_bs) = inproc_mesh(&cfg);
+        assert!(label_bs.links[0].peer_codecs.is_some());
+        assert!(feature_bs[0].links[0].peer_codecs.is_some());
+        // A raw star (no bootstrap) stays mask-less: in-band Hello.
+        let (raw_label, _raw_features) = inproc_star(&cfg);
+        assert_eq!(raw_label[0].peer_codecs, None);
+    }
+
+    /// Raw-socket rejoiner: sends `Rejoin`, returns the ack or error.
+    fn raw_rejoin(addr: &str, party: u16, parties: u16, epoch: u32,
+                  last_round: u64)
+                  -> anyhow::Result<(TcpStream, Message)> {
+        let mut s = TcpStream::connect(addr)?;
+        send_bootstrap_frame(&mut s, &Message::Rejoin {
+            party: PartyId(party),
+            parties,
+            epoch,
+            last_round,
+            codecs: compress::supported_mask(),
+        })?;
+        let ack = recv_bootstrap_frame(
+            &mut s, Instant::now() + Duration::from_secs(5))?;
+        Ok((s, ack))
+    }
+
+    #[test]
+    fn resumed_listener_accepts_rejoin_and_refuses_fresh_join() {
+        let cfg = cfg_with_parties(3);
+        let epoch = session_epoch(cfg.seed);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10))
+            .with_resume(epoch, 7);
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        // 1. A fresh Join is refused (EOF, no ack).
+        assert!(raw_join(&addr, 1, 3).is_err(),
+                "fresh join acked by a resumed session");
+        // 2. A wrong-epoch Rejoin is refused.
+        assert!(raw_rejoin(&addr, 1, 3, epoch ^ 1, 3).is_err(),
+                "wrong-epoch rejoin acked");
+        // 3. Valid rejoins are acked with the checkpoint's resume round
+        //    and zero replays — including a survivor that ran AHEAD of
+        //    the checkpoint (P1 claims 9 > 7): it is admitted and the
+        //    echoed resume round tells it to rewind.
+        for (p, last_round) in [(1u16, 9u64), (2, 3)] {
+            let (_s, ack) =
+                raw_rejoin(&addr, p, 3, epoch, last_round).unwrap();
+            match ack {
+                Message::RejoinAck { party, parties, epoch: e,
+                                     resume_round, replays } => {
+                    assert_eq!(party, PartyId(p));
+                    assert_eq!(parties, 3);
+                    assert_eq!(e, epoch);
+                    assert_eq!(resume_round, 7);
+                    assert_eq!(replays, 0);
+                }
+                other => panic!("expected RejoinAck, got tag {}",
+                                other.tag()),
+            }
+        }
+        let links = label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 2);
+    }
+
+    #[test]
+    fn dialer_falls_back_to_rejoin_on_a_resumed_session() {
+        let cfg = cfg_with_parties(2);
+        let epoch = session_epoch(cfg.seed);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10))
+            .with_resume(epoch, 5);
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        let (link, start_round) = SessionDialer::new(&addr, PartyId(1))
+            .with_timeout(Duration::from_secs(10))
+            .establish_resumable(&cfg)
+            .unwrap();
+        assert_eq!(start_round, 5,
+                   "dialer must learn the checkpoint's resume round");
+        assert_eq!(link.peer, LABEL_PARTY);
+        assert!(link.peer_codecs.is_some());
+        let links = label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 1);
+    }
+
+    #[test]
+    fn readmission_queues_valid_rejoins_and_rejects_strangers() {
+        let cfg = cfg_with_parties(2);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish_supervised(&cfg)
+        });
+        let _feature = SessionDialer::new(&addr, PartyId(1))
+            .with_timeout(Duration::from_secs(10))
+            .establish(&cfg)
+            .unwrap();
+        let (links, readmission, epoch, start_round) =
+            label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 1);
+        assert_eq!(start_round, 0);
+        assert_eq!(epoch, session_epoch(cfg.seed));
+        assert!(readmission.try_take().is_none());
+        // A wrong-epoch dial is rejected on the re-admission thread:
+        // the socket is dropped, nothing is queued.
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            send_bootstrap_frame(&mut s, &Message::Rejoin {
+                party: PartyId(1),
+                parties: 2,
+                epoch: epoch ^ 0xdead,
+                last_round: 0,
+                codecs: 0,
+            })
+            .unwrap();
+            assert!(recv_bootstrap_frame(
+                        &mut s, Instant::now() + Duration::from_secs(3))
+                    .is_err(),
+                    "stranger epoch acked");
+        }
+        assert!(readmission.try_take().is_none());
+        // A valid Rejoin is queued with its claim intact. (The ack is
+        // the consumer's job — the supervised label loop — so the raw
+        // socket sees silence here, not an ack.)
+        let mut s = TcpStream::connect(&addr).unwrap();
+        send_bootstrap_frame(&mut s, &Message::Rejoin {
+            party: PartyId(1),
+            parties: 2,
+            epoch,
+            last_round: 4,
+            codecs: 0x0f,
+        })
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let req = loop {
+            if let Some(r) = readmission.try_take() {
+                break r;
+            }
+            assert!(Instant::now() < deadline, "rejoin never queued");
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        assert_eq!(req.party, PartyId(1));
+        assert_eq!(req.last_round, 4);
+        assert_eq!(req.codecs, 0x0f);
     }
 
     #[test]

@@ -1,0 +1,468 @@
+//! Label-party checkpoint/restart: versioned binary session snapshots
+//! (DESIGN.md §8).
+//!
+//! A [`SessionSnapshot`] captures everything the label party needs to
+//! restart a session that dialers can `Rejoin`: the logical-session
+//! epoch, the next communication round, the session size, the codec
+//! negotiated per link (so a resumed session keeps each peer's wire
+//! format without re-running any handshake), and the label party's
+//! trainable state (params + AdaGrad accumulators) as plain tensors.
+//!
+//! Snapshot layout (little-endian, `ckpt_round_<round>.celuckpt`):
+//!   `"CELU"` `[u16 version=1]` `[u32 epoch]` `[u64 round]`
+//!   `[u16 parties]` `[u16 n_links]` n_links × `[u16 peer][u8 codec][u32 param]`
+//!   `[u32 n_params]` tensors… `[u32 n_accs]` tensors… `[u64 fnv1a]`
+//! where each tensor is `[u8 dtype][u8 ndim][u32 dim…][payload]` (the
+//! wire tensor layout) and the trailing word is the FNV-1a 64 hash of
+//! every preceding byte — a truncated or bit-flipped snapshot fails
+//! before any state is restored. Decoding applies the protocol layer's
+//! hostile-header discipline: dimension products are overflow-checked
+//! and every length is validated against the remaining buffer *before*
+//! the payload allocation it implies.
+
+use std::collections::BTreeSet;
+
+use crate::compress::CodecKind;
+use crate::session::{PartyId, MAX_PARTIES};
+use crate::tensor::{Data, DType, Tensor};
+
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// File magic.
+const MAGIC: &[u8; 4] = b"CELU";
+
+/// Hard cap on a decoded tensor's element count (1 Gi elements = 4 GiB
+/// payload): a corrupt header is refused by arithmetic, not by an
+/// attempted allocation.
+const MAX_TENSOR_ELEMS: usize = 1 << 30;
+
+/// The codec negotiated on one activation lane at snapshot time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkCodecState {
+    pub peer: PartyId,
+    pub codec: CodecKind,
+}
+
+/// A restartable label-party snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    /// Logical-session epoch (`supervisor::session_epoch`): a `Rejoin`
+    /// into the restarted session must echo this.
+    pub epoch: u32,
+    /// The next communication round the resumed session runs.
+    pub round: u64,
+    /// Session size the snapshot was taken under.
+    pub parties: u16,
+    /// Per-link codec state, one entry per feature lane.
+    pub links: Vec<LinkCodecState>,
+    /// Label-party trainable parameters, in manifest order.
+    pub params: Vec<Tensor>,
+    /// AdaGrad accumulators, aligned with `params`.
+    pub accs: Vec<Tensor>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn encode_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.push(t.dtype().code());
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    match &t.data {
+        Data::F32(v) => {
+            for x in v.iter() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Data::I32(v) => {
+            for x in v.iter() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("snapshot offset overflow"))?;
+        anyhow::ensure!(end <= self.buf.len(), "truncated snapshot");
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn decode_tensor(r: &mut Reader) -> anyhow::Result<Tensor> {
+    let dtype = DType::from_code(r.u8()?)?;
+    let ndim = r.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.u32()? as usize);
+    }
+    // Overflow-checked element count, bounded BEFORE the payload read
+    // sizes an allocation.
+    let n: usize = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("snapshot tensor shape overflow"))?;
+    anyhow::ensure!(
+        n <= MAX_TENSOR_ELEMS,
+        "snapshot tensor of {n} elements exceeds the {MAX_TENSOR_ELEMS} \
+         cap"
+    );
+    let payload = r.take(
+        n.checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("snapshot tensor size overflow"))?,
+    )?;
+    Ok(match dtype {
+        DType::F32 => Tensor::f32(
+            shape,
+            payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect::<Vec<_>>(),
+        ),
+        DType::I32 => Tensor::i32(
+            shape,
+            payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect::<Vec<_>>(),
+        ),
+    })
+}
+
+impl SessionSnapshot {
+    /// Serialize to the versioned binary layout (checksum included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.parties.to_le_bytes());
+        out.extend_from_slice(&(self.links.len() as u16).to_le_bytes());
+        for l in &self.links {
+            out.extend_from_slice(&l.peer.0.to_le_bytes());
+            out.push(l.codec.code());
+            out.extend_from_slice(&l.codec.param().to_le_bytes());
+        }
+        out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for t in &self.params {
+            encode_tensor(&mut out, t);
+        }
+        out.extend_from_slice(&(self.accs.len() as u32).to_le_bytes());
+        for t in &self.accs {
+            encode_tensor(&mut out, t);
+        }
+        let h = fnv1a(&out);
+        out.extend_from_slice(&h.to_le_bytes());
+        out
+    }
+
+    /// Decode and validate a snapshot buffer.
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            buf.len() >= MAGIC.len() + 2 + 8,
+            "snapshot too short ({} bytes)", buf.len()
+        );
+        anyhow::ensure!(
+            &buf[..4] == MAGIC,
+            "not a CELU checkpoint (bad magic)"
+        );
+        // Checksum over everything except the trailing hash word.
+        let body = &buf[..buf.len() - 8];
+        let stored =
+            u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+        let computed = fnv1a(body);
+        anyhow::ensure!(
+            stored == computed,
+            "snapshot checksum mismatch (stored {stored:#018x}, \
+             computed {computed:#018x}) — truncated or corrupt file"
+        );
+        let mut r = Reader { buf: body, pos: MAGIC.len() };
+        let version = r.u16()?;
+        anyhow::ensure!(
+            version == SNAPSHOT_VERSION,
+            "unsupported snapshot version {version} (this build reads \
+             {SNAPSHOT_VERSION})"
+        );
+        let epoch = r.u32()?;
+        let round = r.u64()?;
+        let parties = r.u16()?;
+        anyhow::ensure!(
+            (2..=MAX_PARTIES).contains(&parties),
+            "snapshot declares a {parties}-party session \
+             (valid: 2..={MAX_PARTIES})"
+        );
+        let n_links = r.u16()? as usize;
+        anyhow::ensure!(
+            n_links == parties as usize - 1,
+            "snapshot carries {n_links} link states for a \
+             {parties}-party session"
+        );
+        let mut links = Vec::with_capacity(n_links);
+        let mut seen = BTreeSet::new();
+        for _ in 0..n_links {
+            let peer = r.u16()?;
+            anyhow::ensure!(
+                peer >= 1 && peer < parties,
+                "snapshot link peer {peer} out of range \
+                 (valid feature ids: 1..={})", parties - 1
+            );
+            anyhow::ensure!(
+                seen.insert(peer),
+                "snapshot has duplicate link state for P{peer}"
+            );
+            let code = r.u8()?;
+            let param = r.u32()?;
+            links.push(LinkCodecState {
+                peer: PartyId(peer),
+                codec: CodecKind::from_wire(code, param)?,
+            });
+        }
+        let n_params = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n_params.min(1 << 16));
+        for _ in 0..n_params {
+            params.push(decode_tensor(&mut r)?);
+        }
+        let n_accs = r.u32()? as usize;
+        anyhow::ensure!(
+            n_accs == n_params,
+            "snapshot has {n_accs} accumulators for {n_params} params"
+        );
+        let mut accs = Vec::with_capacity(n_accs.min(1 << 16));
+        for _ in 0..n_accs {
+            accs.push(decode_tensor(&mut r)?);
+        }
+        anyhow::ensure!(
+            r.pos == body.len(),
+            "trailing bytes in snapshot ({} of {})", r.pos, body.len()
+        );
+        Ok(SessionSnapshot { epoch, round, parties, links, params, accs })
+    }
+
+    /// Write the snapshot under `dir` as `ckpt_round_<round>.celuckpt`
+    /// (via a temp file + rename, so a crash mid-write never leaves a
+    /// half snapshot under the final name). Returns the path written.
+    pub fn save(&self, dir: &str) -> anyhow::Result<String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating {dir}: {e}"))?;
+        let name = format!("ckpt_round_{:08}.celuckpt", self.round);
+        let path = std::path::Path::new(dir).join(&name);
+        let tmp = std::path::Path::new(dir).join(format!("{name}.tmp"));
+        std::fs::write(&tmp, self.encode())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("renaming {}: {e}", tmp.display()))?;
+        Ok(path.to_string_lossy().into_owned())
+    }
+
+    /// Load and validate a snapshot file.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let buf = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {path}: {e}"))?;
+        Self::decode(&buf).map_err(|e| {
+            anyhow::anyhow!("decoding checkpoint {path}: {e:#}")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SessionSnapshot {
+        SessionSnapshot {
+            epoch: 0x0102_0304,
+            round: 5,
+            parties: 3,
+            links: vec![
+                LinkCodecState { peer: PartyId(1), codec: CodecKind::Fp16 },
+                LinkCodecState {
+                    peer: PartyId(2),
+                    codec: CodecKind::Identity,
+                },
+            ],
+            params: vec![Tensor::f32(vec![2], vec![1.0, -2.0])],
+            accs: vec![Tensor::f32(vec![2], vec![0.5, 0.25])],
+        }
+    }
+
+    fn hex_to_bytes(hex: &str) -> Vec<u8> {
+        let compact: String =
+            hex.chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(compact.len() % 2, 0, "odd hex length");
+        (0..compact.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&compact[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn golden_snapshot_encode_is_byte_identical() {
+        // Captured at introduction time; machine-checked against an
+        // independent Python rebuild of the layout (incl. the FNV-1a
+        // trailer). Byte drift in the snapshot format fails here.
+        let hex = "43454c55 0100 04030201 0500000000000000 0300 0200 \
+                   0100 01 00000000 0200 00 00000000 \
+                   01000000 00 01 02000000 0000803f 000000c0 \
+                   01000000 00 01 02000000 0000003f 0000803e \
+                   07f8a2e7b3c083b2";
+        let enc = sample().encode();
+        assert_eq!(enc, hex_to_bytes(hex), "snapshot layout drifted: {}",
+                   enc.iter().map(|b| format!("{b:02x}"))
+                       .collect::<String>());
+    }
+
+    #[test]
+    fn golden_snapshot_decode_recovers_the_snapshot() {
+        let s = sample();
+        assert_eq!(SessionSnapshot::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn roundtrip_with_i32_and_topk() {
+        let s = SessionSnapshot {
+            epoch: 9,
+            round: u64::MAX,
+            parties: 2,
+            links: vec![LinkCodecState {
+                peer: PartyId(1),
+                codec: CodecKind::TopK(48),
+            }],
+            params: vec![
+                Tensor::f32(vec![2, 3], vec![0.0; 6]),
+                Tensor::i32(vec![1], vec![-7]),
+            ],
+            accs: vec![
+                Tensor::f32(vec![2, 3], vec![0.1; 6]),
+                Tensor::i32(vec![1], vec![3]),
+            ],
+        };
+        assert_eq!(SessionSnapshot::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn truncations_and_corruption_error_cleanly() {
+        let enc = sample().encode();
+        for cut in 0..enc.len() {
+            assert!(SessionSnapshot::decode(&enc[..cut]).is_err(),
+                    "truncation at {cut} decoded");
+        }
+        // Any single bit flip trips the checksum (or a validation).
+        for at in 0..enc.len() {
+            let mut bent = enc.clone();
+            bent[at] ^= 1;
+            assert!(SessionSnapshot::decode(&bent).is_err(),
+                    "bit flip at {at} decoded");
+        }
+        let mut trailing = enc;
+        trailing.push(0);
+        assert!(SessionSnapshot::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn hostile_headers_are_refused_by_arithmetic() {
+        // A snapshot declaring a huge tensor must die on the element
+        // cap / length checks, not on an attempted allocation. Build a
+        // valid prefix then a hostile tensor header with a fresh
+        // checksum so only the size check can refuse it.
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        body.extend_from_slice(&7u32.to_le_bytes()); // epoch
+        body.extend_from_slice(&1u64.to_le_bytes()); // round
+        body.extend_from_slice(&2u16.to_le_bytes()); // parties
+        body.extend_from_slice(&1u16.to_le_bytes()); // n_links
+        body.extend_from_slice(&1u16.to_le_bytes()); // peer
+        body.push(0); // identity
+        body.extend_from_slice(&0u32.to_le_bytes()); // param
+        body.extend_from_slice(&1u32.to_le_bytes()); // n_params
+        body.push(0); // f32
+        body.push(4); // ndim
+        for _ in 0..4 {
+            body.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let h = fnv1a(&body);
+        body.extend_from_slice(&h.to_le_bytes());
+        let e = SessionSnapshot::decode(&body).unwrap_err().to_string();
+        assert!(e.contains("overflow") || e.contains("cap"),
+                "hostile tensor header not refused arithmetically: {e}");
+    }
+
+    #[test]
+    fn decode_validates_session_shape() {
+        // Mismatched link count.
+        let mut s = sample();
+        s.links.pop();
+        let enc = s.encode();
+        assert!(SessionSnapshot::decode(&enc).is_err());
+        // Duplicate peer.
+        let mut s = sample();
+        s.links[1].peer = PartyId(1);
+        assert!(SessionSnapshot::decode(&s.encode()).is_err());
+        // Out-of-range peer.
+        let mut s = sample();
+        s.links[1].peer = PartyId(9);
+        assert!(SessionSnapshot::decode(&s.encode()).is_err());
+        // Accs/params mismatch.
+        let mut s = sample();
+        s.accs.pop();
+        assert!(SessionSnapshot::decode(&s.encode()).is_err());
+    }
+
+    #[test]
+    fn save_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "celu_ckpt_test_{}", std::process::id()
+        ));
+        let dir = dir.to_string_lossy().into_owned();
+        let s = sample();
+        let path = s.save(&dir).unwrap();
+        assert!(path.contains("ckpt_round_00000005.celuckpt"));
+        assert_eq!(SessionSnapshot::load(&path).unwrap(), s);
+        // Unknown version is refused loudly.
+        let mut enc = s.encode();
+        enc[4] = 9;
+        let body_len = enc.len() - 8;
+        let h = fnv1a(&enc[..body_len]);
+        enc[body_len..].copy_from_slice(&h.to_le_bytes());
+        let e = SessionSnapshot::decode(&enc).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -25,6 +25,12 @@
 //!   connections, [`bootstrap::SessionDialer`] joining with backoff),
 //!   so [`SessionBuilder::from_bootstrap`] yields the same `Session`
 //!   regardless of transport.
+//! - [`supervisor`] — the supervised session lifecycle (DESIGN.md §8):
+//!   a validated state machine with typed [`supervisor::SessionEvent`]s,
+//!   bounded straggler lanes, and mid-session `Rejoin` re-admission.
+//! - [`checkpoint`] — versioned binary label-party snapshots
+//!   ([`checkpoint::SessionSnapshot`]) behind `--checkpoint-dir` /
+//!   `--resume`.
 //!
 //! With `parties = 2` the session runs the exact two-party protocol of
 //! the earlier PRs: v1 frames (no party-id header), identical message
@@ -34,13 +40,17 @@
 //! `Hello` codec handshake is negotiated independently per link.
 
 pub mod bootstrap;
+pub mod checkpoint;
+pub mod supervisor;
 
 use std::sync::Arc;
 
 use crate::config::RunConfig;
 use crate::coordinator::feature_party::{run_feature_party,
-                                        FeaturePartyReport};
-use crate::coordinator::label_party::{run_label_party, LabelPartyReport};
+                                        FeaturePartyReport,
+                                        FeatureRunOpts};
+use crate::coordinator::label_party::{run_label_party, LabelPartyReport,
+                                      LabelRunOpts};
 use crate::data::{PartyAData, PartyBData};
 use crate::runtime::ArtifactSet;
 use crate::transport::{inproc_link, LinkStats, Transport};
@@ -93,6 +103,27 @@ pub enum PartyRole {
 pub struct Link {
     pub peer: PartyId,
     pub transport: Arc<dyn Transport>,
+    /// The peer's decodable codec families, when the bootstrap
+    /// handshake carried them (`Join`/`JoinAck` bitmask — DESIGN.md
+    /// §7). `Some` lets both coordinators pre-negotiate the wire codec
+    /// at join time and skip the first-round `Hello` exchange; `None`
+    /// (raw transports, pre-session peers) keeps the historic in-band
+    /// handshake, byte-identical to the earlier wire.
+    pub peer_codecs: Option<u32>,
+}
+
+impl Link {
+    /// A link with no join-time codec knowledge (the compat default:
+    /// codec negotiation happens in-band via `Hello`).
+    pub fn new(peer: PartyId, transport: Arc<dyn Transport>) -> Self {
+        Link { peer, transport, peer_codecs: None }
+    }
+
+    /// Attach the peer's codec-capability bitmask learned at join time.
+    pub fn with_peer_codecs(mut self, mask: u32) -> Self {
+        self.peer_codecs = Some(mask);
+        self
+    }
 }
 
 /// The party's view of the session topology: one transport per peer,
@@ -180,16 +211,23 @@ impl SessionBuilder {
         let id = bootstrap.id();
         let mut b = SessionBuilder::new(cfg, id);
         for l in bootstrap.establish(cfg)? {
-            b = b.link(l.peer, l.transport);
+            b = b.link_full(l);
         }
         b.build()
     }
 
     /// Add a peer link. Feature parties link exactly the label party;
     /// the label party links every feature party.
-    pub fn link(mut self, peer: PartyId,
+    pub fn link(self, peer: PartyId,
                 transport: Arc<dyn Transport>) -> Self {
-        self.links.push(Link { peer, transport });
+        self.link_full(Link::new(peer, transport))
+    }
+
+    /// Add a fully-described peer link (keeps join-time codec masks and
+    /// any future link metadata intact — `link` is the mask-less
+    /// shorthand).
+    pub fn link_full(mut self, link: Link) -> Self {
+        self.links.push(link);
         self
     }
 
@@ -269,19 +307,39 @@ impl Session {
     pub fn run_feature(&self, set: Arc<ArtifactSet>, train: Arc<PartyAData>,
                        test: Arc<PartyAData>)
                        -> anyhow::Result<FeaturePartyReport> {
+        self.run_feature_with(set, train, test,
+                              FeatureRunOpts::default())
+    }
+
+    /// [`Self::run_feature`] with supervised-lifecycle options (rejoin
+    /// reconnect policy — DESIGN.md §8).
+    pub fn run_feature_with(&self, set: Arc<ArtifactSet>,
+                            train: Arc<PartyAData>, test: Arc<PartyAData>,
+                            opts: FeatureRunOpts)
+                            -> anyhow::Result<FeaturePartyReport> {
         anyhow::ensure!(self.role() == PartyRole::Feature,
                         "run_feature on {} (label party)", self.id);
         run_feature_party(&self.cfg, self.id, set, train, test,
-                          self.mesh.links[0].transport.clone())
+                          &self.mesh.links[0], opts)
     }
 
     /// Run this session as the label party (role must match).
     pub fn run_label(&self, set: Arc<ArtifactSet>, train: Arc<PartyBData>,
                      test: Arc<PartyBData>)
                      -> anyhow::Result<LabelPartyReport> {
+        self.run_label_with(set, train, test, LabelRunOpts::default())
+    }
+
+    /// [`Self::run_label`] with supervised-lifecycle options (the
+    /// re-admission point, checkpoint resume — DESIGN.md §8).
+    pub fn run_label_with(&self, set: Arc<ArtifactSet>,
+                          train: Arc<PartyBData>, test: Arc<PartyBData>,
+                          opts: LabelRunOpts)
+                          -> anyhow::Result<LabelPartyReport> {
         anyhow::ensure!(self.role() == PartyRole::Label,
                         "run_label on {} (feature party)", self.id);
-        run_label_party(&self.cfg, set, train, test, self.mesh.links())
+        run_label_party(&self.cfg, set, train, test, self.mesh.links(),
+                        opts)
     }
 }
 
@@ -301,14 +359,8 @@ pub fn inproc_star(cfg: &RunConfig) -> (Vec<Link>, Vec<Link>) {
         let feature = PartyId(f);
         let (to_label, to_feature) =
             inproc_link(cfg.wan, feature, LABEL_PARTY, v2);
-        feature_links.push(Link {
-            peer: LABEL_PARTY,
-            transport: Arc::new(to_label),
-        });
-        label_links.push(Link {
-            peer: feature,
-            transport: Arc::new(to_feature),
-        });
+        feature_links.push(Link::new(LABEL_PARTY, Arc::new(to_label)));
+        label_links.push(Link::new(feature, Arc::new(to_feature)));
     }
     (label_links, feature_links)
 }

@@ -1,0 +1,1556 @@
+//! Supervised session lifecycle (DESIGN.md §8).
+//!
+//! The earlier session layer ran to completion or died: the first
+//! transport error anywhere in the mesh tore the whole run down, which
+//! throws away exactly the asset CELU-VFL exists to exploit — a workset
+//! of cached statistics that keeps training productive between WAN
+//! exchanges (paper §3.1). This module turns the run-to-completion
+//! drivers into a supervised lifecycle:
+//!
+//! - [`SessionState`] — the five-state machine every supervised party
+//!   walks: `Joining → Running → Degraded → Recovering → Done`.
+//!   Transitions are validated; an illegal edge is a bug, not a log
+//!   line.
+//! - [`SessionEvent`] — typed lifecycle events (`PeerLost`,
+//!   `PeerRejoined`, `StragglerTimeout`, `CheckpointWritten`) surfaced
+//!   to the caller (and into `RunRecord`) instead of hard errors.
+//! - [`LaneSet`] — the label party's supervised view of its activation
+//!   lanes. Each round it collects one [`LaneInput`] per lane:
+//!   `Fresh` statistics when the peer delivered in time, `Stale` (the
+//!   lane's most recent cached activation — CELU-VFL's own local-update
+//!   machinery reused as the degraded-mode path; instance weighting
+//!   already discounts the extra staleness) after a bounded straggler
+//!   wait (`--straggler-wait-ms`), and `Missing` only for a lane that
+//!   never contributed anything. Dead lanes are re-admitted through the
+//!   [`Readmission`](super::bootstrap::Readmission) point: a `Rejoin`
+//!   dial is validated (epoch, id, round sanity), acked with the resume
+//!   round, and the current round's derivative is replayed from a
+//!   bounded per-lane resend buffer.
+//!
+//! Supervision is strictly opt-in: with no straggler budget and no
+//! re-admission point the `LaneSet` reproduces the historic blocking
+//! behaviour — byte-identical wire, identical error propagation — so
+//! the two-party golden fixtures and the unsupervised trainer are
+//! untouched.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::compress::{self, CodecKind};
+use crate::config::RunConfig;
+use crate::protocol::{outbound_stats, Lane, Message};
+use crate::tensor::Tensor;
+use crate::transport::tcp::TcpTransport;
+use crate::transport::{LinkStats, Transport};
+use crate::util::rng::Pcg;
+
+use super::bootstrap::{send_bootstrap_frame, Readmission};
+use super::checkpoint::LinkCodecState;
+use super::{Link, PartyId, LABEL_PARTY};
+
+/// How many recent derivative frames each lane buffers for rejoin
+/// replay. Under the lock-step protocol a returning party needs at most
+/// its one in-flight round, but the buffer is indexed by round, so a
+/// longer outage simply finds the slot evicted (replay count 0) rather
+/// than replaying the wrong frame.
+pub const RESEND_DEPTH: usize = 32;
+
+/// Poll cadence of the bounded straggler wait. Short enough that a
+/// just-late frame costs sub-millisecond latency, long enough that a
+/// full `--straggler-wait-ms` window doesn't burn a core.
+const STRAGGLER_POLL: Duration = Duration::from_micros(500);
+
+/// Pace of a degraded round when no straggler budget is configured but
+/// a re-admission point is open: without it, a session whose lane died
+/// would free-run every remaining round on stale statistics in
+/// milliseconds, leaving a returning dialer no window to land in.
+const DEGRADED_PACE: Duration = Duration::from_millis(500);
+
+/// Cap on retained lifecycle events: a run that flaps for hours must
+/// not grow an unbounded event log. Beyond the cap events are counted
+/// (`Supervisor::dropped_events`), not stored.
+const EVENTS_CAP: usize = 4096;
+
+/// The logical-session epoch for a run seeded with `seed`. Derived, not
+/// exchanged: every party of a session shares the config seed (the
+/// paper's post-PSI alignment already requires it), so each derives the
+/// same epoch independently and `Rejoin` can prove membership without
+/// widening the bootstrap frames. A dialer from a different logical
+/// session (different seed) is refused at the re-admission point.
+pub fn session_epoch(seed: u64) -> u32 {
+    Pcg::new(seed, 0xE90C).next_u32()
+}
+
+// ---- state machine ---------------------------------------------------------
+
+/// Lifecycle state of a supervised session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    /// Mesh assembling (bootstrap / handshake).
+    Joining,
+    /// Every lane live and in lock-step.
+    Running,
+    /// At least one lane is behind or lost; rounds proceed on cached
+    /// stale statistics.
+    Degraded,
+    /// A lost lane has been re-admitted and is converging back into
+    /// lock-step.
+    Recovering,
+    /// The run ended (success or orderly failure).
+    Done,
+}
+
+impl SessionState {
+    pub fn label(self) -> &'static str {
+        match self {
+            SessionState::Joining => "joining",
+            SessionState::Running => "running",
+            SessionState::Degraded => "degraded",
+            SessionState::Recovering => "recovering",
+            SessionState::Done => "done",
+        }
+    }
+
+    /// Legal edges of the lifecycle graph. Self-edges are allowed (and
+    /// are no-ops at the supervisor level).
+    fn can_transition(self, to: SessionState) -> bool {
+        use SessionState::*;
+        if self == to {
+            return true;
+        }
+        matches!(
+            (self, to),
+            (Joining, Running)
+                | (Joining, Done)
+                | (Running, Degraded)
+                | (Running, Done)
+                | (Degraded, Recovering)
+                | (Degraded, Running)
+                | (Degraded, Done)
+                | (Recovering, Running)
+                | (Recovering, Degraded)
+                | (Recovering, Done)
+        )
+    }
+}
+
+/// Typed lifecycle events. These replace hard errors for conditions the
+/// session can survive; the label party records them into `RunRecord`
+/// so a run's fault history is part of its artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SessionEvent {
+    /// A lane's transport died mid-session.
+    PeerLost { party: PartyId, round: u64 },
+    /// A lost lane was re-admitted through `Rejoin`.
+    PeerRejoined { party: PartyId, round: u64 },
+    /// A lane missed the bounded straggler window; the round proceeded
+    /// on its cached stale statistics.
+    StragglerTimeout { party: PartyId, round: u64 },
+    /// A restartable snapshot was written.
+    CheckpointWritten { round: u64, path: String },
+}
+
+impl SessionEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SessionEvent::PeerLost { .. } => "peer_lost",
+            SessionEvent::PeerRejoined { .. } => "peer_rejoined",
+            SessionEvent::StragglerTimeout { .. } => "straggler_timeout",
+            SessionEvent::CheckpointWritten { .. } => "checkpoint_written",
+        }
+    }
+
+    pub fn party(&self) -> Option<PartyId> {
+        match self {
+            SessionEvent::PeerLost { party, .. }
+            | SessionEvent::PeerRejoined { party, .. }
+            | SessionEvent::StragglerTimeout { party, .. } => Some(*party),
+            SessionEvent::CheckpointWritten { .. } => None,
+        }
+    }
+
+    pub fn round(&self) -> u64 {
+        match self {
+            SessionEvent::PeerLost { round, .. }
+            | SessionEvent::PeerRejoined { round, .. }
+            | SessionEvent::StragglerTimeout { round, .. }
+            | SessionEvent::CheckpointWritten { round, .. } => *round,
+        }
+    }
+}
+
+/// The session state machine plus its event log.
+#[derive(Debug)]
+pub struct Supervisor {
+    state: SessionState,
+    epoch: u32,
+    events: Vec<SessionEvent>,
+    dropped_events: u64,
+}
+
+impl Supervisor {
+    pub fn new(epoch: u32) -> Self {
+        Supervisor {
+            state: SessionState::Joining,
+            epoch,
+            events: Vec::new(),
+            dropped_events: 0,
+        }
+    }
+
+    pub fn state(&self) -> SessionState {
+        self.state
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    pub fn events(&self) -> &[SessionEvent] {
+        &self.events
+    }
+
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events
+    }
+
+    pub fn take_events(&mut self) -> Vec<SessionEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Record a lifecycle event (bounded by `EVENTS_CAP`; overflow is
+    /// counted in [`Self::dropped_events`], not stored).
+    pub fn record(&mut self, event: SessionEvent) {
+        log::info!("session event: {} (party {:?}, round {})",
+                   event.kind(), event.party(), event.round());
+        if self.events.len() >= EVENTS_CAP {
+            self.dropped_events += 1;
+            return;
+        }
+        self.events.push(event);
+    }
+
+    /// Move to `to`, validating the edge. A self-transition is a no-op.
+    pub fn transition(&mut self, to: SessionState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.state.can_transition(to),
+            "illegal session transition {} → {}",
+            self.state.label(),
+            to.label()
+        );
+        if self.state != to {
+            log::debug!("session state {} → {}", self.state.label(),
+                        to.label());
+            self.state = to;
+        }
+        Ok(())
+    }
+}
+
+// ---- supervised lanes ------------------------------------------------------
+
+/// What one lane contributed to a round.
+#[derive(Debug, Clone)]
+pub enum LaneInput {
+    /// This round's real activation arrived in time.
+    Fresh(Tensor),
+    /// The lane is behind or lost: its most recent cached activation
+    /// stands in (the degraded-mode path; staleness weighting applies).
+    Stale(Tensor),
+    /// The lane never delivered any statistics yet.
+    Missing,
+}
+
+impl LaneInput {
+    pub fn tensor(&self) -> Option<&Tensor> {
+        match self {
+            LaneInput::Fresh(t) | LaneInput::Stale(t) => Some(t),
+            LaneInput::Missing => None,
+        }
+    }
+
+    pub fn is_fresh(&self) -> bool {
+        matches!(self, LaneInput::Fresh(_))
+    }
+}
+
+/// One supervised activation lane.
+struct SupLane {
+    peer: PartyId,
+    transport: Arc<dyn Transport>,
+    peer_codecs: Option<u32>,
+    codec: CodecKind,
+    /// Pre-handshake first frame, replayed into the first collect.
+    stash: Option<Message>,
+    alive: bool,
+    /// Communication rounds whose activation this side consumed (the
+    /// lane is "current" for round `r` once `completed == r + 1`).
+    completed: u64,
+    /// Most recent real activation from this peer (degraded stand-in).
+    last_za: Option<Tensor>,
+    /// This round's fresh activation, once received.
+    fresh: Option<Tensor>,
+    /// Recent outbound derivative frames, by round (rejoin replay).
+    resend: VecDeque<(u64, Message)>,
+    /// Accounting accumulated over replaced transports.
+    carried: LinkStats,
+    rejoins: u64,
+}
+
+/// The label party's supervised lane fan: owns per-lane liveness, the
+/// bounded straggler wait, catch-up draining, the resend buffer, and
+/// the re-admission of `Rejoin` dialers. See the module docs for the
+/// opt-in semantics.
+pub struct LaneSet {
+    lanes: Vec<SupLane>,
+    sup: Supervisor,
+    parties: u16,
+    v2: bool,
+    wan: crate::config::WanProfile,
+    straggler: Option<Duration>,
+    readmission: Option<Readmission>,
+    /// Supervision flag: lose-on-error + degraded stepping. False means
+    /// the historic behaviour: the first transport error propagates.
+    supervised: bool,
+    /// Frames staged by [`Self::stage_derivatives`], awaiting
+    /// [`Self::send_staged`]. One per lane.
+    staged: Vec<Message>,
+    catch_ups: u64,
+    evals_discarded: u64,
+}
+
+impl LaneSet {
+    /// Build the lane fan for the label party of `cfg`'s session.
+    /// `readmission` is the TCP listener's re-admission point (`None`
+    /// in-proc or when reconnects are not wanted).
+    pub fn new(cfg: &RunConfig, links: &[Link],
+               readmission: Option<Readmission>) -> Self {
+        let straggler = if cfg.straggler_wait_ms > 0 {
+            Some(Duration::from_millis(cfg.straggler_wait_ms))
+        } else {
+            None
+        };
+        let supervised = straggler.is_some() || readmission.is_some();
+        let lanes = links
+            .iter()
+            .map(|l| SupLane {
+                peer: l.peer,
+                transport: l.transport.clone(),
+                peer_codecs: l.peer_codecs,
+                codec: CodecKind::Identity,
+                stash: None,
+                alive: true,
+                completed: 0,
+                last_za: None,
+                fresh: None,
+                resend: VecDeque::new(),
+                carried: LinkStats::default(),
+                rejoins: 0,
+            })
+            .collect();
+        LaneSet {
+            lanes,
+            sup: Supervisor::new(session_epoch(cfg.seed)),
+            parties: cfg.parties as u16,
+            v2: cfg.parties > 2,
+            wan: cfg.wan,
+            straggler,
+            readmission,
+            supervised,
+            staged: Vec::new(),
+            catch_ups: 0,
+            evals_discarded: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    pub fn state(&self) -> SessionState {
+        self.sup.state()
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.sup.epoch()
+    }
+
+    pub fn supervisor_mut(&mut self) -> &mut Supervisor {
+        &mut self.sup
+    }
+
+    pub fn take_events(&mut self) -> Vec<SessionEvent> {
+        self.sup.take_events()
+    }
+
+    pub fn total_rejoins(&self) -> u64 {
+        self.lanes.iter().map(|l| l.rejoins).sum()
+    }
+
+    pub fn catch_ups(&self) -> u64 {
+        self.catch_ups
+    }
+
+    /// Eval-lane frames discarded from behind lanes (telemetry).
+    pub fn evals_discarded(&self) -> u64 {
+        self.evals_discarded
+    }
+
+    /// The codec negotiated on each lane (checkpoint state).
+    pub fn codec_states(&self) -> Vec<LinkCodecState> {
+        self.lanes
+            .iter()
+            .map(|l| LinkCodecState { peer: l.peer, codec: l.codec })
+            .collect()
+    }
+
+    /// Per-lane sender-side accounting, carried transports included.
+    pub fn link_stats(&self) -> Vec<(PartyId, LinkStats)> {
+        self.lanes
+            .iter()
+            .map(|l| (l.peer, l.carried.merged(l.transport.stats())))
+            .collect()
+    }
+
+    /// Lane indices that are live and in lock-step at `round` (their
+    /// activation for `round` was consumed) — the eval participants.
+    pub fn current_lanes(&self, round: u64) -> Vec<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.alive && l.completed == round + 1)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn peer(&self, i: usize) -> PartyId {
+        self.lanes[i].peer
+    }
+
+    /// Negotiate each lane's wire codec. Join-time masks
+    /// (`Link::peer_codecs`) pre-negotiate without any wire exchange;
+    /// lanes without a mask run the historic in-band `Hello` handshake
+    /// (pre-handshake peers fall back to identity, byte-identical).
+    /// `pinned` (checkpoint resume) overrides negotiation entirely with
+    /// the snapshot's per-link codec state.
+    pub fn handshake(&mut self, cfg: &RunConfig,
+                     pinned: Option<&[LinkCodecState]>)
+                     -> anyhow::Result<()> {
+        for i in 0..self.lanes.len() {
+            let peer = self.lanes[i].peer;
+            let requested = cfg.codec_for(peer.0);
+            if let Some(states) = pinned {
+                let st = states.iter().find(|s| s.peer == peer)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "checkpoint carries no codec state for {peer} — \
+                         the session topology changed since the snapshot"
+                    ))?;
+                self.lanes[i].codec = st.codec;
+                continue;
+            }
+            if let Some(mask) = self.lanes[i].peer_codecs {
+                let eff = compress::negotiate(requested, Some(mask));
+                if eff != requested {
+                    log::warn!(
+                        "[{peer}] peer cannot decode codec {} (join-time \
+                         mask {mask:#x}) — sending uncompressed",
+                        requested.label()
+                    );
+                }
+                self.lanes[i].codec = eff;
+                continue;
+            }
+            let first = self.lanes[i].transport.recv()?;
+            match first {
+                Message::Hello { codecs: peer_mask } => {
+                    self.lanes[i].transport.send(Message::Hello {
+                        codecs: compress::supported_mask(),
+                    })?;
+                    let eff = compress::negotiate(requested,
+                                                  Some(peer_mask));
+                    if eff != requested {
+                        log::warn!(
+                            "[{peer}] peer cannot decode codec {} \
+                             (mask {peer_mask:#x}) — sending uncompressed",
+                            requested.label()
+                        );
+                    }
+                    self.lanes[i].codec = eff;
+                }
+                first => {
+                    if requested != CodecKind::Identity {
+                        log::warn!(
+                            "[{peer}] compress = {} requested but peer \
+                             opened without a handshake — sending \
+                             uncompressed",
+                            requested.label()
+                        );
+                    }
+                    self.lanes[i].stash = Some(first);
+                    self.lanes[i].codec = CodecKind::Identity;
+                }
+            }
+        }
+        self.sup.transition(SessionState::Running)
+    }
+
+    /// Collect one [`LaneInput`] per lane for `round`. Supervised mode
+    /// waits at most the straggler budget and substitutes cached stale
+    /// statistics; unsupervised mode blocks exactly like the historic
+    /// label loop and propagates the first error. Errors are still
+    /// returned for protocol violations (skew, unexpected frames) in
+    /// both modes, and when *no* lane has ever contributed.
+    pub fn collect(&mut self, round: u64)
+                   -> anyhow::Result<Vec<LaneInput>> {
+        self.process_rejoins(round)?;
+        for i in 0..self.lanes.len() {
+            self.drain_lane(i, round)?;
+        }
+        match self.straggler {
+            Some(wait) => self.wait_deadline(round, wait)?,
+            None => self.wait_blocking(round)?,
+        }
+        let mut out = Vec::with_capacity(self.lanes.len());
+        let mut all_fresh = true;
+        for lane in self.lanes.iter_mut() {
+            match lane.fresh.take() {
+                Some(t) => out.push(LaneInput::Fresh(t)),
+                None => {
+                    all_fresh = false;
+                    match &lane.last_za {
+                        Some(t) => out.push(LaneInput::Stale(t.clone())),
+                        None => out.push(LaneInput::Missing),
+                    }
+                }
+            }
+        }
+        if all_fresh
+            && matches!(self.sup.state(),
+                        SessionState::Degraded | SessionState::Recovering)
+        {
+            self.sup.transition(SessionState::Running)?;
+        }
+        anyhow::ensure!(
+            out.iter().any(|i| !matches!(i, LaneInput::Missing)),
+            "round {round}: no activation statistics available on any \
+             lane (every feature party lost before contributing)"
+        );
+        Ok(out)
+    }
+
+    /// Stage this round's derivative fan-out: one frame per lane under
+    /// its negotiated codec, buffered for rejoin replay. Returns each
+    /// lane's local derivative view (the dequantized round-trip for
+    /// lossy codecs) in lane order — what the workset must cache.
+    /// Staging is split from [`Self::send_staged`] so the caller can
+    /// insert the cache entries *before* the (WAN-bound) sends — the
+    /// cache-before-send overlap the paper's §3.1 relies on.
+    pub fn stage_derivatives(&mut self, round: u64, dza: &Tensor)
+                             -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(self.staged.is_empty(),
+                        "stage_derivatives called with frames staged");
+        let mut views = Vec::with_capacity(self.lanes.len());
+        for lane in &self.lanes {
+            let (msg, view) = outbound_stats(lane.codec, Lane::Derivative,
+                                             round, dza.clone())?;
+            self.staged.push(msg);
+            views.push(view);
+        }
+        for (lane, msg) in self.lanes.iter_mut().zip(self.staged.iter()) {
+            lane.resend.push_back((round, msg.clone()));
+            if lane.resend.len() > RESEND_DEPTH {
+                lane.resend.pop_front();
+            }
+        }
+        Ok(views)
+    }
+
+    /// Send the staged derivative frames. The star's links are
+    /// independent: one live lane takes the direct call (the two-party
+    /// path, thread-free), more fan out on scoped sender threads so
+    /// K−1 WAN transfers overlap. Send failures mark the lane lost in
+    /// supervised mode and propagate otherwise.
+    pub fn send_staged(&mut self, round: u64) -> anyhow::Result<()> {
+        let mut frames = std::mem::take(&mut self.staged);
+        anyhow::ensure!(frames.len() == self.lanes.len(),
+                        "send_staged without staged frames");
+        let live: Vec<usize> = (0..self.lanes.len())
+            .filter(|&i| self.lanes[i].alive)
+            .collect();
+        let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
+        if live.len() == 1 {
+            let i = live[0];
+            if let Err(e) = self.lanes[i].transport.send(
+                frames.swap_remove(i)) {
+                failures.push((i, e));
+            }
+        } else if !live.is_empty() {
+            let lanes = &self.lanes;
+            // Remove in descending index order so swap_remove never
+            // disturbs a frame still to be taken.
+            let results: Vec<(usize, Option<anyhow::Error>)> =
+                std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(live.len());
+                    for &i in live.iter().rev() {
+                        let frame = frames.swap_remove(i);
+                        let lane = &lanes[i];
+                        handles.push((i, s.spawn(move || {
+                            lane.transport.send(frame)
+                        })));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|(i, h)| {
+                            (i, h.join()
+                                .expect("derivative sender panicked")
+                                .err())
+                        })
+                        .collect()
+                });
+            for (i, err) in results {
+                if let Some(e) = err {
+                    failures.push((i, e));
+                }
+            }
+        }
+        for (i, e) in failures {
+            if !self.supervised {
+                return Err(anyhow::anyhow!(
+                    "sending derivative to {}: {e:#}",
+                    self.lanes[i].peer
+                ));
+            }
+            self.lose(i, round, &e);
+        }
+        Ok(())
+    }
+
+    /// [`Self::stage_derivatives`] + [`Self::send_staged`] in one call
+    /// (callers that don't interleave a cache insert).
+    pub fn fan_out(&mut self, round: u64, dza: &Tensor)
+                   -> anyhow::Result<Vec<Tensor>> {
+        let views = self.stage_derivatives(round, dza)?;
+        self.send_staged(round)?;
+        Ok(views)
+    }
+
+    /// Collect eval-lane activations for held-out batch `k` from the
+    /// lanes in `participants` (see [`Self::current_lanes`]). A
+    /// participant that times out or dies is removed from the list —
+    /// its remaining eval frames are discarded by later drains — so the
+    /// caller can tell whether the batch's partial sum stayed
+    /// consistent across the eval walk. `round` attributes loss events.
+    pub fn collect_eval(&mut self, participants: &mut Vec<usize>, k: u64,
+                        round: u64) -> anyhow::Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(participants.len());
+        let mut dropped: Vec<usize> = Vec::new();
+        for &i in participants.iter() {
+            if !self.lanes[i].alive {
+                dropped.push(i);
+                continue;
+            }
+            let deadline = self.straggler.map(|d| Instant::now() + d);
+            let got = loop {
+                let res = match deadline {
+                    None => self.lanes[i].transport.recv().map(Some),
+                    Some(dl) => match self.lanes[i].transport.try_recv() {
+                        Ok(Some(m)) => Ok(Some(m)),
+                        Ok(None) => {
+                            if Instant::now() >= dl {
+                                Ok(None)
+                            } else {
+                                std::thread::sleep(STRAGGLER_POLL);
+                                continue;
+                            }
+                        }
+                        Err(e) => Err(e),
+                    },
+                };
+                match res {
+                    Ok(Some(m)) => match m.into_plain()? {
+                        Message::EvalActivation { round: r, tensor } => {
+                            anyhow::ensure!(
+                                r == k,
+                                "eval lane skew on {}: {r} != {k}",
+                                self.lanes[i].peer
+                            );
+                            break Some(tensor);
+                        }
+                        other => anyhow::bail!(
+                            "expected eval activation from {}, got {:?}",
+                            self.lanes[i].peer, other.tag()
+                        ),
+                    },
+                    Ok(None) => {
+                        log::warn!(
+                            "[{}] eval batch {k} missed the straggler \
+                             window — excluding the lane from this eval",
+                            self.lanes[i].peer
+                        );
+                        break None;
+                    }
+                    Err(e) => {
+                        if !self.supervised {
+                            return Err(e);
+                        }
+                        self.lose(i, round, &e);
+                        break None;
+                    }
+                }
+            };
+            match got {
+                Some(t) => out.push(t),
+                None => dropped.push(i),
+            }
+        }
+        participants.retain(|i| !dropped.contains(i));
+        Ok(out)
+    }
+
+    /// Orderly end: broadcast `Shutdown` on every lane (live or not —
+    /// a dead socket just fails silently) and close the lifecycle.
+    pub fn shutdown(&mut self) {
+        for lane in &self.lanes {
+            let _ = lane.transport.send(Message::Shutdown);
+        }
+        let _ = self.sup.transition(SessionState::Done);
+    }
+
+    // ---- internals ---------------------------------------------------------
+
+    fn lose(&mut self, i: usize, round: u64, err: &anyhow::Error) {
+        if !self.lanes[i].alive {
+            return;
+        }
+        let peer = self.lanes[i].peer;
+        self.lanes[i].alive = false;
+        self.lanes[i].fresh = None;
+        log::warn!("[{peer}] lane lost in round {round}: {err:#}");
+        self.sup.record(SessionEvent::PeerLost { party: peer, round });
+        if matches!(self.sup.state(),
+                    SessionState::Running | SessionState::Recovering) {
+            let _ = self.sup.transition(SessionState::Degraded);
+        }
+    }
+
+    /// Interpret one inbound frame on lane `i` during round `round`.
+    fn consume(&mut self, i: usize, round: u64, msg: Message)
+               -> anyhow::Result<()> {
+        let peer = self.lanes[i].peer;
+        match msg.into_plain()? {
+            Message::Activation { round: r, tensor } => {
+                if r == round {
+                    let lane = &mut self.lanes[i];
+                    lane.completed = r + 1;
+                    lane.last_za = Some(tensor.clone());
+                    lane.fresh = Some(tensor);
+                } else if r < round && self.supervised {
+                    // Catch-up from a behind lane: the round was
+                    // already stepped on its stale statistics and its
+                    // derivative already pushed at fan-out time, so the
+                    // frame only refreshes the stale stand-in.
+                    let lane = &mut self.lanes[i];
+                    lane.completed = r + 1;
+                    lane.last_za = Some(tensor);
+                    self.catch_ups += 1;
+                } else {
+                    anyhow::bail!(
+                        "protocol skew on {peer}: got activation {r}, \
+                         expected {round}"
+                    );
+                }
+            }
+            Message::EvalActivation { .. } if self.supervised => {
+                // A behind lane walking an eval boundary this side has
+                // already passed or abandoned: eval is advisory, the
+                // activation round clock is what must stay consistent.
+                self.evals_discarded += 1;
+            }
+            other => anyhow::bail!(
+                "unexpected message {:?} from {peer} in round {round}",
+                other.tag()
+            ),
+        }
+        Ok(())
+    }
+
+    /// Nonblocking drain of lane `i`: stash first, then whatever frames
+    /// already arrived, stopping once this round's activation is in.
+    fn drain_lane(&mut self, i: usize, round: u64) -> anyhow::Result<()> {
+        loop {
+            if !self.lanes[i].alive || self.lanes[i].fresh.is_some() {
+                return Ok(());
+            }
+            if let Some(m) = self.lanes[i].stash.take() {
+                self.consume(i, round, m)?;
+                continue;
+            }
+            match self.lanes[i].transport.try_recv() {
+                Ok(Some(m)) => self.consume(i, round, m)?,
+                Ok(None) => return Ok(()),
+                Err(e) => {
+                    if !self.supervised {
+                        return Err(e);
+                    }
+                    self.lose(i, round, &e);
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Historic blocking wait: one recv at a time per lane, errors
+    /// propagate (unsupervised) or mark the lane lost (supervised).
+    fn wait_blocking(&mut self, round: u64) -> anyhow::Result<()> {
+        for i in 0..self.lanes.len() {
+            loop {
+                if !self.lanes[i].alive || self.lanes[i].fresh.is_some() {
+                    break;
+                }
+                if let Some(m) = self.lanes[i].stash.take() {
+                    self.consume(i, round, m)?;
+                    continue;
+                }
+                match self.lanes[i].transport.recv() {
+                    Ok(m) => self.consume(i, round, m)?,
+                    Err(e) => {
+                        if !self.supervised {
+                            return Err(e);
+                        }
+                        self.lose(i, round, &e);
+                        break;
+                    }
+                }
+            }
+        }
+        // No straggler budget bounds this round, and *every* lane is
+        // dead: live lanes normally pace the rounds, but with none
+        // left the label would free-run to max_rounds on stale
+        // statistics in milliseconds. With an open re-admission point,
+        // pace the degraded round and poll for rejoins instead.
+        if self.readmission.is_some()
+            && !self.lanes.iter().any(|l| l.alive)
+        {
+            let deadline = Instant::now() + DEGRADED_PACE;
+            loop {
+                self.process_rejoins(round)?;
+                for i in 0..self.lanes.len() {
+                    self.drain_lane(i, round)?;
+                }
+                let any_alive = self.lanes.iter().any(|l| l.alive);
+                let missing_live = self
+                    .lanes
+                    .iter()
+                    .any(|l| l.alive && l.fresh.is_none());
+                if any_alive && !missing_live {
+                    return Ok(()); // a lane rejoined and delivered
+                }
+                if Instant::now() >= deadline {
+                    return Ok(());
+                }
+                std::thread::sleep(STRAGGLER_POLL);
+            }
+        }
+        Ok(())
+    }
+
+    /// Bounded straggler wait: poll every missing lane (and the
+    /// re-admission point) until all are fresh or the window closes.
+    fn wait_deadline(&mut self, round: u64, wait: Duration)
+                     -> anyhow::Result<()> {
+        let deadline = Instant::now() + wait;
+        loop {
+            let missing_live = self
+                .lanes
+                .iter()
+                .any(|l| l.alive && l.fresh.is_none());
+            // With every lane dead (and a re-admission point open),
+            // keep the full window anyway: it paces the degraded rounds
+            // and gives a rejoining dialer a poll slot every round
+            // instead of letting the label free-run to max_rounds on
+            // stale statistics.
+            let all_dead = !self.lanes.iter().any(|l| l.alive);
+            if !missing_live && !(all_dead && self.readmission.is_some())
+            {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                for i in 0..self.lanes.len() {
+                    if self.lanes[i].alive && self.lanes[i].fresh.is_none()
+                    {
+                        let peer = self.lanes[i].peer;
+                        log::warn!(
+                            "[{peer}] round {round} missed the \
+                             {wait:?} straggler window — stepping on \
+                             cached stale statistics"
+                        );
+                        self.sup.record(SessionEvent::StragglerTimeout {
+                            party: peer,
+                            round,
+                        });
+                    }
+                }
+                if self.sup.state() == SessionState::Running {
+                    self.sup.transition(SessionState::Degraded)?;
+                }
+                return Ok(());
+            }
+            self.process_rejoins(round)?;
+            for i in 0..self.lanes.len() {
+                self.drain_lane(i, round)?;
+            }
+            if self
+                .lanes
+                .iter()
+                .any(|l| l.alive && l.fresh.is_none())
+            {
+                std::thread::sleep(STRAGGLER_POLL);
+            }
+        }
+    }
+
+    /// Admit any pending `Rejoin` dialers: session-level validation
+    /// (known lane; ahead-of-us and zero-round claims are admitted
+    /// loudly — the ack's resume round rewinds or fast-forwards the
+    /// dialer), `RejoinAck` on the raw socket, transport wrap, bounded
+    /// replay, lane swap. Frame-level rules (version, id ranges) and
+    /// the epoch check already ran in the re-admission thread.
+    fn process_rejoins(&mut self, round: u64) -> anyhow::Result<()> {
+        let Some(adm) = &self.readmission else {
+            return Ok(());
+        };
+        while let Some(mut req) = adm.try_take() {
+            let Some(i) =
+                self.lanes.iter().position(|l| l.peer == req.party)
+            else {
+                log::warn!(
+                    "rejoin from {} refused: no such lane in this \
+                     session", req.party
+                );
+                continue; // drop → dialer sees EOF
+            };
+            if req.last_round > round {
+                // Only possible when this label restarted from a
+                // checkpoint older than the dialer's progress: the
+                // survivor ran ahead and must rewind. The ack's resume
+                // round tells it where to.
+                log::warn!(
+                    "rejoin from {} claims {} completed rounds but the \
+                     session is at round {round} — re-admitting with a \
+                     rewind (label restarted from an older checkpoint?)",
+                    req.party, req.last_round
+                );
+            } else if req.last_round == 0 && round > 0 {
+                // Indistinguishable from a relaunched process: its
+                // local bottom-model state (not checkpointed — see
+                // ROADMAP) restarted from initialization. Admit, but
+                // say so loudly.
+                log::warn!(
+                    "rejoin from {} reports zero completed rounds at \
+                     session round {round} — if this is a relaunched \
+                     process, its local model state restarted from \
+                     initialization", req.party
+                );
+            }
+            let replay: Option<Message> = {
+                let lane = &self.lanes[i];
+                if lane.completed > req.last_round {
+                    lane.resend
+                        .iter()
+                        .find(|(r, _)| *r == req.last_round)
+                        .map(|(_, m)| m.clone())
+                } else {
+                    None
+                }
+            };
+            let ack = Message::RejoinAck {
+                party: req.party,
+                parties: self.parties,
+                epoch: self.sup.epoch(),
+                resume_round: round,
+                replays: replay.is_some() as u32,
+            };
+            if let Err(e) = send_bootstrap_frame(&mut req.stream, &ack) {
+                log::warn!("rejoin ack to {} failed: {e:#}", req.party);
+                continue;
+            }
+            if let Err(e) = req.stream.set_read_timeout(None) {
+                log::warn!("rejoin wrap for {} failed: {e}", req.party);
+                continue;
+            }
+            let t = match TcpTransport::from_stream(req.stream, self.wan) {
+                Ok(t) => {
+                    if self.v2 {
+                        t.with_identity(LABEL_PARTY, req.party)
+                    } else {
+                        t
+                    }
+                }
+                Err(e) => {
+                    log::warn!("rejoin wrap for {} failed: {e:#}",
+                               req.party);
+                    continue;
+                }
+            };
+            let t: Arc<dyn Transport> = Arc::new(t);
+            let replays = replay.is_some() as u32;
+            if let Some(m) = replay {
+                if let Err(e) = t.send(m) {
+                    log::warn!(
+                        "derivative replay to {} failed: {e:#} — lane \
+                         stays lost", req.party
+                    );
+                    continue;
+                }
+            }
+            let lane = &mut self.lanes[i];
+            let old = std::mem::replace(&mut lane.transport, t);
+            lane.carried = lane.carried.merged(old.stats());
+            lane.alive = true;
+            lane.fresh = None;
+            lane.completed = round;
+            lane.rejoins += 1;
+            log::info!(
+                "{} rejoined the session: resumes at round {round} \
+                 ({replays} replayed frames)", req.party
+            );
+            self.sup.record(SessionEvent::PeerRejoined {
+                party: req.party,
+                round,
+            });
+            if self.sup.state() == SessionState::Degraded {
+                self.sup.transition(SessionState::Recovering)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WanProfile;
+    use crate::session::inproc_star;
+
+    fn t(v: f32) -> Tensor {
+        Tensor::f32(vec![2], vec![v, v + 1.0])
+    }
+
+    fn act(round: u64, v: f32) -> Message {
+        Message::Activation { round, tensor: t(v) }
+    }
+
+    fn cfg_k(k: usize, straggler_ms: u64) -> RunConfig {
+        let mut cfg = RunConfig::quick();
+        cfg.parties = k;
+        cfg.wan = WanProfile::instant();
+        cfg.straggler_wait_ms = straggler_ms;
+        cfg
+    }
+
+    #[test]
+    fn state_machine_validates_edges() {
+        let mut s = Supervisor::new(7);
+        assert_eq!(s.state(), SessionState::Joining);
+        assert_eq!(s.epoch(), 7);
+        s.transition(SessionState::Running).unwrap();
+        s.transition(SessionState::Degraded).unwrap();
+        s.transition(SessionState::Recovering).unwrap();
+        s.transition(SessionState::Running).unwrap();
+        // Self-transitions are no-ops.
+        s.transition(SessionState::Running).unwrap();
+        // Running cannot jump straight to Recovering.
+        assert!(s.transition(SessionState::Recovering).is_err());
+        s.transition(SessionState::Done).unwrap();
+        // Done is terminal.
+        assert!(s.transition(SessionState::Running).is_err());
+    }
+
+    #[test]
+    fn events_record_and_cap() {
+        let mut s = Supervisor::new(0);
+        let e = SessionEvent::PeerLost { party: PartyId(2), round: 9 };
+        assert_eq!(e.kind(), "peer_lost");
+        assert_eq!(e.party(), Some(PartyId(2)));
+        assert_eq!(e.round(), 9);
+        s.record(e.clone());
+        assert_eq!(s.events(), &[e]);
+        let c = SessionEvent::CheckpointWritten {
+            round: 5,
+            path: "x".into(),
+        };
+        assert_eq!(c.party(), None);
+        for _ in 0..(EVENTS_CAP + 10) {
+            s.record(c.clone());
+        }
+        assert_eq!(s.events().len(), EVENTS_CAP);
+        assert!(s.dropped_events() > 0);
+    }
+
+    #[test]
+    fn session_epoch_is_deterministic_and_seed_sensitive() {
+        assert_eq!(session_epoch(42), session_epoch(42));
+        assert_ne!(session_epoch(42), session_epoch(43));
+    }
+
+    #[test]
+    fn unsupervised_collect_matches_legacy_blocking_behaviour() {
+        let cfg = cfg_k(3, 0);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let mut lanes = LaneSet::new(&cfg, &label_links, None);
+        assert!(!lanes.supervised);
+        // Features speak first (identity config → no Hello): stash the
+        // first frames via handshake, then collect round 0.
+        feature_links[0].transport.send(act(0, 1.0)).unwrap();
+        feature_links[1].transport.send(act(0, 2.0)).unwrap();
+        lanes.handshake(&cfg, None).unwrap();
+        assert_eq!(lanes.state(), SessionState::Running);
+        let inputs = lanes.collect(0).unwrap();
+        assert!(inputs.iter().all(|i| i.is_fresh()));
+        // A dropped feature endpoint propagates as an error, exactly
+        // like the historic loop.
+        drop(feature_links);
+        assert!(lanes.collect(1).is_err());
+    }
+
+    #[test]
+    fn straggler_timeout_steps_on_stale_statistics() {
+        let cfg = cfg_k(3, 30);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let mut lanes = LaneSet::new(&cfg, &label_links, None);
+        feature_links[0].transport.send(act(0, 1.0)).unwrap();
+        feature_links[1].transport.send(act(0, 2.0)).unwrap();
+        lanes.handshake(&cfg, None).unwrap();
+        let inputs = lanes.collect(0).unwrap();
+        assert!(inputs.iter().all(|i| i.is_fresh()));
+        let views = lanes.fan_out(0, &t(0.5)).unwrap();
+        assert_eq!(views.len(), 2);
+        // Round 1: only P1 shows up; P2's lane must time out and fall
+        // back to its round-0 activation.
+        feature_links[0].transport.send(act(1, 3.0)).unwrap();
+        let inputs = lanes.collect(1).unwrap();
+        assert!(inputs[0].is_fresh());
+        match &inputs[1] {
+            LaneInput::Stale(z) => {
+                assert_eq!(z.as_f32().unwrap(), &[2.0, 3.0]);
+            }
+            other => panic!("expected stale input, got {other:?}"),
+        }
+        assert_eq!(lanes.state(), SessionState::Degraded);
+        let events = lanes.take_events();
+        assert!(events.iter().any(|e| matches!(
+            e,
+            SessionEvent::StragglerTimeout { party: PartyId(2), round: 1 }
+        )));
+        // The straggler catches up: its late round-1 frame is drained
+        // as catch-up, and round 2 is fresh again → Running.
+        lanes.fan_out(1, &t(0.6)).unwrap();
+        feature_links[1].transport.send(act(1, 9.0)).unwrap();
+        feature_links[0].transport.send(act(2, 4.0)).unwrap();
+        feature_links[1].transport.send(act(2, 5.0)).unwrap();
+        let inputs = lanes.collect(2).unwrap();
+        assert!(inputs.iter().all(|i| i.is_fresh()));
+        assert_eq!(lanes.catch_ups(), 1);
+        assert_eq!(lanes.state(), SessionState::Running);
+    }
+
+    #[test]
+    fn supervised_peer_loss_degrades_instead_of_erroring() {
+        let cfg = cfg_k(3, 20);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let mut lanes = LaneSet::new(&cfg, &label_links, None);
+        feature_links[0].transport.send(act(0, 1.0)).unwrap();
+        feature_links[1].transport.send(act(0, 2.0)).unwrap();
+        lanes.handshake(&cfg, None).unwrap();
+        lanes.collect(0).unwrap();
+        lanes.fan_out(0, &t(0.5)).unwrap();
+        for l in &feature_links {
+            l.transport.recv().unwrap();
+        }
+        // Kill P2's endpoint entirely.
+        let p1 = feature_links.into_iter().next().unwrap();
+        p1.transport.send(act(1, 3.0)).unwrap();
+        let inputs = lanes.collect(1).unwrap();
+        assert!(inputs[0].is_fresh());
+        assert!(matches!(inputs[1], LaneInput::Stale(_)));
+        assert_eq!(lanes.state(), SessionState::Degraded);
+        let events = lanes.take_events();
+        assert!(events.iter().any(|e| matches!(
+            e,
+            SessionEvent::PeerLost { party: PartyId(2), .. }
+        )));
+        // Fan-out keeps serving the live lane.
+        lanes.fan_out(1, &t(0.7)).unwrap();
+        assert_eq!(p1.transport.recv().unwrap().round(), 1);
+        // Stats for the dead lane are still reported.
+        assert_eq!(lanes.link_stats().len(), 2);
+    }
+
+    #[test]
+    fn collect_refuses_future_rounds_and_unknown_frames() {
+        let cfg = cfg_k(2, 0);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let mut lanes = LaneSet::new(&cfg, &label_links, None);
+        feature_links[0].transport.send(act(3, 1.0)).unwrap();
+        lanes.handshake(&cfg, None).unwrap();
+        let e = lanes.collect(0).unwrap_err().to_string();
+        assert!(e.contains("protocol skew"), "{e}");
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let mut lanes = LaneSet::new(&cfg, &label_links, None);
+        feature_links[0]
+            .transport
+            .send(Message::EvalAck { round: 0 })
+            .unwrap();
+        lanes.handshake(&cfg, None).unwrap();
+        let e = lanes.collect(0).unwrap_err().to_string();
+        assert!(e.contains("unexpected message"), "{e}");
+    }
+
+    #[test]
+    fn lane_input_accessors() {
+        assert!(LaneInput::Fresh(t(0.0)).is_fresh());
+        assert!(!LaneInput::Stale(t(0.0)).is_fresh());
+        assert!(LaneInput::Missing.tensor().is_none());
+        assert!(LaneInput::Stale(t(1.0)).tensor().is_some());
+    }
+}
+
+#[cfg(test)]
+mod lifecycle_tests {
+    //! End-to-end lifecycle coverage over real loopback TCP: mid-run
+    //! re-Join with in-flight replay, and the checkpoint → restart →
+    //! Rejoin acceptance property (post-restart per-link totals equal
+    //! an uninterrupted session's over the same rounds).
+
+    use super::*;
+    use crate::session::bootstrap::{rejoin_dial, MeshBootstrap,
+                                    SessionDialer, SessionListener};
+    use crate::session::checkpoint::LinkCodecState;
+
+    fn t(v: f32) -> Tensor {
+        Tensor::f32(vec![2], vec![v, v + 1.0])
+    }
+
+    fn act(round: u64) -> Message {
+        Message::Activation { round, tensor: t(round as f32) }
+    }
+
+    fn sub(a: LinkStats, b: LinkStats) -> (u64, u64, u64) {
+        (a.bytes - b.bytes, a.raw_bytes - b.raw_bytes,
+         a.messages - b.messages)
+    }
+
+    fn triple(s: LinkStats) -> (u64, u64, u64) {
+        (s.bytes, s.raw_bytes, s.messages)
+    }
+
+    #[test]
+    fn midrun_rejoin_replays_the_inflight_round() {
+        let mut cfg = RunConfig::quick();
+        cfg.parties = 2;
+        cfg.wan = crate::config::WanProfile::instant();
+        cfg.straggler_wait_ms = 500;
+        let epoch = session_epoch(cfg.seed);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish_supervised(&cfg)
+        });
+        let feature_links = SessionDialer::new(&addr, PartyId(1))
+            .with_timeout(Duration::from_secs(10))
+            .establish(&cfg)
+            .unwrap();
+        let (links, readmission, _e, _s) = label.join().unwrap().unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+        lanes.handshake(&cfg, None).unwrap();
+
+        // Round 0 completes normally.
+        let ft = feature_links[0].transport.clone();
+        ft.send(act(0)).unwrap();
+        assert!(lanes.collect(0).unwrap()[0].is_fresh());
+        lanes.fan_out(0, &t(0.5)).unwrap();
+        assert_eq!(ft.recv().unwrap().round(), 0);
+        // The feature dies right after sending its round-1 activation —
+        // the in-flight round.
+        ft.send(act(1)).unwrap();
+        drop(ft);
+        drop(feature_links);
+        // The label still consumes the in-flight activation, steps, and
+        // buffers Derivative{1} for replay; the dead socket surfaces on
+        // the next round at the latest.
+        assert!(lanes.collect(1).unwrap()[0].is_fresh());
+        lanes.fan_out(1, &t(0.6)).unwrap();
+        let inputs = lanes.collect(2).unwrap();
+        assert!(matches!(inputs[0], LaneInput::Stale(_)),
+                "dead lane must degrade to stale stats");
+        assert_eq!(lanes.state(), SessionState::Degraded);
+        lanes.fan_out(2, &t(0.7)).unwrap();
+
+        // The party comes back: Rejoin with last_round = 1 (its
+        // in-flight round) must be acked with exactly one replay —
+        // Derivative{1} — then lock-step resumes at the current round.
+        let rejoiner = std::thread::spawn({
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            move || -> anyhow::Result<u64> {
+                let (transport, resume, replays) = rejoin_dial(
+                    &addr, PartyId(1), &cfg, epoch, 1,
+                    Duration::from_secs(10))?;
+                anyhow::ensure!(replays == 1, "expected 1 replay, got \
+                                               {replays}");
+                match transport.recv()?.into_plain()? {
+                    Message::Derivative { round, .. } => {
+                        anyhow::ensure!(round == 1,
+                                        "replay carries round {round}");
+                    }
+                    other => anyhow::bail!("unexpected replay {:?}",
+                                           other.tag()),
+                }
+                transport.send(act(resume))?;
+                match transport.recv()?.into_plain()? {
+                    Message::Derivative { round, .. } => {
+                        anyhow::ensure!(round == resume, "post-rejoin \
+                                                          skew");
+                    }
+                    other => anyhow::bail!("unexpected {:?}",
+                                           other.tag()),
+                }
+                Ok(resume)
+            }
+        });
+        // Round 3: the rejoin is admitted inside the collect (the
+        // re-admission point is polled during the straggler wait) and
+        // the fresh activation lands in the same round.
+        let inputs = lanes.collect(3).unwrap();
+        assert!(inputs[0].is_fresh(),
+                "rejoined lane must deliver fresh stats");
+        lanes.fan_out(3, &t(0.8)).unwrap();
+        let resume = rejoiner.join().unwrap().unwrap();
+        assert_eq!(resume, 3);
+        assert_eq!(lanes.total_rejoins(), 1);
+        assert_eq!(lanes.state(), SessionState::Running);
+        let events = lanes.take_events();
+        assert!(events.iter().any(|e| matches!(
+            e, SessionEvent::PeerLost { party: PartyId(1), .. })));
+        assert!(events.iter().any(|e| matches!(
+            e,
+            SessionEvent::PeerRejoined { party: PartyId(1), round: 3 }
+        )));
+        // Accounting carries across the transport swap: Derivative{0}
+        // on the first socket, the replay and Derivative{3} on the
+        // fresh one (Derivative{1}'s send races the peer's death and
+        // may count on either side of it).
+        let (_, stats) = lanes.link_stats()[0];
+        assert!(stats.messages >= 3, "carried stats lost: {stats:?}");
+    }
+
+    /// Run one TCP feature party for rounds `0..total`, transparently
+    /// rejoining through a label restart. Returns the post-restart
+    /// segment of its sender-side accounting: the fresh transport's
+    /// stats when a rejoin happened, else `final − at(snapshot_at)`.
+    fn tcp_feature_loop(addr: String, party: PartyId, cfg: RunConfig,
+                        total: u64, snapshot_at: u64)
+                        -> anyhow::Result<(u64, u64, u64)> {
+        let (link, start) = SessionDialer::new(&addr, party)
+            .with_timeout(Duration::from_secs(10))
+            .establish_resumable(&cfg)?;
+        anyhow::ensure!(start == 0, "fresh join resumed at {start}");
+        let codec = compress::negotiate(cfg.codec_for(party.0),
+                                        link.peer_codecs);
+        let epoch = session_epoch(cfg.seed);
+        let mut transport = link.transport.clone();
+        let mut base: Option<LinkStats> = None;
+        let mut rejoined = false;
+        let mut round = 0u64;
+        while round < total {
+            if round == snapshot_at && !rejoined && base.is_none() {
+                base = Some(transport.stats());
+            }
+            let za = t(party.0 as f32 + round as f32);
+            let (msg, _) =
+                outbound_stats(codec, Lane::Activation, round, za)?;
+            let sent = transport.send(msg);
+            let ok = match sent {
+                Ok(()) => match transport.recv() {
+                    Ok(m) => match m.into_plain()? {
+                        Message::Derivative { round: r, .. } => {
+                            anyhow::ensure!(r == round, "skew on \
+                                                         {party}: {r}");
+                            true
+                        }
+                        other => anyhow::bail!("unexpected {:?}",
+                                               other.tag()),
+                    },
+                    Err(_) => false,
+                },
+                Err(_) => false,
+            };
+            if ok {
+                round += 1;
+                continue;
+            }
+            // The label died; rejoin through the restarted listener.
+            let (tr, resume, replays) = rejoin_dial(
+                &addr, party, &cfg, epoch, round,
+                Duration::from_secs(10))?;
+            anyhow::ensure!(replays == 0,
+                            "restart must not replay ({replays})");
+            transport = tr;
+            rejoined = true;
+            round = resume;
+        }
+        loop {
+            match transport.recv() {
+                Ok(Message::Shutdown) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+        Ok(if rejoined {
+            triple(transport.stats())
+        } else {
+            sub(transport.stats(), base.expect("boundary snapshot"))
+        })
+    }
+
+    /// One supervised label segment over `lanes`: rounds `from..to`.
+    fn label_segment(cfg: &RunConfig, lanes: &mut LaneSet, from: u64,
+                     to: u64) -> anyhow::Result<()> {
+        for round in from..to {
+            let inputs = lanes.collect(round)?;
+            anyhow::ensure!(inputs.iter().all(|i| i.is_fresh()),
+                            "unexpected degradation at round {round}");
+            let zs: Vec<Tensor> = inputs
+                .iter()
+                .filter_map(|i| i.tensor().cloned())
+                .collect();
+            let zsum = Tensor::sum_f32(&zs)?;
+            lanes.fan_out(round, &zsum)?;
+        }
+        Ok(())
+    }
+
+    /// Acceptance: checkpoint → restart → Rejoin produces the same
+    /// per-link totals for post-restart rounds as an uninterrupted
+    /// session over those rounds. Protocol-level (no model), K = 3,
+    /// mixed codecs (P1 fp16 via join-time pre-negotiation, pinned
+    /// from the snapshot after the restart).
+    #[test]
+    fn checkpoint_restart_rejoin_matches_uninterrupted_totals() {
+        const N: u64 = 8;
+        const M: u64 = 4;
+        let mut cfg = RunConfig::quick();
+        cfg.parties = 3;
+        cfg.wan = crate::config::WanProfile::instant();
+        cfg.straggler_wait_ms = 500;
+        cfg.compress = CodecKind::Identity;
+        cfg.party_compress = vec![(1, CodecKind::Fp16)];
+        cfg.validate().unwrap();
+
+        let run_features = |addr: &str| {
+            [1u16, 2]
+                .iter()
+                .map(|&p| {
+                    let addr = addr.to_string();
+                    let cfg = cfg.clone();
+                    std::thread::spawn(move || {
+                        tcp_feature_loop(addr, PartyId(p), cfg, N, M)
+                    })
+                })
+                .collect::<Vec<_>>()
+        };
+
+        // ---- phase A: uninterrupted reference -------------------------------
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr_a = listener.local_addr().unwrap().to_string();
+        let features_a = run_features(&addr_a);
+        let (links, readmission, _e, _s) =
+            listener.establish_supervised(&cfg).unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+        lanes.handshake(&cfg, None).unwrap();
+        label_segment(&cfg, &mut lanes, 0, M).unwrap();
+        let at_m = lanes.link_stats();
+        label_segment(&cfg, &mut lanes, M, N).unwrap();
+        lanes.shutdown();
+        let final_a = lanes.link_stats();
+        let label_post_a: Vec<(u16, (u64, u64, u64))> = final_a
+            .iter()
+            .zip(&at_m)
+            .map(|((p, f), (_, m))| (p.0, sub(*f, *m)))
+            .collect();
+        let mut feature_post_a = Vec::new();
+        for h in features_a {
+            feature_post_a.push(h.join().unwrap().unwrap());
+        }
+
+        // ---- phase B: checkpoint at M, crash, restart, Rejoin ---------------
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr_b = listener.local_addr().unwrap().to_string();
+        let features_b = run_features(&addr_b);
+        let (links, readmission, epoch, _s) =
+            listener.establish_supervised(&cfg).unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+        lanes.handshake(&cfg, None).unwrap();
+        label_segment(&cfg, &mut lanes, 0, M).unwrap();
+        // "Checkpoint": the codec states a real snapshot would carry.
+        let pinned: Vec<LinkCodecState> = lanes.codec_states();
+        // "Crash": drop lanes, re-admission point, sockets — no
+        // Shutdown anywhere. The features are left mid-flight.
+        drop(lanes);
+        // "Restart": a fresh process binds the same address in resume
+        // mode; both features fall back to Rejoin and fast-forward.
+        let listener = {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                match SessionListener::bind(&addr_b) {
+                    Ok(l) => break l,
+                    Err(e) => {
+                        if Instant::now() >= deadline {
+                            panic!("rebind of {addr_b} failed: {e:#}");
+                        }
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                }
+            }
+        }
+        .with_timeout(Duration::from_secs(10))
+        .with_resume(epoch, M);
+        let (links, readmission, _e, start) =
+            listener.establish_supervised(&cfg).unwrap();
+        assert_eq!(start, M);
+        let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+        lanes.handshake(&cfg, Some(&pinned)).unwrap();
+        label_segment(&cfg, &mut lanes, M, N).unwrap();
+        lanes.shutdown();
+        let label_post_b: Vec<(u16, (u64, u64, u64))> = lanes
+            .link_stats()
+            .iter()
+            .map(|(p, s)| (p.0, triple(*s)))
+            .collect();
+        let mut feature_post_b = Vec::new();
+        for h in features_b {
+            feature_post_b.push(h.join().unwrap().unwrap());
+        }
+
+        // ---- the acceptance equality ----------------------------------------
+        assert_eq!(label_post_b, label_post_a,
+                   "label-side post-restart per-link totals diverged");
+        assert_eq!(feature_post_b, feature_post_a,
+                   "feature-side post-restart per-link totals diverged");
+        // Sanity: the fp16 lane genuinely compressed post-restart too.
+        let p1 = feature_post_b[0];
+        assert!(p1.0 < p1.1,
+                "fp16 lane not compressed post-restart: {p1:?}");
+    }
+}

@@ -70,6 +70,18 @@ impl LinkStats {
         }
         self.raw_bytes as f64 / self.bytes as f64
     }
+
+    /// Field-wise sum with `other` — totals across a link's transport
+    /// incarnations (a `Rejoin` swaps the socket but the lane's
+    /// accounting must keep counting).
+    pub fn merged(self, other: LinkStats) -> LinkStats {
+        LinkStats {
+            messages: self.messages + other.messages,
+            bytes: self.bytes + other.bytes,
+            raw_bytes: self.raw_bytes + other.raw_bytes,
+            busy: self.busy + other.busy,
+        }
+    }
 }
 
 #[derive(Default)]

@@ -155,7 +155,32 @@ impl TcpTransport {
 /// feature parties launch.
 pub(crate) fn connect_with_backoff(addr: &str, deadline: Instant)
                                    -> anyhow::Result<TcpStream> {
+    connect_with_backoff_jittered(addr, deadline, None)
+}
+
+/// Deterministic jitter factor for one backoff step: scales the sleep
+/// into [0.5, 1.0) of the nominal step, derived purely from the jitter
+/// stream (the dialing party's id) and the attempt counter. After a
+/// label-party blip every feature party reconnects at once; without
+/// jitter their exponential schedules are phase-locked (identical
+/// constants, near-identical failure times), so each retry wave hits
+/// the listener as a thundering herd of K−1 simultaneous dials. The
+/// per-party stream de-phases the waves while staying reproducible —
+/// no wall-clock entropy, so a retry schedule can be replayed in tests.
+pub(crate) fn backoff_jitter(stream: u64, attempt: u32) -> f64 {
+    let mut rng = crate::util::rng::Pcg::new(attempt as u64,
+                                            0xB0FF ^ stream);
+    0.5 + 0.5 * rng.next_f64()
+}
+
+/// [`connect_with_backoff`] with deterministic per-dialer jitter.
+/// `jitter_stream` is typically the party id; `None` keeps the exact
+/// historic schedule (the two-party `connect` path).
+pub(crate) fn connect_with_backoff_jittered(
+    addr: &str, deadline: Instant, jitter_stream: Option<u64>)
+    -> anyhow::Result<TcpStream> {
     let mut backoff = Duration::from_millis(25);
+    let mut attempt: u32 = 0;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -171,10 +196,16 @@ pub(crate) fn connect_with_backoff(addr: &str, deadline: Instant)
                         "dialing {addr}: {e} (gave up at deadline)"
                     ));
                 }
-                let sleep = backoff.min(remaining);
+                let step = match jitter_stream {
+                    Some(stream) => backoff
+                        .mul_f64(backoff_jitter(stream, attempt)),
+                    None => backoff,
+                };
+                let sleep = step.min(remaining);
                 log::debug!("connect retry to {addr} in {sleep:?}: {e}");
                 std::thread::sleep(sleep);
                 backoff = (backoff * 2).min(Duration::from_secs(1));
+                attempt += 1;
             }
         }
     }
@@ -236,9 +267,12 @@ impl Transport for TcpTransport {
     }
 
     fn try_recv(&self) -> anyhow::Result<Option<Message>> {
-        // The coordinator only uses try_recv on in-proc transports; over
-        // TCP we'd need readiness APIs. Peek via nonblocking read of the
-        // length prefix.
+        // Peek via nonblocking read of the length prefix. A peek of 0
+        // bytes on a readable nonblocking socket means EOF — the peer
+        // hung up — and must surface as an error, not as "no message
+        // pending": the supervised label loop relies on try_recv to
+        // distinguish a straggler (WouldBlock → keep waiting) from a
+        // dead peer (EOF → mark the lane lost and go degraded).
         let mut r = self.reader.lock().unwrap();
         r.stream.set_nonblocking(true)?;
         let mut len_buf = [0u8; 4];
@@ -246,6 +280,15 @@ impl Transport for TcpTransport {
         r.stream.set_nonblocking(false)?;
         match peeked {
             Ok(4) => {}
+            Ok(0) => {
+                return Err(eof_context(
+                    std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "peer closed the connection",
+                    ),
+                    self.expected_header(),
+                ))
+            }
             Ok(_) => return Ok(None),
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 return Ok(None)
@@ -448,6 +491,72 @@ mod tests {
         drop(client);
         let e = server.join().unwrap().unwrap_err().to_string();
         assert!(e.contains("disconnected mid-round"), "{e}");
+    }
+
+    #[test]
+    fn try_recv_surfaces_peer_eof_as_an_error() {
+        // A dead peer must not masquerade as "no message pending":
+        // the supervised label loop polls try_recv during straggler
+        // waits and needs EOF to mark the lane lost.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            let t = TcpTransport::listen(&addr2, WanProfile::instant())
+                .unwrap()
+                .with_identity(PartyId(0), PartyId(1));
+            // Poll until the client's hangup becomes visible.
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                match t.try_recv() {
+                    Ok(Some(_)) => panic!("unexpected message"),
+                    Ok(None) => {
+                        assert!(Instant::now() < deadline,
+                                "EOF never surfaced");
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => return e.to_string(),
+                }
+            }
+        });
+        let client =
+            TcpTransport::connect(&addr, WanProfile::instant()).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        drop(client);
+        let e = server.join().unwrap();
+        assert!(e.contains("P1") && e.contains("disconnected"),
+                "EOF error lacks context: {e}");
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic_bounded_and_de_phased() {
+        // Deterministic: the same (stream, attempt) always yields the
+        // same factor, so a retry schedule is replayable.
+        for attempt in 0..6 {
+            assert_eq!(backoff_jitter(1, attempt),
+                       backoff_jitter(1, attempt));
+        }
+        // Bounded: every factor sits in [0.5, 1.0) — jitter shortens a
+        // step (never extends it past the nominal exponential bound).
+        for stream in 0..8u64 {
+            for attempt in 0..8 {
+                let f = backoff_jitter(stream, attempt);
+                assert!((0.5..1.0).contains(&f),
+                        "factor {f} out of range (stream {stream}, \
+                         attempt {attempt})");
+            }
+        }
+        // De-phased: across a K-party reconnect wave the parties'
+        // factors differ on (nearly) every attempt — the schedules are
+        // not phase-locked. Require strict difference on attempt 0 for
+        // every pair in a K=8 mesh.
+        for a in 1..8u64 {
+            for b in (a + 1)..8 {
+                assert_ne!(backoff_jitter(a, 0), backoff_jitter(b, 0),
+                           "parties {a} and {b} share a jitter phase");
+            }
+        }
     }
 
     #[test]
