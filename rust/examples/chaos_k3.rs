@@ -1,33 +1,41 @@
-//! K = 3 chaos smoke — kill a feature party mid-run, Rejoin it, finish.
+//! K = 3 chaos role matrix — kill any role mid-run, resume it, verify
+//! byte parity against an undisturbed reference.
 //!
-//! The CI proof of the supervised session lifecycle (DESIGN.md §8):
-//! run with no arguments, this binary re-executes itself as three OS
-//! processes over loopback TCP — a supervised label party (bounded
-//! straggler waits + a live re-admission point) and two feature
-//! dialers. Mid-run:
+//! The CI proof of the *symmetric* fault-tolerance story (DESIGN.md
+//! §8/§9): run with `--kill <role>`, this binary re-executes itself as
+//! three OS processes over loopback TCP — a supervised label party
+//! (bounded straggler waits + a live re-admission point) and two
+//! feature dialers — then kills the named role at a fixed round and
+//! restarts it from its on-disk snapshot:
 //!
-//! - feature party 2 **exits** right after sending its round-3
-//!   activation (its in-flight round) — the label party observes the
-//!   dead lane, emits `PeerLost`, and keeps stepping on P2's cached
-//!   stale statistics;
-//! - the orchestrator relaunches P2 in **rejoin mode**: it re-dials
-//!   with `Rejoin{last_round: 3}`, receives the buffered round-3
-//!   derivative as a replay, fast-forwards to the acked resume round
-//!   and finishes the run in lock-step;
-//! - feature party 1 sleeps through one round (straggler): the label
-//!   party emits `StragglerTimeout`, steps on P1's stale statistics,
-//!   and reconciles when the late activation arrives — P1's wire
-//!   traffic is **byte-identical** to the undisturbed in-proc
-//!   reference, which the orchestrator asserts per link.
+//! - `--kill feature1` / `--kill feature2`: the victim writes a
+//!   [`FeatureSnapshot`] at every round boundary and **exits** right
+//!   after sending its round-`DIE_AFTER` activation (its in-flight
+//!   round). The label observes the dead lane, emits `PeerLost`, and
+//!   keeps stepping on cached stale statistics. The orchestrator
+//!   relaunches the victim with `--resume <ckpt>`: it restores the
+//!   snapshot's state, re-dials with `Rejoin{last_round}`, consumes
+//!   the replayed in-flight derivative, and finishes in lock-step.
+//!   Meanwhile the *surviving* feature party deliberately straggles
+//!   one round — its links must stay **byte-identical** to the
+//!   undisturbed in-proc reference. P1 is the fp16 lane and P2 the
+//!   identity lane, so the matrix covers a compressed and an
+//!   uncompressed victim.
+//! - `--kill label`: the label writes a [`SessionSnapshot`] at the
+//!   crash boundary and exits without any teardown. Both features
+//!   survive the outage by re-dialing `Rejoin` with their completed
+//!   round; the relaunched label (`--resume <ckpt>`) re-admits them at
+//!   the snapshot round and the run completes. Every post-restart link
+//!   segment must be byte-identical, per round, to the reference.
 //!
-//! The run must complete the same number of rounds as the undisturbed
-//! reference, with `peer_lost`/`peer_rejoined`/`straggler_timeout`
-//! events recorded, and with training-only byte accounting intact:
-//! every per-link row must be an exact multiple of its frame size
-//! (the bootstrap/rejoin handshakes live on raw sockets and never
-//! leak into `LinkStats`).
+//! Every scenario asserts round-count parity with the reference and
+//! per-link `(wire, raw, msgs)` byte equality on surviving links; the
+//! whole binary is artifact-free (no XLA, no model) so it runs on a
+//! bare CI runner.
 //!
-//!     cargo run --release --example chaos_k3
+//!     cargo run --release --example chaos_k3 -- --kill feature2
+//!     cargo run --release --example chaos_k3 -- --kill feature1
+//!     cargo run --release --example chaos_k3 -- --kill label
 
 use std::io::BufRead;
 use std::sync::Arc;
@@ -39,6 +47,8 @@ use celu_vfl::protocol::{outbound_stats, Lane, Message,
                          FRAME_V2_OVERHEAD};
 use celu_vfl::session::bootstrap::{inproc_mesh, rejoin_dial,
                                    SessionDialer, SessionListener};
+use celu_vfl::session::checkpoint::{FeatureSnapshot, LinkCodecState,
+                                    SessionSnapshot};
 use celu_vfl::session::supervisor::{session_epoch, LaneSet};
 use celu_vfl::session::{Link, PartyId, LABEL_PARTY};
 use celu_vfl::tensor::Tensor;
@@ -49,9 +59,12 @@ const ROUNDS: u64 = 14;
 const BATCH: usize = 16;
 const Z_DIM: usize = 4;
 const STRAGGLER_MS: u64 = 250;
-/// P2's in-flight round when it dies.
+/// A killed feature party's in-flight round when it dies.
 const DIE_AFTER: u64 = 3;
-/// P1 sleeps through this round to force a straggler timeout.
+/// The label's last completed round in the `--kill label` scenario.
+const KILL_LABEL_AFTER: u64 = 5;
+/// The surviving feature party sleeps through this round to force a
+/// straggler timeout on top of the outage.
 const STRAGGLE_ROUND: u64 = 8;
 const JOIN_TIMEOUT: Duration = Duration::from_secs(20);
 
@@ -62,10 +75,11 @@ const JOIN_TIMEOUT: Duration = Duration::from_secs(20);
 ///
 /// The simulated WAN matters here: degraded rounds are paced by the
 /// *live* lanes, so with instant links the label would finish every
-/// remaining round in microseconds and the relaunched P2 would find a
-/// dead listener. An 80 ms RTT (~40 ms per send, charged identically
-/// in the in-proc reference, so byte parity is unaffected) makes each
-/// round take ~80 ms — the rejoin deterministically lands mid-run.
+/// remaining round in microseconds and the relaunched victim would
+/// find a dead listener. An 80 ms RTT (~40 ms per send, charged
+/// identically in the in-proc reference, so byte parity is unaffected)
+/// makes each round take ~80 ms — the rejoin deterministically lands
+/// mid-run.
 fn smoke_cfg() -> RunConfig {
     let mut cfg = RunConfig::quick();
     cfg.parties = 3;
@@ -91,13 +105,24 @@ fn synth(party: u16, round: u64) -> Tensor {
     Tensor::f32(vec![BATCH, Z_DIM], v)
 }
 
+/// The deterministic "model state" a feature party checkpoints after
+/// completing `round` rounds — the relaunched process asserts it reads
+/// back exactly these tensors.
+fn snapshot_state(party: u16, round: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+    (vec![synth(party, round)], vec![synth(party + 7, round)])
+}
+
 /// One feature party's traffic from `start` to ROUNDS. The codec is
 /// pre-negotiated from the link's join-time mask — no Hello. `die`
 /// exits the process right after sending that round's activation;
-/// `straggle` sleeps past the label's wait window before sending.
+/// `straggle` sleeps past the label's wait window before sending;
+/// `ckpt_dir` writes a [`FeatureSnapshot`] at every round boundary
+/// (checkpoint-every = 1), exactly like the production comm worker.
+#[allow(clippy::too_many_arguments)]
 fn feature_rounds(party: PartyId, transport: &Arc<dyn Transport>,
                   codec: CodecKind, start: u64, die: Option<u64>,
-                  straggle: Option<u64>) -> anyhow::Result<()> {
+                  straggle: Option<u64>, ckpt_dir: Option<&str>,
+                  epoch: u32) -> anyhow::Result<()> {
     for round in start..ROUNDS {
         if straggle == Some(round) {
             std::thread::sleep(Duration::from_millis(STRAGGLER_MS + 200));
@@ -117,6 +142,19 @@ fn feature_rounds(party: PartyId, transport: &Arc<dyn Transport>,
             }
             other => anyhow::bail!("unexpected {:?}", other.tag()),
         }
+        if let Some(dir) = ckpt_dir {
+            let (params, accs) = snapshot_state(party.0, round + 1);
+            FeatureSnapshot {
+                epoch,
+                round: round + 1,
+                parties: 3,
+                party: party.0,
+                codec,
+                params,
+                accs,
+            }
+            .save(dir)?;
+        }
     }
     match transport.recv()? {
         Message::Shutdown => Ok(()),
@@ -129,12 +167,15 @@ fn negotiated(cfg: &RunConfig, party: PartyId, link: &Link) -> CodecKind {
 }
 
 /// The supervised label loop over a [`LaneSet`] — the same machinery
-/// `coordinator::label_party` drives, minus the model.
-fn label_rounds(cfg: &RunConfig, lanes: &mut LaneSet)
-                -> anyhow::Result<(u64, u64)> {
-    lanes.handshake(cfg, None)?;
+/// `coordinator::label_party` drives, minus the model. `die_after`
+/// writes a boundary [`SessionSnapshot`] to `ckpt_dir` after that
+/// round's fan-out and hard-exits (the `--kill label` crash point).
+fn label_rounds(cfg: &RunConfig, lanes: &mut LaneSet, start: u64,
+                pinned: Option<&[LinkCodecState]>, die_after: Option<u64>,
+                ckpt_dir: Option<&str>) -> anyhow::Result<(u64, u64)> {
+    lanes.handshake(cfg, pinned)?;
     let mut stale_rounds = 0u64;
-    for round in 0..ROUNDS {
+    for round in start..ROUNDS {
         let inputs = lanes.collect(round)?;
         if inputs.iter().any(|i| !i.is_fresh()) {
             stale_rounds += 1;
@@ -151,6 +192,26 @@ fn label_rounds(cfg: &RunConfig, lanes: &mut LaneSet)
         );
         let _views = lanes.stage_derivatives(round, &dza)?;
         lanes.send_staged(round)?;
+        if die_after == Some(round) {
+            // Crash point: persist the boundary snapshot (no model in
+            // this smoke — codec states are what resumption needs),
+            // then die hard: no Shutdown, no lane teardown.
+            let dir = ckpt_dir
+                .ok_or_else(|| anyhow::anyhow!(
+                    "--die-after on the label needs --ckpt-dir"))?;
+            let path = SessionSnapshot {
+                epoch: lanes.epoch(),
+                round: round + 1,
+                parties: cfg.parties as u16,
+                links: lanes.codec_states(),
+                params: Vec::new(),
+                accs: Vec::new(),
+            }
+            .save(dir)?;
+            println!("CKPT {path}");
+            std::io::Write::flush(&mut std::io::stdout())?;
+            std::process::exit(0);
+        }
     }
     lanes.shutdown();
     Ok((ROUNDS, stale_rounds))
@@ -161,18 +222,44 @@ fn link_line(src: u16, dst: u16,
     format!("LINK {src} {dst} {} {} {}", s.bytes, s.raw_bytes, s.messages)
 }
 
-// ---- the three roles -------------------------------------------------------
+// ---- the roles -------------------------------------------------------------
 
-fn run_label(listen: &str) -> anyhow::Result<()> {
+fn run_label(listen: &str, die_after: Option<u64>, ckpt_dir: Option<&str>,
+             resume: Option<&str>) -> anyhow::Result<()> {
     let cfg = smoke_cfg();
-    let listener = SessionListener::bind(listen)?.with_timeout(JOIN_TIMEOUT);
+    let (listener, snap) = if let Some(path) = resume {
+        let snap = SessionSnapshot::load(path)?;
+        // The relaunch must reclaim the exact address the dialers
+        // know; retry while the dead process's socket drains.
+        let deadline = std::time::Instant::now() + JOIN_TIMEOUT;
+        let listener = loop {
+            match SessionListener::bind(listen) {
+                Ok(l) => break l,
+                Err(e) => {
+                    anyhow::ensure!(
+                        std::time::Instant::now() < deadline,
+                        "rebind of {listen} failed: {e:#}"
+                    );
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        };
+        (listener
+             .with_timeout(JOIN_TIMEOUT)
+             .with_resume(snap.epoch, snap.round),
+         Some(snap))
+    } else {
+        (SessionListener::bind(listen)?.with_timeout(JOIN_TIMEOUT), None)
+    };
     println!("ADDR {}", listener.local_addr()?);
     use std::io::Write;
     std::io::stdout().flush()?;
-    let (links, readmission, _epoch, _start) =
+    let (links, readmission, _epoch, start) =
         listener.establish_supervised(&cfg)?;
     let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
-    let (rounds, stale_rounds) = label_rounds(&cfg, &mut lanes)?;
+    let (rounds, stale_rounds) = label_rounds(
+        &cfg, &mut lanes, start,
+        snap.as_ref().map(|s| &s.links[..]), die_after, ckpt_dir)?;
     println!("ROUNDS {rounds}");
     println!("STALE {stale_rounds}");
     println!("REJOINS {}", lanes.total_rejoins());
@@ -191,7 +278,8 @@ fn run_label(listen: &str) -> anyhow::Result<()> {
 }
 
 fn run_feature(party: u16, connect: &str, die: Option<u64>,
-               straggle: Option<u64>) -> anyhow::Result<()> {
+               straggle: Option<u64>, ckpt_dir: Option<&str>)
+               -> anyhow::Result<()> {
     let cfg = smoke_cfg();
     let (link, start) = SessionDialer::new(connect, PartyId(party))
         .with_timeout(JOIN_TIMEOUT)
@@ -199,19 +287,44 @@ fn run_feature(party: u16, connect: &str, die: Option<u64>,
     anyhow::ensure!(start == 0, "fresh join resumed at {start}");
     let codec = negotiated(&cfg, PartyId(party), &link);
     feature_rounds(PartyId(party), &link.transport, codec, 0, die,
-                   straggle)?;
+                   straggle, ckpt_dir, session_epoch(cfg.seed))?;
     println!("{}", link_line(party, LABEL_PARTY.0,
                              &link.transport.stats()));
     Ok(())
 }
 
-/// Relaunched P2: re-dial with `Rejoin`, consume the replayed
-/// in-flight derivative, resume at the acked round.
-fn run_rejoiner(party: u16, connect: &str, last_round: u64)
-                -> anyhow::Result<()> {
+/// Relaunched feature victim: restore the snapshot, re-dial with
+/// `Rejoin{last_round = snapshot round}`, consume the replayed
+/// in-flight derivative, resume at the acked round with the snapshot's
+/// pinned codec.
+fn run_rejoiner(party: u16, connect: &str, last_round: u64,
+                resume: Option<&str>) -> anyhow::Result<()> {
     let cfg = smoke_cfg();
     let epoch = session_epoch(cfg.seed);
-    let (transport, resume, replays) = rejoin_dial(
+    let (last_round, codec) = if let Some(path) = resume {
+        let snap = FeatureSnapshot::load(path)?;
+        anyhow::ensure!(
+            snap.party == party && snap.epoch == epoch,
+            "{path} does not belong to this party/session"
+        );
+        // The restored "model": the snapshot must round-trip exactly
+        // the tensors the dying process wrote at that boundary.
+        let (params, accs) = snapshot_state(party, snap.round);
+        anyhow::ensure!(
+            snap.params == params && snap.accs == accs,
+            "snapshot state diverged from what was written"
+        );
+        println!("RESTORED {} {}", snap.round, snap.codec.label());
+        (snap.round, snap.codec)
+    } else {
+        // Legacy fallback: no snapshot, claim the round from the CLI
+        // and re-derive the codec from this build's mask (see
+        // SessionDialer::establish_resumable for the rationale).
+        (last_round,
+         compress::negotiate(cfg.codec_for(party),
+                             Some(compress::supported_mask())))
+    };
+    let (transport, resume_round, replays) = rejoin_dial(
         connect, PartyId(party), &cfg, epoch, last_round, JOIN_TIMEOUT)?;
     for _ in 0..replays {
         match transport.recv()?.into_plain()? {
@@ -224,12 +337,71 @@ fn run_rejoiner(party: u16, connect: &str, last_round: u64)
             other => anyhow::bail!("unexpected replay {:?}", other.tag()),
         }
     }
-    // Same build ⇒ the label decodes everything we do; see
-    // SessionDialer::establish_resumable for the mask rationale.
-    let codec = compress::negotiate(cfg.codec_for(party),
-                                    Some(compress::supported_mask()));
     let transport = &transport;
-    feature_rounds(PartyId(party), transport, codec, resume, None, None)?;
+    feature_rounds(PartyId(party), transport, codec, resume_round, None,
+                   None, None, epoch)?;
+    println!("RESUMED {resume_round} {replays}");
+    println!("{}", link_line(party, LABEL_PARTY.0, &transport.stats()));
+    Ok(())
+}
+
+/// A feature party that survives a *label* crash: on transport failure
+/// it re-dials the relaunched listener with `Rejoin{last_round = its
+/// completed rounds}` and resumes where the label's snapshot says.
+/// Prints the post-restart link segment (the fresh transport's stats).
+fn run_feature_resilient(party: u16, connect: &str) -> anyhow::Result<()> {
+    let cfg = smoke_cfg();
+    let pid = PartyId(party);
+    let (link, start) = SessionDialer::new(connect, pid)
+        .with_timeout(JOIN_TIMEOUT)
+        .establish_resumable(&cfg)?;
+    anyhow::ensure!(start == 0, "fresh join resumed at {start}");
+    let codec = negotiated(&cfg, pid, &link);
+    let epoch = session_epoch(cfg.seed);
+    let mut transport: Arc<dyn Transport> = link.transport.clone();
+    let mut resumed: Option<(u64, u64)> = None;
+    let mut round = 0u64;
+    while round < ROUNDS {
+        let za = synth(party, round);
+        let (msg, _) = outbound_stats(codec, Lane::Activation, round, za)?;
+        let dead = match transport.send(msg) {
+            Err(_) => true,
+            Ok(()) => match transport.recv() {
+                Err(_) => true,
+                Ok(m) => match m.into_plain()? {
+                    Message::Derivative { round: r, .. } => {
+                        anyhow::ensure!(r == round,
+                                        "round skew: {r} at {round}");
+                        false
+                    }
+                    other => anyhow::bail!("unexpected {:?}",
+                                           other.tag()),
+                },
+            },
+        };
+        if !dead {
+            round += 1;
+            continue;
+        }
+        // The label died; its relaunch re-admits Rejoins claiming our
+        // completed rounds and acks the snapshot's resume round.
+        let (tr, resume, replays) = rejoin_dial(
+            connect, pid, &cfg, epoch, round, JOIN_TIMEOUT)?;
+        anyhow::ensure!(replays == 0,
+                        "a restarted label has nothing to replay \
+                         ({replays})");
+        transport = tr;
+        resumed = Some((resume, replays as u64));
+        round = resume;
+    }
+    loop {
+        match transport.recv() {
+            Ok(Message::Shutdown) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+    let (resume, replays) = resumed
+        .ok_or_else(|| anyhow::anyhow!("the label never went down"))?;
     println!("RESUMED {resume} {replays}");
     println!("{}", link_line(party, LABEL_PARTY.0, &transport.stats()));
     Ok(())
@@ -266,6 +438,7 @@ fn run_inproc_reference() -> anyhow::Result<LinkMap> {
     let mut handles = Vec::new();
     let mut feature_transports = Vec::new();
     let mut label_links: Vec<Link> = Vec::new();
+    let epoch = session_epoch(cfg.seed);
     for (i, bs) in feature_bs.into_iter().enumerate() {
         let party = PartyId(i as u16 + 1);
         let cfg_f = cfg.clone();
@@ -277,7 +450,8 @@ fn run_inproc_reference() -> anyhow::Result<LinkMap> {
         let transport = link.transport.clone();
         feature_transports.push((party, transport.clone()));
         handles.push(std::thread::spawn(move || {
-            feature_rounds(party, &transport, codec, 0, None, None)
+            feature_rounds(party, &transport, codec, 0, None, None, None,
+                           epoch)
         }));
     }
     {
@@ -285,7 +459,8 @@ fn run_inproc_reference() -> anyhow::Result<LinkMap> {
         label_links.extend(label_bs.establish(&cfg)?);
     }
     let mut lanes = LaneSet::new(&cfg, &label_links, None);
-    let (rounds, stale) = label_rounds(&cfg, &mut lanes)?;
+    let (rounds, stale) = label_rounds(&cfg, &mut lanes, 0, None, None,
+                                       None)?;
     anyhow::ensure!(rounds == ROUNDS && stale == 0,
                     "reference run degraded ({rounds} rounds, {stale} \
                      stale)");
@@ -305,13 +480,60 @@ fn run_inproc_reference() -> anyhow::Result<LinkMap> {
     Ok(map)
 }
 
-// ---- orchestrator ----------------------------------------------------------
+// ---- orchestrators ---------------------------------------------------------
 
-fn orchestrate() -> anyhow::Result<()> {
+/// Read child stdout lines until the `ADDR ` announcement.
+fn read_addr(out: &mut impl BufRead) -> anyhow::Result<String> {
+    loop {
+        let mut line = String::new();
+        anyhow::ensure!(
+            out.read_line(&mut line)? > 0,
+            "label process exited before announcing its address"
+        );
+        if let Some(a) = line.trim().strip_prefix("ADDR ") {
+            return Ok(a.to_string());
+        }
+    }
+}
+
+fn grab_line(text: &str, prefix: &str) -> anyhow::Result<u64> {
+    text.lines()
+        .find_map(|l| l.trim().strip_prefix(prefix))
+        .and_then(|v| v.split_whitespace().next()?.parse::<u64>().ok())
+        .ok_or_else(|| anyhow::anyhow!("no {prefix} line"))
+}
+
+/// Per-frame wire/raw cost of one statistics frame under `codec` —
+/// fixed across rounds (same shape every round), so per-round byte
+/// parity reduces to arithmetic on these.
+fn frame_cost(codec: CodecKind, party: u16) -> anyhow::Result<(u64, u64)> {
+    let (msg, _) = outbound_stats(codec, Lane::Activation, 0,
+                                  synth(party, 0))?;
+    Ok(((msg.wire_bytes() + FRAME_V2_OVERHEAD) as u64,
+        (msg.raw_bytes() + FRAME_V2_OVERHEAD) as u64))
+}
+
+fn shutdown_cost() -> u64 {
+    (Message::Shutdown.wire_bytes() + FRAME_V2_OVERHEAD) as u64
+}
+
+/// `--kill feature1` / `--kill feature2`: kill one feature party at
+/// its fault point, restart it from its own snapshot, assert parity.
+fn orchestrate_feature_kill(victim: u16) -> anyhow::Result<()> {
     use std::process::{Command, Stdio};
+    anyhow::ensure!(victim == 1 || victim == 2, "bad victim {victim}");
+    let survivor: u16 = 3 - victim;
+    let cfg = smoke_cfg();
+    let victim_codec = compress::negotiate(
+        cfg.codec_for(victim), Some(compress::supported_mask()));
 
     let expected = run_inproc_reference()?;
     println!("in-proc reference complete ({} links)", expected.len());
+
+    let dir = std::env::temp_dir().join(format!(
+        "celu_chaos_f{victim}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_string_lossy().into_owned();
 
     let exe = std::env::current_exe()?;
     let mut label = Command::new(&exe)
@@ -320,81 +542,72 @@ fn orchestrate() -> anyhow::Result<()> {
         .spawn()?;
     let mut label_out =
         std::io::BufReader::new(label.stdout.take().expect("label stdout"));
-    let mut addr = String::new();
-    loop {
-        let mut line = String::new();
-        anyhow::ensure!(
-            label_out.read_line(&mut line)? > 0,
-            "label process exited before announcing its address"
-        );
-        if let Some(a) = line.trim().strip_prefix("ADDR ") {
-            addr = a.to_string();
-            break;
-        }
-    }
-    println!("label listening at {addr}; spawning feature processes");
+    let addr = read_addr(&mut label_out)?;
+    println!("label listening at {addr}; killing feature P{victim}");
 
-    // P1: full run, with one deliberate straggle. P2: dies after its
-    // round-DIE_AFTER activation.
-    let p1 = Command::new(&exe)
-        .args(["--role", "feature", "--party", "1",
+    // The survivor runs the full session with one deliberate straggle;
+    // the victim checkpoints every boundary and dies mid-round.
+    let surv = Command::new(&exe)
+        .args(["--role", "feature", "--party", &survivor.to_string(),
                "--connect", addr.as_str(),
                "--straggle-round", &STRAGGLE_ROUND.to_string()])
         .stdout(Stdio::piped())
         .spawn()?;
-    let p2 = Command::new(&exe)
-        .args(["--role", "feature", "--party", "2",
+    let vict = Command::new(&exe)
+        .args(["--role", "feature", "--party", &victim.to_string(),
                "--connect", addr.as_str(),
-               "--die-after", &DIE_AFTER.to_string()])
+               "--die-after", &DIE_AFTER.to_string(),
+               "--ckpt-dir", &dir_s])
         .stdout(Stdio::piped())
         .spawn()?;
-    let p2_out = p2.wait_with_output()?;
-    anyhow::ensure!(p2_out.status.success(),
-                    "phase-1 P2 exited abnormally");
-    println!("P2 died after round {DIE_AFTER}; label is degraded");
+    let vict_out = vict.wait_with_output()?;
+    anyhow::ensure!(vict_out.status.success(),
+                    "phase-1 victim exited abnormally");
+    println!("P{victim} died after round {DIE_AFTER}; label is degraded");
     // Let the label run degraded for a few ~80 ms (WAN-paced) rounds
-    // before the comeback; the remaining 11 rounds take ~900 ms (plus
-    // P1's straggler window), so the rejoin lands mid-run with margin
-    // on both sides even under a slow process spawn.
+    // before the comeback; the remaining rounds take ~900 ms (plus the
+    // survivor's straggler window), so the rejoin lands mid-run with
+    // margin on both sides even under a slow process spawn.
     std::thread::sleep(Duration::from_millis(250));
-    let p2b = Command::new(&exe)
-        .args(["--role", "rejoin", "--party", "2",
+    // The victim's latest boundary snapshot: DIE_AFTER completed
+    // rounds (it died before completing its in-flight round).
+    let ckpt = dir.join(format!(
+        "ckpt_p{victim:03}_round_{DIE_AFTER:08}.celuckpt"));
+    anyhow::ensure!(ckpt.is_file(),
+                    "expected snapshot {} missing", ckpt.display());
+    let back = Command::new(&exe)
+        .args(["--role", "rejoin", "--party", &victim.to_string(),
                "--connect", addr.as_str(),
-               "--last-round", &DIE_AFTER.to_string()])
+               "--resume", &ckpt.to_string_lossy()])
         .stdout(Stdio::piped())
         .spawn()?;
 
     let mut got = LinkMap::new();
-    let p1_out = p1.wait_with_output()?;
-    anyhow::ensure!(p1_out.status.success(), "P1 failed");
-    parse_link_lines(&String::from_utf8_lossy(&p1_out.stdout), &mut got)?;
-    let p2b_out = p2b.wait_with_output()?;
-    anyhow::ensure!(p2b_out.status.success(), "rejoined P2 failed");
-    let p2b_text = String::from_utf8_lossy(&p2b_out.stdout).into_owned();
-    parse_link_lines(&p2b_text, &mut got)?;
-    let (resume, replays) = p2b_text
+    let surv_out = surv.wait_with_output()?;
+    anyhow::ensure!(surv_out.status.success(), "survivor failed");
+    parse_link_lines(&String::from_utf8_lossy(&surv_out.stdout), &mut got)?;
+    let back_out = back.wait_with_output()?;
+    anyhow::ensure!(back_out.status.success(), "rejoined victim failed");
+    let back_text = String::from_utf8_lossy(&back_out.stdout).into_owned();
+    parse_link_lines(&back_text, &mut got)?;
+    let restored = grab_line(&back_text, "RESTORED ")?;
+    anyhow::ensure!(restored == DIE_AFTER,
+                    "snapshot restored round {restored}, expected \
+                     {DIE_AFTER}");
+    let resume = grab_line(&back_text, "RESUMED ")?;
+    let replays = back_text
         .lines()
         .find_map(|l| l.strip_prefix("RESUMED "))
-        .and_then(|rest| {
-            let mut it = rest.split_whitespace();
-            Some((it.next()?.parse::<u64>().ok()?,
-                  it.next()?.parse::<u64>().ok()?))
-        })
-        .ok_or_else(|| anyhow::anyhow!("no RESUMED line from P2"))?;
+        .and_then(|rest| rest.split_whitespace().nth(1)?.parse().ok())
+        .unwrap_or(u64::MAX);
 
     let mut rest = String::new();
     std::io::Read::read_to_string(&mut label_out, &mut rest)?;
     anyhow::ensure!(label.wait()?.success(), "label process failed");
     parse_link_lines(&rest, &mut got)?;
-    let grab = |prefix: &str| -> anyhow::Result<u64> {
-        rest.lines()
-            .find_map(|l| l.strip_prefix(prefix))
-            .and_then(|v| v.trim().parse::<u64>().ok())
-            .ok_or_else(|| anyhow::anyhow!("no {prefix} line from label"))
-    };
-    let rounds = grab("ROUNDS ")?;
-    let stale = grab("STALE ")?;
-    let rejoins = grab("REJOINS ")?;
+    let rounds = grab_line(&rest, "ROUNDS ")?;
+    let stale = grab_line(&rest, "STALE ")?;
+    let rejoins = grab_line(&rest, "REJOINS ")?;
     let events: Vec<(String, i64, u64)> = rest
         .lines()
         .filter_map(|l| l.strip_prefix("EVENT "))
@@ -421,60 +634,194 @@ fn orchestrate() -> anyhow::Result<()> {
                     "the in-flight round-{DIE_AFTER} derivative must be \
                      replayed exactly once (got {replays})");
     anyhow::ensure!(stale >= 2,
-                    "expected ≥2 degraded rounds (P2 outage + P1 \
-                     straggle), saw {stale}");
+                    "expected ≥2 degraded rounds (victim outage + \
+                     survivor straggle), saw {stale}");
     anyhow::ensure!(rejoins == 1, "expected exactly one rejoin");
     // 2. Lifecycle events recorded.
     let has = |kind: &str, party: i64| {
         events.iter().any(|(k, p, _)| k == kind && *p == party)
     };
-    anyhow::ensure!(has("peer_lost", 2), "no peer_lost for P2");
-    anyhow::ensure!(has("peer_rejoined", 2), "no peer_rejoined for P2");
-    anyhow::ensure!(has("straggler_timeout", 1),
-                    "no straggler_timeout for P1");
-    // 3. P1's links are byte-identical to the undisturbed reference:
-    //    stragglers reconcile, they do not change the wire.
-    for key in [(1u16, 0u16), (0u16, 1u16)] {
+    anyhow::ensure!(has("peer_lost", victim as i64),
+                    "no peer_lost for P{victim}");
+    anyhow::ensure!(has("peer_rejoined", victim as i64),
+                    "no peer_rejoined for P{victim}");
+    anyhow::ensure!(has("straggler_timeout", survivor as i64),
+                    "no straggler_timeout for P{survivor}");
+    // 3. The survivor's links are byte-identical to the undisturbed
+    //    reference: stragglers reconcile, they do not change the wire.
+    for key in [(survivor, 0u16), (0u16, survivor)] {
         anyhow::ensure!(
             got.get(&key) == expected.get(&key),
-            "P1 link {key:?} diverged from the reference: {:?} != {:?}",
-            got.get(&key), expected.get(&key)
+            "survivor link {key:?} diverged from the reference: \
+             {:?} != {:?}", got.get(&key), expected.get(&key)
         );
     }
-    // 4. P2's accounting is training-only and frame-exact. All frames
-    //    on the identity lane have fixed sizes, so every row must be an
-    //    exact multiple — the rejoin handshake ran on the raw socket
-    //    and must not have leaked a byte into LinkStats.
-    let act = (Message::Activation { round: 0, tensor: synth(2, 0) }
-        .wire_bytes() + FRAME_V2_OVERHEAD) as u64;
-    let der = act; // same shape, same identity codec
-    let shutdown =
-        (Message::Shutdown.wire_bytes() + FRAME_V2_OVERHEAD) as u64;
-    let p2_row = got[&(2, 0)];
+    // 4. The victim's accounting is training-only and frame-exact. All
+    //    frames on a lane have fixed sizes, so every row must be an
+    //    exact multiple — bootstrap/rejoin handshakes live on raw
+    //    sockets and must not leak a byte into LinkStats.
+    let (act_w, act_r) = frame_cost(victim_codec, victim)?;
+    let der = (act_w, act_r); // same shape, same per-lane codec
+    let shutdown = shutdown_cost();
+    let post = got[&(victim, 0)];
     anyhow::ensure!(
-        p2_row == ((ROUNDS - resume) * act, (ROUNDS - resume) * act,
-                   ROUNDS - resume),
-        "rejoined P2 row {:?} != {} acts of {act} B", p2_row,
+        post == ((ROUNDS - resume) * act_w, (ROUNDS - resume) * act_r,
+                 ROUNDS - resume),
+        "rejoined P{victim} row {post:?} != {} acts of {act_w}/{act_r} B",
         ROUNDS - resume
     );
-    let l2_row = got[&(0, 2)];
+    let l_row = got[&(0, victim)];
     // Sends while the lane was up: rounds 0..DIE_AFTER for sure, the
     // death-round send races the EOF (counted iff the kernel took it),
     // then resume..ROUNDS after the rejoin, +1 replay, +1 Shutdown.
     let base = DIE_AFTER + (ROUNDS - resume) + 1;
-    let candidates = [
-        (base * der + shutdown, base + 1),
-        ((base + 1) * der + shutdown, base + 2),
-    ];
+    let fits = |m: u64| l_row == (m * der.0 + shutdown,
+                                  m * der.1 + shutdown, m + 1);
     anyhow::ensure!(
-        candidates.iter().any(|&(b, m)| l2_row == (b, b, m)),
-        "label→P2 row {:?} is not training-frame-exact (base {base}, \
-         der {der} B, shutdown {shutdown} B)", l2_row
+        fits(base) || fits(base + 1),
+        "label→P{victim} row {l_row:?} is not training-frame-exact \
+         (base {base}, der {}/{} B, shutdown {shutdown} B)",
+        der.0, der.1
     );
+    let _ = std::fs::remove_dir_all(&dir);
     println!(
-        "\nK=3 chaos smoke OK: kill+Rejoin mid-round converged to \
-         {ROUNDS} rounds; P1 byte-identical to reference; P2 \
-         accounting frame-exact"
+        "\nK=3 chaos (kill feature P{victim}, codec {}) OK: \
+         snapshot-resume converged to {ROUNDS} rounds; P{survivor} \
+         byte-identical to reference; P{victim} accounting frame-exact",
+        victim_codec.label()
+    );
+    Ok(())
+}
+
+/// `--kill label`: crash the label at a boundary, relaunch it with
+/// `--resume`, and assert every post-restart link segment is
+/// byte-identical, per round, to the reference.
+fn orchestrate_label_kill() -> anyhow::Result<()> {
+    use std::process::{Command, Stdio};
+    let expected = run_inproc_reference()?;
+    println!("in-proc reference complete ({} links)", expected.len());
+
+    let dir = std::env::temp_dir().join(format!(
+        "celu_chaos_label_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_string_lossy().into_owned();
+
+    let exe = std::env::current_exe()?;
+    let mut label = Command::new(&exe)
+        .args(["--role", "label", "--listen", "127.0.0.1:0",
+               "--die-after", &KILL_LABEL_AFTER.to_string(),
+               "--ckpt-dir", &dir_s])
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let mut label_out =
+        std::io::BufReader::new(label.stdout.take().expect("label stdout"));
+    let addr = read_addr(&mut label_out)?;
+    println!("label listening at {addr}; spawning resilient features");
+
+    let spawn_feature = |party: u16| {
+        Command::new(&exe)
+            .args(["--role", "feature-resilient",
+                   "--party", &party.to_string(),
+                   "--connect", addr.as_str()])
+            .stdout(Stdio::piped())
+            .spawn()
+    };
+    let p1 = spawn_feature(1)?;
+    let p2 = spawn_feature(2)?;
+
+    // Phase 1 ends when the label reaches its crash point: it prints
+    // the snapshot path and hard-exits.
+    let mut first = String::new();
+    std::io::Read::read_to_string(&mut label_out, &mut first)?;
+    anyhow::ensure!(label.wait()?.success(), "phase-1 label failed");
+    let ckpt = first
+        .lines()
+        .find_map(|l| l.trim().strip_prefix("CKPT "))
+        .ok_or_else(|| anyhow::anyhow!("no CKPT line from the label"))?
+        .to_string();
+    let resume_round = KILL_LABEL_AFTER + 1;
+    anyhow::ensure!(
+        ckpt.contains(&format!("ckpt_round_{resume_round:08}")),
+        "unexpected snapshot path {ckpt}"
+    );
+    println!("label died after round {KILL_LABEL_AFTER}; relaunching \
+              from {ckpt}");
+    let relaunch = Command::new(&exe)
+        .args(["--role", "label", "--listen", addr.as_str(),
+               "--resume", &ckpt])
+        .stdout(Stdio::piped())
+        .spawn()?;
+
+    let mut got = LinkMap::new();
+    let mut resumes = Vec::new();
+    for (party, proc_) in [(1u16, p1), (2u16, p2)] {
+        let out = proc_.wait_with_output()?;
+        anyhow::ensure!(out.status.success(), "P{party} failed");
+        let text = String::from_utf8_lossy(&out.stdout).into_owned();
+        parse_link_lines(&text, &mut got)?;
+        resumes.push((party, grab_line(&text, "RESUMED ")?));
+    }
+    let relaunch_out = relaunch.wait_with_output()?;
+    anyhow::ensure!(relaunch_out.status.success(),
+                    "relaunched label failed");
+    let text = String::from_utf8_lossy(&relaunch_out.stdout).into_owned();
+    parse_link_lines(&text, &mut got)?;
+    let rounds = grab_line(&text, "ROUNDS ")?;
+
+    // ---- the acceptance assertions ----------------------------------------
+    println!("\nchaos outcome: rounds={rounds} resumes={resumes:?}");
+    // 1. Round-count parity: the relaunched label completed the run.
+    anyhow::ensure!(rounds == ROUNDS,
+                    "relaunched label finished {rounds} rounds, \
+                     reference {ROUNDS}");
+    // 2. Both features resumed exactly at the snapshot round.
+    for (party, resume) in &resumes {
+        anyhow::ensure!(
+            *resume == resume_round,
+            "P{party} resumed at {resume}, snapshot says {resume_round}"
+        );
+    }
+    // 3. Every post-restart link segment is byte-identical, per round,
+    //    to the reference: frames have fixed per-lane sizes, so the
+    //    reference totals divide evenly and scale to the surviving
+    //    segment exactly.
+    let remaining = ROUNDS - resume_round;
+    let shutdown = shutdown_cost();
+    for p in [1u16, 2] {
+        let full = expected[&(p, 0)];
+        anyhow::ensure!(
+            full.2 == ROUNDS && full.0 % ROUNDS == 0
+                && full.1 % ROUNDS == 0,
+            "reference P{p} row not per-round divisible: {full:?}"
+        );
+        let want = (full.0 / ROUNDS * remaining,
+                    full.1 / ROUNDS * remaining, remaining);
+        anyhow::ensure!(
+            got[&(p, 0)] == want,
+            "post-restart P{p}→label segment {:?} != {want:?}",
+            got[&(p, 0)]
+        );
+        let full = expected[&(0, p)];
+        anyhow::ensure!(
+            full.2 == ROUNDS + 1
+                && (full.0 - shutdown) % ROUNDS == 0
+                && (full.1 - shutdown) % ROUNDS == 0,
+            "reference label→P{p} row not per-round divisible: {full:?}"
+        );
+        let want = ((full.0 - shutdown) / ROUNDS * remaining + shutdown,
+                    (full.1 - shutdown) / ROUNDS * remaining + shutdown,
+                    remaining + 1);
+        anyhow::ensure!(
+            got[&(0, p)] == want,
+            "post-restart label→P{p} segment {:?} != {want:?}",
+            got[&(0, p)]
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "\nK=3 chaos (kill label) OK: snapshot-relaunch converged to \
+         {ROUNDS} rounds; every post-restart link segment \
+         byte-identical to the reference"
     );
     Ok(())
 }
@@ -482,16 +829,25 @@ fn orchestrate() -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     celu_vfl::util::logger::init();
     let cli = Cli::new("chaos_k3",
-                       "K=3 kill+Rejoin chaos smoke (three OS processes)")
+                       "K=3 kill-any-role chaos matrix (three OS \
+                        processes)")
         .opt("role", "orchestrate",
-             "orchestrate | label | feature | rejoin")
+             "orchestrate | label | feature | feature-resilient | rejoin")
+        .opt("kill", "feature2",
+             "orchestrate: which role to kill (label | feature1 | \
+              feature2)")
         .opt("listen", "127.0.0.1:0", "label: listener bind address")
         .opt("connect", "127.0.0.1:0", "feature: label party address")
         .opt("party", "1", "feature: party id (1 or 2)")
-        .opt("die-after", "-", "feature: exit after this round's send")
+        .opt("die-after", "-",
+             "feature: exit after this round's send; label: snapshot \
+              and exit after this round's fan-out")
         .opt("straggle-round", "-",
              "feature: sleep through this round's send")
-        .opt("last-round", "0", "rejoin: rounds completed before death");
+        .opt("ckpt-dir", "-", "write boundary snapshots to this dir")
+        .opt("last-round", "0", "rejoin: rounds completed before death")
+        .opt("resume", "-",
+             "label/rejoin: restart from this snapshot file");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = cli.parse(&argv)?;
     let opt_u64 = |key: &str| -> anyhow::Result<Option<u64>> {
@@ -502,19 +858,43 @@ fn main() -> anyhow::Result<()> {
             })?)),
         }
     };
+    let opt_str = |key: &str| -> Option<String> {
+        match args.get(key) {
+            "-" => None,
+            v => Some(v.to_string()),
+        }
+    };
     match args.get("role") {
-        "orchestrate" => orchestrate(),
-        "label" => run_label(args.get("listen")),
+        "orchestrate" => match args.get("kill") {
+            "label" => orchestrate_label_kill(),
+            "feature1" => orchestrate_feature_kill(1),
+            "feature2" => orchestrate_feature_kill(2),
+            other => anyhow::bail!(
+                "--kill must be label | feature1 | feature2, got \
+                 '{other}'"),
+        },
+        "label" => run_label(
+            args.get("listen"),
+            opt_u64("die-after")?,
+            opt_str("ckpt-dir").as_deref(),
+            opt_str("resume").as_deref(),
+        ),
         "feature" => run_feature(
             args.get_usize("party")? as u16,
             args.get("connect"),
             opt_u64("die-after")?,
             opt_u64("straggle-round")?,
+            opt_str("ckpt-dir").as_deref(),
+        ),
+        "feature-resilient" => run_feature_resilient(
+            args.get_usize("party")? as u16,
+            args.get("connect"),
         ),
         "rejoin" => run_rejoiner(
             args.get_usize("party")? as u16,
             args.get("connect"),
             args.get_u64("last-round")?,
+            opt_str("resume").as_deref(),
         ),
         other => anyhow::bail!("unknown role '{other}'"),
     }

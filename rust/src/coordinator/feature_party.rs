@@ -46,6 +46,7 @@ use crate::metrics::CosineRecorder;
 use crate::protocol::{outbound_stats, Lane, Message};
 use crate::runtime::{ArtifactSet, PartyARuntime};
 use crate::session::bootstrap::rejoin_dial;
+use crate::session::checkpoint::{save_with_retry, FeatureSnapshot};
 use crate::session::supervisor::session_epoch;
 use crate::session::{Link, PartyId};
 use crate::tensor::Tensor;
@@ -72,6 +73,11 @@ pub struct FeatureRunOpts {
     /// First round to run — non-zero when joining a session resumed
     /// from a checkpoint (`SessionDialer::establish_resumable`).
     pub start_round: u64,
+    /// Restart from this party's own checkpoint: bottom-model params
+    /// and AdaGrad accumulators are imported and the wire codec is
+    /// pinned from the snapshot (no renegotiation — the label party's
+    /// lane kept its codec across the rejoin).
+    pub resume: Option<FeatureSnapshot>,
 }
 
 /// Everything a feature party reports after a run.
@@ -111,6 +117,18 @@ pub fn run_feature_party(
         cfg.cos_xi() as f32,
         cfg.weighting_enabled(),
     )?));
+    if let Some(snap) = &opts.resume {
+        runtime
+            .lock()
+            .unwrap()
+            .state
+            .import(&snap.params, &snap.accs)?;
+        log::info!(
+            "[{party}] restored {} params and {} AdaGrad accumulators \
+             from a round-{} snapshot",
+            snap.params.len(), snap.accs.len(), snap.round
+        );
+    }
     // Single-lane mesh workset: the feature party has one peer (the
     // label party), so this is exactly the historic shared workset —
     // same policy, same condvar parking, zero-copy handles.
@@ -170,11 +188,16 @@ pub fn run_feature_party(
     let epoch = session_epoch(cfg.seed);
     let requested = cfg.codec_for(party.0);
     let result: anyhow::Result<()> = (|| {
-        // Codec handshake. Join-time masks pre-negotiate without any
-        // wire exchange; otherwise the historic in-band Hello runs —
-        // only when compression is requested, so an identity config
-        // keeps the wire byte stream exactly as before.
-        let codec = if let Some(mask) = link.peer_codecs {
+        // Codec handshake. A snapshot resume pins the codec the
+        // original join negotiated (the label's lane kept it across
+        // the rejoin, so renegotiating could desynchronize the wire).
+        // Join-time masks pre-negotiate without any wire exchange;
+        // otherwise the historic in-band Hello runs — only when
+        // compression is requested, so an identity config keeps the
+        // wire byte stream exactly as before.
+        let codec = if let Some(snap) = &opts.resume {
+            snap.codec
+        } else if let Some(mask) = link.peer_codecs {
             let eff = compress::negotiate(requested, Some(mask));
             if eff != requested {
                 log::warn!(
@@ -372,6 +395,35 @@ pub fn run_feature_party(
             runtime.lock().unwrap().exact_update(&xa, &dza)?;
             workset.insert(round, idx, vec![(za, dza)]);
             comm_rounds = round + 1;
+
+            // Checkpoint lane (DESIGN.md §9), symmetric to the label
+            // party's §8 lane: snapshot at the round boundary so a
+            // restart resumes from completed work. A failed write
+            // degrades durability, never the session.
+            if !cfg.checkpoint_dir.is_empty()
+                && comm_rounds % cfg.checkpoint_every as u64 == 0
+            {
+                let (params, accs) =
+                    runtime.lock().unwrap().state.export()?;
+                let snap = FeatureSnapshot {
+                    epoch,
+                    round: comm_rounds,
+                    parties: cfg.parties as u16,
+                    party: party.0,
+                    codec,
+                    params,
+                    accs,
+                };
+                match save_with_retry(|| snap.save(&cfg.checkpoint_dir))
+                {
+                    Ok(path) => log::info!(
+                        "[{party}] checkpoint written: {path}"),
+                    Err(e) => log::warn!(
+                        "[{party}] checkpoint at round {comm_rounds} \
+                         failed (training continues without it): {e:#}"
+                    ),
+                }
+            }
 
             // Eval lane.
             if comm_rounds % cfg.eval_every as u64 == 0 {

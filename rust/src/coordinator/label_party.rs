@@ -42,7 +42,7 @@ use crate::data::PartyBData;
 use crate::metrics::{auc_exact, CosineRecorder, SeriesPoint};
 use crate::runtime::{ArtifactSet, PartyBRuntime};
 use crate::session::bootstrap::Readmission;
-use crate::session::checkpoint::SessionSnapshot;
+use crate::session::checkpoint::{save_with_retry, SessionSnapshot};
 use crate::session::supervisor::{session_epoch, LaneInput, LaneSet,
                                  SessionEvent, SessionState};
 use crate::session::{Link, PartyId};
@@ -288,14 +288,32 @@ pub fn run_label_party(
                     params,
                     accs,
                 };
-                let path = snap.save(&cfg.checkpoint_dir)?;
-                log::info!("checkpoint written: {path}");
-                lanes.supervisor_mut().record(
-                    SessionEvent::CheckpointWritten {
-                        round: comm_rounds,
-                        path,
-                    },
-                );
+                // A failed write degrades durability, not the session:
+                // bounded retry, then log + event and keep training.
+                match save_with_retry(|| snap.save(&cfg.checkpoint_dir))
+                {
+                    Ok(path) => {
+                        log::info!("checkpoint written: {path}");
+                        lanes.supervisor_mut().record(
+                            SessionEvent::CheckpointWritten {
+                                round: comm_rounds,
+                                path,
+                            },
+                        );
+                    }
+                    Err(e) => {
+                        log::warn!(
+                            "checkpoint at round {comm_rounds} failed \
+                             (training continues without it): {e:#}"
+                        );
+                        lanes.supervisor_mut().record(
+                            SessionEvent::CheckpointFailed {
+                                round: comm_rounds,
+                                error: format!("{e:#}"),
+                            },
+                        );
+                    }
+                }
             }
 
             // Eval lane + stop decision. Only lanes in lock-step at

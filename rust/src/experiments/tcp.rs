@@ -18,11 +18,16 @@
 //!
 //! Lifecycle knobs: `--straggler-wait-ms` bounds how long the label
 //! party waits per lane before stepping on cached stale statistics;
-//! `--checkpoint-dir`/`--checkpoint-every` write restartable snapshots;
-//! `--resume <ckpt>` restarts a label party from one — the listener
-//! then expects `Rejoin`s (fresh `celu-vfl party` dialers fall back to
-//! `Rejoin` automatically), model state is imported, and training
-//! continues from the snapshot's round.
+//! `--checkpoint-dir`/`--checkpoint-every` write restartable snapshots
+//! on *every* role (DESIGN.md §8/§9); `--resume <ckpt>` restarts a
+//! process from its own snapshot. A resumed label listener expects
+//! `Rejoin`s (fresh `celu-vfl party` dialers fall back to `Rejoin`
+//! automatically), imports its model state, and continues from the
+//! snapshot's round; a resumed feature party `Rejoin`s the live
+//! session claiming its snapshot's completed rounds, restores its
+//! bottom model + AdaGrad state, pins the snapshot's wire codec, and
+//! fast-forwards its deterministic batch cursor to wherever the
+//! session is now.
 //!
 //! Roles accept the session vocabulary (`feature` / `label`) as well as
 //! the historic two-party aliases (`a` = feature, `b` = label). With
@@ -40,7 +45,8 @@ use crate::coordinator::feature_party::{FeatureRunOpts, RejoinPolicy};
 use crate::coordinator::label_party::LabelRunOpts;
 use crate::coordinator::trainer::{feature_slices, load_data, load_set};
 use crate::session::bootstrap::{SessionDialer, SessionListener};
-use crate::session::checkpoint::SessionSnapshot;
+use crate::session::checkpoint::{FeatureSnapshot, SessionSnapshot};
+use crate::session::supervisor::session_epoch;
 use crate::session::{PartyId, SessionBuilder, LABEL_PARTY};
 
 pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
@@ -129,6 +135,37 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 "--party {party} out of range for --parties {} \
                  (valid feature ids: 1..={k})", cfg.parties
             );
+            // A feature party's own snapshot (DESIGN.md §9): validate
+            // that it belongs to this party and this logical session
+            // before any artifact work, so a wrong-file mistake fails
+            // in milliseconds.
+            let snapshot = if resume != "-" && !resume.is_empty() {
+                let snap = FeatureSnapshot::load(resume)?;
+                anyhow::ensure!(
+                    snap.party == party,
+                    "{resume} is party {}'s snapshot, this process is \
+                     --party {party}", snap.party
+                );
+                anyhow::ensure!(
+                    snap.parties == cfg.parties as u16,
+                    "{resume} is from a {}-party session, this config \
+                     says --parties {}", snap.parties, cfg.parties
+                );
+                anyhow::ensure!(
+                    snap.epoch == session_epoch(cfg.seed),
+                    "{resume} belongs to a different logical session \
+                     (epoch {:#x}, this config derives {:#x}) — \
+                     seed/config mismatch?", snap.epoch,
+                    session_epoch(cfg.seed)
+                );
+                log::info!(
+                    "resuming from {resume}: round {}, epoch {:#x}",
+                    snap.round, snap.epoch
+                );
+                Some(snap)
+            } else {
+                None
+            };
             let set = load_set(cfg)?;
             let data = load_data(cfg, &set)?;
             // Every process computes the same deterministic split and
@@ -139,10 +176,15 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             let test = Arc::new(test_slices.swap_remove(party as usize - 1));
             let dialer = SessionDialer::new(connect, PartyId(party))
                 .with_timeout(join_timeout);
-            // Resumable join: falls back to Rejoin when the label party
-            // restarted from a checkpoint, returning the round this
-            // party fast-forwards to.
-            let (link, start_round) = dialer.establish_resumable(cfg)?;
+            // Resumable join: with a snapshot, lead with Rejoin
+            // claiming its completed-round cursor; without one, fall
+            // back to Rejoin only if the label restarted in resume
+            // mode. Either way the returned round is where lock-step
+            // actually resumes.
+            let (link, start_round) = dialer.establish_resumable_from(
+                cfg,
+                snapshot.as_ref().map_or(0, |s| s.round),
+            )?;
             let session = SessionBuilder::new(cfg, PartyId(party))
                 .link_full(link)
                 .build()?;
@@ -156,6 +198,7 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                         timeout: join_timeout,
                     }),
                     start_round,
+                    resume: snapshot,
                 },
             )?;
             let stats = report.link_stats;

@@ -185,8 +185,10 @@ fn cmd_party(argv: &[String]) -> anyhow::Result<()> {
         .opt("join-timeout", "30",
              "seconds to wait for the full mesh to assemble")
         .opt("resume", "-",
-             "label: restart from this checkpoint snapshot (dialers \
-              Rejoin into the resumed session)");
+             "restart from this checkpoint snapshot — label: session \
+              snapshot, dialers Rejoin into the resumed session; \
+              feature: this party's own snapshot, it Rejoins with its \
+              model state restored");
     let args = cli.parse(argv)?;
     let cfg = load_config(&args)?;
     let timeout = args.get_f64("join-timeout")?;

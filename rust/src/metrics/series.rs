@@ -258,6 +258,10 @@ impl RunRecord {
                     {
                         fields.push(("path", Json::Str(path.clone())));
                     }
+                    if let SessionEvent::CheckpointFailed { error, .. } = e
+                    {
+                        fields.push(("error", Json::Str(error.clone())));
+                    }
                     obj(fields)
                 })
                 .collect(),
@@ -421,11 +425,15 @@ mod tests {
                 round: 20,
                 path: "ckpts/ckpt_round_00000020.celuckpt".into(),
             },
+            SessionEvent::CheckpointFailed {
+                round: 25,
+                error: "No space left on device".into(),
+            },
         ];
         let j = r.to_json().to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
         let events = parsed.expect("events").unwrap().as_arr().unwrap();
-        assert_eq!(events.len(), 4);
+        assert_eq!(events.len(), 5);
         assert_eq!(
             events[0].expect("kind").unwrap().as_str().unwrap(),
             "peer_lost"
@@ -440,6 +448,16 @@ mod tests {
         );
         assert!(events[3].expect("path").unwrap().as_str().unwrap()
             .contains("celuckpt"));
+        assert_eq!(
+            events[4].expect("kind").unwrap().as_str().unwrap(),
+            "checkpoint_failed"
+        );
+        assert!(events[4].expect("error").unwrap().as_str().unwrap()
+            .contains("space"));
+        assert_eq!(
+            events[4].expect("round").unwrap().as_usize().unwrap(),
+            25
+        );
         // An undisturbed run serializes an empty array, not a missing
         // key.
         let r = RunRecord::default();

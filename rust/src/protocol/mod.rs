@@ -55,6 +55,17 @@
 //! are validated — version, then id ranges — before the `Message` is
 //! constructed, and they only ever travel on pre-transport sockets.
 //!
+//! Symmetric fault tolerance (DESIGN.md §9) adds one fixed-size refusal
+//! frame the listener can put on a bootstrap socket *before* dropping it:
+//!   `[… tag=13][u64 0][u8 ver][u16 party][u8 reason][u64 round]` —
+//!   `RejoinReject`
+//! Without it, a dialer racing the listener's resume-mode epoch check
+//! sees a bare EOF and can only retry blindly; with it, the dialer logs
+//! the actual refusal ("epoch mismatch (snapshot is round R)" or "this
+//! session resumed from a checkpoint — Rejoin required"). The reject is
+//! sent only for *resume-mode* refusals: hostile or malformed bootstrap
+//! frames still see a silent drop, so a probing stranger learns nothing.
+//!
 //! K-party sessions (DESIGN.md §6) frame every link with a **versioned
 //! header** carrying the endpoints' party ids:
 //!   `[u32 frame_len][u8 tag=8][u8 ver=2][u16 src][u16 dst][v1 body…]`
@@ -127,6 +138,43 @@ pub enum Message {
     /// will replay on the fresh transport before normal traffic.
     RejoinAck { party: PartyId, parties: u16, epoch: u32,
                 resume_round: u64, replays: u32 },
+    /// Bootstrap refusal, label → feature: the listener is dropping
+    /// this dialer's socket and says why first. `reason` is the refusal
+    /// class; `round` is the round the listener's checkpoint resumes at
+    /// (so an epoch-mismatch log can name the snapshot it raced). Sent
+    /// only for resume-mode refusals — never for hostile frames, which
+    /// are still dropped silently.
+    RejoinReject { party: PartyId, reason: RejectReason, round: u64 },
+}
+
+/// Why a resume-mode listener refused a bootstrap frame. Closed set,
+/// carried as one byte on the wire — no free-form text crosses the
+/// party boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The dialer's `Rejoin` echoed a session epoch that is not the
+    /// epoch of the checkpoint this listener resumed from.
+    EpochMismatch,
+    /// The dialer sent a fresh `Join`, but this session is resuming
+    /// from a checkpoint: only `Rejoin` is admissible.
+    NeedRejoin,
+}
+
+impl RejectReason {
+    fn code(self) -> u8 {
+        match self {
+            RejectReason::EpochMismatch => 1,
+            RejectReason::NeedRejoin => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> anyhow::Result<RejectReason> {
+        match c {
+            1 => Ok(RejectReason::EpochMismatch),
+            2 => Ok(RejectReason::NeedRejoin),
+            _ => anyhow::bail!("invalid reject reason code {c}"),
+        }
+    }
 }
 
 /// Which statistics lane a compressed frame travels on. Exactly the
@@ -172,6 +220,7 @@ const TAG_JOIN: u8 = 9;
 const TAG_JOIN_ACK: u8 = 10;
 const TAG_REJOIN: u8 = 11;
 const TAG_REJOIN_ACK: u8 = 12;
+const TAG_REJOIN_REJECT: u8 = 13;
 /// Current addressed-frame version.
 const FRAME_VERSION: u8 = 2;
 /// Current bootstrap (`Join`/`JoinAck`) frame version. Carried in the
@@ -182,6 +231,10 @@ pub const JOIN_VERSION: u8 = 1;
 /// separately from `Join` so the re-admission handshake can evolve
 /// without disturbing the frozen bootstrap fixtures.
 pub const REJOIN_VERSION: u8 = 1;
+/// Current bootstrap-refusal (`RejoinReject`) frame version. Versioned
+/// separately so the refusal vocabulary can grow without disturbing
+/// either frozen handshake layout.
+pub const REJECT_VERSION: u8 = 1;
 
 /// Bytes the v2 envelope adds in front of a v1 body:
 /// `[u8 tag][u8 ver][u16 src][u16 dst]`.
@@ -291,6 +344,7 @@ impl Message {
             Message::JoinAck { .. } => TAG_JOIN_ACK,
             Message::Rejoin { .. } => TAG_REJOIN,
             Message::RejoinAck { .. } => TAG_REJOIN_ACK,
+            Message::RejoinReject { .. } => TAG_REJOIN_REJECT,
         }
     }
 
@@ -315,7 +369,8 @@ impl Message {
             | Message::Join { .. }
             | Message::JoinAck { .. }
             | Message::Rejoin { .. }
-            | Message::RejoinAck { .. } => 0,
+            | Message::RejoinAck { .. }
+            | Message::RejoinReject { .. } => 0,
         }
     }
 
@@ -335,6 +390,8 @@ impl Message {
                 Message::Rejoin { .. } | Message::RejoinAck { .. } => {
                     1 + 2 + 2 + 4 + 8 + 4
                 }
+                // ver + party + reason + round.
+                Message::RejoinReject { .. } => 1 + 2 + 1 + 8,
                 Message::Compressed { stats, .. } => {
                     1 + stats.wire_block_bytes()
                 }
@@ -427,6 +484,12 @@ impl Message {
                 out.extend_from_slice(&epoch.to_le_bytes());
                 out.extend_from_slice(&resume_round.to_le_bytes());
                 out.extend_from_slice(&replays.to_le_bytes());
+            }
+            Message::RejoinReject { party, reason, round } => {
+                out.push(REJECT_VERSION);
+                out.extend_from_slice(&party.0.to_le_bytes());
+                out.push(reason.code());
+                out.extend_from_slice(&round.to_le_bytes());
             }
             Message::Compressed { lane, stats, .. } => {
                 out.push(lane.tag());
@@ -558,6 +621,33 @@ impl Message {
                         resume_round: round_word,
                         replays: trailer,
                     }
+                }
+            }
+            TAG_REJOIN_REJECT => {
+                // Same discipline again: version first, then the party
+                // id and reason code, all validated before the Message
+                // is constructed. No `parties` field travels on a
+                // reject, so the id is bounded by the session-size cap.
+                let ver = r.u8()?;
+                if ver != REJECT_VERSION {
+                    anyhow::bail!(
+                        "unsupported reject version {ver} (this build \
+                         speaks {REJECT_VERSION})"
+                    );
+                }
+                let party = r.u16()?;
+                let reason = RejectReason::from_code(r.u8()?)?;
+                let round = r.u64()?;
+                if party == 0 || party >= MAX_PARTIES {
+                    anyhow::bail!(
+                        "reject frame names party id {party} (valid \
+                         feature ids: 1..={})", MAX_PARTIES - 1
+                    );
+                }
+                Message::RejoinReject {
+                    party: PartyId(party),
+                    reason,
+                    round,
                 }
             }
             TAG_COMP => {
@@ -920,6 +1010,8 @@ mod tests {
         // the `Hello` codec bitmask — no statistics at all.
         // `Rejoin`/`RejoinAck` add only lifecycle scalars (epoch, round
         // counters, replay count) on top of the same topology fields.
+        // `RejoinReject` carries a party id, a closed one-byte reason
+        // code, and a round counter — no statistics, no free-form text.
         let m = Message::Shutdown;
         match m {
             Message::Activation { .. } | Message::Derivative { .. }
@@ -927,6 +1019,9 @@ mod tests {
             | Message::Shutdown | Message::Hello { .. }
             | Message::Join { .. } | Message::JoinAck { .. }
             | Message::Rejoin { .. } | Message::RejoinAck { .. } => {}
+            Message::RejoinReject { reason, .. } => match reason {
+                RejectReason::EpochMismatch | RejectReason::NeedRejoin => {}
+            },
             Message::Compressed { lane, .. } => match lane {
                 Lane::Activation | Lane::Derivative
                 | Lane::EvalActivation => {}
@@ -1663,6 +1758,113 @@ mod bootstrap_tests {
         assert!(Message::decode(&trailing).is_err(), "trailing byte ok'd");
     }
 
+    /// Golden fixtures for the bootstrap-refusal frame, captured at
+    /// introduction time (machine-checked against an independent Python
+    /// rebuild of the layout). Tag 13 is fresh — disjoint from every
+    /// pre-existing tag (1..=12).
+    fn reject_fixtures() -> Vec<(&'static str, Message, &'static str)> {
+        vec![
+            (
+                "reject_p2_epoch_mismatch_round_7",
+                Message::RejoinReject {
+                    party: PartyId(2),
+                    reason: RejectReason::EpochMismatch,
+                    round: 7,
+                },
+                "0d 0000000000000000 01 0200 01 0700000000000000",
+            ),
+            (
+                "reject_p63_need_rejoin_big_round",
+                Message::RejoinReject {
+                    party: PartyId(63),
+                    reason: RejectReason::NeedRejoin,
+                    round: 0x0102_0304_0506_0708,
+                },
+                "0d 0000000000000000 01 3f00 02 0807060504030201",
+            ),
+        ]
+    }
+
+    #[test]
+    fn golden_reject_encode_is_byte_identical() {
+        for (name, msg, hex) in reject_fixtures() {
+            assert_eq!(msg.encode(), hex_to_bytes(hex),
+                       "encode drifted for fixture '{name}'");
+            assert_eq!(msg.wire_bytes(), msg.encode().len() + 4,
+                       "wire_bytes drifted for fixture '{name}'");
+        }
+    }
+
+    #[test]
+    fn golden_reject_decode_recovers_messages() {
+        for (name, msg, hex) in reject_fixtures() {
+            let dec = Message::decode(&hex_to_bytes(hex))
+                .unwrap_or_else(|e| panic!("fixture '{name}': {e}"));
+            assert_eq!(dec, msg, "decode drifted for fixture '{name}'");
+            // Refusal frames travel headerless on the raw socket.
+            let (h, m) = decode_frame(&hex_to_bytes(hex)).unwrap();
+            assert_eq!(h, None, "reject fixture '{name}' grew a header");
+            assert_eq!(m, msg);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_reject_version_reason_and_ids() {
+        let good = Message::RejoinReject {
+            party: PartyId(2),
+            reason: RejectReason::EpochMismatch,
+            round: 4,
+        }
+        .encode();
+        for bad_ver in [0u8, 2, 7, 255] {
+            let mut bent = good.clone();
+            bent[9] = bad_ver; // version byte follows tag + round
+            let e = Message::decode(&bent).unwrap_err().to_string();
+            assert!(e.contains("reject version"),
+                    "version {bad_ver}: {e}");
+        }
+        // Unknown reason codes are refused (the set is closed).
+        for bad_reason in [0u8, 3, 9, 255] {
+            let mut bent = good.clone();
+            bent[12] = bad_reason; // reason byte follows ver + party
+            let e = Message::decode(&bent).unwrap_err().to_string();
+            assert!(e.contains("reject reason"),
+                    "reason {bad_reason}: {e}");
+        }
+        // The label id can never be the rejected party, and ids are
+        // bounded by the session-size cap.
+        for bad_party in [0u16, MAX_PARTIES, u16::MAX] {
+            let mut bent = good.clone();
+            bent[10..12].copy_from_slice(&bad_party.to_le_bytes());
+            assert!(Message::decode(&bent).is_err(),
+                    "reject party {bad_party} decoded");
+        }
+        // Boundary: the largest legal id still decodes.
+        let ok = Message::RejoinReject {
+            party: PartyId(MAX_PARTIES - 1),
+            reason: RejectReason::NeedRejoin,
+            round: 0,
+        };
+        assert_eq!(Message::decode(&ok.encode()).unwrap(), ok);
+    }
+
+    #[test]
+    fn reject_truncations_error_cleanly() {
+        let enc = Message::RejoinReject {
+            party: PartyId(2),
+            reason: RejectReason::NeedRejoin,
+            round: 6,
+        }
+        .encode();
+        for cut in 0..enc.len() {
+            assert!(Message::decode(&enc[..cut]).is_err(),
+                    "truncation at {cut} decoded");
+        }
+        let mut trailing = enc;
+        trailing.push(0);
+        assert!(Message::decode(&trailing).is_err(), "trailing byte ok'd");
+    }
+
     #[test]
     fn join_truncations_error_cleanly() {
         let enc = Message::JoinAck {
@@ -1989,6 +2191,37 @@ mod fuzz_tests {
                 prop_assert!(dec.is_err(),
                              "hostile rejoin (ver {ver}, party {party}, \
                               parties {parties}) decoded");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hostile_reject_frames_error_cleanly() {
+        // Hand-built RejoinReject frames with random versions, reason
+        // codes, and party ids: decode must be total (Ok or Err, never
+        // a panic), must reject every wrong version, every unknown
+        // reason code, and every out-of-range party id — from the
+        // fixed-size header alone, before any allocation.
+        prop::check("hostile reject frames", |rng| {
+            let ver = (rng.gen_range(4) as u8).wrapping_sub(1); // 255,0,1,2
+            let party = rng.next_u32() as u16;
+            let reason = rng.gen_range(5) as u8; // 0..=4
+            let mut frame = Vec::new();
+            frame.push(13u8);
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes());
+            frame.push(ver);
+            frame.extend_from_slice(&party.to_le_bytes());
+            frame.push(reason);
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes());
+            let fields_ok = (1..=2).contains(&reason)
+                && party >= 1
+                && party < MAX_PARTIES;
+            let dec = Message::decode(&frame);
+            if ver != REJECT_VERSION || !fields_ok {
+                prop_assert!(dec.is_err(),
+                             "hostile reject (ver {ver}, party {party}, \
+                              reason {reason}) decoded");
             }
             Ok(())
         });

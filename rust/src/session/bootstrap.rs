@@ -44,7 +44,8 @@ use std::time::{Duration, Instant};
 
 use crate::compress;
 use crate::config::RunConfig;
-use crate::protocol::{decode_frame, encode_frame_into, Message};
+use crate::protocol::{decode_frame, encode_frame_into, Message,
+                      RejectReason};
 use crate::transport::tcp::{connect_with_backoff_jittered, TcpTransport};
 use crate::transport::Transport;
 
@@ -165,6 +166,17 @@ pub struct SessionListener {
     resume: Option<(u32, u64)>,
 }
 
+/// Outcome of session-level vetting: admit (with the ack to send), or
+/// refuse with a frame-level reason the dialer can log. `Refuse` is
+/// reserved for *resume-mode* refusals of otherwise well-formed peers —
+/// a dialer racing the epoch check deserves "epoch mismatch (snapshot
+/// is round R)", not a bare EOF. Hostile or malformed traffic stays a
+/// plain error (silent drop): junk earns no diagnostic frame.
+enum Vetted {
+    Admit { party: PartyId, codecs: u32, ack: Message },
+    Refuse { reject: Message, why: String },
+}
+
 impl SessionListener {
     /// Bind the session listener. Accepting (and the join deadline)
     /// starts at `establish`, so a bound listener can be advertised
@@ -201,13 +213,14 @@ impl SessionListener {
     }
 
     /// Session-level vetting of one decoded bootstrap frame: size
-    /// agreement, duplicates, fresh-vs-resumed mode, epoch. Returns the
-    /// admitted id, the peer's codec mask, and the ack to send.
-    /// Frame-level rules (version, id ranges) were already enforced by
-    /// `Message::decode` on the admit worker.
+    /// agreement, duplicates, fresh-vs-resumed mode, epoch. Admits with
+    /// the ack to send, or — for resume-mode refusals only — refuses
+    /// with a [`Message::RejoinReject`] naming the reason (see
+    /// [`Vetted`]). Frame-level rules (version, id ranges) were already
+    /// enforced by `Message::decode` on the admit worker.
     fn vet(msg: Message, parties: u16, resume: Option<(u32, u64)>,
            joined: &BTreeMap<u16, (TcpStream, u32)>)
-           -> anyhow::Result<(PartyId, u32, Message)> {
+           -> anyhow::Result<Vetted> {
         let (party, claimed, codecs, ack) = match (msg, resume) {
             (Message::Join { party, parties: claimed, codecs }, None) => {
                 let ack = Message::JoinAck {
@@ -217,20 +230,40 @@ impl SessionListener {
                 };
                 (party, claimed, codecs, ack)
             }
-            (Message::Join { party, .. }, Some(_)) => anyhow::bail!(
-                "{party} sent a fresh Join but this session is resuming \
-                 from a checkpoint — the dialer must Rejoin (the \
-                 `celu-vfl party` dialer falls back automatically)"
-            ),
+            (Message::Join { party, .. }, Some((_, resume_round))) => {
+                return Ok(Vetted::Refuse {
+                    reject: Message::RejoinReject {
+                        party,
+                        reason: RejectReason::NeedRejoin,
+                        round: resume_round,
+                    },
+                    why: format!(
+                        "{party} sent a fresh Join but this session is \
+                         resuming from a checkpoint (round \
+                         {resume_round}) — the dialer must Rejoin (the \
+                         `celu-vfl party` dialer falls back \
+                         automatically)"
+                    ),
+                });
+            }
             (Message::Rejoin { party, parties: claimed, epoch,
                                last_round, codecs },
              Some((want_epoch, resume_round))) => {
-                anyhow::ensure!(
-                    epoch == want_epoch,
-                    "{party} rejoined with session epoch {epoch:#x}, \
-                     this checkpoint is epoch {want_epoch:#x} — \
-                     different logical session (seed/config mismatch?)"
-                );
+                if epoch != want_epoch {
+                    return Ok(Vetted::Refuse {
+                        reject: Message::RejoinReject {
+                            party,
+                            reason: RejectReason::EpochMismatch,
+                            round: resume_round,
+                        },
+                        why: format!(
+                            "{party} rejoined with session epoch \
+                             {epoch:#x}, this checkpoint is epoch \
+                             {want_epoch:#x} — different logical \
+                             session (seed/config mismatch?)"
+                        ),
+                    });
+                }
                 if last_round > resume_round {
                     // A survivor of a label crash that happened after
                     // the snapshot: it ran ahead of the checkpoint and
@@ -270,7 +303,7 @@ impl SessionListener {
             !joined.contains_key(&party.0),
             "duplicate join: {party} is already in the session"
         );
-        Ok((party, codecs, ack))
+        Ok(Vetted::Admit { party, codecs, ack })
     }
 
     /// Accept until ids 1..`cfg.parties` have all joined. Frame reads
@@ -278,9 +311,10 @@ impl SessionListener {
     /// thread keeps accepting while up to that many joiners are vetted
     /// concurrently, so one slow (or mute) peer no longer amplifies
     /// into a serial stall for the whole cold start. A rejected joiner
-    /// is dropped — its dialer observes EOF instead of an ack — and
-    /// the loop keeps serving; the deadline failure names exactly the
-    /// ids still missing.
+    /// is dropped — its dialer observes EOF instead of an ack, except
+    /// resume-mode refusals, which first send a [`Message::RejoinReject`]
+    /// naming the reason — and the loop keeps serving; the deadline
+    /// failure names exactly the ids still missing.
     fn establish_streams(&self, cfg: &RunConfig)
                          -> anyhow::Result<BTreeMap<u16, (TcpStream, u32)>>
     {
@@ -351,10 +385,21 @@ impl SessionListener {
             while let Ok((addr, res)) = result_rx.try_recv() {
                 progressed = true;
                 let admitted = res.and_then(|(msg, mut stream)| {
-                    let (party, codecs, ack) =
-                        Self::vet(msg, parties, self.resume, &joined)?;
-                    send_bootstrap_frame(&mut stream, &ack)?;
-                    Ok((party, codecs, stream))
+                    match Self::vet(msg, parties, self.resume,
+                                    &joined)? {
+                        Vetted::Admit { party, codecs, ack } => {
+                            send_bootstrap_frame(&mut stream, &ack)?;
+                            Ok((party, codecs, stream))
+                        }
+                        Vetted::Refuse { reject, why } => {
+                            // Best-effort: name the reason on the wire
+                            // before the drop, so the dialer logs it
+                            // instead of a bare EOF.
+                            let _ = send_bootstrap_frame(&mut stream,
+                                                         &reject);
+                            Err(anyhow::anyhow!(why))
+                        }
+                    }
                 });
                 match admitted {
                     Ok((party, codecs, stream)) => {
@@ -574,7 +619,7 @@ fn readmission_loop(listener: TcpListener, parties: u16, epoch: u32,
 /// consumer).
 fn vet_rejoin_dial(stream: TcpStream, parties: u16, epoch: u32)
                    -> anyhow::Result<RejoinRequest> {
-    let (msg, stream) =
+    let (msg, mut stream) =
         read_join_frame(stream, Instant::now() + JOIN_READ_TIMEOUT)?;
     let Message::Rejoin { party, parties: claimed, epoch: e, last_round,
                           codecs } = msg
@@ -589,11 +634,21 @@ fn vet_rejoin_dial(stream: TcpStream, parties: u16, epoch: u32)
         "{party} rejoined for a {claimed}-party session, this session \
          has {parties} parties"
     );
-    anyhow::ensure!(
-        e == epoch,
-        "{party} rejoined with epoch {e:#x}, this session is epoch \
-         {epoch:#x} — different logical session"
-    );
+    if e != epoch {
+        // A well-formed peer from the wrong logical session: name the
+        // reason on the wire (best-effort) before the drop, so its
+        // dialer logs the mismatch instead of retrying blindly. Round
+        // is 0 — a live session has no snapshot round to cite.
+        let _ = send_bootstrap_frame(&mut stream, &Message::RejoinReject {
+            party,
+            reason: RejectReason::EpochMismatch,
+            round: 0,
+        });
+        anyhow::bail!(
+            "{party} rejoined with epoch {e:#x}, this session is epoch \
+             {epoch:#x} — different logical session"
+        );
+    }
     Ok(RejoinRequest { party, last_round, codecs, stream })
 }
 
@@ -638,6 +693,18 @@ pub fn rejoin_dial(addr: &str, party: PartyId, cfg: &RunConfig,
                              replays } => {
             (party, parties, epoch, resume_round, replays)
         }
+        Message::RejoinReject { reason, round, .. } => match reason {
+            RejectReason::EpochMismatch => anyhow::bail!(
+                "{party}: rejoin refused by the label at {addr}: epoch \
+                 mismatch (snapshot is round {round}) — this process's \
+                 seed/config derives a different session epoch"
+            ),
+            RejectReason::NeedRejoin => anyhow::bail!(
+                "{party}: label at {addr} refused the dial asking for \
+                 a Rejoin, but this *was* one (snapshot is round \
+                 {round}) — check that both sides run the same build"
+            ),
+        },
         other => anyhow::bail!(
             "{party}: expected RejoinAck, got message tag {}",
             other.tag()
@@ -728,6 +795,21 @@ impl SessionDialer {
             Message::JoinAck { party, parties, codecs } => {
                 (party, parties, codecs)
             }
+            Message::RejoinReject { reason, round, .. } => {
+                let why = match reason {
+                    RejectReason::NeedRejoin => {
+                        "it resumed from a checkpoint and only \
+                         re-admits Rejoin"
+                    }
+                    RejectReason::EpochMismatch => "session epoch \
+                                                    mismatch",
+                };
+                anyhow::bail!(
+                    "{}: label party at {} refused the Join ({why}; \
+                     snapshot is round {round})",
+                    self.party, self.addr
+                );
+            }
             other => anyhow::bail!(
                 "{}: expected JoinAck, got message tag {}",
                 self.party, other.tag()
@@ -765,6 +847,18 @@ impl SessionDialer {
     /// the caller fast-forwards its batch cursor there).
     pub fn establish_resumable(self, cfg: &RunConfig)
                                -> anyhow::Result<(Link, u64)> {
+        self.establish_resumable_from(cfg, 0)
+    }
+
+    /// [`establish_resumable`](Self::establish_resumable) for a process
+    /// restarting from a *feature snapshot* of `last_round` completed
+    /// rounds: the fallback `Rejoin` claims that round (so a live
+    /// label replays the in-flight derivative instead of treating this
+    /// as a relaunched-from-scratch process), and the restored-state
+    /// path logs as a recovery, not a fresh-state warning.
+    pub fn establish_resumable_from(self, cfg: &RunConfig,
+                                    last_round: u64)
+                                    -> anyhow::Result<(Link, u64)> {
         cfg.validate()?;
         self.check_range(cfg)?;
         let deadline = Instant::now() + self.timeout;
@@ -783,33 +877,56 @@ impl SessionDialer {
         );
         let epoch = session_epoch(cfg.seed);
         let (transport, resume_round, replays) =
-            rejoin_dial(&self.addr, self.party, cfg, epoch, 0, remaining)
+            rejoin_dial(&self.addr, self.party, cfg, epoch, last_round,
+                        remaining)
                 .map_err(|rejoin_err| anyhow::anyhow!(
                     "{}: both bootstrap paths failed — Join: \
                      {join_err:#}; Rejoin: {rejoin_err:#}", self.party
                 ))?;
         // A *live* (non-checkpoint-resumed) session may admit this
-        // zero-round Rejoin through its re-admission point and replay
-        // the round-0 derivative if it is still buffered; a fresh
-        // process has no in-flight round to apply it to, so discard.
+        // Rejoin through its re-admission point and replay the
+        // derivative of the claimed round if it is still buffered.
+        // Either way the replay is discarded: a fresh process has no
+        // in-flight round to apply it to, and a snapshot-restarted one
+        // fast-forwards past it (the ack's resume round is where the
+        // session is now, not where this party died).
         for _ in 0..replays {
             let m = transport.recv().map_err(|e| anyhow::anyhow!(
                 "{}: reading replayed frame after rejoin: {e:#}",
                 self.party
             ))?;
-            log::warn!(
-                "{}: discarding replayed frame (tag {}) — this process \
-                 has no in-flight round", self.party, m.tag()
-            );
+            if last_round > 0 {
+                log::info!(
+                    "{}: discarding replayed frame (tag {}) — the \
+                     session moved past the snapshot's in-flight round \
+                     while this party was down", self.party, m.tag()
+                );
+            } else {
+                log::warn!(
+                    "{}: discarding replayed frame (tag {}) — this \
+                     process has no in-flight round",
+                    self.party, m.tag()
+                );
+            }
         }
         if resume_round > 0 {
-            log::warn!(
-                "{}: re-entering the session at round {resume_round} \
-                 with freshly initialized local state — feature-side \
-                 model state is not checkpointed (see ROADMAP), so \
-                 this party's bottom model restarts from init",
-                self.party
-            );
+            if last_round > 0 {
+                log::info!(
+                    "{}: re-entering the session at round \
+                     {resume_round} with model state restored from a \
+                     snapshot of {last_round} completed rounds",
+                    self.party
+                );
+            } else {
+                log::warn!(
+                    "{}: re-entering the session at round \
+                     {resume_round} with freshly initialized local \
+                     state — run with --checkpoint-dir and restart \
+                     with --resume to carry the bottom model and \
+                     AdaGrad state across a crash",
+                    self.party
+                );
+            }
         }
         // A rejoin ack carries no codec mask; the epoch check already
         // proved the session shares this config's seed, and sessions
@@ -1290,12 +1407,23 @@ mod tests {
             let cfg = cfg.clone();
             move || listener.establish(&cfg)
         });
-        // 1. A fresh Join is refused (EOF, no ack).
-        assert!(raw_join(&addr, 1, 3).is_err(),
-                "fresh join acked by a resumed session");
-        // 2. A wrong-epoch Rejoin is refused.
-        assert!(raw_rejoin(&addr, 1, 3, epoch ^ 1, 3).is_err(),
-                "wrong-epoch rejoin acked");
+        // 1. A fresh Join is refused with a frame-level reason — the
+        //    dialer reads a RejoinReject naming the snapshot round,
+        //    not a bare EOF.
+        let (_s, reject) = raw_join(&addr, 1, 3).unwrap();
+        assert_eq!(reject, Message::RejoinReject {
+            party: PartyId(1),
+            reason: RejectReason::NeedRejoin,
+            round: 7,
+        });
+        // 2. A wrong-epoch Rejoin is refused likewise, with the reason
+        //    the satellite contract asks the dialer to log.
+        let (_s, reject) = raw_rejoin(&addr, 1, 3, epoch ^ 1, 3).unwrap();
+        assert_eq!(reject, Message::RejoinReject {
+            party: PartyId(1),
+            reason: RejectReason::EpochMismatch,
+            round: 7,
+        });
         // 3. Valid rejoins are acked with the checkpoint's resume round
         //    and zero replays — including a survivor that ran AHEAD of
         //    the checkpoint (P1 claims 9 > 7): it is admitted and the
@@ -1367,7 +1495,8 @@ mod tests {
         assert_eq!(epoch, session_epoch(cfg.seed));
         assert!(readmission.try_take().is_none());
         // A wrong-epoch dial is rejected on the re-admission thread:
-        // the socket is dropped, nothing is queued.
+        // a RejoinReject names the reason, then the socket is dropped
+        // and nothing is queued.
         {
             let mut s = TcpStream::connect(&addr).unwrap();
             send_bootstrap_frame(&mut s, &Message::Rejoin {
@@ -1378,10 +1507,14 @@ mod tests {
                 codecs: 0,
             })
             .unwrap();
-            assert!(recv_bootstrap_frame(
-                        &mut s, Instant::now() + Duration::from_secs(3))
-                    .is_err(),
-                    "stranger epoch acked");
+            let reply = recv_bootstrap_frame(
+                &mut s, Instant::now() + Duration::from_secs(3))
+                .expect("reject frame");
+            assert_eq!(reply, Message::RejoinReject {
+                party: PartyId(1),
+                reason: RejectReason::EpochMismatch,
+                round: 0,
+            });
         }
         assert!(readmission.try_take().is_none());
         // A valid Rejoin is queued with its claim intact. (The ack is

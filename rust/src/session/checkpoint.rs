@@ -1,5 +1,5 @@
-//! Label-party checkpoint/restart: versioned binary session snapshots
-//! (DESIGN.md §8).
+//! Checkpoint/restart for both mesh roles: versioned binary snapshots
+//! (DESIGN.md §8 for the label party, §9 for feature parties).
 //!
 //! A [`SessionSnapshot`] captures everything the label party needs to
 //! restart a session that dialers can `Rejoin`: the logical-session
@@ -19,6 +19,25 @@
 //! hostile-header discipline: dimension products are overflow-checked
 //! and every length is validated against the remaining buffer *before*
 //! the payload allocation it implies.
+//!
+//! A [`FeatureSnapshot`] is the symmetric artifact for a feature party
+//! (DESIGN.md §9): the same epoch/round/parties header plus the party's
+//! own id, the codec negotiated on its label link, and the bottom
+//! model's params + AdaGrad accumulators. The completed-round count
+//! *is* the workset-cursor position — `BatchCursor` is a pure function
+//! of the seed, so a restarted process fast-forwards `round` draws and
+//! lands exactly where the crash left it, instead of replaying from
+//! round 0.
+//!
+//! Feature snapshot layout (little-endian,
+//! `ckpt_p<party>_round_<round>.celuckpt`):
+//!   `"CELF"` `[u16 version=1]` `[u32 epoch]` `[u64 round]`
+//!   `[u16 parties]` `[u16 party]` `[u8 codec][u32 param]`
+//!   `[u32 n_params]` tensors… `[u32 n_accs]` tensors… `[u64 fnv1a]`
+//! Both formats share the tensor codec, the FNV-1a trailer, the atomic
+//! tmp-write + rename save path, and the hostile-header decode
+//! discipline; the distinct magics mean neither loader can be fed the
+//! other role's file by mistake.
 
 use std::collections::BTreeSet;
 
@@ -29,8 +48,19 @@ use crate::tensor::{Data, DType, Tensor};
 /// Current snapshot format version.
 pub const SNAPSHOT_VERSION: u16 = 1;
 
+/// Current feature-snapshot format version (versioned separately so
+/// either layout can evolve without disturbing the other's fixtures).
+pub const FEATURE_SNAPSHOT_VERSION: u16 = 1;
+
+/// How many times a checkpoint write is attempted before the caller
+/// degrades to training without a fresh snapshot (DESIGN.md §9).
+pub const SAVE_ATTEMPTS: u32 = 2;
+
 /// File magic.
 const MAGIC: &[u8; 4] = b"CELU";
+
+/// Feature-snapshot file magic.
+const FEATURE_MAGIC: &[u8; 4] = b"CELF";
 
 /// Hard cap on a decoded tensor's element count (1 Gi elements = 4 GiB
 /// payload): a corrupt header is refused by arithmetic, not by an
@@ -301,6 +331,179 @@ impl SessionSnapshot {
     }
 }
 
+/// A restartable feature-party snapshot (DESIGN.md §9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureSnapshot {
+    /// Logical-session epoch (`supervisor::session_epoch`): the
+    /// `Rejoin` this snapshot authorizes must echo it.
+    pub epoch: u32,
+    /// Communication rounds completed before the snapshot — also the
+    /// deterministic workset-cursor position the restarted process
+    /// fast-forwards to, and the `last_round` its `Rejoin` carries.
+    pub round: u64,
+    /// Session size the snapshot was taken under.
+    pub parties: u16,
+    /// The feature party this snapshot belongs to (`1..parties`).
+    pub party: u16,
+    /// Codec negotiated on the label link at snapshot time, pinned on
+    /// resume so the wire format survives the restart.
+    pub codec: CodecKind,
+    /// Bottom-model trainable parameters, in manifest order.
+    pub params: Vec<Tensor>,
+    /// AdaGrad accumulators, aligned with `params`.
+    pub accs: Vec<Tensor>,
+}
+
+impl FeatureSnapshot {
+    /// Serialize to the versioned binary layout (checksum included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(FEATURE_MAGIC);
+        out.extend_from_slice(&FEATURE_SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.parties.to_le_bytes());
+        out.extend_from_slice(&self.party.to_le_bytes());
+        out.push(self.codec.code());
+        out.extend_from_slice(&self.codec.param().to_le_bytes());
+        out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for t in &self.params {
+            encode_tensor(&mut out, t);
+        }
+        out.extend_from_slice(&(self.accs.len() as u32).to_le_bytes());
+        for t in &self.accs {
+            encode_tensor(&mut out, t);
+        }
+        let h = fnv1a(&out);
+        out.extend_from_slice(&h.to_le_bytes());
+        out
+    }
+
+    /// Decode and validate a feature snapshot buffer.
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            buf.len() >= FEATURE_MAGIC.len() + 2 + 8,
+            "feature snapshot too short ({} bytes)", buf.len()
+        );
+        anyhow::ensure!(
+            &buf[..4] == FEATURE_MAGIC,
+            "not a CELF feature checkpoint (bad magic)"
+        );
+        // Checksum over everything except the trailing hash word.
+        let body = &buf[..buf.len() - 8];
+        let stored =
+            u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+        let computed = fnv1a(body);
+        anyhow::ensure!(
+            stored == computed,
+            "feature snapshot checksum mismatch (stored {stored:#018x}, \
+             computed {computed:#018x}) — truncated or corrupt file"
+        );
+        let mut r = Reader { buf: body, pos: FEATURE_MAGIC.len() };
+        let version = r.u16()?;
+        anyhow::ensure!(
+            version == FEATURE_SNAPSHOT_VERSION,
+            "unsupported feature snapshot version {version} (this build \
+             reads {FEATURE_SNAPSHOT_VERSION})"
+        );
+        let epoch = r.u32()?;
+        let round = r.u64()?;
+        let parties = r.u16()?;
+        anyhow::ensure!(
+            (2..=MAX_PARTIES).contains(&parties),
+            "feature snapshot declares a {parties}-party session \
+             (valid: 2..={MAX_PARTIES})"
+        );
+        let party = r.u16()?;
+        anyhow::ensure!(
+            party >= 1 && party < parties,
+            "feature snapshot belongs to party {party} in a \
+             {parties}-party session (valid feature ids: 1..={})",
+            parties - 1
+        );
+        let code = r.u8()?;
+        let param = r.u32()?;
+        let codec = CodecKind::from_wire(code, param)?;
+        let n_params = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n_params.min(1 << 16));
+        for _ in 0..n_params {
+            params.push(decode_tensor(&mut r)?);
+        }
+        let n_accs = r.u32()? as usize;
+        anyhow::ensure!(
+            n_accs == n_params,
+            "feature snapshot has {n_accs} accumulators for {n_params} \
+             params"
+        );
+        let mut accs = Vec::with_capacity(n_accs.min(1 << 16));
+        for _ in 0..n_accs {
+            accs.push(decode_tensor(&mut r)?);
+        }
+        anyhow::ensure!(
+            r.pos == body.len(),
+            "trailing bytes in feature snapshot ({} of {})", r.pos,
+            body.len()
+        );
+        Ok(FeatureSnapshot {
+            epoch, round, parties, party, codec, params, accs,
+        })
+    }
+
+    /// Write the snapshot under `dir` as
+    /// `ckpt_p<party>_round_<round>.celuckpt` (temp file + rename, so a
+    /// crash mid-write never leaves a half snapshot under the final
+    /// name). Returns the path written.
+    pub fn save(&self, dir: &str) -> anyhow::Result<String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating {dir}: {e}"))?;
+        let name = format!("ckpt_p{:03}_round_{:08}.celuckpt",
+                           self.party, self.round);
+        let path = std::path::Path::new(dir).join(&name);
+        let tmp = std::path::Path::new(dir).join(format!("{name}.tmp"));
+        std::fs::write(&tmp, self.encode())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("renaming {}: {e}", tmp.display()))?;
+        Ok(path.to_string_lossy().into_owned())
+    }
+
+    /// Load and validate a feature snapshot file.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let buf = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {path}: {e}"))?;
+        Self::decode(&buf).map_err(|e| {
+            anyhow::anyhow!("decoding checkpoint {path}: {e:#}")
+        })
+    }
+}
+
+/// Run a checkpoint write with bounded retry (DESIGN.md §9): a failing
+/// attempt — disk full, permission, dead mount — is retried up to
+/// [`SAVE_ATTEMPTS`] times total before the error is handed back, so a
+/// transient hiccup costs nothing and a persistent one degrades the
+/// session to training-without-snapshots instead of aborting the round.
+pub fn save_with_retry<F>(mut attempt: F) -> anyhow::Result<String>
+where
+    F: FnMut() -> anyhow::Result<String>,
+{
+    let mut last: Option<anyhow::Error> = None;
+    for try_no in 1..=SAVE_ATTEMPTS {
+        match attempt() {
+            Ok(path) => return Ok(path),
+            Err(e) => {
+                if try_no < SAVE_ATTEMPTS {
+                    log::warn!(
+                        "checkpoint write attempt {try_no}/{SAVE_ATTEMPTS} \
+                         failed: {e:#} — retrying"
+                    );
+                }
+                last = Some(e);
+            }
+        }
+    }
+    Err(last.expect("SAVE_ATTEMPTS >= 1"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -464,5 +667,232 @@ mod tests {
         let e = SessionSnapshot::decode(&enc).unwrap_err().to_string();
         assert!(e.contains("version"), "{e}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[cfg(test)]
+mod feature_tests {
+    //! The feature-snapshot suite mirrors the label suite above: golden
+    //! bytes, every-byte truncation/corruption, hostile tensor headers
+    //! refused by arithmetic, shape validation, save/load, and the
+    //! cross-magic confusion checks unique to having two roles.
+
+    use super::*;
+
+    fn fsample() -> FeatureSnapshot {
+        FeatureSnapshot {
+            epoch: 0x0102_0304,
+            round: 5,
+            parties: 3,
+            party: 2,
+            codec: CodecKind::Fp16,
+            params: vec![Tensor::f32(vec![2], vec![1.0, -2.0])],
+            accs: vec![Tensor::f32(vec![2], vec![0.5, 0.25])],
+        }
+    }
+
+    fn hex_to_bytes(hex: &str) -> Vec<u8> {
+        let compact: String =
+            hex.chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(compact.len() % 2, 0, "odd hex length");
+        (0..compact.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&compact[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn golden_feature_snapshot_encode_is_byte_identical() {
+        // Captured at introduction time; machine-checked against an
+        // independent Python rebuild of the layout (incl. the FNV-1a
+        // trailer). Byte drift in the feature snapshot format fails
+        // here.
+        let hex = "43454c46 0100 04030201 0500000000000000 0300 0200 \
+                   01 00000000 \
+                   01000000 00 01 02000000 0000803f 000000c0 \
+                   01000000 00 01 02000000 0000003f 0000803e \
+                   bfd5c58cd1368b77";
+        let enc = fsample().encode();
+        assert_eq!(enc, hex_to_bytes(hex),
+                   "feature snapshot layout drifted: {}",
+                   enc.iter().map(|b| format!("{b:02x}"))
+                       .collect::<String>());
+    }
+
+    #[test]
+    fn golden_feature_snapshot_decode_recovers_the_snapshot() {
+        let s = fsample();
+        assert_eq!(FeatureSnapshot::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn feature_roundtrip_with_i32_and_topk() {
+        let s = FeatureSnapshot {
+            epoch: 9,
+            round: u64::MAX,
+            parties: 2,
+            party: 1,
+            codec: CodecKind::TopK(48),
+            params: vec![
+                Tensor::f32(vec![2, 3], vec![0.0; 6]),
+                Tensor::i32(vec![1], vec![-7]),
+            ],
+            accs: vec![
+                Tensor::f32(vec![2, 3], vec![0.1; 6]),
+                Tensor::i32(vec![1], vec![3]),
+            ],
+        };
+        assert_eq!(FeatureSnapshot::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn feature_truncations_and_corruption_error_cleanly() {
+        let enc = fsample().encode();
+        // Truncation at every byte boundary.
+        for cut in 0..enc.len() {
+            assert!(FeatureSnapshot::decode(&enc[..cut]).is_err(),
+                    "truncation at {cut} decoded");
+        }
+        // Any single bit flip trips the checksum (or a validation) —
+        // this covers wrong magic, wrong epoch, and wrong round bytes.
+        for at in 0..enc.len() {
+            let mut bent = enc.clone();
+            bent[at] ^= 1;
+            assert!(FeatureSnapshot::decode(&bent).is_err(),
+                    "bit flip at {at} decoded");
+        }
+        // A corrupted FNV trailer specifically (flip a high trailer
+        // bit, leaving the body intact).
+        let mut bad_hash = enc.clone();
+        let last = bad_hash.len() - 1;
+        bad_hash[last] ^= 0x80;
+        let e = FeatureSnapshot::decode(&bad_hash).unwrap_err()
+            .to_string();
+        assert!(e.contains("checksum"), "trailer corruption not named: {e}");
+        let mut trailing = enc;
+        trailing.push(0);
+        assert!(FeatureSnapshot::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn feature_hostile_headers_are_refused_by_arithmetic() {
+        // A snapshot declaring a huge tensor must die on the element
+        // cap / length checks, not on an attempted allocation.
+        let mut body = Vec::new();
+        body.extend_from_slice(FEATURE_MAGIC);
+        body.extend_from_slice(&FEATURE_SNAPSHOT_VERSION.to_le_bytes());
+        body.extend_from_slice(&7u32.to_le_bytes()); // epoch
+        body.extend_from_slice(&1u64.to_le_bytes()); // round
+        body.extend_from_slice(&2u16.to_le_bytes()); // parties
+        body.extend_from_slice(&1u16.to_le_bytes()); // party
+        body.push(0); // identity
+        body.extend_from_slice(&0u32.to_le_bytes()); // param
+        body.extend_from_slice(&1u32.to_le_bytes()); // n_params
+        body.push(0); // f32
+        body.push(4); // ndim
+        for _ in 0..4 {
+            body.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let h = fnv1a(&body);
+        body.extend_from_slice(&h.to_le_bytes());
+        let e = FeatureSnapshot::decode(&body).unwrap_err().to_string();
+        assert!(e.contains("overflow") || e.contains("cap"),
+                "hostile tensor header not refused arithmetically: {e}");
+    }
+
+    #[test]
+    fn feature_decode_validates_session_shape() {
+        // Party 0 (the label) can never own a feature snapshot.
+        let mut s = fsample();
+        s.party = 0;
+        assert!(FeatureSnapshot::decode(&s.encode()).is_err());
+        // Party id must sit inside the declared session.
+        let mut s = fsample();
+        s.party = 3;
+        assert!(FeatureSnapshot::decode(&s.encode()).is_err());
+        // Session size is bounded.
+        let mut s = fsample();
+        s.parties = 1;
+        assert!(FeatureSnapshot::decode(&s.encode()).is_err());
+        let mut s = fsample();
+        s.parties = MAX_PARTIES + 1;
+        s.party = 5;
+        assert!(FeatureSnapshot::decode(&s.encode()).is_err());
+        // Accs/params mismatch.
+        let mut s = fsample();
+        s.accs.pop();
+        assert!(FeatureSnapshot::decode(&s.encode()).is_err());
+    }
+
+    #[test]
+    fn feature_save_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "celu_fckpt_test_{}", std::process::id()
+        ));
+        let dir = dir.to_string_lossy().into_owned();
+        let s = fsample();
+        let path = s.save(&dir).unwrap();
+        assert!(path.contains("ckpt_p002_round_00000005.celuckpt"));
+        assert_eq!(FeatureSnapshot::load(&path).unwrap(), s);
+        // Unknown version is refused loudly (re-hash so only the
+        // version check can refuse it).
+        let mut enc = s.encode();
+        enc[4] = 9;
+        let body_len = enc.len() - 8;
+        let h = fnv1a(&enc[..body_len]);
+        enc[body_len..].copy_from_slice(&h.to_le_bytes());
+        let e = FeatureSnapshot::decode(&enc).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn the_two_magics_are_mutually_exclusive() {
+        // A label loader fed a feature snapshot (or vice versa) must
+        // refuse on the magic — before any checksum or field parsing.
+        let feature = fsample().encode();
+        let e = SessionSnapshot::decode(&feature).unwrap_err().to_string();
+        assert!(e.contains("magic"), "label loader ate a CELF file: {e}");
+        let label = SessionSnapshot {
+            epoch: 1,
+            round: 2,
+            parties: 2,
+            links: vec![LinkCodecState {
+                peer: PartyId(1),
+                codec: CodecKind::Identity,
+            }],
+            params: vec![],
+            accs: vec![],
+        }
+        .encode();
+        let e = FeatureSnapshot::decode(&label).unwrap_err().to_string();
+        assert!(e.contains("magic"), "feature loader ate a CELU file: {e}");
+    }
+
+    #[test]
+    fn save_with_retry_succeeds_after_a_transient_failure() {
+        let mut calls = 0;
+        let path = save_with_retry(|| {
+            calls += 1;
+            if calls == 1 {
+                anyhow::bail!("disk hiccup");
+            }
+            Ok("ok.celuckpt".to_string())
+        })
+        .unwrap();
+        assert_eq!(path, "ok.celuckpt");
+        assert_eq!(calls, 2);
+    }
+
+    #[test]
+    fn save_with_retry_gives_up_after_bounded_attempts() {
+        let mut calls = 0;
+        let err = save_with_retry(|| {
+            calls += 1;
+            anyhow::bail!("disk full");
+        })
+        .unwrap_err();
+        assert_eq!(calls, SAVE_ATTEMPTS, "retry not bounded");
+        assert!(err.to_string().contains("disk full"));
     }
 }

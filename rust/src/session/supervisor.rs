@@ -149,6 +149,9 @@ pub enum SessionEvent {
     StragglerTimeout { party: PartyId, round: u64 },
     /// A restartable snapshot was written.
     CheckpointWritten { round: u64, path: String },
+    /// A snapshot write failed (after bounded retry) and the session
+    /// kept training without it — degraded durability, not an abort.
+    CheckpointFailed { round: u64, error: String },
 }
 
 impl SessionEvent {
@@ -158,6 +161,7 @@ impl SessionEvent {
             SessionEvent::PeerRejoined { .. } => "peer_rejoined",
             SessionEvent::StragglerTimeout { .. } => "straggler_timeout",
             SessionEvent::CheckpointWritten { .. } => "checkpoint_written",
+            SessionEvent::CheckpointFailed { .. } => "checkpoint_failed",
         }
     }
 
@@ -166,7 +170,8 @@ impl SessionEvent {
             SessionEvent::PeerLost { party, .. }
             | SessionEvent::PeerRejoined { party, .. }
             | SessionEvent::StragglerTimeout { party, .. } => Some(*party),
-            SessionEvent::CheckpointWritten { .. } => None,
+            SessionEvent::CheckpointWritten { .. }
+            | SessionEvent::CheckpointFailed { .. } => None,
         }
     }
 
@@ -175,7 +180,8 @@ impl SessionEvent {
             SessionEvent::PeerLost { round, .. }
             | SessionEvent::PeerRejoined { round, .. }
             | SessionEvent::StragglerTimeout { round, .. }
-            | SessionEvent::CheckpointWritten { round, .. } => *round,
+            | SessionEvent::CheckpointWritten { round, .. }
+            | SessionEvent::CheckpointFailed { round, .. } => *round,
         }
     }
 }
@@ -946,15 +952,18 @@ impl LaneSet {
                     req.party, req.last_round
                 );
             } else if req.last_round == 0 && round > 0 {
-                // Indistinguishable from a relaunched process: its
-                // local bottom-model state (not checkpointed — see
-                // ROADMAP) restarted from initialization. Admit, but
-                // say so loudly.
+                // A relaunched process that didn't restore a snapshot:
+                // its local bottom-model state restarted from
+                // initialization. Admit, but say so loudly — restarting
+                // with `--resume <ckpt>` carries the model and AdaGrad
+                // state across the crash instead.
                 log::warn!(
                     "rejoin from {} reports zero completed rounds at \
                      session round {round} — if this is a relaunched \
                      process, its local model state restarted from \
-                     initialization", req.party
+                     initialization (run feature parties with \
+                     --checkpoint-dir and restart with --resume to \
+                     avoid this)", req.party
                 );
             }
             let replay: Option<Message> = {
@@ -1085,6 +1094,14 @@ mod tests {
             path: "x".into(),
         };
         assert_eq!(c.party(), None);
+        let f = SessionEvent::CheckpointFailed {
+            round: 6,
+            error: "disk full".into(),
+        };
+        assert_eq!(f.kind(), "checkpoint_failed");
+        assert_eq!(f.party(), None);
+        assert_eq!(f.round(), 6);
+        s.record(f);
         for _ in 0..(EVENTS_CAP + 10) {
             s.record(c.clone());
         }
@@ -1228,9 +1245,11 @@ mod lifecycle_tests {
     //! an uninterrupted session's over the same rounds).
 
     use super::*;
-    use crate::session::bootstrap::{rejoin_dial, MeshBootstrap,
-                                    SessionDialer, SessionListener};
-    use crate::session::checkpoint::LinkCodecState;
+    use crate::session::bootstrap::{inproc_mesh, rejoin_dial,
+                                    MeshBootstrap, SessionDialer,
+                                    SessionListener};
+    use crate::session::checkpoint::{FeatureSnapshot, LinkCodecState};
+    use crate::transport::fault::{FaultPlan, FaultTransport};
 
     fn t(v: f32) -> Tensor {
         Tensor::f32(vec![2], vec![v, v + 1.0])
@@ -1552,5 +1571,334 @@ mod lifecycle_tests {
         let p1 = feature_post_b[0];
         assert!(p1.0 < p1.1,
                 "fp16 lane not compressed post-restart: {p1:?}");
+    }
+
+    /// Every `FaultPlan` injection point, driven against the
+    /// supervisor's straggler / catch-up / peer-lost machinery on an
+    /// in-proc K = 3 mesh: a delayed frame straggles then catches up,
+    /// a dropped frame and a one-way partition each stale exactly
+    /// their round, and a kill degrades the session for good.
+    #[test]
+    fn fault_injections_drive_straggler_and_peer_lost_paths() {
+        const ROUNDS: u64 = 5;
+        let mut cfg = RunConfig::quick();
+        cfg.parties = 3;
+        cfg.wan = crate::config::WanProfile::instant();
+        cfg.straggler_wait_ms = 500;
+        cfg.compress = CodecKind::Identity;
+        cfg.validate().unwrap();
+        let (label_bs, feature_bs) = inproc_mesh(&cfg);
+
+        // P1 straggles at round 1 (delayed past the window, catching
+        // up inside round 2) and is one-way partitioned for round 3;
+        // P2's round-2 activation is lost on the wire and the party is
+        // killed outright at round 4.
+        let plans = [
+            FaultPlan::new(11).delay_ms(1, 700).partition_rounds(3, 4),
+            FaultPlan::new(22).drop_frame(2).kill_at_round(4),
+        ];
+        let mut features = Vec::new();
+        for (bs, plan) in feature_bs.into_iter().zip(plans) {
+            features.push(std::thread::spawn({
+                let cfg = cfg.clone();
+                move || -> anyhow::Result<()> {
+                    let links = bs.establish(&cfg)?;
+                    let ft: Arc<dyn Transport> = Arc::new(
+                        FaultTransport::new(links[0].transport.clone(),
+                                            plan));
+                    for round in 0..ROUNDS {
+                        if ft.send(act(round)).is_err() {
+                            // The injected kill; dropping the links
+                            // surfaces the death on the label side.
+                            return Ok(());
+                        }
+                        match ft.recv() {
+                            Ok(m) => anyhow::ensure!(
+                                m.round() == round, "skew at {round}"),
+                            Err(_) => return Ok(()),
+                        }
+                    }
+                    loop {
+                        match ft.recv() {
+                            Ok(Message::Shutdown) | Err(_) => {
+                                return Ok(())
+                            }
+                            Ok(_) => {}
+                        }
+                    }
+                }
+            }));
+        }
+
+        let links = label_bs.establish(&cfg).unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, None);
+        lanes.handshake(&cfg, None).unwrap();
+        let mut freshness = Vec::new();
+        for round in 0..ROUNDS {
+            let inputs = lanes.collect(round).unwrap();
+            freshness.push((inputs[0].is_fresh(),
+                            inputs[1].is_fresh()));
+            let zs: Vec<Tensor> = inputs
+                .iter()
+                .filter_map(|i| i.tensor().cloned())
+                .collect();
+            lanes.fan_out(round, &Tensor::sum_f32(&zs).unwrap())
+                 .unwrap();
+        }
+        assert_eq!(freshness, vec![
+            (true, true),  // round 0: clean
+            (false, true), // round 1: P1 delayed past the window
+            (true, false), // round 2: P1 caught up; P2's frame dropped
+            (false, true), // round 3: P1 one-way partitioned out
+            (true, false), // round 4: P2 killed
+        ]);
+        assert!(lanes.catch_ups() >= 1,
+                "the delayed frame never caught up");
+        assert_eq!(lanes.state(), SessionState::Degraded);
+        lanes.shutdown();
+        let events = lanes.take_events();
+        let straggled = |party: u16, round: u64| {
+            events.iter().any(|e| {
+                e.kind() == "straggler_timeout"
+                    && e.party() == Some(PartyId(party))
+                    && e.round() == round
+            })
+        };
+        assert!(straggled(1, 1), "missing straggler: {events:?}");
+        assert!(straggled(2, 2), "missing straggler: {events:?}");
+        assert!(straggled(1, 3), "missing straggler: {events:?}");
+        assert!(events.iter().any(|e| matches!(
+            e, SessionEvent::PeerLost { party: PartyId(2), .. })),
+            "the killed party was never declared lost: {events:?}");
+        for h in features {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    /// Acceptance (symmetric fault tolerance): a `FaultPlan`-injected
+    /// kill of a feature party, restarted from its `FeatureSnapshot`
+    /// on disk, completes the session with round-count parity and
+    /// byte-identical surviving links vs an undisturbed reference run.
+    #[test]
+    fn faultplan_kill_and_snapshot_resume_match_the_reference_run() {
+        const N: u64 = 8;
+        const KILL: u64 = 4;
+
+        /// The victim: a feature party that checkpoints every round
+        /// boundary, dies at the plan's kill point, reloads its latest
+        /// snapshot and rejoins claiming the snapshot's round. Returns
+        /// the resume round and the fresh transport's sender totals.
+        fn victim_loop(addr: String, cfg: RunConfig, dir: String)
+                       -> anyhow::Result<(u64, (u64, u64, u64))> {
+            let party = PartyId(1);
+            let links = SessionDialer::new(&addr, party)
+                .with_timeout(Duration::from_secs(10))
+                .establish(&cfg)?;
+            let codec = compress::negotiate(cfg.codec_for(party.0),
+                                            links[0].peer_codecs);
+            let epoch = session_epoch(cfg.seed);
+            let plan = FaultPlan::new(0xC4A05)
+                .kill_within(KILL, KILL + 1);
+            anyhow::ensure!(plan.kill_round() == Some(KILL),
+                            "kill_within must resolve to round {KILL}");
+            let faulted: Arc<dyn Transport> = Arc::new(
+                FaultTransport::new(links[0].transport.clone(), plan));
+            let mut completed = 0u64;
+            let mut last_path = String::new();
+            loop {
+                let za = t(party.0 as f32 + completed as f32);
+                let (msg, _) = outbound_stats(codec, Lane::Activation,
+                                              completed, za)?;
+                if faulted.send(msg).is_err() {
+                    break; // the injected kill point
+                }
+                match faulted.recv()?.into_plain()? {
+                    Message::Derivative { round: r, .. } => {
+                        anyhow::ensure!(r == completed, "skew: {r}");
+                    }
+                    other => anyhow::bail!("unexpected {:?}",
+                                           other.tag()),
+                }
+                completed += 1;
+                // Round-boundary snapshot (checkpoint_every = 1).
+                last_path = FeatureSnapshot {
+                    epoch,
+                    round: completed,
+                    parties: cfg.parties as u16,
+                    party: party.0,
+                    codec,
+                    params: vec![t(completed as f32)],
+                    accs: vec![t(0.5 * completed as f32)],
+                }
+                .save(&dir)?;
+            }
+            anyhow::ensure!(completed == KILL,
+                            "killed at {completed}, planned {KILL}");
+            // "Restart": recover state from disk and Rejoin with the
+            // snapshot's round claim. The old socket is held open
+            // until the label's lane swap drops its end — a hung
+            // process's lane is silent, not dead, so every interim
+            // round pays the full straggler window that also polls
+            // the re-admission point.
+            let snap = FeatureSnapshot::load(&last_path)?;
+            anyhow::ensure!(snap.round == KILL && snap.epoch == epoch
+                            && snap.party == party.0
+                            && snap.codec == codec,
+                            "snapshot header diverged from the run");
+            anyhow::ensure!(snap.params == vec![t(KILL as f32)],
+                            "restored params diverged");
+            let (fresh, resume, replays) = rejoin_dial(
+                &addr, party, &cfg, epoch, snap.round,
+                Duration::from_secs(10))?;
+            anyhow::ensure!(resume >= KILL && resume < N,
+                            "resumed at {resume}, outside \
+                             [{KILL}, {N})");
+            for _ in 0..replays {
+                let _ = fresh.recv()?; // stale in-flight derivatives
+            }
+            for round in resume..N {
+                let za = t(party.0 as f32 + round as f32);
+                let (msg, _) = outbound_stats(snap.codec,
+                                              Lane::Activation, round,
+                                              za)?;
+                fresh.send(msg)?;
+                match fresh.recv()?.into_plain()? {
+                    Message::Derivative { round: r, .. } => {
+                        anyhow::ensure!(r == round,
+                                        "post-resume skew: {r}");
+                    }
+                    other => anyhow::bail!("unexpected {:?}",
+                                           other.tag()),
+                }
+            }
+            loop {
+                match fresh.recv() {
+                    Ok(Message::Shutdown) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+            drop(links);
+            Ok((resume, triple(fresh.stats())))
+        }
+
+        let mut cfg = RunConfig::quick();
+        cfg.parties = 3;
+        cfg.wan = crate::config::WanProfile::instant();
+        cfg.straggler_wait_ms = 500;
+        cfg.compress = CodecKind::Identity;
+        cfg.party_compress = vec![(1, CodecKind::Fp16)];
+        cfg.validate().unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "celu_fault_resume_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // ---- reference: undisturbed K = 3 run -------------------------------
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let features: Vec<_> = [1u16, 2]
+            .iter()
+            .map(|&p| {
+                let addr = addr.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    tcp_feature_loop(addr, PartyId(p), cfg, N, 0)
+                })
+            })
+            .collect();
+        let (links, readmission, _e, _s) =
+            listener.establish_supervised(&cfg).unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+        lanes.handshake(&cfg, None).unwrap();
+        label_segment(&cfg, &mut lanes, 0, N).unwrap();
+        lanes.shutdown();
+        let label_ref: Vec<(u16, (u64, u64, u64))> = lanes
+            .link_stats()
+            .iter()
+            .map(|(p, s)| (p.0, triple(*s)))
+            .collect();
+        let mut feature_ref = Vec::new();
+        for h in features {
+            feature_ref.push(h.join().unwrap().unwrap());
+        }
+
+        // ---- fault run: P1 killed at round KILL, resumed from disk ----------
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let h1 = std::thread::spawn({
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            let dir = dir.to_string_lossy().into_owned();
+            move || victim_loop(addr, cfg, dir)
+        });
+        let h2 = std::thread::spawn({
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            move || tcp_feature_loop(addr, PartyId(2), cfg, N, 0)
+        });
+        let (links, readmission, _e, _s) =
+            listener.establish_supervised(&cfg).unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+        lanes.handshake(&cfg, None).unwrap();
+        // No freshness assert: the victim's lane goes silent between
+        // the kill and its rejoin.
+        for round in 0..N {
+            let inputs = lanes.collect(round).unwrap();
+            let zs: Vec<Tensor> = inputs
+                .iter()
+                .filter_map(|i| i.tensor().cloned())
+                .collect();
+            lanes.fan_out(round, &Tensor::sum_f32(&zs).unwrap())
+                 .unwrap();
+        }
+        assert_eq!(lanes.total_rejoins(), 1,
+                   "the killed party never rejoined");
+        lanes.shutdown();
+        let label_fault: Vec<(u16, (u64, u64, u64))> = lanes
+            .link_stats()
+            .iter()
+            .map(|(p, s)| (p.0, triple(*s)))
+            .collect();
+        let events = lanes.take_events();
+        assert!(events.iter().any(|e| matches!(
+            e, SessionEvent::PeerRejoined { party: PartyId(1), .. })),
+            "no rejoin event: {events:?}");
+        let (resume, p1_post) = h1.join().unwrap().unwrap();
+        let p2_fault = h2.join().unwrap().unwrap();
+
+        // ---- parity vs the reference ----------------------------------------
+        // Round-count parity is structural: both label loops above ran
+        // exactly N rounds and every feature loop asserted lock-step
+        // round numbers. The surviving P2 link is byte-identical in
+        // both directions.
+        let ref_p1 = feature_ref[0];
+        assert_eq!(p2_fault, feature_ref[1],
+                   "surviving feature link diverged");
+        let at = |v: &[(u16, (u64, u64, u64))], p: u16| {
+            v.iter().find(|(q, _)| *q == p).unwrap().1
+        };
+        assert_eq!(at(&label_fault, 2), at(&label_ref, 2),
+                   "label→P2 link diverged");
+        // The restarted P1 link carries exactly the surviving rounds'
+        // bytes. The reference sent N identical activation frames, so
+        // its per-round cost divides evenly.
+        assert_eq!(ref_p1.2, N, "reference P1 frame count");
+        assert_eq!((ref_p1.0 % N, ref_p1.1 % N), (0, 0));
+        let survived = N - resume;
+        assert_eq!(
+            p1_post,
+            (ref_p1.0 / N * survived, ref_p1.1 / N * survived,
+             survived),
+            "post-resume P1 link not byte-identical per round \
+             (resumed at {resume})"
+        );
+        // Sanity: fp16 stayed pinned across the snapshot resume.
+        assert!(p1_post.0 < p1_post.1,
+                "fp16 lane not compressed after resume: {p1_post:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,338 @@
+//! Deterministic fault injection for chaos testing (DESIGN.md §9).
+//!
+//! Crash-recovery code is exactly the code that never runs in a clean
+//! test suite. The OS-process route (kill a real process, as the
+//! `chaos_k3` example does) proves the end-to-end story but is
+//! scheduler roulette: which round the victim dies in depends on
+//! timing. [`FaultTransport`] makes the *failure itself* deterministic:
+//! it wraps any [`Transport`] and injects failures at points fixed by a
+//! seeded [`FaultPlan`], so "P1 dies at round 4" is a reproducible unit
+//! test, and the supervisor's peer-lost / straggler / rejoin machinery
+//! can be exercised against every injection point.
+//!
+//! Injection points (all decided from the plan, never from wall-clock
+//! randomness):
+//!
+//! - **kill-at-round-N** — the first `send` carrying round ≥ N fails,
+//!   and every later `send`/`recv`/`try_recv` fails too (a dead process
+//!   does no I/O). [`FaultPlan::kill_within`] derives N from the plan
+//!   seed for randomized-but-reproducible placement.
+//! - **drop-next-frame** — the nth outbound `send` call (0-based)
+//!   returns `Ok` but the frame never reaches the peer: a lost packet
+//!   the sender doesn't notice. The inner transport's accounting never
+//!   sees the frame.
+//! - **delay-ms** — the nth outbound `send` call sleeps before
+//!   forwarding: a straggler, not a failure.
+//! - **one-way partition** — outbound frames whose round falls in
+//!   `[from, to)` are silently discarded while the inbound direction
+//!   keeps working: the asymmetric link failure that distinguishes a
+//!   straggling peer from a dead one.
+//!
+//! The wrapper forwards [`stats`](Transport::stats) to the inner
+//! transport untouched, so dropped and partitioned frames are never
+//! charged — surviving-link byte parity against an undisturbed
+//! reference run stays assertable to the byte.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::protocol::Message;
+use crate::util::rng::Pcg;
+
+use super::{LinkStats, Transport};
+
+/// Pcg stream used to derive a kill round from the plan seed (see
+/// [`FaultPlan::kill_within`]); disjoint from every other stream
+/// constant in the crate so fault placement never correlates with
+/// batch order or session epochs.
+const KILL_STREAM: u64 = 0xFA17;
+
+/// A seeded, declarative schedule of transport failures. Build one
+/// with the chained setters, wrap a transport with
+/// [`FaultTransport::new`], and the same plan reproduces the same
+/// failure sequence on every run.
+///
+/// Frame indices (`nth`) count outbound `send` *calls* on the wrapped
+/// endpoint, 0-based, including calls that end up dropped, delayed or
+/// killed — the index is a property of the caller's send sequence, not
+/// of what reached the wire.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    kill_at: Option<u64>,
+    drops: Vec<u64>,
+    delays: Vec<(u64, Duration)>,
+    partition: Option<(u64, u64)>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no injections) carrying `seed` for derived
+    /// placements.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            kill_at: None,
+            drops: Vec::new(),
+            delays: Vec::new(),
+            partition: None,
+        }
+    }
+
+    /// Kill the endpoint at round `round`: the first `send` carrying
+    /// that round (or later) fails, and the endpoint is dead — sticky —
+    /// from then on.
+    pub fn kill_at_round(mut self, round: u64) -> Self {
+        self.kill_at = Some(round);
+        self
+    }
+
+    /// Like [`kill_at_round`](Self::kill_at_round), with the round
+    /// drawn deterministically from the plan seed in `[lo, hi)` — the
+    /// "seeded chaos" mode: vary the seed to sweep kill placements,
+    /// keep it to reproduce one.
+    pub fn kill_within(self, lo: u64, hi: u64) -> Self {
+        let span = hi.saturating_sub(lo).max(1);
+        let round = lo + Pcg::new(self.seed, KILL_STREAM).next_u64() % span;
+        self.kill_at_round(round)
+    }
+
+    /// Swallow the `nth` outbound send call: `Ok` to the caller, no
+    /// frame to the peer.
+    pub fn drop_frame(mut self, nth: u64) -> Self {
+        self.drops.push(nth);
+        self
+    }
+
+    /// Sleep `ms` milliseconds before forwarding the `nth` outbound
+    /// send call (a straggler, not a loss).
+    pub fn delay_ms(mut self, nth: u64, ms: u64) -> Self {
+        self.delays.push((nth, Duration::from_millis(ms)));
+        self
+    }
+
+    /// One-way partition: outbound frames whose round is in
+    /// `[from, to)` are silently discarded; inbound traffic is
+    /// unaffected.
+    pub fn partition_rounds(mut self, from: u64, to: u64) -> Self {
+        self.partition = Some((from, to));
+        self
+    }
+
+    /// The round this plan kills at, if any (resolved — `kill_within`
+    /// has already been drawn).
+    pub fn kill_round(&self) -> Option<u64> {
+        self.kill_at
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// What the wrapper decided to do with one outbound frame.
+enum SendAction {
+    Forward(Option<Duration>),
+    Drop,
+    Kill(u64),
+}
+
+#[derive(Default)]
+struct FaultState {
+    /// Outbound send calls observed so far (the `nth` counter).
+    sent: u64,
+    killed: bool,
+}
+
+/// A [`Transport`] wrapper that injects the failures scheduled by a
+/// [`FaultPlan`]. See the module docs for the injection semantics.
+pub struct FaultTransport {
+    inner: Arc<dyn Transport>,
+    plan: FaultPlan,
+    state: Mutex<FaultState>,
+}
+
+impl FaultTransport {
+    pub fn new(inner: Arc<dyn Transport>, plan: FaultPlan) -> Self {
+        FaultTransport { inner, plan, state: Mutex::new(FaultState::default()) }
+    }
+
+    /// Sticky-death check shared by the receive paths.
+    fn ensure_alive(&self) -> anyhow::Result<()> {
+        if self.state.lock().unwrap().killed {
+            anyhow::bail!(
+                "injected fault: endpoint killed (plan seed {:#x})",
+                self.plan.seed
+            );
+        }
+        Ok(())
+    }
+
+    /// Decide one send's fate under the state lock; the action itself
+    /// (sleeping, forwarding) runs outside it.
+    fn classify(&self, msg: &Message) -> SendAction {
+        let mut st = self.state.lock().unwrap();
+        let nth = st.sent;
+        st.sent += 1;
+        if st.killed {
+            return SendAction::Kill(self.plan.kill_at.unwrap_or(0));
+        }
+        if let Some(k) = self.plan.kill_at {
+            if msg.round() >= k {
+                st.killed = true;
+                return SendAction::Kill(k);
+            }
+        }
+        if self.plan.drops.contains(&nth) {
+            return SendAction::Drop;
+        }
+        if let Some((from, to)) = self.plan.partition {
+            let r = msg.round();
+            if r >= from && r < to {
+                return SendAction::Drop;
+            }
+        }
+        let delay = self
+            .plan
+            .delays
+            .iter()
+            .find(|(n, _)| *n == nth)
+            .map(|(_, d)| *d);
+        SendAction::Forward(delay)
+    }
+}
+
+impl Transport for FaultTransport {
+    fn send(&self, msg: Message) -> anyhow::Result<()> {
+        match self.classify(&msg) {
+            SendAction::Forward(delay) => {
+                if let Some(d) = delay {
+                    std::thread::sleep(d);
+                }
+                self.inner.send(msg)
+            }
+            SendAction::Drop => Ok(()),
+            SendAction::Kill(round) => anyhow::bail!(
+                "injected fault: killed at round {round} (plan seed \
+                 {:#x})",
+                self.plan.seed
+            ),
+        }
+    }
+
+    fn recv(&self) -> anyhow::Result<Message> {
+        self.ensure_alive()?;
+        self.inner.recv()
+    }
+
+    fn try_recv(&self) -> anyhow::Result<Option<Message>> {
+        self.ensure_alive()?;
+        self.inner.try_recv()
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WanProfile;
+    use crate::tensor::Tensor;
+    use crate::transport::inproc_pair;
+    use std::time::Instant;
+
+    fn act(round: u64) -> Message {
+        Message::Activation { round, tensor: Tensor::zeros_f32(vec![4]) }
+    }
+
+    fn wrapped(plan: FaultPlan) -> (FaultTransport, impl Transport) {
+        let (a, b) = inproc_pair(WanProfile::instant());
+        (FaultTransport::new(Arc::new(a), plan), b)
+    }
+
+    #[test]
+    fn kill_at_round_is_sticky_across_all_io() {
+        let (f, peer) = wrapped(FaultPlan::new(1).kill_at_round(2));
+        f.send(act(0)).unwrap();
+        f.send(act(1)).unwrap();
+        let e = f.send(act(2)).unwrap_err().to_string();
+        assert!(e.contains("injected fault") && e.contains("round 2"),
+                "{e}");
+        // Dead is dead: every path fails, including frames whose round
+        // predates the kill and both receive directions.
+        assert!(f.send(act(0)).is_err());
+        peer.send(act(9)).unwrap();
+        assert!(f.recv().is_err());
+        assert!(f.try_recv().is_err());
+        // The peer got exactly the two pre-kill frames.
+        assert_eq!(peer.recv().unwrap().round(), 0);
+        assert_eq!(peer.recv().unwrap().round(), 1);
+    }
+
+    #[test]
+    fn kill_within_is_seed_deterministic_and_in_range() {
+        for seed in [0u64, 7, 0xdead_beef] {
+            let a = FaultPlan::new(seed).kill_within(3, 9);
+            let b = FaultPlan::new(seed).kill_within(3, 9);
+            assert_eq!(a.kill_round(), b.kill_round());
+            let r = a.kill_round().unwrap();
+            assert!((3..9).contains(&r), "seed {seed}: round {r}");
+        }
+        // Degenerate range resolves to its lower bound, not a panic.
+        assert_eq!(FaultPlan::new(5).kill_within(4, 4).kill_round(),
+                   Some(4));
+    }
+
+    #[test]
+    fn drop_frame_swallows_exactly_the_nth_send() {
+        let (f, peer) = wrapped(FaultPlan::new(2).drop_frame(1));
+        for r in 0..3 {
+            f.send(act(r)).unwrap(); // all Ok — the loss is silent
+        }
+        assert_eq!(peer.recv().unwrap().round(), 0);
+        assert_eq!(peer.recv().unwrap().round(), 2);
+        // The inner accounting never saw the dropped frame.
+        assert_eq!(f.stats().messages, 2);
+    }
+
+    #[test]
+    fn delay_ms_holds_the_nth_send() {
+        let (f, peer) = wrapped(FaultPlan::new(3).delay_ms(1, 150));
+        let start = Instant::now();
+        f.send(act(0)).unwrap();
+        assert!(start.elapsed() < Duration::from_millis(100));
+        let start = Instant::now();
+        f.send(act(1)).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(150));
+        assert_eq!(peer.recv().unwrap().round(), 0);
+        assert_eq!(peer.recv().unwrap().round(), 1);
+    }
+
+    #[test]
+    fn one_way_partition_discards_outbound_rounds_only() {
+        let (f, peer) = wrapped(FaultPlan::new(4).partition_rounds(2, 4));
+        for r in 0..5 {
+            f.send(act(r)).unwrap();
+        }
+        // Rounds 2 and 3 vanished; 0, 1 and 4 crossed.
+        assert_eq!(peer.recv().unwrap().round(), 0);
+        assert_eq!(peer.recv().unwrap().round(), 1);
+        assert_eq!(peer.recv().unwrap().round(), 4);
+        assert_eq!(f.stats().messages, 3);
+        // Inbound keeps flowing: the partition is one-way.
+        peer.send(act(2)).unwrap();
+        assert_eq!(f.recv().unwrap().round(), 2);
+    }
+
+    #[test]
+    fn an_empty_plan_is_transparent() {
+        let (f, peer) = wrapped(FaultPlan::new(9));
+        f.send(act(0)).unwrap();
+        assert_eq!(peer.recv().unwrap().round(), 0);
+        peer.send(act(1)).unwrap();
+        assert_eq!(f.try_recv().unwrap().unwrap().round(), 1);
+        assert_eq!(f.stats().messages, 1);
+        assert_eq!(FaultPlan::new(9).kill_round(), None);
+    }
+}

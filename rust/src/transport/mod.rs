@@ -26,6 +26,7 @@
 //! ([`inproc_pair`], the plain TCP constructors) stay byte-identical to
 //! the two-party protocol.
 
+pub mod fault;
 pub mod tcp;
 
 use std::sync::atomic::{AtomicU64, Ordering};
