@@ -18,6 +18,12 @@
 //!      sessions wired + topology-validated through the same
 //!      `MeshBootstrap` path a TCP launch takes, DESIGN.md §7); must
 //!      stay linear in K and far under a round's WAN cost.
+//!   7. metrics facade — the per-send stats bump through pre-registered
+//!      `LinkHandles` vs the seed's transport-private `Counters` struct
+//!      (reimplemented here verbatim), detached and registry-bound
+//!      (DESIGN.md §10). Acceptance: all three are the same four
+//!      relaxed `fetch_add`s — the handle bump must stay ≈ 1× the
+//!      legacy bump, bound or not.
 //!
 //! `cargo bench --bench bench_hotpath`
 
@@ -28,6 +34,7 @@ use celu_vfl::experiments::ablation::{compression_bytes_per_round,
 use celu_vfl::data::batcher::{gather_a, gather_a_with, gather_b_with,
                               GatherScratch};
 use celu_vfl::data::SynthDataset;
+use celu_vfl::metrics::facade::{LinkHandles, Registry};
 use celu_vfl::protocol::{decode_frame, encode_frame_into, FrameHeader,
                          Message};
 use celu_vfl::session::bootstrap::inproc_mesh;
@@ -36,6 +43,7 @@ use celu_vfl::tensor::{Data, Tensor};
 use celu_vfl::testing::bench::{bench, section};
 use celu_vfl::workset::WorksetTable;
 use std::hint::black_box;
+use std::sync::atomic::AtomicU64;
 use std::time::Duration;
 
 const WINDOW: Duration = Duration::from_millis(300);
@@ -295,4 +303,66 @@ fn main() {
     println!("time-to-mesh K=17 vs K=2: {growth:.1}× \
               (links grew 16×; super-linear growth would flag a \
               bootstrap hot spot)");
+
+    // ---- 7. metrics facade -------------------------------------------------
+    section("metrics facade — per-send stats bump (handles vs legacy \
+             struct)");
+    let wire = 65_536usize;
+    let raw = 65_536usize;
+    let busy = Duration::from_micros(120);
+
+    let legacy = LegacyCounters::default();
+    let r_legacy = bench("legacy Counters::record (seed)", WINDOW, || {
+        legacy.record(wire, raw, busy);
+        black_box(&legacy);
+    });
+    report("legacy Counters::record (seed, 4 fetch_add)", &r_legacy, 0);
+
+    let detached = LinkHandles::detached();
+    let r_detached = bench("LinkHandles::record detached", WINDOW, || {
+        detached.record(wire, raw, busy);
+        black_box(&detached);
+    });
+    report("LinkHandles::record (detached)", &r_detached, 0);
+
+    // Binding the handles into a registry must not touch the hot path:
+    // the registry holds clones of the same Arc'd cells, so the bump is
+    // byte-for-byte the detached one. This is the API-redesign pin —
+    // enabling live observability costs the sender nothing.
+    let registry = Registry::new();
+    let bound = LinkHandles::detached();
+    registry.bind_link(PartyId(1), PartyId(0), &bound);
+    let r_bound = bench("LinkHandles::record registry-bound", WINDOW, || {
+        bound.record(wire, raw, busy);
+        black_box(&bound);
+    });
+    report("LinkHandles::record (registry-bound)", &r_bound, 0);
+
+    let legacy_ns = r_legacy.mean.as_nanos() as f64;
+    let det_x = r_detached.mean.as_nanos() as f64 / legacy_ns.max(1.0);
+    let bound_x = r_bound.mean.as_nanos() as f64 / legacy_ns.max(1.0);
+    println!("handle bump vs legacy: detached {det_x:.2}×, bound \
+              {bound_x:.2}×  (must stay ≈ 1× — same four relaxed \
+              fetch_adds, binding only clones Arcs)");
+}
+
+/// The seed's transport-private counter struct (pre-facade), kept as
+/// the §7 comparison baseline — four relaxed `fetch_add`s per send.
+#[derive(Default)]
+struct LegacyCounters {
+    messages: AtomicU64,
+    bytes: AtomicU64,
+    raw_bytes: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+impl LegacyCounters {
+    fn record(&self, bytes: usize, raw_bytes: usize, busy: Duration) {
+        use std::sync::atomic::Ordering;
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.raw_bytes.fetch_add(raw_bytes as u64, Ordering::Relaxed);
+        self.busy_nanos
+            .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+    }
 }

@@ -1,0 +1,330 @@
+//! K = 3 live-observability smoke: the exporter parity gate
+//! (DESIGN.md §10).
+//!
+//! One process, three session parties over loopback TCP — a label-party
+//! session server with the observability plane attached, plus two
+//! feature dialers sharing the same metrics registry (single process,
+//! so every directed link of the star lands in one scrape). While
+//! deterministic protocol-level traffic runs (artifact-free, no PJRT),
+//! the orchestrator:
+//!
+//! 1. scrapes `GET /metrics` off the session port **mid-run** and
+//!    checks the exposition is live (round advancing, link families
+//!    present);
+//! 2. attaches a `GET /watch` client and counts streamed tag-14 frames;
+//! 3. at end of run — while the re-admission point still serves — takes
+//!    a final scrape and a `RunRecord` terminal snapshot, then lets the
+//!    session stop so the watch stream ends with its final frame.
+//!
+//! The acceptance assertion is three-way parity: the final scrape, the
+//! watch stream's last frame, and the `RunRecordObserver` rows must all
+//! equal the registry's per-link totals exactly. Exits non-zero on any
+//! drift.
+//!
+//!     cargo run --release --example scrape_k3
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use celu_vfl::config::{RunConfig, WanProfile};
+use celu_vfl::metrics::exporters::prometheus;
+use celu_vfl::metrics::exporters::push::{frame_rows, read_metrics_frame};
+use celu_vfl::metrics::facade::Registry;
+use celu_vfl::metrics::{MetricsExporter, RunRecordObserver};
+use celu_vfl::protocol::Message;
+use celu_vfl::session::bootstrap::{MeshBootstrap, SessionDialer,
+                                   SessionListener};
+use celu_vfl::session::{PartyId, SessionBuilder, LABEL_PARTY};
+use celu_vfl::tensor::Tensor;
+use celu_vfl::transport::{LinkStats, Transport};
+
+const ROUNDS: u64 = 12;
+const BATCH: usize = 8;
+const Z_DIM: usize = 4;
+const JOIN_TIMEOUT: Duration = Duration::from_secs(20);
+/// Per-round pacing so the run spans several watch ticks (250 ms) and
+/// the mid-run scrape genuinely lands mid-run.
+const ROUND_PACE: Duration = Duration::from_millis(40);
+
+fn smoke_cfg() -> RunConfig {
+    let mut cfg = RunConfig::quick();
+    cfg.parties = 3;
+    cfg.wan = WanProfile::instant();
+    cfg.validate().expect("smoke config invalid");
+    cfg
+}
+
+/// Deterministic stand-in for a bottom model's activations.
+fn synth(party: u16, round: u64) -> Tensor {
+    let v: Vec<f32> = (0..BATCH * Z_DIM)
+        .map(|i| {
+            ((i as f32 * 0.23 + party as f32 * 1.1 + round as f32 * 0.41)
+                .sin())
+                * 0.7
+        })
+        .collect();
+    Tensor::f32(vec![BATCH, Z_DIM], v)
+}
+
+/// One HTTP GET against the session port, to EOF.
+fn http_get(addr: &str, path: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(out)
+}
+
+/// Split an HTTP response into (status line, body).
+fn split_response(resp: &str) -> anyhow::Result<(&str, &str)> {
+    let status = resp.lines().next().unwrap_or("");
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b)
+        .ok_or_else(|| anyhow::anyhow!("no header/body split in {resp:?}"))?;
+    Ok((status, body))
+}
+
+/// The current `celu_session_round` value of an exposition body.
+fn scrape_round(body: &str) -> Option<u64> {
+    body.lines()
+        .find_map(|l| l.strip_prefix("celu_session_round "))
+        .and_then(|v| v.parse().ok())
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let cfg = smoke_cfg();
+    let registry = Registry::new();
+
+    let listener = SessionListener::bind("127.0.0.1:0")?
+        .with_timeout(JOIN_TIMEOUT)
+        .with_metrics(registry.clone());
+    let addr = listener.local_addr()?.to_string();
+    println!("session port: {addr}");
+
+    // Label party: assemble the supervised mesh, drive ROUNDS of
+    // Activation → Σ → Derivative traffic, then hold the re-admission
+    // point open until the orchestrator has taken its final scrape.
+    let (done_tx, done_rx) = channel::<()>();
+    let (stop_tx, stop_rx) = channel::<()>();
+    let label = std::thread::spawn({
+        let cfg = cfg.clone();
+        let registry = registry.clone();
+        move || -> anyhow::Result<()> {
+            let (links, readmission, _epoch, _round) =
+                listener.establish_supervised(&cfg)?;
+            let mut b = SessionBuilder::new(&cfg, LABEL_PARTY)
+                .with_registry(registry.clone());
+            for l in links {
+                b = b.link_full(l);
+            }
+            let session = b.build()?;
+            for round in 1..=ROUNDS {
+                registry.set_round(round);
+                let mut zas = Vec::new();
+                for l in session.mesh().links() {
+                    match l.transport.recv()?.into_plain()? {
+                        Message::Activation { round: r, tensor } => {
+                            anyhow::ensure!(r == round,
+                                            "round skew on {}", l.peer);
+                            zas.push(tensor);
+                        }
+                        other => anyhow::bail!("unexpected tag {}",
+                                               other.tag()),
+                    }
+                }
+                let zsum = Tensor::sum_f32(&zas)?;
+                let dza = Tensor::f32(
+                    zsum.shape.clone(),
+                    zsum.as_f32()?
+                        .iter()
+                        .map(|x| 0.1 * x)
+                        .collect::<Vec<_>>(),
+                );
+                for l in session.mesh().links() {
+                    l.transport.send(Message::Derivative {
+                        round,
+                        tensor: dza.clone(),
+                    })?;
+                }
+                std::thread::sleep(ROUND_PACE);
+            }
+            for l in session.mesh().links() {
+                l.transport.send(Message::Shutdown)?;
+            }
+            done_tx.send(()).ok();
+            // Keep serving scrapes until the orchestrator is done,
+            // then drop the re-admission point: its stop flag ends
+            // every watch stream with one final-totals frame.
+            stop_rx.recv().ok();
+            drop(readmission);
+            Ok(())
+        }
+    });
+
+    // Feature parties: dial in, share the one registry (single
+    // process), run the matching traffic.
+    let features: Vec<_> = [1u16, 2]
+        .iter()
+        .map(|&p| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            let registry = registry.clone();
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let session = SessionBuilder::new(&cfg, PartyId(p))
+                    .with_registry(registry)
+                    .link_full(
+                        SessionDialer::new(&addr, PartyId(p))
+                            .with_timeout(JOIN_TIMEOUT)
+                            .establish(&cfg)?
+                            .remove(0),
+                    )
+                    .build()?;
+                let t = session.mesh().links()[0].transport.clone();
+                for round in 1..=ROUNDS {
+                    t.send(Message::Activation {
+                        round,
+                        tensor: synth(p, round),
+                    })?;
+                    match t.recv()?.into_plain()? {
+                        Message::Derivative { round: r, .. } => {
+                            anyhow::ensure!(r == round,
+                                            "round skew on P{p}");
+                        }
+                        other => anyhow::bail!("unexpected tag {}",
+                                               other.tag()),
+                    }
+                }
+                match t.recv()? {
+                    Message::Shutdown => Ok(()),
+                    other => anyhow::bail!("expected Shutdown, got tag \
+                                            {}", other.tag()),
+                }
+            })
+        })
+        .collect();
+
+    // ---- 1. mid-run scrape -------------------------------------------------
+    // Poll until the exposition reports a live round: proves the scrape
+    // is served while Join vetting and training traffic are in flight.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let mid_round = loop {
+        anyhow::ensure!(Instant::now() < deadline,
+                        "no live scrape before the deadline");
+        if let Ok(resp) = http_get(&addr, "/metrics") {
+            let (status, body) = split_response(&resp)?;
+            anyhow::ensure!(status.contains("200"),
+                            "scrape not OK: {status}");
+            if let Some(r) = scrape_round(body) {
+                if r >= 1 {
+                    anyhow::ensure!(
+                        body.contains("celu_link_wire_bytes_total{"),
+                        "live scrape misses link families:\n{body}"
+                    );
+                    break r;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    println!("mid-run scrape OK at round {mid_round}");
+
+    // ---- 2. attach a watch stream ------------------------------------------
+    let watcher = std::thread::spawn({
+        let addr = addr.clone();
+        move || -> anyhow::Result<(u64, Message)> {
+            let mut s = TcpStream::connect(&addr)?;
+            s.write_all(b"GET /watch HTTP/1.0\r\n\r\n")?;
+            s.set_read_timeout(Some(Duration::from_secs(10)))?;
+            let mut frames = 0u64;
+            let mut last = None;
+            while let Ok(f) = read_metrics_frame(&mut s) {
+                frames += 1;
+                last = Some(f);
+            }
+            let last = last
+                .ok_or_else(|| anyhow::anyhow!("watch delivered no \
+                                                frames"))?;
+            Ok((frames, last))
+        }
+    });
+
+    // ---- 3. end of run: final scrape + terminal observer -------------------
+    done_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("label thread died mid-run"))?;
+    for f in features {
+        f.join().expect("feature thread panicked")?;
+    }
+    // Registry totals are final now; the re-admission point still
+    // serves (the label thread waits on stop_tx).
+    let resp = http_get(&addr, "/metrics")?;
+    let (status, final_body) = split_response(&resp)?;
+    anyhow::ensure!(status.contains("200"), "final scrape not OK: \
+                                             {status}");
+    anyhow::ensure!(
+        final_body == prometheus::render(&registry),
+        "final scrape differs from a direct render of the registry"
+    );
+    let observer = RunRecordObserver::new();
+    observer.export(&registry)?;
+    let record_links = observer.links();
+    // Release the session: the watch stream must end with a final
+    // frame equal to everything above.
+    stop_tx.send(()).ok();
+    label.join().expect("label thread panicked")?;
+    let (frames, last_frame) = watcher.join().expect("watcher panicked")?;
+
+    // ---- the acceptance assertion ------------------------------------------
+    let expected: Vec<(PartyId, PartyId, LinkStats)> = registry
+        .link_rows()
+        .iter()
+        .map(|r| (r.src, r.dst, r.stats))
+        .collect();
+    anyhow::ensure!(expected.len() == 4,
+                    "a K=3 star has 4 directed links, registry has {}",
+                    expected.len());
+    println!("\n{:<8} {:>10} {:>10} {:>6}   (scrape == watch == record?)",
+             "link", "wire B", "raw B", "msgs");
+    for (src, dst, s) in &expected {
+        let gauge = format!(
+            "celu_link_wire_bytes_total{{src=\"{}\",dst=\"{}\"}} {}\n",
+            src.0, dst.0, s.bytes
+        );
+        anyhow::ensure!(final_body.contains(&gauge),
+                        "final scrape misses {gauge:?}:\n{final_body}");
+        let rec = record_links
+            .iter()
+            .find(|r| r.src == *src && r.dst == *dst)
+            .ok_or_else(|| anyhow::anyhow!("RunRecord misses link \
+                                            {src}->{dst}"))?;
+        anyhow::ensure!(
+            (rec.bytes, rec.raw_bytes, rec.messages)
+                == (s.bytes, s.raw_bytes, s.messages),
+            "RunRecord row {src}->{dst} diverged from the registry"
+        );
+        println!("{}->{:<5} {:>10} {:>10} {:>6}   OK",
+                 src.0, dst.0, s.bytes, s.raw_bytes, s.messages);
+    }
+    anyhow::ensure!(
+        frame_rows(&last_frame) == expected,
+        "watch stream's final frame diverged from the registry:\n  \
+         watch:    {:?}\n  registry: {expected:?}",
+        frame_rows(&last_frame)
+    );
+    anyhow::ensure!(last_frame.round() == ROUNDS,
+                    "final frame is round {}, expected {ROUNDS}",
+                    last_frame.round());
+    anyhow::ensure!(frames >= 2,
+                    "watch saw only {frames} frame(s) — stream not live");
+    println!(
+        "\nK=3 observability smoke OK: {frames} watch frames, final \
+         scrape == final frame == RunRecord over {} links",
+        expected.len()
+    );
+    Ok(())
+}

@@ -42,15 +42,16 @@ use crate::compress::{self, CodecKind};
 use crate::config::RunConfig;
 use crate::data::batcher::{gather_a_with, BatchCursor, GatherScratch};
 use crate::data::PartyAData;
+use crate::metrics::facade::{CounterSink, EventSink, NullSink, Registry};
 use crate::metrics::CosineRecorder;
 use crate::protocol::{outbound_stats, Lane, Message};
 use crate::runtime::{ArtifactSet, PartyARuntime};
 use crate::session::bootstrap::rejoin_dial;
 use crate::session::checkpoint::{save_with_retry, FeatureSnapshot};
 use crate::session::supervisor::session_epoch;
-use crate::session::{Link, PartyId};
+use crate::session::{Link, PartyId, LABEL_PARTY};
 use crate::tensor::Tensor;
-use crate::transport::{LinkStats, Transport};
+use crate::transport::Transport;
 use crate::workset::{MeshWorkset, WorksetStats};
 
 use super::{eval_batch_count, feature_seed, Ctrl, BUBBLE_PARK};
@@ -66,7 +67,7 @@ pub struct RejoinPolicy {
 
 /// Supervised-lifecycle options for a feature run. Defaults reproduce
 /// the historic behaviour: no reconnects, start at round 0.
-#[derive(Debug, Clone, Default)]
+#[derive(Clone, Default)]
 pub struct FeatureRunOpts {
     /// Reconnect policy; `None` propagates transport errors (historic).
     pub rejoin: Option<RejoinPolicy>,
@@ -78,9 +79,17 @@ pub struct FeatureRunOpts {
     /// pinned from the snapshot (no renegotiation — the label party's
     /// lane kept its codec across the rejoin).
     pub resume: Option<FeatureSnapshot>,
+    /// Publish this party's link accounting into this registry (the
+    /// observability plane — DESIGN.md §10). Rejoin transport swaps
+    /// re-bind here with the old counters charged forward, so the
+    /// registry row stays cumulative across swaps.
+    pub registry: Option<Arc<Registry>>,
 }
 
-/// Everything a feature party reports after a run.
+/// Everything a feature party reports after a run. Link accounting is
+/// NOT carried here by value any more — it lives in the run's
+/// [`Registry`] (the `(party → label)` row of
+/// [`Registry::link_rows`]).
 #[derive(Debug)]
 pub struct FeaturePartyReport {
     pub party: PartyId,
@@ -89,8 +98,6 @@ pub struct FeaturePartyReport {
     pub local_updates: u64,
     pub workset: WorksetStats,
     pub cosine: CosineRecorder,
-    /// Sender-side accounting, carried across rejoin transport swaps.
-    pub link_stats: LinkStats,
     /// Successful re-admissions performed during the run.
     pub rejoins: u64,
 }
@@ -183,10 +190,17 @@ pub fn run_feature_party(
     let eval_batches = eval_batch_count(cfg, test.n, batch);
     let mut comm_rounds = opts.start_round;
     let mut transport: Arc<dyn Transport> = link.transport.clone();
-    let mut carried = LinkStats::default();
     let mut rejoins = 0u64;
     let epoch = session_epoch(cfg.seed);
     let requested = cfg.codec_for(party.0);
+    // Checkpoint events on the feature side bump the registry's kind
+    // counters only: the bounded event *log* is the label party's
+    // lifecycle record, and an in-proc run shares one registry across
+    // all K parties.
+    let ckpt_sink: Arc<dyn EventSink> = match &opts.registry {
+        Some(reg) => Arc::new(CounterSink(reg.clone())),
+        None => Arc::new(NullSink),
+    };
     let result: anyhow::Result<()> = (|| {
         // Codec handshake. A snapshot resume pins the codec the
         // original join negotiated (the label's lane kept it across
@@ -251,7 +265,6 @@ pub fn run_feature_party(
         // sites share it.)
         let do_rejoin = |err: &anyhow::Error,
                              transport: &mut Arc<dyn Transport>,
-                             carried: &mut LinkStats,
                              rejoins: &mut u64,
                              last_round: u64|
          -> anyhow::Result<(u64, u32)> {
@@ -266,7 +279,21 @@ pub fn run_feature_party(
                 &policy.addr, party, cfg, epoch, last_round,
                 policy.timeout,
             )?;
-            *carried = carried.merged(transport.stats());
+            // Charge the dead transport's totals onto the fresh one's
+            // handles, then re-bind: the registry row (and any scrape
+            // mid-swap) stays cumulative across the whole run.
+            match t.metrics() {
+                Some(h) => {
+                    h.charge(transport.stats());
+                    if let Some(reg) = &opts.registry {
+                        reg.bind_link(party, LABEL_PARTY, &h);
+                    }
+                }
+                None => log::warn!(
+                    "[{party}] rejoin transport exposes no metrics \
+                     handles — pre-rejoin accounting dropped"
+                ),
+            }
             *transport = t;
             *rejoins += 1;
             Ok((resume, replays))
@@ -317,8 +344,7 @@ pub fn run_feature_party(
                 // replay can exist; re-run the round after rejoining
                 // (or skip ahead to wherever the session got to).
                 let (resume, _replays) = do_rejoin(
-                    &e, &mut transport, &mut carried, &mut rejoins,
-                    comm_rounds)?;
+                    &e, &mut transport, &mut rejoins, comm_rounds)?;
                 if resume == round {
                     pending = Some(PendingRound {
                         round, idx, xa, za: za_raw,
@@ -346,8 +372,7 @@ pub fn run_feature_party(
                 },
                 Err(e) => {
                     let (resume, replays) = do_rejoin(
-                        &e, &mut transport, &mut carried, &mut rejoins,
-                        comm_rounds)?;
+                        &e, &mut transport, &mut rejoins, comm_rounds)?;
                     // The label replays the in-flight round's
                     // derivative when it had consumed our activation
                     // before the drop.
@@ -414,7 +439,8 @@ pub fn run_feature_party(
                     params,
                     accs,
                 };
-                match save_with_retry(|| snap.save(&cfg.checkpoint_dir))
+                match save_with_retry(comm_rounds, ckpt_sink.as_ref(),
+                                      || snap.save(&cfg.checkpoint_dir))
                 {
                     Ok(path) => log::info!(
                         "[{party}] checkpoint written: {path}"),
@@ -439,8 +465,8 @@ pub fn run_feature_party(
                         // Abandon the eval walk (the label excludes
                         // this lane from the partial eval) and rejoin.
                         let (resume, _replays) = do_rejoin(
-                            &e, &mut transport, &mut carried,
-                            &mut rejoins, comm_rounds)?;
+                            &e, &mut transport, &mut rejoins,
+                            comm_rounds)?;
                         round = resume_at(resume, &mut cursor,
                                           &mut taken, &mut comm_rounds);
                         continue 'rounds;
@@ -471,7 +497,6 @@ pub fn run_feature_party(
     let cosine = Arc::try_unwrap(cosine)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_default();
-    let link_stats = carried.merged(transport.stats());
     Ok(FeaturePartyReport {
         party,
         comm_rounds,
@@ -479,7 +504,6 @@ pub fn run_feature_party(
         local_updates,
         workset: ws_stats,
         cosine,
-        link_stats,
         rejoins,
     })
 }

@@ -39,15 +39,15 @@ use std::time::Instant;
 use crate::config::RunConfig;
 use crate::data::batcher::{gather_b_with, BatchCursor, GatherScratch};
 use crate::data::PartyBData;
+use crate::metrics::facade::Registry;
 use crate::metrics::{auc_exact, CosineRecorder, SeriesPoint};
 use crate::runtime::{ArtifactSet, PartyBRuntime};
 use crate::session::bootstrap::Readmission;
 use crate::session::checkpoint::{save_with_retry, SessionSnapshot};
 use crate::session::supervisor::{session_epoch, LaneInput, LaneSet,
-                                 SessionEvent, SessionState};
-use crate::session::{Link, PartyId};
+                                 SessionState};
+use crate::session::Link;
 use crate::tensor::Tensor;
-use crate::transport::LinkStats;
 use crate::util::stats::Ema;
 use crate::workset::{MeshWorkset, WorksetStats};
 
@@ -65,9 +65,18 @@ pub struct LabelRunOpts {
     /// codecs are pinned from the snapshot, and the round loop resumes
     /// at `snapshot.round`.
     pub resume: Option<SessionSnapshot>,
+    /// Publish lifecycle events and per-link accounting into this
+    /// registry (the observability plane — DESIGN.md §10). `None` keeps
+    /// a lane-set-private registry; `Session::run_label_with` injects
+    /// the session's own.
+    pub registry: Option<Arc<Registry>>,
 }
 
-/// Everything the label party reports after a run.
+/// Everything the label party reports after a run. Lifecycle events
+/// and per-link accounting are NOT carried here by value any more —
+/// they live in the run's [`Registry`] (query
+/// [`Registry::events`] / [`Registry::link_rows`], or snapshot through
+/// an exporter).
 #[derive(Debug, Default)]
 pub struct LabelPartyReport {
     pub comm_rounds: u64,
@@ -78,11 +87,6 @@ pub struct LabelPartyReport {
     pub series: Vec<SeriesPoint>,
     /// Why the run ended.
     pub stop_reason: StopReason,
-    /// Lifecycle events observed by the supervisor (DESIGN.md §8).
-    pub events: Vec<SessionEvent>,
-    /// Per-peer sender-side accounting, carried across any transport
-    /// swaps a `Rejoin` performed.
-    pub link_stats: Vec<(PartyId, LinkStats)>,
     /// Lanes re-admitted during the run.
     pub rejoins: u64,
 }
@@ -105,6 +109,7 @@ pub fn run_label_party(
 ) -> anyhow::Result<LabelPartyReport> {
     anyhow::ensure!(!links.is_empty(),
                     "label party needs at least one feature link");
+    let LabelRunOpts { readmission, resume, registry } = opts;
     let batch = set.manifest.batch;
     let runtime = Arc::new(Mutex::new(PartyBRuntime::new(
         set.clone(),
@@ -116,7 +121,7 @@ pub fn run_label_party(
         cfg.cos_xi() as f32,
         cfg.weighting_enabled(),
     )?));
-    let start_round: u64 = match &opts.resume {
+    let start_round: u64 = match &resume {
         Some(snap) => {
             anyhow::ensure!(
                 snap.parties as usize == cfg.parties,
@@ -208,12 +213,15 @@ pub fn run_label_party(
     let mut series: Vec<SeriesPoint> = Vec::new();
     let mut stop_reason = StopReason::MaxRounds;
     let mut comm_rounds = start_round;
-    let mut lanes = LaneSet::new(cfg, links, opts.readmission);
+    let mut lanes = LaneSet::new(cfg, links, readmission);
+    if let Some(reg) = registry {
+        lanes = lanes.with_registry(reg);
+    }
 
     let result: anyhow::Result<()> = (|| {
         lanes.handshake(
             cfg,
-            opts.resume.as_ref().map(|s| s.links.as_slice()),
+            resume.as_ref().map(|s| s.links.as_slice()),
         )?;
         for round in start_round..cfg.max_rounds as u64 {
             let idx = cursor.next_indices();
@@ -290,29 +298,17 @@ pub fn run_label_party(
                 };
                 // A failed write degrades durability, not the session:
                 // bounded retry, then log + event and keep training.
-                match save_with_retry(|| snap.save(&cfg.checkpoint_dir))
+                // `save_with_retry` emits the checkpoint event itself
+                // into the registry sink.
+                match save_with_retry(comm_rounds,
+                                      lanes.registry().as_ref(),
+                                      || snap.save(&cfg.checkpoint_dir))
                 {
-                    Ok(path) => {
-                        log::info!("checkpoint written: {path}");
-                        lanes.supervisor_mut().record(
-                            SessionEvent::CheckpointWritten {
-                                round: comm_rounds,
-                                path,
-                            },
-                        );
-                    }
-                    Err(e) => {
-                        log::warn!(
-                            "checkpoint at round {comm_rounds} failed \
-                             (training continues without it): {e:#}"
-                        );
-                        lanes.supervisor_mut().record(
-                            SessionEvent::CheckpointFailed {
-                                round: comm_rounds,
-                                error: format!("{e:#}"),
-                            },
-                        );
-                    }
+                    Ok(path) => log::info!("checkpoint written: {path}"),
+                    Err(e) => log::warn!(
+                        "checkpoint at round {comm_rounds} failed \
+                         (training continues without it): {e:#}"
+                    ),
                 }
             }
 
@@ -415,9 +411,7 @@ pub fn run_label_party(
     let cosine = Arc::try_unwrap(cosine)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_default();
-    let link_stats = lanes.link_stats();
     let rejoins = lanes.total_rejoins();
-    let events = lanes.take_events();
     Ok(LabelPartyReport {
         comm_rounds,
         exact_updates,
@@ -426,8 +420,6 @@ pub fn run_label_party(
         cosine,
         series,
         stop_reason,
-        events,
-        link_stats,
         rejoins,
     })
 }

@@ -20,10 +20,11 @@ use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
 use crate::data::{PartyAData, SynthDataset};
-use crate::metrics::{LinkRecord, RunRecord};
+use crate::metrics::facade::Registry;
+use crate::metrics::{MetricsExporter, RunRecord, RunRecordObserver};
 use crate::runtime::ArtifactSet;
 use crate::session::bootstrap::inproc_mesh;
-use crate::session::{PartyId, SessionBuilder, LABEL_PARTY};
+use crate::session::{PartyId, SessionBuilder};
 
 use super::feature_party::FeaturePartyReport;
 use super::label_party::{LabelPartyReport, StopReason};
@@ -125,9 +126,16 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
 
     // Same bootstrap surface as the TCP deployment: the in-proc star is
     // just the pre-wired MeshBootstrap, so the trainer exercises the
-    // exact session-construction path a K-process launch does.
+    // exact session-construction path a K-process launch does. One
+    // registry is shared by every party, so all 2(K−1) directed links
+    // (and the label supervisor's lifecycle events) are visible through
+    // a single scrape / push stream / terminal snapshot (DESIGN.md §10).
+    let registry = Registry::new();
     let (label_bootstrap, feature_bootstraps) = inproc_mesh(cfg);
-    let label_session = SessionBuilder::from_bootstrap(cfg, label_bootstrap)?;
+    let label_session =
+        SessionBuilder::bootstrap_builder(cfg, label_bootstrap)?
+            .with_registry(registry.clone())
+            .build()?;
 
     let start = Instant::now();
     let mut handles = Vec::with_capacity(k);
@@ -137,7 +145,9 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
         .zip(train_slices.into_iter().zip(test_slices))
     {
         let party = PartyId(i as u16 + 1);
-        let session = SessionBuilder::from_bootstrap(cfg, bootstrap)?;
+        let session = SessionBuilder::bootstrap_builder(cfg, bootstrap)?
+            .with_registry(registry.clone())
+            .build()?;
         let set_f = set.clone();
         let train = Arc::new(train);
         let test = Arc::new(test);
@@ -158,31 +168,20 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
     let wall = start.elapsed();
 
     // Per-link accounting: one row per directed link of the star, from
-    // the parties' reports (which carry stats across any transport
-    // swaps a supervised run performed).
-    let mut links = Vec::with_capacity(2 * k);
-    let mut comm_busy = Duration::ZERO;
-    for r in &feature_reports {
-        let s = r.link_stats;
-        links.push(LinkRecord {
-            src: r.party,
-            dst: LABEL_PARTY,
-            messages: s.messages,
-            bytes: s.bytes,
-            raw_bytes: s.raw_bytes,
-        });
-        comm_busy += s.busy;
-    }
-    for (peer, s) in &b_report.link_stats {
-        links.push(LinkRecord {
-            src: LABEL_PARTY,
-            dst: *peer,
-            messages: s.messages,
-            bytes: s.bytes,
-            raw_bytes: s.raw_bytes,
-        });
-        comm_busy += s.busy;
-    }
+    // the shared registry (whose rows survived any transport swaps a
+    // supervised run performed — rejoins charge the old totals onto the
+    // fresh handles). The terminal observer is the RunRecord's leg of
+    // the exporter API: scrape, push and this snapshot all read the
+    // same rows, which is what the `scrape_k3` parity gate pins.
+    let observer = RunRecordObserver::new();
+    observer.export(&registry)?;
+    let links = observer.links();
+    let events = observer.events();
+    let comm_busy: Duration = registry
+        .link_rows()
+        .iter()
+        .map(|r| r.stats.busy)
+        .sum();
 
     debug_assert!(feature_reports
         .iter()
@@ -203,7 +202,7 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
         comm_busy,
         wall,
         compute_busy: set.clock_a.busy() + set.clock_b.busy(),
-        events: b_report.events,
+        events,
     };
     log::info!(
         "run {} finished: {} parties, {} rounds, {} local updates \

@@ -44,6 +44,7 @@ use crate::config::RunConfig;
 use crate::coordinator::feature_party::{FeatureRunOpts, RejoinPolicy};
 use crate::coordinator::label_party::LabelRunOpts;
 use crate::coordinator::trainer::{feature_slices, load_data, load_set};
+use crate::metrics::facade::Registry;
 use crate::session::bootstrap::{SessionDialer, SessionListener};
 use crate::session::checkpoint::{FeatureSnapshot, SessionSnapshot};
 use crate::session::supervisor::session_epoch;
@@ -59,8 +60,13 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             // Bind before touching artifacts: dialers can already be
             // retrying, and an artifact error should not look like a
             // dead listener from their side any longer than necessary.
-            let mut listener =
-                SessionListener::bind(listen)?.with_timeout(join_timeout);
+            // The listener doubles as the observability endpoint: a
+            // `GET /metrics` on the session port scrapes this registry,
+            // `GET /watch` streams tag-14 metric frames (DESIGN.md §10).
+            let registry = Registry::new();
+            let mut listener = SessionListener::bind(listen)?
+                .with_timeout(join_timeout)
+                .with_metrics(registry.clone());
             let snapshot = if resume != "-" && !resume.is_empty() {
                 let snap = SessionSnapshot::load(resume)?;
                 log::info!(
@@ -81,7 +87,8 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             let data = load_data(cfg, &set)?;
             let (links, readmission, _epoch, _start_round) =
                 listener.establish_supervised(cfg)?;
-            let mut b = SessionBuilder::new(cfg, LABEL_PARTY);
+            let mut b = SessionBuilder::new(cfg, LABEL_PARTY)
+                .with_registry(registry.clone());
             for l in links {
                 b = b.link_full(l);
             }
@@ -93,6 +100,9 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 LabelRunOpts {
                     readmission: Some(readmission),
                     resume: snapshot,
+                    // run_label_with injects the session registry —
+                    // the same one the listener serves scrapes from.
+                    registry: None,
                 },
             )?;
             let best = report
@@ -100,14 +110,14 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 .iter()
                 .map(|p| p.auc)
                 .fold(0.0f64, f64::max);
+            let events = registry.events();
             println!(
                 "label party done: parties={} rounds={} local_updates={} \
                  best_auc={:.4} stop={:?} rejoins={} events={}",
                 cfg.parties, report.comm_rounds, report.local_updates,
-                best, report.stop_reason, report.rejoins,
-                report.events.len()
+                best, report.stop_reason, report.rejoins, events.len()
             );
-            for e in &report.events {
+            for e in &events {
                 println!(
                     "event {:<20} round={:<8} party={}",
                     e.kind(),
@@ -117,14 +127,16 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 );
             }
             // Per-link accounting keyed by the ids that actually
-            // joined, carried across any rejoin transport swaps.
+            // joined, carried across any rejoin transport swaps (the
+            // registry rows were charged forward at each swap).
             println!("{:<8} {:>10} {:>10} {:>8} {:>8}", "link",
                      "wire B", "raw B", "msgs", "ratio");
-            for (peer, s) in &report.link_stats {
+            for row in registry.link_rows() {
+                let s = row.stats;
                 println!(
-                    "0->{:<5} {:>10} {:>10} {:>8} {:>8.2}",
-                    peer.0, s.bytes, s.raw_bytes, s.messages,
-                    s.compression_ratio()
+                    "{}->{:<4} {:>10} {:>10} {:>8} {:>8.2}",
+                    row.src.0, row.dst.0, s.bytes, s.raw_bytes,
+                    s.messages, s.compression_ratio()
                 );
             }
         }
@@ -199,9 +211,17 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                     }),
                     start_round,
                     resume: snapshot,
+                    registry: None, // run_feature_with injects
                 },
             )?;
-            let stats = report.link_stats;
+            // The session registry's single (party → label) row holds
+            // the cumulative accounting, rejoin swaps included.
+            let stats = session
+                .registry()
+                .link_rows()
+                .first()
+                .map(|r| r.stats)
+                .unwrap_or_default();
             println!(
                 "feature party {} done: rounds={} local_updates={} \
                  rejoins={} sent={}B (raw {}B, ratio {:.2})",

@@ -15,6 +15,11 @@
 //!   straggler lanes stepping on cached stale statistics, `Rejoin`
 //!   reconnect through a live re-admission point, and label-party
 //!   checkpoint/restart via `session::checkpoint` — DESIGN.md §8),
+//!   a live observability plane (`metrics`: a lock-free recorder
+//!   facade every transport bumps through pre-registered handles,
+//!   observed by a Prometheus-text scrape and a tag-14 push stream
+//!   served straight off the session port, plus the terminal
+//!   `RunRecord` snapshot — DESIGN.md §10),
 //!   running the paper's protocol with negotiated wire
 //!   compression for the exchanged statistics (`compress`: fp16 / int8
 //!   / top-k codecs, DESIGN.md §5), simulated-WAN / TCP transports with

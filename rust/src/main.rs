@@ -6,6 +6,9 @@
 //!   party   run one party of a K-process TCP session (the label party
 //!           is the session server; feature parties dial in and claim
 //!           an id via the Join handshake — DESIGN.md §7)
+//!   watch   attach to a running session's observability plane and
+//!           render live per-link gauges from its tag-14 metric stream
+//!           (DESIGN.md §10)
 //!   info    print artifact/manifest information
 //!
 //! Examples:
@@ -16,6 +19,8 @@
 //!   celu-vfl party --role label   --parties 3 --listen 0.0.0.0:7000
 //!   celu-vfl party --role feature --parties 3 --party 1 --connect host:7000
 //!   celu-vfl party --role feature --parties 3 --party 2 --connect host:7000
+//!   # From a fourth shell, live link totals off the same port:
+//!   celu-vfl watch --connect host:7000
 //!   celu-vfl info --artifacts artifacts
 
 use celu_vfl::compress::CodecKind;
@@ -30,10 +35,11 @@ fn main() {
     let code = match argv.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&argv[1..]),
         Some("party") => cmd_party(&argv[1..]),
+        Some("watch") => cmd_watch(&argv[1..]),
         Some("info") => cmd_info(&argv[1..]),
         _ => {
             eprintln!(
-                "usage: celu-vfl <train|party|info> [options]\n\
+                "usage: celu-vfl <train|party|watch|info> [options]\n\
                  run `celu-vfl <cmd> --help` for details"
             );
             Err(anyhow::anyhow!("no subcommand"))
@@ -215,6 +221,58 @@ fn cmd_party(argv: &[String]) -> anyhow::Result<()> {
         std::time::Duration::from_secs_f64(timeout),
         args.get("resume"),
     )
+}
+
+fn cmd_watch(argv: &[String]) -> anyhow::Result<()> {
+    use celu_vfl::metrics::exporters::push::{frame_rows,
+                                             read_metrics_frame};
+    use std::io::Write as _;
+
+    let cli = Cli::new("celu-vfl watch",
+                       "live per-link gauges from a running session")
+        .opt("connect", "127.0.0.1:7001",
+             "the label party's session listener address");
+    let args = cli.parse(argv)?;
+    let addr = args.get("connect");
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    stream.write_all(b"GET /watch HTTP/1.0\r\n\r\n")?;
+    stream.flush()?;
+    println!(
+        "watching {addr}: one cumulative frame per tick, one line per \
+         directed link (Ctrl-C to detach)"
+    );
+    let mut frames = 0u64;
+    loop {
+        let msg = match read_metrics_frame(&mut stream) {
+            Ok(m) => m,
+            // The very first read failing means the peer refused the
+            // stream (bootstrap-phase 503, no registry, or not a
+            // session port at all) — that is an error, not an ending.
+            Err(e) if frames == 0 => {
+                return Err(anyhow::anyhow!(
+                    "no metric stream from {addr}: {e:#} — is a \
+                     supervised session live on that port?"
+                ))
+            }
+            // After that, EOF is the session ending; the last frame
+            // already carried the final totals.
+            Err(_) => break,
+        };
+        frames += 1;
+        for (src, dst, s) in frame_rows(&msg) {
+            println!(
+                "round={:<8} {}->{} msgs={:<8} wire={:<12} raw={:<12} \
+                 busy={:.3}s ratio={:.2}",
+                msg.round(), src.0, dst.0, s.messages, s.bytes,
+                s.raw_bytes, s.busy.as_secs_f64(),
+                s.compression_ratio()
+            );
+        }
+    }
+    println!("session ended after {frames} frames — totals above are \
+              final");
+    Ok(())
 }
 
 fn cmd_info(argv: &[String]) -> anyhow::Result<()> {

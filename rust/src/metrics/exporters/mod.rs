@@ -1,0 +1,155 @@
+//! Exporter side of the observability plane (DESIGN.md §10).
+//!
+//! Three observers, one trait: the facade's [`Registry`] is the single
+//! source of truth, and everything downstream — the Prometheus-text
+//! scrape endpoint, the control-lane push stream, the terminal
+//! `RunRecord` artifact — is a [`MetricsExporter`] that reads the same
+//! cells. None of them is allowed to perturb the session: exporting is
+//! read-only, failures are the exporter's own problem, and a run with
+//! no exporter installed does not change by a byte.
+
+pub mod prometheus;
+pub mod push;
+
+use std::sync::Mutex;
+
+use crate::metrics::facade::{LinkRow, Registry};
+use crate::metrics::series::LinkRecord;
+use crate::session::supervisor::SessionEvent;
+use crate::session::LABEL_PARTY;
+
+pub use prometheus::PrometheusExporter;
+pub use push::PushExporter;
+
+/// One observer of the metrics registry. `export` takes one
+/// observation; what that means is the implementation's business — a
+/// scrape renders text, a push stream writes a frame, a terminal
+/// observer folds the registry into an artifact.
+pub trait MetricsExporter: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn export(&self, registry: &Registry) -> anyhow::Result<()>;
+}
+
+/// The registry's link rows in `RunRecord` order: feature→label rows
+/// by source id, then label→feature rows by destination id — exactly
+/// the order the trainer has always assembled (feature reports in
+/// party order, then the label party's own lanes), so the JSON
+/// artifact stays byte-compatible. Rows of a non-star topology (none
+/// exist today) would follow in registry order.
+pub fn run_record_links(registry: &Registry) -> Vec<LinkRecord> {
+    let rows = registry.link_rows();
+    let record = |r: &LinkRow| LinkRecord {
+        src: r.src,
+        dst: r.dst,
+        messages: r.stats.messages,
+        bytes: r.stats.bytes,
+        raw_bytes: r.stats.raw_bytes,
+    };
+    let mut out = Vec::with_capacity(rows.len());
+    let mut to_label: Vec<&LinkRow> =
+        rows.iter().filter(|r| r.dst == LABEL_PARTY).collect();
+    to_label.sort_by_key(|r| r.src);
+    out.extend(to_label.into_iter().map(record));
+    let mut from_label: Vec<&LinkRow> =
+        rows.iter().filter(|r| r.src == LABEL_PARTY).collect();
+    from_label.sort_by_key(|r| r.dst);
+    out.extend(from_label.into_iter().map(record));
+    out.extend(rows.iter()
+        .filter(|r| r.src != LABEL_PARTY && r.dst != LABEL_PARTY)
+        .map(record));
+    out
+}
+
+/// The terminal observer: snapshots the registry once, at end of run,
+/// into the rows and event log `RunRecord` is assembled from. The
+/// trainer installs one of these where it used to hand-thread
+/// `LinkStats` vectors and event `Vec`s out of every party report.
+#[derive(Default)]
+pub struct RunRecordObserver {
+    links: Mutex<Vec<LinkRecord>>,
+    events: Mutex<Vec<SessionEvent>>,
+}
+
+impl RunRecordObserver {
+    pub fn new() -> Self {
+        RunRecordObserver::default()
+    }
+
+    /// The observed link rows (empty until `export` runs).
+    pub fn links(&self) -> Vec<LinkRecord> {
+        self.links.lock().unwrap().clone()
+    }
+
+    /// The observed event log (empty until `export` runs).
+    pub fn events(&self) -> Vec<SessionEvent> {
+        self.events.lock().unwrap().clone()
+    }
+}
+
+impl MetricsExporter for RunRecordObserver {
+    fn name(&self) -> &'static str {
+        "run-record"
+    }
+
+    fn export(&self, registry: &Registry) -> anyhow::Result<()> {
+        *self.links.lock().unwrap() = run_record_links(registry);
+        *self.events.lock().unwrap() = registry.events();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::facade::{EventSink, LinkHandles};
+    use crate::session::PartyId;
+    use std::time::Duration;
+
+    fn charged(wire: u64, raw: u64, msgs: u64) -> LinkHandles {
+        let h = LinkHandles::detached();
+        h.charge(crate::transport::LinkStats {
+            messages: msgs,
+            bytes: wire,
+            raw_bytes: raw,
+            busy: Duration::ZERO,
+        });
+        h
+    }
+
+    #[test]
+    fn run_record_links_order_matches_the_trainer() {
+        // Registry iteration is (src, dst)-sorted: (0,1) (0,3) (1,0)
+        // (3,0). RunRecord wants feature rows first (1→0, 3→0), then
+        // label rows (0→1, 0→3).
+        let reg = Registry::new();
+        for (s, d, wire) in [(0u16, 1u16, 10u64), (3, 0, 40), (1, 0, 20),
+                             (0, 3, 30)] {
+            reg.bind_link(PartyId(s), PartyId(d),
+                          &charged(wire, wire, 1));
+        }
+        let rows = run_record_links(&reg);
+        let order: Vec<(u16, u16)> =
+            rows.iter().map(|r| (r.src.0, r.dst.0)).collect();
+        assert_eq!(order, vec![(1, 0), (3, 0), (0, 1), (0, 3)]);
+        assert_eq!(rows[0].bytes, 20);
+        assert_eq!(rows[1].bytes, 40);
+    }
+
+    #[test]
+    fn run_record_observer_snapshots_links_and_events() {
+        let reg = Registry::new();
+        reg.bind_link(PartyId(1), PartyId(0), &charged(100, 200, 2));
+        reg.emit(&SessionEvent::StragglerTimeout { party: PartyId(1),
+                                                   round: 3 });
+        let obs = RunRecordObserver::new();
+        assert!(obs.links().is_empty() && obs.events().is_empty());
+        obs.export(&reg).unwrap();
+        let links = obs.links();
+        assert_eq!(links.len(), 1);
+        assert_eq!((links[0].messages, links[0].bytes,
+                    links[0].raw_bytes),
+                   (2, 100, 200));
+        assert_eq!(obs.events().len(), 1);
+        assert_eq!(obs.name(), "run-record");
+    }
+}

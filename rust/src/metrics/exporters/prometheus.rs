@@ -1,0 +1,252 @@
+//! Prometheus text exposition (DESIGN.md §10).
+//!
+//! [`render`] turns a registry snapshot into the text format any
+//! Prometheus-compatible scraper understands — hand-rolled, because the
+//! format is lines of `name{labels} value` and the vendoring discipline
+//! says a format this small does not buy a client library.
+//!
+//! Family order is fixed so the exposition is deterministic and
+//! golden-testable: session round, dropped-event counter, the five
+//! per-link families (rows ordered by `(src, dst)`), then every
+//! generically registered counter / gauge / histogram in name order.
+//! Histograms export as `summary`-style `_count` / `_sum` lines plus a
+//! `_max` convenience line.
+
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use crate::metrics::facade::Registry;
+
+use super::MetricsExporter;
+
+/// `name{labels}` → `name` (the TYPE line wants the family, not the
+/// labeled instance).
+fn base_name(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// Display-format floats: `1.5` stays `1.5`, `2.0` prints as `2` —
+/// both are valid exposition values.
+fn num(v: f64) -> String {
+    format!("{v}")
+}
+
+/// Render the registry as Prometheus text exposition, version 0.0.4.
+pub fn render(registry: &Registry) -> String {
+    let snap = registry.snapshot();
+    let mut out = String::with_capacity(1024);
+
+    out.push_str("# HELP celu_session_round Current communication \
+                  round of the session.\n");
+    out.push_str("# TYPE celu_session_round gauge\n");
+    let _ = writeln!(out, "celu_session_round {}", snap.round);
+
+    out.push_str("# HELP celu_events_dropped_total Lifecycle events \
+                  dropped past the retention cap.\n");
+    out.push_str("# TYPE celu_events_dropped_total counter\n");
+    let _ = writeln!(out, "celu_events_dropped_total {}",
+                     registry.dropped_events());
+
+    if !snap.links.is_empty() {
+        struct Family {
+            name: &'static str,
+            kind: &'static str,
+            help: &'static str,
+        }
+        let families = [
+            Family { name: "celu_link_messages_total", kind: "counter",
+                     help: "Messages sent on a directed link." },
+            Family { name: "celu_link_wire_bytes_total", kind: "counter",
+                     help: "Bytes that crossed the wire on a directed \
+                            link." },
+            Family { name: "celu_link_raw_bytes_total", kind: "counter",
+                     help: "Uncompressed cost of the same messages." },
+            Family { name: "celu_link_busy_seconds_total",
+                     kind: "counter",
+                     help: "Sender-side link occupancy." },
+            Family { name: "celu_link_compression_ratio", kind: "gauge",
+                     help: "Achieved raw/wire compression ratio." },
+        ];
+        for f in &families {
+            let _ = writeln!(out, "# HELP {} {}", f.name, f.help);
+            let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind);
+            for row in &snap.links {
+                let labels = format!("{{src=\"{}\",dst=\"{}\"}}",
+                                     row.src.0, row.dst.0);
+                let value = match f.name {
+                    "celu_link_messages_total" =>
+                        row.stats.messages.to_string(),
+                    "celu_link_wire_bytes_total" =>
+                        row.stats.bytes.to_string(),
+                    "celu_link_raw_bytes_total" =>
+                        row.stats.raw_bytes.to_string(),
+                    "celu_link_busy_seconds_total" =>
+                        num(row.stats.busy.as_secs_f64()),
+                    _ => {
+                        if row.stats.bytes == 0 {
+                            continue;
+                        }
+                        num(row.stats.raw_bytes as f64
+                            / row.stats.bytes as f64)
+                    }
+                };
+                let _ = writeln!(out, "{}{} {}", f.name, labels, value);
+            }
+        }
+    }
+
+    let mut last_base = "";
+    for (name, value) in &snap.counters {
+        if base_name(name) != last_base {
+            last_base = base_name(name);
+            let _ = writeln!(out, "# TYPE {last_base} counter");
+        }
+        let _ = writeln!(out, "{name} {value}");
+    }
+    let mut last_base = "";
+    for (name, value) in &snap.gauges {
+        if base_name(name) != last_base {
+            last_base = base_name(name);
+            let _ = writeln!(out, "# TYPE {last_base} gauge");
+        }
+        let _ = writeln!(out, "{name} {}", num(*value));
+    }
+    for (name, h) in &snap.histograms {
+        let _ = writeln!(out, "# TYPE {} summary", base_name(name));
+        let _ = writeln!(out, "{name}_count {}", h.count);
+        let _ = writeln!(out, "{name}_sum {}", num(h.sum));
+        let _ = writeln!(out, "{name}_max {}", num(h.max));
+    }
+    out
+}
+
+/// Scrape-side exporter: re-renders on every `export` and keeps the
+/// latest exposition for whoever serves it (the label party's session
+/// listener answers `GET /metrics` straight from [`render`]; this
+/// wrapper exists for exporter-agnostic call sites and tests).
+#[derive(Default)]
+pub struct PrometheusExporter {
+    latest: Mutex<String>,
+}
+
+impl PrometheusExporter {
+    pub fn new() -> Self {
+        PrometheusExporter::default()
+    }
+
+    /// The most recently exported exposition (empty before the first
+    /// `export`).
+    pub fn latest(&self) -> String {
+        self.latest.lock().unwrap().clone()
+    }
+}
+
+impl MetricsExporter for PrometheusExporter {
+    fn name(&self) -> &'static str {
+        "prometheus"
+    }
+
+    fn export(&self, registry: &Registry) -> anyhow::Result<()> {
+        *self.latest.lock().unwrap() = render(registry);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::facade::{EventSink, LinkHandles};
+    use crate::session::supervisor::SessionEvent;
+    use crate::session::PartyId;
+    use crate::transport::LinkStats;
+    use std::time::Duration;
+
+    #[test]
+    fn golden_exposition_is_byte_identical() {
+        let reg = Registry::new();
+        reg.set_round(42);
+        let a = LinkHandles::detached();
+        a.charge(LinkStats { messages: 3, bytes: 1000, raw_bytes: 2000,
+                             busy: Duration::from_millis(1500) });
+        reg.bind_link(PartyId(1), PartyId(0), &a);
+        let b = LinkHandles::detached();
+        b.charge(LinkStats { messages: 1, bytes: 10, raw_bytes: 10,
+                             busy: Duration::ZERO });
+        reg.bind_link(PartyId(0), PartyId(2), &b);
+        reg.emit(&SessionEvent::PeerLost { party: PartyId(1), round: 7 });
+        reg.gauge("celu_workset_fill").set(0.5);
+        let h = reg.histogram("celu_round_seconds");
+        h.observe(0.25);
+        h.observe(0.75);
+
+        let expected = "\
+# HELP celu_session_round Current communication round of the session.
+# TYPE celu_session_round gauge
+celu_session_round 42
+# HELP celu_events_dropped_total Lifecycle events dropped past the retention cap.
+# TYPE celu_events_dropped_total counter
+celu_events_dropped_total 0
+# HELP celu_link_messages_total Messages sent on a directed link.
+# TYPE celu_link_messages_total counter
+celu_link_messages_total{src=\"0\",dst=\"2\"} 1
+celu_link_messages_total{src=\"1\",dst=\"0\"} 3
+# HELP celu_link_wire_bytes_total Bytes that crossed the wire on a directed link.
+# TYPE celu_link_wire_bytes_total counter
+celu_link_wire_bytes_total{src=\"0\",dst=\"2\"} 10
+celu_link_wire_bytes_total{src=\"1\",dst=\"0\"} 1000
+# HELP celu_link_raw_bytes_total Uncompressed cost of the same messages.
+# TYPE celu_link_raw_bytes_total counter
+celu_link_raw_bytes_total{src=\"0\",dst=\"2\"} 10
+celu_link_raw_bytes_total{src=\"1\",dst=\"0\"} 2000
+# HELP celu_link_busy_seconds_total Sender-side link occupancy.
+# TYPE celu_link_busy_seconds_total counter
+celu_link_busy_seconds_total{src=\"0\",dst=\"2\"} 0
+celu_link_busy_seconds_total{src=\"1\",dst=\"0\"} 1.5
+# HELP celu_link_compression_ratio Achieved raw/wire compression ratio.
+# TYPE celu_link_compression_ratio gauge
+celu_link_compression_ratio{src=\"0\",dst=\"2\"} 1
+celu_link_compression_ratio{src=\"1\",dst=\"0\"} 2
+# TYPE celu_events_total counter
+celu_events_total{kind=\"peer_lost\"} 1
+# TYPE celu_workset_fill gauge
+celu_workset_fill 0.5
+# TYPE celu_round_seconds summary
+celu_round_seconds_count 2
+celu_round_seconds_sum 1
+celu_round_seconds_max 0.75
+";
+        assert_eq!(render(&reg), expected);
+    }
+
+    #[test]
+    fn empty_registry_renders_headers_only() {
+        let reg = Registry::new();
+        let text = render(&reg);
+        assert!(text.contains("celu_session_round 0\n"));
+        assert!(text.contains("celu_events_dropped_total 0\n"));
+        assert!(!text.contains("celu_link_"),
+                "no link rows bound, no link families");
+    }
+
+    #[test]
+    fn zero_wire_bytes_skips_the_ratio_line() {
+        let reg = Registry::new();
+        reg.bind_link(PartyId(1), PartyId(0), &LinkHandles::detached());
+        let text = render(&reg);
+        assert!(text.contains(
+            "celu_link_messages_total{src=\"1\",dst=\"0\"} 0\n"));
+        assert!(!text.contains("celu_link_compression_ratio{"),
+                "a 0-byte link has no meaningful ratio");
+    }
+
+    #[test]
+    fn exporter_wrapper_caches_the_latest_exposition() {
+        let reg = Registry::new();
+        let exp = PrometheusExporter::new();
+        assert_eq!(exp.name(), "prometheus");
+        assert!(exp.latest().is_empty());
+        reg.set_round(9);
+        exp.export(&reg).unwrap();
+        assert!(exp.latest().contains("celu_session_round 9\n"));
+    }
+}

@@ -1,0 +1,210 @@
+//! Control-lane push exporter (DESIGN.md §10).
+//!
+//! The streaming counterpart to the scrape endpoint: every `export`
+//! writes one length-prefixed `Metrics` frame (protocol tag 14)
+//! carrying the registry's *cumulative* per-link totals. Cumulative,
+//! not deltas, so the stream is loss-tolerant — a watcher that joins
+//! late or drops frames converges on the next one, and the last frame
+//! of a run equals the final `RunRecord` link rows exactly (the K=3
+//! parity gate in `scrape_k3`).
+
+use std::io::{Read, Write};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::ensure;
+
+use crate::metrics::facade::Registry;
+use crate::protocol::{LinkMetricsRow, Message, MAX_METRICS_ROWS};
+use crate::session::PartyId;
+use crate::transport::LinkStats;
+
+use super::MetricsExporter;
+
+/// Upper bound on an incoming metrics frame. The largest legitimate
+/// body is `1 + 8 + 1 + 1 + 36 * MAX_METRICS_ROWS` ≈ 4.6 KiB; anything
+/// past this cap is a hostile or corrupt length word, rejected before
+/// allocation.
+pub const MAX_METRICS_FRAME: usize = 16 * 1024;
+
+/// Build one cumulative `Metrics` frame from the registry's current
+/// link rows. More rows than the wire format can carry (impossible in
+/// a star mesh, which tops out at `2 * (MAX_PARTIES - 1)` directed
+/// links) are truncated loudly rather than silently.
+pub fn metrics_frame(registry: &Registry) -> Message {
+    let rows = registry.link_rows();
+    if rows.len() > MAX_METRICS_ROWS {
+        log::warn!("metrics frame truncated: {} links > {} row cap",
+                   rows.len(), MAX_METRICS_ROWS);
+    }
+    Message::Metrics {
+        round: registry.round(),
+        links: rows.iter()
+            .take(MAX_METRICS_ROWS)
+            .map(|r| LinkMetricsRow {
+                src: r.src,
+                dst: r.dst,
+                messages: r.stats.messages,
+                wire_bytes: r.stats.bytes,
+                raw_bytes: r.stats.raw_bytes,
+                busy_nanos: r.stats.busy.as_nanos() as u64,
+            })
+            .collect(),
+    }
+}
+
+/// The rows of a received `Metrics` frame as classic per-link stats —
+/// what the `watch` CLI renders and the parity gates compare against
+/// `RunRecord`.
+pub fn frame_rows(msg: &Message) -> Vec<(PartyId, PartyId, LinkStats)> {
+    match msg {
+        Message::Metrics { links, .. } => links.iter()
+            .map(|r| (r.src, r.dst, LinkStats {
+                messages: r.messages,
+                bytes: r.wire_bytes,
+                raw_bytes: r.raw_bytes,
+                busy: Duration::from_nanos(r.busy_nanos),
+            }))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Watch-client side: read one length-prefixed frame and insist it is
+/// a `Metrics` frame. Hostile input hits the same tag-14 validation
+/// the transports use; a hostile length word is rejected before any
+/// allocation.
+pub fn read_metrics_frame(r: &mut impl Read) -> anyhow::Result<Message> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)
+        .map_err(|e| anyhow::anyhow!("reading metrics frame length: {e}"))?;
+    let len = u32::from_le_bytes(len) as usize;
+    ensure!(len > 0 && len <= MAX_METRICS_FRAME,
+            "metrics frame length {len} outside (0, {MAX_METRICS_FRAME}]");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|e| anyhow::anyhow!("reading metrics frame body: {e}"))?;
+    let msg = Message::decode(&body)?;
+    ensure!(matches!(msg, Message::Metrics { .. }),
+            "expected a Metrics frame on the watch lane, got tag {}",
+            msg.tag());
+    Ok(msg)
+}
+
+/// Push exporter over any byte sink (a watch connection, a file, a
+/// test buffer). Each `export` writes one complete frame; the scratch
+/// buffer lives with the writer so steady-state exports do not
+/// allocate.
+pub struct PushExporter<W: Write + Send> {
+    inner: Mutex<(W, Vec<u8>)>,
+}
+
+impl<W: Write + Send> PushExporter<W> {
+    pub fn new(writer: W) -> Self {
+        PushExporter { inner: Mutex::new((writer, Vec::new())) }
+    }
+
+    /// Hand the writer back (tests inspect the buffered bytes).
+    pub fn into_inner(self) -> W {
+        self.inner.into_inner().unwrap().0
+    }
+}
+
+impl<W: Write + Send> MetricsExporter for PushExporter<W> {
+    fn name(&self) -> &'static str {
+        "push"
+    }
+
+    fn export(&self, registry: &Registry) -> anyhow::Result<()> {
+        let msg = metrics_frame(registry);
+        let mut guard = self.inner.lock().unwrap();
+        let (writer, scratch) = &mut *guard;
+        msg.encode_into(scratch);
+        writer.write_all(scratch)
+            .map_err(|e| anyhow::anyhow!("pushing metrics frame: {e}"))?;
+        writer.flush()
+            .map_err(|e| anyhow::anyhow!("flushing metrics frame: {e}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::facade::LinkHandles;
+    use std::io::Cursor;
+
+    fn star_registry() -> std::sync::Arc<Registry> {
+        let reg = Registry::new();
+        for (s, d) in [(1u16, 0u16), (2, 0), (0, 1), (0, 2)] {
+            let h = LinkHandles::detached();
+            h.charge(LinkStats {
+                messages: u64::from(s + d),
+                bytes: 100 * u64::from(s + 10 * d),
+                raw_bytes: 250 * u64::from(s + 10 * d),
+                busy: Duration::from_micros(u64::from(s) + 7),
+            });
+            reg.bind_link(PartyId(s), PartyId(d), &h);
+        }
+        reg.set_round(11);
+        reg
+    }
+
+    #[test]
+    fn pushed_stream_replays_to_registry_rows() {
+        let reg = star_registry();
+        let push = PushExporter::new(Vec::new());
+        push.export(&reg).unwrap();
+        // The registry keeps moving between ticks; frames stay
+        // cumulative.
+        reg.link(PartyId(1), PartyId(0)).unwrap()
+            .record(40, 80, Duration::from_micros(2));
+        reg.set_round(12);
+        push.export(&reg).unwrap();
+
+        let bytes = push.into_inner();
+        let mut r = Cursor::new(bytes);
+        let first = read_metrics_frame(&mut r).unwrap();
+        let last = read_metrics_frame(&mut r).unwrap();
+        assert_eq!(first.round(), 11);
+        assert_eq!(last.round(), 12);
+        assert_eq!(r.position() as usize, r.get_ref().len(),
+                   "stream fully consumed");
+
+        // A watcher that dropped every frame but the last still ends
+        // at the registry's (and therefore RunRecord's) exact totals.
+        let final_rows: Vec<_> = reg.link_rows().iter()
+            .map(|r| (r.src, r.dst, r.stats))
+            .collect();
+        assert_eq!(frame_rows(&last), final_rows);
+        assert_ne!(frame_rows(&first), final_rows);
+    }
+
+    #[test]
+    fn reader_rejects_hostile_lengths_and_foreign_tags() {
+        // Zero length.
+        let err = read_metrics_frame(&mut Cursor::new(
+            0u32.to_le_bytes().to_vec())).unwrap_err();
+        assert!(err.to_string().contains("outside"), "{err}");
+        // Absurd length word is refused before allocation.
+        let err = read_metrics_frame(&mut Cursor::new(
+            u32::MAX.to_le_bytes().to_vec())).unwrap_err();
+        assert!(err.to_string().contains("outside"), "{err}");
+        // A valid frame of the wrong kind.
+        let mut buf = Vec::new();
+        Message::Shutdown.encode_into(&mut buf);
+        let err = read_metrics_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("expected a Metrics frame"),
+                "{err}");
+        // Truncated body.
+        let mut buf = Vec::new();
+        metrics_frame(&star_registry()).encode_into(&mut buf);
+        buf.truncate(buf.len() - 1);
+        assert!(read_metrics_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn frame_rows_is_empty_for_non_metrics_messages() {
+        assert!(frame_rows(&Message::Shutdown).is_empty());
+    }
+}

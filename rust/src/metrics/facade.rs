@@ -1,0 +1,611 @@
+//! Lock-free metrics facade (DESIGN.md §10).
+//!
+//! The observability plane splits into a *recorder* side (this module)
+//! and an *exporter* side ([`super::exporters`]), modeled on the
+//! metrics-rs facade/exporter split but hand-rolled per the vendoring
+//! discipline: the hot path needs exactly three handle types and a
+//! relaxed `fetch_add`, not an ecosystem.
+//!
+//! - [`Counter`] / [`Gauge`] / [`Histogram`] — cheap cloneable handles
+//!   over `Arc<AtomicU64>` cells. Registration (name → cell) happens
+//!   once, outside the hot path, behind a `Mutex`; a bump through a
+//!   held handle is a single relaxed atomic op — no lock, no
+//!   allocation, no name hashing.
+//! - [`LinkHandles`] — the pre-registered handle bundle that replaced
+//!   the transport-private stats struct: per-link messages, wire
+//!   bytes, raw bytes, and busy nanoseconds. Transports always own a
+//!   (detached) bundle; [`Registry::bind_link`] late-binds the same
+//!   cells into the session registry, so enabling observability never
+//!   changes a transport constructor or the wire.
+//! - [`Registry`] — the session-wide cell store every exporter
+//!   snapshots: named scalars, the per-link map, the current round,
+//!   and the bounded [`SessionEvent`] log.
+//! - [`EventSink`] — how lifecycle events reach the registry. The
+//!   supervisor, checkpoint retry, and rejoin paths all emit through
+//!   this trait; the bounded log is just the [`Registry`]'s
+//!   implementation of it, and tests can subscribe a [`ChannelSink`]
+//!   instead of scraping `RunRecord`.
+//!
+//! Everything here is additive at run time: a session that never binds
+//! a registry and never installs an exporter performs the same atomic
+//! bumps as before (`bench_hotpath` §7 pins this) and puts identical
+//! bytes on the wire.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::session::supervisor::SessionEvent;
+use crate::session::PartyId;
+use crate::transport::LinkStats;
+
+/// Cap on retained lifecycle events: a run that flaps for hours must
+/// not grow an unbounded event log. Beyond the cap events are counted
+/// ([`Registry::dropped_events`]), not stored.
+pub const EVENTS_CAP: usize = 4096;
+
+// ---- handles ---------------------------------------------------------------
+
+/// Monotonic counter handle. Clones share the cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A fresh cell not (yet) visible to any registry.
+    pub fn detached() -> Self {
+        Counter::default()
+    }
+
+    /// Hot path: one relaxed atomic add.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge handle storing `f64` bits. Clones share the cell.
+/// The zeroed default decodes as `0.0`.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn detached() -> Self {
+        Gauge::default()
+    }
+
+    /// Hot path: one relaxed atomic store.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Streaming histogram handle: count, sum, max. Enough for "how long
+/// does a round take" without bucket configuration; the sum is an f64
+/// maintained by a CAS loop (contention is per-observation, and
+/// observations are per-round — not per-message — so the loop never
+/// spins in practice).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    count: Arc<AtomicU64>,
+    sum_bits: Arc<AtomicU64>,
+    max_bits: Arc<AtomicU64>,
+}
+
+/// Point-in-time view of a [`Histogram`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    pub fn detached() -> Self {
+        Histogram::default()
+    }
+
+    pub fn observe(&self, v: f64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        let mut cur = self.max_bits.load(Ordering::Relaxed);
+        while v > f64::from_bits(cur) {
+            match self.max_bits.compare_exchange_weak(
+                cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+            max: f64::from_bits(self.max_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+// ---- per-link handle bundle ------------------------------------------------
+
+/// The pre-registered handle bundle for one directed link (what
+/// `LinkStats` *was* as a by-value struct). Transports bump these four
+/// cells on every send; everything else — session registry, scrape
+/// endpoint, push stream, `RunRecord` — reads the same cells.
+#[derive(Clone, Debug, Default)]
+pub struct LinkHandles {
+    pub messages: Counter,
+    pub wire_bytes: Counter,
+    pub raw_bytes: Counter,
+    pub busy_nanos: Counter,
+}
+
+impl LinkHandles {
+    /// Fresh cells not (yet) bound to any registry. Every transport
+    /// starts detached; [`Registry::bind_link`] makes the cells
+    /// observable without touching the transport.
+    pub fn detached() -> Self {
+        LinkHandles::default()
+    }
+
+    /// Hot path: exactly four relaxed `fetch_add`s — identical to the
+    /// historic transport-private counter struct.
+    #[inline]
+    pub fn record(&self, wire_bytes: usize, raw_bytes: usize,
+                  busy: Duration) {
+        self.messages.add(1);
+        self.wire_bytes.add(wire_bytes as u64);
+        self.raw_bytes.add(raw_bytes as u64);
+        self.busy_nanos.add(busy.as_nanos() as u64);
+    }
+
+    /// Point-in-time totals as the classic stats value.
+    pub fn snapshot(&self) -> LinkStats {
+        LinkStats {
+            messages: self.messages.get(),
+            bytes: self.wire_bytes.get(),
+            raw_bytes: self.raw_bytes.get(),
+            busy: Duration::from_nanos(self.busy_nanos.get()),
+        }
+    }
+
+    /// One-time bulk add of a predecessor's totals. This is how a
+    /// `Rejoin` transport swap keeps a lane's accounting continuous:
+    /// charge the replacement's fresh cells with the dead transport's
+    /// final snapshot, then keep counting.
+    pub fn charge(&self, s: LinkStats) {
+        self.messages.add(s.messages);
+        self.wire_bytes.add(s.bytes);
+        self.raw_bytes.add(s.raw_bytes);
+        self.busy_nanos.add(s.busy.as_nanos() as u64);
+    }
+}
+
+/// One directed link's registry row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkRow {
+    pub src: PartyId,
+    pub dst: PartyId,
+    pub stats: LinkStats,
+}
+
+// ---- event sinks -----------------------------------------------------------
+
+/// Where lifecycle events go. Producers (supervisor edges, straggler
+/// timeouts, checkpoint retry, rejoin paths) call [`EventSink::emit`];
+/// what happens next is the sink's business: the [`Registry`] keeps a
+/// bounded log plus per-kind counters, a [`CounterSink`] keeps only
+/// the counters, a [`ChannelSink`] forwards to a test.
+pub trait EventSink: Send + Sync {
+    fn emit(&self, event: &SessionEvent);
+}
+
+/// Discards events (the unsupervised/undetached default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn emit(&self, _event: &SessionEvent) {}
+}
+
+/// Bumps the registry's per-kind event counters without appending to
+/// its log. Feature parties in a shared-registry (in-proc) session use
+/// this so `RunRecord.events` stays the label party's fault history,
+/// exactly as before the facade.
+#[derive(Clone)]
+pub struct CounterSink(pub Arc<Registry>);
+
+impl EventSink for CounterSink {
+    fn emit(&self, event: &SessionEvent) {
+        self.0.count_event(event);
+    }
+}
+
+/// Forwards every event over an mpsc channel (tests subscribe this
+/// instead of scraping `RunRecord`). A dropped receiver is ignored:
+/// observability must never fail the session.
+pub struct ChannelSink(Mutex<Sender<SessionEvent>>);
+
+impl ChannelSink {
+    pub fn new(tx: Sender<SessionEvent>) -> Self {
+        ChannelSink(Mutex::new(tx))
+    }
+}
+
+impl EventSink for ChannelSink {
+    fn emit(&self, event: &SessionEvent) {
+        let _ = self.0.lock().unwrap().send(event.clone());
+    }
+}
+
+/// Emits to every inner sink in order.
+#[derive(Default)]
+pub struct FanSink(pub Vec<Arc<dyn EventSink>>);
+
+impl EventSink for FanSink {
+    fn emit(&self, event: &SessionEvent) {
+        for s in &self.0 {
+            s.emit(event);
+        }
+    }
+}
+
+// ---- registry --------------------------------------------------------------
+
+/// The session-wide metric store. All maps are name → shared cell;
+/// lookups (registration) take a `Mutex` and happen outside the hot
+/// path, bumps go through handles and never touch the registry again.
+///
+/// Exporters read via [`Registry::snapshot`] /
+/// [`Registry::link_rows`]; the snapshot is not atomic across cells
+/// (each load is), which is the standard scrape contract.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+    links: Mutex<BTreeMap<(u16, u16), LinkHandles>>,
+    round: AtomicU64,
+    events: Mutex<Vec<SessionEvent>>,
+    dropped_events: AtomicU64,
+}
+
+/// Point-in-time view of every named scalar plus the link rows.
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    pub round: u64,
+    pub links: Vec<LinkRow>,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Registry::default())
+    }
+
+    /// Get-or-register the counter `name` (cold path). `name` may carry
+    /// a Prometheus-style label block: `celu_events_total{kind="x"}`.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters.lock().unwrap()
+            .entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-register the gauge `name` (cold path).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.gauges.lock().unwrap()
+            .entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-register the histogram `name` (cold path).
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.histograms.lock().unwrap()
+            .entry(name.to_string()).or_default().clone()
+    }
+
+    /// Late-bind a transport's handle bundle as the registry's row for
+    /// the directed link `src → dst`. Idempotent; rebinding (a `Rejoin`
+    /// transport swap) replaces the row — last bound wins — so pair it
+    /// with [`LinkHandles::charge`] to keep totals continuous.
+    pub fn bind_link(&self, src: PartyId, dst: PartyId, h: &LinkHandles) {
+        self.links.lock().unwrap().insert((src.0, dst.0), h.clone());
+    }
+
+    /// The bound handle bundle for `src → dst`, if any.
+    pub fn link(&self, src: PartyId, dst: PartyId) -> Option<LinkHandles> {
+        self.links.lock().unwrap().get(&(src.0, dst.0)).cloned()
+    }
+
+    /// Every bound link's current totals, ordered by (src, dst).
+    pub fn link_rows(&self) -> Vec<LinkRow> {
+        self.links.lock().unwrap()
+            .iter()
+            .map(|(&(src, dst), h)| LinkRow {
+                src: PartyId(src),
+                dst: PartyId(dst),
+                stats: h.snapshot(),
+            })
+            .collect()
+    }
+
+    /// Publish the session's current communication round.
+    pub fn set_round(&self, round: u64) {
+        self.round.store(round, Ordering::Relaxed);
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round.load(Ordering::Relaxed)
+    }
+
+    /// Bump the per-kind event counter without logging the event (the
+    /// [`CounterSink`] path; also the overflow path past `EVENTS_CAP`).
+    fn count_event(&self, event: &SessionEvent) {
+        self.counter(&format!("celu_events_total{{kind=\"{}\"}}",
+                              event.kind()))
+            .inc();
+    }
+
+    /// Retained lifecycle events (bounded by [`EVENTS_CAP`]).
+    pub fn events(&self) -> Vec<SessionEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Drain the retained events (the terminal `RunRecord` observer).
+    pub fn take_events(&self) -> Vec<SessionEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    /// Events counted but not retained (log at capacity).
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time view of everything named plus the link rows.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            round: self.round(),
+            links: self.link_rows(),
+            counters: self.counters.lock().unwrap()
+                .iter().map(|(n, c)| (n.clone(), c.get())).collect(),
+            gauges: self.gauges.lock().unwrap()
+                .iter().map(|(n, g)| (n.clone(), g.get())).collect(),
+            histograms: self.histograms.lock().unwrap()
+                .iter().map(|(n, h)| (n.clone(), h.snapshot())).collect(),
+        }
+    }
+}
+
+impl EventSink for Registry {
+    /// The bounded log + per-kind counters: the historic
+    /// `Supervisor::record` behaviour as one sink implementation.
+    fn emit(&self, event: &SessionEvent) {
+        log::info!("session event: {} (party {:?}, round {})",
+                   event.kind(), event.party(), event.round());
+        self.count_event(event);
+        let mut log = self.events.lock().unwrap();
+        if log.len() >= EVENTS_CAP {
+            self.dropped_events.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        log.push(event.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_the_cell() {
+        let reg = Registry::new();
+        let a = reg.counter("x_total");
+        let b = reg.counter("x_total");
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        assert_eq!(reg.counter("x_total").get(), 4);
+        // A different name is a different cell.
+        assert_eq!(reg.counter("y_total").get(), 0);
+    }
+
+    #[test]
+    fn gauge_roundtrips_f64() {
+        let g = Gauge::detached();
+        assert_eq!(g.get(), 0.0);
+        g.set(-3.75e9);
+        assert_eq!(g.get(), -3.75e9);
+    }
+
+    #[test]
+    fn histogram_tracks_count_sum_max() {
+        let h = Histogram::detached();
+        h.observe(2.0);
+        h.observe(5.0);
+        h.observe(1.0);
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum, 8.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn hammer_counter_sums_are_exact() {
+        // The acceptance bar for a lock-free recorder: concurrent bumps
+        // through independently-cloned handles lose nothing.
+        const THREADS: usize = 8;
+        const BUMPS: u64 = 100_000;
+        let reg = Registry::new();
+        let c = reg.counter("hammer_total");
+        let h = reg.histogram("hammer_obs");
+        let link = LinkHandles::detached();
+        reg.bind_link(PartyId(1), PartyId(0), &link);
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let c = c.clone();
+                let h = h.clone();
+                let link = link.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..BUMPS {
+                        c.inc();
+                        link.record(7, 11, Duration::from_nanos(3));
+                    }
+                    // Histogram contention is per-observation; keep it
+                    // integer-valued so the f64 sum is exact.
+                    for _ in 0..1_000 {
+                        h.observe(1.0);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        let n = THREADS as u64 * BUMPS;
+        assert_eq!(c.get(), n);
+        assert_eq!(h.snapshot(),
+                   HistogramSnapshot { count: THREADS as u64 * 1_000,
+                                       sum: (THREADS * 1_000) as f64,
+                                       max: 1.0 });
+        let row = &reg.link_rows()[0];
+        assert_eq!((row.src, row.dst), (PartyId(1), PartyId(0)));
+        assert_eq!(row.stats.messages, n);
+        assert_eq!(row.stats.bytes, 7 * n);
+        assert_eq!(row.stats.raw_bytes, 11 * n);
+        assert_eq!(row.stats.busy, Duration::from_nanos(3 * n));
+    }
+
+    #[test]
+    fn rebind_with_charge_keeps_totals_continuous() {
+        // The rejoin discipline: a replacement transport's fresh cells
+        // are charged with the dead one's final snapshot, then rebound.
+        let reg = Registry::new();
+        let old = LinkHandles::detached();
+        reg.bind_link(PartyId(2), PartyId(0), &old);
+        old.record(100, 200, Duration::from_millis(5));
+        old.record(100, 200, Duration::from_millis(5));
+
+        let fresh = LinkHandles::detached();
+        fresh.charge(old.snapshot());
+        reg.bind_link(PartyId(2), PartyId(0), &fresh);
+        fresh.record(50, 50, Duration::from_millis(1));
+
+        let rows = reg.link_rows();
+        assert_eq!(rows.len(), 1, "rebind must replace, not append");
+        assert_eq!(rows[0].stats.messages, 3);
+        assert_eq!(rows[0].stats.bytes, 250);
+        assert_eq!(rows[0].stats.raw_bytes, 450);
+        assert_eq!(rows[0].stats.busy, Duration::from_millis(11));
+        // The snapshot-as-LinkStats path agrees.
+        assert_eq!(reg.link(PartyId(2), PartyId(0)).unwrap().snapshot(),
+                   rows[0].stats);
+    }
+
+    #[test]
+    fn registry_sink_logs_and_counts() {
+        let reg = Registry::new();
+        let e = SessionEvent::StragglerTimeout { party: PartyId(1),
+                                                 round: 4 };
+        reg.emit(&e);
+        reg.emit(&SessionEvent::PeerLost { party: PartyId(2), round: 5 });
+        assert_eq!(reg.events().len(), 2);
+        assert_eq!(reg.events()[0], e);
+        assert_eq!(
+            reg.counter("celu_events_total{kind=\"straggler_timeout\"}")
+                .get(),
+            1);
+        assert_eq!(reg.counter("celu_events_total{kind=\"peer_lost\"}")
+                       .get(),
+                   1);
+        assert_eq!(reg.dropped_events(), 0);
+    }
+
+    #[test]
+    fn event_log_is_bounded() {
+        let reg = Registry::new();
+        for r in 0..(EVENTS_CAP as u64 + 10) {
+            reg.emit(&SessionEvent::StragglerTimeout {
+                party: PartyId(1), round: r });
+        }
+        assert_eq!(reg.events().len(), EVENTS_CAP);
+        assert_eq!(reg.dropped_events(), 10);
+        // Overflowed events still count.
+        assert_eq!(
+            reg.counter("celu_events_total{kind=\"straggler_timeout\"}")
+                .get(),
+            EVENTS_CAP as u64 + 10);
+    }
+
+    #[test]
+    fn counter_sink_counts_without_logging() {
+        let reg = Registry::new();
+        let sink = CounterSink(reg.clone());
+        sink.emit(&SessionEvent::PeerRejoined { party: PartyId(1),
+                                                round: 2 });
+        assert!(reg.events().is_empty());
+        assert_eq!(reg.counter("celu_events_total{kind=\"peer_rejoined\"}")
+                       .get(),
+                   1);
+    }
+
+    #[test]
+    fn channel_and_fan_sinks_forward() {
+        let reg = Registry::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let fan = FanSink(vec![reg.clone() as Arc<dyn EventSink>,
+                               Arc::new(ChannelSink::new(tx))]);
+        let e = SessionEvent::CheckpointFailed {
+            round: 9, error: "disk \"full\"".into() };
+        fan.emit(&e);
+        assert_eq!(rx.try_recv().unwrap(), e);
+        assert_eq!(reg.events(), vec![e]);
+        // A dropped receiver must not panic the producer.
+        drop(rx);
+        fan.emit(&SessionEvent::CheckpointWritten {
+            round: 10, path: "p".into() });
+    }
+
+    #[test]
+    fn snapshot_covers_all_maps() {
+        let reg = Registry::new();
+        reg.counter("a_total").add(5);
+        reg.gauge("b").set(1.5);
+        reg.histogram("c").observe(2.0);
+        reg.set_round(42);
+        let link = LinkHandles::detached();
+        link.record(10, 20, Duration::ZERO);
+        reg.bind_link(PartyId(1), PartyId(0), &link);
+        let snap = reg.snapshot();
+        assert_eq!(snap.round, 42);
+        assert_eq!(snap.counters, vec![("a_total".into(), 5)]);
+        assert_eq!(snap.gauges, vec![("b".into(), 1.5)]);
+        assert_eq!(snap.histograms.len(), 1);
+        assert_eq!(snap.histograms[0].1.count, 1);
+        assert_eq!(snap.links.len(), 1);
+        assert_eq!(snap.links[0].stats.bytes, 10);
+    }
+}

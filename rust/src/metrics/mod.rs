@@ -1,8 +1,16 @@
 //! Metrics: exact AUC, convergence series, staleness telemetry, and the
-//! communication accounting behind the paper's headline numbers.
+//! communication accounting behind the paper's headline numbers — plus
+//! the live observability plane (lock-free recorder facade and its
+//! scrape/push/terminal exporters, DESIGN.md §10).
 
 pub mod auc;
+pub mod exporters;
+pub mod facade;
 pub mod series;
 
 pub use auc::auc_exact;
+pub use exporters::{MetricsExporter, PrometheusExporter, PushExporter,
+                    RunRecordObserver};
+pub use facade::{ChannelSink, Counter, CounterSink, EventSink, FanSink,
+                 Gauge, Histogram, LinkHandles, NullSink, Registry};
 pub use series::{CosineRecorder, LinkRecord, RunRecord, SeriesPoint};

@@ -471,6 +471,39 @@ mod tests {
     }
 
     #[test]
+    fn hostile_event_strings_survive_the_json_roundtrip() {
+        // Regression pin: the only free-form strings in a RunRecord
+        // are event payloads (checkpoint paths, OS error messages).
+        // A path with quotes/backslashes (Windows, shell-quoted dirs)
+        // or an error with newlines and control bytes must come back
+        // from parse() verbatim and never produce unparseable JSON.
+        let path = r#"ckpts\"weird dir"\ckpt_00000020.celuckpt"#;
+        let error = "write failed:\n\t\"disk\" gone \u{1} \u{7f}";
+        let mut r = record_with_aucs(&[0.5]);
+        r.events = vec![
+            SessionEvent::CheckpointWritten { round: 20,
+                                              path: path.into() },
+            SessionEvent::CheckpointFailed { round: 21,
+                                             error: error.into() },
+        ];
+        let j = r.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j)
+            .expect("hostile event strings broke the artifact");
+        let events = parsed.expect("events").unwrap().as_arr().unwrap();
+        assert_eq!(
+            events[0].expect("path").unwrap().as_str().unwrap(),
+            path
+        );
+        assert_eq!(
+            events[1].expect("error").unwrap().as_str().unwrap(),
+            error
+        );
+        // Raw control bytes must not appear unescaped in the dump.
+        assert!(!j.contains('\u{1}') && !j.contains('\n'),
+                "unescaped control byte in JSON: {j}");
+    }
+
+    #[test]
     fn json_dump_parses_back() {
         let mut r = record_with_aucs(&[0.5, 0.7]);
         r.cosine.push(4, &[0.0; 8]);

@@ -145,6 +145,26 @@ pub enum Message {
     /// only for resume-mode refusals — never for hostile frames, which
     /// are still dropped silently.
     RejoinReject { party: PartyId, reason: RejectReason, round: u64 },
+    /// Observability, label → watcher: the push exporter's periodic
+    /// snapshot of every link's *cumulative* counters as of `round`
+    /// (DESIGN.md §10). Totals, not deltas: a watcher that misses a
+    /// tick loses nothing, and the stream's final frame is exactly the
+    /// `RunRecord` link rows. Carries only aggregate accounting — no
+    /// statistics tensors — so it cannot widen the privacy surface.
+    Metrics { round: u64, links: Vec<LinkMetricsRow> },
+}
+
+/// One directed link's cumulative counters inside a [`Message::Metrics`]
+/// frame: 36 bytes on the wire —
+/// `[u16 src][u16 dst][u64 msgs][u64 wire][u64 raw][u64 busy_ns]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkMetricsRow {
+    pub src: PartyId,
+    pub dst: PartyId,
+    pub messages: u64,
+    pub wire_bytes: u64,
+    pub raw_bytes: u64,
+    pub busy_nanos: u64,
 }
 
 /// Why a resume-mode listener refused a bootstrap frame. Closed set,
@@ -221,6 +241,7 @@ const TAG_JOIN_ACK: u8 = 10;
 const TAG_REJOIN: u8 = 11;
 const TAG_REJOIN_ACK: u8 = 12;
 const TAG_REJOIN_REJECT: u8 = 13;
+const TAG_METRICS: u8 = 14;
 /// Current addressed-frame version.
 const FRAME_VERSION: u8 = 2;
 /// Current bootstrap (`Join`/`JoinAck`) frame version. Carried in the
@@ -235,6 +256,16 @@ pub const REJOIN_VERSION: u8 = 1;
 /// separately so the refusal vocabulary can grow without disturbing
 /// either frozen handshake layout.
 pub const REJECT_VERSION: u8 = 1;
+/// Current metrics-stream (`Metrics`) frame version. Versioned
+/// separately so the observability row layout can grow (histograms,
+/// codec error) without disturbing any handshake or statistics frame.
+pub const METRICS_VERSION: u8 = 1;
+/// Cap on rows per `Metrics` frame, validated before any row is read:
+/// a star mesh has at most `MAX_PARTIES - 1` links per direction, so
+/// twice the party cap bounds every legitimate frame with slack.
+pub const MAX_METRICS_ROWS: usize = 2 * MAX_PARTIES as usize;
+/// Encoded size of one [`LinkMetricsRow`].
+const METRICS_ROW_BYTES: usize = 2 + 2 + 8 + 8 + 8 + 8;
 
 /// Bytes the v2 envelope adds in front of a v1 body:
 /// `[u8 tag][u8 ver][u16 src][u16 dst]`.
@@ -345,6 +376,7 @@ impl Message {
             Message::Rejoin { .. } => TAG_REJOIN,
             Message::RejoinAck { .. } => TAG_REJOIN_ACK,
             Message::RejoinReject { .. } => TAG_REJOIN_REJECT,
+            Message::Metrics { .. } => TAG_METRICS,
         }
     }
 
@@ -363,7 +395,8 @@ impl Message {
             | Message::Derivative { round, .. }
             | Message::EvalActivation { round, .. }
             | Message::EvalAck { round }
-            | Message::Compressed { round, .. } => *round,
+            | Message::Compressed { round, .. }
+            | Message::Metrics { round, .. } => *round,
             Message::Shutdown
             | Message::Hello { .. }
             | Message::Join { .. }
@@ -392,6 +425,10 @@ impl Message {
                 }
                 // ver + party + reason + round.
                 Message::RejoinReject { .. } => 1 + 2 + 1 + 8,
+                // ver + row count + fixed-size rows.
+                Message::Metrics { links, .. } => {
+                    1 + 1 + METRICS_ROW_BYTES * links.len()
+                }
                 Message::Compressed { stats, .. } => {
                     1 + stats.wire_block_bytes()
                 }
@@ -490,6 +527,18 @@ impl Message {
                 out.extend_from_slice(&party.0.to_le_bytes());
                 out.push(reason.code());
                 out.extend_from_slice(&round.to_le_bytes());
+            }
+            Message::Metrics { links, .. } => {
+                out.push(METRICS_VERSION);
+                out.push(links.len() as u8);
+                for row in links {
+                    out.extend_from_slice(&row.src.0.to_le_bytes());
+                    out.extend_from_slice(&row.dst.0.to_le_bytes());
+                    out.extend_from_slice(&row.messages.to_le_bytes());
+                    out.extend_from_slice(&row.wire_bytes.to_le_bytes());
+                    out.extend_from_slice(&row.raw_bytes.to_le_bytes());
+                    out.extend_from_slice(&row.busy_nanos.to_le_bytes());
+                }
             }
             Message::Compressed { lane, stats, .. } => {
                 out.push(lane.tag());
@@ -649,6 +698,60 @@ impl Message {
                     reason,
                     round,
                 }
+            }
+            TAG_METRICS => {
+                // Same discipline as the handshake frames: version
+                // first, then the row count and every row's party ids,
+                // all validated before the Message is constructed. Rows
+                // are fixed-size, so the only allocation is the Vec
+                // whose length the cap below bounds.
+                let ver = r.u8()?;
+                if ver != METRICS_VERSION {
+                    anyhow::bail!(
+                        "unsupported metrics version {ver} (this build \
+                         speaks {METRICS_VERSION})"
+                    );
+                }
+                let n = r.u8()? as usize;
+                if n > MAX_METRICS_ROWS {
+                    anyhow::bail!(
+                        "metrics frame declares {n} link rows \
+                         (max {MAX_METRICS_ROWS})"
+                    );
+                }
+                let remaining = buf.len() - r.pos;
+                if remaining != n * METRICS_ROW_BYTES {
+                    anyhow::bail!(
+                        "metrics frame payload mismatch: {n} rows want \
+                         {} bytes, {remaining} left",
+                        n * METRICS_ROW_BYTES
+                    );
+                }
+                let mut links = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let src = r.u16()?;
+                    let dst = r.u16()?;
+                    if src >= MAX_PARTIES || dst >= MAX_PARTIES {
+                        anyhow::bail!(
+                            "metrics row names party id out of range: \
+                             src {src}, dst {dst} (max {MAX_PARTIES})"
+                        );
+                    }
+                    if src == dst {
+                        anyhow::bail!(
+                            "metrics row links party {src} to itself"
+                        );
+                    }
+                    links.push(LinkMetricsRow {
+                        src: PartyId(src),
+                        dst: PartyId(dst),
+                        messages: r.u64()?,
+                        wire_bytes: r.u64()?,
+                        raw_bytes: r.u64()?,
+                        busy_nanos: r.u64()?,
+                    });
+                }
+                Message::Metrics { round, links }
             }
             TAG_COMP => {
                 let lane = Lane::from_tag(r.u8()?)?;
@@ -1012,13 +1115,16 @@ mod tests {
         // counters, replay count) on top of the same topology fields.
         // `RejoinReject` carries a party id, a closed one-byte reason
         // code, and a round counter — no statistics, no free-form text.
+        // `Metrics` carries only per-link aggregate counters (message/
+        // byte/nanosecond totals) — observability without statistics.
         let m = Message::Shutdown;
         match m {
             Message::Activation { .. } | Message::Derivative { .. }
             | Message::EvalActivation { .. } | Message::EvalAck { .. }
             | Message::Shutdown | Message::Hello { .. }
             | Message::Join { .. } | Message::JoinAck { .. }
-            | Message::Rejoin { .. } | Message::RejoinAck { .. } => {}
+            | Message::Rejoin { .. } | Message::RejoinAck { .. }
+            | Message::Metrics { .. } => {}
             Message::RejoinReject { reason, .. } => match reason {
                 RejectReason::EpochMismatch | RejectReason::NeedRejoin => {}
             },
@@ -1884,6 +1990,167 @@ mod bootstrap_tests {
 }
 
 #[cfg(test)]
+mod metrics_tests {
+    //! `Metrics` (tag 14) coverage: golden bytes pinning the push-stream
+    //! frame layout (machine-checked against an independent Python
+    //! rebuild at introduction time), roundtrips, truncation totality,
+    //! and hostile-header rejection — the same discipline as tags 9–13.
+
+    use super::*;
+
+    fn hex_to_bytes(hex: &str) -> Vec<u8> {
+        let compact: String =
+            hex.chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(compact.len() % 2, 0, "odd hex length");
+        (0..compact.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&compact[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    fn row(src: u16, dst: u16, messages: u64, wire_bytes: u64,
+           raw_bytes: u64, busy_nanos: u64) -> LinkMetricsRow {
+        LinkMetricsRow {
+            src: PartyId(src),
+            dst: PartyId(dst),
+            messages,
+            wire_bytes,
+            raw_bytes,
+            busy_nanos,
+        }
+    }
+
+    /// Golden fixtures captured at introduction time: byte-for-byte
+    /// drift in the metrics-stream layout fails here. Tag 14 is fresh —
+    /// disjoint from every pre-existing tag (1..=13).
+    fn metrics_fixtures() -> Vec<(&'static str, Message, &'static str)> {
+        vec![
+            (
+                "metrics_empty_round_3",
+                Message::Metrics { round: 3, links: vec![] },
+                "0e 0300000000000000 01 00",
+            ),
+            (
+                "metrics_two_links_round_7",
+                Message::Metrics {
+                    round: 7,
+                    links: vec![
+                        row(1, 0, 3, 1000, 2000, 500),
+                        row(0, 2, 1, 0x0102_0304_0506_0708,
+                            u64::MAX, 0),
+                    ],
+                },
+                "0e 0700000000000000 01 02 \
+                 0100 0000 0300000000000000 e803000000000000 \
+                 d007000000000000 f401000000000000 \
+                 0000 0200 0100000000000000 0807060504030201 \
+                 ffffffffffffffff 0000000000000000",
+            ),
+            (
+                "metrics_p63_max_round",
+                Message::Metrics {
+                    round: u64::MAX,
+                    links: vec![row(63, 0, 0, 0, 0, 0)],
+                },
+                "0e ffffffffffffffff 01 01 \
+                 3f00 0000 0000000000000000 0000000000000000 \
+                 0000000000000000 0000000000000000",
+            ),
+        ]
+    }
+
+    #[test]
+    fn golden_metrics_encode_is_byte_identical() {
+        for (name, msg, hex) in metrics_fixtures() {
+            assert_eq!(msg.encode(), hex_to_bytes(hex),
+                       "encode drifted for fixture '{name}'");
+            assert_eq!(msg.wire_bytes(), msg.encode().len() + 4,
+                       "wire_bytes drifted for fixture '{name}'");
+            assert_eq!(msg.raw_bytes(), msg.wire_bytes(),
+                       "metrics frames are never compressed");
+        }
+    }
+
+    #[test]
+    fn golden_metrics_decode_recovers_messages() {
+        for (name, msg, hex) in metrics_fixtures() {
+            let dec = Message::decode(&hex_to_bytes(hex))
+                .unwrap_or_else(|e| panic!("fixture '{name}': {e}"));
+            assert_eq!(dec, msg, "decode drifted for fixture '{name}'");
+            // Metrics frames travel headerless on the watch socket:
+            // decode_frame must take the v1 path and attach no envelope.
+            let (h, m) = decode_frame(&hex_to_bytes(hex)).unwrap();
+            assert_eq!(h, None, "metrics fixture '{name}' grew a header");
+            assert_eq!(m, msg);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_metrics_version() {
+        let good = Message::Metrics {
+            round: 2,
+            links: vec![row(1, 0, 1, 2, 3, 4)],
+        }
+        .encode();
+        for bad_ver in [0u8, 2, 7, 255] {
+            let mut bent = good.clone();
+            bent[9] = bad_ver; // version byte follows tag + round
+            let e = Message::decode(&bent).unwrap_err().to_string();
+            assert!(e.contains("metrics version"),
+                    "version {bad_ver}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_row_ids_and_counts() {
+        // Out-of-range endpoints and self-links are refused per row.
+        for (src, dst) in [(MAX_PARTIES, 0u16), (0, MAX_PARTIES),
+                           (u16::MAX, u16::MAX), (1, 1), (0, 0)] {
+            let frame = Message::Metrics {
+                round: 0,
+                links: vec![row(src, dst, 0, 0, 0, 0)],
+            }
+            .encode();
+            assert!(Message::decode(&frame).is_err(),
+                    "metrics row ({src}, {dst}) decoded");
+        }
+        // A declared row count past the cap is refused before any row
+        // is read (the payload behind it is absent entirely).
+        let mut frame = Vec::new();
+        frame.push(14u8);
+        frame.extend_from_slice(&0u64.to_le_bytes());
+        frame.push(METRICS_VERSION);
+        frame.push(200u8); // > MAX_METRICS_ROWS = 128
+        let e = Message::decode(&frame).unwrap_err().to_string();
+        assert!(e.contains("link rows"), "cap not enforced: {e}");
+        // Boundary: the largest legal endpoints still decode.
+        let ok = Message::Metrics {
+            round: 1,
+            links: vec![row(MAX_PARTIES - 1, 0, 1, 2, 3, 4),
+                        row(0, MAX_PARTIES - 1, 5, 6, 7, 8)],
+        };
+        assert_eq!(Message::decode(&ok.encode()).unwrap(), ok);
+    }
+
+    #[test]
+    fn metrics_truncations_error_cleanly() {
+        let enc = Message::Metrics {
+            round: 9,
+            links: vec![row(1, 0, 10, 20, 30, 40),
+                        row(2, 0, 1, 2, 3, 4)],
+        }
+        .encode();
+        for cut in 0..enc.len() {
+            assert!(Message::decode(&enc[..cut]).is_err(),
+                    "truncation at {cut} decoded");
+        }
+        let mut trailing = enc;
+        trailing.push(0);
+        assert!(Message::decode(&trailing).is_err(), "trailing byte ok'd");
+    }
+}
+
+#[cfg(test)]
 mod fuzz_tests {
     use super::*;
     use crate::testing::prop;
@@ -2222,6 +2489,53 @@ mod fuzz_tests {
                 prop_assert!(dec.is_err(),
                              "hostile reject (ver {ver}, party {party}, \
                               reason {reason}) decoded");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hostile_metrics_frames_error_cleanly() {
+        // Hand-built Metrics frames with random versions, row counts,
+        // and row endpoints: decode must be total (Ok or Err, never a
+        // panic), must reject every wrong version, every over-cap row
+        // count, and every out-of-range or self-linked row — and a
+        // well-formed random frame must round-trip exactly.
+        prop::check("hostile metrics frames", |rng| {
+            let ver = (rng.gen_range(4) as u8).wrapping_sub(1); // 255,0,1,2
+            let n = rng.gen_range(256) as u8;
+            let mut frame = Vec::new();
+            frame.push(14u8);
+            frame.extend_from_slice(&rng.next_u64().to_le_bytes());
+            frame.push(ver);
+            frame.push(n);
+            let mut rows_ok = true;
+            for _ in 0..n {
+                // Bias ids toward the boundary so both sides are hit.
+                let src = rng.gen_range(2 * MAX_PARTIES as u32) as u16;
+                let dst = rng.gen_range(2 * MAX_PARTIES as u32) as u16;
+                rows_ok &= src < MAX_PARTIES && dst < MAX_PARTIES
+                    && src != dst;
+                frame.extend_from_slice(&src.to_le_bytes());
+                frame.extend_from_slice(&dst.to_le_bytes());
+                for _ in 0..4 {
+                    frame.extend_from_slice(
+                        &rng.next_u64().to_le_bytes());
+                }
+            }
+            let dec = Message::decode(&frame);
+            if ver != METRICS_VERSION
+                || n as usize > MAX_METRICS_ROWS
+                || !rows_ok
+            {
+                prop_assert!(dec.is_err(),
+                             "hostile metrics (ver {ver}, rows {n}) \
+                              decoded");
+            } else {
+                let msg = dec.map_err(|e| format!("well-formed \
+                    metrics frame rejected: {e}"))?;
+                prop_assert!(msg.encode() == frame,
+                             "metrics roundtrip drifted");
             }
             Ok(())
         });

@@ -44,6 +44,10 @@ use std::time::{Duration, Instant};
 
 use crate::compress;
 use crate::config::RunConfig;
+use crate::metrics::exporters::prometheus;
+use crate::metrics::exporters::push::PushExporter;
+use crate::metrics::facade::Registry;
+use crate::metrics::MetricsExporter;
 use crate::protocol::{decode_frame, encode_frame_into, Message,
                       RejectReason};
 use crate::transport::tcp::{connect_with_backoff_jittered, TcpTransport};
@@ -82,6 +86,15 @@ const JOIN_READ_TIMEOUT: Duration = Duration::from_secs(2);
 /// agreement, duplicates) stays on the accept thread, where the joined
 /// map lives.
 const ADMIT_WORKERS: usize = 8;
+
+/// Cap on one HTTP-shaped request's header block on the session port.
+/// A scrape request is a few dozen bytes; anything bigger is not a
+/// scraper.
+const MAX_HTTP_REQUEST: usize = 1024;
+
+/// Cadence of the `/watch` push stream: one cumulative tag-14
+/// [`Message::Metrics`] frame per tick.
+const WATCH_TICK: Duration = Duration::from_millis(250);
 
 /// One way of bringing a party's mesh into existence. Implementations
 /// carry everything transport-specific (sockets, deadlines, pre-wired
@@ -164,6 +177,13 @@ pub struct SessionListener {
     /// joiners must present `Rejoin` with this epoch and are acked with
     /// this resume round.
     resume: Option<(u32, u64)>,
+    /// Registry served on this port (DESIGN.md §10): a connection whose
+    /// first four bytes are `GET ` is an observability request, not a
+    /// bootstrap peer — `/metrics` gets a one-shot Prometheus text
+    /// exposition, `/watch` (once the session is live) a tag-14 push
+    /// stream. `None` treats HTTP-shaped traffic as hostile, exactly as
+    /// before the observability plane existed.
+    metrics: Option<Arc<Registry>>,
 }
 
 /// Outcome of session-level vetting: admit (with the ack to send), or
@@ -189,12 +209,24 @@ impl SessionListener {
             listener,
             timeout: DEFAULT_JOIN_TIMEOUT,
             resume: None,
+            metrics: None,
         })
     }
 
     /// Replace the default join deadline.
     pub fn with_timeout(mut self, timeout: Duration) -> Self {
         self.timeout = timeout;
+        self
+    }
+
+    /// Serve the observability plane on the session port: `GET
+    /// /metrics` scrapes `registry` as Prometheus text, `GET /watch`
+    /// (served by the re-admission point once the mesh is live) streams
+    /// cumulative tag-14 metric frames. Join/Rejoin vetting is
+    /// untouched — the dispatch happens on the first four bytes, before
+    /// any frame logic runs.
+    pub fn with_metrics(mut self, registry: Arc<Registry>) -> Self {
+        self.metrics = Some(registry);
         self
     }
 
@@ -373,9 +405,34 @@ impl SessionListener {
                 active.fetch_add(1, Ordering::SeqCst);
                 let tx = result_tx.clone();
                 let active = active.clone();
+                let metrics = self.metrics.clone();
                 std::thread::spawn(move || {
-                    let res = read_join_frame(stream, deadline);
+                    let res = read_first_contact(stream, deadline);
                     active.fetch_sub(1, Ordering::SeqCst);
+                    let res = match res {
+                        Ok(FirstContact::Frame(msg, stream)) => {
+                            Ok((msg, stream))
+                        }
+                        Ok(FirstContact::Http { path, stream }) => {
+                            match metrics {
+                                // Served entirely on this worker;
+                                // nothing reaches the joined map. No
+                                // /watch during bootstrap: the mesh is
+                                // still assembling (503).
+                                Some(reg) => {
+                                    serve_observability(&path, stream,
+                                                        &reg, None);
+                                    return;
+                                }
+                                None => Err(anyhow::anyhow!(
+                                    "HTTP-shaped request ({path}) on a \
+                                     session port with no metrics \
+                                     registry attached"
+                                )),
+                            }
+                        }
+                        Err(e) => Err(e),
+                    };
                     let _ = tx.send((addr, res));
                 });
                 progressed = true;
@@ -462,22 +519,147 @@ impl SessionListener {
         let joined = self.establish_streams(cfg)?;
         let links = Self::wrap_links(cfg, joined)?;
         let readmission = Readmission::spawn(
-            self.listener, cfg.parties as u16, epoch)?;
+            self.listener, cfg.parties as u16, epoch,
+            self.metrics.clone())?;
         Ok((links, readmission, epoch, start_round))
     }
 }
 
-/// Read one connection's opening bootstrap frame on an admit worker.
-fn read_join_frame(mut stream: TcpStream, deadline: Instant)
-                   -> anyhow::Result<(Message, TcpStream)> {
+/// A connection's opening bytes, classified. The session port carries
+/// two protocols, told apart by the first four bytes: bootstrap frames
+/// open with a little-endian length word whose value is at most
+/// [`MAX_BOOTSTRAP_FRAME`] (so bytes 1–3 are always zero), while an
+/// HTTP observability request opens with the ASCII `GET ` — which read
+/// as a length word is ~540 MB, unambiguous by arithmetic alone.
+enum FirstContact {
+    /// A decoded bootstrap frame: the historic Join/Rejoin path.
+    Frame(Message, TcpStream),
+    /// An HTTP-shaped request (`GET <path> …`), header block consumed.
+    Http { path: String, stream: TcpStream },
+}
+
+/// Read one connection's opening bootstrap frame — or HTTP request —
+/// on an admit worker.
+fn read_first_contact(mut stream: TcpStream, deadline: Instant)
+                      -> anyhow::Result<FirstContact> {
     // Accepted sockets must not inherit the listener's non-blocking
-    // mode. The whole frame read is bounded by JOIN_READ_TIMEOUT (not
-    // the remaining join window): a peer that never speaks — or
-    // trickles bytes — ties up one pool slot for at most this long.
+    // mode. The whole read is bounded by JOIN_READ_TIMEOUT (not the
+    // remaining join window): a peer that never speaks — or trickles
+    // bytes — ties up one pool slot for at most this long.
     stream.set_nonblocking(false)?;
     let frame_deadline = (Instant::now() + JOIN_READ_TIMEOUT).min(deadline);
-    let msg = recv_bootstrap_frame(&mut stream, frame_deadline)?;
-    Ok((msg, stream))
+    let mut head = [0u8; 4];
+    read_exact_deadline(&mut stream, &mut head, frame_deadline)
+        .map_err(|e| anyhow::anyhow!("reading bootstrap frame: {e:#}"))?;
+    if &head == b"GET " {
+        let path = read_http_request(&mut stream, frame_deadline)?;
+        return Ok(FirstContact::Http { path, stream });
+    }
+    let len = u32::from_le_bytes(head) as usize;
+    let msg = recv_bootstrap_body(&mut stream, len, frame_deadline)?;
+    Ok(FirstContact::Frame(msg, stream))
+}
+
+/// Consume an HTTP request whose `GET ` prefix was already read off the
+/// socket: capture the path from the request line, then drain the rest
+/// of the header block — bounded by [`MAX_HTTP_REQUEST`] and the frame
+/// deadline, so an HTTP-shaped byte-trickler is no more able to wedge
+/// a worker slot than a mute bootstrap probe is.
+fn read_http_request(stream: &mut TcpStream, deadline: Instant)
+                     -> anyhow::Result<String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(128);
+    let mut byte = [0u8; 1];
+    while !buf.ends_with(b"\r\n\r\n") {
+        anyhow::ensure!(
+            buf.len() < MAX_HTTP_REQUEST,
+            "HTTP request on the session port exceeds \
+             {MAX_HTTP_REQUEST} bytes — not a scraper"
+        );
+        read_exact_deadline(stream, &mut byte, deadline)
+            .map_err(|e| anyhow::anyhow!("reading HTTP request: {e:#}"))?;
+        buf.push(byte[0]);
+    }
+    // Request line after the consumed `GET ` prefix: `<path> HTTP/1.x`.
+    let line = buf.split(|&b| b == b'\r').next().unwrap_or(&[]);
+    let line = String::from_utf8_lossy(line);
+    let path = line.split_whitespace().next().unwrap_or("").to_string();
+    anyhow::ensure!(!path.is_empty(), "empty HTTP request path");
+    Ok(path)
+}
+
+/// One-shot HTTP response on the session port. Best-effort: a scraper
+/// that hung up mid-response costs nothing but this socket. The
+/// connection closes when `stream` drops (HTTP/1.0 semantics, and the
+/// response says `Connection: close` explicitly).
+fn send_http_response(stream: &mut TcpStream, status: &str,
+                      content_type: &str, body: &str) {
+    let head = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body.as_bytes()))
+        .and_then(|()| stream.flush());
+}
+
+/// Serve one observability request (already classified and parsed).
+/// `watch` carries what a `/watch` stream needs beyond the registry —
+/// the session's stop flag; `None` means this endpoint cannot stream
+/// yet (the bootstrap accept loop: the mesh is still assembling, and
+/// there is no lifecycle flag to end a stream against).
+fn serve_observability(path: &str, mut stream: TcpStream,
+                       registry: &Arc<Registry>,
+                       watch: Option<&Arc<AtomicBool>>) {
+    match path {
+        "/metrics" => {
+            let body = prometheus::render(registry);
+            send_http_response(&mut stream, "200 OK",
+                               "text/plain; version=0.0.4", &body);
+        }
+        "/watch" => match watch {
+            Some(stop) => {
+                let registry = registry.clone();
+                let stop = stop.clone();
+                // Detached on purpose: the stream lives as long as
+                // the watcher (or the session), not the short-lived
+                // vetting thread that classified the request.
+                let _ = std::thread::Builder::new()
+                    .name("session-watch-stream".into())
+                    .spawn(move || {
+                        watch_stream_loop(stream, registry, stop)
+                    });
+            }
+            None => send_http_response(
+                &mut stream, "503 Service Unavailable", "text/plain",
+                "session still assembling — /watch is served once \
+                 training starts\n"),
+        },
+        other => send_http_response(
+            &mut stream, "404 Not Found", "text/plain",
+            &format!("unknown path {other} — try /metrics or /watch\n")),
+    }
+}
+
+/// The `/watch` push stream: one cumulative tag-14 metric frame per
+/// [`WATCH_TICK`] until the watcher hangs up or the session stops —
+/// with the stop flag latched *before* each export, so the frame sent
+/// after observing stop is a final snapshot carrying exactly the
+/// totals `RunRecord` reports.
+fn watch_stream_loop(stream: TcpStream, registry: Arc<Registry>,
+                     stop: Arc<AtomicBool>) {
+    let push = PushExporter::new(stream);
+    loop {
+        let last = stop.load(Ordering::SeqCst);
+        if push.export(&registry).is_err() {
+            return; // watcher hung up
+        }
+        if last {
+            return; // that frame was the final, post-stop snapshot
+        }
+        std::thread::sleep(WATCH_TICK);
+    }
 }
 
 impl MeshBootstrap for SessionListener {
@@ -525,8 +707,12 @@ pub struct Readmission {
 
 impl Readmission {
     /// Keep `listener` serving `Rejoin`s for a `parties`-party session
-    /// of logical epoch `epoch`.
-    pub fn spawn(listener: TcpListener, parties: u16, epoch: u32)
+    /// of logical epoch `epoch`. With a `metrics` registry attached
+    /// the same port serves the live observability plane: `/metrics`
+    /// one-shot scrapes, and `/watch` push streams that end (with one
+    /// final-totals frame) when this `Readmission` is dropped.
+    pub fn spawn(listener: TcpListener, parties: u16, epoch: u32,
+                 metrics: Option<Arc<Registry>>)
                  -> anyhow::Result<Readmission> {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -535,7 +721,7 @@ impl Readmission {
         let handle = std::thread::Builder::new()
             .name("session-readmission".into())
             .spawn(move || readmission_loop(listener, parties, epoch,
-                                            stop_t, tx))?;
+                                            metrics, stop_t, tx))?;
         Ok(Readmission {
             rx: Mutex::new(rx),
             stop,
@@ -568,6 +754,7 @@ impl Drop for Readmission {
 const READMIT_WORKERS: usize = 4;
 
 fn readmission_loop(listener: TcpListener, parties: u16, epoch: u32,
+                    metrics: Option<Arc<Registry>>,
                     stop: Arc<AtomicBool>, tx: Sender<RejoinRequest>) {
     let active = Arc::new(AtomicUsize::new(0));
     loop {
@@ -586,17 +773,21 @@ fn readmission_loop(listener: TcpListener, parties: u16, epoch: u32,
                 active.fetch_add(1, Ordering::SeqCst);
                 let active = active.clone();
                 let tx = tx.clone();
+                let metrics = metrics.clone();
+                let stop = stop.clone();
                 std::thread::spawn(move || {
-                    let vetted = vet_rejoin_dial(stream, parties, epoch);
+                    let vetted = vet_readmission_contact(
+                        stream, parties, epoch, &metrics, &stop);
                     active.fetch_sub(1, Ordering::SeqCst);
                     match vetted {
-                        Ok(req) => {
+                        Ok(Some(req)) => {
                             log::info!(
                                 "re-admission: {} queued (last round \
                                  {})", req.party, req.last_round
                             );
                             let _ = tx.send(req);
                         }
+                        Ok(None) => {} // observability request, served
                         Err(e) => log::warn!(
                             "re-admission: rejected {addr}: {e:#}"
                         ),
@@ -616,11 +807,28 @@ fn readmission_loop(listener: TcpListener, parties: u16, epoch: u32,
 
 /// Frame + session-identity vetting of one re-admission dial (runs on
 /// a short-lived vetting thread; lane-level checks happen at the
-/// consumer).
-fn vet_rejoin_dial(stream: TcpStream, parties: u16, epoch: u32)
-                   -> anyhow::Result<RejoinRequest> {
-    let (msg, mut stream) =
-        read_join_frame(stream, Instant::now() + JOIN_READ_TIMEOUT)?;
+/// consumer). `Ok(None)` means the connection was an observability
+/// request and was served in full — `/metrics` right here, `/watch` by
+/// handing the socket to a detached streamer that follows `stop`.
+fn vet_readmission_contact(stream: TcpStream, parties: u16, epoch: u32,
+                           metrics: &Option<Arc<Registry>>,
+                           stop: &Arc<AtomicBool>)
+                           -> anyhow::Result<Option<RejoinRequest>> {
+    let contact =
+        read_first_contact(stream, Instant::now() + JOIN_READ_TIMEOUT)?;
+    let (msg, mut stream) = match contact {
+        FirstContact::Frame(msg, stream) => (msg, stream),
+        FirstContact::Http { path, stream } => match metrics {
+            Some(reg) => {
+                serve_observability(&path, stream, reg, Some(stop));
+                return Ok(None);
+            }
+            None => anyhow::bail!(
+                "HTTP-shaped request ({path}) on a re-admission port \
+                 with no metrics registry attached"
+            ),
+        },
+    };
     let Message::Rejoin { party, parties: claimed, epoch: e, last_round,
                           codecs } = msg
     else {
@@ -649,7 +857,7 @@ fn vet_rejoin_dial(stream: TcpStream, parties: u16, epoch: u32)
              {epoch:#x} — different logical session"
         );
     }
-    Ok(RejoinRequest { party, last_round, codecs, stream })
+    Ok(Some(RejoinRequest { party, last_round, codecs, stream }))
 }
 
 /// Re-dial a running (or restarted) session and resume a lane: connect
@@ -1017,7 +1225,15 @@ pub(crate) fn recv_bootstrap_frame(stream: &mut TcpStream,
     let mut len_buf = [0u8; 4];
     read_exact_deadline(stream, &mut len_buf, deadline)
         .map_err(|e| anyhow::anyhow!("reading bootstrap frame: {e:#}"))?;
-    let len = u32::from_le_bytes(len_buf) as usize;
+    recv_bootstrap_body(stream, u32::from_le_bytes(len_buf) as usize,
+                        deadline)
+}
+
+/// The body half of [`recv_bootstrap_frame`], for callers that already
+/// consumed the length word (the first-contact dispatch reads it to
+/// tell frames from HTTP).
+fn recv_bootstrap_body(stream: &mut TcpStream, len: usize,
+                       deadline: Instant) -> anyhow::Result<Message> {
     anyhow::ensure!(
         len > 0 && len <= MAX_BOOTSTRAP_FRAME,
         "bootstrap frame of {len} bytes (max {MAX_BOOTSTRAP_FRAME}) — \
@@ -1540,6 +1756,178 @@ mod tests {
         assert_eq!(req.party, PartyId(1));
         assert_eq!(req.last_round, 4);
         assert_eq!(req.codecs, 0x0f);
+    }
+
+    /// Raw HTTP GET against the session port; returns the full
+    /// response (status line + headers + body), reading to EOF.
+    fn http_get(addr: &str, path: &str) -> anyhow::Result<String> {
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())?;
+        s.set_read_timeout(Some(Duration::from_secs(5)))?;
+        let mut out = String::new();
+        s.read_to_string(&mut out)?;
+        Ok(out)
+    }
+
+    #[test]
+    fn metrics_scrape_is_served_during_bootstrap() {
+        let cfg = cfg_with_parties(2);
+        let registry = Registry::new();
+        registry.set_round(5);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10))
+            .with_metrics(registry.clone());
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        // Scrape while the mesh is still assembling: the accept loop
+        // classifies the GET by its first four bytes and serves it
+        // without consuming a join slot or disturbing vetting.
+        let resp = http_get(&addr, "/metrics").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        assert!(resp.contains("celu_session_round 5\n"), "{resp}");
+        // /watch has no lifecycle flag during bootstrap: refused with
+        // a diagnostic, not hung and not treated as hostile.
+        let resp = http_get(&addr, "/watch").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 503"), "{resp}");
+        // Unknown paths get a 404 naming the real endpoints.
+        let resp = http_get(&addr, "/nope").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 404"), "{resp}");
+        // The real joiner is unaffected by the HTTP traffic.
+        let (_s, ack) = raw_join(&addr, 1, 2).unwrap();
+        assert!(matches!(ack, Message::JoinAck { .. }));
+        let links = label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 1);
+    }
+
+    #[test]
+    fn watch_stream_follows_the_registry_and_ends_with_final_totals() {
+        use crate::metrics::exporters::push::{frame_rows,
+                                              read_metrics_frame};
+        use crate::metrics::facade::LinkHandles;
+        use crate::transport::LinkStats;
+
+        let cfg = cfg_with_parties(2);
+        let registry = Registry::new();
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10))
+            .with_metrics(registry.clone());
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish_supervised(&cfg)
+        });
+        let _feature = SessionDialer::new(&addr, PartyId(1))
+            .with_timeout(Duration::from_secs(10))
+            .establish(&cfg)
+            .unwrap();
+        let (_links, readmission, _epoch, _round) =
+            label.join().unwrap().unwrap();
+        // Charge totals the stream must report.
+        let h = LinkHandles::detached();
+        h.charge(LinkStats {
+            messages: 3,
+            bytes: 300,
+            raw_bytes: 600,
+            busy: Duration::from_millis(2),
+        });
+        registry.bind_link(PartyId(1), LABEL_PARTY, &h);
+        registry.set_round(9);
+        // Scrapes are served from the re-admission port too.
+        let resp = http_get(&addr, "/metrics").unwrap();
+        assert!(resp.contains(
+            "celu_link_wire_bytes_total{src=\"1\",dst=\"0\"} 300\n"),
+            "{resp}");
+        // Attach a watcher and read one live tag-14 frame.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET /watch HTTP/1.0\r\n\r\n").unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let first = read_metrics_frame(&mut s).unwrap();
+        assert_eq!(frame_rows(&first).len(), 1);
+        // The registry keeps moving; then the session ends. The stream
+        // must close with one final frame carrying the exact totals —
+        // the stop flag is latched before each export, so the frame
+        // sent after observing stop is a complete final snapshot.
+        h.record(100, 200, Duration::from_millis(1));
+        registry.set_round(10);
+        drop(readmission);
+        let mut last = first;
+        while let Ok(f) = read_metrics_frame(&mut s) {
+            last = f;
+        }
+        let final_rows: Vec<_> = registry
+            .link_rows()
+            .iter()
+            .map(|r| (r.src, r.dst, r.stats))
+            .collect();
+        assert_eq!(frame_rows(&last), final_rows);
+        assert_eq!(last.round(), 10);
+    }
+
+    #[test]
+    fn http_without_a_registry_stays_hostile() {
+        let cfg = cfg_with_parties(2);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        // No observability plane attached: the GET gets nothing back —
+        // the connection is dropped exactly like pre-plane builds
+        // dropped any non-bootstrap traffic.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = Vec::new();
+        let n = s.read_to_end(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "metrics served without a registry");
+        // The mesh still assembles behind the rejected request.
+        let (_s, ack) = raw_join(&addr, 1, 2).unwrap();
+        assert!(matches!(ack, Message::JoinAck { .. }));
+        let links = label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 1);
+    }
+
+    #[test]
+    fn oversized_http_requests_are_cut_off() {
+        // An HTTP-shaped byte-trickler with an unbounded header block
+        // is refused at MAX_HTTP_REQUEST, same discipline as hostile
+        // bootstrap length words.
+        let cfg = cfg_with_parties(2);
+        let registry = Registry::new();
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10))
+            .with_metrics(registry);
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.0\r\n").unwrap();
+        // Headers that never terminate, well past the cap.
+        let junk = vec![b'x'; 4 * MAX_HTTP_REQUEST];
+        let _ = s.write_all(&junk);
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = Vec::new();
+        let n = s.read_to_end(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "oversized request was answered");
+        // A legitimate scrape and the joiner both still get through.
+        let resp = http_get(&addr, "/metrics").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        let (_s, ack) = raw_join(&addr, 1, 2).unwrap();
+        assert!(matches!(ack, Message::JoinAck { .. }));
+        let links = label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 1);
     }
 
     #[test]

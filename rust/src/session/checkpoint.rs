@@ -42,6 +42,8 @@
 use std::collections::BTreeSet;
 
 use crate::compress::CodecKind;
+use crate::metrics::facade::EventSink;
+use crate::session::supervisor::SessionEvent;
 use crate::session::{PartyId, MAX_PARTIES};
 use crate::tensor::{Data, DType, Tensor};
 
@@ -482,14 +484,26 @@ impl FeatureSnapshot {
 /// [`SAVE_ATTEMPTS`] times total before the error is handed back, so a
 /// transient hiccup costs nothing and a persistent one degrades the
 /// session to training-without-snapshots instead of aborting the round.
-pub fn save_with_retry<F>(mut attempt: F) -> anyhow::Result<String>
+///
+/// The outcome is emitted through `sink` as the session's own fault
+/// history: `CheckpointWritten{round, path}` on success,
+/// `CheckpointFailed{round, error}` once the retries are exhausted —
+/// callers no longer hand-build the events.
+pub fn save_with_retry<F>(round: u64, sink: &dyn EventSink, mut attempt: F)
+                          -> anyhow::Result<String>
 where
     F: FnMut() -> anyhow::Result<String>,
 {
     let mut last: Option<anyhow::Error> = None;
     for try_no in 1..=SAVE_ATTEMPTS {
         match attempt() {
-            Ok(path) => return Ok(path),
+            Ok(path) => {
+                sink.emit(&SessionEvent::CheckpointWritten {
+                    round,
+                    path: path.clone(),
+                });
+                return Ok(path);
+            }
             Err(e) => {
                 if try_no < SAVE_ATTEMPTS {
                     log::warn!(
@@ -501,7 +515,12 @@ where
             }
         }
     }
-    Err(last.expect("SAVE_ATTEMPTS >= 1"))
+    let err = last.expect("SAVE_ATTEMPTS >= 1");
+    sink.emit(&SessionEvent::CheckpointFailed {
+        round,
+        error: format!("{err:#}"),
+    });
+    Err(err)
 }
 
 #[cfg(test)]
@@ -871,8 +890,10 @@ mod feature_tests {
 
     #[test]
     fn save_with_retry_succeeds_after_a_transient_failure() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sink = crate::metrics::facade::ChannelSink::new(tx);
         let mut calls = 0;
-        let path = save_with_retry(|| {
+        let path = save_with_retry(7, &sink, || {
             calls += 1;
             if calls == 1 {
                 anyhow::bail!("disk hiccup");
@@ -882,17 +903,33 @@ mod feature_tests {
         .unwrap();
         assert_eq!(path, "ok.celuckpt");
         assert_eq!(calls, 2);
+        // One success event, nothing else: the transient failure never
+        // reaches the session's fault history.
+        assert_eq!(rx.try_recv().unwrap(),
+                   SessionEvent::CheckpointWritten {
+                       round: 7,
+                       path: "ok.celuckpt".into(),
+                   });
+        assert!(rx.try_recv().is_err());
     }
 
     #[test]
     fn save_with_retry_gives_up_after_bounded_attempts() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sink = crate::metrics::facade::ChannelSink::new(tx);
         let mut calls = 0;
-        let err = save_with_retry(|| {
+        let err = save_with_retry(9, &sink, || {
             calls += 1;
             anyhow::bail!("disk full");
         })
         .unwrap_err();
         assert_eq!(calls, SAVE_ATTEMPTS, "retry not bounded");
         assert!(err.to_string().contains("disk full"));
+        match rx.try_recv().unwrap() {
+            SessionEvent::CheckpointFailed { round: 9, error } => {
+                assert!(error.contains("disk full"), "{error}");
+            }
+            other => panic!("expected CheckpointFailed, got {other:?}"),
+        }
     }
 }

@@ -52,6 +52,7 @@ use crate::coordinator::feature_party::{run_feature_party,
 use crate::coordinator::label_party::{run_label_party, LabelPartyReport,
                                       LabelRunOpts};
 use crate::data::{PartyAData, PartyBData};
+use crate::metrics::facade::Registry;
 use crate::runtime::ArtifactSet;
 use crate::transport::{inproc_link, LinkStats, Transport};
 
@@ -188,6 +189,7 @@ pub struct SessionBuilder {
     cfg: RunConfig,
     id: PartyId,
     links: Vec<Link>,
+    registry: Option<Arc<Registry>>,
 }
 
 impl SessionBuilder {
@@ -195,7 +197,8 @@ impl SessionBuilder {
     /// config supplies the session-wide knobs (algorithm, W/R/ξ, codec
     /// with per-party overrides, WAN profile, `parties`).
     pub fn new(cfg: &RunConfig, id: PartyId) -> Self {
-        SessionBuilder { cfg: cfg.clone(), id, links: Vec::new() }
+        SessionBuilder { cfg: cfg.clone(), id, links: Vec::new(),
+                         registry: None }
     }
 
     /// Build a session whose links come from a [`bootstrap`]
@@ -208,12 +211,31 @@ impl SessionBuilder {
         cfg: &RunConfig,
         bootstrap: impl bootstrap::MeshBootstrap,
     ) -> anyhow::Result<Session> {
+        Self::bootstrap_builder(cfg, bootstrap)?.build()
+    }
+
+    /// [`Self::from_bootstrap`] stopped one step short of `build`, so
+    /// callers can attach builder options (e.g. a shared
+    /// [`Registry`] via [`Self::with_registry`]) before the topology
+    /// check runs.
+    pub fn bootstrap_builder(
+        cfg: &RunConfig,
+        bootstrap: impl bootstrap::MeshBootstrap,
+    ) -> anyhow::Result<SessionBuilder> {
         let id = bootstrap.id();
         let mut b = SessionBuilder::new(cfg, id);
         for l in bootstrap.establish(cfg)? {
             b = b.link_full(l);
         }
-        b.build()
+        Ok(b)
+    }
+
+    /// Publish this session's links into `registry` instead of a
+    /// private one — the in-proc trainer hands every party the same
+    /// registry so one scrape covers all 2(K−1) directed links.
+    pub fn with_registry(mut self, registry: Arc<Registry>) -> Self {
+        self.registry = Some(registry);
+        self
     }
 
     /// Add a peer link. Feature parties link exactly the label party;
@@ -231,9 +253,13 @@ impl SessionBuilder {
         self
     }
 
-    /// Validate the topology and produce a runnable [`Session`].
+    /// Validate the topology and produce a runnable [`Session`]. Every
+    /// link whose transport exposes metrics handles is bound into the
+    /// session registry as the directed row `(id → peer)` — the
+    /// observability plane sees the mesh the moment it exists, before
+    /// the first training frame.
     pub fn build(self) -> anyhow::Result<Session> {
-        let SessionBuilder { cfg, id, links } = self;
+        let SessionBuilder { cfg, id, links, registry } = self;
         cfg.validate()?;
         let k = cfg.parties as u16;
         anyhow::ensure!(id.0 < k,
@@ -272,7 +298,13 @@ impl SessionBuilder {
                 );
             }
         }
-        Ok(Session { cfg, id, mesh: Mesh::new(links) })
+        let registry = registry.unwrap_or_else(Registry::new);
+        for l in &links {
+            if let Some(h) = l.transport.metrics() {
+                registry.bind_link(id, l.peer, &h);
+            }
+        }
+        Ok(Session { cfg, id, mesh: Mesh::new(links), registry })
     }
 }
 
@@ -284,6 +316,7 @@ pub struct Session {
     cfg: RunConfig,
     id: PartyId,
     mesh: Mesh,
+    registry: Arc<Registry>,
 }
 
 impl Session {
@@ -303,6 +336,13 @@ impl Session {
         &self.cfg
     }
 
+    /// This session's metrics registry (private unless the builder was
+    /// given a shared one). Its link rows alias the mesh transports'
+    /// live counters — a scrape here never touches the hot path.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
     /// Run this session as a feature party (role must match).
     pub fn run_feature(&self, set: Arc<ArtifactSet>, train: Arc<PartyAData>,
                        test: Arc<PartyAData>)
@@ -315,10 +355,13 @@ impl Session {
     /// reconnect policy — DESIGN.md §8).
     pub fn run_feature_with(&self, set: Arc<ArtifactSet>,
                             train: Arc<PartyAData>, test: Arc<PartyAData>,
-                            opts: FeatureRunOpts)
+                            mut opts: FeatureRunOpts)
                             -> anyhow::Result<FeaturePartyReport> {
         anyhow::ensure!(self.role() == PartyRole::Feature,
                         "run_feature on {} (label party)", self.id);
+        if opts.registry.is_none() {
+            opts.registry = Some(self.registry.clone());
+        }
         run_feature_party(&self.cfg, self.id, set, train, test,
                           &self.mesh.links[0], opts)
     }
@@ -334,10 +377,13 @@ impl Session {
     /// re-admission point, checkpoint resume — DESIGN.md §8).
     pub fn run_label_with(&self, set: Arc<ArtifactSet>,
                           train: Arc<PartyBData>, test: Arc<PartyBData>,
-                          opts: LabelRunOpts)
+                          mut opts: LabelRunOpts)
                           -> anyhow::Result<LabelPartyReport> {
         anyhow::ensure!(self.role() == PartyRole::Label,
                         "run_label on {} (feature party)", self.id);
+        if opts.registry.is_none() {
+            opts.registry = Some(self.registry.clone());
+        }
         run_label_party(&self.cfg, set, train, test, self.mesh.links(),
                         opts)
     }

@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 
 use crate::compress::{self, CodecKind};
 use crate::config::RunConfig;
+use crate::metrics::facade::{EventSink, Registry};
 use crate::protocol::{outbound_stats, Lane, Message};
 use crate::tensor::Tensor;
 use crate::transport::tcp::TcpTransport;
@@ -66,11 +67,6 @@ const STRAGGLER_POLL: Duration = Duration::from_micros(500);
 /// would free-run every remaining round on stale statistics in
 /// milliseconds, leaving a returning dialer no window to land in.
 const DEGRADED_PACE: Duration = Duration::from_millis(500);
-
-/// Cap on retained lifecycle events: a run that flaps for hours must
-/// not grow an unbounded event log. Beyond the cap events are counted
-/// (`Supervisor::dropped_events`), not stored.
-const EVENTS_CAP: usize = 4096;
 
 /// The logical-session epoch for a run seeded with `seed`. Derived, not
 /// exchanged: every party of a session shares the config seed (the
@@ -186,22 +182,36 @@ impl SessionEvent {
     }
 }
 
-/// The session state machine plus its event log.
-#[derive(Debug)]
+/// The session state machine plus its event plumbing. Events no longer
+/// live in a supervisor-private `Vec`: every [`Self::record`] emits
+/// through the metrics registry's [`EventSink`] (bounded log + per-kind
+/// counters) plus any extra sinks a caller subscribed — the historic
+/// `events()` / `take_events()` accessors read the registry's log, so
+/// existing callers see the same data through the same API.
 pub struct Supervisor {
     state: SessionState,
     epoch: u32,
-    events: Vec<SessionEvent>,
-    dropped_events: u64,
+    registry: Arc<Registry>,
+    extra_sinks: Vec<Arc<dyn EventSink>>,
 }
 
 impl Supervisor {
+    /// A supervisor over its own private registry (the historic
+    /// behaviour; nothing else observes the events).
     pub fn new(epoch: u32) -> Self {
+        Supervisor::with_registry(epoch, Registry::new())
+    }
+
+    /// A supervisor emitting into a shared session registry — the
+    /// observability plane's path: the same registry feeds the scrape
+    /// endpoint, the push stream, and the terminal `RunRecord`
+    /// observer.
+    pub fn with_registry(epoch: u32, registry: Arc<Registry>) -> Self {
         Supervisor {
             state: SessionState::Joining,
             epoch,
-            events: Vec::new(),
-            dropped_events: 0,
+            registry,
+            extra_sinks: Vec::new(),
         }
     }
 
@@ -213,28 +223,37 @@ impl Supervisor {
         self.epoch
     }
 
-    pub fn events(&self) -> &[SessionEvent] {
-        &self.events
+    /// The registry this supervisor emits into.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Subscribe an additional sink; every recorded event fans out to
+    /// it after the registry.
+    pub fn add_sink(&mut self, sink: Arc<dyn EventSink>) {
+        self.extra_sinks.push(sink);
+    }
+
+    pub fn events(&self) -> Vec<SessionEvent> {
+        self.registry.events()
     }
 
     pub fn dropped_events(&self) -> u64 {
-        self.dropped_events
+        self.registry.dropped_events()
     }
 
     pub fn take_events(&mut self) -> Vec<SessionEvent> {
-        std::mem::take(&mut self.events)
+        self.registry.take_events()
     }
 
-    /// Record a lifecycle event (bounded by `EVENTS_CAP`; overflow is
-    /// counted in [`Self::dropped_events`], not stored).
+    /// Record a lifecycle event: the registry sink logs it (bounded by
+    /// [`crate::metrics::facade::EVENTS_CAP`]) and counts it per kind;
+    /// extra sinks see it afterwards.
     pub fn record(&mut self, event: SessionEvent) {
-        log::info!("session event: {} (party {:?}, round {})",
-                   event.kind(), event.party(), event.round());
-        if self.events.len() >= EVENTS_CAP {
-            self.dropped_events += 1;
-            return;
+        self.registry.emit(&event);
+        for s in &self.extra_sinks {
+            s.emit(&event);
         }
-        self.events.push(event);
     }
 
     /// Move to `to`, validating the edge. A self-transition is a no-op.
@@ -299,8 +318,6 @@ struct SupLane {
     fresh: Option<Tensor>,
     /// Recent outbound derivative frames, by round (rejoin replay).
     resend: VecDeque<(u64, Message)>,
-    /// Accounting accumulated over replaced transports.
-    carried: LinkStats,
     rejoins: u64,
 }
 
@@ -351,7 +368,6 @@ impl LaneSet {
                 last_za: None,
                 fresh: None,
                 resend: VecDeque::new(),
-                carried: LinkStats::default(),
                 rejoins: 0,
             })
             .collect();
@@ -386,6 +402,31 @@ impl LaneSet {
         self.sup.epoch()
     }
 
+    /// Emit lifecycle events into (and publish link accounting to) the
+    /// shared session registry instead of a private one. Binds every
+    /// lane's transport handles as `LABEL → peer` rows, so the scrape
+    /// and push exporters see the same cells the transports bump.
+    pub fn with_registry(mut self, registry: Arc<Registry>) -> Self {
+        for lane in &self.lanes {
+            if let Some(h) = lane.transport.metrics() {
+                registry.bind_link(LABEL_PARTY, lane.peer, &h);
+            }
+        }
+        self.sup = Supervisor::with_registry(self.sup.epoch(), registry);
+        self
+    }
+
+    /// The registry this lane set emits into (private unless
+    /// [`Self::with_registry`] installed a shared one).
+    pub fn registry(&self) -> &Arc<Registry> {
+        self.sup.registry()
+    }
+
+    /// Subscribe an additional event sink (see [`Supervisor::add_sink`]).
+    pub fn add_sink(&mut self, sink: Arc<dyn EventSink>) {
+        self.sup.add_sink(sink);
+    }
+
     pub fn supervisor_mut(&mut self) -> &mut Supervisor {
         &mut self.sup
     }
@@ -415,11 +456,14 @@ impl LaneSet {
             .collect()
     }
 
-    /// Per-lane sender-side accounting, carried transports included.
+    /// Per-lane sender-side accounting. Replaced transports are folded
+    /// in at swap time ([`crate::metrics::facade::LinkHandles::charge`]
+    /// in `process_rejoins`), so the live transport's totals are the
+    /// lane's full history.
     pub fn link_stats(&self) -> Vec<(PartyId, LinkStats)> {
         self.lanes
             .iter()
-            .map(|l| (l.peer, l.carried.merged(l.transport.stats())))
+            .map(|l| (l.peer, l.transport.stats()))
             .collect()
     }
 
@@ -513,6 +557,7 @@ impl LaneSet {
     /// both modes, and when *no* lane has ever contributed.
     pub fn collect(&mut self, round: u64)
                    -> anyhow::Result<Vec<LaneInput>> {
+        self.sup.registry().set_round(round);
         self.process_rejoins(round)?;
         for i in 0..self.lanes.len() {
             self.drain_lane(i, round)?;
@@ -1019,7 +1064,20 @@ impl LaneSet {
             }
             let lane = &mut self.lanes[i];
             let old = std::mem::replace(&mut lane.transport, t);
-            lane.carried = lane.carried.merged(old.stats());
+            // Accounting continuity across the transport swap: charge
+            // the replacement's fresh cells with the dead transport's
+            // final totals, then rebind the registry row (last bound
+            // wins) so exporters keep reading live cells.
+            match lane.transport.metrics() {
+                Some(h) => {
+                    h.charge(old.stats());
+                    self.sup.registry()
+                        .bind_link(LABEL_PARTY, lane.peer, &h);
+                }
+                None => log::warn!(
+                    "[{}] rejoin transport exposes no metrics handles — \
+                     pre-rejoin accounting dropped", lane.peer),
+            }
             lane.alive = true;
             lane.fresh = None;
             lane.completed = round;
@@ -1044,6 +1102,7 @@ impl LaneSet {
 mod tests {
     use super::*;
     use crate::config::WanProfile;
+    use crate::metrics::facade::{ChannelSink, EVENTS_CAP};
     use crate::session::inproc_star;
 
     fn t(v: f32) -> Tensor {
@@ -1107,6 +1166,51 @@ mod tests {
         }
         assert_eq!(s.events().len(), EVENTS_CAP);
         assert!(s.dropped_events() > 0);
+    }
+
+    #[test]
+    fn lane_set_publishes_into_a_shared_registry() {
+        let cfg = cfg_k(3, 30);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let reg = Registry::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut lanes = LaneSet::new(&cfg, &label_links, None)
+            .with_registry(reg.clone());
+        lanes.add_sink(Arc::new(ChannelSink::new(tx)));
+        feature_links[0].transport.send(act(0, 1.0)).unwrap();
+        feature_links[1].transport.send(act(0, 2.0)).unwrap();
+        lanes.handshake(&cfg, None).unwrap();
+        lanes.collect(0).unwrap();
+        lanes.fan_out(0, &t(0.5)).unwrap();
+        // The registry's LABEL→peer rows alias the very cells the lane
+        // transports bump — no copying, no report threading.
+        let rows = reg.link_rows();
+        assert_eq!(rows.len(), 2);
+        for ((peer, stats), row) in
+            lanes.link_stats().iter().zip(rows.iter())
+        {
+            assert_eq!((row.src, row.dst), (LABEL_PARTY, *peer));
+            assert_eq!(row.stats, *stats);
+            assert!(row.stats.messages > 0);
+        }
+        // Round 1 stalls P2 past the straggler window: the timeout
+        // event lands in the registry log, bumps its kind counter, and
+        // fans out to the subscribed channel sink.
+        feature_links[0].transport.send(act(1, 3.0)).unwrap();
+        lanes.collect(1).unwrap();
+        assert_eq!(reg.round(), 1);
+        let expect = SessionEvent::StragglerTimeout { party: PartyId(2),
+                                                      round: 1 };
+        assert_eq!(reg.events(), vec![expect.clone()]);
+        assert_eq!(rx.try_recv().unwrap(), expect);
+        assert_eq!(
+            reg.counter("celu_events_total{kind=\"straggler_timeout\"}")
+                .get(),
+            1);
+        // take_events drains the shared registry, exactly as the old
+        // supervisor-private log behaved.
+        assert_eq!(lanes.take_events().len(), 1);
+        assert!(reg.events().is_empty());
     }
 
     #[test]

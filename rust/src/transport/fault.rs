@@ -232,6 +232,13 @@ impl Transport for FaultTransport {
     fn stats(&self) -> LinkStats {
         self.inner.stats()
     }
+
+    fn metrics(&self) -> Option<crate::metrics::facade::LinkHandles> {
+        // Same delegation as stats(): dropped/partitioned frames are
+        // never charged, so a bound registry sees exactly what the
+        // inner transport put on the wire.
+        self.inner.metrics()
+    }
 }
 
 #[cfg(test)]

@@ -29,12 +29,12 @@
 pub mod fault;
 pub mod tcp;
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::config::WanProfile;
+use crate::metrics::facade::LinkHandles;
 use crate::protocol::{FrameHeader, Message, FRAME_V2_OVERHEAD};
 use crate::session::PartyId;
 
@@ -47,6 +47,17 @@ pub trait Transport: Send + Sync {
     fn try_recv(&self) -> anyhow::Result<Option<Message>>;
     /// Cumulative traffic stats for this endpoint (sent direction).
     fn stats(&self) -> LinkStats;
+    /// The pre-registered handle bundle this endpoint bumps on every
+    /// send (DESIGN.md §10). Every transport in this crate starts
+    /// *detached* — the cells exist but no registry sees them — and a
+    /// session that wants live observability calls
+    /// `Registry::bind_link` with the clone returned here, so enabling
+    /// an exporter never changes a transport constructor or the wire.
+    /// `None` (the default, for exotic impls) means the endpoint keeps
+    /// private accounting that only `stats()` can read.
+    fn metrics(&self) -> Option<LinkHandles> {
+        None
+    }
 }
 
 /// Sender-side accounting: bytes, messages, busy time on the link.
@@ -85,39 +96,14 @@ impl LinkStats {
     }
 }
 
-#[derive(Default)]
-struct Counters {
-    messages: AtomicU64,
-    bytes: AtomicU64,
-    raw_bytes: AtomicU64,
-    busy_nanos: AtomicU64,
-}
-
-impl Counters {
-    fn record(&self, bytes: usize, raw_bytes: usize, busy: Duration) {
-        self.messages.fetch_add(1, Ordering::Relaxed);
-        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
-        self.raw_bytes.fetch_add(raw_bytes as u64, Ordering::Relaxed);
-        self.busy_nanos
-            .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
-    }
-
-    fn snapshot(&self) -> LinkStats {
-        LinkStats {
-            messages: self.messages.load(Ordering::Relaxed),
-            bytes: self.bytes.load(Ordering::Relaxed),
-            raw_bytes: self.raw_bytes.load(Ordering::Relaxed),
-            busy: Duration::from_nanos(self.busy_nanos.load(Ordering::Relaxed)),
-        }
-    }
-}
-
 /// One endpoint of the in-process simulated-WAN duplex.
 pub struct InProcTransport {
     tx: Mutex<Sender<Message>>,
     rx: Mutex<Receiver<Message>>,
     wan: WanProfile,
-    counters: Arc<Counters>,
+    /// Pre-registered (initially detached) metric cells — what the
+    /// private per-transport counter struct used to be (DESIGN.md §10).
+    handles: LinkHandles,
     /// `Some` on v2 (party-addressed) links: the envelope is charged to
     /// the byte accounting, though in-proc it never materializes.
     header: Option<FrameHeader>,
@@ -153,14 +139,14 @@ fn duplex(wan: WanProfile, ha: Option<FrameHeader>,
         tx: Mutex::new(tx_ab),
         rx: Mutex::new(rx_ba),
         wan,
-        counters: Arc::new(Counters::default()),
+        handles: LinkHandles::detached(),
         header: ha,
     };
     let b = InProcTransport {
         tx: Mutex::new(tx_ba),
         rx: Mutex::new(rx_ab),
         wan,
-        counters: Arc::new(Counters::default()),
+        handles: LinkHandles::detached(),
         header: hb,
     };
     (a, b)
@@ -181,7 +167,7 @@ impl Transport for InProcTransport {
             // behaviour the local-update technique amortises.
             std::thread::sleep(delay);
         }
-        self.counters
+        self.handles
             .record(bytes, msg.raw_bytes() + extra, start.elapsed());
         self.tx
             .lock()
@@ -210,7 +196,11 @@ impl Transport for InProcTransport {
     }
 
     fn stats(&self) -> LinkStats {
-        self.counters.snapshot()
+        self.handles.snapshot()
+    }
+
+    fn metrics(&self) -> Option<LinkHandles> {
+        Some(self.handles.clone())
     }
 }
 
@@ -299,6 +289,28 @@ mod tests {
         assert!(stats.raw_bytes > stats.bytes);
         assert!(stats.compression_ratio() > 1.0);
         assert_eq!(LinkStats::default().compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn metrics_handles_alias_stats() {
+        // The facade contract: the handle bundle a transport exposes is
+        // the same cells stats() snapshots, so a registry that binds
+        // the handles observes every send with no extra bookkeeping.
+        let (a, b) = inproc_pair(WanProfile::instant());
+        let handles = a.metrics().expect("in-proc exposes handles");
+        a.send(act(1, 8)).unwrap();
+        let _ = b.recv().unwrap();
+        assert_eq!(handles.snapshot(), a.stats());
+        assert_eq!(handles.snapshot().messages, 1);
+        // Charging the handles shows up in stats() too (the rejoin
+        // carry-over path).
+        handles.charge(LinkStats {
+            messages: 2,
+            bytes: 10,
+            raw_bytes: 10,
+            busy: Duration::ZERO,
+        });
+        assert_eq!(a.stats().messages, 3);
     }
 
     #[test]

@@ -28,11 +28,11 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::config::WanProfile;
+use crate::metrics::facade::LinkHandles;
 use crate::protocol::{decode_frame, encode_frame_into, FrameHeader,
                       Message, FRAME_V2_OVERHEAD};
 use crate::session::PartyId;
@@ -59,10 +59,9 @@ pub struct TcpTransport {
     /// `Some` on a v2 mesh link: stamped on every outgoing frame;
     /// incoming v2 frames must carry exactly its mirror image.
     header: Option<FrameHeader>,
-    messages: AtomicU64,
-    bytes: AtomicU64,
-    raw_bytes: AtomicU64,
-    busy_nanos: AtomicU64,
+    /// Pre-registered (initially detached) metric cells — what four
+    /// private atomics used to be (DESIGN.md §10).
+    handles: LinkHandles,
 }
 
 impl TcpTransport {
@@ -82,10 +81,7 @@ impl TcpTransport {
                                               scratch: Vec::new() }),
             wan,
             header: None,
-            messages: AtomicU64::new(0),
-            bytes: AtomicU64::new(0),
-            raw_bytes: AtomicU64::new(0),
-            busy_nanos: AtomicU64::new(0),
+            handles: LinkHandles::detached(),
         })
     }
 
@@ -252,12 +248,8 @@ impl Transport for TcpTransport {
             stream.write_all(scratch)?;
             stream.flush()?;
         }
-        self.messages.fetch_add(1, Ordering::Relaxed);
-        self.bytes.fetch_add(frame_len as u64, Ordering::Relaxed);
-        self.raw_bytes
-            .fetch_add((msg.raw_bytes() + extra) as u64, Ordering::Relaxed);
-        self.busy_nanos
-            .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.handles
+            .record(frame_len, msg.raw_bytes() + extra, start.elapsed());
         Ok(())
     }
 
@@ -299,12 +291,11 @@ impl Transport for TcpTransport {
     }
 
     fn stats(&self) -> LinkStats {
-        LinkStats {
-            messages: self.messages.load(Ordering::Relaxed),
-            bytes: self.bytes.load(Ordering::Relaxed),
-            raw_bytes: self.raw_bytes.load(Ordering::Relaxed),
-            busy: Duration::from_nanos(self.busy_nanos.load(Ordering::Relaxed)),
-        }
+        self.handles.snapshot()
+    }
+
+    fn metrics(&self) -> Option<LinkHandles> {
+        Some(self.handles.clone())
     }
 }
 

@@ -147,6 +147,18 @@ pub fn arr_f64(xs: &[f64]) -> Json {
 
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
+    escape_into(out, s);
+    out.push('"');
+}
+
+/// Append `s` to `out` with every JSON-significant character escaped
+/// (quotes, backslashes, and control characters — the latter as `\n` /
+/// `\r` / `\t` or `\u00XX`). This is the one escaping routine every
+/// artifact and exporter in the crate must route hostile strings
+/// through: OS error messages, checkpoint paths, and event payloads
+/// all reach JSON output via this function, so a quote or newline in
+/// an error string can never produce an invalid document.
+pub fn escape_into(out: &mut String, s: &str) {
     for c in s.chars() {
         match c {
             '"' => out.push_str("\\\""),
@@ -160,7 +172,14 @@ fn write_escaped(out: &mut String, s: &str) {
             c => out.push(c),
         }
     }
-    out.push('"');
+}
+
+/// [`escape_into`] returning a fresh `String` (without surrounding
+/// quotes).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    escape_into(&mut out, s);
+    out
 }
 
 struct Parser<'a> {
@@ -385,6 +404,21 @@ mod tests {
         let j = Json::Str("a\"b\\c\nd".into());
         assert_eq!(j.to_string(), r#""a\"b\\c\nd""#);
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn escape_helper_neutralizes_hostile_strings() {
+        // The public helper is what exporters reach for; its output
+        // must embed into a JSON document verbatim.
+        let hostile = "disk \"full\"\\path\nline2\r\tok\u{1}";
+        let escaped = escape(hostile);
+        assert!(!escaped.contains('\n') && !escaped.contains('\r'));
+        let doc = format!("{{\"e\":\"{escaped}\"}}");
+        let parsed = Json::parse(&doc).unwrap();
+        assert_eq!(parsed.expect("e").unwrap().as_str().unwrap(), hostile);
+        // And it matches the writer's own escaping exactly.
+        assert_eq!(format!("\"{escaped}\""),
+                   Json::Str(hostile.into()).to_string());
     }
 
     #[test]
