@@ -1,0 +1,138 @@
+//! Service-plane benchmark: admission and steady-state throughput of a
+//! multi-session `SessionServer` (DESIGN.md §11).
+//!
+//! One server socket hosts many concurrent K=3 sessions over loopback
+//! TCP; every feature party is an in-process dialer thread. Because
+//! the meshes assemble concurrently, every dial takes the full
+//! epoch-routing path (`Join` → `NeedRejoin` → `Rejoin`), so the
+//! admission figure prices the reactor + routing machinery, not the
+//! lucky single-tenant shortcut. Steady-state rounds are fixed-size
+//! `EvalAck` ping-pongs — small enough that the number measures the
+//! plane's per-round overhead (thread handoffs, transport framing),
+//! not tensor bandwidth. Run via `cargo bench --bench bench_serve`.
+//!
+//! Reported:
+//!   - sessions/sec admitted: hosted sessions over the window from
+//!     serve() start to the last mesh assembling
+//!   - rounds/sec steady-state: aggregate lock-step rounds across all
+//!     sessions over the window from first admission to completion
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use celu_vfl::config::{RunConfig, WanProfile};
+use celu_vfl::protocol::Message;
+use celu_vfl::session::bootstrap::SessionDialer;
+use celu_vfl::session::server::{SessionHandle, SessionServer};
+use celu_vfl::session::PartyId;
+
+const SESSIONS: usize = 6;
+const ROUNDS: u64 = 200;
+const BASE_SEED: u64 = 1000;
+
+fn bench_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::quick();
+    cfg.parties = 3;
+    cfg.seed = seed;
+    cfg.wan = WanProfile::instant();
+    cfg.validate().expect("bench config invalid");
+    cfg
+}
+
+fn main() {
+    println!("== bench_serve ==");
+    println!(
+        "{SESSIONS} concurrent K=3 sessions, {ROUNDS} control-frame \
+         rounds each, one server process/port"
+    );
+
+    let mut server = SessionServer::bind("127.0.0.1:0")
+        .expect("bind")
+        .with_join_timeout(Duration::from_secs(60));
+    for i in 0..SESSIONS {
+        server.host(bench_cfg(BASE_SEED + i as u64)).expect("host");
+    }
+    let addr = server.local_addr().expect("addr").to_string();
+
+    // Dialer threads: 2 feature parties per session, all concurrent.
+    let mut dialers = Vec::new();
+    for i in 0..SESSIONS {
+        for party in 1u16..=2 {
+            let cfg = bench_cfg(BASE_SEED + i as u64);
+            let addr = addr.clone();
+            dialers.push(std::thread::spawn(move || {
+                let (link, _start) =
+                    SessionDialer::new(&addr, PartyId(party))
+                        .with_timeout(Duration::from_secs(60))
+                        .establish_resumable(&cfg)
+                        .expect("dial");
+                for round in 0..ROUNDS {
+                    match link.transport.recv().expect("recv") {
+                        Message::EvalAck { round: r } => {
+                            assert_eq!(r, round, "round skew")
+                        }
+                        other => panic!("unexpected {:?}", other.tag()),
+                    }
+                    link.transport
+                        .send(Message::EvalAck { round })
+                        .expect("send");
+                }
+            }));
+        }
+    }
+
+    let admissions: Arc<Mutex<Vec<Instant>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let admitted = admissions.clone();
+    let runner = move |h: SessionHandle| -> anyhow::Result<()> {
+        admitted.lock().unwrap().push(Instant::now());
+        for round in 0..ROUNDS {
+            for link in &h.links {
+                link.transport.send(Message::EvalAck { round })?;
+            }
+            for link in &h.links {
+                match link.transport.recv()? {
+                    Message::EvalAck { round: r } => {
+                        anyhow::ensure!(r == round, "round skew")
+                    }
+                    other => anyhow::bail!("unexpected {:?}", other.tag()),
+                }
+            }
+        }
+        Ok(())
+    };
+
+    let start = Instant::now();
+    let outcomes = server.serve(runner).expect("serve");
+    let end = Instant::now();
+    for d in dialers {
+        d.join().expect("dialer panicked");
+    }
+    assert_eq!(outcomes.len(), SESSIONS);
+    for o in &outcomes {
+        assert!(o.result.is_ok(), "session {} failed: {:?}",
+                o.label, o.result);
+    }
+
+    let admissions = admissions.lock().unwrap();
+    let first_admit = *admissions.iter().min().expect("admissions");
+    let last_admit = *admissions.iter().max().expect("admissions");
+    let admit_window = (last_admit - start).as_secs_f64().max(1e-9);
+    let steady_window = (end - first_admit).as_secs_f64().max(1e-9);
+    let total_rounds = (SESSIONS as u64 * ROUNDS) as f64;
+
+    println!(
+        "sessions/sec admitted:     {:>10.1}   ({SESSIONS} sessions in \
+         {:.3}s)",
+        SESSIONS as f64 / admit_window, admit_window
+    );
+    println!(
+        "rounds/sec steady-state:   {:>10.0}   ({total_rounds} rounds \
+         in {:.3}s, {} lanes each)",
+        total_rounds / steady_window, steady_window, 2
+    );
+    println!(
+        "wall total:                {:>10.3}s",
+        (end - start).as_secs_f64()
+    );
+}

@@ -1,0 +1,387 @@
+//! Multi-session service-plane smoke — one server process, two
+//! concurrent K = 3 sessions, five OS processes total.
+//!
+//! The CI proof of DESIGN.md §11's acceptance bar: a single
+//! `SessionServer` process hosts **two independent K=3 sessions to
+//! completion**, and every session's per-link wire/raw byte accounting
+//! is **identical** to an isolated single-session run of the same
+//! traffic. Run with no arguments, this binary re-executes itself as
+//! one server (hosting both sessions behind one port) plus four
+//! feature dialers (two per session, addressed by seed). Because two
+//! same-sized meshes assemble concurrently, a plain `Join` cannot be
+//! routed by content — every dialer exercises the full fallback:
+//! `Join` → `RejoinReject{NeedRejoin}` → epoch-bearing `Rejoin`
+//! routed exactly by seed-derived session epoch. The handshake lives
+//! on the raw socket, outside the transports, so multiplexed sessions
+//! must cost byte-for-byte what isolated ones cost — that is the
+//! assertion.
+//!
+//!     cargo run --release --example serve_multi           # orchestrate
+//!     cargo run --release --example serve_multi -- --role server
+//!     cargo run --release --example serve_multi -- --role feature \
+//!         --party 1 --seed 7 --connect 127.0.0.1:PORT
+
+use std::collections::BTreeMap;
+use std::io::BufRead;
+use std::sync::Arc;
+use std::time::Duration;
+
+use celu_vfl::compress::{self, CodecKind};
+use celu_vfl::config::{RunConfig, WanProfile};
+use celu_vfl::protocol::{outbound_stats, Lane, Message};
+use celu_vfl::session::bootstrap::SessionDialer;
+use celu_vfl::session::server::{SessionHandle, SessionServer};
+use celu_vfl::session::{inproc_star, Link, PartyId, LABEL_PARTY};
+use celu_vfl::tensor::Tensor;
+use celu_vfl::transport::Transport;
+use celu_vfl::util::cli::Cli;
+
+const ROUNDS: u64 = 8;
+const BATCH: usize = 16;
+const Z_DIM: usize = 4;
+const SEEDS: [u64; 2] = [7, 11];
+const JOIN_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// One hosted session's config: K=3, mixed per-link codecs (party 1
+/// fp16, party 2 identity) so parity covers the `Hello` handshake, and
+/// a per-session seed that derives the routing epoch AND varies the
+/// synthetic tensors — the two sessions must not be byte-identical to
+/// *each other* for the parity check to mean anything.
+fn smoke_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::quick();
+    cfg.parties = 3;
+    cfg.seed = seed;
+    cfg.wan = WanProfile::instant();
+    cfg.compress = CodecKind::Identity;
+    cfg.party_compress = vec![(1, CodecKind::Fp16)];
+    cfg.validate().expect("smoke config invalid");
+    cfg
+}
+
+/// Deterministic activations, distinct per (seed, party, round).
+fn synth(seed: u64, party: u16, round: u64) -> Tensor {
+    let v: Vec<f32> = (0..BATCH * Z_DIM)
+        .map(|i| {
+            ((i as f32 * 0.31 + party as f32 * 1.7
+              + round as f32 * 0.13 + seed as f32 * 0.57)
+                .sin())
+                * 0.8
+        })
+        .collect();
+    Tensor::f32(vec![BATCH, Z_DIM], v)
+}
+
+/// One feature party's traffic (same protocol as `tcp_mesh_k3`).
+fn feature_loop(seed: u64, party: PartyId,
+                transport: &Arc<dyn Transport>, requested: CodecKind)
+                -> anyhow::Result<()> {
+    let codec = if requested != CodecKind::Identity {
+        transport.send(Message::Hello {
+            codecs: compress::supported_mask(),
+        })?;
+        match transport.recv()? {
+            Message::Hello { codecs } => {
+                compress::negotiate(requested, Some(codecs))
+            }
+            other => anyhow::bail!("expected Hello, got {:?}", other.tag()),
+        }
+    } else {
+        CodecKind::Identity
+    };
+    for round in 0..ROUNDS {
+        let za = synth(seed, party.0, round);
+        let (msg, _za) = outbound_stats(codec, Lane::Activation, round, za)?;
+        transport.send(msg)?;
+        match transport.recv()?.into_plain()? {
+            Message::Derivative { round: r, .. } => {
+                anyhow::ensure!(r == round, "round skew on {party}");
+            }
+            other => anyhow::bail!("unexpected {:?}", other.tag()),
+        }
+    }
+    match transport.recv()? {
+        Message::Shutdown => Ok(()),
+        other => anyhow::bail!("expected Shutdown, got {:?}", other.tag()),
+    }
+}
+
+/// The label side of one session's traffic, over its mesh links.
+fn label_loop(cfg: &RunConfig, links: &[Link]) -> anyhow::Result<()> {
+    let mut lanes = Vec::new();
+    for l in links {
+        let requested = cfg.codec_for(l.peer.0);
+        let mut replay = None;
+        let codec = match l.transport.recv()? {
+            Message::Hello { codecs } => {
+                l.transport.send(Message::Hello {
+                    codecs: compress::supported_mask(),
+                })?;
+                compress::negotiate(requested, Some(codecs))
+            }
+            first => {
+                replay = Some(first);
+                CodecKind::Identity
+            }
+        };
+        lanes.push((l.peer, l.transport.clone(), codec, replay));
+    }
+    for round in 0..ROUNDS {
+        let mut zas = Vec::with_capacity(lanes.len());
+        for (peer, transport, _, replay) in lanes.iter_mut() {
+            let msg = match replay.take() {
+                Some(m) => m,
+                None => transport.recv()?,
+            };
+            match msg.into_plain()? {
+                Message::Activation { round: r, tensor } => {
+                    anyhow::ensure!(r == round, "skew on {peer}");
+                    zas.push(tensor);
+                }
+                other => anyhow::bail!("unexpected {:?}", other.tag()),
+            }
+        }
+        let zsum = Tensor::sum_f32(&zas)?;
+        let dza = Tensor::f32(
+            zsum.shape.clone(),
+            zsum.as_f32()?.iter().map(|x| 0.1 * x).collect::<Vec<_>>(),
+        );
+        for (_, transport, codec, _) in lanes.iter() {
+            let (dmsg, _) = outbound_stats(*codec, Lane::Derivative,
+                                           round, dza.clone())?;
+            transport.send(dmsg)?;
+        }
+    }
+    for (_, transport, _, _) in &lanes {
+        transport.send(Message::Shutdown)?;
+    }
+    Ok(())
+}
+
+/// Per-link rows keyed by (seed, src, dst) → (wire, raw, msgs).
+type LinkMap = BTreeMap<(u64, u16, u16), (u64, u64, u64)>;
+
+fn link_line(seed: u64, src: u16, dst: u16,
+             s: &celu_vfl::transport::LinkStats) -> String {
+    format!("LINK {seed} {src} {dst} {} {} {}",
+            s.bytes, s.raw_bytes, s.messages)
+}
+
+fn parse_link_lines(text: &str, into: &mut LinkMap) -> anyhow::Result<()> {
+    for line in text.lines() {
+        let Some(rest) = line.trim().strip_prefix("LINK ") else {
+            continue;
+        };
+        let f: Vec<u64> = rest
+            .split_whitespace()
+            .map(|x| x.parse::<u64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad LINK line '{line}': {e}"))?;
+        anyhow::ensure!(f.len() == 6, "bad LINK line '{line}'");
+        let prev = into.insert((f[0], f[1] as u16, f[2] as u16),
+                               (f[3], f[4], f[5]));
+        anyhow::ensure!(prev.is_none(),
+                        "duplicate LINK row s{} {}→{}", f[0], f[1], f[2]);
+    }
+    Ok(())
+}
+
+// ---- the roles -------------------------------------------------------------
+
+/// The one server process: both sessions behind one port, each driven
+/// by the protocol-level label loop on its own runner thread.
+fn run_server(listen: &str) -> anyhow::Result<()> {
+    let mut server = SessionServer::bind(listen)?
+        .with_join_timeout(JOIN_TIMEOUT);
+    for seed in SEEDS {
+        server.host(smoke_cfg(seed))?;
+    }
+    println!("ADDR {}", server.local_addr()?);
+    use std::io::Write;
+    std::io::stdout().flush()?;
+    let runner = |h: SessionHandle| -> anyhow::Result<()> {
+        label_loop(&h.cfg, &h.links)?;
+        let mut out = String::new();
+        for l in &h.links {
+            out.push_str(&link_line(h.cfg.seed, LABEL_PARTY.0, l.peer.0,
+                                    &l.transport.stats()));
+            out.push('\n');
+        }
+        // One write per session so concurrent runners can't interleave
+        // mid-line.
+        print!("{out}");
+        Ok(())
+    };
+    let outcomes = server.serve(runner)?;
+    for o in &outcomes {
+        if let Err(e) = &o.result {
+            anyhow::bail!("session {} failed: {e:#}", o.label);
+        }
+    }
+    println!("SERVED {}", outcomes.len());
+    Ok(())
+}
+
+fn run_feature(seed: u64, party: u16, connect: &str) -> anyhow::Result<()> {
+    let cfg = smoke_cfg(seed);
+    // establish_resumable, not plain establish: with two assembling
+    // sessions the server refuses content-routed Joins, and the dialer
+    // must fall back to the epoch-bearing Rejoin.
+    let (link, start) = SessionDialer::new(connect, PartyId(party))
+        .with_timeout(JOIN_TIMEOUT)
+        .establish_resumable(&cfg)?;
+    anyhow::ensure!(start == 0, "fresh dial resumed at round {start}");
+    feature_loop(seed, PartyId(party), &link.transport,
+                 cfg.codec_for(party))?;
+    println!("{}", link_line(seed, party, LABEL_PARTY.0,
+                             &link.transport.stats()));
+    Ok(())
+}
+
+/// Isolated reference for one seed: identical traffic over the in-proc
+/// star — what a single-session run of this mesh costs.
+fn run_inproc_reference(seed: u64) -> anyhow::Result<LinkMap> {
+    let cfg = smoke_cfg(seed);
+    let (label_links, feature_links) = inproc_star(&cfg);
+    let mut handles = Vec::new();
+    let mut feature_transports = Vec::new();
+    for (i, l) in feature_links.into_iter().enumerate() {
+        let party = PartyId(i as u16 + 1);
+        let transport = l.transport.clone();
+        let requested = cfg.codec_for(party.0);
+        feature_transports.push((party, transport.clone()));
+        handles.push(std::thread::spawn(move || {
+            feature_loop(seed, party, &transport, requested)
+        }));
+    }
+    label_loop(&cfg, &label_links)?;
+    for h in handles {
+        h.join().expect("feature thread panicked")?;
+    }
+    let mut map = LinkMap::new();
+    for l in &label_links {
+        let s = l.transport.stats();
+        map.insert((seed, LABEL_PARTY.0, l.peer.0),
+                   (s.bytes, s.raw_bytes, s.messages));
+    }
+    for (party, t) in feature_transports {
+        let s = t.stats();
+        map.insert((seed, party.0, LABEL_PARTY.0),
+                   (s.bytes, s.raw_bytes, s.messages));
+    }
+    Ok(map)
+}
+
+// ---- orchestrator ----------------------------------------------------------
+
+fn orchestrate() -> anyhow::Result<()> {
+    use std::process::{Command, Stdio};
+
+    let mut expected = LinkMap::new();
+    for seed in SEEDS {
+        expected.extend(run_inproc_reference(seed)?);
+    }
+    println!("isolated references complete ({} links across {} sessions)",
+             expected.len(), SEEDS.len());
+
+    let exe = std::env::current_exe()?;
+    let mut server = Command::new(&exe)
+        .args(["--role", "server", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let mut server_out = std::io::BufReader::new(
+        server.stdout.take().expect("server stdout"));
+    let mut addr = String::new();
+    loop {
+        let mut line = String::new();
+        anyhow::ensure!(
+            server_out.read_line(&mut line)? > 0,
+            "server process exited before announcing its address"
+        );
+        if let Some(a) = line.trim().strip_prefix("ADDR ") {
+            addr = a.to_string();
+            break;
+        }
+    }
+    println!("server at {addr}; spawning 4 feature processes \
+              (2 sessions x 2 parties, interleaved)");
+
+    // Interleave the two sessions' dialers so both meshes assemble
+    // concurrently — the scenario single-tenant listeners cannot serve.
+    let features: Vec<_> = [(SEEDS[0], 1u16), (SEEDS[1], 1),
+                            (SEEDS[0], 2), (SEEDS[1], 2)]
+        .iter()
+        .map(|&(seed, p)| {
+            Command::new(&exe)
+                .args(["--role", "feature",
+                       "--party", &p.to_string(),
+                       "--seed", &seed.to_string(),
+                       "--connect", addr.as_str()])
+                .stdout(Stdio::piped())
+                .spawn()
+        })
+        .collect::<Result<_, _>>()?;
+
+    let mut got = LinkMap::new();
+    for (i, f) in features.into_iter().enumerate() {
+        let out = f.wait_with_output()?;
+        anyhow::ensure!(out.status.success(),
+                        "feature process {} failed", i + 1);
+        parse_link_lines(&String::from_utf8_lossy(&out.stdout), &mut got)?;
+    }
+    let mut rest = String::new();
+    std::io::Read::read_to_string(&mut server_out, &mut rest)?;
+    anyhow::ensure!(server.wait()?.success(), "server process failed");
+    anyhow::ensure!(rest.contains(&format!("SERVED {}", SEEDS.len())),
+                    "server did not report both sessions complete");
+    parse_link_lines(&rest, &mut got)?;
+
+    // ---- the acceptance assertion ----------------------------------------
+    println!("\n{:<14} {:>12} {:>12} {:>6}   (multiplexed == isolated?)",
+             "session/link", "wire B", "raw B", "msgs");
+    for (&(seed, src, dst), &(bytes, raw, msgs)) in &expected {
+        let tcp = got.get(&(seed, src, dst));
+        println!("s{seed} {src}->{dst:<7} {bytes:>12} {raw:>12} \
+                  {msgs:>6}   {}",
+                 if tcp == Some(&(bytes, raw, msgs)) { "OK" }
+                 else { "MISMATCH" });
+    }
+    anyhow::ensure!(
+        got == expected,
+        "per-link byte accounting diverged between the multiplexed \
+         server and isolated runs:\n  server:   {got:?}\n  isolated: \
+         {expected:?}"
+    );
+    // The two sessions carried different traffic (different seeds), so
+    // matching totals are not a coincidence of symmetry.
+    anyhow::ensure!(
+        got[&(SEEDS[0], 0, 2)] != got[&(SEEDS[1], 0, 2)],
+        "sessions produced identical bytes — parity check is vacuous"
+    );
+    println!(
+        "\nmulti-session smoke OK: 1 server process, {} concurrent K=3 \
+         sessions, {} links byte-identical to isolated runs",
+        SEEDS.len(), got.len()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+    let cli = Cli::new("serve_multi",
+                       "multi-session server smoke (five OS processes)")
+        .opt("role", "orchestrate", "orchestrate | server | feature")
+        .opt("listen", "127.0.0.1:0", "server: bind address")
+        .opt("connect", "127.0.0.1:0", "feature: server address")
+        .opt("party", "1", "feature: party id (1 or 2)")
+        .opt("seed", "7", "feature: session seed (selects the session)");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli.parse(&argv)?;
+    match args.get("role") {
+        "orchestrate" => orchestrate(),
+        "server" => run_server(args.get("listen")),
+        "feature" => run_feature(args.get_u64("seed")?,
+                                 args.get_usize("party")? as u16,
+                                 args.get("connect")),
+        other => anyhow::bail!("unknown role '{other}'"),
+    }
+}

@@ -162,6 +162,12 @@ pub struct RunConfig {
     /// Write a snapshot every this many communication rounds
     /// (`--checkpoint-every`; only meaningful with `checkpoint_dir`).
     pub checkpoint_every: usize,
+    /// Shared token gating the observability endpoints (`/metrics`,
+    /// `/watch`) on the session port: requests must carry
+    /// `Authorization: Bearer <token>` or get a 401. Empty (default)
+    /// leaves the plane open. Join/Rejoin are never gated — parties
+    /// authenticate by session epoch, not by header.
+    pub metrics_token: String,
 }
 
 impl RunConfig {
@@ -195,6 +201,7 @@ impl RunConfig {
             straggler_wait_ms: 0,
             checkpoint_dir: String::new(),
             checkpoint_every: 100,
+            metrics_token: String::new(),
         }
     }
 
@@ -365,6 +372,8 @@ impl RunConfig {
                                        &base.checkpoint_dir)?,
             checkpoint_every: doc.usize_or("checkpoint_every",
                                            base.checkpoint_every)?,
+            metrics_token: doc.str_or("metrics_token",
+                                      &base.metrics_token)?,
         };
         cfg.validate()?;
         Ok(cfg)

@@ -49,7 +49,7 @@ use crate::session::supervisor::{session_epoch, LaneInput, LaneSet,
 use crate::session::Link;
 use crate::tensor::Tensor;
 use crate::util::stats::Ema;
-use crate::workset::{MeshWorkset, WorksetStats};
+use crate::workset::{CacheBudget, MeshWorkset, WorksetStats};
 
 use super::{eval_batch_count, Ctrl, BUBBLE_PARK};
 
@@ -70,6 +70,10 @@ pub struct LabelRunOpts {
     /// a lane-set-private registry; `Session::run_label_with` injects
     /// the session's own.
     pub registry: Option<Arc<Registry>>,
+    /// Charge this run's workset cache against a budget shared with
+    /// other sessions in the same process (the multi-session server —
+    /// DESIGN.md §11). `None` keeps the historic per-run W bound only.
+    pub cache_budget: Option<Arc<CacheBudget>>,
 }
 
 /// Everything the label party reports after a run. Lifecycle events
@@ -109,7 +113,8 @@ pub fn run_label_party(
 ) -> anyhow::Result<LabelPartyReport> {
     anyhow::ensure!(!links.is_empty(),
                     "label party needs at least one feature link");
-    let LabelRunOpts { readmission, resume, registry } = opts;
+    let LabelRunOpts { readmission, resume, registry, cache_budget } =
+        opts;
     let batch = set.manifest.batch;
     let runtime = Arc::new(Mutex::new(PartyBRuntime::new(
         set.clone(),
@@ -152,12 +157,16 @@ pub fn run_label_party(
         }
         None => 0,
     };
-    let workset = Arc::new(MeshWorkset::new(
+    let mut workset = MeshWorkset::new(
         links.len(),
         cfg.effective_w(),
         cfg.effective_r().max(1),
         cfg.sampling(),
-    ));
+    );
+    if let Some(budget) = cache_budget {
+        workset = workset.with_budget(budget);
+    }
+    let workset = Arc::new(workset);
     let ctrl = Arc::new(Ctrl::default());
     let cosine = Arc::new(Mutex::new(CosineRecorder::default()));
     let loss_ema = Arc::new(Mutex::new(Ema::new(0.95)));
@@ -218,12 +227,19 @@ pub fn run_label_party(
         lanes = lanes.with_registry(reg);
     }
 
+    // Trainer instruments (DESIGN.md §10): round wall-clock and cache
+    // fill, exported by both the scrape and watch paths. Names are
+    // pinned by the Prometheus golden fixture.
+    let round_seconds = lanes.registry().histogram("celu_round_seconds");
+    let workset_fill = lanes.registry().gauge("celu_workset_fill");
+
     let result: anyhow::Result<()> = (|| {
         lanes.handshake(
             cfg,
             resume.as_ref().map(|s| s.links.as_slice()),
         )?;
         for round in start_round..cfg.max_rounds as u64 {
+            let round_start = Instant::now();
             let idx = cursor.next_indices();
             let (xb, y) = gather_b_with(&train, &idx, &mut scratch);
             // Collect this round's activation from every lane: fresh
@@ -280,6 +296,8 @@ pub fn run_label_party(
             }
             lanes.send_staged(round)?;
             comm_rounds = round + 1;
+            round_seconds.observe(round_start.elapsed().as_secs_f64());
+            workset_fill.set(workset.fill());
 
             // Checkpoint lane (DESIGN.md §8): snapshot after the round
             // completes, so a restart replays from a round boundary.

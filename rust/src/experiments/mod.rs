@@ -16,6 +16,7 @@
 
 pub mod ablation;
 pub mod endtoend;
+pub mod serve;
 pub mod tcp;
 pub mod theory;
 

@@ -1,0 +1,147 @@
+//! Multi-session deployment: `celu-vfl serve` — one label-party
+//! process hosting many concurrent training sessions (DESIGN.md §11).
+//!
+//! Where `celu-vfl party --role label` is a single-tenant server (bind,
+//! admit one mesh, train, exit), `serve` binds once and multiplexes:
+//! every session in `--sessions` gets its own registry, its own
+//! re-admission point, and its own label-party training loop on a
+//! dedicated thread, while one reactor routes all of their bootstraps,
+//! rejoins and observability scrapes. Sessions share the base config
+//! and differ by seed — the seed derives the session epoch that
+//! `Rejoin` frames route by, so every dialer must be launched with the
+//! matching `--seed`. Worksets across sessions share one optional
+//! global [`CacheBudget`] (`--cache-budget`), bounding the process's
+//! total cached rounds while each session keeps its own W bound.
+//!
+//!     celu-vfl serve --listen 0.0.0.0:7000 --parties 3 --sessions 7,11
+//!     celu-vfl party --role feature --parties 3 --party 1 \
+//!         --seed 7 --connect host:7000     # one dialer per session id
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::RunConfig;
+use crate::coordinator::label_party::LabelRunOpts;
+use crate::coordinator::trainer::{load_data, load_set};
+use crate::session::server::{SessionHandle, SessionServer};
+use crate::session::{SessionBuilder, LABEL_PARTY};
+use crate::workset::CacheBudget;
+
+/// Parse the `--sessions` spec: either a session *count* (`"3"` hosts
+/// seeds `base..base+2`) or an explicit comma-separated seed list
+/// (`"7,11,13"`).
+pub fn parse_sessions(spec: &str, base_seed: u64)
+                      -> anyhow::Result<Vec<u64>> {
+    let seeds: Vec<u64> = if spec.contains(',') {
+        spec.split(',')
+            .map(|s| s.trim().parse::<u64>().map_err(|e| {
+                anyhow::anyhow!("bad seed '{s}' in --sessions: {e}")
+            }))
+            .collect::<anyhow::Result<_>>()?
+    } else {
+        let n: u64 = spec.trim().parse().map_err(|e| {
+            anyhow::anyhow!("--sessions must be a count or a \
+                             comma-separated seed list, got '{spec}': {e}")
+        })?;
+        anyhow::ensure!(n >= 1, "--sessions must host at least one");
+        (0..n).map(|i| base_seed + i).collect()
+    };
+    anyhow::ensure!(!seeds.is_empty(), "--sessions names no sessions");
+    Ok(seeds)
+}
+
+/// Host one training session per seed on a single server socket and
+/// run them all to completion.
+pub fn run_serve(cfg: &RunConfig, listen: &str, sessions: &str,
+                 join_timeout: Duration, cache_budget: usize)
+                 -> anyhow::Result<()> {
+    cfg.validate()?;
+    let seeds = parse_sessions(sessions, cfg.seed)?;
+    let mut server = SessionServer::bind(listen)?
+        .with_join_timeout(join_timeout)
+        .with_auth_token(&cfg.metrics_token);
+    if cache_budget > 0 {
+        server = server.with_cache_budget(CacheBudget::new(cache_budget));
+    }
+    for &seed in &seeds {
+        let mut scfg = cfg.clone();
+        scfg.seed = seed;
+        let epoch = server.host(scfg)?;
+        log::info!("hosting session seed={seed} epoch={epoch:#010x}");
+    }
+    println!("serving {} sessions on {}", seeds.len(),
+             server.local_addr()?);
+    let start = Instant::now();
+    let outcomes = server.serve(run_hosted_label)?;
+    let wall = start.elapsed().as_secs_f64();
+    let ok = outcomes.iter().filter(|o| o.result.is_ok()).count();
+    println!(
+        "served {}/{} sessions to completion in {wall:.1}s",
+        ok, outcomes.len()
+    );
+    for o in &outcomes {
+        if let Err(e) = &o.result {
+            log::warn!("session {} failed: {e:#}", o.label);
+        }
+    }
+    anyhow::ensure!(ok == outcomes.len(),
+                    "{} of {} sessions failed",
+                    outcomes.len() - ok, outcomes.len());
+    Ok(())
+}
+
+/// The per-session runner: exactly the single-tenant label arm of
+/// `celu-vfl party`, fed from a [`SessionHandle`] instead of an owned
+/// listener.
+fn run_hosted_label(h: SessionHandle) -> anyhow::Result<()> {
+    let set = load_set(&h.cfg)?;
+    let data = load_data(&h.cfg, &set)?;
+    let mut b = SessionBuilder::new(&h.cfg, LABEL_PARTY)
+        .with_registry(h.registry.clone());
+    for l in h.links {
+        b = b.link_full(l);
+    }
+    let session = b.build()?;
+    let report = session.run_label_with(
+        set,
+        Arc::new(data.train_b),
+        Arc::new(data.test_b),
+        LabelRunOpts {
+            readmission: Some(h.readmission),
+            resume: None,
+            registry: None, // run_label_with injects the session's own
+            cache_budget: h.cache_budget,
+        },
+    )?;
+    let best = report.series.iter().map(|p| p.auc).fold(0.0f64, f64::max);
+    println!(
+        "SESSION {} done: seed={} rounds={} local_updates={} \
+         best_auc={best:.4} stop={:?} rejoins={}",
+        h.label, h.cfg.seed, report.comm_rounds, report.local_updates,
+        report.stop_reason, report.rejoins
+    );
+    for row in h.registry.link_rows() {
+        let s = row.stats;
+        println!(
+            "SESSION {} LINK {} {} {} {} {}",
+            h.label, row.src.0, row.dst.0, s.bytes, s.raw_bytes,
+            s.messages
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sessions_spec_parses_counts_and_seed_lists() {
+        assert_eq!(parse_sessions("3", 10).unwrap(), vec![10, 11, 12]);
+        assert_eq!(parse_sessions("7,11, 13", 10).unwrap(),
+                   vec![7, 11, 13]);
+        assert!(parse_sessions("0", 10).is_err());
+        assert!(parse_sessions("x", 10).is_err());
+        assert!(parse_sessions("7,,9", 10).is_err());
+    }
+}

@@ -66,7 +66,8 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             let registry = Registry::new();
             let mut listener = SessionListener::bind(listen)?
                 .with_timeout(join_timeout)
-                .with_metrics(registry.clone());
+                .with_metrics(registry.clone())
+                .with_auth_token(&cfg.metrics_token);
             let snapshot = if resume != "-" && !resume.is_empty() {
                 let snap = SessionSnapshot::load(resume)?;
                 log::info!(
@@ -103,6 +104,7 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                     // run_label_with injects the session registry —
                     // the same one the listener serves scrapes from.
                     registry: None,
+                    cache_budget: None,
                 },
             )?;
             let best = report

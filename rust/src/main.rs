@@ -6,6 +6,10 @@
 //!   party   run one party of a K-process TCP session (the label party
 //!           is the session server; feature parties dial in and claim
 //!           an id via the Join handshake — DESIGN.md §7)
+//!   serve   host many concurrent sessions behind one listener: the
+//!           multi-session service plane routes every session's
+//!           bootstrap, rejoins and scrapes by session epoch
+//!           (DESIGN.md §11)
 //!   watch   attach to a running session's observability plane and
 //!           render live per-link gauges from its tag-14 metric stream
 //!           (DESIGN.md §10)
@@ -35,11 +39,13 @@ fn main() {
     let code = match argv.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&argv[1..]),
         Some("party") => cmd_party(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
         Some("watch") => cmd_watch(&argv[1..]),
         Some("info") => cmd_info(&argv[1..]),
         _ => {
             eprintln!(
-                "usage: celu-vfl <train|party|watch|info> [options]\n\
+                "usage: celu-vfl <train|party|serve|watch|info> \
+                 [options]\n\
                  run `celu-vfl <cmd> --help` for details"
             );
             Err(anyhow::anyhow!("no subcommand"))
@@ -220,6 +226,37 @@ fn cmd_party(argv: &[String]) -> anyhow::Result<()> {
         party as u16,
         std::time::Duration::from_secs_f64(timeout),
         args.get("resume"),
+    )
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    let cli = train_cli("celu-vfl serve",
+                        "host many concurrent sessions on one listener")
+        .opt("listen", "127.0.0.1:7001",
+             "address the multi-session server binds")
+        .opt("sessions", "1",
+             "what to host: a session count (seeds --seed, --seed+1, …) \
+              or a comma-separated seed list ('7,11,13') — dialers must \
+              be launched with the matching --seed")
+        .opt("join-timeout", "30",
+             "seconds each session's mesh gets to assemble")
+        .opt("cache-budget", "0",
+             "global workset residency cap in cached rounds×lanes \
+              shared by every hosted session (0 = per-session W \
+              bounds only)");
+    let args = cli.parse(argv)?;
+    let cfg = load_config(&args)?;
+    let timeout = args.get_f64("join-timeout")?;
+    anyhow::ensure!(
+        timeout > 0.0 && timeout <= 86_400.0,
+        "--join-timeout must be in (0, 86400] seconds, got {timeout}"
+    );
+    celu_vfl::experiments::serve::run_serve(
+        &cfg,
+        args.get("listen"),
+        args.get("sessions"),
+        std::time::Duration::from_secs_f64(timeout),
+        args.get_usize("cache-budget")?,
     )
 }
 

@@ -11,6 +11,12 @@
 //! generically registered counter / gauge / histogram in name order.
 //! Histograms export as `summary`-style `_count` / `_sum` lines plus a
 //! `_max` convenience line.
+//!
+//! A multi-session server scrapes many registries off one port:
+//! [`render_labeled`] injects a `session="<id>"` label into every
+//! sample so the concatenated exposition keeps each mesh's series
+//! distinct. [`render`] is the single-session exposition, byte-for-byte
+//! unchanged.
 
 use std::fmt::Write as _;
 use std::sync::Mutex;
@@ -31,20 +37,57 @@ fn num(v: f64) -> String {
     format!("{v}")
 }
 
+/// Inject `session="<id>"` as the first label of a (possibly already
+/// labeled) sample name. `None` is the identity — the single-session
+/// exposition carries no session label.
+fn labeled(name: &str, session: Option<&str>) -> String {
+    match session {
+        None => name.to_string(),
+        Some(s) => match name.split_once('{') {
+            Some((base, rest)) => {
+                format!("{base}{{session=\"{s}\",{rest}")
+            }
+            None => format!("{name}{{session=\"{s}\"}}"),
+        },
+    }
+}
+
+/// Move a summary suffix inside the label block: `foo{a="b"}` +
+/// `_count` renders as `foo_count{a="b"}`; unlabeled names just get
+/// the suffix appended.
+fn suffixed(name: &str, suffix: &str) -> String {
+    match name.split_once('{') {
+        Some((base, rest)) => format!("{base}{suffix}{{{rest}"),
+        None => format!("{name}{suffix}"),
+    }
+}
+
 /// Render the registry as Prometheus text exposition, version 0.0.4.
 pub fn render(registry: &Registry) -> String {
+    render_labeled(registry, None)
+}
+
+/// [`render`] with an optional `session="<id>"` label injected into
+/// every sample line — how a [`SessionServer`](crate::session::server)
+/// exposes many concurrent meshes on one `/metrics` endpoint without
+/// their series colliding. The `# HELP`/`# TYPE` header lines name the
+/// unlabeled family, as the exposition format requires.
+pub fn render_labeled(registry: &Registry, session: Option<&str>)
+                      -> String {
     let snap = registry.snapshot();
     let mut out = String::with_capacity(1024);
 
     out.push_str("# HELP celu_session_round Current communication \
                   round of the session.\n");
     out.push_str("# TYPE celu_session_round gauge\n");
-    let _ = writeln!(out, "celu_session_round {}", snap.round);
+    let _ = writeln!(out, "{} {}",
+                     labeled("celu_session_round", session), snap.round);
 
     out.push_str("# HELP celu_events_dropped_total Lifecycle events \
                   dropped past the retention cap.\n");
     out.push_str("# TYPE celu_events_dropped_total counter\n");
-    let _ = writeln!(out, "celu_events_dropped_total {}",
+    let _ = writeln!(out, "{} {}",
+                     labeled("celu_events_dropped_total", session),
                      registry.dropped_events());
 
     if !snap.links.is_empty() {
@@ -71,8 +114,13 @@ pub fn render(registry: &Registry) -> String {
             let _ = writeln!(out, "# HELP {} {}", f.name, f.help);
             let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind);
             for row in &snap.links {
-                let labels = format!("{{src=\"{}\",dst=\"{}\"}}",
-                                     row.src.0, row.dst.0);
+                let labels = match session {
+                    Some(s) => format!(
+                        "{{session=\"{s}\",src=\"{}\",dst=\"{}\"}}",
+                        row.src.0, row.dst.0),
+                    None => format!("{{src=\"{}\",dst=\"{}\"}}",
+                                    row.src.0, row.dst.0),
+                };
                 let value = match f.name {
                     "celu_link_messages_total" =>
                         row.stats.messages.to_string(),
@@ -101,7 +149,7 @@ pub fn render(registry: &Registry) -> String {
             last_base = base_name(name);
             let _ = writeln!(out, "# TYPE {last_base} counter");
         }
-        let _ = writeln!(out, "{name} {value}");
+        let _ = writeln!(out, "{} {value}", labeled(name, session));
     }
     let mut last_base = "";
     for (name, value) in &snap.gauges {
@@ -109,13 +157,18 @@ pub fn render(registry: &Registry) -> String {
             last_base = base_name(name);
             let _ = writeln!(out, "# TYPE {last_base} gauge");
         }
-        let _ = writeln!(out, "{name} {}", num(*value));
+        let _ = writeln!(out, "{} {}", labeled(name, session),
+                         num(*value));
     }
     for (name, h) in &snap.histograms {
         let _ = writeln!(out, "# TYPE {} summary", base_name(name));
-        let _ = writeln!(out, "{name}_count {}", h.count);
-        let _ = writeln!(out, "{name}_sum {}", num(h.sum));
-        let _ = writeln!(out, "{name}_max {}", num(h.max));
+        let name = labeled(name, session);
+        let _ = writeln!(out, "{} {}", suffixed(&name, "_count"),
+                         h.count);
+        let _ = writeln!(out, "{} {}", suffixed(&name, "_sum"),
+                         num(h.sum));
+        let _ = writeln!(out, "{} {}", suffixed(&name, "_max"),
+                         num(h.max));
     }
     out
 }
@@ -216,6 +269,45 @@ celu_round_seconds_sum 1
 celu_round_seconds_max 0.75
 ";
         assert_eq!(render(&reg), expected);
+    }
+
+    #[test]
+    fn labeled_exposition_injects_session_into_every_sample() {
+        let reg = Registry::new();
+        reg.set_round(3);
+        let a = LinkHandles::detached();
+        a.charge(LinkStats { messages: 2, bytes: 100, raw_bytes: 100,
+                             busy: Duration::ZERO });
+        reg.bind_link(PartyId(1), PartyId(0), &a);
+        reg.emit(&SessionEvent::PeerLost { party: PartyId(1), round: 1 });
+        reg.gauge("celu_workset_fill").set(0.25);
+        reg.histogram("celu_round_seconds").observe(0.5);
+
+        let text = render_labeled(&reg, Some("1a2b3c4d"));
+        // Every sample line carries the session label; HELP/TYPE
+        // headers name the unlabeled family.
+        assert!(text.contains(
+            "celu_session_round{session=\"1a2b3c4d\"} 3\n"));
+        assert!(text.contains("# TYPE celu_session_round gauge\n"));
+        assert!(text.contains(
+            "celu_events_dropped_total{session=\"1a2b3c4d\"} 0\n"));
+        assert!(text.contains(
+            "celu_link_messages_total{session=\"1a2b3c4d\",src=\"1\",\
+             dst=\"0\"} 2\n"));
+        // An already-labeled name gets the session label prepended.
+        assert!(text.contains(
+            "celu_events_total{session=\"1a2b3c4d\",\
+             kind=\"peer_lost\"} 1\n"));
+        assert!(text.contains(
+            "celu_workset_fill{session=\"1a2b3c4d\"} 0.25\n"));
+        // Summary suffixes land on the base name, not after the label
+        // block.
+        assert!(text.contains(
+            "celu_round_seconds_count{session=\"1a2b3c4d\"} 1\n"));
+        assert!(text.contains(
+            "celu_round_seconds_max{session=\"1a2b3c4d\"} 0.5\n"));
+        // And the unlabeled render is the labeled render with no label.
+        assert_eq!(render(&reg), render_labeled(&reg, None));
     }
 
     #[test]

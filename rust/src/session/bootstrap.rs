@@ -66,17 +66,17 @@ pub const DEFAULT_JOIN_TIMEOUT: Duration = Duration::from_secs(30);
 /// anything longer is not a session peer, and the cap is checked
 /// before the body buffer is allocated (the hostile-header discipline
 /// of the protocol layer, applied to the socket read).
-const MAX_BOOTSTRAP_FRAME: usize = 64;
+pub(crate) const MAX_BOOTSTRAP_FRAME: usize = 64;
 
 /// Poll interval of the accept loop while waiting for joiners.
-const ACCEPT_POLL: Duration = Duration::from_millis(10);
+pub(crate) const ACCEPT_POLL: Duration = Duration::from_millis(10);
 
 /// Cap on how long one connection's `Join`/`Rejoin` frame read may
 /// take. Frame reads run on a bounded admit pool (see
 /// [`ADMIT_WORKERS`]), so a connection that never speaks (health-check
 /// probe, port scanner) ties up one pool slot for at most this long —
 /// never the accept loop itself.
-const JOIN_READ_TIMEOUT: Duration = Duration::from_secs(2);
+pub(crate) const JOIN_READ_TIMEOUT: Duration = Duration::from_secs(2);
 
 /// Bound on concurrently-vetted joiners. The accept loop used to vet
 /// serially, so at K=64 cold start one slow peer (or a stream of junk
@@ -90,7 +90,7 @@ const ADMIT_WORKERS: usize = 8;
 /// Cap on one HTTP-shaped request's header block on the session port.
 /// A scrape request is a few dozen bytes; anything bigger is not a
 /// scraper.
-const MAX_HTTP_REQUEST: usize = 1024;
+pub(crate) const MAX_HTTP_REQUEST: usize = 1024;
 
 /// Cadence of the `/watch` push stream: one cumulative tag-14
 /// [`Message::Metrics`] frame per tick.
@@ -184,6 +184,12 @@ pub struct SessionListener {
     /// stream. `None` treats HTTP-shaped traffic as hostile, exactly as
     /// before the observability plane existed.
     metrics: Option<Arc<Registry>>,
+    /// Shared-token gate on the observability endpoints: when set,
+    /// `GET /metrics` / `GET /watch` must carry
+    /// `Authorization: Bearer <token>` or they get a 401. Sessions
+    /// (Join/Rejoin frames) are never gated — parties authenticate by
+    /// epoch, not by header.
+    token: Option<String>,
 }
 
 /// Outcome of session-level vetting: admit (with the ack to send), or
@@ -210,6 +216,7 @@ impl SessionListener {
             timeout: DEFAULT_JOIN_TIMEOUT,
             resume: None,
             metrics: None,
+            token: None,
         })
     }
 
@@ -227,6 +234,20 @@ impl SessionListener {
     /// any frame logic runs.
     pub fn with_metrics(mut self, registry: Arc<Registry>) -> Self {
         self.metrics = Some(registry);
+        self
+    }
+
+    /// Gate the observability endpoints behind a shared token
+    /// (`Authorization: Bearer <token>`): unauthenticated `/metrics`
+    /// and `/watch` requests get a 401. An empty token means open —
+    /// the pre-auth behaviour — so a config's `metrics_token = ""`
+    /// default plumbs through as a no-op.
+    pub fn with_auth_token(mut self, token: &str) -> Self {
+        self.token = if token.is_empty() {
+            None
+        } else {
+            Some(token.to_string())
+        };
         self
     }
 
@@ -406,6 +427,7 @@ impl SessionListener {
                 let tx = result_tx.clone();
                 let active = active.clone();
                 let metrics = self.metrics.clone();
+                let token = self.token.clone();
                 std::thread::spawn(move || {
                     let res = read_first_contact(stream, deadline);
                     active.fetch_sub(1, Ordering::SeqCst);
@@ -413,21 +435,22 @@ impl SessionListener {
                         Ok(FirstContact::Frame(msg, stream)) => {
                             Ok((msg, stream))
                         }
-                        Ok(FirstContact::Http { path, stream }) => {
+                        Ok(FirstContact::Http { req, stream }) => {
                             match metrics {
                                 // Served entirely on this worker;
                                 // nothing reaches the joined map. No
                                 // /watch during bootstrap: the mesh is
                                 // still assembling (503).
                                 Some(reg) => {
-                                    serve_observability(&path, stream,
-                                                        &reg, None);
+                                    serve_observability(
+                                        &req, stream, &reg, None,
+                                        token.as_deref());
                                     return;
                                 }
                                 None => Err(anyhow::anyhow!(
-                                    "HTTP-shaped request ({path}) on a \
+                                    "HTTP-shaped request ({}) on a \
                                      session port with no metrics \
-                                     registry attached"
+                                     registry attached", req.path
                                 )),
                             }
                         }
@@ -484,9 +507,9 @@ impl SessionListener {
     /// session spans more than two parties), carrying each peer's
     /// join-time codec mask so the coordinators can skip the
     /// first-round `Hello` exchange.
-    fn wrap_links(cfg: &RunConfig,
-                  joined: BTreeMap<u16, (TcpStream, u32)>)
-                  -> anyhow::Result<Vec<Link>> {
+    pub(crate) fn wrap_links(cfg: &RunConfig,
+                             joined: BTreeMap<u16, (TcpStream, u32)>)
+                             -> anyhow::Result<Vec<Link>> {
         let v2 = cfg.parties > 2;
         joined
             .into_iter()
@@ -518,9 +541,9 @@ impl SessionListener {
         };
         let joined = self.establish_streams(cfg)?;
         let links = Self::wrap_links(cfg, joined)?;
-        let readmission = Readmission::spawn(
+        let readmission = Readmission::spawn_with_token(
             self.listener, cfg.parties as u16, epoch,
-            self.metrics.clone())?;
+            self.metrics.clone(), self.token.clone())?;
         Ok((links, readmission, epoch, start_round))
     }
 }
@@ -531,17 +554,25 @@ impl SessionListener {
 /// [`MAX_BOOTSTRAP_FRAME`] (so bytes 1–3 are always zero), while an
 /// HTTP observability request opens with the ASCII `GET ` — which read
 /// as a length word is ~540 MB, unambiguous by arithmetic alone.
-enum FirstContact {
+pub(crate) enum FirstContact {
     /// A decoded bootstrap frame: the historic Join/Rejoin path.
     Frame(Message, TcpStream),
     /// An HTTP-shaped request (`GET <path> …`), header block consumed.
-    Http { path: String, stream: TcpStream },
+    Http { req: HttpRequest, stream: TcpStream },
+}
+
+/// The parts of an observability request the session port acts on: the
+/// request path and, for the shared-token gate, whatever the client
+/// sent in its `Authorization` header (verbatim, scheme included).
+pub(crate) struct HttpRequest {
+    pub(crate) path: String,
+    pub(crate) auth: Option<String>,
 }
 
 /// Read one connection's opening bootstrap frame — or HTTP request —
 /// on an admit worker.
-fn read_first_contact(mut stream: TcpStream, deadline: Instant)
-                      -> anyhow::Result<FirstContact> {
+pub(crate) fn read_first_contact(mut stream: TcpStream, deadline: Instant)
+                                 -> anyhow::Result<FirstContact> {
     // Accepted sockets must not inherit the listener's non-blocking
     // mode. The whole read is bounded by JOIN_READ_TIMEOUT (not the
     // remaining join window): a peer that never speaks — or trickles
@@ -552,8 +583,8 @@ fn read_first_contact(mut stream: TcpStream, deadline: Instant)
     read_exact_deadline(&mut stream, &mut head, frame_deadline)
         .map_err(|e| anyhow::anyhow!("reading bootstrap frame: {e:#}"))?;
     if &head == b"GET " {
-        let path = read_http_request(&mut stream, frame_deadline)?;
-        return Ok(FirstContact::Http { path, stream });
+        let req = read_http_request(&mut stream, frame_deadline)?;
+        return Ok(FirstContact::Http { req, stream });
     }
     let len = u32::from_le_bytes(head) as usize;
     let msg = recv_bootstrap_body(&mut stream, len, frame_deadline)?;
@@ -561,12 +592,13 @@ fn read_first_contact(mut stream: TcpStream, deadline: Instant)
 }
 
 /// Consume an HTTP request whose `GET ` prefix was already read off the
-/// socket: capture the path from the request line, then drain the rest
-/// of the header block — bounded by [`MAX_HTTP_REQUEST`] and the frame
-/// deadline, so an HTTP-shaped byte-trickler is no more able to wedge
-/// a worker slot than a mute bootstrap probe is.
+/// socket: capture the path from the request line and the
+/// `Authorization` header (if any) from the header block — bounded by
+/// [`MAX_HTTP_REQUEST`] and the frame deadline, so an HTTP-shaped
+/// byte-trickler is no more able to wedge a worker slot than a mute
+/// bootstrap probe is.
 fn read_http_request(stream: &mut TcpStream, deadline: Instant)
-                     -> anyhow::Result<String> {
+                     -> anyhow::Result<HttpRequest> {
     let mut buf: Vec<u8> = Vec::with_capacity(128);
     let mut byte = [0u8; 1];
     while !buf.ends_with(b"\r\n\r\n") {
@@ -579,23 +611,47 @@ fn read_http_request(stream: &mut TcpStream, deadline: Instant)
             .map_err(|e| anyhow::anyhow!("reading HTTP request: {e:#}"))?;
         buf.push(byte[0]);
     }
+    parse_http_request(&buf)
+}
+
+/// Parse a consumed header block (everything after the `GET ` prefix,
+/// terminator included) into the parts the session port acts on. Shared
+/// by the blocking admit-worker reader above and the server reactor's
+/// incremental one.
+pub(crate) fn parse_http_request(buf: &[u8]) -> anyhow::Result<HttpRequest> {
     // Request line after the consumed `GET ` prefix: `<path> HTTP/1.x`.
-    let line = buf.split(|&b| b == b'\r').next().unwrap_or(&[]);
+    let mut lines = buf.split(|&b| b == b'\r');
+    let line = lines.next().unwrap_or(&[]);
     let line = String::from_utf8_lossy(line);
     let path = line.split_whitespace().next().unwrap_or("").to_string();
     anyhow::ensure!(!path.is_empty(), "empty HTTP request path");
-    Ok(path)
+    // Header names are case-insensitive (RFC 9110 §5.1); values keep
+    // their scheme and spelling verbatim for the gate to compare.
+    let auth = lines
+        .map(|l| String::from_utf8_lossy(l.strip_prefix(b"\n").unwrap_or(l))
+            .into_owned())
+        .find_map(|l| {
+            let (name, value) = l.split_once(':')?;
+            name.trim().eq_ignore_ascii_case("authorization")
+                .then(|| value.trim().to_string())
+        });
+    Ok(HttpRequest { path, auth })
 }
 
 /// One-shot HTTP response on the session port. Best-effort: a scraper
 /// that hung up mid-response costs nothing but this socket. The
 /// connection closes when `stream` drops (HTTP/1.0 semantics, and the
 /// response says `Connection: close` explicitly).
-fn send_http_response(stream: &mut TcpStream, status: &str,
-                      content_type: &str, body: &str) {
+pub(crate) fn send_http_response(stream: &mut TcpStream, status: &str,
+                                 content_type: &str, body: &str) {
+    let challenge = if status.starts_with("401") {
+        "WWW-Authenticate: Bearer\r\n"
+    } else {
+        ""
+    };
     let head = format!(
         "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: close\r\n{challenge}\r\n",
         body.len()
     );
     let _ = stream
@@ -608,11 +664,25 @@ fn send_http_response(stream: &mut TcpStream, status: &str,
 /// `watch` carries what a `/watch` stream needs beyond the registry —
 /// the session's stop flag; `None` means this endpoint cannot stream
 /// yet (the bootstrap accept loop: the mesh is still assembling, and
-/// there is no lifecycle flag to end a stream against).
-fn serve_observability(path: &str, mut stream: TcpStream,
-                       registry: &Arc<Registry>,
-                       watch: Option<&Arc<AtomicBool>>) {
-    match path {
+/// there is no lifecycle flag to end a stream against). When `token`
+/// is set, every observability path demands `Authorization: Bearer
+/// <token>` and answers 401 otherwise — the shared-token gate guards
+/// the read-only endpoints only; Join/Rejoin never pass through here.
+pub(crate) fn serve_observability(req: &HttpRequest, mut stream: TcpStream,
+                                  registry: &Arc<Registry>,
+                                  watch: Option<&Arc<AtomicBool>>,
+                                  token: Option<&str>) {
+    if let Some(token) = token {
+        let expect = format!("Bearer {token}");
+        if req.auth.as_deref() != Some(expect.as_str()) {
+            send_http_response(
+                &mut stream, "401 Unauthorized", "text/plain",
+                "observability endpoints require \
+                 `Authorization: Bearer <token>`\n");
+            return;
+        }
+    }
+    match req.path.as_str() {
         "/metrics" => {
             let body = prometheus::render(registry);
             send_http_response(&mut stream, "200 OK",
@@ -647,8 +717,8 @@ fn serve_observability(path: &str, mut stream: TcpStream,
 /// with the stop flag latched *before* each export, so the frame sent
 /// after observing stop is a final snapshot carrying exactly the
 /// totals `RunRecord` reports.
-fn watch_stream_loop(stream: TcpStream, registry: Arc<Registry>,
-                     stop: Arc<AtomicBool>) {
+pub(crate) fn watch_stream_loop(stream: TcpStream, registry: Arc<Registry>,
+                                stop: Arc<AtomicBool>) {
     let push = PushExporter::new(stream);
     loop {
         let last = stop.load(Ordering::SeqCst);
@@ -714,6 +784,17 @@ impl Readmission {
     pub fn spawn(listener: TcpListener, parties: u16, epoch: u32,
                  metrics: Option<Arc<Registry>>)
                  -> anyhow::Result<Readmission> {
+        Self::spawn_with_token(listener, parties, epoch, metrics, None)
+    }
+
+    /// [`Self::spawn`] with the observability shared-token gate: when
+    /// `token` is set, `/metrics` and `/watch` on the re-admission port
+    /// answer 401 without `Authorization: Bearer <token>`. Rejoin
+    /// frames are never gated.
+    pub fn spawn_with_token(listener: TcpListener, parties: u16,
+                            epoch: u32, metrics: Option<Arc<Registry>>,
+                            token: Option<String>)
+                            -> anyhow::Result<Readmission> {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop_t = stop.clone();
@@ -721,12 +802,34 @@ impl Readmission {
         let handle = std::thread::Builder::new()
             .name("session-readmission".into())
             .spawn(move || readmission_loop(listener, parties, epoch,
-                                            metrics, stop_t, tx))?;
+                                            metrics, token, stop_t, tx))?;
         Ok(Readmission {
             rx: Mutex::new(rx),
             stop,
             handle: Some(handle),
         })
+    }
+
+    /// A re-admission point fed by an external router instead of an
+    /// owned listener thread: the returned `Sender` queues
+    /// [`RejoinRequest`]s exactly as the spawned loop would (the
+    /// multi-session server vets and epoch-routes rejoin dials
+    /// centrally, then forwards them here). The stop flag still ends
+    /// `/watch` streams a server hands to [`watch_stream_loop`].
+    pub fn external() -> (Sender<RejoinRequest>, Readmission) {
+        let (tx, rx) = channel::<RejoinRequest>();
+        let readmission = Readmission {
+            rx: Mutex::new(rx),
+            stop: Arc::new(AtomicBool::new(false)),
+            handle: None,
+        };
+        (tx, readmission)
+    }
+
+    /// The session's stop flag (latched on drop): `/watch` streamers
+    /// follow it to know when to send their final-totals frame.
+    pub(crate) fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
     }
 
     /// Next pending rejoin, if any (non-blocking).
@@ -754,7 +857,7 @@ impl Drop for Readmission {
 const READMIT_WORKERS: usize = 4;
 
 fn readmission_loop(listener: TcpListener, parties: u16, epoch: u32,
-                    metrics: Option<Arc<Registry>>,
+                    metrics: Option<Arc<Registry>>, token: Option<String>,
                     stop: Arc<AtomicBool>, tx: Sender<RejoinRequest>) {
     let active = Arc::new(AtomicUsize::new(0));
     loop {
@@ -774,10 +877,12 @@ fn readmission_loop(listener: TcpListener, parties: u16, epoch: u32,
                 let active = active.clone();
                 let tx = tx.clone();
                 let metrics = metrics.clone();
+                let token = token.clone();
                 let stop = stop.clone();
                 std::thread::spawn(move || {
                     let vetted = vet_readmission_contact(
-                        stream, parties, epoch, &metrics, &stop);
+                        stream, parties, epoch, &metrics,
+                        token.as_deref(), &stop);
                     active.fetch_sub(1, Ordering::SeqCst);
                     match vetted {
                         Ok(Some(req)) => {
@@ -812,20 +917,21 @@ fn readmission_loop(listener: TcpListener, parties: u16, epoch: u32,
 /// handing the socket to a detached streamer that follows `stop`.
 fn vet_readmission_contact(stream: TcpStream, parties: u16, epoch: u32,
                            metrics: &Option<Arc<Registry>>,
+                           token: Option<&str>,
                            stop: &Arc<AtomicBool>)
                            -> anyhow::Result<Option<RejoinRequest>> {
     let contact =
         read_first_contact(stream, Instant::now() + JOIN_READ_TIMEOUT)?;
     let (msg, mut stream) = match contact {
         FirstContact::Frame(msg, stream) => (msg, stream),
-        FirstContact::Http { path, stream } => match metrics {
+        FirstContact::Http { req, stream } => match metrics {
             Some(reg) => {
-                serve_observability(&path, stream, reg, Some(stop));
+                serve_observability(&req, stream, reg, Some(stop), token);
                 return Ok(None);
             }
             None => anyhow::bail!(
-                "HTTP-shaped request ({path}) on a re-admission port \
-                 with no metrics registry attached"
+                "HTTP-shaped request ({}) on a re-admission port \
+                 with no metrics registry attached", req.path
             ),
         },
     };
@@ -1867,6 +1973,86 @@ mod tests {
             .collect();
         assert_eq!(frame_rows(&last), final_rows);
         assert_eq!(last.round(), 10);
+    }
+
+    /// `http_get` with an arbitrary extra header line (e.g. an
+    /// `Authorization` header for the shared-token gate).
+    fn http_get_with_header(addr: &str, path: &str, header: &str)
+                            -> anyhow::Result<String> {
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(
+            format!("GET {path} HTTP/1.0\r\n{header}\r\n\r\n").as_bytes())?;
+        s.set_read_timeout(Some(Duration::from_secs(5)))?;
+        let mut out = String::new();
+        s.read_to_string(&mut out)?;
+        Ok(out)
+    }
+
+    #[test]
+    fn shared_token_gates_observability_but_not_sessions() {
+        let cfg = cfg_with_parties(2);
+        let registry = Registry::new();
+        registry.set_round(3);
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10))
+            .with_metrics(registry.clone())
+            .with_auth_token("hunter2");
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish_supervised(&cfg)
+        });
+        // Bootstrap phase: no header and wrong token are both 401 with
+        // a Bearer challenge; the right token scrapes as usual.
+        let resp = http_get(&addr, "/metrics").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 401"), "{resp}");
+        assert!(resp.contains("WWW-Authenticate: Bearer"), "{resp}");
+        assert!(!resp.contains("celu_session_round"), "leaked: {resp}");
+        let resp = http_get_with_header(
+            &addr, "/metrics", "Authorization: Bearer wrong").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 401"), "{resp}");
+        let resp = http_get_with_header(
+            &addr, "/metrics", "authorization: Bearer hunter2").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("celu_session_round 3\n"), "{resp}");
+        // Sessions are never gated: the joiner presents no header and
+        // is admitted exactly as on an open port.
+        let (_s, ack) = raw_join(&addr, 1, 2).unwrap();
+        assert!(matches!(ack, Message::JoinAck { .. }));
+        let (_links, readmission, _epoch, _round) =
+            label.join().unwrap().unwrap();
+        // The gate carries over to the re-admission port: /watch
+        // without the token is 401 (not 503, not a stream), with it a
+        // live stream begins.
+        let resp = http_get(&addr, "/watch").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 401"), "{resp}");
+        let resp = http_get_with_header(
+            &addr, "/metrics", "Authorization: Bearer hunter2").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        drop(readmission);
+    }
+
+    #[test]
+    fn empty_token_leaves_the_plane_open() {
+        let cfg = cfg_with_parties(2);
+        let registry = Registry::new();
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10))
+            .with_metrics(registry)
+            .with_auth_token("");
+        let addr = listener.local_addr().unwrap().to_string();
+        let label = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || listener.establish(&cfg)
+        });
+        let resp = http_get(&addr, "/metrics").unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        let (_s, ack) = raw_join(&addr, 1, 2).unwrap();
+        assert!(matches!(ack, Message::JoinAck { .. }));
+        let links = label.join().unwrap().unwrap();
+        assert_eq!(links.len(), 1);
     }
 
     #[test]

@@ -25,6 +25,11 @@
 //!   connections, [`bootstrap::SessionDialer`] joining with backoff),
 //!   so [`SessionBuilder::from_bootstrap`] yields the same `Session`
 //!   regardless of transport.
+//! - [`server`] — the multi-session service plane (DESIGN.md §11): a
+//!   [`server::SessionServer`] binds once and hosts many independent
+//!   sessions in one process, routing bootstraps and rejoins by
+//!   session epoch through a nonblocking reactor and serving every
+//!   session's metrics from one labeled exposition.
 //! - [`supervisor`] — the supervised session lifecycle (DESIGN.md §8):
 //!   a validated state machine with typed [`supervisor::SessionEvent`]s,
 //!   bounded straggler lanes, and mid-session `Rejoin` re-admission.
@@ -41,6 +46,8 @@
 
 pub mod bootstrap;
 pub mod checkpoint;
+pub(crate) mod reactor;
+pub mod server;
 pub mod supervisor;
 
 use std::sync::Arc;

@@ -1,0 +1,429 @@
+//! The service plane's readiness loop: nonblocking first-contact
+//! classification over every socket a [`super::server::SessionServer`]
+//! has accepted but not yet routed (DESIGN.md §11).
+//!
+//! The single-session listener ([`super::bootstrap::SessionListener`])
+//! affords a thread pool: it admits at most K−1 peers, once, so a
+//! bounded number of blocking `read`s is a fine substrate. A
+//! multi-session server cannot spend a thread per connection — dozens
+//! of meshes joining concurrently (plus scrapers, plus probes) would
+//! turn the admit pool into the bottleneck the pool was built to
+//! avoid. The reactor replaces those blocking reads with one
+//! single-threaded poll loop over incremental per-connection state
+//! machines:
+//!
+//! ```text
+//!       accept            4 bytes read               body complete
+//! socket ───► Head ──┬──► Body{len} ────────────────► Frame(Message)
+//!                    │   (len ≤ MAX_BOOTSTRAP_FRAME)
+//!                    └──► Http ──────────────────────► Http(HttpRequest)
+//!                        (head == "GET ")  "\r\n\r\n"
+//! ```
+//!
+//! Every state carries the same [`JOIN_READ_TIMEOUT`] deadline the
+//! blocking path enforces: a connection that never completes its first
+//! contact is dropped at expiry, having cost the reactor nothing but
+//! its buffer — a byte-trickler cannot wedge a slot because there are
+//! no slots. Classification is exactly the PR-7 dispatch, applied
+//! incrementally: a little-endian length word ≤
+//! [`MAX_BOOTSTRAP_FRAME`] opens a bootstrap frame, the ASCII `GET `
+//! (read as a length word: ~540 MB) opens an observability request.
+//!
+//! The reactor is deliberately `std`-only — no `epoll`/`kqueue`
+//! binding exists in-tree, and the contact population is small (joins
+//! are rare events; admitted sockets leave the reactor for their
+//! session's transport immediately), so an `O(contacts)` scan per tick
+//! at [`ACCEPT_POLL`] cadence is the right cost/complexity point.
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Instant;
+
+use crate::protocol::{decode_frame, Message};
+
+use super::bootstrap::{parse_http_request, HttpRequest,
+                       JOIN_READ_TIMEOUT, MAX_BOOTSTRAP_FRAME,
+                       MAX_HTTP_REQUEST};
+
+/// One accepted connection's incremental first-contact read.
+enum ContactState {
+    /// Reading the opening 4 bytes (length word or `GET `).
+    Head { buf: [u8; 4], got: usize },
+    /// Reading a bootstrap frame body of known length.
+    Body { buf: Vec<u8>, got: usize },
+    /// Accumulating an HTTP header block up to `\r\n\r\n`.
+    Http { buf: Vec<u8> },
+}
+
+/// A socket parked in the reactor until its first contact resolves.
+pub(crate) struct Contact {
+    stream: TcpStream,
+    addr: SocketAddr,
+    state: ContactState,
+    deadline: Instant,
+}
+
+/// A resolved first contact, ready for the server to route. The stream
+/// is handed back in *blocking* mode (the reactor put it in
+/// nonblocking mode to read it): acks are tiny synchronous writes, and
+/// an admitted socket becomes a transport, which owns its own modes.
+pub(crate) enum Ready {
+    /// A decoded headerless bootstrap frame (Join/Rejoin path).
+    Frame(Message, TcpStream),
+    /// A parsed observability request.
+    Http(HttpRequest, TcpStream),
+}
+
+enum Step {
+    /// Still mid-read; keep the contact parked.
+    Pending,
+    Resolved(Ready),
+    /// EOF, junk, or expiry: drop the connection, log `why`.
+    Dead(String),
+}
+
+impl Contact {
+    fn new(stream: TcpStream, addr: SocketAddr) -> anyhow::Result<Self> {
+        stream.set_nonblocking(true)?;
+        Ok(Contact {
+            stream,
+            addr,
+            state: ContactState::Head { buf: [0; 4], got: 0 },
+            deadline: Instant::now() + JOIN_READ_TIMEOUT,
+        })
+    }
+
+    /// Drain whatever bytes are available and advance the state
+    /// machine. Never blocks.
+    fn poll(&mut self) -> Step {
+        if Instant::now() >= self.deadline {
+            return Step::Dead(format!(
+                "first contact from {} incomplete after {:?}",
+                self.addr, JOIN_READ_TIMEOUT
+            ));
+        }
+        loop {
+            match &mut self.state {
+                ContactState::Head { buf, got } => {
+                    let n = match read_some(&mut self.stream,
+                                            &mut buf[*got..]) {
+                        ReadSome::Bytes(n) => n,
+                        ReadSome::WouldBlock => return Step::Pending,
+                        ReadSome::Closed(why) => return Step::Dead(why),
+                    };
+                    *got += n;
+                    if *got < 4 {
+                        continue;
+                    }
+                    if buf == b"GET " {
+                        self.state = ContactState::Http {
+                            buf: Vec::with_capacity(128),
+                        };
+                        continue;
+                    }
+                    let len = u32::from_le_bytes(*buf) as usize;
+                    if len == 0 || len > MAX_BOOTSTRAP_FRAME {
+                        return Step::Dead(format!(
+                            "bootstrap frame of {len} bytes from {} \
+                             (max {MAX_BOOTSTRAP_FRAME}) — not a \
+                             session peer", self.addr
+                        ));
+                    }
+                    self.state = ContactState::Body {
+                        buf: vec![0; len],
+                        got: 0,
+                    };
+                }
+                ContactState::Body { buf, got } => {
+                    let n = match read_some(&mut self.stream,
+                                            &mut buf[*got..]) {
+                        ReadSome::Bytes(n) => n,
+                        ReadSome::WouldBlock => return Step::Pending,
+                        ReadSome::Closed(why) => return Step::Dead(why),
+                    };
+                    *got += n;
+                    if *got < buf.len() {
+                        continue;
+                    }
+                    return match decode_headerless(buf) {
+                        Ok(msg) => match self.unpark() {
+                            Ok(stream) => {
+                                Step::Resolved(Ready::Frame(msg, stream))
+                            }
+                            Err(e) => Step::Dead(e),
+                        },
+                        Err(e) => Step::Dead(format!(
+                            "undecodable bootstrap frame from {}: {e:#}",
+                            self.addr
+                        )),
+                    };
+                }
+                ContactState::Http { buf } => {
+                    let mut byte = [0u8; 1];
+                    let n = match read_some(&mut self.stream, &mut byte) {
+                        ReadSome::Bytes(n) => n,
+                        ReadSome::WouldBlock => return Step::Pending,
+                        ReadSome::Closed(why) => return Step::Dead(why),
+                    };
+                    debug_assert_eq!(n, 1);
+                    buf.push(byte[0]);
+                    if buf.len() > MAX_HTTP_REQUEST {
+                        return Step::Dead(format!(
+                            "HTTP request from {} exceeds \
+                             {MAX_HTTP_REQUEST} bytes — not a scraper",
+                            self.addr
+                        ));
+                    }
+                    if !buf.ends_with(b"\r\n\r\n") {
+                        continue;
+                    }
+                    return match parse_http_request(buf) {
+                        Ok(req) => match self.unpark() {
+                            Ok(stream) => {
+                                Step::Resolved(Ready::Http(req, stream))
+                            }
+                            Err(e) => Step::Dead(e),
+                        },
+                        Err(e) => Step::Dead(format!(
+                            "malformed HTTP request from {}: {e:#}",
+                            self.addr
+                        )),
+                    };
+                }
+            }
+        }
+    }
+
+    /// Restore blocking mode before handing the stream onward.
+    fn unpark(&mut self) -> Result<TcpStream, String> {
+        self.stream
+            .set_nonblocking(false)
+            .and_then(|()| self.stream.try_clone())
+            .map_err(|e| format!(
+                "unparking {} from the reactor: {e}", self.addr))
+    }
+}
+
+enum ReadSome {
+    Bytes(usize),
+    WouldBlock,
+    Closed(String),
+}
+
+fn read_some(stream: &mut TcpStream, buf: &mut [u8]) -> ReadSome {
+    match stream.read(buf) {
+        Ok(0) => ReadSome::Closed("peer closed mid-contact".into()),
+        Ok(n) => ReadSome::Bytes(n),
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+            ReadSome::WouldBlock
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+            ReadSome::Bytes(0)
+        }
+        Err(e) => ReadSome::Closed(format!("read error: {e}")),
+    }
+}
+
+/// Decode a complete bootstrap frame body, enforcing the headerless
+/// rule (the reactor's analogue of `recv_bootstrap_body`, minus the
+/// socket reads).
+fn decode_headerless(buf: &[u8]) -> anyhow::Result<Message> {
+    let (header, msg) = decode_frame(buf)?;
+    anyhow::ensure!(
+        header.is_none(),
+        "bootstrap frames are headerless — link identity is \
+         established by Join itself, not the v2 envelope"
+    );
+    Ok(msg)
+}
+
+/// The poll loop: one nonblocking listener plus every in-flight first
+/// contact. [`Reactor::poll`] is the only entry point — the server
+/// calls it each tick and routes whatever resolved.
+pub(crate) struct Reactor {
+    listener: TcpListener,
+    contacts: Vec<Contact>,
+}
+
+impl Reactor {
+    pub(crate) fn new(listener: TcpListener) -> anyhow::Result<Self> {
+        listener.set_nonblocking(true)?;
+        Ok(Reactor { listener, contacts: Vec::new() })
+    }
+
+    pub(crate) fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Connections currently mid-first-contact (telemetry and tests).
+    pub(crate) fn in_flight(&self) -> usize {
+        self.contacts.len()
+    }
+
+    /// One tick: accept whatever is queued, advance every contact,
+    /// return the resolved ones. Dead contacts are dropped with a log
+    /// line; nothing here blocks, so the caller owns the cadence
+    /// (sleep [`super::bootstrap::ACCEPT_POLL`] between empty ticks).
+    pub(crate) fn poll(&mut self) -> Vec<Ready> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, addr)) => match Contact::new(stream, addr) {
+                    Ok(c) => self.contacts.push(c),
+                    Err(e) => log::warn!(
+                        "reactor: registering {addr} failed: {e:#}"),
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    break;
+                }
+                Err(e) => {
+                    log::warn!("reactor accept: {e}");
+                    break;
+                }
+            }
+        }
+        let mut ready = Vec::new();
+        let mut keep = Vec::with_capacity(self.contacts.len());
+        for mut c in self.contacts.drain(..) {
+            match c.poll() {
+                Step::Pending => keep.push(c),
+                Step::Resolved(r) => ready.push(r),
+                Step::Dead(why) => log::warn!("reactor: {why}"),
+            }
+        }
+        self.contacts = keep;
+        ready
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::time::Duration;
+
+    use crate::compress;
+    use crate::session::bootstrap::send_bootstrap_frame;
+    use crate::session::PartyId;
+
+    fn reactor() -> (Reactor, String) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        (Reactor::new(l).unwrap(), addr)
+    }
+
+    fn poll_until(r: &mut Reactor, deadline: Duration) -> Vec<Ready> {
+        let end = Instant::now() + deadline;
+        while Instant::now() < end {
+            let ready = r.poll();
+            if !ready.is_empty() {
+                return ready;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Vec::new()
+    }
+
+    #[test]
+    fn resolves_frames_and_http_without_blocking() {
+        let (mut r, addr) = reactor();
+        let mut join = TcpStream::connect(&addr).unwrap();
+        send_bootstrap_frame(&mut join, &Message::Join {
+            party: PartyId(1),
+            parties: 3,
+            codecs: compress::supported_mask(),
+        }).unwrap();
+        let mut http = TcpStream::connect(&addr).unwrap();
+        http.write_all(
+            b"GET /metrics HTTP/1.0\r\nAuthorization: Bearer tok\r\n\r\n")
+            .unwrap();
+        let mut got_frame = false;
+        let mut got_http = false;
+        let end = Instant::now() + Duration::from_secs(5);
+        while (!got_frame || !got_http) && Instant::now() < end {
+            for ready in r.poll() {
+                match ready {
+                    Ready::Frame(Message::Join { party, parties, .. },
+                                 _s) => {
+                        assert_eq!((party, parties), (PartyId(1), 3));
+                        got_frame = true;
+                    }
+                    Ready::Frame(m, _) => panic!("unexpected frame {m:?}"),
+                    Ready::Http(req, _s) => {
+                        assert_eq!(req.path, "/metrics");
+                        assert_eq!(req.auth.as_deref(),
+                                   Some("Bearer tok"));
+                        got_http = true;
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(got_frame && got_http, "contacts did not resolve");
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn byte_trickler_never_stalls_other_contacts() {
+        let (mut r, addr) = reactor();
+        // A trickler that sends one length byte and goes mute…
+        let mut slow = TcpStream::connect(&addr).unwrap();
+        slow.write_all(&[18u8]).unwrap();
+        // …must not delay a complete Join arriving after it.
+        let mut join = TcpStream::connect(&addr).unwrap();
+        send_bootstrap_frame(&mut join, &Message::Join {
+            party: PartyId(2),
+            parties: 3,
+            codecs: 0,
+        }).unwrap();
+        let ready = poll_until(&mut r, Duration::from_secs(5));
+        assert_eq!(ready.len(), 1);
+        assert!(matches!(&ready[0],
+                         Ready::Frame(Message::Join { party, .. }, _)
+                         if *party == PartyId(2)));
+        // The trickler is still parked, on its own deadline.
+        assert_eq!(r.in_flight(), 1);
+    }
+
+    #[test]
+    fn junk_oversize_and_disconnects_are_dropped() {
+        let (mut r, addr) = reactor();
+        // Oversize length word (not `GET `, > MAX_BOOTSTRAP_FRAME).
+        let mut junk = TcpStream::connect(&addr).unwrap();
+        junk.write_all(&1000u32.to_le_bytes()).unwrap();
+        // Mid-contact disconnect: 2 bytes then gone.
+        let mut gone = TcpStream::connect(&addr).unwrap();
+        gone.write_all(&[9, 0]).unwrap();
+        drop(gone);
+        // Oversized HTTP header block.
+        let mut big = TcpStream::connect(&addr).unwrap();
+        big.write_all(b"GET /metrics HTTP/1.0\r\n").unwrap();
+        big.write_all(&vec![b'x'; 2 * MAX_HTTP_REQUEST]).unwrap();
+        // Hostiles may die on the very tick that accepts them, so there
+        // is no reliable in-flight transition to watch — the contract
+        // is that none of them ever *resolves*, and none lingers past
+        // its deadline.
+        let settle = Instant::now() + Duration::from_millis(300);
+        while Instant::now() < settle {
+            assert!(r.poll().is_empty(), "a hostile contact resolved");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // The reactor still serves a well-formed peer afterwards.
+        let mut join = TcpStream::connect(&addr).unwrap();
+        send_bootstrap_frame(&mut join, &Message::Join {
+            party: PartyId(1),
+            parties: 2,
+            codecs: 0,
+        }).unwrap();
+        let ready = poll_until(&mut r, Duration::from_secs(5));
+        assert_eq!(ready.len(), 1);
+        // Whatever hostiles were still parked (a trickler that never
+        // finished) expire on their JOIN_READ_TIMEOUT deadline.
+        let end = Instant::now() + JOIN_READ_TIMEOUT + Duration::from_secs(3);
+        while r.in_flight() != 0 {
+            assert!(Instant::now() < end,
+                    "{} hostile contacts never expired", r.in_flight());
+            let _ = r.poll();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}

@@ -1,0 +1,805 @@
+//! The multi-session service plane: one process, one port, many
+//! meshes (DESIGN.md §11).
+//!
+//! A [`super::bootstrap::SessionListener`] is a single-tenant server —
+//! bind, admit K−1 peers, train, exit. A [`SessionServer`] binds
+//! *once* and hosts any number of independent training sessions behind
+//! that one socket, multiplexing their bootstraps through the
+//! [`super::reactor::Reactor`] and their observability through one
+//! labeled `/metrics` exposition. Routing is by **session epoch** —
+//! the seed-derived 32-bit id every checkpoint and `Rejoin` frame
+//! already carries ([`session_epoch`]) — with zero wire changes:
+//!
+//! - `Rejoin{epoch}` routes exactly: unknown epoch →
+//!   [`Message::RejoinReject`] (`EpochMismatch`); an *assembling*
+//!   session admits it as a join (`RejoinAck{resume_round: 0}`); a
+//!   *running* session gets it forwarded as a [`RejoinRequest`]
+//!   through the [`Readmission::external`] channel its label loop
+//!   already polls.
+//! - A plain `Join` carries no epoch (those golden bytes are frozen),
+//!   so it is seated directly only when the server hosts exactly one
+//!   session — the single-tenant contract. With several sessions *any*
+//!   plain Join is answered `RejoinReject{NeedRejoin}`, even when only
+//!   one mesh is currently assembling: a crashed party of a *running*
+//!   session re-dialing fresh would otherwise be mis-seated into
+//!   whichever mesh happens to have its id free. The stock dialer's
+//!   fallback re-dials with an epoch-bearing `Rejoin` that routes
+//!   exactly. Hosting two same-seed sessions is refused at [`host`]
+//!   time for the same reason the wire can't express it.
+//!
+//! The server is training-agnostic: when a mesh completes, it wraps
+//! the admitted sockets ([`SessionListener::wrap_links`] — the same
+//! code path as single-tenant, so single-session wire behaviour is
+//! byte-identical) and hands a [`SessionHandle`] to the caller's
+//! runner on a fresh thread. Worksets across sessions can share one
+//! [`CacheBudget`], bounding the *process's* cache residency while
+//! each session keeps its own W bound.
+//!
+//! [`host`]: SessionServer::host
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::compress;
+use crate::config::RunConfig;
+use crate::metrics::exporters::prometheus;
+use crate::metrics::facade::Registry;
+use crate::protocol::{Message, RejectReason};
+use crate::workset::CacheBudget;
+
+use super::bootstrap::{send_bootstrap_frame, send_http_response,
+                       watch_stream_loop, HttpRequest, Readmission,
+                       RejoinRequest, SessionListener, ACCEPT_POLL,
+                       DEFAULT_JOIN_TIMEOUT};
+use super::reactor::{Reactor, Ready};
+use super::supervisor::session_epoch;
+use super::Link;
+
+/// Everything a hosted session's runner needs, delivered on the
+/// session's own thread once its mesh has assembled. The runner owns
+/// the handle: typically `SessionBuilder` + `run_label_with`, wiring
+/// `readmission`, `registry` and `cache_budget` straight into
+/// [`crate::coordinator::label_party::LabelRunOpts`].
+pub struct SessionHandle {
+    pub cfg: RunConfig,
+    /// The session's routing epoch ([`session_epoch`] of `cfg.seed`).
+    pub epoch: u32,
+    /// The epoch rendered as the `session="…"` label every `/metrics`
+    /// sample of this session carries.
+    pub label: String,
+    /// One link per admitted feature party, id order — exactly what
+    /// `SessionListener::establish` would have produced.
+    pub links: Vec<Link>,
+    /// The externally-fed re-admission point: the server routes
+    /// mid-session `Rejoin`s here; the label loop polls it unchanged.
+    pub readmission: Readmission,
+    /// This session's private registry; the server scrapes it labeled.
+    pub registry: Arc<Registry>,
+    /// The process-wide workset budget, when the server has one.
+    pub cache_budget: Option<Arc<CacheBudget>>,
+}
+
+/// What became of one hosted session.
+pub struct SessionOutcome {
+    pub label: String,
+    pub epoch: u32,
+    pub result: anyhow::Result<()>,
+}
+
+enum Phase {
+    /// Collecting joins: party id → (socket, codec mask).
+    Admitting {
+        joined: BTreeMap<u16, (TcpStream, u32)>,
+        deadline: Instant,
+    },
+    /// Mesh assembled, runner thread live.
+    Running {
+        rejoin_tx: Sender<RejoinRequest>,
+        stop: Arc<AtomicBool>,
+        handle: JoinHandle<anyhow::Result<()>>,
+    },
+    Done(anyhow::Result<()>),
+}
+
+struct Hosted {
+    cfg: RunConfig,
+    epoch: u32,
+    label: String,
+    registry: Arc<Registry>,
+    phase: Phase,
+}
+
+impl Hosted {
+    fn feature_parties(&self) -> usize {
+        self.cfg.feature_parties()
+    }
+}
+
+/// The long-lived server: bind once, [`host`](Self::host) any number
+/// of session configs, then [`serve`](Self::serve) them all to
+/// completion through one reactor loop.
+pub struct SessionServer {
+    reactor: Reactor,
+    sessions: Vec<Hosted>,
+    token: Option<String>,
+    budget: Option<Arc<CacheBudget>>,
+    join_timeout: Duration,
+}
+
+impl SessionServer {
+    pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        let listener = std::net::TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
+        Ok(SessionServer {
+            reactor: Reactor::new(listener)?,
+            sessions: Vec::new(),
+            token: None,
+            budget: None,
+            join_timeout: DEFAULT_JOIN_TIMEOUT,
+        })
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        self.reactor.local_addr()
+    }
+
+    /// The shared-token observability gate (same semantics as
+    /// [`SessionListener::with_auth_token`]): empty leaves the plane
+    /// open; sessions are never gated.
+    pub fn with_auth_token(mut self, token: &str) -> Self {
+        self.token = (!token.is_empty()).then(|| token.to_string());
+        self
+    }
+
+    /// Bound the summed workset residency of every hosted session.
+    pub fn with_cache_budget(mut self, budget: Arc<CacheBudget>) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Per-session window for the full mesh to assemble (measured from
+    /// [`serve`](Self::serve), not from `host`).
+    pub fn with_join_timeout(mut self, timeout: Duration) -> Self {
+        self.join_timeout = timeout;
+        self
+    }
+
+    /// Register one session to host. Returns its routing epoch. Two
+    /// sessions of the same seed share an epoch and are refused —
+    /// `Rejoin` frames could not tell them apart.
+    pub fn host(&mut self, cfg: RunConfig) -> anyhow::Result<u32> {
+        cfg.validate()?;
+        let epoch = session_epoch(cfg.seed);
+        anyhow::ensure!(
+            !self.sessions.iter().any(|s| s.epoch == epoch),
+            "a hosted session already uses seed {} (epoch {epoch:#x}) — \
+             sessions on one server need distinct seeds to route by",
+            cfg.seed
+        );
+        let label = format!("{epoch:08x}");
+        self.sessions.push(Hosted {
+            cfg,
+            epoch,
+            label,
+            registry: Registry::new(),
+            phase: Phase::Admitting {
+                joined: BTreeMap::new(),
+                // Provisional; serve() re-arms so the window measures
+                // from when dialers can actually be answered.
+                deadline: Instant::now() + self.join_timeout,
+            },
+        });
+        Ok(epoch)
+    }
+
+    /// Run every hosted session to completion. `runner` is called once
+    /// per session on a dedicated thread the moment its mesh
+    /// assembles; the server keeps routing (later sessions' joins,
+    /// mid-session rejoins, scrapes) the whole time. Returns one
+    /// outcome per session, in [`host`](Self::host) order.
+    pub fn serve<R>(mut self, runner: R)
+                    -> anyhow::Result<Vec<SessionOutcome>>
+    where
+        R: Fn(SessionHandle) -> anyhow::Result<()>
+            + Send + Sync + 'static,
+    {
+        anyhow::ensure!(!self.sessions.is_empty(),
+                        "serve() with no hosted sessions");
+        let runner: Arc<dyn RunnerFn> = Arc::new(runner);
+        let start = Instant::now() + self.join_timeout;
+        for s in &mut self.sessions {
+            if let Phase::Admitting { deadline, .. } = &mut s.phase {
+                *deadline = start;
+            }
+        }
+        loop {
+            let ready = self.reactor.poll();
+            let idle = ready.is_empty();
+            for contact in ready {
+                match contact {
+                    Ready::Frame(msg, stream) => {
+                        self.route_frame(msg, stream);
+                    }
+                    Ready::Http(req, stream) => {
+                        self.route_http(&req, stream);
+                    }
+                }
+            }
+            self.promote(&runner);
+            self.reap();
+            if self.sessions.iter()
+                .all(|s| matches!(s.phase, Phase::Done(_)))
+            {
+                break;
+            }
+            if idle {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+        Ok(self.sessions.drain(..)
+            .map(|s| SessionOutcome {
+                label: s.label,
+                epoch: s.epoch,
+                result: match s.phase {
+                    Phase::Done(r) => r,
+                    _ => unreachable!("serve loop ended mid-phase"),
+                },
+            })
+            .collect())
+    }
+
+    /// Route one decoded bootstrap frame to its session — or refuse it
+    /// on the wire so the dialer can react (fall back to `Rejoin`,
+    /// give up on a wrong epoch) instead of staring at an EOF.
+    fn route_frame(&mut self, msg: Message, mut stream: TcpStream) {
+        match msg {
+            Message::Join { party, parties, codecs } => {
+                // No epoch on the wire: seat it directly only in the
+                // single-tenant case, where the answer cannot be wrong.
+                let sole = match &mut self.sessions[..] {
+                    [s] => matches!(&s.phase,
+                                    Phase::Admitting { joined, .. }
+                                    if s.cfg.parties as u16 == parties
+                                    && party.0 >= 1 && party.0 < parties
+                                    && !joined.contains_key(&party.0))
+                        .then_some(s),
+                    _ => None,
+                };
+                match sole {
+                    Some(s) => {
+                        let ack = Message::JoinAck {
+                            party,
+                            parties,
+                            codecs: compress::supported_mask(),
+                        };
+                        admit(s, party.0, codecs, stream, &ack);
+                    }
+                    None => {
+                        log::info!(
+                            "server: plain Join from {party} \
+                             ({parties}-party) cannot be routed by \
+                             content — answering NeedRejoin so the \
+                             dialer retries with an epoch"
+                        );
+                        let _ = send_bootstrap_frame(
+                            &mut stream,
+                            &Message::RejoinReject {
+                                party,
+                                reason: RejectReason::NeedRejoin,
+                                round: 0,
+                            });
+                    }
+                }
+            }
+            Message::Rejoin { party, parties, epoch, last_round,
+                              codecs } => {
+                let Some(s) = self.sessions.iter_mut()
+                    .find(|s| s.epoch == epoch)
+                else {
+                    log::warn!(
+                        "server: Rejoin from {party} names epoch \
+                         {epoch:#x} — no such session here"
+                    );
+                    let _ = send_bootstrap_frame(
+                        &mut stream,
+                        &Message::RejoinReject {
+                            party,
+                            reason: RejectReason::EpochMismatch,
+                            round: 0,
+                        });
+                    return;
+                };
+                if parties != s.cfg.parties as u16
+                    || party.0 < 1 || party.0 >= parties
+                {
+                    log::warn!(
+                        "server: {party} rejoined session {} claiming \
+                         {parties} parties, config says {} — dropped",
+                        s.label, s.cfg.parties
+                    );
+                    return;
+                }
+                match &mut s.phase {
+                    // An epoch-bearing join into an assembling mesh:
+                    // the dialer's NeedRejoin fallback lands here.
+                    Phase::Admitting { joined, .. } => {
+                        if joined.contains_key(&party.0) {
+                            log::warn!(
+                                "server: duplicate {party} for session \
+                                 {} — dropped", s.label
+                            );
+                            return;
+                        }
+                        let ack = Message::RejoinAck {
+                            party,
+                            parties,
+                            epoch,
+                            resume_round: 0,
+                            replays: 0,
+                        };
+                        admit(s, party.0, codecs, stream, &ack);
+                    }
+                    Phase::Running { rejoin_tx, .. } => {
+                        // Mid-session recovery: the lane consumer acks
+                        // and swaps transports, exactly as the
+                        // single-tenant re-admission loop feeds it.
+                        let _ = rejoin_tx.send(RejoinRequest {
+                            party,
+                            last_round,
+                            codecs,
+                            stream,
+                        });
+                    }
+                    Phase::Done(_) => {
+                        log::warn!(
+                            "server: {party} rejoined session {} which \
+                             already ended", s.label
+                        );
+                        let _ = send_bootstrap_frame(
+                            &mut stream,
+                            &Message::RejoinReject {
+                                party,
+                                reason: RejectReason::EpochMismatch,
+                                round: 0,
+                            });
+                    }
+                }
+            }
+            other => log::warn!(
+                "server: unexpected bootstrap message tag {} — dropped",
+                other.tag()
+            ),
+        }
+    }
+
+    /// The multi-session observability plane: `/metrics` concatenates
+    /// every session's exposition with a `session="…"` label;
+    /// `/watch/<label>` streams one session (bare `/watch` works while
+    /// exactly one session is hosted, preserving the single-tenant
+    /// contract).
+    fn route_http(&mut self, req: &HttpRequest, mut stream: TcpStream) {
+        if let Some(token) = &self.token {
+            let expect = format!("Bearer {token}");
+            if req.auth.as_deref() != Some(expect.as_str()) {
+                send_http_response(
+                    &mut stream, "401 Unauthorized", "text/plain",
+                    "observability endpoints require \
+                     `Authorization: Bearer <token>`\n");
+                return;
+            }
+        }
+        match req.path.as_str() {
+            "/metrics" => {
+                let body: String = self.sessions.iter()
+                    .map(|s| prometheus::render_labeled(
+                        &s.registry, Some(&s.label)))
+                    .collect();
+                send_http_response(&mut stream, "200 OK",
+                                   "text/plain; version=0.0.4", &body);
+            }
+            "/watch" if self.sessions.len() == 1 => {
+                serve_watch(&self.sessions[0], stream);
+            }
+            "/watch" => {
+                let labels: Vec<&str> = self.sessions.iter()
+                    .map(|s| s.label.as_str())
+                    .collect();
+                send_http_response(
+                    &mut stream, "409 Conflict", "text/plain",
+                    &format!(
+                        "this server hosts {} sessions — pick one: \
+                         /watch/{}\n",
+                        labels.len(), labels.join(", /watch/")));
+            }
+            watch if watch.starts_with("/watch/") => {
+                let label = &watch["/watch/".len()..];
+                match self.sessions.iter()
+                    .find(|s| s.label == label)
+                {
+                    Some(s) => serve_watch(s, stream),
+                    None => send_http_response(
+                        &mut stream, "404 Not Found", "text/plain",
+                        &format!("no session labeled {label}\n")),
+                }
+            }
+            other => send_http_response(
+                &mut stream, "404 Not Found", "text/plain",
+                &format!(
+                    "unknown path {other} — try /metrics or \
+                     /watch/<session>\n")),
+        }
+    }
+
+    /// Start every session whose mesh just completed; time out those
+    /// whose admit window expired.
+    fn promote(&mut self, runner: &Arc<dyn RunnerFn>) {
+        for s in &mut self.sessions {
+            let Phase::Admitting { joined, deadline } = &mut s.phase
+            else {
+                continue;
+            };
+            if joined.len() == s.feature_parties() {
+                let joined = std::mem::take(joined);
+                s.phase = match launch(s, joined, runner,
+                                       self.budget.clone()) {
+                    Ok(phase) => phase,
+                    Err(e) => Phase::Done(Err(e)),
+                };
+            } else if Instant::now() >= *deadline {
+                let missing: Vec<String> = (1..s.cfg.parties as u16)
+                    .filter(|id| !joined.contains_key(id))
+                    .map(|id| format!("P{id}"))
+                    .collect();
+                s.phase = Phase::Done(Err(anyhow::anyhow!(
+                    "session {} bootstrap timed out: {} never joined",
+                    s.label, missing.join(", ")
+                )));
+            }
+        }
+    }
+
+    /// Collect finished runner threads into their outcomes.
+    fn reap(&mut self) {
+        for s in &mut self.sessions {
+            let Phase::Running { handle, .. } = &s.phase else {
+                continue;
+            };
+            if !handle.is_finished() {
+                continue;
+            }
+            let Phase::Running { handle, .. } = std::mem::replace(
+                &mut s.phase, Phase::Done(Ok(())))
+            else {
+                unreachable!();
+            };
+            let result = handle.join().unwrap_or_else(|_| Err(
+                anyhow::anyhow!("session {} runner panicked", s.label)));
+            if let Err(e) = &result {
+                log::warn!("session {} failed: {e:#}", s.label);
+            } else {
+                log::info!("session {} completed", s.label);
+            }
+            s.phase = Phase::Done(result);
+        }
+    }
+}
+
+/// `Fn` alias the promote path can name without repeating the bound.
+trait RunnerFn:
+    Fn(SessionHandle) -> anyhow::Result<()> + Send + Sync {}
+impl<T> RunnerFn for T
+    where T: Fn(SessionHandle) -> anyhow::Result<()> + Send + Sync {}
+
+/// Ack-then-seat one admitted socket; a failed ack send costs the
+/// joiner, not the session (its dialer retries).
+fn admit(s: &mut Hosted, party: u16, codecs: u32, mut stream: TcpStream,
+         ack: &Message) {
+    let Phase::Admitting { joined, .. } = &mut s.phase else {
+        unreachable!("admit outside the admitting phase");
+    };
+    match send_bootstrap_frame(&mut stream, ack) {
+        Ok(()) => {
+            log::info!(
+                "server: P{party} joined session {} ({}/{} feature \
+                 parties)", s.label, joined.len() + 1,
+                s.cfg.feature_parties()
+            );
+            joined.insert(party, (stream, codecs));
+        }
+        Err(e) => log::warn!(
+            "server: acking P{party} into session {} failed: {e:#}",
+            s.label
+        ),
+    }
+}
+
+/// Wrap a completed mesh and hand it to the runner on its own thread.
+fn launch(s: &Hosted, joined: BTreeMap<u16, (TcpStream, u32)>,
+          runner: &Arc<dyn RunnerFn>, budget: Option<Arc<CacheBudget>>)
+          -> anyhow::Result<Phase> {
+    let links = SessionListener::wrap_links(&s.cfg, joined)?;
+    let (rejoin_tx, readmission) = Readmission::external();
+    let stop = readmission.stop_flag();
+    let handle = SessionHandle {
+        cfg: s.cfg.clone(),
+        epoch: s.epoch,
+        label: s.label.clone(),
+        links,
+        readmission,
+        registry: s.registry.clone(),
+        cache_budget: budget,
+    };
+    let runner = runner.clone();
+    let thread = std::thread::Builder::new()
+        .name(format!("session-{}", s.label))
+        .spawn(move || runner(handle))?;
+    log::info!("server: session {} mesh assembled — training started",
+               s.label);
+    Ok(Phase::Running { rejoin_tx, stop, handle: thread })
+}
+
+/// Stream one session's metric frames (the single-tenant `/watch`
+/// contract, addressed by label).
+fn serve_watch(s: &Hosted, mut stream: TcpStream) {
+    match &s.phase {
+        Phase::Running { stop, .. } => {
+            let registry = s.registry.clone();
+            let stop = stop.clone();
+            let _ = std::thread::Builder::new()
+                .name(format!("watch-{}", s.label))
+                .spawn(move || watch_stream_loop(stream, registry, stop));
+        }
+        Phase::Admitting { .. } => send_http_response(
+            &mut stream, "503 Service Unavailable", "text/plain",
+            "session still assembling — /watch is served once training \
+             starts\n"),
+        Phase::Done(_) => send_http_response(
+            &mut stream, "410 Gone", "text/plain",
+            "session already ended — scrape /metrics for final totals\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+
+    use crate::protocol::decode_frame;
+    use crate::session::bootstrap::{recv_bootstrap_frame, SessionDialer};
+    use crate::session::PartyId;
+
+    fn cfg_k(parties: usize, seed: u64) -> RunConfig {
+        let mut cfg = RunConfig::quick();
+        cfg.parties = parties;
+        cfg.seed = seed;
+        cfg
+    }
+
+    /// A runner that records which sessions ran and exchanges one
+    /// frame per link so transports see real traffic (`EvalAck{7}` out,
+    /// `EvalAck{8}` back — fixed-size control frames).
+    fn echo_runner() -> (Arc<std::sync::Mutex<Vec<String>>>,
+                         impl Fn(SessionHandle) -> anyhow::Result<()>
+                             + Send + Sync + 'static) {
+        let ran = Arc::new(std::sync::Mutex::new(Vec::<String>::new()));
+        let seen = ran.clone();
+        let runner = move |h: SessionHandle| -> anyhow::Result<()> {
+            // Publish one sample before any traffic, so a scrape taken
+            // after the first frame is guaranteed to see it labeled.
+            h.registry.gauge("celu_echo_sessions").set(1.0);
+            for link in &h.links {
+                link.transport.send(Message::EvalAck { round: 7 })?;
+                let m = link.transport.recv()?;
+                anyhow::ensure!(
+                    matches!(m, Message::EvalAck { round: 8 }),
+                    "expected EvalAck{{8}}, got {m:?}"
+                );
+            }
+            seen.lock().unwrap().push(h.label.clone());
+            Ok(())
+        };
+        (ran, runner)
+    }
+
+    /// Dial one feature party of `cfg` and answer the echo runner.
+    fn echo_dialer(addr: String, cfg: RunConfig, party: u16)
+                   -> std::thread::JoinHandle<anyhow::Result<()>> {
+        std::thread::spawn(move || {
+            let (link, start) = SessionDialer::new(&addr, PartyId(party))
+                .with_timeout(Duration::from_secs(10))
+                .establish_resumable(&cfg)?;
+            anyhow::ensure!(start == 0, "fresh dial resumed at {start}");
+            let m = link.transport.recv()?;
+            anyhow::ensure!(
+                matches!(m, Message::EvalAck { round: 7 }),
+                "expected EvalAck{{7}}, got {m:?}"
+            );
+            link.transport.send(Message::EvalAck { round: 8 })?;
+            Ok(())
+        })
+    }
+
+    fn http_get(addr: &str, path: &str, header: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let extra = if header.is_empty() {
+            String::new()
+        } else {
+            format!("{header}\r\n")
+        };
+        s.write_all(
+            format!("GET {path} HTTP/1.0\r\n{extra}\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn two_sessions_complete_through_one_server() {
+        let mut server = SessionServer::bind("127.0.0.1:0").unwrap()
+            .with_join_timeout(Duration::from_secs(10));
+        let cfg_a = cfg_k(3, 11);
+        let cfg_b = cfg_k(3, 22);
+        let ea = server.host(cfg_a.clone()).unwrap();
+        let eb = server.host(cfg_b.clone()).unwrap();
+        assert_ne!(ea, eb);
+        let addr = server.local_addr().unwrap().to_string();
+        // Same party ids, same K, concurrently: plain Joins are
+        // ambiguous by construction, so every dial exercises the
+        // NeedRejoin → epoch-bearing-Rejoin fallback.
+        let dialers: Vec<_> = [(&cfg_a, 1), (&cfg_a, 2),
+                               (&cfg_b, 1), (&cfg_b, 2)]
+            .into_iter()
+            .map(|(cfg, p)| echo_dialer(addr.clone(), cfg.clone(), p))
+            .collect();
+        let (ran, runner) = echo_runner();
+        let outcomes = server.serve(runner).unwrap();
+        for d in dialers {
+            d.join().unwrap().unwrap();
+        }
+        assert_eq!(outcomes.len(), 2);
+        for o in &outcomes {
+            assert!(o.result.is_ok(),
+                    "session {} failed: {:?}", o.label, o.result);
+        }
+        let mut seen = ran.lock().unwrap().clone();
+        seen.sort();
+        let mut want = vec![format!("{ea:08x}"), format!("{eb:08x}")];
+        want.sort();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn single_session_join_is_unambiguous_and_scrapes_labeled() {
+        let mut server = SessionServer::bind("127.0.0.1:0").unwrap()
+            .with_join_timeout(Duration::from_secs(10));
+        let cfg = cfg_k(3, 5);
+        let epoch = server.host(cfg.clone()).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        // With one assembling session a *plain* Join must route — the
+        // single-tenant contract. Drive the raw frames so the test
+        // fails if the server silently relied on the Rejoin fallback.
+        let raw = |party: u16| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                send_bootstrap_frame(&mut s, &Message::Join {
+                    party: PartyId(party),
+                    parties: 3,
+                    codecs: compress::supported_mask(),
+                }).unwrap();
+                let deadline = Instant::now() + Duration::from_secs(10);
+                let ack = recv_bootstrap_frame(&mut s, deadline).unwrap();
+                assert!(matches!(ack, Message::JoinAck { .. }),
+                        "expected JoinAck, got tag {}", ack.tag());
+                // Answer the echo runner on the raw socket: v2 framed
+                // (parties > 2), which decode_frame understands.
+                let mut scrape = None;
+                let mut head = [0u8; 4];
+                s.read_exact(&mut head).unwrap();
+                let len = u32::from_le_bytes(head) as usize;
+                let mut body = vec![0u8; len];
+                s.read_exact(&mut body).unwrap();
+                let (hdr, m) = decode_frame(&body).unwrap();
+                assert!(hdr.is_some(), "training frames are v2 here");
+                assert!(matches!(m, Message::EvalAck { round: 7 }),
+                        "expected EvalAck{{7}}, got {m:?}");
+                // While the session runs, the plane serves both
+                // endpoints; scrape from party 1 only.
+                if party == 1 {
+                    scrape = Some(http_get(&addr, "/metrics", ""));
+                }
+                let body = crate::protocol::encode_frame(
+                    Some(crate::protocol::FrameHeader {
+                        src: PartyId(party),
+                        dst: crate::session::LABEL_PARTY,
+                    }),
+                    &Message::EvalAck { round: 8 });
+                s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+                s.write_all(&body).unwrap();
+                s.flush().unwrap();
+                scrape
+            })
+        };
+        let d1 = raw(1);
+        let d2 = raw(2);
+        let (_ran, runner) = echo_runner();
+        let outcomes = server.serve(runner).unwrap();
+        let scrape = d1.join().unwrap().expect("party 1 scrapes");
+        d2.join().unwrap();
+        assert!(outcomes[0].result.is_ok());
+        let label = format!("session=\"{epoch:08x}\"");
+        assert!(scrape.contains(&label),
+                "scrape not labeled with {label}:\n{scrape}");
+    }
+
+    #[test]
+    fn wrong_epoch_rejoin_is_refused_by_name() {
+        let mut server = SessionServer::bind("127.0.0.1:0").unwrap()
+            .with_join_timeout(Duration::from_secs(10));
+        let cfg = cfg_k(3, 5);
+        server.host(cfg.clone()).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let probe = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                send_bootstrap_frame(&mut s, &Message::Rejoin {
+                    party: PartyId(1),
+                    parties: 3,
+                    epoch: 0xDEAD_BEEF,
+                    last_round: 0,
+                    codecs: 0,
+                }).unwrap();
+                recv_bootstrap_frame(
+                    &mut s, Instant::now() + Duration::from_secs(10))
+            })
+        };
+        // Keep the server alive long enough to answer, then satisfy it.
+        let d1 = echo_dialer(addr.clone(), cfg.clone(), 1);
+        let d2 = echo_dialer(addr.clone(), cfg.clone(), 2);
+        let (_ran, runner) = echo_runner();
+        server.serve(runner).unwrap();
+        d1.join().unwrap().unwrap();
+        d2.join().unwrap().unwrap();
+        let reject = probe.join().unwrap().unwrap();
+        assert!(
+            matches!(reject, Message::RejoinReject {
+                reason: RejectReason::EpochMismatch, .. }),
+            "expected EpochMismatch, got tag {}", reject.tag()
+        );
+    }
+
+    #[test]
+    fn mid_admit_disconnect_does_not_wedge_the_server() {
+        let mut server = SessionServer::bind("127.0.0.1:0").unwrap()
+            .with_join_timeout(Duration::from_secs(10));
+        let cfg = cfg_k(3, 5);
+        server.host(cfg.clone()).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        // Half a length word, then gone.
+        let mut ghost = TcpStream::connect(&addr).unwrap();
+        ghost.write_all(&[12, 0]).unwrap();
+        drop(ghost);
+        let d1 = echo_dialer(addr.clone(), cfg.clone(), 1);
+        let d2 = echo_dialer(addr.clone(), cfg.clone(), 2);
+        let (_ran, runner) = echo_runner();
+        let outcomes = server.serve(runner).unwrap();
+        d1.join().unwrap().unwrap();
+        d2.join().unwrap().unwrap();
+        assert!(outcomes[0].result.is_ok());
+    }
+
+    #[test]
+    fn hosting_duplicate_seeds_is_refused() {
+        let mut server = SessionServer::bind("127.0.0.1:0").unwrap();
+        server.host(cfg_k(3, 9)).unwrap();
+        let err = server.host(cfg_k(4, 9)).unwrap_err();
+        assert!(err.to_string().contains("distinct seeds"), "{err:#}");
+    }
+}

@@ -411,9 +411,28 @@ impl LaneSet {
             if let Some(h) = lane.transport.metrics() {
                 registry.bind_link(LABEL_PARTY, lane.peer, &h);
             }
+            // Pre-register the liveness family so a scrape taken before
+            // the first collect already shows every lane (all live).
+            Self::set_lane_gauges(&registry, lane.peer, 1.0, 0.0, 0.0);
         }
         self.sup = Supervisor::with_registry(self.sup.epoch(), registry);
         self
+    }
+
+    /// Publish one lane's liveness as three 0/1 gauges
+    /// (`celu_lane_live`, `celu_lane_straggling`, `celu_lane_dead`,
+    /// each labelled `peer="<id>"`): exactly one is 1 at any time, so a
+    /// multi-session scrape shows at a glance which mesh is degraded
+    /// and on which link.
+    fn set_lane_gauges(registry: &Registry, peer: PartyId, live: f64,
+                       straggling: f64, dead: f64) {
+        let p = peer.0;
+        registry.gauge(&format!("celu_lane_live{{peer=\"{p}\"}}"))
+            .set(live);
+        registry.gauge(&format!("celu_lane_straggling{{peer=\"{p}\"}}"))
+            .set(straggling);
+        registry.gauge(&format!("celu_lane_dead{{peer=\"{p}\"}}"))
+            .set(dead);
     }
 
     /// The registry this lane set emits into (private unless
@@ -579,6 +598,19 @@ impl LaneSet {
                     }
                 }
             }
+        }
+        // Liveness gauges track this round's outcome per lane: fresh →
+        // live, behind-but-alive → straggling, lost → dead.
+        for (lane, input) in self.lanes.iter().zip(&out) {
+            let (live, straggling, dead) = if !lane.alive {
+                (0.0, 0.0, 1.0)
+            } else if input.is_fresh() {
+                (1.0, 0.0, 0.0)
+            } else {
+                (0.0, 1.0, 0.0)
+            };
+            Self::set_lane_gauges(self.sup.registry(), lane.peer, live,
+                                  straggling, dead);
         }
         if all_fresh
             && matches!(self.sup.state(),
@@ -782,6 +814,7 @@ impl LaneSet {
         self.lanes[i].alive = false;
         self.lanes[i].fresh = None;
         log::warn!("[{peer}] lane lost in round {round}: {err:#}");
+        Self::set_lane_gauges(self.sup.registry(), peer, 0.0, 0.0, 1.0);
         self.sup.record(SessionEvent::PeerLost { party: peer, round });
         if matches!(self.sup.state(),
                     SessionState::Running | SessionState::Recovering) {
@@ -1082,6 +1115,8 @@ impl LaneSet {
             lane.fresh = None;
             lane.completed = round;
             lane.rejoins += 1;
+            Self::set_lane_gauges(self.sup.registry(), req.party, 1.0,
+                                  0.0, 0.0);
             log::info!(
                 "{} rejoined the session: resumes at round {round} \
                  ({replays} replayed frames)", req.party
@@ -1211,6 +1246,43 @@ mod tests {
         // supervisor-private log behaved.
         assert_eq!(lanes.take_events().len(), 1);
         assert!(reg.events().is_empty());
+    }
+
+    #[test]
+    fn lane_liveness_gauges_track_live_straggling_dead() {
+        let g = |reg: &Registry, family: &str, peer: u16| {
+            reg.gauge(&format!("{family}{{peer=\"{peer}\"}}")).get()
+        };
+        let cfg = cfg_k(3, 30);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let reg = Registry::new();
+        let mut lanes = LaneSet::new(&cfg, &label_links, None)
+            .with_registry(reg.clone());
+        // Pre-registered at bind time: every lane starts live.
+        assert_eq!(g(&reg, "celu_lane_live", 1), 1.0);
+        assert_eq!(g(&reg, "celu_lane_live", 2), 1.0);
+        assert_eq!(g(&reg, "celu_lane_dead", 1), 0.0);
+        feature_links[0].transport.send(act(0, 1.0)).unwrap();
+        feature_links[1].transport.send(act(0, 2.0)).unwrap();
+        lanes.handshake(&cfg, None).unwrap();
+        lanes.collect(0).unwrap();
+        assert_eq!(g(&reg, "celu_lane_live", 1), 1.0);
+        assert_eq!(g(&reg, "celu_lane_live", 2), 1.0);
+        // Round 1: P1 delivers, P2 misses the straggler window → its
+        // lane shows straggling, P1 stays live.
+        feature_links[0].transport.send(act(1, 3.0)).unwrap();
+        lanes.collect(1).unwrap();
+        assert_eq!(g(&reg, "celu_lane_live", 1), 1.0);
+        assert_eq!(g(&reg, "celu_lane_straggling", 1), 0.0);
+        assert_eq!(g(&reg, "celu_lane_straggling", 2), 1.0);
+        assert_eq!(g(&reg, "celu_lane_dead", 2), 0.0);
+        // P2's endpoint dies → the next collect flips it to dead.
+        feature_links[0].transport.send(act(2, 4.0)).unwrap();
+        drop(feature_links);
+        lanes.collect(2).unwrap();
+        assert_eq!(g(&reg, "celu_lane_dead", 2), 1.0);
+        assert_eq!(g(&reg, "celu_lane_live", 2), 0.0);
+        assert_eq!(g(&reg, "celu_lane_straggling", 2), 0.0);
     }
 
     #[test]

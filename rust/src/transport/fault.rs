@@ -23,10 +23,21 @@
 //!   sees the frame.
 //! - **delay-ms** — the nth outbound `send` call sleeps before
 //!   forwarding: a straggler, not a failure.
+//! - **duplicate-frame** — the nth outbound `send` call puts the frame
+//!   on the wire twice, back to back: a retransmit-after-spurious-
+//!   timeout, the failure mode that punishes receivers assuming
+//!   exactly-once delivery. Both copies are charged (both crossed the
+//!   wire), so accounting assertions see the duplicate too.
 //! - **one-way partition** — outbound frames whose round falls in
 //!   `[from, to)` are silently discarded while the inbound direction
 //!   keeps working: the asymmetric link failure that distinguishes a
 //!   straggling peer from a dead one.
+//! - **bidirectional partition** — the same round window applied to
+//!   *both* directions: outbound frames in the window are discarded as
+//!   above, and inbound frames in the window are filtered out of
+//!   `recv`/`try_recv` before the caller sees them (the peer charged
+//!   its send — the loss is on this side of the wire, exactly like a
+//!   middlebox eating traffic both ways).
 //!
 //! The wrapper forwards [`stats`](Transport::stats) to the inner
 //! transport untouched, so dropped and partitioned frames are never
@@ -62,7 +73,9 @@ pub struct FaultPlan {
     kill_at: Option<u64>,
     drops: Vec<u64>,
     delays: Vec<(u64, Duration)>,
+    duplicates: Vec<u64>,
     partition: Option<(u64, u64)>,
+    partition_both_ways: bool,
 }
 
 impl FaultPlan {
@@ -74,7 +87,9 @@ impl FaultPlan {
             kill_at: None,
             drops: Vec::new(),
             delays: Vec::new(),
+            duplicates: Vec::new(),
             partition: None,
+            partition_both_ways: false,
         }
     }
 
@@ -110,11 +125,32 @@ impl FaultPlan {
         self
     }
 
+    /// Put the `nth` outbound send call on the wire twice, back to
+    /// back: a spurious retransmit. Both copies are forwarded (and
+    /// charged) — the receiver must tolerate the duplicate.
+    pub fn duplicate_frame(mut self, nth: u64) -> Self {
+        self.duplicates.push(nth);
+        self
+    }
+
     /// One-way partition: outbound frames whose round is in
     /// `[from, to)` are silently discarded; inbound traffic is
     /// unaffected.
     pub fn partition_rounds(mut self, from: u64, to: u64) -> Self {
         self.partition = Some((from, to));
+        self.partition_both_ways = false;
+        self
+    }
+
+    /// Bidirectional partition: the `[from, to)` round window of
+    /// [`partition_rounds`](Self::partition_rounds) applied to both
+    /// directions — outbound frames in the window are discarded, and
+    /// inbound frames in the window are filtered before `recv`/
+    /// `try_recv` return.
+    pub fn partition_rounds_bidirectional(mut self, from: u64, to: u64)
+                                          -> Self {
+        self.partition = Some((from, to));
+        self.partition_both_ways = true;
         self
     }
 
@@ -131,7 +167,7 @@ impl FaultPlan {
 
 /// What the wrapper decided to do with one outbound frame.
 enum SendAction {
-    Forward(Option<Duration>),
+    Forward { delay: Option<Duration>, duplicate: bool },
     Drop,
     Kill(u64),
 }
@@ -197,16 +233,33 @@ impl FaultTransport {
             .iter()
             .find(|(n, _)| *n == nth)
             .map(|(_, d)| *d);
-        SendAction::Forward(delay)
+        SendAction::Forward {
+            delay,
+            duplicate: self.plan.duplicates.contains(&nth),
+        }
+    }
+
+    /// Whether an inbound frame is eaten by a bidirectional partition.
+    fn inbound_partitioned(&self, msg: &Message) -> bool {
+        match self.plan.partition {
+            Some((from, to)) if self.plan.partition_both_ways => {
+                let r = msg.round();
+                r >= from && r < to
+            }
+            _ => false,
+        }
     }
 }
 
 impl Transport for FaultTransport {
     fn send(&self, msg: Message) -> anyhow::Result<()> {
         match self.classify(&msg) {
-            SendAction::Forward(delay) => {
+            SendAction::Forward { delay, duplicate } => {
                 if let Some(d) = delay {
                     std::thread::sleep(d);
+                }
+                if duplicate {
+                    self.inner.send(msg.clone())?;
                 }
                 self.inner.send(msg)
             }
@@ -220,13 +273,23 @@ impl Transport for FaultTransport {
     }
 
     fn recv(&self) -> anyhow::Result<Message> {
-        self.ensure_alive()?;
-        self.inner.recv()
+        loop {
+            self.ensure_alive()?;
+            let msg = self.inner.recv()?;
+            if !self.inbound_partitioned(&msg) {
+                return Ok(msg);
+            }
+        }
     }
 
     fn try_recv(&self) -> anyhow::Result<Option<Message>> {
-        self.ensure_alive()?;
-        self.inner.try_recv()
+        loop {
+            self.ensure_alive()?;
+            match self.inner.try_recv()? {
+                Some(msg) if self.inbound_partitioned(&msg) => continue,
+                other => return Ok(other),
+            }
+        }
     }
 
     fn stats(&self) -> LinkStats {
@@ -330,6 +393,70 @@ mod tests {
         // Inbound keeps flowing: the partition is one-way.
         peer.send(act(2)).unwrap();
         assert_eq!(f.recv().unwrap().round(), 2);
+    }
+
+    #[test]
+    fn duplicate_frame_doubles_exactly_the_nth_send() {
+        let (f, peer) = wrapped(FaultPlan::new(6).duplicate_frame(1));
+        for r in 0..3 {
+            f.send(act(r)).unwrap();
+        }
+        // The nth=1 frame (round 1) arrives twice, back to back.
+        assert_eq!(peer.recv().unwrap().round(), 0);
+        assert_eq!(peer.recv().unwrap().round(), 1);
+        assert_eq!(peer.recv().unwrap().round(), 1);
+        assert_eq!(peer.recv().unwrap().round(), 2);
+        // Both copies crossed the wire, so both are charged.
+        assert_eq!(f.stats().messages, 4);
+    }
+
+    #[test]
+    fn duplicate_composes_with_delay_on_the_same_nth() {
+        let (f, peer) =
+            wrapped(FaultPlan::new(7).duplicate_frame(0).delay_ms(0, 120));
+        let start = Instant::now();
+        f.send(act(5)).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(120));
+        assert_eq!(peer.recv().unwrap().round(), 5);
+        assert_eq!(peer.recv().unwrap().round(), 5);
+    }
+
+    #[test]
+    fn bidirectional_partition_eats_both_directions() {
+        let (f, peer) =
+            wrapped(FaultPlan::new(8).partition_rounds_bidirectional(2, 4));
+        // Outbound: rounds 2 and 3 vanish, exactly like the one-way
+        // case.
+        for r in 0..5 {
+            f.send(act(r)).unwrap();
+        }
+        assert_eq!(f.stats().messages, 3);
+        assert_eq!(peer.recv().unwrap().round(), 0);
+        assert_eq!(peer.recv().unwrap().round(), 1);
+        assert_eq!(peer.recv().unwrap().round(), 4);
+        // Inbound: in-window frames are filtered before recv returns;
+        // the first out-of-window frame comes through.
+        peer.send(act(2)).unwrap();
+        peer.send(act(3)).unwrap();
+        peer.send(act(7)).unwrap();
+        assert_eq!(f.recv().unwrap().round(), 7);
+        // try_recv filters too: an in-window frame alone in the queue
+        // reads as "nothing pending".
+        peer.send(act(2)).unwrap();
+        assert!(f.try_recv().unwrap().is_none());
+        peer.send(act(9)).unwrap();
+        assert_eq!(f.try_recv().unwrap().unwrap().round(), 9);
+    }
+
+    #[test]
+    fn one_way_partition_still_lets_inbound_window_rounds_through() {
+        // Regression guard on the historic semantics: without the
+        // bidirectional flag, inbound frames inside the window pass.
+        let (f, peer) = wrapped(FaultPlan::new(10).partition_rounds(2, 4));
+        peer.send(act(2)).unwrap();
+        assert_eq!(f.recv().unwrap().round(), 2);
+        peer.send(act(3)).unwrap();
+        assert_eq!(f.try_recv().unwrap().unwrap().round(), 3);
     }
 
     #[test]

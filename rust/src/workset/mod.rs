@@ -19,6 +19,7 @@
 //!     `sample` returns `None` and the caller blocks on the comm lane.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -56,6 +57,10 @@ pub struct WorksetStats {
     pub retired_exhausted: u64,
     pub sampled: u64,
     pub bubbles: u64,
+    /// Entries evicted to honour a cross-session [`CacheBudget`] (only
+    /// nonzero for worksets attached to one via
+    /// [`MeshWorkset::with_budget`]).
+    pub evicted_budget: u64,
 }
 
 #[derive(Debug)]
@@ -95,8 +100,25 @@ impl WorksetTable {
         self.stats
     }
 
+    /// The configured capacity W.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = &WorksetEntry> {
         self.entries.iter()
+    }
+
+    /// Drop the oldest resident entry (budget-pressure eviction:
+    /// cross-*session* memory bounds, as opposed to the per-table W
+    /// window `insert` enforces). Returns whether anything was evicted.
+    pub fn evict_oldest(&mut self) -> bool {
+        if self.entries.pop_front().is_some() {
+            self.stats.evicted_budget += 1;
+            true
+        } else {
+            false
+        }
     }
 
     /// Insert a freshly-exchanged batch at communication round `round`.
@@ -232,6 +254,48 @@ pub struct MeshEntry {
 struct MeshInner {
     lanes: Vec<WorksetTable>,
     wake_epoch: u64,
+    /// Entries currently charged against the attached [`CacheBudget`]
+    /// (0, and never touched, without one).
+    charged: usize,
+}
+
+/// A global cache-entry budget shared by every [`MeshWorkset`] a
+/// multi-session server hosts: total resident entries (summed over all
+/// sessions and all lanes) stay bounded no matter how many meshes are
+/// live. Enforcement is *self-serving*: the workset whose `insert`
+/// pushes the global total over the budget evicts its **own** oldest
+/// rounds (lock-step across its lanes, so per-link exactness is
+/// untouched) until the total fits or it has nothing left to give —
+/// one session cannot evict another session's cache, it can only be
+/// asked to live within what its own inserts claim. A session that is
+/// merely *holding* entries while another session inserts keeps them
+/// until its own next insert. The instantaneous bound is therefore
+/// `max_entries` plus one round's lanes of transient overshoot per
+/// concurrently-inserting session.
+#[derive(Debug)]
+pub struct CacheBudget {
+    max_entries: usize,
+    used: AtomicUsize,
+}
+
+impl CacheBudget {
+    /// A budget of `max_entries` total resident entries.
+    pub fn new(max_entries: usize) -> Arc<Self> {
+        assert!(max_entries >= 1, "a cache budget must admit ≥ 1 entry");
+        Arc::new(CacheBudget {
+            max_entries,
+            used: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn max_entries(&self) -> usize {
+        self.max_entries
+    }
+
+    /// Entries currently charged (all attached worksets summed).
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::SeqCst)
+    }
 }
 
 /// A sampling decision made under the mesh lock. The single-lane case
@@ -277,6 +341,7 @@ enum Picked {
 pub struct MeshWorkset {
     inner: Mutex<MeshInner>,
     on_insert: Condvar,
+    budget: Option<Arc<CacheBudget>>,
 }
 
 impl MeshWorkset {
@@ -290,13 +355,39 @@ impl MeshWorkset {
                     .map(|_| WorksetTable::new(capacity, max_uses, policy))
                     .collect(),
                 wake_epoch: 0,
+                charged: 0,
             }),
             on_insert: Condvar::new(),
+            budget: None,
         }
+    }
+
+    /// Attach this workset to a cross-session [`CacheBudget`]. Without
+    /// one (the default, and every single-session run) nothing changes
+    /// — no counter is even touched.
+    pub fn with_budget(mut self, budget: Arc<CacheBudget>) -> Self {
+        self.budget = Some(budget);
+        self
     }
 
     pub fn lanes(&self) -> usize {
         self.inner.lock().unwrap().lanes.len()
+    }
+
+    /// Reconcile the attached budget's global counter with this
+    /// workset's current residency. Must run under the mesh lock after
+    /// anything that changed a lane's length (insert, retirement at R,
+    /// eviction).
+    fn settle(&self, inner: &mut MeshInner) {
+        if let Some(b) = &self.budget {
+            let now: usize = inner.lanes.iter().map(|l| l.len()).sum();
+            if now >= inner.charged {
+                b.used.fetch_add(now - inner.charged, Ordering::SeqCst);
+            } else {
+                b.used.fetch_sub(inner.charged - now, Ordering::SeqCst);
+            }
+            inner.charged = now;
+        }
     }
 
     /// Insert round `round` into every lane atomically: `stats[k]` is
@@ -311,6 +402,24 @@ impl MeshWorkset {
                    "one (za, dza) pair per lane");
         for (lane, (za, dza)) in inner.lanes.iter_mut().zip(stats) {
             lane.insert(round, indices.clone(), za, dza);
+        }
+        self.settle(&mut inner);
+        // Budget pressure: the inserting workset pays with its own
+        // oldest rounds, popped lock-step across its lanes so the
+        // mirrored sampling state machines stay identical. The entry
+        // just inserted is never evicted (a session always keeps at
+        // least its freshest round — otherwise a tight budget would
+        // starve local updates entirely instead of merely shortening
+        // the staleness window).
+        if let Some(b) = &self.budget {
+            while b.used() > b.max_entries
+                && inner.lanes[0].len() > 1
+            {
+                for lane in inner.lanes.iter_mut() {
+                    lane.evict_oldest();
+                }
+                self.settle(&mut inner);
+            }
         }
         drop(inner);
         self.on_insert.notify_all();
@@ -383,7 +492,10 @@ impl MeshWorkset {
 
     /// Non-blocking aggregate sample; `Ok(None)` on a §3.2 bubble.
     pub fn sample(&self) -> anyhow::Result<Option<MeshEntry>> {
-        let picked = Self::sample_locked(&mut self.inner.lock().unwrap())?;
+        let mut inner = self.inner.lock().unwrap();
+        let picked = Self::sample_locked(&mut inner)?;
+        self.settle(&mut inner); // retirement at R shrinks residency
+        drop(inner);
         picked.map(Self::finalize).transpose()
     }
 
@@ -397,6 +509,7 @@ impl MeshWorkset {
                           -> anyhow::Result<Option<MeshEntry>> {
         let mut inner = self.inner.lock().unwrap();
         if let Some(p) = Self::sample_locked(&mut inner)? {
+            self.settle(&mut inner);
             drop(inner); // aggregate outside the lock
             return Self::finalize(p).map(Some);
         }
@@ -407,6 +520,7 @@ impl MeshWorkset {
                 deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 let picked = Self::sample_locked(&mut inner)?;
+                self.settle(&mut inner);
                 drop(inner);
                 return picked.map(Self::finalize).transpose();
             }
@@ -414,6 +528,7 @@ impl MeshWorkset {
                 self.on_insert.wait_timeout(inner, remaining).unwrap();
             inner = guard;
             if let Some(p) = Self::sample_locked(&mut inner)? {
+                self.settle(&mut inner);
                 drop(inner);
                 return Self::finalize(p).map(Some);
             }
@@ -441,6 +556,25 @@ impl MeshWorkset {
 
     pub fn is_empty(&self) -> bool {
         self.inner.lock().unwrap().lanes[0].is_empty()
+    }
+
+    /// Fill fraction of the primary lane: resident entries over W, in
+    /// [0, 1] — the `celu_workset_fill` trainer gauge. Lanes are
+    /// lock-step, so the primary stands for all.
+    pub fn fill(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        inner.lanes[0].len() as f64 / inner.lanes[0].capacity() as f64
+    }
+}
+
+impl Drop for MeshWorkset {
+    fn drop(&mut self) {
+        // Return this workset's residency to the shared budget: a
+        // session ending must free its share for the meshes still live.
+        if let Some(b) = &self.budget {
+            let inner = self.inner.get_mut().unwrap();
+            b.used.fetch_sub(inner.charged, Ordering::SeqCst);
+        }
     }
 }
 
@@ -891,5 +1025,87 @@ mod mesh_tests {
         std::thread::sleep(Duration::from_millis(50));
         mesh.wake_all();
         assert!(waiter.join().unwrap().is_none());
+    }
+
+    // -- cross-session cache budget ------------------------------------------
+
+    #[test]
+    fn budget_charges_and_settles_across_worksets() {
+        let budget = CacheBudget::new(100);
+        let a = MeshWorkset::new(2, 4, 1, Sampling::Consecutive)
+            .with_budget(budget.clone());
+        let b = MeshWorkset::new(1, 4, 10, Sampling::Consecutive)
+            .with_budget(budget.clone());
+        a.insert(0, vec![], vec![(t(0.0), t(0.0)), (t(1.0), t(0.0))]);
+        b.insert(0, vec![], vec![(t(0.0), t(0.0))]);
+        assert_eq!(budget.used(), 3); // 2 lanes + 1 lane
+        // Retirement at R=1 settles the charge down.
+        assert!(a.sample().unwrap().is_some());
+        assert_eq!(budget.used(), 1);
+        // A dropped workset returns its residency.
+        drop(b);
+        assert_eq!(budget.used(), 0);
+    }
+
+    #[test]
+    fn over_budget_insert_evicts_its_own_oldest_rounds() {
+        let budget = CacheBudget::new(3);
+        let hog = MeshWorkset::new(1, 8, 10, Sampling::RoundRobin)
+            .with_budget(budget.clone());
+        for round in 0..3u64 {
+            hog.insert(round, vec![], vec![(t(0.0), t(0.0))]);
+        }
+        assert_eq!(budget.used(), 3);
+        let tenant = MeshWorkset::new(1, 8, 10, Sampling::RoundRobin)
+            .with_budget(budget.clone());
+        // The tenant's insert overflows the budget; it pays with its
+        // own cache, which only has the fresh entry — kept (a session
+        // never evicts below one round), so the transient overshoot is
+        // bounded at one round's lanes.
+        tenant.insert(0, vec![], vec![(t(0.0), t(0.0))]);
+        assert_eq!(tenant.len(), 1);
+        assert_eq!(budget.used(), 4);
+        // The hog's next insert sees the pressure and sheds its own
+        // oldest rounds until the global total fits again: 4 resident
+        // after the insert (5 with the tenant's), evict 0 and 1, stop
+        // at used == 3.
+        hog.insert(3, vec![], vec![(t(0.0), t(0.0))]);
+        assert_eq!(hog.len(), 2);
+        assert_eq!(budget.used(), 3);
+        assert_eq!(hog.stats().evicted_budget, 2);
+        assert_eq!(tenant.stats().evicted_budget, 0);
+    }
+
+    #[test]
+    fn budget_eviction_keeps_mesh_lanes_in_lock_step() {
+        let budget = CacheBudget::new(4);
+        let mesh = MeshWorkset::new(2, 8, 10, Sampling::RoundRobin)
+            .with_budget(budget.clone());
+        for round in 0..4u64 {
+            let base = round as f32;
+            mesh.insert(round, vec![round as u32],
+                        vec![(t(base), t(0.0)), (t(base + 1.0), t(0.0))]);
+        }
+        // 4 rounds × 2 lanes = 8 charged > 4: evicted down lock-step.
+        assert!(budget.used() <= 4);
+        assert_eq!(mesh.len(), 2);
+        // Sampling still aggregates consistent rounds (no out-of-step
+        // lane error) and the sum is per-round exact.
+        let e = mesh.sample().unwrap().unwrap();
+        assert_eq!(e.za.as_f32().unwrap(),
+                   &[e.round as f32 * 2.0 + 1.0]);
+    }
+
+    #[test]
+    fn fill_reports_the_primary_lane_fraction() {
+        let ws = MeshWorkset::new(2, 4, 10, Sampling::RoundRobin);
+        assert_eq!(ws.fill(), 0.0);
+        ws.insert(0, vec![], vec![(t(0.0), t(0.0)), (t(0.0), t(0.0))]);
+        assert_eq!(ws.fill(), 0.25);
+        for round in 1..6u64 {
+            ws.insert(round, vec![], vec![(t(0.0), t(0.0)),
+                                          (t(0.0), t(0.0))]);
+        }
+        assert_eq!(ws.fill(), 1.0); // capped at W
     }
 }
