@@ -51,6 +51,48 @@ impl Algorithm {
     }
 }
 
+/// Valid `--data-format` / `data_format =` values.
+pub const VALID_DATA_FORMATS: &str = "csv | libsvm | synthetic";
+
+/// Where training rows come from (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataFormat {
+    /// `key,label,f0,…` rows streamed from `--data` in chunks.
+    Csv,
+    /// `label idx:val …` rows streamed from `--data` in chunks.
+    Libsvm,
+    /// The in-memory generator (historic default; no `--data`).
+    Synthetic,
+}
+
+impl DataFormat {
+    /// Parse a CLI/TOML format name; the error lists the menu.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "csv" => Ok(DataFormat::Csv),
+            "libsvm" => Ok(DataFormat::Libsvm),
+            "synthetic" => Ok(DataFormat::Synthetic),
+            _ => anyhow::bail!(
+                "unknown data format '{s}' — valid values: \
+                 {VALID_DATA_FORMATS}"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DataFormat::Csv => "csv",
+            DataFormat::Libsvm => "libsvm",
+            DataFormat::Synthetic => "synthetic",
+        }
+    }
+
+    /// Does this format stream from an on-disk file?
+    pub fn is_streaming(self) -> bool {
+        !matches!(self, DataFormat::Synthetic)
+    }
+}
+
 /// Local-sampling strategy for the workset table (paper §3.2 / Figure 4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Sampling {
@@ -143,6 +185,24 @@ pub struct RunConfig {
     /// Label noise: probability a teacher label is flipped.
     pub label_noise: f64,
 
+    // data plane (DESIGN.md §12)
+    /// On-disk table for the streaming formats (`--data`). Empty with
+    /// `data_format = synthetic` (the historic in-memory generator).
+    pub data: String,
+    /// Row source: csv | libsvm | synthetic (`--data-format`).
+    pub data_format: DataFormat,
+    /// Rows per streaming window (`--chunk-rows`) — the constant-memory
+    /// bound: no party materializes more training rows than this.
+    pub chunk_rows: usize,
+    /// Expected aligned (PSI-intersection) fraction in (0, 1]
+    /// (`--overlap`). 1.0 is the historic fully-aligned regime and is
+    /// byte-identical to it on the wire.
+    pub overlap: f64,
+    /// Self-supervised local updates each feature party runs on
+    /// unaligned rows per communication round (`--ssl-ratio`); only
+    /// meaningful at overlap < 1. 0 disables SSL work.
+    pub ssl_ratio: usize,
+
     // environment
     pub wan: WanProfile,
     /// Extra artificial compute slow-down per step (secs) — used by the
@@ -196,6 +256,11 @@ impl RunConfig {
             train_instances: 40_000,
             test_instances: 8_000,
             label_noise: 0.05,
+            data: String::new(),
+            data_format: DataFormat::Synthetic,
+            chunk_rows: 4096,
+            overlap: 1.0,
+            ssl_ratio: 1,
             wan: WanProfile::instant(),
             compute_delay_s: 0.0,
             straggler_wait_ms: 0,
@@ -310,6 +375,34 @@ impl RunConfig {
         if self.checkpoint_every == 0 {
             anyhow::bail!("checkpoint_every must be ≥1");
         }
+        if !(0.0..=1.0).contains(&self.overlap) || self.overlap == 0.0 {
+            anyhow::bail!("overlap must be in (0, 1], got {}",
+                          self.overlap);
+        }
+        if self.chunk_rows == 0 {
+            anyhow::bail!("chunk_rows must be ≥1");
+        }
+        if self.data_format.is_streaming() {
+            if self.data.is_empty() {
+                anyhow::bail!(
+                    "data_format {} streams from disk — pass --data <path>",
+                    self.data_format.name()
+                );
+            }
+            if !self.checkpoint_dir.is_empty() {
+                anyhow::bail!(
+                    "checkpointing replays the batch cursor from round 0, \
+                     which streaming windows cannot do — drop \
+                     --checkpoint-dir or use --data-format synthetic"
+                );
+            }
+        } else if !self.data.is_empty() {
+            anyhow::bail!(
+                "--data is set but data_format is synthetic (which \
+                 generates rows in memory) — pass --data-format csv \
+                 or libsvm"
+            );
+        }
         if self.straggler_wait_ms > 3_600_000 {
             anyhow::bail!(
                 "straggler_wait_ms must be ≤ 3600000 (one hour), got {}",
@@ -356,6 +449,12 @@ impl RunConfig {
             test_instances: doc.usize_or("test_instances",
                                          base.test_instances)?,
             label_noise: doc.f64_or("label_noise", base.label_noise)?,
+            data: doc.str_or("data", &base.data)?,
+            data_format: DataFormat::parse(&doc.str_or(
+                "data_format", base.data_format.name())?)?,
+            chunk_rows: doc.usize_or("chunk_rows", base.chunk_rows)?,
+            overlap: doc.f64_or("overlap", base.overlap)?,
+            ssl_ratio: doc.usize_or("ssl_ratio", base.ssl_ratio)?,
             wan: WanProfile {
                 bandwidth_mbps: doc.f64_or("wan.bandwidth_mbps",
                                            base.wan.bandwidth_mbps)?,
@@ -610,6 +709,51 @@ mod tests {
         let mut cfg = RunConfig::quick();
         cfg.straggler_wait_ms = 3_600_001;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn data_plane_config_parses_and_validates() {
+        let base = RunConfig::quick();
+        assert_eq!(base.data_format, DataFormat::Synthetic);
+        assert_eq!(base.data, "");
+        assert_eq!(base.overlap, 1.0);
+        assert_eq!(base.chunk_rows, 4096);
+        let cfg = RunConfig::from_toml(
+            "data = \"rows.csv\"\ndata_format = \"csv\"\n\
+             chunk_rows = 512\noverlap = 0.3\nssl_ratio = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.data, "rows.csv");
+        assert_eq!(cfg.data_format, DataFormat::Csv);
+        assert_eq!(cfg.chunk_rows, 512);
+        assert_eq!(cfg.overlap, 0.3);
+        assert_eq!(cfg.ssl_ratio, 2);
+        // The format menu follows the CLI parse-error convention.
+        let e = DataFormat::parse("parquet").unwrap_err().to_string();
+        for valid in ["csv", "libsvm", "synthetic"] {
+            assert!(e.contains(valid), "error must list '{valid}': {e}");
+        }
+        // Streaming needs a path; synthetic must not get one.
+        let e = RunConfig::from_toml("data_format = \"csv\"\n")
+            .unwrap_err().to_string();
+        assert!(e.contains("--data"), "{e}");
+        let e = RunConfig::from_toml("data = \"rows.csv\"\n")
+            .unwrap_err().to_string();
+        assert!(e.contains("synthetic"), "{e}");
+        // Streaming is incompatible with checkpoint replay.
+        let e = RunConfig::from_toml(
+            "data = \"r.csv\"\ndata_format = \"libsvm\"\n\
+             checkpoint_dir = \"ckpts\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("checkpoint"), "{e}");
+        // Overlap bounds are (0, 1].
+        for bad in ["overlap = 0.0\n", "overlap = 1.5\n",
+                    "overlap = -0.2\n"] {
+            assert!(RunConfig::from_toml(bad).is_err(), "{bad}");
+        }
+        assert!(RunConfig::from_toml("chunk_rows = 0\n").is_err());
     }
 
     #[test]

@@ -40,8 +40,9 @@ use std::time::Duration;
 
 use crate::compress::{self, CodecKind};
 use crate::config::RunConfig;
-use crate::data::batcher::{gather_a_with, BatchCursor, GatherScratch};
+use crate::data::batcher::{gather_a_with, GatherScratch};
 use crate::data::PartyAData;
+use crate::dataset::{corrupt_tokens, FeatureFeed};
 use crate::metrics::facade::{CounterSink, EventSink, NullSink, Registry};
 use crate::metrics::CosineRecorder;
 use crate::protocol::{outbound_stats, Lane, Message};
@@ -52,9 +53,19 @@ use crate::session::supervisor::session_epoch;
 use crate::session::{Link, PartyId, LABEL_PARTY};
 use crate::tensor::Tensor;
 use crate::transport::Transport;
+use crate::util::rng::Pcg;
 use crate::workset::{MeshWorkset, WorksetStats};
 
 use super::{eval_batch_count, feature_seed, Ctrl, BUBBLE_PARK};
+
+/// Token-corruption probability of the denoising SSL step (DESIGN.md
+/// §12). Fixed rather than configurable: the step is a regularizer, and
+/// one fewer knob keeps the lock-step config surface small.
+const SSL_CORRUPT_RATE: f32 = 0.15;
+
+/// Pcg stream for the feature party's SSL corruption draws — disjoint
+/// from the feed's reservoir stream and every schedule stream.
+const SSL_NOISE_STREAM: u64 = 0x55e1_c0de_0f_a015;
 
 /// How a feature party gets back into a session it fell out of.
 #[derive(Debug, Clone)]
@@ -96,6 +107,9 @@ pub struct FeaturePartyReport {
     pub comm_rounds: u64,
     pub exact_updates: u64,
     pub local_updates: u64,
+    /// Self-supervised denoising updates on unaligned rows (zero wire
+    /// traffic — DESIGN.md §12). 0 unless the feed carries an SSL pool.
+    pub ssl_updates: u64,
     pub workset: WorksetStats,
     pub cosine: CosineRecorder,
     /// Successful re-admissions performed during the run.
@@ -105,11 +119,18 @@ pub struct FeaturePartyReport {
 /// Run feature party `party` to completion (until Shutdown from the
 /// label party, a transport error with no rejoin policy, or a failed
 /// rejoin) over its mesh link.
+///
+/// Training rows arrive through `feed` — either the in-memory feed
+/// (historic behaviour, byte-identical wire) or a streaming feed over
+/// an on-disk table (DESIGN.md §12). The feed also decides whether the
+/// party does self-supervised work: when it pools unaligned rows,
+/// every communication round is followed by `cfg.ssl_ratio` denoising
+/// local updates that never touch the wire.
 pub fn run_feature_party(
     cfg: &RunConfig,
     party: PartyId,
     set: Arc<ArtifactSet>,
-    train: Arc<PartyAData>,
+    mut feed: FeatureFeed,
     test: Arc<PartyAData>,
     link: &Link,
     opts: FeatureRunOpts,
@@ -153,7 +174,7 @@ pub fn run_feature_party(
         let runtime = runtime.clone();
         let workset = workset.clone();
         let ctrl = ctrl.clone();
-        let train = train.clone();
+        let share = feed.share();
         let cosine = cosine.clone();
         Some(std::thread::Builder::new()
             .name(format!("feature-{}-local", party.0))
@@ -166,7 +187,16 @@ pub fn run_feature_party(
                     // elapses, re-checking the stop flag) — no busy-wait.
                     match workset.sample_or_wait(BUBBLE_PARK)? {
                         Some(e) => {
-                            let xa = gather_a_with(&train, &e.indices,
+                            // A consistent (table, floor) snapshot: an
+                            // entry below the floor was cached against
+                            // a window the streaming feed has dropped —
+                            // its indices no longer address these rows.
+                            // (In-memory feeds never move the floor.)
+                            let (table, floor) = share.snapshot();
+                            if e.round < floor {
+                                continue;
+                            }
+                            let xa = gather_a_with(&table, &e.indices,
                                                    &mut scratch);
                             let ws = runtime
                                 .lock()
@@ -185,8 +215,10 @@ pub fn run_feature_party(
     };
 
     // ---- comm worker (this thread) ----------------------------------------
-    let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
     let mut scratch = GatherScratch::default();
+    let mut ssl_rng =
+        Pcg::new(feature_seed(cfg.seed, party), SSL_NOISE_STREAM);
+    let vocab = set.manifest.vocab;
     let eval_batches = eval_batch_count(cfg, test.n, batch);
     let mut comm_rounds = opts.start_round;
     let mut transport: Arc<dyn Transport> = link.transport.clone();
@@ -244,10 +276,9 @@ pub fn run_feature_party(
         } else {
             CodecKind::Identity
         };
-        // Fast-forward the deterministic batch schedule to the first
-        // round this party runs (non-zero when the session resumed
-        // from a checkpoint).
-        let mut taken: u64 = 0;
+        // The feed fast-forwards its deterministic schedule to the
+        // first round this party runs (non-zero when the session
+        // resumed from a checkpoint).
         let mut round: u64 = opts.start_round;
         // The in-flight round preserved across a rejoin, so the round
         // can be re-run (or its replayed derivative applied) without
@@ -300,35 +331,30 @@ pub fn run_feature_party(
         };
         // Where lock-step resumes after a rejoin. A resume round
         // *behind* our progress means the label restarted from a
-        // checkpoint older than we got to: rebuild the deterministic
-        // batch cursor and rewind (our model keeps the extra rounds'
+        // checkpoint older than we got to: replay the deterministic
+        // feed from round 0 (our model keeps the extra rounds'
         // updates; the staleness-tolerant algorithm absorbs that).
-        let resume_at = |resume: u64, cursor: &mut BatchCursor,
-                         taken: &mut u64, comm_rounds: &mut u64|
-         -> u64 {
+        // Streaming feeds cannot replay — `reset` fails the rejoin
+        // loudly instead of silently desynchronizing the schedule.
+        let resume_at = |resume: u64, feed: &mut FeatureFeed,
+                         comm_rounds: &mut u64|
+         -> anyhow::Result<u64> {
             if resume < *comm_rounds {
                 log::warn!(
                     "[{party}] label resumed behind this party (round \
-                     {resume} < {}) — rewinding the batch cursor",
+                     {resume} < {}) — rewinding the batch feed",
                     *comm_rounds
                 );
-                *cursor = BatchCursor::new(cfg.seed, train.n, batch);
-                *taken = 0;
+                feed.reset()?;
                 *comm_rounds = resume;
             }
-            resume.max(*comm_rounds)
+            Ok(resume.max(*comm_rounds))
         };
         'rounds: while round < cfg.max_rounds as u64 {
             let (idx, xa, za_raw) = match pending.take() {
                 Some(p) if p.round == round => (p.idx, p.xa, p.za),
                 _ => {
-                    while taken < round {
-                        cursor.next_indices();
-                        taken += 1;
-                    }
-                    let idx = cursor.next_indices();
-                    taken += 1;
-                    let xa = gather_a_with(&train, &idx, &mut scratch);
+                    let (idx, xa) = feed.batch(round, &mut scratch)?;
                     let za = runtime.lock().unwrap().forward(&xa)?;
                     (idx, xa, za)
                 }
@@ -350,8 +376,7 @@ pub fn run_feature_party(
                         round, idx, xa, za: za_raw,
                     });
                 }
-                round = resume_at(resume, &mut cursor, &mut taken,
-                                  &mut comm_rounds);
+                round = resume_at(resume, &mut feed, &mut comm_rounds)?;
                 continue 'rounds;
             }
             // Block on ∇Z (the local worker keeps training meanwhile).
@@ -412,14 +437,31 @@ pub fn run_feature_party(
                             round, idx, xa, za: za_raw,
                         });
                     }
-                    round = resume_at(resume, &mut cursor, &mut taken,
-                                      &mut comm_rounds);
+                    round = resume_at(resume, &mut feed, &mut comm_rounds)?;
                     continue 'rounds;
                 }
             };
             runtime.lock().unwrap().exact_update(&xa, &dza)?;
             workset.insert(round, idx, vec![(za, dza)]);
             comm_rounds = round + 1;
+            // Streaming feeds move their window floor as chunks are
+            // consumed; entries cached against dropped windows must
+            // stop being sampled (in-memory: floor stays 0 — no-op).
+            workset.retire_below(feed.floor());
+
+            // SSL lane (DESIGN.md §12): label-free denoising updates on
+            // the unaligned-row reservoir, interleaved at a fixed ratio
+            // per communication round. Zero wire traffic by
+            // construction — nothing here touches the transport.
+            for _ in 0..cfg.ssl_ratio {
+                let Some(clean) = feed.ssl_batch(&mut scratch) else {
+                    break;
+                };
+                let noisy = corrupt_tokens(&clean, vocab,
+                                           SSL_CORRUPT_RATE,
+                                           &mut ssl_rng)?;
+                runtime.lock().unwrap().ssl_update(&clean, &noisy)?;
+            }
 
             // Checkpoint lane (DESIGN.md §9), symmetric to the label
             // party's §8 lane: snapshot at the round boundary so a
@@ -467,8 +509,8 @@ pub fn run_feature_party(
                         let (resume, _replays) = do_rejoin(
                             &e, &mut transport, &mut rejoins,
                             comm_rounds)?;
-                        round = resume_at(resume, &mut cursor,
-                                          &mut taken, &mut comm_rounds);
+                        round = resume_at(resume, &mut feed,
+                                          &mut comm_rounds)?;
                         continue 'rounds;
                     }
                 }
@@ -492,7 +534,10 @@ pub fn run_feature_party(
     };
     result?;
 
-    let exact_updates = runtime.lock().unwrap().exact_updates;
+    let (exact_updates, ssl_updates) = {
+        let rt = runtime.lock().unwrap();
+        (rt.exact_updates, rt.ssl_updates)
+    };
     let ws_stats = workset.stats();
     let cosine = Arc::try_unwrap(cosine)
         .map(|m| m.into_inner().unwrap())
@@ -502,6 +547,7 @@ pub fn run_feature_party(
         comm_rounds,
         exact_updates,
         local_updates,
+        ssl_updates,
         workset: ws_stats,
         cosine,
         rejoins,

@@ -37,8 +37,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::config::RunConfig;
-use crate::data::batcher::{gather_b_with, BatchCursor, GatherScratch};
+use crate::data::batcher::{gather_b_with, GatherScratch};
 use crate::data::PartyBData;
+use crate::dataset::LabelFeed;
 use crate::metrics::facade::Registry;
 use crate::metrics::{auc_exact, CosineRecorder, SeriesPoint};
 use crate::runtime::{ArtifactSet, PartyBRuntime};
@@ -103,10 +104,15 @@ pub enum StopReason {
     TimeBudget,
 }
 
+/// Run the label party to completion. Training rows arrive through
+/// `feed` — in-memory (historic behaviour, byte-identical wire) or
+/// streaming over an on-disk table (DESIGN.md §12); the feed's window
+/// schedule is the same pure function of `(seed, window)` every
+/// feature party computes, so lock-step needs no extra coordination.
 pub fn run_label_party(
     cfg: &RunConfig,
     set: Arc<ArtifactSet>,
-    train: Arc<PartyBData>,
+    mut feed: LabelFeed,
     test: Arc<PartyBData>,
     links: &[Link],
     opts: LabelRunOpts,
@@ -176,7 +182,7 @@ pub fn run_label_party(
         let runtime = runtime.clone();
         let workset = workset.clone();
         let ctrl = ctrl.clone();
-        let train = train.clone();
+        let share = feed.share();
         let cosine = cosine.clone();
         let loss_ema = loss_ema.clone();
         Some(std::thread::Builder::new()
@@ -189,7 +195,14 @@ pub fn run_label_party(
                     // sampled entry carries the aggregate Σ_k Z_k.
                     match workset.sample_or_wait(BUBBLE_PARK)? {
                         Some(e) => {
-                            let (xb, y) = gather_b_with(&train, &e.indices,
+                            // Entries below the feed's window floor were
+                            // cached against rows a streaming feed has
+                            // dropped — skip them (in-memory: floor 0).
+                            let (table, floor) = share.snapshot();
+                            if e.round < floor {
+                                continue;
+                            }
+                            let (xb, y) = gather_b_with(&table, &e.indices,
                                                         &mut scratch);
                             let (loss, ws) = runtime
                                 .lock()
@@ -209,13 +222,10 @@ pub fn run_label_party(
     };
 
     // ---- comm worker + control plane (this thread) -------------------------
-    let mut cursor = BatchCursor::new(cfg.seed, train.n, batch);
-    // The batch schedule is a pure function of (seed, round): a resumed
-    // session fast-forwards to the checkpoint round so every party
-    // gathers the same instances for the same round numbers.
-    for _ in 0..start_round {
-        cursor.next_indices();
-    }
+    // The batch schedule is a pure function of (seed, round): on a
+    // checkpoint resume the feed fast-forwards to the checkpoint round
+    // so every party gathers the same instances for the same round
+    // numbers.
     let mut scratch = GatherScratch::default();
     let eval_batches = eval_batch_count(cfg, test.n, batch);
     let start = Instant::now();
@@ -240,8 +250,7 @@ pub fn run_label_party(
         )?;
         for round in start_round..cfg.max_rounds as u64 {
             let round_start = Instant::now();
-            let idx = cursor.next_indices();
-            let (xb, y) = gather_b_with(&train, &idx, &mut scratch);
+            let (idx, xb, y) = feed.batch(round, &mut scratch)?;
             // Collect this round's activation from every lane: fresh
             // when the peer delivered inside the straggler budget,
             // stale (its cached last activation — weighted down by the
@@ -285,6 +294,10 @@ pub fn run_label_party(
                     })
                     .collect();
                 workset.insert(round, idx, cached);
+                // Streaming feeds advance their window floor as chunks
+                // are consumed; cached entries from dropped windows
+                // must stop being sampled (in-memory: floor 0, no-op).
+                workset.retire_below(feed.floor());
             } else {
                 // A lane that never contributed has no Z_k to cache; a
                 // partial K-tuple would desynchronize the per-peer

@@ -44,6 +44,7 @@ use std::time::Duration;
 
 use crate::config::RunConfig;
 use crate::data::{PartyAData, PartyBData};
+use crate::dataset::{FeatureFeed, LabelFeed};
 use crate::runtime::ArtifactSet;
 use crate::session::{Link, PartyId};
 use crate::transport::Transport;
@@ -90,7 +91,8 @@ pub fn run_party_a(
     // A raw transport carries no join-time codec mask, so the in-band
     // Hello path (the historic wire) applies.
     let link = Link::new(LABEL_PARTY, transport);
-    run_feature_party(cfg, PartyId(1), set, train, test, &link,
+    let feed = FeatureFeed::in_memory(train, cfg.seed, set.manifest.batch);
+    run_feature_party(cfg, PartyId(1), set, feed, test, &link,
                       FeatureRunOpts::default())
 }
 
@@ -104,7 +106,8 @@ pub fn run_party_b(
     transport: Arc<dyn Transport>,
 ) -> anyhow::Result<LabelPartyReport> {
     let links = [Link::new(PartyId(1), transport)];
-    run_label_party(cfg, set, train, test, &links,
+    let feed = LabelFeed::in_memory(train, cfg.seed, set.manifest.batch);
+    run_label_party(cfg, set, feed, test, &links,
                     LabelRunOpts::default())
 }
 

@@ -15,19 +15,25 @@
 //! parties) reuse the compiled executables.
 
 use std::collections::HashMap;
+use std::ops::Range;
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::config::RunConfig;
-use crate::data::{PartyAData, SynthDataset};
+use crate::config::{DataFormat, RunConfig};
+use crate::data::{self, PartyAData, PartyBData, SynthDataset};
+use crate::dataset::{read_prefix, slice_rows_a, slice_rows_b,
+                     split_synthetic, subset_a, subset_b, AlignmentMap,
+                     CsvSource, DatasetSource, FeatureFeed, LabelFeed,
+                     LibsvmSource};
 use crate::metrics::facade::Registry;
 use crate::metrics::{MetricsExporter, RunRecord, RunRecordObserver};
 use crate::runtime::ArtifactSet;
 use crate::session::bootstrap::inproc_mesh;
 use crate::session::{PartyId, SessionBuilder};
 
-use super::feature_party::FeaturePartyReport;
-use super::label_party::{LabelPartyReport, StopReason};
+use super::feature_party::{FeaturePartyReport, FeatureRunOpts};
+use super::label_party::{LabelPartyReport, LabelRunOpts, StopReason};
 
 /// Outcome of one training run.
 pub struct TrainOutcome {
@@ -107,22 +113,208 @@ pub fn feature_slices(
     Ok((train_slices, test_slices))
 }
 
+/// Open a fresh chunked reader over `cfg.data` (csv / libsvm formats).
+/// Every party opens its own handle — K readers over one file is the
+/// in-proc mirror of K processes each holding their vertical slice.
+pub fn open_source(cfg: &RunConfig, set: &ArtifactSet)
+                   -> anyhow::Result<Box<dyn DatasetSource + Send>> {
+    let (fa, fb) = data::dataset_fields(&cfg.dataset)?;
+    let fields = fa + fb;
+    let vocab = set.manifest.vocab;
+    let path = Path::new(&cfg.data);
+    Ok(match cfg.data_format {
+        DataFormat::Csv => Box::new(CsvSource::open(path, fields, vocab)?),
+        DataFormat::Libsvm => {
+            Box::new(LibsvmSource::open(path, fields, vocab)?)
+        }
+        DataFormat::Synthetic => anyhow::bail!(
+            "data_format synthetic has no on-disk source"),
+    })
+}
+
+/// File columns owned by feature slot `slot` (0-based; party id is
+/// `slot + 1`). The file lays Party-A fields first, then the label
+/// party's, and feature slices use the exact `vertical_split`
+/// arithmetic — so a CSV round-trip of a synthetic table lands every
+/// column on the same party.
+fn stream_cols_a(cfg: &RunConfig, slot: usize)
+                 -> anyhow::Result<Range<usize>> {
+    let (fa, _) = data::dataset_fields(&cfg.dataset)?;
+    let widths = data::split_widths(fa, cfg.feature_parties())?;
+    let start: usize = widths[..slot].iter().sum();
+    Ok(start..start + widths[slot])
+}
+
+/// Rows reserved at the head of the file as the held-out evaluation
+/// prefix: enough for the configured eval walk, never more than
+/// `test_instances` — the bounded materialization the streaming plan
+/// allows itself.
+fn eval_prefix_rows(cfg: &RunConfig, batch: usize) -> usize {
+    cfg.test_instances
+        .min(cfg.eval_batches.max(1) * batch)
+        .max(batch)
+}
+
+/// Build feature slot `slot`'s streaming data plane: a window feed over
+/// its columns of `cfg.data` plus its materialized eval-prefix slice.
+pub fn feature_stream_plan(
+    cfg: &RunConfig,
+    set: &ArtifactSet,
+    slot: usize,
+) -> anyhow::Result<(FeatureFeed, Arc<PartyAData>)> {
+    let cols = stream_cols_a(cfg, slot)?;
+    anyhow::ensure!(
+        cols.len() == set.manifest.fields_a,
+        "artifact set '{}' compiles a {}-field bottom model but feature \
+         party {} streams {} of the file's columns — compile per-party \
+         artifacts (python/compile/aot.py --parties {}) for --parties {}",
+        cfg.artifact_tag(), set.manifest.fields_a, slot + 1, cols.len(),
+        cfg.parties, cfg.parties
+    );
+    let batch = set.manifest.batch;
+    let mut src = open_source(cfg, set)?;
+    let test_rows = eval_prefix_rows(cfg, batch);
+    let prefix = read_prefix(src.as_mut(), test_rows, cfg.chunk_rows)?;
+    let rows: Vec<u32> = (0..prefix.rows() as u32).collect();
+    let test = Arc::new(slice_rows_a(&prefix, &rows, &cols));
+    src.rewind()?;
+    let feed = FeatureFeed::streaming(
+        src, cols, AlignmentMap::new(cfg.seed, cfg.overlap), cfg.seed,
+        batch, cfg.chunk_rows, test_rows,
+    )?;
+    Ok((feed, test))
+}
+
+/// Build the label party's streaming data plane (its columns follow
+/// every feature party's in the file).
+pub fn label_stream_plan(
+    cfg: &RunConfig,
+    set: &ArtifactSet,
+) -> anyhow::Result<(LabelFeed, Arc<PartyBData>)> {
+    let (fa, fb) = data::dataset_fields(&cfg.dataset)?;
+    anyhow::ensure!(
+        fb == set.manifest.fields_b,
+        "artifact set '{}' compiles a {}-field label bottom model but \
+         dataset '{}' carries {} label-party columns",
+        cfg.artifact_tag(), set.manifest.fields_b, cfg.dataset, fb
+    );
+    let cols = fa..fa + fb;
+    let batch = set.manifest.batch;
+    let mut src = open_source(cfg, set)?;
+    let test_rows = eval_prefix_rows(cfg, batch);
+    let prefix = read_prefix(src.as_mut(), test_rows, cfg.chunk_rows)?;
+    let rows: Vec<u32> = (0..prefix.rows() as u32).collect();
+    let test = Arc::new(slice_rows_b(&prefix, &rows, &cols));
+    src.rewind()?;
+    let feed = LabelFeed::streaming(
+        src, cols, AlignmentMap::new(cfg.seed, cfg.overlap), cfg.seed,
+        batch, cfg.chunk_rows, test_rows,
+    )?;
+    Ok((feed, test))
+}
+
+/// Row split of a fully-materialized synthetic run at `cfg.overlap`:
+/// aligned rows (trained through the CELU cache path on every party)
+/// and unaligned rows (each feature party's SSL reservoir). Full
+/// overlap returns `None` — the historic zero-copy path applies.
+pub fn synthetic_overlap_split(
+    cfg: &RunConfig,
+    batch: usize,
+    n: usize,
+) -> anyhow::Result<Option<(Vec<u32>, Vec<u32>)>> {
+    if cfg.overlap >= 1.0 {
+        return Ok(None);
+    }
+    let (aligned, unaligned) = split_synthetic(cfg.seed, cfg.overlap, n);
+    anyhow::ensure!(
+        aligned.len() >= batch,
+        "overlap {} leaves {} aligned rows of {n} — fewer than one batch \
+         ({batch}); raise --overlap or train_instances",
+        cfg.overlap, aligned.len()
+    );
+    Ok(Some((aligned, unaligned)))
+}
+
+/// Wrap one feature party's materialized slice in a feed, applying the
+/// overlap split: aligned rows train through the CELU cache path,
+/// unaligned rows become the party's SSL reservoir. Full overlap wraps
+/// the table zero-copy — the historic byte-identical path. Shared by
+/// the in-proc trainer and the TCP deployment.
+pub fn feature_memory_plan(
+    cfg: &RunConfig,
+    set: &ArtifactSet,
+    train: PartyAData,
+    test: PartyAData,
+) -> anyhow::Result<(FeatureFeed, Arc<PartyAData>)> {
+    let batch = set.manifest.batch;
+    let feed = match synthetic_overlap_split(cfg, batch, train.n)? {
+        Some((aligned, unaligned)) => FeatureFeed::in_memory(
+            Arc::new(subset_a(&train, &aligned)), cfg.seed, batch,
+        )
+        .with_ssl_pool(subset_a(&train, &unaligned)),
+        None => FeatureFeed::in_memory(Arc::new(train), cfg.seed, batch),
+    };
+    Ok((feed, Arc::new(test)))
+}
+
+/// Label-side mirror of [`feature_memory_plan`]. The label party keeps
+/// no SSL reservoir — its unaligned rows are simply dropped, exactly as
+/// post-PSI training discards out-of-intersection labels.
+pub fn label_memory_plan(
+    cfg: &RunConfig,
+    set: &ArtifactSet,
+    train: PartyBData,
+    test: PartyBData,
+) -> anyhow::Result<(LabelFeed, Arc<PartyBData>)> {
+    let batch = set.manifest.batch;
+    let train = match synthetic_overlap_split(cfg, batch, train.n)? {
+        Some((aligned, _)) => Arc::new(subset_b(&train, &aligned)),
+        None => Arc::new(train),
+    };
+    Ok((LabelFeed::in_memory(train, cfg.seed, batch), Arc::new(test)))
+}
+
 /// Run one full K-party training job in-process (K = `cfg.parties`;
 /// 2 is the classic two-party run).
 pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
     cfg.validate()?;
     let set = load_set(cfg)?;
-    anyhow::ensure!(
-        cfg.train_instances >= set.manifest.batch,
-        "train_instances {} < batch {}", cfg.train_instances,
-        set.manifest.batch
-    );
+    let batch = set.manifest.batch;
     let k = cfg.feature_parties();
-    let data = load_data(cfg, &set)?;
-    let (train_slices, test_slices) =
-        feature_slices(cfg, &set, data.train_a, data.test_a)?;
-    let train_b = Arc::new(data.train_b);
-    let test_b = Arc::new(data.test_b);
+
+    // Data plane (DESIGN.md §12): one feed + held-out table per party.
+    // Synthetic at full overlap is the historic zero-copy path — the
+    // feeds wrap the generated tables through shared `Arc`s and replay
+    // the batch-cursor sequence verbatim, keeping the wire
+    // byte-identical. Partial overlap splits rows once (one map, every
+    // party) before wrapping; csv/libsvm stream windows from disk.
+    let (feature_plans, label_feed, test_b):
+        (Vec<(FeatureFeed, Arc<PartyAData>)>, LabelFeed, Arc<PartyBData>) =
+        if cfg.data_format.is_streaming() {
+            let plans = (0..k)
+                .map(|slot| feature_stream_plan(cfg, &set, slot))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let (feed_b, test_b) = label_stream_plan(cfg, &set)?;
+            (plans, feed_b, test_b)
+        } else {
+            anyhow::ensure!(
+                cfg.train_instances >= batch,
+                "train_instances {} < batch {}", cfg.train_instances,
+                batch
+            );
+            let data = load_data(cfg, &set)?;
+            let (train_slices, test_slices) =
+                feature_slices(cfg, &set, data.train_a, data.test_a)?;
+            let plans = train_slices
+                .into_iter()
+                .zip(test_slices)
+                .map(|(train, test)|
+                    feature_memory_plan(cfg, &set, train, test))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let (feed_b, test_b) =
+                label_memory_plan(cfg, &set, data.train_b, data.test_b)?;
+            (plans, feed_b, test_b)
+        };
 
     // Same bootstrap surface as the TCP deployment: the in-proc star is
     // just the pre-wired MeshBootstrap, so the trainer exercises the
@@ -139,28 +331,27 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
 
     let start = Instant::now();
     let mut handles = Vec::with_capacity(k);
-    for ((i, bootstrap), (train, test)) in feature_bootstraps
+    for ((i, bootstrap), (feed, test)) in feature_bootstraps
         .into_iter()
         .enumerate()
-        .zip(train_slices.into_iter().zip(test_slices))
+        .zip(feature_plans)
     {
         let party = PartyId(i as u16 + 1);
         let session = SessionBuilder::bootstrap_builder(cfg, bootstrap)?
             .with_registry(registry.clone())
             .build()?;
         let set_f = set.clone();
-        let train = Arc::new(train);
-        let test = Arc::new(test);
         handles.push(
             std::thread::Builder::new()
                 .name(format!("feature-{}", party.0))
                 .spawn(move || -> anyhow::Result<FeaturePartyReport> {
-                    session.run_feature(set_f, train, test)
+                    session.run_feature_data(set_f, feed, test,
+                                             FeatureRunOpts::default())
                 })?,
         );
     }
-    let b_report: LabelPartyReport =
-        label_session.run_label(set.clone(), train_b, test_b)?;
+    let b_report: LabelPartyReport = label_session.run_label_data(
+        set.clone(), label_feed, test_b, LabelRunOpts::default())?;
     let mut feature_reports = Vec::with_capacity(k);
     for h in handles {
         feature_reports.push(h.join().expect("feature party panicked")?);
@@ -188,6 +379,8 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
         .all(|r| r.comm_rounds == b_report.comm_rounds));
     let feature_local_updates: Vec<u64> =
         feature_reports.iter().map(|r| r.local_updates).collect();
+    let feature_ssl_updates: Vec<u64> =
+        feature_reports.iter().map(|r| r.ssl_updates).collect();
     let primary = feature_reports.swap_remove(0);
     let record = RunRecord {
         label: format!("{}/{}", cfg.algorithm.name(), cfg.artifact_tag()),
@@ -198,6 +391,7 @@ pub fn run_training(cfg: &RunConfig) -> anyhow::Result<TrainOutcome> {
         exact_updates: b_report.exact_updates,
         local_updates: b_report.local_updates,
         feature_local_updates,
+        feature_ssl_updates,
         links,
         comm_busy,
         wall,

@@ -17,14 +17,34 @@ pub mod batcher;
 
 use crate::util::rng::Pcg;
 
+/// Dataset presets with Table-1 field splits, for error menus.
+pub const VALID_DATASETS: &str = "criteo | avazu | d3";
+
 /// Field counts per dataset (paper Table 1).
 pub fn dataset_fields(name: &str) -> anyhow::Result<(usize, usize)> {
     match name {
         "criteo" => Ok((26, 13)),
         "avazu" => Ok((14, 8)),
         "d3" => Ok((25, 18)),
-        _ => anyhow::bail!("unknown dataset '{name}'"),
+        _ => anyhow::bail!(
+            "unknown dataset '{name}' — valid values: {VALID_DATASETS}"
+        ),
     }
+}
+
+/// Column widths of [`PartyAData::vertical_split`] without the data:
+/// near-equal contiguous slices, first `fields % k` one column wider.
+/// The streaming data plane uses this to slice file columns per party
+/// with the exact arithmetic the in-memory splitter uses.
+pub fn split_widths(fields: usize, k: usize) -> anyhow::Result<Vec<usize>> {
+    anyhow::ensure!(k >= 1, "vertical split needs ≥ 1 slice");
+    anyhow::ensure!(
+        k <= fields,
+        "cannot split {fields} fields across {k} feature parties"
+    );
+    let base = fields / k;
+    let extra = fields % k;
+    Ok((0..k).map(|s| base + usize::from(s < extra)).collect())
 }
 
 /// Party A's vertical slice: features only, never labels.
@@ -239,6 +259,29 @@ mod tests {
         let (fa, fb) = dataset_fields("avazu").unwrap();
         assert_eq!((fa, fb), (14, 8));
         assert!(dataset_fields("imagenet").is_err());
+    }
+
+    #[test]
+    fn unknown_dataset_error_lists_the_menu() {
+        let err = dataset_fields("imagenet").unwrap_err().to_string();
+        assert!(err.contains("unknown dataset 'imagenet'"), "{err}");
+        assert!(err.contains("criteo | avazu | d3"), "{err}");
+    }
+
+    #[test]
+    fn split_widths_match_vertical_split() {
+        let ds = tiny(); // criteo: 26 A-side fields
+        for k in 1..=5 {
+            let widths = split_widths(26, k).unwrap();
+            let slices = ds.train_a.vertical_split(k).unwrap();
+            assert_eq!(
+                widths,
+                slices.iter().map(|s| s.fields).collect::<Vec<_>>()
+            );
+            assert_eq!(widths.iter().sum::<usize>(), 26);
+        }
+        assert!(split_widths(26, 0).is_err());
+        assert!(split_widths(4, 5).is_err());
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Alignment plane: which rows are shared across parties, and where.
+//!
+//! Real VFL deployments run PSI first; only the intersection of the
+//! parties' populations is trainable with exchanged statistics. The
+//! [`AlignmentMap`] reproduces that split *deterministically from the
+//! row key alone*: every party hashes each key with the shared session
+//! seed and keeps it iff the hash fraction falls below the configured
+//! overlap. Because membership is a pure function of `(seed, key)`,
+//! K parties scanning vertical slices of the same table agree on the
+//! aligned subset — and on the order of aligned rows, which is their
+//! appearance order in the stream (the PSI-sorted-key convention) —
+//! without exchanging a byte.
+//!
+//! `overlap = 1.0` is exact: every key is aligned and the aligned
+//! ordering is the identity, which is what lets the fully-aligned
+//! configuration stay byte-identical to the historical data path.
+
+use crate::data::{PartyAData, PartyBData};
+
+/// Stream salt for alignment hashing — disjoint from the batch
+/// (0xba7c_4ed0), data (0xDA7A…), and kill (0xFA17) streams.
+const ALIGN_STREAM: u64 = 0xa119_6e6d_a90f_5eed;
+
+/// Deterministic membership test for the aligned (PSI-intersection)
+/// sample set, parameterized by the shared seed and target overlap
+/// fraction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlignmentMap {
+    seed: u64,
+    overlap: f64,
+}
+
+impl AlignmentMap {
+    /// `overlap` is the expected aligned fraction in `(0, 1]`.
+    pub fn new(seed: u64, overlap: f64) -> Self {
+        assert!(
+            overlap > 0.0 && overlap <= 1.0,
+            "overlap must be in (0, 1], got {overlap}"
+        );
+        AlignmentMap { seed, overlap }
+    }
+
+    pub fn overlap(&self) -> f64 {
+        self.overlap
+    }
+
+    /// Is the row with this key in the aligned set?
+    pub fn is_aligned(&self, key: &str) -> bool {
+        if self.overlap >= 1.0 {
+            return true; // exact, not a float comparison
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in (self.seed ^ ALIGN_STREAM).to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        for &b in key.as_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        // Map the hash to [0, 1) with 53 usable bits.
+        let frac = (h >> 11) as f64 / (1u64 << 53) as f64;
+        frac < self.overlap
+    }
+
+    /// Partition row offsets `0..keys.len()` into (aligned, unaligned),
+    /// each in appearance order.
+    pub fn split(&self, keys: &[String]) -> (Vec<u32>, Vec<u32>) {
+        let mut aligned = Vec::new();
+        let mut unaligned = Vec::new();
+        for (i, key) in keys.iter().enumerate() {
+            if self.is_aligned(key) {
+                aligned.push(i as u32);
+            } else {
+                unaligned.push(i as u32);
+            }
+        }
+        (aligned, unaligned)
+    }
+}
+
+/// Split synthetic row ordinals `0..n` by the same hash the file path
+/// uses (keys are the ordinals' decimal strings, matching
+/// [`SyntheticSource`](super::SyntheticSource)).
+pub fn split_synthetic(
+    seed: u64,
+    overlap: f64,
+    n: usize,
+) -> (Vec<u32>, Vec<u32>) {
+    let map = AlignmentMap::new(seed, overlap);
+    let keys: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+    map.split(&keys)
+}
+
+/// Materialize the selected rows of an A-side table, in order.
+pub fn subset_a(data: &PartyAData, rows: &[u32]) -> PartyAData {
+    let f = data.fields;
+    let mut x = Vec::with_capacity(rows.len() * f);
+    for &r in rows {
+        let r = r as usize;
+        x.extend_from_slice(&data.x[r * f..(r + 1) * f]);
+    }
+    PartyAData { fields: f, x, n: rows.len() }
+}
+
+/// Materialize the selected rows of the label-side table, in order.
+pub fn subset_b(data: &PartyBData, rows: &[u32]) -> PartyBData {
+    let f = data.fields;
+    let mut x = Vec::with_capacity(rows.len() * f);
+    let mut y = Vec::with_capacity(rows.len());
+    for &r in rows {
+        let r = r as usize;
+        x.extend_from_slice(&data.x[r * f..(r + 1) * f]);
+        y.push(data.y[r]);
+    }
+    PartyBData { fields: f, x, y, n: rows.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::data::SynthDataset;
+    use crate::testing::prop::check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    use super::*;
+
+    #[test]
+    fn overlap_fraction_is_honored() {
+        check("alignment-fraction", |rng| {
+            let seed = rng.next_u64();
+            // Overlaps in [0.1, 1.0] over a few thousand keys.
+            let overlap = 0.1 + 0.9 * rng.next_f64();
+            let n = 2000 + rng.gen_range(2000) as usize;
+            let (aligned, unaligned) = split_synthetic(seed, overlap, n);
+            prop_assert_eq!(aligned.len() + unaligned.len(), n);
+            let got = aligned.len() as f64 / n as f64;
+            // Binomial(n, p) concentrates: 5 sigma + slack.
+            let tol = 5.0 * (overlap * (1.0 - overlap) / n as f64).sqrt()
+                + 0.01;
+            prop_assert!(
+                (got - overlap).abs() <= tol,
+                "overlap {overlap:.3} yielded fraction {got:.3} over {n}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parties_agree_under_the_shared_seed() {
+        check("alignment-agreement", |rng| {
+            let seed = rng.next_u64();
+            let overlap = 0.05 + 0.95 * rng.next_f64();
+            let map_a = AlignmentMap::new(seed, overlap);
+            let map_b = AlignmentMap::new(seed, overlap);
+            let keys: Vec<String> =
+                (0..512).map(|_| format!("u{}", rng.next_u64())).collect();
+            // Same keys, same seed → identical aligned offsets AND
+            // identical aligned ordering (the shared index space).
+            prop_assert_eq!(map_a.split(&keys), map_b.split(&keys));
+            // A different seed must not systematically agree.
+            let other = AlignmentMap::new(seed ^ 0x1, overlap);
+            if overlap <= 0.9 {
+                prop_assert!(
+                    other.split(&keys).0 != map_a.split(&keys).0
+                        || overlap < 0.051,
+                    "independent seeds produced identical aligned sets"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_overlap_is_the_identity() {
+        let (aligned, unaligned) = split_synthetic(42, 1.0, 1000);
+        assert_eq!(aligned, (0..1000u32).collect::<Vec<_>>());
+        assert!(unaligned.is_empty());
+        // And exact for arbitrary keys, not just ordinals.
+        let map = AlignmentMap::new(7, 1.0);
+        assert!(map.is_aligned("anything-at-all"));
+    }
+
+    #[test]
+    fn membership_is_independent_of_position() {
+        let map = AlignmentMap::new(9, 0.4);
+        let keys: Vec<String> = (0..64).map(|i| format!("k{i}")).collect();
+        let (aligned, _) = map.split(&keys);
+        let mut rev = keys.clone();
+        rev.reverse();
+        let (rev_aligned, _) = map.split(&rev);
+        let mapped: Vec<u32> =
+            rev_aligned.iter().rev().map(|&i| 63 - i).collect();
+        assert_eq!(aligned, mapped);
+    }
+
+    #[test]
+    fn subsets_gather_rows_in_order() {
+        let ds = SynthDataset::generate("avazu", 50, 100, 10, 0.0, 3)
+            .unwrap();
+        let rows = vec![5u32, 17, 3];
+        let a = subset_a(&ds.train_a, &rows);
+        let b = subset_b(&ds.train_b, &rows);
+        assert_eq!(a.n, 3);
+        assert_eq!(b.n, 3);
+        let f = ds.train_a.fields;
+        assert_eq!(&a.x[f..2 * f], &ds.train_a.x[17 * f..18 * f]);
+        assert_eq!(b.y, vec![ds.train_b.y[5], ds.train_b.y[17],
+                             ds.train_b.y[3]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap must be in (0, 1]")]
+    fn zero_overlap_rejected() {
+        AlignmentMap::new(1, 0.0);
+    }
+}

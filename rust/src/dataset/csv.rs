@@ -1,0 +1,220 @@
+//! Chunked CSV reader: `key,label,f0,…,f{F-1}` → hashed token rows.
+//!
+//! Layout contract (documented in DESIGN.md §12): column 0 is the
+//! opaque alignment key (the PSI join key), column 1 the binary label,
+//! then exactly `fields` raw feature strings — Party A's columns first,
+//! Party B's last, mirroring `SynthDataset`'s `(fa, fb)` split. Every
+//! party reads the same file (or an identically-ordered vertical
+//! export of it) and slices its own columns after hashing, so the
+//! reader itself is party-agnostic.
+//!
+//! Raw values are hashed with [`feature_token`](super::feature_token) —
+//! there is no vocabulary file; unseen strings land in the same id
+//! space the embedding tables were compiled for. Hostile rows
+//! (truncated lines, non-numeric labels, wrong arity) fail with the
+//! line and column spelled out.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom};
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{feature_token, parse_label, DatasetSource, RowChunk};
+
+/// Streaming CSV source over any seekable buffered reader (a file in
+/// production, an in-memory cursor in tests and fixtures).
+pub struct CsvSource<R> {
+    reader: R,
+    fields: usize,
+    vocab: usize,
+    /// 1-based line number of the next line to be read.
+    line: u64,
+    /// Global ordinal of the next row to be yielded.
+    row: u64,
+}
+
+impl CsvSource<BufReader<File>> {
+    /// Open an on-disk CSV with `fields` feature columns hashed into
+    /// `vocab` ids.
+    pub fn open(path: &Path, fields: usize, vocab: usize) -> Result<Self> {
+        let file = File::open(path).map_err(
+            |e| anyhow::anyhow!("open csv {}: {e}", path.display()))?;
+        Ok(CsvSource::from_reader(BufReader::new(file), fields, vocab))
+    }
+}
+
+impl<R: BufRead + Seek> CsvSource<R> {
+    pub fn from_reader(reader: R, fields: usize, vocab: usize) -> Self {
+        assert!(fields > 0 && vocab > 0);
+        CsvSource { reader, fields, vocab, line: 1, row: 0 }
+    }
+
+    fn parse_line(&self, raw: &str) -> Result<(String, f32, Vec<i32>)> {
+        let line = self.line;
+        let cols: Vec<&str> = raw.split(',').collect();
+        let want = self.fields + 2;
+        if cols.len() != want {
+            bail!(
+                "line {line}: expected {want} columns (key + label + {} \
+                 features), got {}",
+                self.fields,
+                cols.len()
+            );
+        }
+        let key = cols[0].trim();
+        if key.is_empty() {
+            bail!("line {line}, column 1: empty alignment key");
+        }
+        let label = parse_label(cols[1], line, 2).map_err(|e| {
+            if line == 1 {
+                anyhow::anyhow!(
+                    "{e} (is the first line a header? the reader expects \
+                     raw rows)"
+                )
+            } else {
+                e
+            }
+        })?;
+        let tokens = cols[2..]
+            .iter()
+            .enumerate()
+            .map(|(f, raw)| feature_token(f, raw.trim(), self.vocab))
+            .collect();
+        Ok((key.to_string(), label, tokens))
+    }
+}
+
+impl<R: BufRead + Seek> DatasetSource for CsvSource<R> {
+    fn fields(&self) -> usize {
+        self.fields
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn next_chunk(&mut self, max_rows: usize) -> Result<Option<RowChunk>> {
+        assert!(max_rows > 0, "chunk size must be positive");
+        let mut chunk = RowChunk {
+            keys: Vec::new(),
+            labels: Vec::new(),
+            tokens: Vec::new(),
+            fields: self.fields,
+            base: self.row,
+        };
+        let mut buf = String::new();
+        while chunk.rows() < max_rows {
+            buf.clear();
+            let n = self.reader.read_line(&mut buf)?;
+            if n == 0 {
+                break; // end of stream
+            }
+            let trimmed = buf.trim_end_matches(['\n', '\r']);
+            if trimmed.is_empty() {
+                self.line += 1;
+                continue; // blank separators are tolerated
+            }
+            let (key, label, tokens) = self.parse_line(trimmed)?;
+            chunk.keys.push(key);
+            chunk.labels.push(label);
+            chunk.tokens.extend(tokens);
+            self.line += 1;
+            self.row += 1;
+        }
+        if chunk.rows() == 0 {
+            return Ok(None);
+        }
+        Ok(Some(chunk))
+    }
+
+    fn rewind(&mut self) -> Result<()> {
+        self.reader.seek(SeekFrom::Start(0))?;
+        self.line = 1;
+        self.row = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Cursor;
+
+    use super::*;
+
+    fn src(text: &str, fields: usize) -> CsvSource<Cursor<&[u8]>> {
+        CsvSource::from_reader(Cursor::new(text.as_bytes()), fields, 97)
+    }
+
+    #[test]
+    fn golden_chunk_layout() {
+        let text = "u1,1,ad3,site9\nu2,0,ad3,site4\nu3,1,ad7,site9\n";
+        let mut s = src(text, 2);
+        let c = s.next_chunk(2).unwrap().unwrap();
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.base, 0);
+        assert_eq!(c.keys, vec!["u1", "u2"]);
+        assert_eq!(c.labels, vec![1.0, 0.0]);
+        // Same raw string, same column → same token across rows.
+        assert_eq!(c.tokens[0], feature_token(0, "ad3", 97));
+        assert_eq!(c.tokens[2], feature_token(0, "ad3", 97));
+        assert_eq!(c.tokens[1], feature_token(1, "site9", 97));
+        let tail = s.next_chunk(8).unwrap().unwrap();
+        assert_eq!(tail.rows(), 1);
+        assert_eq!(tail.base, 2);
+        assert_eq!(tail.keys, vec!["u3"]);
+        assert!(s.next_chunk(8).unwrap().is_none());
+    }
+
+    #[test]
+    fn rewind_replays_identically() {
+        let text = "u1,1,a,b\nu2,0,c,d\nu3,1,e,f\n";
+        let mut s = src(text, 2);
+        let first = s.next_chunk(10).unwrap().unwrap();
+        s.rewind().unwrap();
+        let again = s.next_chunk(10).unwrap().unwrap();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn truncated_line_names_line_and_arity() {
+        let text = "u1,1,a,b\nu2,0,c\n";
+        let mut s = src(text, 2);
+        let err = s.next_chunk(10).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("expected 4 columns"), "{err}");
+        assert!(err.contains("got 3"), "{err}");
+    }
+
+    #[test]
+    fn non_numeric_label_names_line_and_column() {
+        let text = "u1,1,a,b\nu2,clicked,c,d\n";
+        let mut s = src(text, 2);
+        let err = s.next_chunk(10).unwrap_err().to_string();
+        assert!(err.contains("line 2, column 2"), "{err}");
+    }
+
+    #[test]
+    fn header_row_gets_a_hint() {
+        let text = "key,label,f0,f1\nu1,1,a,b\n";
+        let mut s = src(text, 2);
+        let err = s.next_chunk(10).unwrap_err().to_string();
+        assert!(err.contains("line 1, column 2"), "{err}");
+        assert!(err.contains("header"), "{err}");
+    }
+
+    #[test]
+    fn empty_key_rejected() {
+        let text = ",1,a,b\n";
+        let err = src(text, 2).next_chunk(4).unwrap_err().to_string();
+        assert!(err.contains("line 1, column 1"), "{err}");
+    }
+
+    #[test]
+    fn blank_lines_are_skipped_but_counted() {
+        let text = "u1,1,a,b\n\nu2,bad,c,d\n";
+        let mut s = src(text, 2);
+        let err = s.next_chunk(10).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+    }
+}

@@ -1,0 +1,787 @@
+//! Batch feeds: one interface between the party loops and the data
+//! plane, with two implementations.
+//!
+//! - **In-memory** — wraps the historical `(table, BatchCursor)` pair
+//!   and reproduces its index sequence verbatim, so fully-materialized
+//!   runs (synthetic, or synthetic with an overlap split) stay
+//!   byte-identical on the wire to the pre-feed code.
+//! - **Streaming** — consumes a [`DatasetSource`] in *windows* of
+//!   `chunk_rows` raw rows. Within a window the aligned rows (per the
+//!   shared [`AlignmentMap`]) form the training set: `aligned / batch`
+//!   communication rounds are scheduled over them with the same
+//!   seeded [`BatchSchedule`] on every party, then the window is
+//!   dropped and the next chunk read — constant memory, deterministic
+//!   lockstep, zero coordination traffic. Windows with fewer than
+//!   `batch` aligned rows are skipped identically everywhere; end of
+//!   stream rewinds (an epoch); a full pass with no usable window is
+//!   an error. Unaligned rows of the current window pool into the
+//!   feed's SSL reservoir for label-free local updates.
+//!
+//! Local-update workers observe the feed through a [`FeedShare`]: a
+//! `(table, floor)` snapshot where `floor` is the first round served
+//! from the live window. Workset entries below the floor refer to a
+//! retired window and must be skipped (the comm loop also calls
+//! `MeshWorkset::retire_below` so they stop being sampled at all).
+
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::data::batcher::{
+    gather_a_with, gather_b_with, BatchCursor, BatchSchedule, GatherScratch,
+};
+use crate::data::{PartyAData, PartyBData};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+use super::align::AlignmentMap;
+use super::{DatasetSource, RowChunk};
+
+/// Pcg stream for SSL reservoir sampling + denoising corruption —
+/// disjoint from batch/data/align/kill streams.
+const SSL_STREAM: u64 = 0x55e1_0e11_ab5e_ed01;
+
+/// Table handle shared between a feed (writer) and local-update
+/// workers (readers). `snapshot()` returns the live table plus the
+/// `floor`: the first communication round whose cached statistics were
+/// computed against this table. Entries with `round < floor` belong
+/// to a retired window and must not be gathered against the new one.
+#[derive(Debug)]
+pub struct FeedShare<T> {
+    inner: Mutex<(Arc<T>, u64)>,
+}
+
+impl<T> FeedShare<T> {
+    fn new(data: Arc<T>) -> Arc<Self> {
+        Arc::new(FeedShare { inner: Mutex::new((data, 0)) })
+    }
+
+    /// Consistent (table, floor) pair.
+    pub fn snapshot(&self) -> (Arc<T>, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.0.clone(), g.1)
+    }
+
+    pub fn floor(&self) -> u64 {
+        self.inner.lock().unwrap().1
+    }
+
+    fn publish(&self, data: Arc<T>, floor: u64) {
+        *self.inner.lock().unwrap() = (data, floor);
+    }
+}
+
+/// Deterministic usable-window iterator over a chunked source, shared
+/// by the feature and label feeds so their window boundaries agree.
+struct ChunkWindows {
+    source: Box<dyn DatasetSource + Send>,
+    align: AlignmentMap,
+    chunk_rows: usize,
+    /// Evaluation-prefix rows skipped after every rewind.
+    skip_rows: usize,
+    batch: usize,
+    /// Raw training chunks consumed — the window ordinal, which seeds
+    /// the per-window batch schedule on every party identically.
+    chunk_ord: u64,
+    usable_seen: bool,
+}
+
+impl ChunkWindows {
+    fn new(
+        mut source: Box<dyn DatasetSource + Send>,
+        align: AlignmentMap,
+        batch: usize,
+        chunk_rows: usize,
+        skip_rows: usize,
+    ) -> Result<Self> {
+        assert!(batch > 0);
+        if chunk_rows < batch {
+            bail!(
+                "chunk_rows ({chunk_rows}) must be at least the batch \
+                 size ({batch}) — no window could ever hold a full batch"
+            );
+        }
+        skip(source.as_mut(), skip_rows, chunk_rows)?;
+        Ok(ChunkWindows {
+            source,
+            align,
+            chunk_rows,
+            skip_rows,
+            batch,
+            chunk_ord: 0,
+            usable_seen: false,
+        })
+    }
+
+    /// Next window holding at least one full aligned batch: the raw
+    /// chunk, its aligned and unaligned row offsets, and the window
+    /// ordinal. Rewinds at end of stream; errors if a complete pass
+    /// yields nothing usable.
+    fn next_window(&mut self) -> Result<(RowChunk, Vec<u32>, Vec<u32>, u64)> {
+        loop {
+            match self.source.next_chunk(self.chunk_rows)? {
+                None => {
+                    if !self.usable_seen {
+                        bail!(
+                            "no window of {} rows holds {} aligned rows at \
+                             overlap {} — grow --chunk-rows or the overlap",
+                            self.chunk_rows,
+                            self.batch,
+                            self.align.overlap()
+                        );
+                    }
+                    self.usable_seen = false;
+                    self.source.rewind()?;
+                    skip(self.source.as_mut(), self.skip_rows,
+                         self.chunk_rows)?;
+                }
+                Some(chunk) => {
+                    let ord = self.chunk_ord;
+                    self.chunk_ord += 1;
+                    let (aligned, unaligned) = self.align.split(&chunk.keys);
+                    if aligned.len() < self.batch {
+                        continue; // skipped identically on every party
+                    }
+                    self.usable_seen = true;
+                    return Ok((chunk, aligned, unaligned, ord));
+                }
+            }
+        }
+    }
+}
+
+/// Discard `rows` rows in bounded pieces (the evaluation prefix).
+fn skip(
+    source: &mut dyn DatasetSource,
+    rows: usize,
+    chunk_rows: usize,
+) -> Result<()> {
+    let mut left = rows;
+    while left > 0 {
+        let want = left.min(chunk_rows);
+        match source.next_chunk(want)? {
+            Some(c) => left = left.saturating_sub(c.rows()),
+            None => bail!(
+                "dataset ends inside the {rows}-row evaluation prefix"
+            ),
+        }
+    }
+    Ok(())
+}
+
+/// This party's columns of the chunk's selected rows, as an A table.
+pub fn slice_rows_a(chunk: &RowChunk, rows: &[u32], cols: &Range<usize>)
+    -> PartyAData
+{
+    let f = cols.len();
+    let w = chunk.fields;
+    let mut x = Vec::with_capacity(rows.len() * f);
+    for &r in rows {
+        let r = r as usize;
+        x.extend_from_slice(&chunk.tokens[r * w + cols.start
+                                          ..r * w + cols.end]);
+    }
+    PartyAData { fields: f, x, n: rows.len() }
+}
+
+/// The label party's columns + labels of the selected rows.
+pub fn slice_rows_b(chunk: &RowChunk, rows: &[u32], cols: &Range<usize>)
+    -> PartyBData
+{
+    let a = slice_rows_a(chunk, rows, cols);
+    let y = rows.iter().map(|&r| chunk.labels[r as usize]).collect();
+    PartyBData { fields: a.fields, x: a.x, y, n: a.n }
+}
+
+/// Per-window schedule state shared by both feed flavours.
+struct WindowCursor {
+    windows: ChunkWindows,
+    cols: Range<usize>,
+    schedule: BatchSchedule,
+    rounds_in_window: usize,
+    used: usize,
+    seed: u64,
+}
+
+enum Mode {
+    InMemory { cursor: BatchCursor, n: usize },
+    Stream(WindowCursor),
+}
+
+/// A feature party's batch feed (see module docs).
+pub struct FeatureFeed {
+    mode: Mode,
+    share: Arc<FeedShare<PartyAData>>,
+    batch: usize,
+    seed: u64,
+    taken: u64,
+    ssl_pool: Option<Arc<PartyAData>>,
+    ssl_rng: Pcg,
+}
+
+impl FeatureFeed {
+    /// Wrap a fully-materialized table; reproduces the historical
+    /// `BatchCursor` sequence exactly (the table `Arc` is shared, not
+    /// copied — full-overlap runs stay zero-copy).
+    pub fn in_memory(train: Arc<PartyAData>, seed: u64, batch: usize)
+        -> Self
+    {
+        let n = train.n;
+        FeatureFeed {
+            mode: Mode::InMemory {
+                cursor: BatchCursor::new(seed, n, batch),
+                n,
+            },
+            share: FeedShare::new(train),
+            batch,
+            seed,
+            taken: 0,
+            ssl_pool: None,
+            ssl_rng: Pcg::new(seed, SSL_STREAM),
+        }
+    }
+
+    /// Attach an unaligned-row reservoir for self-supervised updates.
+    pub fn with_ssl_pool(mut self, pool: PartyAData) -> Self {
+        self.ssl_pool = Some(Arc::new(pool));
+        self
+    }
+
+    /// Stream this party's `cols` from a chunked source (see module
+    /// docs for the window protocol). `skip_rows` is the evaluation
+    /// prefix every party reserves before training rows begin.
+    pub fn streaming(
+        source: Box<dyn DatasetSource + Send>,
+        cols: Range<usize>,
+        align: AlignmentMap,
+        seed: u64,
+        batch: usize,
+        chunk_rows: usize,
+        skip_rows: usize,
+    ) -> Result<Self> {
+        let mut windows =
+            ChunkWindows::new(source, align, batch, chunk_rows, skip_rows)?;
+        let (chunk, aligned, unaligned, ord) = windows.next_window()?;
+        let window = Arc::new(slice_rows_a(&chunk, &aligned, &cols));
+        let pool = slice_rows_a(&chunk, &unaligned, &cols);
+        let schedule = BatchSchedule::new(seed, ord, aligned.len(), batch);
+        let rounds_in_window = aligned.len() / batch;
+        Ok(FeatureFeed {
+            mode: Mode::Stream(WindowCursor {
+                windows,
+                cols,
+                schedule,
+                rounds_in_window,
+                used: 0,
+                seed,
+            }),
+            share: FeedShare::new(window),
+            batch,
+            seed,
+            taken: 0,
+            ssl_pool: Some(Arc::new(pool)),
+            ssl_rng: Pcg::new(seed, SSL_STREAM),
+        })
+    }
+
+    /// Handle for local-update workers.
+    pub fn share(&self) -> Arc<FeedShare<PartyAData>> {
+        self.share.clone()
+    }
+
+    /// First round served from the live window (0 while in-memory).
+    pub fn floor(&self) -> u64 {
+        self.share.floor()
+    }
+
+    /// Rows in the live training table.
+    pub fn len(&self) -> usize {
+        self.share.snapshot().0.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Batch indices + gathered features for `round`, fast-forwarding
+    /// past any rounds this feed has not yet served (resume path).
+    pub fn batch(&mut self, round: u64, scratch: &mut GatherScratch)
+        -> Result<(Vec<u32>, Tensor)>
+    {
+        let idx = self.indices_for(round)?;
+        let (data, _) = self.share.snapshot();
+        let xa = gather_a_with(&data, &idx, scratch);
+        Ok((idx, xa))
+    }
+
+    /// A `[batch, F]` sample of unaligned rows (with replacement), or
+    /// `None` when no reservoir is attached or it is empty.
+    pub fn ssl_batch(&mut self, scratch: &mut GatherScratch)
+        -> Option<Tensor>
+    {
+        let pool = self.ssl_pool.as_ref()?.clone();
+        if pool.n == 0 {
+            return None;
+        }
+        let idx: Vec<u32> = (0..self.batch)
+            .map(|_| self.ssl_rng.gen_range(pool.n as u32))
+            .collect();
+        Some(gather_a_with(&pool, &idx, scratch))
+    }
+
+    /// Does this feed carry unaligned rows for SSL work at all?
+    pub fn has_ssl_pool(&self) -> bool {
+        self.ssl_pool.as_ref().map_or(false, |p| p.n > 0)
+    }
+
+    /// Rebuild the cursor from round 0 (rejoin replay). Streaming
+    /// feeds refuse: their windows have already been dropped.
+    pub fn reset(&mut self) -> Result<()> {
+        match &mut self.mode {
+            Mode::InMemory { cursor, n } => {
+                *cursor = BatchCursor::new(self.seed, *n, self.batch);
+                self.taken = 0;
+                Ok(())
+            }
+            Mode::Stream(_) => bail!(
+                "streaming feeds cannot replay from round 0 — rejoin \
+                 recovery requires the in-memory data plane"
+            ),
+        }
+    }
+
+    fn indices_for(&mut self, round: u64) -> Result<Vec<u32>> {
+        while self.taken < round {
+            self.advance()?;
+        }
+        self.advance()
+    }
+
+    fn advance(&mut self) -> Result<Vec<u32>> {
+        let idx = match &mut self.mode {
+            Mode::InMemory { cursor, .. } => cursor.next_indices(),
+            Mode::Stream(wc) => {
+                if wc.used == wc.rounds_in_window {
+                    let (chunk, aligned, unaligned, ord) =
+                        wc.windows.next_window()?;
+                    let window =
+                        Arc::new(slice_rows_a(&chunk, &aligned, &wc.cols));
+                    let pool = slice_rows_a(&chunk, &unaligned, &wc.cols);
+                    wc.schedule = BatchSchedule::new(
+                        wc.seed, ord, aligned.len(), self.batch);
+                    wc.rounds_in_window = aligned.len() / self.batch;
+                    wc.used = 0;
+                    self.share.publish(window, self.taken);
+                    self.ssl_pool = Some(Arc::new(pool));
+                }
+                let idx = wc.schedule.indices(wc.used).to_vec();
+                wc.used += 1;
+                idx
+            }
+        };
+        self.taken += 1;
+        Ok(idx)
+    }
+}
+
+/// The label party's batch feed: same window protocol, plus labels.
+pub struct LabelFeed {
+    mode: Mode,
+    share: Arc<FeedShare<PartyBData>>,
+    batch: usize,
+    seed: u64,
+    taken: u64,
+}
+
+impl LabelFeed {
+    pub fn in_memory(train: Arc<PartyBData>, seed: u64, batch: usize)
+        -> Self
+    {
+        let n = train.n;
+        LabelFeed {
+            mode: Mode::InMemory {
+                cursor: BatchCursor::new(seed, n, batch),
+                n,
+            },
+            share: FeedShare::new(train),
+            batch,
+            seed,
+            taken: 0,
+        }
+    }
+
+    pub fn streaming(
+        source: Box<dyn DatasetSource + Send>,
+        cols: Range<usize>,
+        align: AlignmentMap,
+        seed: u64,
+        batch: usize,
+        chunk_rows: usize,
+        skip_rows: usize,
+    ) -> Result<Self> {
+        let mut windows =
+            ChunkWindows::new(source, align, batch, chunk_rows, skip_rows)?;
+        let (chunk, aligned, _, ord) = windows.next_window()?;
+        let window = Arc::new(slice_rows_b(&chunk, &aligned, &cols));
+        let schedule = BatchSchedule::new(seed, ord, aligned.len(), batch);
+        let rounds_in_window = aligned.len() / batch;
+        Ok(LabelFeed {
+            mode: Mode::Stream(WindowCursor {
+                windows,
+                cols,
+                schedule,
+                rounds_in_window,
+                used: 0,
+                seed,
+            }),
+            share: FeedShare::new(window),
+            batch,
+            seed,
+            taken: 0,
+        })
+    }
+
+    pub fn share(&self) -> Arc<FeedShare<PartyBData>> {
+        self.share.clone()
+    }
+
+    pub fn floor(&self) -> u64 {
+        self.share.floor()
+    }
+
+    pub fn len(&self) -> usize {
+        self.share.snapshot().0.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rebuild the cursor from round 0 (see [`FeatureFeed::reset`]).
+    pub fn reset(&mut self) -> Result<()> {
+        match &mut self.mode {
+            Mode::InMemory { cursor, n } => {
+                *cursor = BatchCursor::new(self.seed, *n, self.batch);
+                self.taken = 0;
+                Ok(())
+            }
+            Mode::Stream(_) => bail!(
+                "streaming feeds cannot replay from round 0 — rejoin \
+                 recovery requires the in-memory data plane"
+            ),
+        }
+    }
+
+    /// Batch indices + gathered `(features, labels)` for `round`.
+    pub fn batch(&mut self, round: u64, scratch: &mut GatherScratch)
+        -> Result<(Vec<u32>, Tensor, Tensor)>
+    {
+        while self.taken < round {
+            self.advance()?;
+        }
+        let idx = self.advance()?;
+        let (data, _) = self.share.snapshot();
+        let (xb, y) = gather_b_with(&data, &idx, scratch);
+        Ok((idx, xb, y))
+    }
+
+    fn advance(&mut self) -> Result<Vec<u32>> {
+        let idx = match &mut self.mode {
+            Mode::InMemory { cursor, .. } => cursor.next_indices(),
+            Mode::Stream(wc) => {
+                if wc.used == wc.rounds_in_window {
+                    let (chunk, aligned, _, ord) =
+                        wc.windows.next_window()?;
+                    let window =
+                        Arc::new(slice_rows_b(&chunk, &aligned, &wc.cols));
+                    wc.schedule = BatchSchedule::new(
+                        wc.seed, ord, aligned.len(), self.batch);
+                    wc.rounds_in_window = aligned.len() / self.batch;
+                    wc.used = 0;
+                    self.share.publish(window, self.taken);
+                }
+                let idx = wc.schedule.indices(wc.used).to_vec();
+                wc.used += 1;
+                idx
+            }
+        };
+        self.taken += 1;
+        Ok(idx)
+    }
+}
+
+/// Denoising corruption for SSL updates: re-draw each token from the
+/// vocabulary with probability `rate` (categorical masking noise).
+pub fn corrupt_tokens(
+    xa: &Tensor,
+    vocab: usize,
+    rate: f32,
+    rng: &mut Pcg,
+) -> Result<Tensor> {
+    assert!(vocab > 0);
+    let src = xa.as_i32()?;
+    let mut out = src.to_vec();
+    for v in out.iter_mut() {
+        if rng.next_f32() < rate {
+            *v = rng.gen_range(vocab as u32) as i32;
+        }
+    }
+    Ok(Tensor::i32(xa.shape.clone(), out))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Cursor as IoCursor;
+
+    use crate::data::batcher::gather_a;
+    use crate::data::SynthDataset;
+    use crate::dataset::csv::CsvSource;
+    use crate::dataset::synthetic::SyntheticSource;
+
+    use super::*;
+
+    const SEED: u64 = 42;
+    const BATCH: usize = 8;
+
+    /// Satellite regression: at overlap 1.0 the in-memory feed must be
+    /// indistinguishable — index for index, byte for byte — from the
+    /// raw `(BatchCursor, gather)` pair the party loops used before
+    /// the data plane existed. Wire parity is downstream of this.
+    #[test]
+    fn in_memory_feed_matches_raw_cursor_exactly() {
+        let ds = SynthDataset::generate("avazu", 50, 200, 10, 0.0, 3)
+            .unwrap();
+        let train = Arc::new(ds.train_a.clone());
+        let mut feed = FeatureFeed::in_memory(train.clone(), SEED, BATCH);
+        let mut cursor = BatchCursor::new(SEED, train.n, BATCH);
+        let mut scratch = GatherScratch::default();
+        for round in 0..60u64 {
+            let (idx, xa) = feed.batch(round, &mut scratch).unwrap();
+            let want_idx = cursor.next_indices();
+            assert_eq!(idx, want_idx, "index drift at round {round}");
+            assert_eq!(xa, gather_a(&train, &want_idx));
+        }
+        // Zero-copy: the feed shares the caller's table, not a copy.
+        assert!(Arc::ptr_eq(&feed.share().snapshot().0, &train));
+        assert_eq!(feed.floor(), 0);
+    }
+
+    #[test]
+    fn label_feed_matches_raw_cursor_and_fast_forwards() {
+        let ds = SynthDataset::generate("avazu", 50, 200, 10, 0.0, 3)
+            .unwrap();
+        let train = Arc::new(ds.train_b.clone());
+        let mut feed = LabelFeed::in_memory(train.clone(), SEED, BATCH);
+        let mut cursor = BatchCursor::new(SEED, train.n, BATCH);
+        let mut scratch = GatherScratch::default();
+        // Start at round 5 (resume path): the feed must burn rounds
+        // 0..5 exactly like the historical fast-forward loop.
+        for _ in 0..5 {
+            cursor.next_indices();
+        }
+        for round in 5..20u64 {
+            let (idx, _, y) = feed.batch(round, &mut scratch).unwrap();
+            assert_eq!(idx, cursor.next_indices());
+            let want: Vec<f32> =
+                idx.iter().map(|&i| train.y[i as usize]).collect();
+            assert_eq!(y.as_f32().unwrap(), &want[..]);
+        }
+    }
+
+    #[test]
+    fn reset_replays_the_sequence() {
+        let ds = SynthDataset::generate("avazu", 50, 100, 10, 0.0, 3)
+            .unwrap();
+        let mut feed = FeatureFeed::in_memory(
+            Arc::new(ds.train_a.clone()), SEED, BATCH);
+        let mut scratch = GatherScratch::default();
+        let first: Vec<Vec<u32>> = (0..6)
+            .map(|r| feed.batch(r, &mut scratch).unwrap().0)
+            .collect();
+        feed.reset().unwrap();
+        let again: Vec<Vec<u32>> = (0..6)
+            .map(|r| feed.batch(r, &mut scratch).unwrap().0)
+            .collect();
+        assert_eq!(first, again);
+    }
+
+    /// Build a CSV with 2 feature columns (one per "party").
+    fn csv_text(rows: usize) -> String {
+        let mut text = String::new();
+        for i in 0..rows {
+            text += &format!("user{i},{},a{i},b{i}\n", i % 2);
+        }
+        text
+    }
+
+    fn csv_feed(
+        text: &str,
+        cols: Range<usize>,
+        overlap: f64,
+        batch: usize,
+        chunk: usize,
+        skip: usize,
+    ) -> Result<FeatureFeed> {
+        let src = CsvSource::from_reader(
+            IoCursor::new(text.as_bytes().to_vec()), 2, 97);
+        FeatureFeed::streaming(
+            Box::new(src), cols, AlignmentMap::new(SEED, overlap),
+            SEED, batch, chunk, skip)
+    }
+
+    #[test]
+    fn stream_feeds_agree_across_parties_and_roles() {
+        let text = csv_text(300);
+        let mut fa = csv_feed(&text, 0..1, 0.5, 4, 32, 0).unwrap();
+        let mut fb = csv_feed(&text, 1..2, 0.5, 4, 32, 0).unwrap();
+        let src = CsvSource::from_reader(
+            IoCursor::new(text.as_bytes().to_vec()), 2, 97);
+        let mut lbl = LabelFeed::streaming(
+            Box::new(src), 1..2, AlignmentMap::new(SEED, 0.5),
+            SEED, 4, 32, 0).unwrap();
+        let mut s = GatherScratch::default();
+        let (mut s2, mut s3) =
+            (GatherScratch::default(), GatherScratch::default());
+        for round in 0..40u64 {
+            let (ia, _) = fa.batch(round, &mut s).unwrap();
+            let (ib, _) = fb.batch(round, &mut s2).unwrap();
+            let (il, _, _) = lbl.batch(round, &mut s3).unwrap();
+            assert_eq!(ia, ib, "feature parties diverged at {round}");
+            assert_eq!(ia, il, "label diverged at {round}");
+            assert_eq!(fa.floor(), lbl.floor(), "floors diverged");
+        }
+        // The epoch wrapped (300 rows, ~150 aligned, 40×4 = 160 drawn
+        // plus skipped windows) — rewind determinism held throughout.
+        assert!(fa.floor() > 0, "window never advanced");
+    }
+
+    #[test]
+    fn stream_window_respects_chunk_bound_and_floor() {
+        let text = csv_text(300);
+        let chunk = 32;
+        let mut feed = csv_feed(&text, 0..1, 0.5, 4, chunk, 0).unwrap();
+        let mut scratch = GatherScratch::default();
+        let mut last_floor = 0;
+        for round in 0..40u64 {
+            feed.batch(round, &mut scratch).unwrap();
+            let (window, floor) = feed.share().snapshot();
+            let pooled =
+                feed.ssl_pool.as_ref().map_or(0, |p| p.n);
+            assert!(
+                window.n + pooled <= chunk,
+                "window {} + pool {pooled} exceeds chunk {chunk}",
+                window.n
+            );
+            assert!(floor >= last_floor, "floor went backwards");
+            assert!(floor <= round, "floor from the future");
+            last_floor = floor;
+            // Batch indices address the live window only.
+            assert!(window.n >= 4);
+        }
+        assert!(feed.has_ssl_pool(), "overlap 0.5 must pool rows");
+        assert!(feed.reset().is_err(), "stream reset must refuse");
+    }
+
+    #[test]
+    fn stream_skips_eval_prefix_rows() {
+        let text = csv_text(300);
+        // Feeds differing only in skip must serve different windows.
+        let mut with_skip = csv_feed(&text, 0..1, 1.0, 4, 32, 64).unwrap();
+        let mut no_skip = csv_feed(&text, 0..1, 1.0, 4, 32, 0).unwrap();
+        let mut s = GatherScratch::default();
+        let (_, a) = with_skip.batch(0, &mut s).unwrap();
+        let a = a.as_i32().unwrap().to_vec();
+        let (_, b) = no_skip.batch(0, &mut s).unwrap();
+        assert_ne!(a, b.as_i32().unwrap().to_vec());
+        // At overlap 1.0 window rows are the raw rows: the skipped
+        // feed's first window starts at file row 64.
+        let want = super::super::feature_token(0, "a64", 97);
+        assert_eq!(with_skip.share().snapshot().0.x[0], want);
+    }
+
+    #[test]
+    fn unusable_stream_names_the_cure() {
+        // 20-row file, chunk 16, batch 16, overlap .2: no window can
+        // ever hold a full aligned batch.
+        let err = csv_feed(&csv_text(20), 0..1, 0.2, 16, 16, 0)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--chunk-rows"), "{err}");
+        let err = csv_feed(&csv_text(20), 0..1, 0.5, 8, 4, 0)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("chunk_rows (4)"), "{err}");
+    }
+
+    #[test]
+    fn ssl_batch_draws_only_pooled_rows() {
+        let ds = SynthDataset::generate("avazu", 50, 100, 10, 0.0, 3)
+            .unwrap();
+        let f = ds.train_a.fields;
+        // A pool of rows holding a marker value outside the aligned
+        // table's vocabulary range.
+        let pool = PartyAData {
+            fields: f,
+            x: vec![777; 5 * f],
+            n: 5,
+        };
+        let mut feed = FeatureFeed::in_memory(
+            Arc::new(ds.train_a.clone()), SEED, BATCH)
+            .with_ssl_pool(pool);
+        let mut scratch = GatherScratch::default();
+        let xs = feed.ssl_batch(&mut scratch).unwrap();
+        assert_eq!(xs.shape, vec![BATCH, f]);
+        assert!(xs.as_i32().unwrap().iter().all(|&v| v == 777));
+        // Without a pool there is no SSL work.
+        let mut bare = FeatureFeed::in_memory(
+            Arc::new(ds.train_a.clone()), SEED, BATCH);
+        assert!(bare.ssl_batch(&mut scratch).is_none());
+        assert!(!bare.has_ssl_pool());
+    }
+
+    #[test]
+    fn corruption_respects_rate_and_vocab() {
+        let clean = Tensor::i32(vec![16, 8], vec![5i32; 128]);
+        let mut rng = Pcg::new(1, 2);
+        let noisy = corrupt_tokens(&clean, 50, 0.3, &mut rng).unwrap();
+        let flipped = noisy
+            .as_i32().unwrap()
+            .iter()
+            .zip(clean.as_i32().unwrap())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(flipped > 10 && flipped < 70, "flipped {flipped}/128");
+        assert!(noisy.as_i32().unwrap().iter().all(|&v| (0..50).contains(&v)));
+        // Rate 0 is the identity.
+        let same = corrupt_tokens(&clean, 50, 0.0, &mut rng).unwrap();
+        assert_eq!(same.as_i32().unwrap(), clean.as_i32().unwrap());
+    }
+
+    #[test]
+    fn synthetic_source_streams_like_a_file() {
+        // The adapter path: windows over generated tables with a real
+        // overlap split, feature cols vs. label cols staying aligned.
+        let ds = SynthDataset::generate("avazu", 50, 256, 0, 0.0, 9)
+            .unwrap();
+        let (fa, fb) = (ds.train_a.fields, ds.train_b.fields);
+        let mk = || {
+            Box::new(SyntheticSource::new(
+                ds.train_a.clone(), ds.train_b.clone(), 50))
+        };
+        let map = AlignmentMap::new(SEED, 0.4);
+        let mut fa_feed = FeatureFeed::streaming(
+            mk(), 0..fa, map, SEED, BATCH, 64, 0).unwrap();
+        let mut lb_feed = LabelFeed::streaming(
+            mk(), fa..fa + fb, map, SEED, BATCH, 64, 0).unwrap();
+        let mut s = GatherScratch::default();
+        let mut s2 = GatherScratch::default();
+        for round in 0..12u64 {
+            let (ia, _) = fa_feed.batch(round, &mut s).unwrap();
+            let (il, _, _) = lb_feed.batch(round, &mut s2).unwrap();
+            assert_eq!(ia, il);
+        }
+    }
+}

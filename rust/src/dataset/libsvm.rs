@@ -1,0 +1,204 @@
+//! Chunked libsvm reader: `label idx:val …` → hashed token rows.
+//!
+//! libsvm rows are sparse and unkeyed, while the model wants a dense
+//! `fields`-wide categorical row and the alignment plane wants a key.
+//! The mapping, fixed so every party derives it identically:
+//!
+//! - **key** — the global row ordinal (libsvm exports of a PSI-sorted
+//!   table are row-aligned across parties, so the ordinal *is* the
+//!   join key).
+//! - **slot** — each `idx:val` pair lands in field `idx % fields`; the
+//!   slot's token is [`feature_token`](super::feature_token) of the
+//!   canonical `"idx:val"` string, so distinct (index, value) pairs
+//!   stay distinguishable after folding. When several pairs fold into
+//!   one slot the last pair wins; a slot no pair reaches holds the
+//!   hashed `"<missing>"` marker rather than a magic id.
+//!
+//! Hostile rows (malformed pairs, non-numeric labels or indices) fail
+//! with line and token position named.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom};
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{feature_token, parse_label, DatasetSource, RowChunk};
+
+/// Streaming libsvm source over any seekable buffered reader.
+pub struct LibsvmSource<R> {
+    reader: R,
+    fields: usize,
+    vocab: usize,
+    line: u64,
+    row: u64,
+}
+
+impl LibsvmSource<BufReader<File>> {
+    pub fn open(path: &Path, fields: usize, vocab: usize) -> Result<Self> {
+        let file = File::open(path).map_err(
+            |e| anyhow::anyhow!("open libsvm {}: {e}", path.display()))?;
+        Ok(LibsvmSource::from_reader(BufReader::new(file), fields, vocab))
+    }
+}
+
+impl<R: BufRead + Seek> LibsvmSource<R> {
+    pub fn from_reader(reader: R, fields: usize, vocab: usize) -> Self {
+        assert!(fields > 0 && vocab > 0);
+        LibsvmSource { reader, fields, vocab, line: 1, row: 0 }
+    }
+
+    fn parse_line(&self, raw: &str) -> Result<(f32, Vec<i32>)> {
+        let line = self.line;
+        let mut parts = raw.split_ascii_whitespace();
+        let label_raw = parts.next().expect("caller skips blank lines");
+        let label = parse_label(label_raw, line, 1)?;
+        let mut tokens: Vec<i32> = (0..self.fields)
+            .map(|f| feature_token(f, "<missing>", self.vocab))
+            .collect();
+        for (pos, pair) in parts.enumerate() {
+            // `pos` is 0-based over the pairs; humans count the label
+            // as token 1, so pair i is token i + 2.
+            let token_pos = pos + 2;
+            let Some((idx_raw, val_raw)) = pair.split_once(':') else {
+                bail!(
+                    "line {line}, token {token_pos}: malformed 'index:value' \
+                     pair '{pair}'"
+                );
+            };
+            let idx: u64 = idx_raw.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "line {line}, token {token_pos}: feature index \
+                     '{idx_raw}' is not an integer"
+                )
+            })?;
+            if val_raw.parse::<f64>().is_err() {
+                bail!(
+                    "line {line}, token {token_pos}: feature value \
+                     '{val_raw}' is not a number"
+                );
+            }
+            let slot = (idx % self.fields as u64) as usize;
+            tokens[slot] =
+                feature_token(slot, &format!("{idx}:{val_raw}"), self.vocab);
+        }
+        Ok((label, tokens))
+    }
+}
+
+impl<R: BufRead + Seek> DatasetSource for LibsvmSource<R> {
+    fn fields(&self) -> usize {
+        self.fields
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn next_chunk(&mut self, max_rows: usize) -> Result<Option<RowChunk>> {
+        assert!(max_rows > 0, "chunk size must be positive");
+        let mut chunk = RowChunk {
+            keys: Vec::new(),
+            labels: Vec::new(),
+            tokens: Vec::new(),
+            fields: self.fields,
+            base: self.row,
+        };
+        let mut buf = String::new();
+        while chunk.rows() < max_rows {
+            buf.clear();
+            let n = self.reader.read_line(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            let trimmed = buf.trim();
+            if trimmed.is_empty() {
+                self.line += 1;
+                continue;
+            }
+            let (label, tokens) = self.parse_line(trimmed)?;
+            chunk.keys.push(self.row.to_string());
+            chunk.labels.push(label);
+            chunk.tokens.extend(tokens);
+            self.line += 1;
+            self.row += 1;
+        }
+        if chunk.rows() == 0 {
+            return Ok(None);
+        }
+        Ok(Some(chunk))
+    }
+
+    fn rewind(&mut self) -> Result<()> {
+        self.reader.seek(SeekFrom::Start(0))?;
+        self.line = 1;
+        self.row = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Cursor;
+
+    use super::*;
+
+    fn src(text: &str, fields: usize) -> LibsvmSource<Cursor<&[u8]>> {
+        LibsvmSource::from_reader(Cursor::new(text.as_bytes()), fields, 97)
+    }
+
+    #[test]
+    fn golden_chunk_layout() {
+        let text = "1 0:3 5:1\n0 1:2\n";
+        let mut s = src(text, 4);
+        let c = s.next_chunk(8).unwrap().unwrap();
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.keys, vec!["0", "1"]);
+        assert_eq!(c.labels, vec![1.0, 0.0]);
+        assert_eq!(c.fields, 4);
+        // Row 0: index 0 → slot 0, index 5 → slot 1 (5 % 4).
+        assert_eq!(c.tokens[0], feature_token(0, "0:3", 97));
+        assert_eq!(c.tokens[1], feature_token(1, "5:1", 97));
+        // Untouched slots carry the hashed missing marker.
+        assert_eq!(c.tokens[2], feature_token(2, "<missing>", 97));
+        assert_eq!(c.tokens[3], feature_token(3, "<missing>", 97));
+        // Row 1: only slot 1 is set.
+        assert_eq!(c.tokens[4], feature_token(0, "<missing>", 97));
+        assert_eq!(c.tokens[5], feature_token(1, "1:2", 97));
+    }
+
+    #[test]
+    fn ordinal_keys_survive_chunk_boundaries_and_rewind() {
+        let text = "1 0:1\n0 1:1\n1 2:1\n";
+        let mut s = src(text, 3);
+        assert_eq!(s.next_chunk(2).unwrap().unwrap().keys, vec!["0", "1"]);
+        assert_eq!(s.next_chunk(2).unwrap().unwrap().keys, vec!["2"]);
+        s.rewind().unwrap();
+        assert_eq!(s.next_chunk(3).unwrap().unwrap().keys,
+                   vec!["0", "1", "2"]);
+    }
+
+    #[test]
+    fn malformed_pair_names_line_and_token() {
+        let text = "1 0:1\n0 0:1 borked\n";
+        let err = src(text, 3).next_chunk(8).unwrap_err().to_string();
+        assert!(err.contains("line 2, token 3"), "{err}");
+        assert!(err.contains("borked"), "{err}");
+    }
+
+    #[test]
+    fn non_numeric_index_and_value_rejected() {
+        let err = src("1 x:1\n", 3).next_chunk(8).unwrap_err().to_string();
+        assert!(err.contains("line 1, token 2"), "{err}");
+        assert!(err.contains("not an integer"), "{err}");
+        let err = src("1 0:nan-ish\n", 3)
+            .next_chunk(8).unwrap_err().to_string();
+        assert!(err.contains("not a number"), "{err}");
+    }
+
+    #[test]
+    fn bad_label_names_position() {
+        let err = src("yes 0:1\n", 3).next_chunk(8).unwrap_err().to_string();
+        assert!(err.contains("line 1, column 1"), "{err}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Streaming dataset ingestion + limited-overlap data plane (DESIGN.md §12).
+//!
+//! Everything before this module trained on a fully-aligned synthetic
+//! matrix materialized in RAM. This module generalizes the data plane
+//! along the two axes the ROADMAP names:
+//!
+//! 1. **Streaming ingestion** — a [`DatasetSource`] trait with CSV
+//!    ([`csv::CsvSource`]) and libsvm ([`libsvm::LibsvmSource`]) readers
+//!    that yield fixed-size [`RowChunk`]s in constant memory, hashing
+//!    raw field strings into the embedding vocabulary so criteo-scale
+//!    files run without ever materializing the full matrix. The
+//!    existing generator flows through the same trait via
+//!    [`synthetic::SyntheticSource`].
+//! 2. **Limited overlap** — an [`align::AlignmentMap`] splits each
+//!    party's rows into PSI-aligned rows (which flow through the
+//!    existing CELU cache/local-update path unchanged) and unaligned
+//!    rows, on which feature parties run self-supervised denoising
+//!    updates with zero wire traffic ([`feed`]).
+//!
+//! Hostile inputs are first-class: every parse error names the line
+//! (and column/token where one exists) so a truncated or mangled row in
+//! a multi-gigabyte file is findable. Chunks are bounded by the
+//! caller's `max_rows` (`--chunk-rows`), which is the module's memory
+//! contract: no reader holds more than one chunk of rows at a time.
+
+use anyhow::{bail, Result};
+
+pub mod align;
+pub mod csv;
+pub mod feed;
+pub mod libsvm;
+pub mod synthetic;
+
+pub use align::{split_synthetic, subset_a, subset_b, AlignmentMap};
+pub use csv::CsvSource;
+pub use feed::{corrupt_tokens, slice_rows_a, slice_rows_b, FeatureFeed,
+               FeedShare, LabelFeed};
+pub use libsvm::LibsvmSource;
+pub use synthetic::SyntheticSource;
+
+/// A bounded run of consecutive rows from a [`DatasetSource`]: hashed
+/// feature tokens for every field (row-major `[rows, fields]`), one
+/// label per row, and the row keys used for alignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowChunk {
+    /// Per-row alignment keys (CSV key column; libsvm row ordinals).
+    pub keys: Vec<String>,
+    /// Per-row binary labels in `{0, 1}` (f32 to match the label party).
+    pub labels: Vec<f32>,
+    /// Row-major hashed token ids, `rows * fields` long.
+    pub tokens: Vec<i32>,
+    /// Feature fields per row (the full table width, all parties).
+    pub fields: usize,
+    /// Global ordinal of the chunk's first row within the stream.
+    pub base: u64,
+}
+
+impl RowChunk {
+    pub fn rows(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Append every row of `other` (same width) onto `self`.
+    pub fn extend(&mut self, other: RowChunk) {
+        assert_eq!(self.fields, other.fields, "chunk width mismatch");
+        self.keys.extend(other.keys);
+        self.labels.extend(other.labels);
+        self.tokens.extend(other.tokens);
+    }
+}
+
+/// A restartable, chunked row stream. Implementations must be
+/// deterministic: the same file yields the same chunks after every
+/// [`rewind`](DatasetSource::rewind), which is what lets K parties
+/// reading vertical slices of one table agree on window boundaries
+/// without exchanging a byte.
+pub trait DatasetSource {
+    /// Feature fields per row (full table width).
+    fn fields(&self) -> usize;
+
+    /// Embedding vocabulary the tokens were hashed into.
+    fn vocab(&self) -> usize;
+
+    /// Next chunk of at most `max_rows` rows; `Ok(None)` at end of
+    /// stream. Never buffers more than `max_rows` rows.
+    fn next_chunk(&mut self, max_rows: usize) -> Result<Option<RowChunk>>;
+
+    /// Restart the stream from the first row.
+    fn rewind(&mut self) -> Result<()>;
+}
+
+/// Hash a raw field string into the embedding vocabulary. FNV-1a over
+/// the field index then the bytes — deliberately not `DefaultHasher`,
+/// whose output may change across std releases and would invalidate
+/// golden fixtures. The field index is mixed in first so the same raw
+/// string in two columns maps to independent tokens.
+pub fn feature_token(field: usize, raw: &str, vocab: usize) -> i32 {
+    debug_assert!(vocab > 0);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in (field as u64).to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    for &b in raw.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % vocab as u64) as i32
+}
+
+/// Parse a `{0, 1}` label, naming the line/column on hostile input.
+pub(crate) fn parse_label(raw: &str, line: u64, column: usize) -> Result<f32> {
+    let v: f32 = match raw.trim().parse() {
+        Ok(v) => v,
+        Err(_) => bail!(
+            "line {line}, column {column}: label '{raw}' is not a number"
+        ),
+    };
+    if v != 0.0 && v != 1.0 {
+        bail!(
+            "line {line}, column {column}: label '{raw}' must be 0 or 1"
+        );
+    }
+    Ok(v)
+}
+
+/// Materialize the first `rows` rows of a source as one chunk, reading
+/// `chunk_rows` at a time so the transient buffer honours the chunk
+/// bound. Used to reserve a bounded evaluation prefix before training
+/// streams the remainder.
+pub fn read_prefix(
+    source: &mut dyn DatasetSource,
+    rows: usize,
+    chunk_rows: usize,
+) -> Result<RowChunk> {
+    let mut out: Option<RowChunk> = None;
+    let mut got = 0usize;
+    while got < rows {
+        let want = (rows - got).min(chunk_rows.max(1));
+        match source.next_chunk(want)? {
+            Some(chunk) => {
+                got += chunk.rows();
+                match &mut out {
+                    Some(acc) => acc.extend(chunk),
+                    None => out = Some(chunk),
+                }
+            }
+            None => bail!(
+                "dataset ends after {got} rows — need {rows} for the \
+                 evaluation prefix (eval_batches × batch); shrink \
+                 eval_batches or supply more data"
+            ),
+        }
+    }
+    Ok(out.expect("rows > 0 guaranteed by caller"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_are_stable_and_field_salted() {
+        // Golden values: changing the hash silently would desynchronize
+        // features across re-ingestions of the same file.
+        assert_eq!(feature_token(0, "a", 1000), feature_token(0, "a", 1000));
+        assert_ne!(feature_token(0, "a", 100_000),
+                   feature_token(1, "a", 100_000));
+        assert_ne!(feature_token(3, "a", 100_000),
+                   feature_token(3, "b", 100_000));
+        let t = feature_token(2, "widget", 50);
+        assert!((0..50).contains(&t));
+    }
+
+    #[test]
+    fn labels_must_be_binary_numbers() {
+        assert_eq!(parse_label("1", 1, 2).unwrap(), 1.0);
+        assert_eq!(parse_label("0", 1, 2).unwrap(), 0.0);
+        let err = parse_label("click", 7, 2).unwrap_err().to_string();
+        assert!(err.contains("line 7, column 2"), "{err}");
+        let err = parse_label("0.5", 9, 2).unwrap_err().to_string();
+        assert!(err.contains("must be 0 or 1"), "{err}");
+    }
+}

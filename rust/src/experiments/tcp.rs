@@ -43,7 +43,9 @@ use std::time::Duration;
 use crate::config::RunConfig;
 use crate::coordinator::feature_party::{FeatureRunOpts, RejoinPolicy};
 use crate::coordinator::label_party::LabelRunOpts;
-use crate::coordinator::trainer::{feature_slices, load_data, load_set};
+use crate::coordinator::trainer::{feature_memory_plan, feature_slices,
+                                  feature_stream_plan, label_memory_plan,
+                                  label_stream_plan, load_data, load_set};
 use crate::metrics::facade::Registry;
 use crate::session::bootstrap::{SessionDialer, SessionListener};
 use crate::session::checkpoint::{FeatureSnapshot, SessionSnapshot};
@@ -85,7 +87,17 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 cfg.feature_parties()
             );
             let set = load_set(cfg)?;
-            let data = load_data(cfg, &set)?;
+            // Data plane (DESIGN.md §12): every process builds only its
+            // own feed — streaming formats read this party's columns
+            // from disk; synthetic materializes and applies the overlap
+            // split locally (membership is a pure function of the
+            // shared seed, so all K processes agree without a byte).
+            let (feed, test_b) = if cfg.data_format.is_streaming() {
+                label_stream_plan(cfg, &set)?
+            } else {
+                let data = load_data(cfg, &set)?;
+                label_memory_plan(cfg, &set, data.train_b, data.test_b)?
+            };
             let (links, readmission, _epoch, _start_round) =
                 listener.establish_supervised(cfg)?;
             let mut b = SessionBuilder::new(cfg, LABEL_PARTY)
@@ -94,14 +106,14 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 b = b.link_full(l);
             }
             let session = b.build()?;
-            let report = session.run_label_with(
+            let report = session.run_label_data(
                 set,
-                Arc::new(data.train_b),
-                Arc::new(data.test_b),
+                feed,
+                test_b,
                 LabelRunOpts {
                     readmission: Some(readmission),
                     resume: snapshot,
-                    // run_label_with injects the session registry —
+                    // run_label_data injects the session registry —
                     // the same one the listener serves scrapes from.
                     registry: None,
                     cache_budget: None,
@@ -180,14 +192,26 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             } else {
                 None
             };
+            anyhow::ensure!(
+                !(cfg.data_format.is_streaming() && snapshot.is_some()),
+                "--resume requires the in-memory data plane (synthetic \
+                 format): streaming feeds cannot replay completed rounds"
+            );
             let set = load_set(cfg)?;
-            let data = load_data(cfg, &set)?;
-            // Every process computes the same deterministic split and
+            // Every process computes the same deterministic plan and
             // keeps only its own slice — no feature data ever moves.
-            let (mut train_slices, mut test_slices) =
-                feature_slices(cfg, &set, data.train_a, data.test_a)?;
-            let train = Arc::new(train_slices.swap_remove(party as usize - 1));
-            let test = Arc::new(test_slices.swap_remove(party as usize - 1));
+            // Streaming formats read this party's columns of the file;
+            // synthetic splits the generated table vertically.
+            let (feed, test) = if cfg.data_format.is_streaming() {
+                feature_stream_plan(cfg, &set, party as usize - 1)?
+            } else {
+                let data = load_data(cfg, &set)?;
+                let (mut train_slices, mut test_slices) =
+                    feature_slices(cfg, &set, data.train_a, data.test_a)?;
+                let train = train_slices.swap_remove(party as usize - 1);
+                let test = test_slices.swap_remove(party as usize - 1);
+                feature_memory_plan(cfg, &set, train, test)?
+            };
             let dialer = SessionDialer::new(connect, PartyId(party))
                 .with_timeout(join_timeout);
             // Resumable join: with a snapshot, lead with Rejoin
@@ -202,9 +226,9 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
             let session = SessionBuilder::new(cfg, PartyId(party))
                 .link_full(link)
                 .build()?;
-            let report = session.run_feature_with(
+            let report = session.run_feature_data(
                 set,
-                train,
+                feed,
                 test,
                 FeatureRunOpts {
                     rejoin: Some(RejoinPolicy {
@@ -213,7 +237,7 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                     }),
                     start_round,
                     resume: snapshot,
-                    registry: None, // run_feature_with injects
+                    registry: None, // run_feature_data injects
                 },
             )?;
             // The session registry's single (party → label) row holds
@@ -226,10 +250,11 @@ pub fn run_tcp_party(cfg: &RunConfig, role: &str, listen: &str,
                 .unwrap_or_default();
             println!(
                 "feature party {} done: rounds={} local_updates={} \
-                 rejoins={} sent={}B (raw {}B, ratio {:.2})",
+                 ssl_updates={} rejoins={} sent={}B (raw {}B, \
+                 ratio {:.2})",
                 report.party, report.comm_rounds, report.local_updates,
-                report.rejoins, stats.bytes, stats.raw_bytes,
-                stats.compression_ratio()
+                report.ssl_updates, report.rejoins, stats.bytes,
+                stats.raw_bytes, stats.compression_ratio()
             );
         }
         other => anyhow::bail!(

@@ -28,7 +28,11 @@
 //!   the experiment harnesses. The two-party entry points
 //!   (`coordinator::run_party_a` / `run_party_b`, `--parties 2`) are
 //!   thin wrappers over the session API and keep the historic wire
-//!   format byte-for-byte.
+//!   format byte-for-byte. The data plane (`dataset`, DESIGN.md §12)
+//!   streams CSV/libsvm tables in constant-memory chunks and splits
+//!   partially-overlapping populations into the aligned rows the CELU
+//!   cache path trains on and unaligned rows feature parties use for
+//!   zero-traffic self-supervised updates.
 //! - **L2 (python/compile)** — JAX step functions (WDL/DSSM bottoms +
 //!   tops, AdaGrad), AOT-lowered once to HLO-text artifacts.
 //! - **L1 (python/compile/kernels)** — Pallas kernels for the
@@ -44,6 +48,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dataset;
 pub mod experiments;
 pub mod metrics;
 pub mod protocol;

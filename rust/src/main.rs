@@ -28,7 +28,7 @@
 //!   celu-vfl info --artifacts artifacts
 
 use celu_vfl::compress::CodecKind;
-use celu_vfl::config::{Algorithm, RunConfig};
+use celu_vfl::config::{Algorithm, DataFormat, RunConfig};
 use celu_vfl::coordinator::run_training;
 use celu_vfl::util::cli::Cli;
 use celu_vfl::util::logger;
@@ -114,6 +114,21 @@ fn apply_overrides(cfg: &mut RunConfig,
     if ov(args.get("checkpoint-every")) {
         cfg.checkpoint_every = args.get_usize("checkpoint-every")?;
     }
+    if ov(args.get("data")) {
+        cfg.data = args.get("data").to_string();
+    }
+    if ov(args.get("data-format")) {
+        cfg.data_format = DataFormat::parse(args.get("data-format"))?;
+    }
+    if ov(args.get("chunk-rows")) {
+        cfg.chunk_rows = args.get_usize("chunk-rows")?;
+    }
+    if ov(args.get("overlap")) {
+        cfg.overlap = args.get_f64("overlap")?;
+    }
+    if ov(args.get("ssl-ratio")) {
+        cfg.ssl_ratio = args.get_usize("ssl-ratio")?;
+    }
     cfg.validate()
 }
 
@@ -143,6 +158,18 @@ fn train_cli(bin: &'static str, about: &'static str) -> Cli {
              "write restartable label-party snapshots here")
         .opt("checkpoint-every", "-",
              "rounds between checkpoints (with --checkpoint-dir)")
+        .opt("data", "-",
+             "on-disk dataset to stream (with --data-format csv|libsvm)")
+        .opt("data-format", "-", "csv | libsvm | synthetic")
+        .opt("chunk-rows", "-",
+             "rows per streamed window (the per-party memory bound)")
+        .opt("overlap", "-",
+             "aligned (PSI-intersection) row fraction in (0, 1]; \
+              below 1 feature parties run self-supervised local \
+              updates on their unaligned rows")
+        .opt("ssl-ratio", "-",
+             "self-supervised updates per communication round on \
+              unaligned rows (0 = off)")
         .opt("out", "-", "write the run record JSON here")
 }
 

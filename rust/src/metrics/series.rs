@@ -104,6 +104,11 @@ pub struct RunRecord {
     /// Local updates per feature party, in party-id order (index 0 is
     /// party 1). Two-party runs have exactly one entry.
     pub feature_local_updates: Vec<u64>,
+    /// Self-supervised (denoising) updates per feature party on
+    /// unaligned rows — zero wire traffic by construction, and all
+    /// zeros unless the run carries a limited-overlap data plane
+    /// (DESIGN.md §12).
+    pub feature_ssl_updates: Vec<u64>,
     /// Per-link traffic rows, one per directed link of the session mesh
     /// (two-party runs have exactly [1→0, 0→1]). Aggregate totals are
     /// derived by [`Self::wire_bytes_total`] / [`Self::raw_bytes_total`]
@@ -273,6 +278,11 @@ impl RunRecord {
             ("local_updates", num(self.local_updates as f64)),
             ("feature_local_updates",
              Json::Arr(self.feature_local_updates
+                 .iter()
+                 .map(|&u| num(u as f64))
+                 .collect())),
+            ("feature_ssl_updates",
+             Json::Arr(self.feature_ssl_updates
                  .iter()
                  .map(|&u| num(u as f64))
                  .collect())),

@@ -53,6 +53,9 @@ pub struct PartyARuntime {
     use_weights: xla::Literal,
     pub local_updates: u64,
     pub exact_updates: u64,
+    /// Self-supervised (unaligned-row) updates — separate from the
+    /// exact counter so wire-round accounting stays untouched.
+    pub ssl_updates: u64,
 }
 
 impl PartyARuntime {
@@ -67,6 +70,7 @@ impl PartyARuntime {
             use_weights: scalar_literal(if use_weights { 1.0 } else { 0.0 }),
             local_updates: 0,
             exact_updates: 0,
+            ssl_updates: 0,
         })
     }
 
@@ -114,6 +118,42 @@ impl PartyARuntime {
         self.state.absorb(&mut out);
         self.local_updates += 1;
         wstats_from(&out[0])
+    }
+
+    /// Self-supervised denoising update on unaligned rows (DESIGN.md
+    /// §12): pull the bottom model's representation of a corrupted
+    /// batch toward its clean representation. The cotangent is the
+    /// gradient of ½‖Z̃ − Z‖² w.r.t. Z̃ with the clean Z treated as a
+    /// stop-gradient target, normalized per row — so the step reuses
+    /// the compiled `a_fwd`/`a_upd` artifacts unchanged and never
+    /// touches the wire. Returns the mean per-element consistency loss.
+    pub fn ssl_update(&mut self, xa_clean: &Tensor, xa_noisy: &Tensor)
+                      -> anyhow::Result<f32> {
+        let z_clean = self.forward(xa_clean)?;
+        let z_noisy = self.forward(xa_noisy)?;
+        let clean = z_clean.as_f32()?;
+        let noisy = z_noisy.as_f32()?;
+        anyhow::ensure!(clean.len() == noisy.len(),
+                        "ssl forward shape mismatch");
+        let scale = 1.0 / xa_clean.rows().max(1) as f32;
+        let mut loss = 0.0f32;
+        let dz: Vec<f32> = noisy
+            .iter()
+            .zip(clean)
+            .map(|(&nz, &cz)| {
+                let d = nz - cz;
+                loss += 0.5 * d * d;
+                d * scale
+            })
+            .collect();
+        let dza = Tensor::f32(z_noisy.shape.clone(), dz);
+        let xa_l = tensor_to_literal(xa_noisy)?;
+        let dza_l = tensor_to_literal(&dza)?;
+        let v = args(&self.state, &[&xa_l, &dza_l, &self.lr]);
+        let mut out = self.artifact("a_upd").run(&v)?;
+        self.state.absorb(&mut out);
+        self.ssl_updates += 1;
+        Ok(loss / clean.len().max(1) as f32)
     }
 
     /// ρ probe: cosine between bottom-model gradients under two

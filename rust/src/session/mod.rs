@@ -59,6 +59,7 @@ use crate::coordinator::feature_party::{run_feature_party,
 use crate::coordinator::label_party::{run_label_party, LabelPartyReport,
                                       LabelRunOpts};
 use crate::data::{PartyAData, PartyBData};
+use crate::dataset::{FeatureFeed, LabelFeed};
 use crate::metrics::facade::Registry;
 use crate::runtime::ArtifactSet;
 use crate::transport::{inproc_link, LinkStats, Transport};
@@ -359,9 +360,24 @@ impl Session {
     }
 
     /// [`Self::run_feature`] with supervised-lifecycle options (rejoin
-    /// reconnect policy — DESIGN.md §8).
+    /// reconnect policy — DESIGN.md §8). Wraps `train` in an in-memory
+    /// [`FeatureFeed`], which replays the historic batch-cursor
+    /// sequence verbatim — the wire stays byte-identical.
     pub fn run_feature_with(&self, set: Arc<ArtifactSet>,
                             train: Arc<PartyAData>, test: Arc<PartyAData>,
+                            opts: FeatureRunOpts)
+                            -> anyhow::Result<FeaturePartyReport> {
+        let feed =
+            FeatureFeed::in_memory(train, self.cfg.seed,
+                                   set.manifest.batch);
+        self.run_feature_data(set, feed, test, opts)
+    }
+
+    /// Run this session as a feature party over an explicit data-plane
+    /// feed (DESIGN.md §12): streaming CSV/libsvm windows, or an
+    /// in-memory table carrying an unaligned-row SSL reservoir.
+    pub fn run_feature_data(&self, set: Arc<ArtifactSet>,
+                            feed: FeatureFeed, test: Arc<PartyAData>,
                             mut opts: FeatureRunOpts)
                             -> anyhow::Result<FeaturePartyReport> {
         anyhow::ensure!(self.role() == PartyRole::Feature,
@@ -369,7 +385,7 @@ impl Session {
         if opts.registry.is_none() {
             opts.registry = Some(self.registry.clone());
         }
-        run_feature_party(&self.cfg, self.id, set, train, test,
+        run_feature_party(&self.cfg, self.id, set, feed, test,
                           &self.mesh.links[0], opts)
     }
 
@@ -381,17 +397,30 @@ impl Session {
     }
 
     /// [`Self::run_label`] with supervised-lifecycle options (the
-    /// re-admission point, checkpoint resume — DESIGN.md §8).
+    /// re-admission point, checkpoint resume — DESIGN.md §8). Wraps
+    /// `train` in an in-memory [`LabelFeed`] (historic sequence,
+    /// byte-identical wire).
     pub fn run_label_with(&self, set: Arc<ArtifactSet>,
                           train: Arc<PartyBData>, test: Arc<PartyBData>,
-                          mut opts: LabelRunOpts)
+                          opts: LabelRunOpts)
+                          -> anyhow::Result<LabelPartyReport> {
+        let feed =
+            LabelFeed::in_memory(train, self.cfg.seed,
+                                 set.manifest.batch);
+        self.run_label_data(set, feed, test, opts)
+    }
+
+    /// Run this session as the label party over an explicit data-plane
+    /// feed (DESIGN.md §12).
+    pub fn run_label_data(&self, set: Arc<ArtifactSet>, feed: LabelFeed,
+                          test: Arc<PartyBData>, mut opts: LabelRunOpts)
                           -> anyhow::Result<LabelPartyReport> {
         anyhow::ensure!(self.role() == PartyRole::Label,
                         "run_label on {} (feature party)", self.id);
         if opts.registry.is_none() {
             opts.registry = Some(self.registry.clone());
         }
-        run_label_party(&self.cfg, set, train, test, self.mesh.links(),
+        run_label_party(&self.cfg, set, feed, test, self.mesh.links(),
                         opts)
     }
 }

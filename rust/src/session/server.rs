@@ -378,10 +378,11 @@ impl SessionServer {
     }
 
     /// The multi-session observability plane: `/metrics` concatenates
-    /// every session's exposition with a `session="…"` label;
-    /// `/watch/<label>` streams one session (bare `/watch` works while
-    /// exactly one session is hosted, preserving the single-tenant
-    /// contract).
+    /// every session's exposition with a `session="…"` label, and
+    /// `/metrics?session=<label>` narrows it to one hosted session
+    /// (404 for an unknown label); `/watch/<label>` streams one
+    /// session (bare `/watch` works while exactly one session is
+    /// hosted, preserving the single-tenant contract).
     fn route_http(&mut self, req: &HttpRequest, mut stream: TcpStream) {
         if let Some(token) = &self.token {
             let expect = format!("Bearer {token}");
@@ -393,9 +394,36 @@ impl SessionServer {
                 return;
             }
         }
-        match req.path.as_str() {
+        // The query string rides in the request path verbatim; only
+        // `/metrics` consumes one today.
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (req.path.as_str(), None),
+        };
+        match path {
             "/metrics" => {
-                let body: String = self.sessions.iter()
+                // `?session=<label>` narrows the exposition to one
+                // hosted session — what a per-tenant scrape job wants.
+                // Bare `/metrics` stays the concatenated default.
+                let filter = query.and_then(|q| {
+                    q.split('&').find_map(|kv| kv.strip_prefix("session="))
+                });
+                let selected: Vec<_> = match filter {
+                    Some(label) => {
+                        let hit: Vec<_> = self.sessions.iter()
+                            .filter(|s| s.label == label)
+                            .collect();
+                        if hit.is_empty() {
+                            send_http_response(
+                                &mut stream, "404 Not Found", "text/plain",
+                                &format!("no session labeled {label}\n"));
+                            return;
+                        }
+                        hit
+                    }
+                    None => self.sessions.iter().collect(),
+                };
+                let body: String = selected.iter()
                     .map(|s| prometheus::render_labeled(
                         &s.registry, Some(&s.label)))
                     .collect();
@@ -430,8 +458,8 @@ impl SessionServer {
             other => send_http_response(
                 &mut stream, "404 Not Found", "text/plain",
                 &format!(
-                    "unknown path {other} — try /metrics or \
-                     /watch/<session>\n")),
+                    "unknown path {other} — try /metrics, \
+                     /metrics?session=<label> or /watch/<session>\n")),
         }
     }
 
@@ -710,9 +738,17 @@ mod tests {
                 assert!(matches!(m, Message::EvalAck { round: 7 }),
                         "expected EvalAck{{7}}, got {m:?}");
                 // While the session runs, the plane serves both
-                // endpoints; scrape from party 1 only.
+                // endpoints; scrape from party 1 only — the bare
+                // concatenated form, the per-session filter, and an
+                // unknown label.
                 if party == 1 {
-                    scrape = Some(http_get(&addr, "/metrics", ""));
+                    scrape = Some((
+                        http_get(&addr, "/metrics", ""),
+                        http_get(&addr,
+                                 &format!("/metrics?session={epoch:08x}"),
+                                 ""),
+                        http_get(&addr, "/metrics?session=nope", ""),
+                    ));
                 }
                 let body = crate::protocol::encode_frame(
                     Some(crate::protocol::FrameHeader {
@@ -730,12 +766,21 @@ mod tests {
         let d2 = raw(2);
         let (_ran, runner) = echo_runner();
         let outcomes = server.serve(runner).unwrap();
-        let scrape = d1.join().unwrap().expect("party 1 scrapes");
+        let (scrape, filtered, missing) =
+            d1.join().unwrap().expect("party 1 scrapes");
         d2.join().unwrap();
         assert!(outcomes[0].result.is_ok());
         let label = format!("session=\"{epoch:08x}\"");
         assert!(scrape.contains(&label),
                 "scrape not labeled with {label}:\n{scrape}");
+        // `?session=` narrows to the named session (here: the same
+        // exposition, since only one is hosted) …
+        assert!(filtered.contains("200 OK") && filtered.contains(&label),
+                "filtered scrape missing {label}:\n{filtered}");
+        // … and an unknown label is a 404 naming the problem, not an
+        // empty 200 a dashboard would silently graph as zeros.
+        assert!(missing.contains("404") && missing.contains("nope"),
+                "unknown session label not refused:\n{missing}");
     }
 
     #[test]

@@ -121,6 +121,20 @@ impl WorksetTable {
         }
     }
 
+    /// Drop every entry inserted before round `floor` (streaming data
+    /// plane, DESIGN.md §12: when a party's feed advances to the next
+    /// window the feature rows backing older rounds are gone, so their
+    /// cached statistics can no longer be re-gathered against). Counted
+    /// as staleness evictions — the window moved, just not by the W
+    /// clock. Returns how many entries were dropped.
+    pub fn retire_below(&mut self, floor: u64) -> usize {
+        let before = self.entries.len();
+        self.entries.retain(|e| e.round >= floor);
+        let dropped = before - self.entries.len();
+        self.stats.evicted_stale += dropped as u64;
+        dropped
+    }
+
     /// Insert a freshly-exchanged batch at communication round `round`.
     /// Applies both eviction rules. `indices` accepts anything that
     /// converts into the shared index buffer — a `Vec<u32>` (moved into
@@ -536,6 +550,23 @@ impl MeshWorkset {
                 return Ok(None); // deliberate wake (shutdown)
             }
         }
+    }
+
+    /// Drop rounds below `floor` from every lane lock-step (see
+    /// [`WorksetTable::retire_below`]): the streaming feed published a
+    /// new window, so entries whose feature rows left memory must not
+    /// be sampled again. Returns entries dropped from the primary lane.
+    pub fn retire_below(&self, floor: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut dropped = 0;
+        for (i, lane) in inner.lanes.iter_mut().enumerate() {
+            let d = lane.retire_below(floor);
+            if i == 0 {
+                dropped = d;
+            }
+        }
+        self.settle(&mut inner);
+        dropped
     }
 
     /// Wake all parked workers without inserting (shutdown path).
@@ -1094,6 +1125,23 @@ mod mesh_tests {
         let e = mesh.sample().unwrap().unwrap();
         assert_eq!(e.za.as_f32().unwrap(),
                    &[e.round as f32 * 2.0 + 1.0]);
+    }
+
+    #[test]
+    fn retire_below_drops_old_rounds_lock_step() {
+        let mesh = MeshWorkset::new(2, 8, 10, Sampling::RoundRobin);
+        for round in 0..4u64 {
+            mesh.insert(round, vec![round as u32],
+                        vec![(t(0.0), t(0.0)), (t(1.0), t(0.0))]);
+        }
+        assert_eq!(mesh.retire_below(2), 2);
+        assert_eq!(mesh.len(), 2);
+        // Sampling still aggregates in lock-step after the cut.
+        let e = mesh.sample().unwrap().unwrap();
+        assert!(e.round >= 2);
+        // A floor at or below the oldest resident round is a no-op.
+        assert_eq!(mesh.retire_below(0), 0);
+        assert_eq!(mesh.len(), 2);
     }
 
     #[test]
