@@ -1,0 +1,103 @@
+//! Chaos-campaign smoke (DESIGN.md §13) — the per-PR slice of the
+//! nightly sweep, artifact-free.
+//!
+//! Runs a small fixed campaign (two mesh scenario families × two
+//! seeded cases) twice and asserts:
+//!
+//! - every case passes its oracles (round parity, clean-link byte
+//!   identity, no hang within the budget);
+//! - the two runs produce **byte-identical** JSON reports — the
+//!   reproducibility contract that makes a nightly failure
+//!   re-derivable from `(root_seed, scenario, index)` alone;
+//! - the shrinker minimizes a synthetically-failing plan to its known
+//!   1-minimal reproducer and renders it as a paste-ready
+//!   `FaultPlan` builder chain.
+//!
+//! Exits non-zero on any drift.
+
+use std::time::Duration;
+
+use celu_vfl::campaign::{
+    run_campaign, shrink_case, CampaignOpts, CasePlan, FaultOp,
+    LinkFault, Scenario,
+};
+
+fn main() -> anyhow::Result<()> {
+    celu_vfl::util::logger::init();
+
+    let opts = CampaignOpts {
+        scenarios: vec![Scenario::Single, Scenario::Reorder],
+        seeds: 2,
+        root_seed: 42,
+        budget: Duration::from_secs(60),
+        shrink: false,
+    };
+    let first = run_campaign(&opts);
+    anyhow::ensure!(
+        first.failed() == 0,
+        "campaign smoke found failures:\n{}",
+        first.failure_details()
+    );
+    anyhow::ensure!(first.cases.len() == 4, "expected 4 cases, ran {}",
+                    first.cases.len());
+    let injected: u64 = first
+        .cases
+        .iter()
+        .map(|c| c.outcome.faults_injected)
+        .sum();
+    anyhow::ensure!(injected >= 4,
+                    "every case must inject at least once, saw \
+                     {injected} total");
+
+    let second = run_campaign(&opts);
+    let (a, b) = (first.to_json().to_string(),
+                  second.to_json().to_string());
+    anyhow::ensure!(a == b,
+                    "the same root seed produced different reports");
+
+    // The shrinker's contract on a known synthetic failure: only a
+    // DropFrame at index >= 2 with >= 3 rounds matters; the rest of
+    // the fat plan must be stripped.
+    let fat = CasePlan {
+        scenario: Scenario::Single,
+        root_seed: 42,
+        index: 0,
+        case_seed: 0xFEED,
+        parties: 3,
+        rounds: 8,
+        codecs: Vec::new(),
+        faults: vec![
+            LinkFault {
+                party: 1,
+                ops: vec![FaultOp::DelayMs(1, 60),
+                          FaultOp::DropFrame(6)],
+            },
+            LinkFault { party: 2,
+                        ops: vec![FaultOp::ReorderFrames(3)] },
+        ],
+    };
+    let fails = |p: &CasePlan| {
+        p.rounds >= 3
+            && p.faults.iter().any(|f| {
+                f.ops.iter().any(
+                    |op| matches!(op, FaultOp::DropFrame(n) if *n >= 2))
+            })
+    };
+    let shrunk = shrink_case(&fat, fails);
+    anyhow::ensure!(shrunk.plan.rounds == 3
+                        && shrunk.plan.faults.len() == 1
+                        && shrunk.plan.faults[0].ops
+                            == vec![FaultOp::DropFrame(2)],
+                    "shrinker left a non-minimal plan: {:?}",
+                    shrunk.plan);
+    let chain = shrunk.plan.faults[0].builder_chain(
+        shrunk.plan.case_seed);
+    anyhow::ensure!(chain.ends_with(".drop_frame(2)"),
+                    "unexpected builder chain: {chain}");
+
+    println!("{}", first.summary_table());
+    println!("campaign smoke OK: 2x{} cases byte-identical, shrink \
+              reproducer `{chain}` ({} evals)",
+             first.cases.len(), shrunk.evals);
+    Ok(())
+}

@@ -1,0 +1,821 @@
+//! Campaign executor and oracles (DESIGN.md §13).
+//!
+//! Runs one [`CasePlan`] through a *real* session — in-proc mesh,
+//! loopback TCP with re-admission, or two sessions multiplexed behind
+//! a [`SessionServer`] — and judges the run against three oracles:
+//!
+//! - **no-panic / no-hang**: the case runs on a worker thread under a
+//!   wall-clock budget; a missing verdict is a hang, a dead channel a
+//!   panic. (A timed-out worker is leaked, not reaped — the budget
+//!   exists to produce a verdict, not to clean up a wedged session.)
+//! - **round parity**: the label completes every planned round; an
+//!   unkilled feature party completes all of them, a killed one
+//!   completes exactly its kill round.
+//! - **clean-link byte identity**: every *unfaulted* link's
+//!   `(bytes, raw_bytes, messages)` triple — both directions — is
+//!   byte-identical to an undisturbed in-proc reference run of the
+//!   same config. Faulted links are exempt (their counts legitimately
+//!   differ); the chaos may not perturb anyone else by a single byte.
+//!
+//! The feature loop here is deliberately *jump-tolerant*: it advances
+//! to `r + 1` whenever a derivative for round `r >= round` arrives and
+//! ignores older replays. That is exactly the discipline a real party
+//! needs under partitions, drops, duplicates and reorders — the label
+//! stales a missing round and moves on, and the party must follow the
+//! label's clock, not its own.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::campaign::plan::{CasePlan, ExecMode, LinkFault, Scenario};
+use crate::campaign::report::{CampaignReport, CaseReport};
+use crate::campaign::shrink;
+use crate::compress::{self, CodecKind};
+use crate::config::RunConfig;
+use crate::protocol::{outbound_stats, Lane, Message};
+use crate::session::bootstrap::{
+    inproc_mesh, rejoin_dial, Readmission, SessionDialer,
+    SessionListener,
+};
+use crate::session::server::{SessionHandle, SessionServer};
+use crate::session::supervisor::{session_epoch, LaneSet};
+use crate::session::{Link, PartyId};
+use crate::tensor::Tensor;
+use crate::transport::fault::FaultTransport;
+use crate::transport::{LinkStats, Transport};
+use crate::util::rng::Pcg;
+
+/// Synthetic activation geometry — small on purpose: the oracles
+/// check protocol behavior, not arithmetic throughput.
+const BATCH: usize = 4;
+const Z_DIM: usize = 3;
+
+const DIAL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One campaign invocation.
+#[derive(Debug, Clone)]
+pub struct CampaignOpts {
+    pub scenarios: Vec<Scenario>,
+    /// Cases per scenario (indices `0..seeds`).
+    pub seeds: u64,
+    pub root_seed: u64,
+    /// Per-case wall-clock budget (the no-hang oracle).
+    pub budget: Duration,
+    /// Delta-debug failing cases down to minimal reproducers.
+    pub shrink: bool,
+}
+
+impl Default for CampaignOpts {
+    fn default() -> Self {
+        CampaignOpts {
+            scenarios: Scenario::all().to_vec(),
+            seeds: 4,
+            root_seed: 42,
+            budget: Duration::from_secs(20),
+            shrink: false,
+        }
+    }
+}
+
+/// The oracles' verdict on one case. Everything here is deterministic
+/// for a given plan — no wall-clock readings, and `rejoined` is a
+/// bool rather than a count because an aborted rejoin attempt may or
+/// may not transiently seat.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CaseOutcome {
+    pub passed: bool,
+    pub failures: Vec<String>,
+    /// Rounds the label drove to completion.
+    pub rounds_completed: u64,
+    pub rejoined: bool,
+    /// Total injections across every `FaultTransport` in the case.
+    pub faults_injected: u64,
+    /// Directed clean links that passed byte-identity.
+    pub clean_links_checked: usize,
+}
+
+impl CaseOutcome {
+    fn infra(msg: String) -> CaseOutcome {
+        CaseOutcome {
+            passed: false,
+            failures: vec![msg],
+            rounds_completed: 0,
+            rejoined: false,
+            faults_injected: 0,
+            clean_links_checked: 0,
+        }
+    }
+}
+
+// ---- shared protocol loops -------------------------------------------------
+
+fn triple(s: LinkStats) -> (u64, u64, u64) {
+    (s.bytes, s.raw_bytes, s.messages)
+}
+
+/// Deterministic per-`(seed, party, round)` activation payload.
+fn synth(seed: u64, party: u16, round: u64) -> Tensor {
+    let mut rng = Pcg::new(seed ^ ((party as u64) << 16), round + 1);
+    let vals: Vec<f32> = (0..BATCH * Z_DIM)
+        .map(|_| (rng.next_u32() % 1000) as f32 / 1000.0)
+        .collect();
+    Tensor::f32(vec![BATCH, Z_DIM], vals)
+}
+
+/// Drive rounds `from..to` of the feature side of a link, tolerating
+/// every injectable disturbance. Returns the round the party reached:
+/// `to` on a clean finish (after draining to the label's shutdown),
+/// earlier iff the link died under it (a planned kill or teardown).
+fn feature_segment(transport: &Arc<dyn Transport>, codec: CodecKind,
+                   seed: u64, party: u16, from: u64, to: u64)
+                   -> anyhow::Result<u64> {
+    let mut round = from;
+    while round < to {
+        let za = synth(seed, party, round);
+        let (msg, _) =
+            outbound_stats(codec, Lane::Activation, round, za)?;
+        if transport.send(msg).is_err() {
+            return Ok(round); // the link died under us (e.g. a kill)
+        }
+        loop {
+            let m = match transport.recv() {
+                Ok(m) => m,
+                Err(_) => return Ok(round),
+            };
+            match m.into_plain() {
+                Ok(Message::Derivative { round: r, .. }) => {
+                    if r >= round {
+                        // The label may have staled past us (our frame
+                        // was dropped/partitioned): follow its clock.
+                        round = r + 1;
+                        break;
+                    }
+                    // Older replay (duplicate / reorder tail): ignore.
+                }
+                Ok(Message::Shutdown) => return Ok(round),
+                Ok(_) => {}
+                Err(_) => {} // garbled inbound frame: skip it
+            }
+        }
+    }
+    loop {
+        match transport.recv() {
+            Ok(Message::Shutdown) | Err(_) => return Ok(to),
+            Ok(_) => {}
+        }
+    }
+}
+
+/// What one feature party reports back to the oracles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PartySide {
+    completed: u64,
+    injected: u64,
+    /// `(bytes, raw_bytes, messages)` sent on the *inner* (unfaulted)
+    /// endpoint — dropped or held frames are never charged, so this
+    /// is what actually crossed the link.
+    triple: (u64, u64, u64),
+}
+
+/// Wrap a link in its fault plan, if any, keeping a handle for the
+/// injection counter.
+fn wrap(link: &Link, fault: Option<&LinkFault>, case_seed: u64)
+        -> (Arc<dyn Transport>, Option<Arc<FaultTransport>>) {
+    match fault {
+        Some(lf) => {
+            let ft = Arc::new(FaultTransport::new(
+                link.transport.clone(), lf.to_fault_plan(case_seed)));
+            (ft.clone() as Arc<dyn Transport>, Some(ft))
+        }
+        None => (link.transport.clone(), None),
+    }
+}
+
+/// The label side's rollup, measured just before shutdown (the same
+/// instant in every run, so triples compare exactly).
+struct LabelRollup {
+    /// Per-lane `(party, (bytes, raw_bytes, messages))` sent
+    /// label→party.
+    lanes: Vec<(u16, (u64, u64, u64))>,
+    rejoins: u64,
+    rounds: u64,
+}
+
+/// Drive the label side over `LaneSet` for `rounds` rounds.
+fn label_loop(cfg: &RunConfig, links: &[Link],
+              readmission: Option<Readmission>, rounds: u64)
+              -> anyhow::Result<LabelRollup> {
+    let mut lanes = LaneSet::new(cfg, links, readmission);
+    lanes.handshake(cfg, None)?;
+    for round in 0..rounds {
+        let inputs = lanes.collect(round)?;
+        let zs: Vec<Tensor> =
+            inputs.iter().filter_map(|i| i.tensor().cloned()).collect();
+        let dza = Tensor::sum_f32(&zs)?;
+        lanes.fan_out(round, &dza)?;
+    }
+    let rollup = LabelRollup {
+        lanes: lanes
+            .link_stats()
+            .into_iter()
+            .map(|(p, s)| (p.0, triple(s)))
+            .collect(),
+        rejoins: lanes.total_rejoins(),
+        rounds,
+    };
+    lanes.shutdown();
+    Ok(rollup)
+}
+
+// ---- mesh mode -------------------------------------------------------------
+
+/// Run one in-proc session; `plan = None` is the undisturbed
+/// reference.
+fn mesh_run(cfg: &RunConfig, rounds: u64, plan: Option<&CasePlan>)
+            -> anyhow::Result<(BTreeMap<u16, PartySide>, LabelRollup)> {
+    let (label_bs, feature_bs) = inproc_mesh(cfg);
+    let mut workers = Vec::new();
+    for bs in feature_bs {
+        let cfg = cfg.clone();
+        let party = bs.id().0;
+        let fault = plan.and_then(|p| p.fault_for(party).cloned());
+        let case_seed = plan.map(|p| p.case_seed).unwrap_or(0);
+        workers.push(std::thread::spawn(
+            move || -> anyhow::Result<(u16, PartySide)> {
+                let links = bs.establish(&cfg)?;
+                let link = &links[0];
+                let codec = compress::negotiate(cfg.codec_for(party),
+                                                link.peer_codecs);
+                let (t, ft) = wrap(link, fault.as_ref(), case_seed);
+                let completed = feature_segment(
+                    &t, codec, cfg.seed, party, 0, rounds)?;
+                Ok((party, PartySide {
+                    completed,
+                    injected: ft.map(|f| f.injected()).unwrap_or(0),
+                    triple: triple(link.transport.stats()),
+                }))
+            },
+        ));
+    }
+    let links = label_bs.establish(cfg)?;
+    let rollup = label_loop(cfg, &links, None, rounds)?;
+    let mut parties = BTreeMap::new();
+    for w in workers {
+        let (p, side) = w
+            .join()
+            .map_err(|_| anyhow::anyhow!("feature worker panicked"))??;
+        parties.insert(p, side);
+    }
+    Ok((parties, rollup))
+}
+
+/// Both-direction byte-identity for every clean link of one session.
+fn clean_link_parity(plan: &CasePlan, faulted_session: bool,
+                     parties: &BTreeMap<u16, PartySide>,
+                     label: &LabelRollup,
+                     ref_parties: &BTreeMap<u16, PartySide>,
+                     ref_label: &LabelRollup, tag: &str,
+                     failures: &mut Vec<String>) -> usize {
+    let mut checked = 0;
+    for (p, side) in parties {
+        if faulted_session && plan.fault_for(*p).is_some() {
+            continue;
+        }
+        match ref_parties.get(p) {
+            Some(r) if r.triple == side.triple => checked += 1,
+            Some(r) => failures.push(format!(
+                "byte identity: {tag}P{p}→label {:?} != reference {:?}",
+                side.triple, r.triple)),
+            None => failures.push(format!(
+                "byte identity: {tag}P{p} absent from reference")),
+        }
+        let got = label.lanes.iter().find(|(id, _)| id == p);
+        let want = ref_label.lanes.iter().find(|(id, _)| id == p);
+        match (got, want) {
+            (Some((_, g)), Some((_, w))) if g == w => checked += 1,
+            (Some((_, g)), Some((_, w))) => failures.push(format!(
+                "byte identity: {tag}label→P{p} {g:?} != reference \
+                 {w:?}")),
+            _ => failures.push(format!(
+                "byte identity: {tag}label lane P{p} missing")),
+        }
+    }
+    checked
+}
+
+/// Round parity for one session's feature parties.
+fn round_parity(plan: &CasePlan, faulted_session: bool,
+                parties: &BTreeMap<u16, PartySide>, rounds: u64,
+                tag: &str, failures: &mut Vec<String>) {
+    for (p, side) in parties {
+        let expect = match plan
+            .fault_for(*p)
+            .filter(|_| faulted_session)
+            .and_then(|f| f.kill_round())
+        {
+            Some(k) => k,
+            None => rounds,
+        };
+        if side.completed != expect {
+            failures.push(format!(
+                "round parity: {tag}P{p} completed {} rounds, \
+                 expected {expect}", side.completed));
+        }
+    }
+}
+
+/// Every faulted link must have injected at least once — a plan that
+/// never fires tests nothing.
+fn injection_coverage(plan: &CasePlan,
+                      parties: &BTreeMap<u16, PartySide>,
+                      failures: &mut Vec<String>) {
+    for f in &plan.faults {
+        let injected =
+            parties.get(&f.party).map(|s| s.injected).unwrap_or(0);
+        if injected == 0 {
+            failures.push(format!(
+                "injection: P{} applied none of its {} fault ops",
+                f.party, f.ops.len()));
+        }
+    }
+}
+
+fn execute_mesh(plan: &CasePlan) -> anyhow::Result<CaseOutcome> {
+    let cfg = plan.cfg()?;
+    let (ref_parties, ref_label) = mesh_run(&cfg, plan.rounds, None)?;
+    let (parties, label) = mesh_run(&cfg, plan.rounds, Some(plan))?;
+    let mut failures = Vec::new();
+    round_parity(plan, true, &parties, plan.rounds, "", &mut failures);
+    injection_coverage(plan, &parties, &mut failures);
+    let checked = clean_link_parity(plan, true, &parties, &label,
+                                    &ref_parties, &ref_label, "",
+                                    &mut failures);
+    Ok(CaseOutcome {
+        passed: failures.is_empty(),
+        failures,
+        rounds_completed: label.rounds,
+        rejoined: label.rejoins > 0,
+        faults_injected: parties.values().map(|s| s.injected).sum(),
+        clean_links_checked: checked,
+    })
+}
+
+// ---- tcp mode (kill / kill-during-rejoin) ----------------------------------
+
+fn execute_tcp(plan: &CasePlan) -> anyhow::Result<CaseOutcome> {
+    let cfg = plan.cfg()?;
+    let rounds = plan.rounds;
+    let lf = plan
+        .faults
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("tcp case without a fault"))?
+        .clone();
+    let kill = lf.kill_round().ok_or_else(|| {
+        anyhow::anyhow!("tcp scenario requires a kill op, got {:?}",
+                        lf.ops)
+    })?;
+    let abort_first = plan.scenario == Scenario::RejoinAbort;
+    // TCP framing is byte-identical to in-proc for the identity
+    // codec, so the cheap in-proc run is a valid reference.
+    let (ref_parties, ref_label) = mesh_run(&cfg, rounds, None)?;
+
+    let listener = SessionListener::bind("127.0.0.1:0")?
+        .with_timeout(DIAL_TIMEOUT);
+    let addr = listener.local_addr()?.to_string();
+
+    // The victim: join, die at the planned round, (optionally) abort
+    // one rejoin handshake mid-flight, rejoin for real, finish.
+    let victim = std::thread::spawn({
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        let lf = lf.clone();
+        let case_seed = plan.case_seed;
+        move || -> anyhow::Result<(u64, PartySide)> {
+            let party = PartyId(lf.party);
+            let (link, start) = SessionDialer::new(&addr, party)
+                .with_timeout(DIAL_TIMEOUT)
+                .establish_resumable(&cfg)?;
+            anyhow::ensure!(start == 0,
+                            "victim resumed at {start} on first join");
+            let codec = compress::negotiate(cfg.codec_for(party.0),
+                                            link.peer_codecs);
+            let epoch = session_epoch(cfg.seed);
+            let (t, ft) = wrap(&link, Some(&lf), case_seed);
+            let died = feature_segment(&t, codec, cfg.seed, party.0,
+                                       0, rounds)?;
+            anyhow::ensure!(died == kill,
+                            "victim died at {died}, planned {kill}");
+            let injected =
+                ft.map(|f| f.injected()).unwrap_or(0);
+            drop(t);
+            drop(link);
+            if abort_first {
+                // A valid Rejoin frame whose socket dies before the
+                // ack is read: the kill-during-rejoin composition.
+                let mut s = std::net::TcpStream::connect(&addr)?;
+                crate::session::bootstrap::send_bootstrap_frame(
+                    &mut s,
+                    &Message::Rejoin {
+                        party,
+                        parties: cfg.parties as u16,
+                        epoch,
+                        last_round: died,
+                        codecs: compress::supported_mask(),
+                    })?;
+                drop(s);
+                // Let the aborted contact clear the vetting workers so
+                // the two attempts cannot seat out of order.
+                std::thread::sleep(Duration::from_millis(150));
+            }
+            let (fresh, resume, replays) = rejoin_dial(
+                &addr, party, &cfg, epoch, died, DIAL_TIMEOUT)?;
+            anyhow::ensure!(resume >= kill && resume <= rounds,
+                            "resumed at {resume}, outside \
+                             [{kill}, {rounds}]");
+            for _ in 0..replays {
+                let _ = fresh.recv()?; // stale in-flight derivatives
+            }
+            let completed = feature_segment(&fresh, codec, cfg.seed,
+                                            party.0, resume, rounds)?;
+            Ok((resume, PartySide {
+                completed,
+                injected,
+                triple: triple(fresh.stats()),
+            }))
+        }
+    });
+
+    let mut others = Vec::new();
+    for p in 1..cfg.parties as u16 {
+        if p == lf.party {
+            continue;
+        }
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        others.push(std::thread::spawn(
+            move || -> anyhow::Result<(u16, PartySide)> {
+                let (link, start) = SessionDialer::new(&addr,
+                                                       PartyId(p))
+                    .with_timeout(DIAL_TIMEOUT)
+                    .establish_resumable(&cfg)?;
+                anyhow::ensure!(start == 0, "P{p} resumed at {start}");
+                let codec = compress::negotiate(cfg.codec_for(p),
+                                                link.peer_codecs);
+                let completed = feature_segment(
+                    &link.transport, codec, cfg.seed, p, 0, rounds)?;
+                Ok((p, PartySide {
+                    completed,
+                    injected: 0,
+                    triple: triple(link.transport.stats()),
+                }))
+            },
+        ));
+    }
+
+    let (links, readmission, _epoch, start) =
+        listener.establish_supervised(&cfg)?;
+    anyhow::ensure!(start == 0, "label resumed at {start}");
+    let label = label_loop(&cfg, &links, Some(readmission), rounds)?;
+
+    let mut failures = Vec::new();
+    let mut parties = BTreeMap::new();
+    for w in others {
+        let (p, side) = w
+            .join()
+            .map_err(|_| anyhow::anyhow!("feature worker panicked"))??;
+        parties.insert(p, side);
+    }
+    let (resume, victim_side) = victim
+        .join()
+        .map_err(|_| anyhow::anyhow!("victim worker panicked"))??;
+
+    round_parity(plan, false, &parties, rounds, "", &mut failures);
+    if victim_side.completed != rounds {
+        failures.push(format!(
+            "round parity: victim P{} finished at {} after resuming \
+             at {resume}, expected {rounds}",
+            lf.party, victim_side.completed));
+    }
+    if victim_side.injected == 0 {
+        failures.push(format!(
+            "injection: victim P{} never applied its kill", lf.party));
+    }
+    if label.rejoins == 0 {
+        failures.push("rejoin: the label seated no rejoin".into());
+    }
+    let checked = clean_link_parity(plan, true, &parties, &label,
+                                    &ref_parties, &ref_label, "",
+                                    &mut failures);
+    // The victim's post-resume link is fresh, so its ledger holds
+    // exactly the surviving rounds' frames: the reference run divides
+    // evenly per round and scales to `rounds - resume` of them.
+    match ref_parties.get(&lf.party) {
+        Some(r) if r.triple.2 == rounds
+            && r.triple.0 % rounds == 0
+            && r.triple.1 % rounds == 0 =>
+        {
+            let survived = rounds - resume;
+            let want = (r.triple.0 / rounds * survived,
+                        r.triple.1 / rounds * survived, survived);
+            if victim_side.triple != want {
+                failures.push(format!(
+                    "byte identity: victim P{} post-resume {:?} != \
+                     per-round reference {:?}",
+                    lf.party, victim_side.triple, want));
+            }
+        }
+        _ => failures.push(format!(
+            "byte identity: reference for P{} is not per-round \
+             uniform: {:?}",
+            lf.party, ref_parties.get(&lf.party))),
+    }
+    Ok(CaseOutcome {
+        passed: failures.is_empty(),
+        failures,
+        rounds_completed: label.rounds,
+        rejoined: label.rejoins > 0,
+        faults_injected: victim_side.injected,
+        clean_links_checked: checked,
+    })
+}
+
+// ---- serve mode ------------------------------------------------------------
+
+fn execute_serve(plan: &CasePlan) -> anyhow::Result<CaseOutcome> {
+    let rounds = plan.rounds;
+    let cfg_a = plan.cfg()?; // the faulted session
+    let mut cfg_b = plan.cfg()?; // its clean neighbor
+    cfg_b.seed = plan.case_seed ^ 0x5EB; // distinct epoch, same shape
+    let (ref_a_parties, ref_a_label) = mesh_run(&cfg_a, rounds, None)?;
+    let (ref_b_parties, ref_b_label) = mesh_run(&cfg_b, rounds, None)?;
+
+    let mut server =
+        SessionServer::bind("127.0.0.1:0")?.with_join_timeout(
+            DIAL_TIMEOUT);
+    server.host(cfg_a.clone())?;
+    server.host(cfg_b.clone())?;
+    let addr = server.local_addr()?.to_string();
+
+    let mut workers = Vec::new();
+    for (cfg, faulted) in [(cfg_a.clone(), true),
+                           (cfg_b.clone(), false)] {
+        for p in 1..cfg.parties as u16 {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            let fault = if faulted {
+                plan.fault_for(p).cloned()
+            } else {
+                None
+            };
+            let case_seed = plan.case_seed;
+            workers.push(std::thread::spawn(
+                move || -> anyhow::Result<(u64, u16, PartySide)> {
+                    let (link, start) =
+                        SessionDialer::new(&addr, PartyId(p))
+                            .with_timeout(DIAL_TIMEOUT)
+                            .establish_resumable(&cfg)?;
+                    anyhow::ensure!(start == 0,
+                                    "P{p} resumed at {start}");
+                    let codec = compress::negotiate(
+                        cfg.codec_for(p), link.peer_codecs);
+                    let (t, ft) = wrap(&link, fault.as_ref(),
+                                       case_seed);
+                    let completed = feature_segment(
+                        &t, codec, cfg.seed, p, 0, rounds)?;
+                    Ok((cfg.seed, p, PartySide {
+                        completed,
+                        injected:
+                            ft.map(|f| f.injected()).unwrap_or(0),
+                        triple: triple(link.transport.stats()),
+                    }))
+                },
+            ));
+        }
+    }
+
+    let rollups: Arc<Mutex<BTreeMap<u64, LabelRollup>>> =
+        Arc::new(Mutex::new(BTreeMap::new()));
+    let outcomes = server.serve({
+        let rollups = rollups.clone();
+        move |h: SessionHandle| -> anyhow::Result<()> {
+            let SessionHandle { cfg, links, readmission, .. } = h;
+            let rollup = label_loop(&cfg, &links, Some(readmission),
+                                    rounds)?;
+            rollups.lock().unwrap().insert(cfg.seed, rollup);
+            Ok(())
+        }
+    })?;
+
+    let mut failures = Vec::new();
+    for o in &outcomes {
+        if let Err(e) = &o.result {
+            failures.push(format!(
+                "serve: session {} failed: {e:#}", o.label));
+        }
+    }
+    let mut sessions: BTreeMap<u64, BTreeMap<u16, PartySide>> =
+        BTreeMap::new();
+    for w in workers {
+        let (seed, p, side) = w
+            .join()
+            .map_err(|_| anyhow::anyhow!("feature worker panicked"))??;
+        sessions.entry(seed).or_default().insert(p, side);
+    }
+    let rollups = rollups.lock().unwrap();
+
+    let mut checked = 0;
+    let mut injected = 0;
+    let mut rounds_completed = rounds;
+    for (seed, tag, faulted, ref_parties, ref_label) in [
+        (cfg_a.seed, "faulted:", true, &ref_a_parties, &ref_a_label),
+        (cfg_b.seed, "neighbor:", false, &ref_b_parties,
+         &ref_b_label),
+    ] {
+        let parties = match sessions.get(&seed) {
+            Some(p) => p,
+            None => {
+                failures.push(format!(
+                    "serve: no feature reports for session {tag}"));
+                continue;
+            }
+        };
+        injected += parties.values().map(|s| s.injected).sum::<u64>();
+        round_parity(plan, faulted, parties, rounds, tag,
+                     &mut failures);
+        match rollups.get(&seed) {
+            Some(label) => {
+                rounds_completed = rounds_completed.min(label.rounds);
+                checked += clean_link_parity(
+                    plan, faulted, parties, label, ref_parties,
+                    ref_label, tag, &mut failures);
+            }
+            None => failures.push(format!(
+                "serve: label rollup missing for session {tag}")),
+        }
+        if faulted {
+            injection_coverage(plan, parties, &mut failures);
+        }
+    }
+    Ok(CaseOutcome {
+        passed: failures.is_empty(),
+        failures,
+        rounds_completed,
+        rejoined: false,
+        faults_injected: injected,
+        clean_links_checked: checked,
+    })
+}
+
+// ---- the budgeted driver ---------------------------------------------------
+
+fn execute(plan: &CasePlan) -> anyhow::Result<CaseOutcome> {
+    match plan.scenario.mode() {
+        ExecMode::Mesh => execute_mesh(plan),
+        ExecMode::Tcp => execute_tcp(plan),
+        ExecMode::Serve => execute_serve(plan),
+    }
+}
+
+/// Run one case under the no-panic / no-hang oracle: the session runs
+/// on a worker thread; no verdict within `budget` is a hang (the
+/// worker is leaked), a dropped channel without a verdict is a panic.
+pub fn run_case(plan: &CasePlan, budget: Duration) -> CaseOutcome {
+    let (tx, rx) = mpsc::channel();
+    let p = plan.clone();
+    std::thread::spawn(move || {
+        let _ = tx.send(execute(&p));
+    });
+    match rx.recv_timeout(budget) {
+        Ok(Ok(outcome)) => outcome,
+        Ok(Err(e)) => CaseOutcome::infra(format!("error: {e:#}")),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            CaseOutcome::infra(format!(
+                "hang: no verdict within the {}ms wall-clock budget",
+                budget.as_millis()))
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => CaseOutcome::infra(
+            "panic: the case worker died without a verdict".into()),
+    }
+}
+
+/// Sweep the whole `scenarios × seeds` grid, shrinking failures when
+/// asked. The report is byte-for-byte reproducible for a fixed
+/// `(scenarios, seeds, root_seed)`.
+pub fn run_campaign(opts: &CampaignOpts) -> CampaignReport {
+    let mut cases = Vec::new();
+    for &sc in &opts.scenarios {
+        for index in 0..opts.seeds {
+            let plan = CasePlan::generate(sc, opts.root_seed, index);
+            log::info!("campaign: running {}", plan.id());
+            let outcome = run_case(&plan, opts.budget);
+            let (shrunk, shrink_evals) = if !outcome.passed
+                && opts.shrink
+            {
+                log::info!("campaign: shrinking {}", plan.id());
+                let budget = opts.budget;
+                let r = shrink::shrink(&plan, |cand| {
+                    cand.executable() && !run_case(cand, budget).passed
+                });
+                (Some(r.plan), r.evals)
+            } else {
+                (None, 0)
+            };
+            cases.push(CaseReport { plan, outcome, shrunk,
+                                    shrink_evals });
+        }
+    }
+    CampaignReport { root_seed: opts.root_seed, cases }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::plan::FaultOp;
+
+    const TEST_BUDGET: Duration = Duration::from_secs(60);
+
+    #[test]
+    fn mesh_single_fault_case_passes_and_is_deterministic() {
+        let plan = CasePlan::generate(Scenario::Single, 42, 0);
+        let a = run_case(&plan, TEST_BUDGET);
+        assert!(a.passed, "{:?}", a.failures);
+        assert!(a.faults_injected >= 1);
+        assert_eq!(a.rounds_completed, plan.rounds);
+        assert!(a.clean_links_checked >= 2,
+                "both directions of the clean lane must be checked");
+        let b = run_case(&plan, TEST_BUDGET);
+        assert_eq!(a, b, "the same plan produced different outcomes");
+    }
+
+    #[test]
+    fn mesh_multi_fault_and_codec_cross_cases_pass() {
+        for sc in [Scenario::Multi, Scenario::Codec,
+                   Scenario::Reorder] {
+            let plan = CasePlan::generate(sc, 42, 1);
+            let out = run_case(&plan, TEST_BUDGET);
+            assert!(out.passed, "{}: {:?}", plan.id(), out.failures);
+            assert!(out.faults_injected >= 1, "{}", plan.id());
+        }
+    }
+
+    #[test]
+    fn tcp_kill_case_heals_by_rejoin_and_passes() {
+        let plan = CasePlan::generate(Scenario::Kill, 42, 0);
+        let out = run_case(&plan, TEST_BUDGET);
+        assert!(out.passed, "{}: {:?}", plan.id(), out.failures);
+        assert!(out.rejoined, "the victim never rejoined");
+        assert_eq!(out.rounds_completed, plan.rounds);
+    }
+
+    #[test]
+    fn serve_case_keeps_the_neighbor_session_byte_identical() {
+        let plan = CasePlan::generate(Scenario::Serve, 42, 0);
+        let out = run_case(&plan, TEST_BUDGET);
+        assert!(out.passed, "{}: {:?}", plan.id(), out.failures);
+        // Session A's clean lane + all of session B, both directions.
+        assert!(out.clean_links_checked >= 6,
+                "checked only {} directed links",
+                out.clean_links_checked);
+    }
+
+    #[test]
+    fn a_malformed_plan_is_an_infra_failure_not_a_panic() {
+        // A tcp scenario whose fault has no kill op: the executor
+        // must return a failed outcome, not crash the process.
+        let mut plan = CasePlan::generate(Scenario::Kill, 42, 0);
+        plan.faults[0].ops = vec![FaultOp::DropFrame(1)];
+        let out = run_case(&plan, TEST_BUDGET);
+        assert!(!out.passed);
+        assert!(out.failures[0].contains("kill op"),
+                "{:?}", out.failures);
+    }
+
+    #[test]
+    fn the_budget_oracle_reports_a_hang() {
+        let plan = CasePlan::generate(Scenario::Single, 42, 2);
+        let out = run_case(&plan, Duration::from_millis(1));
+        assert!(!out.passed);
+        assert!(out.failures[0].starts_with("hang:"),
+                "{:?}", out.failures);
+    }
+
+    #[test]
+    fn a_fixed_campaign_reports_byte_identically_twice() {
+        let opts = CampaignOpts {
+            scenarios: vec![Scenario::Single],
+            seeds: 2,
+            root_seed: 7,
+            budget: TEST_BUDGET,
+            shrink: false,
+        };
+        let a = run_campaign(&opts).to_json().to_string();
+        let b = run_campaign(&opts).to_json().to_string();
+        assert_eq!(a, b);
+        let parsed = crate::util::json::Json::parse(&a).unwrap();
+        assert_eq!(parsed.expect("cases_failed").unwrap()
+                       .as_f64().unwrap(), 0.0,
+                   "fixed campaign found failures: {a}");
+    }
+}

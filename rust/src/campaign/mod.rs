@@ -1,0 +1,30 @@
+//! Chaos campaign subsystem (DESIGN.md §13): randomized fault-plan
+//! sweeps with automatic seed shrinking.
+//!
+//! The chaos matrix's hand-written fault tests each pin one
+//! composition; a *campaign* explores the space instead. A root seed
+//! expands — scenario by scenario, index by index — into many
+//! [`CasePlan`]s ([`plan`]): multi-fault overlaps, frame reordering,
+//! fault × codec cross-products, kills during rejoin handshakes, and
+//! faults inside one multiplexed `SessionServer` session while its
+//! neighbor trains on. The executor ([`exec`]) runs every plan
+//! through a real session and judges it against three oracles —
+//! no-panic/no-hang under a wall-clock budget, round-count parity,
+//! and byte-identity of every surviving clean link against an
+//! undisturbed reference. Failures shrink ([`shrink`]) to 1-minimal
+//! reproducers, printed as ready-to-paste `FaultPlan` builder chains,
+//! and the whole sweep serializes to a byte-reproducible JSON report
+//! ([`report`]).
+//!
+//! Entry points: `celu-vfl campaign` on the command line,
+//! [`run_campaign`] from code.
+
+pub mod exec;
+pub mod plan;
+pub mod report;
+pub mod shrink;
+
+pub use exec::{run_campaign, run_case, CampaignOpts, CaseOutcome};
+pub use plan::{CasePlan, FaultOp, LinkFault, Scenario};
+pub use report::{CampaignReport, CaseReport};
+pub use shrink::{shrink as shrink_case, ShrinkResult};

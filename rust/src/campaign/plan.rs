@@ -1,0 +1,598 @@
+//! Seeded fault-plan generation (DESIGN.md §13).
+//!
+//! A campaign is a grid of *cases*: `(scenario, root_seed, index)`
+//! expands — through one Pcg stream, nothing else — into a
+//! [`CasePlan`]: a declarative description of one chaos session (mesh
+//! shape, round count, per-party codecs, and the fault schedule of
+//! every afflicted link). The same triple always expands to the same
+//! plan, so a failing case from a nightly sweep reproduces from three
+//! integers, and the shrinker can mutate plans structurally without
+//! touching the RNG.
+//!
+//! `CasePlan` mirrors [`FaultPlan`](crate::transport::fault::FaultPlan)
+//! but stays declarative ([`FaultOp`] values instead of the builder's
+//! private fields): the executor lowers it with
+//! [`LinkFault::to_fault_plan`], and a failing case prints itself as a
+//! ready-to-paste builder chain via [`LinkFault::builder_chain`].
+
+use crate::compress::CodecKind;
+use crate::config::RunConfig;
+use crate::transport::fault::FaultPlan;
+use crate::util::rng::Pcg;
+
+/// Pcg stream tag for campaign case expansion.
+pub const CAMPAIGN_STREAM: u64 = 0xCA_4411;
+
+/// Weyl increment decorrelating consecutive case indices.
+const INDEX_GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The straggler window every campaign session runs under: long
+/// enough that an undisturbed in-proc or loopback frame never misses
+/// it (byte parity of clean lanes stays exact), short enough that a
+/// faulted round stales in bounded time.
+pub const CAMPAIGN_STRAGGLER_MS: u64 = 500;
+
+/// The per-case RNG: reproducible from `(root_seed, scenario, index)`
+/// alone — no generation-order coupling between cases.
+pub fn case_rng(root_seed: u64, scenario: Scenario, index: u64) -> Pcg {
+    Pcg::new(
+        root_seed.wrapping_add(index.wrapping_mul(INDEX_GOLDEN)),
+        CAMPAIGN_STREAM ^ scenario.tag(),
+    )
+}
+
+/// One fault injection, declaratively. Mirrors the
+/// `FaultPlan` builder surface one-to-one so lowering is mechanical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOp {
+    KillAtRound(u64),
+    DropFrame(u64),
+    /// `(nth, millis)`.
+    DelayMs(u64, u64),
+    DuplicateFrame(u64),
+    CorruptFrame(u64),
+    ReorderFrames(u64),
+    PartitionRounds { from: u64, to: u64, both_ways: bool },
+}
+
+impl FaultOp {
+    /// Lower onto a `FaultPlan` builder.
+    pub fn apply(&self, plan: FaultPlan) -> FaultPlan {
+        match *self {
+            FaultOp::KillAtRound(r) => plan.kill_at_round(r),
+            FaultOp::DropFrame(n) => plan.drop_frame(n),
+            FaultOp::DelayMs(n, ms) => plan.delay_ms(n, ms),
+            FaultOp::DuplicateFrame(n) => plan.duplicate_frame(n),
+            FaultOp::CorruptFrame(n) => plan.corrupt_frame(n),
+            FaultOp::ReorderFrames(n) => plan.reorder_frames(n),
+            FaultOp::PartitionRounds { from, to, both_ways: false } => {
+                plan.partition_rounds(from, to)
+            }
+            FaultOp::PartitionRounds { from, to, both_ways: true } => {
+                plan.partition_rounds_bidirectional(from, to)
+            }
+        }
+    }
+
+    /// The builder call this op renders to (appended to
+    /// `FaultPlan::new(..)` by [`LinkFault::builder_chain`]).
+    pub fn builder_call(&self) -> String {
+        match *self {
+            FaultOp::KillAtRound(r) => format!(".kill_at_round({r})"),
+            FaultOp::DropFrame(n) => format!(".drop_frame({n})"),
+            FaultOp::DelayMs(n, ms) => format!(".delay_ms({n}, {ms})"),
+            FaultOp::DuplicateFrame(n) => {
+                format!(".duplicate_frame({n})")
+            }
+            FaultOp::CorruptFrame(n) => format!(".corrupt_frame({n})"),
+            FaultOp::ReorderFrames(n) => format!(".reorder_frames({n})"),
+            FaultOp::PartitionRounds { from, to, both_ways: false } => {
+                format!(".partition_rounds({from}, {to})")
+            }
+            FaultOp::PartitionRounds { from, to, both_ways: true } => {
+                format!(".partition_rounds_bidirectional({from}, {to})")
+            }
+        }
+    }
+
+    /// The frame/round index the op anchors to — the shrinker's
+    /// per-op minimization axis.
+    pub fn index(&self) -> u64 {
+        match *self {
+            FaultOp::KillAtRound(r) => r,
+            FaultOp::DropFrame(n)
+            | FaultOp::DelayMs(n, _)
+            | FaultOp::DuplicateFrame(n)
+            | FaultOp::CorruptFrame(n)
+            | FaultOp::ReorderFrames(n) => n,
+            FaultOp::PartitionRounds { from, .. } => from,
+        }
+    }
+
+    /// The same op re-anchored at index `v` (a partition keeps its
+    /// width and direction).
+    pub fn with_index(&self, v: u64) -> FaultOp {
+        match *self {
+            FaultOp::KillAtRound(_) => FaultOp::KillAtRound(v),
+            FaultOp::DropFrame(_) => FaultOp::DropFrame(v),
+            FaultOp::DelayMs(_, ms) => FaultOp::DelayMs(v, ms),
+            FaultOp::DuplicateFrame(_) => FaultOp::DuplicateFrame(v),
+            FaultOp::CorruptFrame(_) => FaultOp::CorruptFrame(v),
+            FaultOp::ReorderFrames(_) => FaultOp::ReorderFrames(v),
+            FaultOp::PartitionRounds { from, to, both_ways } => {
+                FaultOp::PartitionRounds {
+                    from: v,
+                    to: v + (to - from),
+                    both_ways,
+                }
+            }
+        }
+    }
+
+    pub fn is_kill(&self) -> bool {
+        matches!(self, FaultOp::KillAtRound(_))
+    }
+}
+
+/// The fault schedule of one feature party's link (its outbound,
+/// party → label direction — where the activation traffic lives).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinkFault {
+    pub party: u16,
+    pub ops: Vec<FaultOp>,
+}
+
+impl LinkFault {
+    /// The seed the lowered `FaultPlan` carries (derives corrupt-bit
+    /// placement): per-party so two faulted links never share a
+    /// corruption stream.
+    pub fn fault_seed(&self, case_seed: u64) -> u64 {
+        case_seed ^ ((self.party as u64) << 32)
+    }
+
+    /// Lower to a runnable `FaultPlan`.
+    pub fn to_fault_plan(&self, case_seed: u64) -> FaultPlan {
+        self.ops
+            .iter()
+            .fold(FaultPlan::new(self.fault_seed(case_seed)),
+                  |p, op| op.apply(p))
+    }
+
+    /// Ready-to-paste builder chain reproducing this link's plan.
+    pub fn builder_chain(&self, case_seed: u64) -> String {
+        let mut s = format!("FaultPlan::new(0x{:X})",
+                            self.fault_seed(case_seed));
+        for op in &self.ops {
+            s.push_str(&op.builder_call());
+        }
+        s
+    }
+
+    /// The round the link dies at, if any op kills it.
+    pub fn kill_round(&self) -> Option<u64> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                FaultOp::KillAtRound(r) => Some(*r),
+                _ => None,
+            })
+            .min()
+    }
+}
+
+/// Campaign scenario families — each stresses a different lifecycle
+/// surface, and each maps to one executor mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// One fault on one lane of an in-proc K=3 mesh.
+    Single,
+    /// Two faulted lanes at once on a K=4 mesh, each carrying one or
+    /// two composed ops (possibly two parties down simultaneously).
+    Multi,
+    /// Frame reordering, optionally composed with a duplicate.
+    Reorder,
+    /// Fault × codec cross-product: per-party codecs drawn from the
+    /// full family, one fault on one lane.
+    Codec,
+    /// A `FaultPlan` kill over real TCP, healed by `rejoin_dial`.
+    Kill,
+    /// A kill whose *first rejoin attempt* is itself killed
+    /// mid-handshake; the second attempt must heal the session.
+    RejoinAbort,
+    /// A `SessionServer` hosting the faulted session next to a clean
+    /// neighbor session: the neighbor must stay byte-identical.
+    Serve,
+}
+
+/// How the executor realizes a scenario's session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// In-proc star, label drives `LaneSet` directly.
+    Mesh,
+    /// Loopback TCP through `SessionListener` with a re-admission
+    /// point (rejoin scenarios need real sockets).
+    Tcp,
+    /// Two sessions multiplexed behind one `SessionServer`.
+    Serve,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 7] {
+        [Scenario::Single, Scenario::Multi, Scenario::Reorder,
+         Scenario::Codec, Scenario::Kill, Scenario::RejoinAbort,
+         Scenario::Serve]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::Single => "single",
+            Scenario::Multi => "multi",
+            Scenario::Reorder => "reorder",
+            Scenario::Codec => "codec",
+            Scenario::Kill => "kill",
+            Scenario::RejoinAbort => "rejoin-abort",
+            Scenario::Serve => "serve",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Scenario> {
+        Scenario::all()
+            .into_iter()
+            .find(|sc| sc.label() == s)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown scenario '{s}' (expected one of: {})",
+                Scenario::all()
+                    .iter()
+                    .map(|sc| sc.label())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        match self {
+            Scenario::Kill | Scenario::RejoinAbort => ExecMode::Tcp,
+            Scenario::Serve => ExecMode::Serve,
+            _ => ExecMode::Mesh,
+        }
+    }
+
+    /// RNG stream salt (keeps same-index cases of different scenarios
+    /// decorrelated).
+    fn tag(&self) -> u64 {
+        match self {
+            Scenario::Single => 1,
+            Scenario::Multi => 2,
+            Scenario::Reorder => 3,
+            Scenario::Codec => 4,
+            Scenario::Kill => 5,
+            Scenario::RejoinAbort => 6,
+            Scenario::Serve => 7,
+        }
+    }
+}
+
+/// One fully-expanded chaos case: everything the executor needs, and
+/// everything the shrinker mutates. Generation is the only place the
+/// RNG is consulted — a mutated plan stays exactly as written.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CasePlan {
+    pub scenario: Scenario,
+    pub root_seed: u64,
+    pub index: u64,
+    /// Session seed (drives epoch, synthetic tensors, corruption
+    /// bits) — itself derived from the case RNG.
+    pub case_seed: u64,
+    pub parties: usize,
+    pub rounds: u64,
+    /// Per-party codec overrides (`[party.N] compress = ..`).
+    pub codecs: Vec<(u16, CodecKind)>,
+    /// Faulted links. Always leaves at least one feature lane clean,
+    /// so the session's "≥1 contributing lane" invariant — and the
+    /// clean-link byte-parity oracle — stay meaningful.
+    pub faults: Vec<LinkFault>,
+}
+
+/// One non-kill op anchored at a frame index in `1..max_round`.
+fn sample_non_kill(rng: &mut Pcg, max_round: u64) -> FaultOp {
+    let span = max_round.max(2) - 1;
+    let nth = 1 + rng.gen_range(span as u32) as u64;
+    match rng.gen_range(6) {
+        0 => FaultOp::DropFrame(nth),
+        1 => FaultOp::DelayMs(nth, 50 + rng.gen_range(100) as u64),
+        2 => FaultOp::DuplicateFrame(nth),
+        3 => FaultOp::CorruptFrame(nth),
+        4 => FaultOp::ReorderFrames(nth),
+        _ => {
+            let width = 1 + rng.gen_range(2) as u64;
+            // A bidirectional window must end before the final round:
+            // if it swallowed the label's last derivative, the feature
+            // loop could only finish via shutdown and round parity
+            // would (correctly, but uninterestingly) fail.
+            let both_ways = rng.gen_range(2) == 0
+                && nth + 1 < max_round;
+            let cap = if both_ways { max_round - 1 } else { max_round };
+            FaultOp::PartitionRounds {
+                from: nth,
+                to: (nth + width).min(cap),
+                both_ways,
+            }
+        }
+    }
+}
+
+fn sample_codec(rng: &mut Pcg) -> CodecKind {
+    match rng.gen_range(4) {
+        0 => CodecKind::Identity,
+        1 => CodecKind::Fp16,
+        2 => CodecKind::QuantInt8,
+        _ => CodecKind::TopK(4),
+    }
+}
+
+impl CasePlan {
+    /// Expand `(scenario, root_seed, index)` into a full case. Every
+    /// sampled placement is constrained to actually *trigger* within
+    /// the case's rounds (a kill follows any other op on the same
+    /// link), so each faulted link injects at least once.
+    pub fn generate(scenario: Scenario, root_seed: u64, index: u64)
+                    -> CasePlan {
+        let mut rng = case_rng(root_seed, scenario, index);
+        let case_seed = rng.next_u64();
+        let mut plan = CasePlan {
+            scenario,
+            root_seed,
+            index,
+            case_seed,
+            parties: 3,
+            rounds: 4,
+            codecs: Vec::new(),
+            faults: Vec::new(),
+        };
+        match scenario {
+            Scenario::Single => {
+                plan.rounds = 4 + rng.gen_range(4) as u64;
+                let party = 1 + rng.gen_range(2) as u16;
+                let op = sample_non_kill(&mut rng, plan.rounds);
+                plan.faults.push(LinkFault { party, ops: vec![op] });
+            }
+            Scenario::Multi => {
+                plan.parties = 4;
+                plan.rounds = 5 + rng.gen_range(3) as u64;
+                // Two distinct faulted parties out of {1, 2, 3} — the
+                // third stays clean for the parity oracle.
+                let a = 1 + rng.gen_range(3) as u16;
+                let b = 1 + ((a - 1 + 1 + rng.gen_range(2) as u16) % 3);
+                for party in [a, b] {
+                    // One non-kill op, optionally followed by a kill
+                    // strictly after it (fault-then-die composition;
+                    // two kills ⇒ two parties down at once).
+                    let op = sample_non_kill(&mut rng, plan.rounds - 1);
+                    let mut ops = vec![op];
+                    if rng.gen_range(2) == 0 {
+                        let lo = op.index() + 1;
+                        let span = (plan.rounds - lo).max(1);
+                        let k = lo + rng.gen_range(span as u32) as u64;
+                        ops.push(FaultOp::KillAtRound(
+                            k.min(plan.rounds - 1)));
+                    }
+                    plan.faults.push(LinkFault { party, ops });
+                }
+            }
+            Scenario::Reorder => {
+                plan.rounds = 5 + rng.gen_range(3) as u64;
+                let party = 1 + rng.gen_range(2) as u16;
+                let nth = 1 + rng.gen_range(plan.rounds as u32 - 1)
+                    as u64;
+                let mut ops = vec![FaultOp::ReorderFrames(nth)];
+                if rng.gen_range(2) == 0 && nth + 1 < plan.rounds {
+                    ops.push(FaultOp::DuplicateFrame(nth + 1));
+                }
+                plan.faults.push(LinkFault { party, ops });
+            }
+            Scenario::Codec => {
+                plan.rounds = 4 + rng.gen_range(3) as u64;
+                plan.codecs = vec![(1, sample_codec(&mut rng)),
+                                   (2, sample_codec(&mut rng))];
+                let party = 1 + rng.gen_range(2) as u16;
+                let op = sample_non_kill(&mut rng, plan.rounds);
+                plan.faults.push(LinkFault { party, ops: vec![op] });
+            }
+            Scenario::Kill => {
+                plan.parties = 3 + rng.gen_range(2) as usize;
+                plan.rounds = 6 + rng.gen_range(3) as u64;
+                let party =
+                    1 + rng.gen_range(plan.parties as u32 - 1) as u16;
+                let k = 2 + rng.gen_range(plan.rounds as u32 - 4)
+                    as u64;
+                plan.faults.push(LinkFault {
+                    party,
+                    ops: vec![FaultOp::KillAtRound(k)],
+                });
+            }
+            Scenario::RejoinAbort => {
+                plan.rounds = 7 + rng.gen_range(2) as u64;
+                let party = 1 + rng.gen_range(2) as u16;
+                let k = 2 + rng.gen_range(2) as u64;
+                plan.faults.push(LinkFault {
+                    party,
+                    ops: vec![FaultOp::KillAtRound(k)],
+                });
+            }
+            Scenario::Serve => {
+                plan.rounds = 4 + rng.gen_range(3) as u64;
+                let party = 1 + rng.gen_range(2) as u16;
+                let op = sample_non_kill(&mut rng, plan.rounds);
+                plan.faults.push(LinkFault { party, ops: vec![op] });
+            }
+        }
+        plan
+    }
+
+    /// The session config this case runs under (see
+    /// [`RunConfig::protocol_probe`]).
+    pub fn cfg(&self) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::protocol_probe(
+            self.parties, self.case_seed, CAMPAIGN_STRAGGLER_MS);
+        cfg.party_compress = self.codecs.clone();
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The fault schedule of `party`'s link, if faulted.
+    pub fn fault_for(&self, party: u16) -> Option<&LinkFault> {
+        self.faults.iter().find(|f| f.party == party)
+    }
+
+    /// Whether every op can actually trigger — and every party can
+    /// still terminate — within this plan's round budget. Generated
+    /// plans always are; the shrinker skips candidates that fall
+    /// outside this envelope, so a shrink can never "reproduce" a
+    /// failure by mutating a plan into one that starves the final
+    /// round instead.
+    pub fn executable(&self) -> bool {
+        self.faults.iter().all(|f| {
+            f.ops.iter().all(|op| match *op {
+                FaultOp::PartitionRounds { from, to, both_ways } => {
+                    from < to
+                        && from < self.rounds
+                        && (!both_ways || to < self.rounds)
+                }
+                _ => op.index() < self.rounds,
+            })
+        })
+    }
+
+    /// Human/report identity line: `scenario#index@root`.
+    pub fn id(&self) -> String {
+        format!("{}#{}@{}", self.scenario.label(), self.index,
+                self.root_seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_reproducible_from_the_triple_alone() {
+        for sc in Scenario::all() {
+            for index in 0..16 {
+                let a = CasePlan::generate(sc, 42, index);
+                let b = CasePlan::generate(sc, 42, index);
+                assert_eq!(a, b, "{sc:?}#{index} not reproducible");
+                let c = CasePlan::generate(sc, 43, index);
+                assert!(a != c || a.faults.is_empty(),
+                        "{sc:?}#{index} ignores the root seed");
+            }
+        }
+    }
+
+    #[test]
+    fn every_generated_case_is_well_formed() {
+        for sc in Scenario::all() {
+            for index in 0..32 {
+                let p = CasePlan::generate(sc, 7, index);
+                p.cfg().unwrap();
+                assert!(!p.faults.is_empty(), "{}: no faults", p.id());
+                assert!(p.executable(), "{}: not executable: {:?}",
+                        p.id(), p.faults);
+                // At least one clean feature lane survives by
+                // construction (the parity oracle and the session's
+                // "some lane contributes" invariant both need it).
+                assert!(p.faults.len() < p.parties - 1,
+                        "{}: {} faulted of {} feature lanes",
+                        p.id(), p.faults.len(), p.parties - 1);
+                for f in &p.faults {
+                    assert!(f.party >= 1
+                            && (f.party as usize) < p.parties,
+                            "{}: fault on party {}", p.id(), f.party);
+                    for op in &f.ops {
+                        assert!(op.index() >= 1
+                                && op.index() < p.rounds,
+                                "{}: op {:?} outside 1..{}",
+                                p.id(), op, p.rounds);
+                    }
+                    if let Some(k) = f.kill_round() {
+                        for op in &f.ops {
+                            assert!(op.is_kill() || op.index() < k,
+                                    "{}: op {:?} after kill at {k}",
+                                    p.id(), op);
+                        }
+                    }
+                }
+                // Distinct faulted parties.
+                let mut parties: Vec<u16> =
+                    p.faults.iter().map(|f| f.party).collect();
+                parties.sort_unstable();
+                parties.dedup();
+                assert_eq!(parties.len(), p.faults.len(),
+                           "{}: duplicate faulted party", p.id());
+            }
+        }
+    }
+
+    #[test]
+    fn lowering_and_builder_chain_agree() {
+        let lf = LinkFault {
+            party: 2,
+            ops: vec![
+                FaultOp::DropFrame(3),
+                FaultOp::DelayMs(1, 75),
+                FaultOp::PartitionRounds {
+                    from: 4, to: 6, both_ways: true,
+                },
+                FaultOp::ReorderFrames(2),
+                FaultOp::KillAtRound(7),
+            ],
+        };
+        let chain = lf.builder_chain(0xAB);
+        assert!(chain.starts_with("FaultPlan::new(0x"), "{chain}");
+        for frag in [".drop_frame(3)", ".delay_ms(1, 75)",
+                     ".partition_rounds_bidirectional(4, 6)",
+                     ".reorder_frames(2)", ".kill_at_round(7)"] {
+            assert!(chain.contains(frag), "{chain} missing {frag}");
+        }
+        // The lowered plan carries the kill (the one builder knob
+        // observable from outside).
+        let plan = lf.to_fault_plan(0xAB);
+        assert_eq!(plan.kill_round(), Some(7));
+        assert_eq!(lf.kill_round(), Some(7));
+    }
+
+    #[test]
+    fn op_index_roundtrip_preserves_shape() {
+        let ops = [
+            FaultOp::KillAtRound(5),
+            FaultOp::DropFrame(3),
+            FaultOp::DelayMs(2, 99),
+            FaultOp::DuplicateFrame(4),
+            FaultOp::CorruptFrame(6),
+            FaultOp::ReorderFrames(1),
+            FaultOp::PartitionRounds { from: 3, to: 5,
+                                       both_ways: false },
+        ];
+        for op in ops {
+            let moved = op.with_index(9);
+            assert_eq!(moved.index(), 9);
+            assert_eq!(moved.with_index(op.index()), op,
+                       "{op:?} did not round-trip");
+            assert_eq!(op.is_kill(),
+                       matches!(op, FaultOp::KillAtRound(_)));
+        }
+        // A partition keeps its width when re-anchored.
+        let p = FaultOp::PartitionRounds { from: 3, to: 5,
+                                           both_ways: true };
+        assert_eq!(p.with_index(0),
+                   FaultOp::PartitionRounds { from: 0, to: 2,
+                                              both_ways: true });
+    }
+
+    #[test]
+    fn scenario_labels_parse_back() {
+        for sc in Scenario::all() {
+            assert_eq!(Scenario::parse(sc.label()).unwrap(), sc);
+        }
+        assert!(Scenario::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Campaign reporting (DESIGN.md §13).
+//!
+//! One [`CampaignReport`] per sweep: every case's expanded plan, its
+//! oracle verdict, and — for failures shrunk by
+//! [`shrink`](crate::campaign::shrink::shrink) — the minimized
+//! reproducer. The JSON rendering goes through [`crate::util::json`]
+//! (BTreeMap-backed objects), so the same campaign always serializes
+//! to the same bytes: no timestamps, no durations, no map-order
+//! nondeterminism. Wall-clock chatter belongs on stderr, never in the
+//! artifact.
+
+use crate::campaign::exec::CaseOutcome;
+use crate::campaign::plan::{CasePlan, Scenario};
+use crate::util::json::{self, Json};
+
+/// One executed case: the plan that ran, what the oracles said, and
+/// the shrunk reproducer when the case failed under `--shrink`.
+#[derive(Debug, Clone)]
+pub struct CaseReport {
+    pub plan: CasePlan,
+    pub outcome: CaseOutcome,
+    pub shrunk: Option<CasePlan>,
+    /// Predicate evaluations (case re-runs) the shrink spent.
+    pub shrink_evals: u64,
+}
+
+/// The shape of a plan inside the report: session geometry plus one
+/// ready-to-paste builder chain per faulted link.
+fn plan_json(p: &CasePlan) -> Json {
+    json::obj(vec![
+        ("parties", json::num(p.parties as f64)),
+        ("rounds", json::num(p.rounds as f64)),
+        ("codecs", Json::Arr(
+            p.codecs
+                .iter()
+                .map(|(id, c)| Json::Str(format!("party{id}:{}",
+                                                 c.label())))
+                .collect(),
+        )),
+        ("faults", Json::Arr(
+            p.faults
+                .iter()
+                .map(|f| json::obj(vec![
+                    ("party", json::num(f.party as f64)),
+                    ("builder",
+                     Json::Str(f.builder_chain(p.case_seed))),
+                ]))
+                .collect(),
+        )),
+    ])
+}
+
+impl CaseReport {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::Str(self.plan.id())),
+            ("scenario",
+             Json::Str(self.plan.scenario.label().to_string())),
+            ("index", json::num(self.plan.index as f64)),
+            // Seeds render as strings: u64 does not survive f64.
+            ("case_seed",
+             Json::Str(format!("0x{:X}", self.plan.case_seed))),
+            ("plan", plan_json(&self.plan)),
+            ("passed", Json::Bool(self.outcome.passed)),
+            ("failures", Json::Arr(
+                self.outcome
+                    .failures
+                    .iter()
+                    .map(|f| Json::Str(f.clone()))
+                    .collect(),
+            )),
+            ("rounds_completed",
+             json::num(self.outcome.rounds_completed as f64)),
+            ("rejoined", Json::Bool(self.outcome.rejoined)),
+            ("faults_injected",
+             json::num(self.outcome.faults_injected as f64)),
+            ("clean_links_checked",
+             json::num(self.outcome.clean_links_checked as f64)),
+        ];
+        if let Some(s) = &self.shrunk {
+            fields.push(("shrunk", plan_json(s)));
+            fields.push(("shrink_evals",
+                         json::num(self.shrink_evals as f64)));
+        }
+        json::obj(fields)
+    }
+}
+
+/// A whole sweep's verdict, serializable byte-for-byte reproducibly.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub root_seed: u64,
+    pub cases: Vec<CaseReport>,
+}
+
+impl CampaignReport {
+    pub fn passed(&self) -> usize {
+        self.cases.iter().filter(|c| c.outcome.passed).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.cases.len() - self.passed()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("root_seed", Json::Str(self.root_seed.to_string())),
+            ("cases_total", json::num(self.cases.len() as f64)),
+            ("cases_passed", json::num(self.passed() as f64)),
+            ("cases_failed", json::num(self.failed() as f64)),
+            ("cases", Json::Arr(
+                self.cases.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    /// Bench-style per-scenario summary (stdout): cases, verdicts,
+    /// total injections, rejoin coverage.
+    pub fn summary_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<14} {:>6} {:>7} {:>7} {:>9} {:>9}\n",
+            "scenario", "cases", "passed", "failed", "injected",
+            "rejoined"));
+        let mut total = (0usize, 0usize, 0u64, 0u64);
+        for sc in Scenario::all() {
+            let rows: Vec<&CaseReport> = self
+                .cases
+                .iter()
+                .filter(|c| c.plan.scenario == sc)
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let passed =
+                rows.iter().filter(|c| c.outcome.passed).count();
+            let injected: u64 = rows
+                .iter()
+                .map(|c| c.outcome.faults_injected)
+                .sum();
+            let rejoined = rows
+                .iter()
+                .filter(|c| c.outcome.rejoined)
+                .count() as u64;
+            out.push_str(&format!(
+                "{:<14} {:>6} {:>7} {:>7} {:>9} {:>9}\n",
+                sc.label(), rows.len(), passed, rows.len() - passed,
+                injected, rejoined));
+            total.0 += rows.len();
+            total.1 += passed;
+            total.2 += injected;
+            total.3 += rejoined;
+        }
+        out.push_str(&format!(
+            "{:<14} {:>6} {:>7} {:>7} {:>9} {:>9}\n",
+            "total", total.0, total.1, total.0 - total.1, total.2,
+            total.3));
+        out
+    }
+
+    /// Human rendering of every failing case: the oracle complaints
+    /// and the reproducer builder chains (shrunk when available).
+    pub fn failure_details(&self) -> String {
+        let mut out = String::new();
+        for c in self.cases.iter().filter(|c| !c.outcome.passed) {
+            out.push_str(&format!("FAILED {}\n", c.plan.id()));
+            for f in &c.outcome.failures {
+                out.push_str(&format!("  - {f}\n"));
+            }
+            let repro = c.shrunk.as_ref().unwrap_or(&c.plan);
+            let tag = if c.shrunk.is_some() {
+                format!("shrunk ({} evals)", c.shrink_evals)
+            } else {
+                "as generated".to_string()
+            };
+            out.push_str(&format!(
+                "  reproducer [{tag}]: {} parties, {} rounds\n",
+                repro.parties, repro.rounds));
+            for lf in &repro.faults {
+                out.push_str(&format!(
+                    "    P{}: {}\n", lf.party,
+                    lf.builder_chain(repro.case_seed)));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::plan::{FaultOp, LinkFault};
+
+    fn case(scenario: Scenario, index: u64, passed: bool)
+            -> CaseReport {
+        let plan = CasePlan {
+            scenario,
+            root_seed: 42,
+            index,
+            case_seed: 0xAB,
+            parties: 3,
+            rounds: 5,
+            codecs: Vec::new(),
+            faults: vec![LinkFault {
+                party: 1,
+                ops: vec![FaultOp::DropFrame(2),
+                          FaultOp::KillAtRound(4)],
+            }],
+        };
+        CaseReport {
+            plan,
+            outcome: CaseOutcome {
+                passed,
+                failures: if passed {
+                    Vec::new()
+                } else {
+                    vec!["round parity: P1 completed 3, expected 4"
+                         .to_string()]
+                },
+                rounds_completed: 5,
+                rejoined: false,
+                faults_injected: 2,
+                clean_links_checked: 2,
+            },
+            shrunk: None,
+            shrink_evals: 0,
+        }
+    }
+
+    #[test]
+    fn report_json_is_byte_deterministic_and_parses_back() {
+        let report = CampaignReport {
+            root_seed: 42,
+            cases: vec![case(Scenario::Single, 0, true),
+                        case(Scenario::Kill, 1, false)],
+        };
+        let a = report.to_json().to_string();
+        let b = report.to_json().to_string();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(parsed.expect("cases_total").unwrap().as_f64()
+                       .unwrap(), 2.0);
+        assert_eq!(parsed.expect("cases_failed").unwrap().as_f64()
+                       .unwrap(), 1.0);
+        assert_eq!(parsed.expect("root_seed").unwrap().as_str()
+                       .unwrap(), "42");
+        let cases = parsed.expect("cases").unwrap().as_arr().unwrap();
+        let builder = cases[0]
+            .expect("plan").unwrap()
+            .expect("faults").unwrap()
+            .as_arr().unwrap()[0]
+            .expect("builder").unwrap()
+            .as_str().unwrap()
+            .to_string();
+        assert!(builder.contains(".drop_frame(2)")
+                    && builder.contains(".kill_at_round(4)"),
+                "{builder}");
+    }
+
+    #[test]
+    fn summary_table_aggregates_per_scenario() {
+        let report = CampaignReport {
+            root_seed: 7,
+            cases: vec![case(Scenario::Single, 0, true),
+                        case(Scenario::Single, 1, false),
+                        case(Scenario::Kill, 0, true)],
+        };
+        let table = report.summary_table();
+        let single = table
+            .lines()
+            .find(|l| l.starts_with("single"))
+            .unwrap();
+        let cols: Vec<&str> = single.split_whitespace().collect();
+        assert_eq!(cols, vec!["single", "2", "1", "1", "4", "0"]);
+        let total =
+            table.lines().find(|l| l.starts_with("total")).unwrap();
+        let cols: Vec<&str> = total.split_whitespace().collect();
+        assert_eq!(cols, vec!["total", "3", "2", "1", "6", "0"]);
+        assert_eq!((report.passed(), report.failed()), (2, 1));
+    }
+
+    #[test]
+    fn failure_details_print_the_builder_chain() {
+        let mut failing = case(Scenario::Kill, 1, false);
+        failing.shrunk = Some(CasePlan {
+            faults: vec![LinkFault {
+                party: 1,
+                ops: vec![FaultOp::KillAtRound(4)],
+            }],
+            rounds: 5,
+            ..failing.plan.clone()
+        });
+        failing.shrink_evals = 9;
+        let report =
+            CampaignReport { root_seed: 7, cases: vec![failing] };
+        let text = report.failure_details();
+        assert!(text.contains("FAILED kill#1@42"), "{text}");
+        assert!(text.contains("round parity"), "{text}");
+        assert!(text.contains("shrunk (9 evals)"), "{text}");
+        assert!(text.contains("FaultPlan::new(0x"), "{text}");
+        assert!(text.contains(".kill_at_round(4)"), "{text}");
+        assert!(!text.contains(".drop_frame"),
+                "shrunk chain still shows the dropped op: {text}");
+    }
+}

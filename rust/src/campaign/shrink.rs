@@ -1,0 +1,235 @@
+//! Delta-debugging shrinker for failing chaos cases (DESIGN.md §13).
+//!
+//! Given a failing [`CasePlan`] and a predicate that re-runs a
+//! candidate and reports whether it *still fails*, [`shrink`] greedily
+//! minimizes the plan along four axes, repeated to a fixpoint:
+//!
+//! 1. drop whole faulted links,
+//! 2. drop individual fault ops on the surviving links,
+//! 3. tighten the round count (halve, then decrement),
+//! 4. pull each op's anchor index toward zero (zero, halve,
+//!    decrement).
+//!
+//! Every accepted candidate strictly decreases a well-founded measure
+//! (fault count, op count, rounds, or an index sum), so the loop
+//! terminates; the result is 1-minimal with respect to these moves —
+//! no single move makes it smaller and still failing. The predicate
+//! is the only arbiter of "fails": the executor's oracles for a real
+//! reproduction, or any synthetic property under test.
+//!
+//! The shrinker never consults the RNG: it mutates the expanded plan
+//! structurally, so the minimized case remains exactly reproducible
+//! and prints as a ready-to-paste builder chain
+//! ([`LinkFault::builder_chain`](crate::campaign::plan::LinkFault::builder_chain)).
+
+use crate::campaign::plan::CasePlan;
+
+/// The minimized plan plus how many predicate evaluations (i.e. case
+/// re-runs) the search spent.
+#[derive(Debug, Clone)]
+pub struct ShrinkResult {
+    pub plan: CasePlan,
+    pub evals: u64,
+}
+
+/// Candidate values for pulling `v` toward zero, deduplicated and
+/// strictly decreasing from `v`.
+fn toward_zero(v: u64) -> Vec<u64> {
+    let mut cands = vec![0, v / 2, v.saturating_sub(1)];
+    cands.dedup(); // already nondecreasing for v >= 1
+    cands.retain(|nv| *nv < v);
+    cands
+}
+
+/// Minimize `seed_plan` under `still_fails` (true ⇒ the candidate
+/// reproduces the failure). The caller guarantees the seed plan
+/// itself fails; if it does not, the plan comes back unchanged.
+pub fn shrink<F>(seed_plan: &CasePlan, mut still_fails: F) -> ShrinkResult
+where
+    F: FnMut(&CasePlan) -> bool,
+{
+    let mut best = seed_plan.clone();
+    let mut evals: u64 = 0;
+    loop {
+        let mut reduced = false;
+
+        // Pass 1: drop whole faulted links.
+        let mut i = 0;
+        while i < best.faults.len() {
+            let mut cand = best.clone();
+            cand.faults.remove(i);
+            evals += 1;
+            if still_fails(&cand) {
+                best = cand;
+                reduced = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        // Pass 2: drop individual ops (a single-op link is pass 1's
+        // business — dropping its op and dropping the link coincide).
+        let mut fi = 0;
+        while fi < best.faults.len() {
+            let mut oi = 0;
+            while oi < best.faults[fi].ops.len() {
+                if best.faults[fi].ops.len() == 1 {
+                    break;
+                }
+                let mut cand = best.clone();
+                cand.faults[fi].ops.remove(oi);
+                evals += 1;
+                if still_fails(&cand) {
+                    best = cand;
+                    reduced = true;
+                } else {
+                    oi += 1;
+                }
+            }
+            fi += 1;
+        }
+
+        // Pass 3: tighten rounds — halve while that still fails, then
+        // walk down by one.
+        loop {
+            let mut stepped = false;
+            for cand_rounds in toward_zero(best.rounds) {
+                if cand_rounds == 0 {
+                    continue; // a zero-round session runs nothing
+                }
+                let mut cand = best.clone();
+                cand.rounds = cand_rounds;
+                evals += 1;
+                if still_fails(&cand) {
+                    best = cand;
+                    reduced = true;
+                    stepped = true;
+                    break;
+                }
+            }
+            if !stepped {
+                break;
+            }
+        }
+
+        // Pass 4: pull each op's anchor toward zero.
+        for fi in 0..best.faults.len() {
+            for oi in 0..best.faults[fi].ops.len() {
+                loop {
+                    let v = best.faults[fi].ops[oi].index();
+                    let mut stepped = false;
+                    for nv in toward_zero(v) {
+                        let mut cand = best.clone();
+                        cand.faults[fi].ops[oi] =
+                            cand.faults[fi].ops[oi].with_index(nv);
+                        evals += 1;
+                        if still_fails(&cand) {
+                            best = cand;
+                            reduced = true;
+                            stepped = true;
+                            break;
+                        }
+                    }
+                    if !stepped {
+                        break;
+                    }
+                }
+            }
+        }
+
+        if !reduced {
+            break;
+        }
+    }
+    ShrinkResult { plan: best, evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::plan::{FaultOp, LinkFault, Scenario};
+
+    fn fat_plan() -> CasePlan {
+        CasePlan {
+            scenario: Scenario::Single,
+            root_seed: 42,
+            index: 0,
+            case_seed: 0xFEED,
+            parties: 4,
+            rounds: 9,
+            codecs: Vec::new(),
+            faults: vec![
+                LinkFault {
+                    party: 1,
+                    ops: vec![
+                        FaultOp::DelayMs(3, 100),
+                        FaultOp::DropFrame(7),
+                        FaultOp::DuplicateFrame(2),
+                    ],
+                },
+                LinkFault {
+                    party: 2,
+                    ops: vec![FaultOp::CorruptFrame(5)],
+                },
+                LinkFault {
+                    party: 3,
+                    ops: vec![FaultOp::ReorderFrames(4)],
+                },
+            ],
+        }
+    }
+
+    /// The "failure" only needs a DropFrame at index >= 2 and at
+    /// least 3 rounds — everything else in the fat plan is noise the
+    /// shrinker must strip.
+    fn synthetic_failure(p: &CasePlan) -> bool {
+        p.rounds >= 3
+            && p.faults.iter().any(|f| {
+                f.ops.iter().any(
+                    |op| matches!(op, FaultOp::DropFrame(n) if *n >= 2))
+            })
+    }
+
+    #[test]
+    fn shrinks_a_fat_plan_to_the_minimal_reproducer() {
+        let fat = fat_plan();
+        assert!(synthetic_failure(&fat), "seed plan must fail");
+        let r = shrink(&fat, synthetic_failure);
+        assert_eq!(r.plan.rounds, 3, "rounds not tightened: {:?}",
+                   r.plan);
+        assert_eq!(
+            r.plan.faults,
+            vec![LinkFault { party: 1,
+                             ops: vec![FaultOp::DropFrame(2)] }],
+            "noise ops survived the shrink"
+        );
+        assert!(synthetic_failure(&r.plan),
+                "shrinker returned a passing plan");
+        assert!(r.evals > 0);
+        // Everything the RNG expanded but the failure never needed is
+        // untouched metadata.
+        assert_eq!((r.plan.parties, r.plan.case_seed), (4, 0xFEED));
+    }
+
+    #[test]
+    fn shrinking_is_idempotent_on_a_minimal_plan() {
+        let minimal = shrink(&fat_plan(), synthetic_failure).plan;
+        let again = shrink(&minimal, synthetic_failure);
+        assert_eq!(again.plan, minimal);
+    }
+
+    #[test]
+    fn a_non_failing_plan_comes_back_unchanged() {
+        let fat = fat_plan();
+        let r = shrink(&fat, |_| false);
+        assert_eq!(r.plan, fat);
+    }
+
+    #[test]
+    fn toward_zero_is_strictly_decreasing_and_deduplicated() {
+        assert_eq!(toward_zero(0), Vec::<u64>::new());
+        assert_eq!(toward_zero(1), vec![0]);
+        assert_eq!(toward_zero(2), vec![0, 1]);
+        assert_eq!(toward_zero(9), vec![0, 4, 8]);
+    }
+}

@@ -270,6 +270,24 @@ impl RunConfig {
         }
     }
 
+    /// A protocol-level probe session: `quick()` with the mesh shape
+    /// pinned and the WAN emulation off, as used by lifecycle tests
+    /// and the chaos campaign executor (`campaign::exec`). No model
+    /// runs over these configs — only activation/derivative framing —
+    /// so the training knobs keep their `quick()` values. A non-zero
+    /// `straggler_wait_ms` opts the label's lane fan into supervised
+    /// degradation (see `session::supervisor`).
+    pub fn protocol_probe(parties: usize, seed: u64,
+                          straggler_wait_ms: u64) -> Self {
+        let mut cfg = RunConfig::quick();
+        cfg.parties = parties;
+        cfg.seed = seed;
+        cfg.wan = WanProfile::instant();
+        cfg.compress = CodecKind::Identity;
+        cfg.straggler_wait_ms = straggler_wait_ms;
+        cfg
+    }
+
     /// Artifact set tag: `<model>_<dataset>_<size>`.
     pub fn artifact_tag(&self) -> String {
         format!("{}_{}_{}", self.model, self.dataset, self.size)
@@ -709,6 +727,16 @@ mod tests {
         let mut cfg = RunConfig::quick();
         cfg.straggler_wait_ms = 3_600_001;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn protocol_probe_is_a_valid_supervised_shape() {
+        let cfg = RunConfig::protocol_probe(3, 7, 250);
+        cfg.validate().unwrap();
+        assert_eq!((cfg.parties, cfg.seed, cfg.straggler_wait_ms),
+                   (3, 7, 250));
+        assert_eq!(cfg.compress, CodecKind::Identity);
+        assert_eq!(cfg.wan.rtt_ms, 0.0);
     }
 
     #[test]

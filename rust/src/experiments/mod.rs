@@ -13,6 +13,7 @@
 //! | §1 comm-fraction claim                 | `endtoend` comm column |
 //! | wire-compression sweep (DESIGN.md §5)  | `ablation::sweep_compress`, `ablation::compression_bytes_per_round` |
 //! | K-party topology sweep (DESIGN.md §6)  | `ablation::sweep_parties`, `ablation::mesh_bytes_per_round` |
+//! | chaos-campaign sweep (DESIGN.md §13)   | `crate::campaign::run_campaign` |
 
 pub mod ablation;
 pub mod endtoend;

@@ -15,6 +15,13 @@
 //!   straggler lanes stepping on cached stale statistics, `Rejoin`
 //!   reconnect through a live re-admission point, and label-party
 //!   checkpoint/restart via `session::checkpoint` — DESIGN.md §8),
+//!   a chaos campaign subsystem (`campaign`: seeded fault-plan sweeps
+//!   over real sessions — multi-fault overlaps, reorders, fault ×
+//!   codec cross-products, kills during rejoin, faults beside a
+//!   multiplexed neighbor — judged by round-parity / clean-link
+//!   byte-identity / no-hang oracles, with delta-debug shrinking of
+//!   failing seeds to minimal `FaultPlan` reproducers — DESIGN.md
+//!   §13),
 //!   a live observability plane (`metrics`: a lock-free recorder
 //!   facade every transport bumps through pre-registered handles,
 //!   observed by a Prometheus-text scrape and a tag-14 push stream
@@ -44,6 +51,7 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+pub mod campaign;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

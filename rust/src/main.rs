@@ -13,6 +13,10 @@
 //!   watch   attach to a running session's observability plane and
 //!           render live per-link gauges from its tag-14 metric stream
 //!           (DESIGN.md §10)
+//!   campaign  sweep seeded chaos fault-plans over real sessions,
+//!           judge each against round-parity / byte-identity /
+//!           no-hang oracles, and shrink failing seeds to minimal
+//!           `FaultPlan` reproducers (DESIGN.md §13)
 //!   info    print artifact/manifest information
 //!
 //! Examples:
@@ -25,6 +29,9 @@
 //!   celu-vfl party --role feature --parties 3 --party 2 --connect host:7000
 //!   # From a fourth shell, live link totals off the same port:
 //!   celu-vfl watch --connect host:7000
+//!   # Nightly-style chaos sweep, reproducible from the root seed:
+//!   celu-vfl campaign --seeds 8 --root-seed 42 --shrink \
+//!            --report campaign.json
 //!   celu-vfl info --artifacts artifacts
 
 use celu_vfl::compress::CodecKind;
@@ -41,11 +48,12 @@ fn main() {
         Some("party") => cmd_party(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("watch") => cmd_watch(&argv[1..]),
+        Some("campaign") => cmd_campaign(&argv[1..]),
         Some("info") => cmd_info(&argv[1..]),
         _ => {
             eprintln!(
-                "usage: celu-vfl <train|party|serve|watch|info> \
-                 [options]\n\
+                "usage: celu-vfl <train|party|serve|watch|campaign|\
+                 info> [options]\n\
                  run `celu-vfl <cmd> --help` for details"
             );
             Err(anyhow::anyhow!("no subcommand"))
@@ -336,6 +344,64 @@ fn cmd_watch(argv: &[String]) -> anyhow::Result<()> {
     }
     println!("session ended after {frames} frames — totals above are \
               final");
+    Ok(())
+}
+
+fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
+    use celu_vfl::campaign::{run_campaign, CampaignOpts, Scenario};
+
+    let cli = Cli::new("celu-vfl campaign",
+                       "seeded chaos sweep over real sessions")
+        .opt("scenarios", "all",
+             "comma-separated scenario list (single, multi, reorder, \
+              codec, kill, rejoin-abort, serve) or 'all'")
+        .opt("seeds", "4", "cases per scenario (indices 0..N)")
+        .opt("root-seed", "42",
+             "campaign root seed — every case re-derives from \
+              (root seed, scenario, index) alone")
+        .opt("budget-ms", "20000",
+             "per-case wall-clock budget (the no-hang oracle)")
+        .opt("report", "-", "write the JSON campaign report here")
+        .flag("shrink",
+              "delta-debug failing cases to minimal reproducers");
+    let args = cli.parse(argv)?;
+    let scenarios = match args.get("scenarios") {
+        "all" => Scenario::all().to_vec(),
+        list => list
+            .split(',')
+            .map(|s| Scenario::parse(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    let budget_ms = args.get_u64("budget-ms")?;
+    anyhow::ensure!(budget_ms > 0, "--budget-ms must be positive");
+    let opts = CampaignOpts {
+        scenarios,
+        seeds: args.get_u64("seeds")?,
+        root_seed: args.get_u64("root-seed")?,
+        budget: std::time::Duration::from_millis(budget_ms),
+        shrink: args.has_flag("shrink"),
+    };
+    let started = std::time::Instant::now();
+    let report = run_campaign(&opts);
+    // Wall-clock chatter goes to stderr: stdout and the JSON artifact
+    // stay byte-reproducible for a fixed (scenarios, seeds, root seed).
+    eprintln!("campaign wall time: {:.1}s",
+              started.elapsed().as_secs_f64());
+    print!("{}", report.summary_table());
+    if report.failed() > 0 {
+        print!("{}", report.failure_details());
+    }
+    if args.get("report") != "-" {
+        std::fs::write(args.get("report"),
+                       report.to_json().to_string())?;
+        log::info!("wrote campaign report to {}", args.get("report"));
+    }
+    anyhow::ensure!(
+        report.failed() == 0,
+        "{} of {} chaos cases failed (reproducers above; rerun with \
+         --root-seed {} and --shrink for minimal plans)",
+        report.failed(), report.cases.len(), report.root_seed
+    );
     Ok(())
 }
 

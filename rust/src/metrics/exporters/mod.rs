@@ -44,6 +44,7 @@ pub fn run_record_links(registry: &Registry) -> Vec<LinkRecord> {
         messages: r.stats.messages,
         bytes: r.stats.bytes,
         raw_bytes: r.stats.raw_bytes,
+        faults: r.faults,
     };
     let mut out = Vec::with_capacity(rows.len());
     let mut to_label: Vec<&LinkRow> =

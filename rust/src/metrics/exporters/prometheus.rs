@@ -6,7 +6,7 @@
 //! says a format this small does not buy a client library.
 //!
 //! Family order is fixed so the exposition is deterministic and
-//! golden-testable: session round, dropped-event counter, the five
+//! golden-testable: session round, dropped-event counter, the six
 //! per-link families (rows ordered by `(src, dst)`), then every
 //! generically registered counter / gauge / histogram in name order.
 //! Histograms export as `summary`-style `_count` / `_sum` lines plus a
@@ -107,6 +107,10 @@ pub fn render_labeled(registry: &Registry, session: Option<&str>)
             Family { name: "celu_link_busy_seconds_total",
                      kind: "counter",
                      help: "Sender-side link occupancy." },
+            Family { name: "celu_link_faults_injected_total",
+                     kind: "counter",
+                     help: "Chaos faults injected on a directed link \
+                            (0 outside fault campaigns)." },
             Family { name: "celu_link_compression_ratio", kind: "gauge",
                      help: "Achieved raw/wire compression ratio." },
         ];
@@ -130,6 +134,8 @@ pub fn render_labeled(registry: &Registry, session: Option<&str>)
                         row.stats.raw_bytes.to_string(),
                     "celu_link_busy_seconds_total" =>
                         num(row.stats.busy.as_secs_f64()),
+                    "celu_link_faults_injected_total" =>
+                        row.faults.to_string(),
                     _ => {
                         if row.stats.bytes == 0 {
                             continue;
@@ -226,6 +232,7 @@ mod tests {
         b.charge(LinkStats { messages: 1, bytes: 10, raw_bytes: 10,
                              busy: Duration::ZERO });
         reg.bind_link(PartyId(0), PartyId(2), &b);
+        b.faults_injected.add(4);
         reg.emit(&SessionEvent::PeerLost { party: PartyId(1), round: 7 });
         reg.gauge("celu_workset_fill").set(0.5);
         let h = reg.histogram("celu_round_seconds");
@@ -255,6 +262,10 @@ celu_link_raw_bytes_total{src=\"1\",dst=\"0\"} 2000
 # TYPE celu_link_busy_seconds_total counter
 celu_link_busy_seconds_total{src=\"0\",dst=\"2\"} 0
 celu_link_busy_seconds_total{src=\"1\",dst=\"0\"} 1.5
+# HELP celu_link_faults_injected_total Chaos faults injected on a directed link (0 outside fault campaigns).
+# TYPE celu_link_faults_injected_total counter
+celu_link_faults_injected_total{src=\"0\",dst=\"2\"} 4
+celu_link_faults_injected_total{src=\"1\",dst=\"0\"} 0
 # HELP celu_link_compression_ratio Achieved raw/wire compression ratio.
 # TYPE celu_link_compression_ratio gauge
 celu_link_compression_ratio{src=\"0\",dst=\"2\"} 1

@@ -162,6 +162,15 @@ pub struct LinkHandles {
     pub wire_bytes: Counter,
     pub raw_bytes: Counter,
     pub busy_nanos: Counter,
+    /// Faults a chaos wrapper injected on this link
+    /// ([`crate::transport::fault::FaultTransport`] bumps it; zero on
+    /// any undisturbed link). Outside `LinkStats` on purpose: byte
+    /// parity assertions compare `snapshot()` triples, and an injected
+    /// fault must never disturb those. Like `busy`, the count is
+    /// per-transport-incarnation — a rejoin's transport swap starts a
+    /// fresh cell (the swap charges `stats()`, which carries no fault
+    /// count).
+    pub faults_injected: Counter,
 }
 
 impl LinkHandles {
@@ -211,6 +220,8 @@ pub struct LinkRow {
     pub src: PartyId,
     pub dst: PartyId,
     pub stats: LinkStats,
+    /// Injected-fault count of the bound handles (0 on clean links).
+    pub faults: u64,
 }
 
 // ---- event sinks -----------------------------------------------------------
@@ -349,6 +360,7 @@ impl Registry {
                 src: PartyId(src),
                 dst: PartyId(dst),
                 stats: h.snapshot(),
+                faults: h.faults_injected.get(),
             })
             .collect()
     }

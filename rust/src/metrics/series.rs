@@ -72,6 +72,9 @@ pub struct LinkRecord {
     pub messages: u64,
     pub bytes: u64,
     pub raw_bytes: u64,
+    /// Chaos faults injected on this link (0 outside fault campaigns —
+    /// never part of byte-parity comparisons).
+    pub faults: u64,
 }
 
 impl LinkRecord {
@@ -242,6 +245,7 @@ impl RunRecord {
                         ("messages", num(l.messages as f64)),
                         ("bytes", num(l.bytes as f64)),
                         ("raw_bytes", num(l.raw_bytes as f64)),
+                        ("faults", num(l.faults as f64)),
                         ("compression_ratio",
                          num(l.compression_ratio())),
                     ])
@@ -362,6 +366,7 @@ mod tests {
             messages: 1,
             bytes,
             raw_bytes: raw,
+            faults: 0,
         }
     }
 

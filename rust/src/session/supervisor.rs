@@ -341,6 +341,7 @@ pub struct LaneSet {
     staged: Vec<Message>,
     catch_ups: u64,
     evals_discarded: u64,
+    discards: u64,
 }
 
 impl LaneSet {
@@ -383,6 +384,7 @@ impl LaneSet {
             staged: Vec::new(),
             catch_ups: 0,
             evals_discarded: 0,
+            discards: 0,
         }
     }
 
@@ -465,6 +467,14 @@ impl LaneSet {
     /// Eval-lane frames discarded from behind lanes (telemetry).
     pub fn evals_discarded(&self) -> u64 {
         self.evals_discarded
+    }
+
+    /// Garbled frames discarded in supervised mode (telemetry): frames
+    /// that failed to decode or violated the protocol — e.g. a chaos
+    /// campaign's corrupt-frame injection — and were dropped instead of
+    /// tearing the session down. See [`Self::consume_or_discard`].
+    pub fn discards(&self) -> u64 {
+        self.discards
     }
 
     /// The codec negotiated on each lane (checkpoint state).
@@ -863,6 +873,32 @@ impl LaneSet {
         Ok(())
     }
 
+    /// Supervised-mode frame interpretation: a frame that fails to
+    /// decode or violates the protocol (a chaos campaign's corrupted
+    /// payload, a skewed round counter) is *discarded* — logged and
+    /// counted — instead of tearing the whole session down. The lane
+    /// stays alive and merely goes stale for the round; the next clean
+    /// activation resynchronizes it through the normal fresh/catch-up
+    /// paths. Unsupervised mode keeps the historic contract: the first
+    /// protocol violation propagates. Returns whether the frame was
+    /// actually consumed.
+    fn consume_or_discard(&mut self, i: usize, round: u64, msg: Message)
+                          -> anyhow::Result<bool> {
+        match self.consume(i, round, msg) {
+            Ok(()) => Ok(true),
+            Err(e) if self.supervised => {
+                self.discards += 1;
+                log::warn!(
+                    "[{}] discarding garbled frame in round {round}: \
+                     {e:#}",
+                    self.lanes[i].peer
+                );
+                Ok(false)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
     /// Nonblocking drain of lane `i`: stash first, then whatever frames
     /// already arrived, stopping once this round's activation is in.
     fn drain_lane(&mut self, i: usize, round: u64) -> anyhow::Result<()> {
@@ -871,11 +907,13 @@ impl LaneSet {
                 return Ok(());
             }
             if let Some(m) = self.lanes[i].stash.take() {
-                self.consume(i, round, m)?;
+                self.consume_or_discard(i, round, m)?;
                 continue;
             }
             match self.lanes[i].transport.try_recv() {
-                Ok(Some(m)) => self.consume(i, round, m)?,
+                Ok(Some(m)) => {
+                    self.consume_or_discard(i, round, m)?;
+                }
                 Ok(None) => return Ok(()),
                 Err(e) => {
                     if !self.supervised {
@@ -889,7 +927,10 @@ impl LaneSet {
     }
 
     /// Historic blocking wait: one recv at a time per lane, errors
-    /// propagate (unsupervised) or mark the lane lost (supervised).
+    /// propagate (unsupervised) or mark the lane lost (supervised). A
+    /// discarded garbled frame ends the lane's wait for this round
+    /// (stale step) rather than blocking on a replacement that will
+    /// only arrive with the *next* round's traffic.
     fn wait_blocking(&mut self, round: u64) -> anyhow::Result<()> {
         for i in 0..self.lanes.len() {
             loop {
@@ -897,11 +938,17 @@ impl LaneSet {
                     break;
                 }
                 if let Some(m) = self.lanes[i].stash.take() {
-                    self.consume(i, round, m)?;
+                    if !self.consume_or_discard(i, round, m)? {
+                        break;
+                    }
                     continue;
                 }
                 match self.lanes[i].transport.recv() {
-                    Ok(m) => self.consume(i, round, m)?,
+                    Ok(m) => {
+                        if !self.consume_or_discard(i, round, m)? {
+                            break;
+                        }
+                    }
                     Err(e) => {
                         if !self.supervised {
                             return Err(e);
@@ -1402,6 +1449,32 @@ mod tests {
         lanes.handshake(&cfg, None).unwrap();
         let e = lanes.collect(0).unwrap_err().to_string();
         assert!(e.contains("unexpected message"), "{e}");
+    }
+
+    #[test]
+    fn supervised_collect_discards_garbled_frames_and_keeps_the_lane() {
+        let cfg = cfg_k(3, 30);
+        let (label_links, feature_links) = inproc_star(&cfg);
+        let mut lanes = LaneSet::new(&cfg, &label_links, None);
+        // P1 opens with a protocol violation — a future-round
+        // activation, exactly what a corrupted-but-decodable chaos
+        // frame looks like; P2 is clean. Supervised mode must discard
+        // the frame, not tear the session down.
+        feature_links[0].transport.send(act(5, 1.0)).unwrap();
+        feature_links[1].transport.send(act(0, 2.0)).unwrap();
+        lanes.handshake(&cfg, None).unwrap();
+        let inputs = lanes.collect(0).unwrap();
+        assert!(matches!(inputs[0], LaneInput::Missing),
+                "garbled opener must leave the lane without stats");
+        assert!(inputs[1].is_fresh());
+        assert_eq!(lanes.discards(), 1);
+        // The lane survives the discard: its next clean frame is
+        // consumed fresh and the counter stays put.
+        feature_links[0].transport.send(act(1, 3.0)).unwrap();
+        feature_links[1].transport.send(act(1, 4.0)).unwrap();
+        let inputs = lanes.collect(1).unwrap();
+        assert!(inputs.iter().all(|i| i.is_fresh()));
+        assert_eq!(lanes.discards(), 1);
     }
 
     #[test]
@@ -2076,5 +2149,286 @@ mod lifecycle_tests {
         assert!(p1_post.0 < p1_post.1,
                 "fp16 lane not compressed after resume: {p1_post:?}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A reordered activation (nth/nth+1 swapped on the wire) must not
+    /// panic or wedge the lifecycle: the held round stales exactly one
+    /// straggler window, the out-of-order arrival drains as a
+    /// catch-up, and the session returns to `Running` with zero
+    /// garbled-frame discards.
+    #[test]
+    fn reorder_injection_stales_one_round_then_catches_up() {
+        const ROUNDS: u64 = 4;
+        let mut cfg = RunConfig::quick();
+        cfg.parties = 3;
+        cfg.wan = crate::config::WanProfile::instant();
+        cfg.straggler_wait_ms = 400;
+        cfg.compress = CodecKind::Identity;
+        cfg.validate().unwrap();
+        let (label_bs, feature_bs) = inproc_mesh(&cfg);
+
+        // P1's round-1 activation is held and delivered *after* its
+        // round-2 activation; P2 is untouched. The feature loop sends
+        // exactly one frame per round, so wire index == round.
+        let plans = [FaultPlan::new(7).reorder_frames(1),
+                     FaultPlan::new(8)];
+        let mut features = Vec::new();
+        for (bs, plan) in feature_bs.into_iter().zip(plans) {
+            features.push(std::thread::spawn({
+                let cfg = cfg.clone();
+                move || -> anyhow::Result<u64> {
+                    let links = bs.establish(&cfg)?;
+                    let ft = Arc::new(FaultTransport::new(
+                        links[0].transport.clone(), plan));
+                    for round in 0..ROUNDS {
+                        ft.send(act(round))?;
+                        let m = ft.recv()?;
+                        anyhow::ensure!(m.round() == round,
+                                        "skew at {round}");
+                    }
+                    loop {
+                        match ft.recv() {
+                            Ok(Message::Shutdown) | Err(_) => break,
+                            Ok(_) => {}
+                        }
+                    }
+                    Ok(ft.injected())
+                }
+            }));
+        }
+
+        let links = label_bs.establish(&cfg).unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, None);
+        lanes.handshake(&cfg, None).unwrap();
+        let mut freshness = Vec::new();
+        for round in 0..ROUNDS {
+            let inputs = lanes.collect(round).unwrap();
+            freshness.push((inputs[0].is_fresh(),
+                            inputs[1].is_fresh()));
+            let zs: Vec<Tensor> = inputs
+                .iter()
+                .filter_map(|i| i.tensor().cloned())
+                .collect();
+            lanes.fan_out(round, &Tensor::sum_f32(&zs).unwrap())
+                 .unwrap();
+        }
+        assert_eq!(freshness, vec![
+            (true, true),  // round 0: clean
+            (false, true), // round 1: P1's frame held by the reorder
+            (true, true),  // round 2: frames 2 then 1 both arrive
+            (true, true),  // round 3: the held frame drained behind 2
+        ]);
+        assert!(lanes.catch_ups() >= 1,
+                "the reordered frame never drained as catch-up");
+        assert_eq!(lanes.discards(), 0,
+                   "a reordered clean frame must never be discarded");
+        assert_eq!(lanes.state(), SessionState::Running);
+        lanes.shutdown();
+        let injected: Vec<u64> = features
+            .into_iter()
+            .map(|h| h.join().unwrap().unwrap())
+            .collect();
+        assert_eq!(injected, vec![1, 0]);
+    }
+
+    /// Satellite: the victim's *Rejoin itself* dies mid-handshake (a
+    /// vetting socket opens, sends a valid Rejoin frame, and drops the
+    /// connection before reading the ack). The session must absorb the
+    /// aborted attempt — whether the ack write fails or a dead
+    /// transport briefly seats and is lost on the next fan-out — and
+    /// the second attempt must succeed with byte-identical surviving
+    /// links vs an undisturbed reference run.
+    #[test]
+    fn kill_during_rejoin_second_attempt_succeeds() {
+        const N: u64 = 8;
+        const KILL: u64 = 3;
+
+        fn victim_loop(addr: String, cfg: RunConfig)
+                       -> anyhow::Result<(u64, (u64, u64, u64))> {
+            let party = PartyId(1);
+            let links = SessionDialer::new(&addr, party)
+                .with_timeout(Duration::from_secs(10))
+                .establish(&cfg)?;
+            let codec = compress::negotiate(cfg.codec_for(party.0),
+                                            links[0].peer_codecs);
+            let epoch = session_epoch(cfg.seed);
+            let plan = FaultPlan::new(0xDEAD).kill_at_round(KILL);
+            let faulted: Arc<dyn Transport> = Arc::new(
+                FaultTransport::new(links[0].transport.clone(), plan));
+            let mut completed = 0u64;
+            loop {
+                let za = t(party.0 as f32 + completed as f32);
+                let (msg, _) = outbound_stats(codec, Lane::Activation,
+                                              completed, za)?;
+                if faulted.send(msg).is_err() {
+                    break; // the injected kill point
+                }
+                match faulted.recv()?.into_plain()? {
+                    Message::Derivative { round: r, .. } => {
+                        anyhow::ensure!(r == completed, "skew: {r}");
+                    }
+                    other => anyhow::bail!("unexpected {:?}",
+                                           other.tag()),
+                }
+                completed += 1;
+            }
+            anyhow::ensure!(completed == KILL,
+                            "killed at {completed}, planned {KILL}");
+            // First rejoin attempt, killed mid-handshake: a valid
+            // Rejoin frame goes out, then the socket dies before the
+            // RejoinAck is read.
+            {
+                let mut s = std::net::TcpStream::connect(&addr)?;
+                crate::session::bootstrap::send_bootstrap_frame(
+                    &mut s,
+                    &Message::Rejoin {
+                        party,
+                        parties: cfg.parties as u16,
+                        epoch,
+                        last_round: completed,
+                        codecs: compress::supported_mask(),
+                    })?;
+            } // drop: the dialer is gone before the ack arrives
+            // Let the aborted contact clear the vetting workers so the
+            // two attempts cannot seat out of order.
+            std::thread::sleep(Duration::from_millis(150));
+            // Second attempt: must go through normally.
+            let (fresh, resume, replays) = rejoin_dial(
+                &addr, party, &cfg, epoch, completed,
+                Duration::from_secs(10))?;
+            anyhow::ensure!(resume >= KILL && resume < N,
+                            "resumed at {resume}, outside [{KILL}, {N})");
+            for _ in 0..replays {
+                let _ = fresh.recv()?; // stale in-flight derivatives
+            }
+            for round in resume..N {
+                let za = t(party.0 as f32 + round as f32);
+                let (msg, _) = outbound_stats(codec, Lane::Activation,
+                                              round, za)?;
+                fresh.send(msg)?;
+                match fresh.recv()?.into_plain()? {
+                    Message::Derivative { round: r, .. } => {
+                        anyhow::ensure!(r == round,
+                                        "post-resume skew: {r}");
+                    }
+                    other => anyhow::bail!("unexpected {:?}",
+                                           other.tag()),
+                }
+            }
+            loop {
+                match fresh.recv() {
+                    Ok(Message::Shutdown) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+            drop(links);
+            Ok((resume, triple(fresh.stats())))
+        }
+
+        let mut cfg = RunConfig::quick();
+        cfg.parties = 3;
+        cfg.wan = crate::config::WanProfile::instant();
+        cfg.straggler_wait_ms = 500;
+        cfg.compress = CodecKind::Identity;
+        cfg.validate().unwrap();
+
+        // ---- reference: undisturbed K = 3 run -------------------------------
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let features: Vec<_> = [1u16, 2]
+            .iter()
+            .map(|&p| {
+                let addr = addr.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    tcp_feature_loop(addr, PartyId(p), cfg, N, 0)
+                })
+            })
+            .collect();
+        let (links, readmission, _e, _s) =
+            listener.establish_supervised(&cfg).unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+        lanes.handshake(&cfg, None).unwrap();
+        label_segment(&cfg, &mut lanes, 0, N).unwrap();
+        lanes.shutdown();
+        let label_ref: Vec<(u16, (u64, u64, u64))> = lanes
+            .link_stats()
+            .iter()
+            .map(|(p, s)| (p.0, triple(*s)))
+            .collect();
+        let mut feature_ref = Vec::new();
+        for h in features {
+            feature_ref.push(h.join().unwrap().unwrap());
+        }
+
+        // ---- fault run: P1 killed, first rejoin aborted mid-handshake -------
+        let listener = SessionListener::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Duration::from_secs(10));
+        let addr = listener.local_addr().unwrap().to_string();
+        let h1 = std::thread::spawn({
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            move || victim_loop(addr, cfg)
+        });
+        let h2 = std::thread::spawn({
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            move || tcp_feature_loop(addr, PartyId(2), cfg, N, 0)
+        });
+        let (links, readmission, _e, _s) =
+            listener.establish_supervised(&cfg).unwrap();
+        let mut lanes = LaneSet::new(&cfg, &links, Some(readmission));
+        lanes.handshake(&cfg, None).unwrap();
+        // No freshness assert: the victim's lane is silent between the
+        // kill and its (second) rejoin.
+        for round in 0..N {
+            let inputs = lanes.collect(round).unwrap();
+            let zs: Vec<Tensor> = inputs
+                .iter()
+                .filter_map(|i| i.tensor().cloned())
+                .collect();
+            lanes.fan_out(round, &Tensor::sum_f32(&zs).unwrap())
+                 .unwrap();
+        }
+        assert!(lanes.total_rejoins() >= 1,
+                "the second rejoin never seated a transport");
+        lanes.shutdown();
+        let label_fault: Vec<(u16, (u64, u64, u64))> = lanes
+            .link_stats()
+            .iter()
+            .map(|(p, s)| (p.0, triple(*s)))
+            .collect();
+        let events = lanes.take_events();
+        assert!(events.iter().any(|e| matches!(
+            e, SessionEvent::PeerRejoined { party: PartyId(1), .. })),
+            "no rejoin event: {events:?}");
+        let (resume, p1_post) = h1.join().unwrap().unwrap();
+        let p2_fault = h2.join().unwrap().unwrap();
+
+        // ---- byte-identity of the surviving links ---------------------------
+        let ref_p1 = feature_ref[0];
+        assert_eq!(p2_fault, feature_ref[1],
+                   "surviving feature link diverged");
+        let at = |v: &[(u16, (u64, u64, u64))], p: u16| {
+            v.iter().find(|(q, _)| *q == p).unwrap().1
+        };
+        assert_eq!(at(&label_fault, 2), at(&label_ref, 2),
+                   "label→P2 link diverged");
+        // The re-admitted P1 link carries exactly the surviving
+        // rounds' bytes (the reference's per-round cost divides
+        // evenly across its N identical frames).
+        assert_eq!(ref_p1.2, N, "reference P1 frame count");
+        assert_eq!((ref_p1.0 % N, ref_p1.1 % N), (0, 0));
+        let survived = N - resume;
+        assert_eq!(
+            p1_post,
+            (ref_p1.0 / N * survived, ref_p1.1 / N * survived,
+             survived),
+            "post-rejoin P1 link not byte-identical per round \
+             (resumed at {resume})"
+        );
     }
 }

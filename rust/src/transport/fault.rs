@@ -46,15 +46,54 @@
 //!   `recv`/`try_recv` before the caller sees them (the peer charged
 //!   its send — the loss is on this side of the wire, exactly like a
 //!   middlebox eating traffic both ways).
+//! - **reorder-frames** — the nth outbound `send` call is held back and
+//!   delivered right *after* the next forwarded/dropped/corrupted send
+//!   (nth and nth+1 swap on the wire): the out-of-order delivery a
+//!   multi-path route or a retransmission produces. The held frame is
+//!   charged when it actually crosses, so accounting reflects delivery
+//!   order. If no later send ever happens, the held frame is lost —
+//!   deterministically, like a drop (an in-flight frame on a route that
+//!   never carries traffic again).
+//!
+//! # Composition grammar
+//!
+//! A plan may schedule any number of injections, including several on
+//! the same frame index or round. Application order is deterministic;
+//! per outbound send call, exactly one *terminal* action is chosen by
+//! this precedence:
+//!
+//! 1. **sticky kill** — a dead endpoint does nothing else, ever;
+//! 2. **kill-at-round** — `msg.round() >= kill_at` kills now;
+//! 3. **drop-next-frame** — `nth ∈ drops`;
+//! 4. **corrupt-frame** — `nth ∈ corrupts`;
+//! 5. **partition window** — `msg.round() ∈ [from, to)`;
+//! 6. **reorder-frames** — `nth ∈ reorders`: hold the frame;
+//! 7. **forward** — the default.
+//!
+//! The *modifiers* `delay_ms` and `duplicate_frame` compose with a
+//! forwarded frame (a delayed duplicate sleeps once, then sends twice)
+//! and are inert when a higher-precedence terminal action consumed the
+//! frame. Frames held by a reorder are flushed FIFO immediately after
+//! the next send call's own action completes (so consecutive holds
+//! accumulate and drain together), except after a kill — a dead
+//! endpoint delivers nothing. `kill_at_round` composes with every
+//! frame-indexed injection: indices that fire before the kill round
+//! behave normally, later ones never happen.
 //!
 //! The wrapper forwards [`stats`](Transport::stats) to the inner
 //! transport untouched, so dropped and partitioned frames are never
 //! charged — surviving-link byte parity against an undisturbed
-//! reference run stays assertable to the byte.
+//! reference run stays assertable to the byte. Every *applied*
+//! injection (a kill transition, each dropped/corrupted/held/delayed/
+//! duplicated/partition-discarded/inbound-filtered frame) bumps the
+//! wrapped link's `faults_injected` cell (see
+//! [`crate::metrics::facade::LinkHandles`]), so chaos runs are visible
+//! on `/metrics` and in `RunRecord` without touching byte parity.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::metrics::facade::Counter;
 use crate::protocol::Message;
 use crate::util::rng::Pcg;
 
@@ -87,6 +126,7 @@ pub struct FaultPlan {
     delays: Vec<(u64, Duration)>,
     duplicates: Vec<u64>,
     corrupts: Vec<u64>,
+    reorders: Vec<u64>,
     partition: Option<(u64, u64)>,
     partition_both_ways: bool,
 }
@@ -102,6 +142,7 @@ impl FaultPlan {
             delays: Vec::new(),
             duplicates: Vec::new(),
             corrupts: Vec::new(),
+            reorders: Vec::new(),
             partition: None,
             partition_both_ways: false,
         }
@@ -156,6 +197,16 @@ impl FaultPlan {
         self
     }
 
+    /// Hold the `nth` outbound send call back and deliver it right
+    /// after the next one: nth and nth+1 swap on the wire (out-of-order
+    /// delivery). If no later send happens the held frame is lost,
+    /// deterministically, like a drop. See the module's composition
+    /// grammar for how holds interact with other injections.
+    pub fn reorder_frames(mut self, nth: u64) -> Self {
+        self.reorders.push(nth);
+        self
+    }
+
     /// One-way partition: outbound frames whose round is in
     /// `[from, to)` are silently discarded; inbound traffic is
     /// unaffected.
@@ -193,6 +244,7 @@ enum SendAction {
     Forward { delay: Option<Duration>, duplicate: bool },
     Corrupt { nth: u64 },
     Drop,
+    Hold,
     Kill(u64),
 }
 
@@ -201,6 +253,9 @@ struct FaultState {
     /// Outbound send calls observed so far (the `nth` counter).
     sent: u64,
     killed: bool,
+    /// Frames held back by reorder injections, flushed FIFO after the
+    /// next send call's own action completes.
+    held: Vec<Message>,
 }
 
 /// A [`Transport`] wrapper that injects the failures scheduled by a
@@ -209,11 +264,38 @@ pub struct FaultTransport {
     inner: Arc<dyn Transport>,
     plan: FaultPlan,
     state: Mutex<FaultState>,
+    /// Applied-injection counter. Shares the wrapped link's
+    /// [`LinkHandles`](crate::metrics::facade::LinkHandles) cell when
+    /// the inner transport exposes one, so a bound registry renders
+    /// the count as `celu_link_faults_injected_total`; detached (still
+    /// readable via [`Self::injected`]) otherwise.
+    faults: Counter,
 }
 
 impl FaultTransport {
     pub fn new(inner: Arc<dyn Transport>, plan: FaultPlan) -> Self {
-        FaultTransport { inner, plan, state: Mutex::new(FaultState::default()) }
+        let faults = inner
+            .metrics()
+            .map(|h| h.faults_injected.clone())
+            .unwrap_or_default();
+        FaultTransport {
+            inner,
+            plan,
+            state: Mutex::new(FaultState::default()),
+            faults,
+        }
+    }
+
+    /// Injections applied so far (kill transition, dropped / corrupted
+    /// / held / delayed / duplicated / partition-discarded / inbound-
+    /// filtered frames — one bump each).
+    pub fn injected(&self) -> u64 {
+        self.faults.get()
+    }
+
+    /// The plan this wrapper executes.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
     }
 
     /// Sticky-death check shared by the receive paths.
@@ -239,20 +321,28 @@ impl FaultTransport {
         if let Some(k) = self.plan.kill_at {
             if msg.round() >= k {
                 st.killed = true;
+                self.faults.inc();
                 return SendAction::Kill(k);
             }
         }
         if self.plan.drops.contains(&nth) {
+            self.faults.inc();
             return SendAction::Drop;
         }
         if self.plan.corrupts.contains(&nth) {
+            self.faults.inc();
             return SendAction::Corrupt { nth };
         }
         if let Some((from, to)) = self.plan.partition {
             let r = msg.round();
             if r >= from && r < to {
+                self.faults.inc();
                 return SendAction::Drop;
             }
+        }
+        if self.plan.reorders.contains(&nth) {
+            self.faults.inc();
+            return SendAction::Hold;
         }
         let delay = self
             .plan
@@ -260,10 +350,25 @@ impl FaultTransport {
             .iter()
             .find(|(n, _)| *n == nth)
             .map(|(_, d)| *d);
-        SendAction::Forward {
-            delay,
-            duplicate: self.plan.duplicates.contains(&nth),
+        let duplicate = self.plan.duplicates.contains(&nth);
+        if delay.is_some() {
+            self.faults.inc();
         }
+        if duplicate {
+            self.faults.inc();
+        }
+        SendAction::Forward { delay, duplicate }
+    }
+
+    /// Deliver every held (reordered) frame, FIFO. Runs after the
+    /// current send call's own action, so the held frame lands right
+    /// behind its successor — the swap the injection promises.
+    fn flush_held(&self) -> anyhow::Result<()> {
+        let held = std::mem::take(&mut self.state.lock().unwrap().held);
+        for m in held {
+            self.inner.send(m)?;
+        }
+        Ok(())
     }
 
     /// Whether an inbound frame is eaten by a bidirectional partition.
@@ -271,7 +376,11 @@ impl FaultTransport {
         match self.plan.partition {
             Some((from, to)) if self.plan.partition_both_ways => {
                 let r = msg.round();
-                r >= from && r < to
+                if r >= from && r < to {
+                    self.faults.inc();
+                    return true;
+                }
+                false
             }
             _ => false,
         }
@@ -280,7 +389,7 @@ impl FaultTransport {
 
 impl Transport for FaultTransport {
     fn send(&self, msg: Message) -> anyhow::Result<()> {
-        match self.classify(&msg) {
+        let result = match self.classify(&msg) {
             SendAction::Forward { delay, duplicate } => {
                 if let Some(d) = delay {
                     std::thread::sleep(d);
@@ -312,12 +421,18 @@ impl Transport for FaultTransport {
                 }
             }
             SendAction::Drop => Ok(()),
+            SendAction::Hold => {
+                self.state.lock().unwrap().held.push(msg);
+                return Ok(()); // flushes on the *next* send call
+            }
             SendAction::Kill(round) => anyhow::bail!(
                 "injected fault: killed at round {round} (plan seed \
                  {:#x})",
                 self.plan.seed
             ),
-        }
+        };
+        result?;
+        self.flush_held()
     }
 
     fn recv(&self) -> anyhow::Result<Message> {
@@ -574,6 +689,134 @@ mod tests {
         peer.send(act(1)).unwrap();
         assert_eq!(f.try_recv().unwrap().unwrap().round(), 1);
         assert_eq!(f.stats().messages, 1);
+        assert_eq!(f.injected(), 0, "clean run counted an injection");
         assert_eq!(FaultPlan::new(9).kill_round(), None);
+    }
+
+    #[test]
+    fn reorder_frames_swaps_nth_and_next_on_the_wire() {
+        let (f, peer) = wrapped(FaultPlan::new(12).reorder_frames(1));
+        for r in 0..4 {
+            f.send(act(r)).unwrap();
+        }
+        // Frame 1 was held and delivered right after frame 2.
+        for expect in [0, 2, 1, 3] {
+            assert_eq!(peer.recv().unwrap().round(), expect);
+        }
+        // All four frames crossed eventually — charged in delivery
+        // order, total count intact.
+        assert_eq!(f.stats().messages, 4);
+        assert_eq!(f.injected(), 1);
+    }
+
+    #[test]
+    fn reorder_at_the_tail_loses_the_held_frame_deterministically() {
+        let (f, peer) = wrapped(FaultPlan::new(13).reorder_frames(2));
+        for r in 0..3 {
+            f.send(act(r)).unwrap();
+        }
+        assert_eq!(peer.recv().unwrap().round(), 0);
+        assert_eq!(peer.recv().unwrap().round(), 1);
+        // No later send ever flushed the hold: the frame is gone and
+        // was never charged, exactly like a drop.
+        assert!(peer.try_recv().unwrap().is_none());
+        assert_eq!(f.stats().messages, 2);
+    }
+
+    #[test]
+    fn consecutive_reorders_accumulate_and_flush_fifo() {
+        let (f, peer) = wrapped(
+            FaultPlan::new(14).reorder_frames(0).reorder_frames(1));
+        for r in 0..3 {
+            f.send(act(r)).unwrap();
+        }
+        for expect in [2, 0, 1] {
+            assert_eq!(peer.recv().unwrap().round(), expect);
+        }
+        assert_eq!(f.stats().messages, 3);
+    }
+
+    #[test]
+    fn reorder_flushes_even_when_the_next_send_is_dropped() {
+        let (f, peer) = wrapped(
+            FaultPlan::new(15).reorder_frames(0).drop_frame(1));
+        f.send(act(0)).unwrap(); // held
+        f.send(act(1)).unwrap(); // dropped — but the hold flushes
+        f.send(act(2)).unwrap();
+        for expect in [0, 2] {
+            assert_eq!(peer.recv().unwrap().round(), expect);
+        }
+        assert_eq!(f.stats().messages, 2);
+        assert_eq!(f.injected(), 2, "one hold + one drop");
+    }
+
+    #[test]
+    fn reorder_composes_with_duplicate_on_the_successor() {
+        let (f, peer) = wrapped(
+            FaultPlan::new(16).reorder_frames(0).duplicate_frame(1));
+        f.send(act(0)).unwrap();
+        f.send(act(1)).unwrap();
+        for expect in [1, 1, 0] {
+            assert_eq!(peer.recv().unwrap().round(), expect);
+        }
+        assert_eq!(f.stats().messages, 3);
+    }
+
+    #[test]
+    fn kill_and_drop_compose_on_one_plan_in_documented_order() {
+        // Grammar check: kill_at_round + drop_frame on the same link.
+        // The drop fires before the kill round; the kill wins from its
+        // round on, and frame indices past the death never happen.
+        let (f, peer) = wrapped(
+            FaultPlan::new(17).kill_at_round(2).drop_frame(0));
+        f.send(act(0)).unwrap(); // dropped
+        f.send(act(1)).unwrap(); // forwarded
+        assert!(f.send(act(2)).is_err()); // killed
+        assert_eq!(peer.recv().unwrap().round(), 1);
+        assert!(peer.try_recv().unwrap().is_none());
+        assert_eq!(f.stats().messages, 1);
+        // One drop + one kill transition; sticky-kill re-sends don't
+        // recount.
+        assert!(f.send(act(3)).is_err());
+        assert_eq!(f.injected(), 2);
+    }
+
+    #[test]
+    fn drop_beats_corrupt_beats_reorder_on_the_same_index() {
+        // Precedence is documented, not incidental: a frame index named
+        // by several terminal injections takes the highest-precedence
+        // one and the rest are inert.
+        let (f, peer) = wrapped(
+            FaultPlan::new(18)
+                .drop_frame(0)
+                .corrupt_frame(0)
+                .reorder_frames(0));
+        f.send(act(0)).unwrap();
+        f.send(act(1)).unwrap();
+        assert_eq!(peer.recv().unwrap().round(), 1);
+        assert!(peer.try_recv().unwrap().is_none());
+        assert_eq!(f.stats().messages, 1);
+        assert_eq!(f.injected(), 1, "only the drop applied");
+    }
+
+    #[test]
+    fn faults_injected_counts_every_applied_injection() {
+        let (f, peer) = wrapped(
+            FaultPlan::new(19)
+                .delay_ms(0, 1)
+                .duplicate_frame(0)
+                .drop_frame(1)
+                .partition_rounds_bidirectional(5, 6));
+        f.send(act(0)).unwrap(); // delay + duplicate: 2 injections
+        f.send(act(1)).unwrap(); // drop: 1
+        f.send(act(5)).unwrap(); // partition discard: 1
+        peer.send(act(5)).unwrap(); // inbound-filtered: 1
+        peer.send(act(9)).unwrap();
+        assert_eq!(f.recv().unwrap().round(), 9);
+        assert_eq!(f.injected(), 5);
+        // The counter shares the link's metrics cell when one exists.
+        if let Some(h) = f.metrics() {
+            assert_eq!(h.faults_injected.get(), 5);
+        }
     }
 }
